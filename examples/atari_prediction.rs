@@ -1,0 +1,111 @@
+//! End-to-end driver (the repository's full-system workload): online
+//! policy evaluation on the synthetic-ALE benchmark — 277-dimensional
+//! partially observable observations, scripted expert policies, reward
+//! cumulants — with a CCN learner against the equal-budget T-BPTT
+//! baseline, exactly the Section-5 protocol at reduced step count.
+//!
+//! ```bash
+//! cargo run --release --example atari_prediction -- [game] [steps] [seeds]
+//! ```
+//! Defaults: pong, 500k steps, 2 seeds. Results land in
+//! results/atari_<game>.json and a learning-curve CSV next to it.
+
+use std::path::Path;
+
+use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
+use ccn_rtrl::coordinator::{aggregate_runs, run_sweep, sweep};
+use ccn_rtrl::env::synthatari;
+use ccn_rtrl::metrics::{render_table, write_csv};
+use ccn_rtrl::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let game = args.get(1).cloned().unwrap_or_else(|| "pong".to_string());
+    let steps: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(500_000);
+    let n_seeds: u64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2);
+    assert!(
+        synthatari::env_names().contains(&game.as_str()),
+        "unknown game {game}; try one of {:?}",
+        synthatari::env_names()
+    );
+
+    // Table-1 Atari configs: CCN 5 features/stage; T-BPTT 5:8 (≈50k ops).
+    let methods: Vec<(&str, LearnerKind)> = vec![
+        (
+            "ccn",
+            LearnerKind::Ccn {
+                total: 15,
+                per_stage: 5,
+                steps_per_stage: (steps / 3).max(1),
+            },
+        ),
+        ("tbptt 8:5", LearnerKind::Tbptt { d: 8, k: 5 }),
+    ];
+
+    let mut configs = Vec::new();
+    for (_, learner) in &methods {
+        let base = ExperimentConfig {
+            env: EnvKind::SynthAtari { game: game.clone() },
+            learner: learner.clone(),
+            alpha: 0.001,
+            lambda: 0.99,
+            gamma_override: None, // stream prescribes 0.98
+            eps: 0.1,
+            steps,
+            seed: 0,
+            curve_points: 40,
+        };
+        configs.extend(sweep::seeds(&base, &(0..n_seeds).collect::<Vec<_>>()));
+    }
+
+    eprintln!(
+        "atari-prediction[{game}]: {} runs x {steps} steps on {} threads",
+        configs.len(),
+        sweep::default_threads()
+    );
+    let res = run_sweep(configs, sweep::default_threads());
+    let aggs = aggregate_runs(&res.runs);
+
+    let tbptt_tail = aggs
+        .iter()
+        .find(|a| a.learner.starts_with("tbptt"))
+        .map(|a| a.tail_mean)
+        .unwrap_or(f64::NAN);
+
+    let mut rows = Vec::new();
+    for a in &aggs {
+        rows.push(vec![
+            a.learner.clone(),
+            format!("{:.6}", a.tail_mean),
+            format!("{:.6}", a.tail_stderr),
+            format!("{:.3}", a.tail_mean / tbptt_tail),
+            format!("{:.0} steps/s", a.mean_steps_per_sec),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["learner", "final err", "±se", "rel. to T-BPTT", "speed"],
+            &rows
+        )
+    );
+
+    // persist: aggregate JSON + curve CSV (Fig-8-style artifacts)
+    std::fs::create_dir_all("results").ok();
+    let json = Json::Arr(aggs.iter().map(|a| a.to_json()).collect());
+    std::fs::write(
+        format!("results/atari_{game}.json"),
+        json.pretty(),
+    )
+    .expect("write results");
+    for a in &aggs {
+        let xs: Vec<f64> = a.curve_x.iter().map(|&v| v as f64).collect();
+        write_csv(
+            Path::new(&format!("results/atari_{game}_{}.csv", a.learner)),
+            &["step", "mse", "stderr"],
+            &[&xs, &a.curve_mean, &a.curve_stderr],
+        )
+        .expect("write csv");
+    }
+    eprintln!("wrote results/atari_{game}.json and per-learner CSVs");
+}

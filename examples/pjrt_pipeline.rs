@@ -1,0 +1,205 @@
+//! The full three-layer pipeline in one binary, end to end:
+//!
+//!   Layer 1 (Pallas kernel)  — authored in python/compile/kernels/,
+//!   Layer 2 (JAX model)      — python/compile/model.py,
+//!         both lowered once by `make artifacts` to HLO text;
+//!   Layer 3 (this program)   — loads the artifacts via PJRT and runs a
+//!   complete TD(lambda) learner on the trace-conditioning stream with
+//!   *all column compute inside XLA*. Python is not running here.
+//!
+//! The same learner is run natively in Rust on the identical stream and
+//! the two learning curves are compared — they must agree to float
+//! tolerance, proving L1/L2/L3 compose.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pjrt_pipeline
+//! ```
+
+use std::path::Path;
+
+use ccn_rtrl::env::returns::ReturnEval;
+use ccn_rtrl::env::trace_conditioning::{TraceConditioning, TraceConditioningConfig};
+use ccn_rtrl::env::Stream;
+use ccn_rtrl::nets::lstm_column::LstmColumn;
+use ccn_rtrl::nets::normalizer::{OnlineNormalizer, NORM_BETA};
+use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
+use ccn_rtrl::util::dot;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+const STEPS: u64 = 3_000;
+const ALPHA: f32 = 0.003;
+const LAMBDA: f32 = 0.99;
+
+/// Minimal columnar TD(lambda) learner over a PJRT stage.
+struct PjrtLearner<'rt> {
+    stage: PjrtColumnarStage<'rt>,
+    w: Vec<f32>,
+    e_w: Vec<f32>,
+    e_theta: Vec<f32>,
+    grad: Vec<f32>,
+    y_prev: f32,
+    have_prev: bool,
+    gamma: f32,
+}
+
+impl<'rt> PjrtLearner<'rt> {
+    fn step(&mut self, x: &[f32], c: f32) -> f32 {
+        self.stage.step(x).expect("pjrt step");
+        let d = self.stage.n_cols;
+        let per = 4 * self.stage.m + 8;
+        let y = dot(&self.w, &self.stage.h_norm);
+        if self.have_prev {
+            let delta = c + self.gamma * y - self.y_prev;
+            for (wk, &e) in self.w.iter_mut().zip(&self.e_w) {
+                *wk += ALPHA * delta * e;
+            }
+            // apply theta update through the stage's parameter vectors
+            for k in 0..d {
+                let base = k * per;
+                for j in 0..4 * self.stage.m {
+                    self.stage.w[k * 4 * self.stage.m + j] +=
+                        ALPHA * delta * self.e_theta[base + j];
+                }
+                for a in 0..4 {
+                    self.stage.u[k * 4 + a] +=
+                        ALPHA * delta * self.e_theta[base + 4 * self.stage.m + a];
+                    self.stage.b[k * 4 + a] +=
+                        ALPHA * delta * self.e_theta[base + 4 * self.stage.m + 4 + a];
+                }
+            }
+        }
+        let gl = self.gamma * LAMBDA;
+        for (e, &f) in self.e_w.iter_mut().zip(&self.stage.h_norm) {
+            *e = gl * *e + f;
+        }
+        for k in 0..d {
+            self.stage
+                .write_grad(k, self.w[k], &mut self.grad[k * per..(k + 1) * per]);
+        }
+        for (e, &g) in self.e_theta.iter_mut().zip(&self.grad) {
+            *e = gl * *e + g;
+        }
+        self.y_prev = y;
+        self.have_prev = true;
+        y
+    }
+}
+
+fn main() {
+    let dir = PjrtRuntime::default_dir();
+    let rt = PjrtRuntime::load(Path::new(&dir)).unwrap_or_else(|e| {
+        eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+        std::process::exit(1);
+    });
+    println!(
+        "PJRT platform: {} | artifacts: {}",
+        rt.platform(),
+        rt.manifest.artifacts.len()
+    );
+    rt.verify_golden().expect("golden check");
+    println!("golden fixture OK (jax == pjrt)");
+
+    // columnar learner: 8 columns over the 2-feature stream, via the
+    // c8/m16 artifact is not lowered; use the quickstart shape (8, 16)
+    // with the 2 real features zero-padded to 16.
+    let (n_cols, m) = (8, 16);
+    let mut env = TraceConditioning::new(TraceConditioningConfig::default(), 0);
+    let gamma = env.gamma();
+    let mut stage = PjrtColumnarStage::new(&rt, n_cols, m, 0).expect("stage");
+
+    // native twin with identical parameters
+    let mut rng = Xoshiro256::seed_from_u64(42);
+    let mut cols: Vec<LstmColumn> =
+        (0..n_cols).map(|_| LstmColumn::new(m, &mut rng, 1.0)).collect();
+    stage.set_params_from_columns(&cols);
+    let per = 4 * m + 8;
+
+    let mut pjrt_learner = PjrtLearner {
+        stage,
+        w: vec![0.0; n_cols],
+        e_w: vec![0.0; n_cols],
+        e_theta: vec![0.0; n_cols * per],
+        grad: vec![0.0; n_cols * per],
+        y_prev: 0.0,
+        have_prev: false,
+        gamma,
+    };
+
+    // native twin learner state
+    let mut norm = OnlineNormalizer::new(n_cols, NORM_BETA, rt.manifest.eps);
+    let mut w_n = vec![0.0f32; n_cols];
+    let mut ew_n = vec![0.0f32; n_cols];
+    let mut eth_n = vec![0.0f32; n_cols * per];
+    let mut grad_n = vec![0.0f32; n_cols * per];
+    let mut y_prev_n = 0.0f32;
+    let mut have_prev_n = false;
+
+    let mut eval = ReturnEval::new(gamma as f64, 1e-4);
+    let mut x = vec![0.0f32; m];
+    let mut max_dev = 0.0f32;
+    let mut err_sum = 0.0f64;
+    let mut err_n = 0u64;
+    for t in 0..STEPS {
+        let c = env.step_into(&mut x[..2]);
+        // zero-padded to the artifact's input width
+        let y_pjrt = pjrt_learner.step(&x, c);
+
+        // native twin (same math in Rust)
+        let mut raw = vec![0.0f32; n_cols];
+        for (k, col) in cols.iter_mut().enumerate() {
+            col.step_with_traces(&x);
+            raw[k] = col.h;
+        }
+        let mut h_norm = vec![0.0f32; n_cols];
+        norm.update_and_normalize(&raw, &mut h_norm);
+        let y_native = dot(&w_n, &h_norm);
+        if have_prev_n {
+            let delta = c + gamma * y_native - y_prev_n;
+            for (wk, &e) in w_n.iter_mut().zip(&ew_n) {
+                *wk += ALPHA * delta * e;
+            }
+            for (k, col) in cols.iter_mut().enumerate() {
+                let upd: Vec<f32> = eth_n[k * per..(k + 1) * per]
+                    .iter()
+                    .map(|&e| ALPHA * delta * e)
+                    .collect();
+                col.apply_update(&upd);
+            }
+        }
+        let gl = gamma * LAMBDA;
+        for (e, &f) in ew_n.iter_mut().zip(&h_norm) {
+            *e = gl * *e + f;
+        }
+        for (k, col) in cols.iter().enumerate() {
+            col.write_grad(w_n[k] / norm.denom(k), &mut grad_n[k * per..(k + 1) * per]);
+        }
+        for (e, &g) in eth_n.iter_mut().zip(&grad_n) {
+            *e = gl * *e + g;
+        }
+        y_prev_n = y_native;
+        have_prev_n = true;
+
+        max_dev = max_dev.max((y_pjrt - y_native).abs());
+        eval.push(y_pjrt as f64, c as f64);
+        for (_, e2) in eval.drain() {
+            err_sum += e2;
+            err_n += 1;
+        }
+        if t % 1000 == 0 && t > 0 {
+            println!(
+                "step {t:>6}: y_pjrt {y_pjrt:+.4}  y_native {y_native:+.4}  \
+                 running err {:.5}",
+                err_sum / err_n.max(1) as f64
+            );
+        }
+    }
+    println!(
+        "\nmax |y_pjrt - y_native| over {STEPS} steps of joint learning: {max_dev:.2e}"
+    );
+    assert!(
+        max_dev < 2e-2,
+        "PJRT and native paths diverged: {max_dev}"
+    );
+    println!("three-layer pipeline verified: Pallas kernel -> JAX model -> HLO \
+              -> PJRT -> Rust TD(lambda), numerically matching native Rust.");
+}

@@ -1,0 +1,52 @@
+//! Quickstart: build a columnar RTRL learner, point it at a partially
+//! observable stream, and watch the prediction error fall — in ~30 lines
+//! of user code.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ccn_rtrl::env::returns::ReturnEval;
+use ccn_rtrl::env::trace_conditioning::{TraceConditioning, TraceConditioningConfig};
+use ccn_rtrl::env::Stream;
+use ccn_rtrl::learn::{TdConfig, TdLambdaAgent};
+use ccn_rtrl::metrics::Ewma;
+use ccn_rtrl::nets::columnar::columnar_net;
+
+fn main() {
+    // 1. a stream: the trace-conditioning memory task (CS ... delay ... US)
+    let mut env = TraceConditioning::new(TraceConditioningConfig::default(), 0);
+    let gamma = env.gamma();
+
+    // 2. a learner: 8 independent LSTM columns + exact RTRL + TD(lambda)
+    let net = columnar_net(env.n_features(), 8, 0.01, /*seed=*/ 0);
+    let mut agent = TdLambdaAgent::new(
+        net,
+        TdConfig {
+            alpha: 0.003,
+            gamma,
+            lambda: 0.99,
+        },
+    );
+
+    // 3. the online loop — no replay buffer, no batches, one pass
+    let mut eval = ReturnEval::new(gamma as f64, 1e-4);
+    let mut smoothed = Ewma::new(0.9995);
+    let mut x = vec![0.0; env.n_features()];
+    let total = 2_000_000u64;
+    for t in 0..total {
+        let cumulant = env.step_into(&mut x);
+        let y = agent.step(&x, cumulant);
+        eval.push(y as f64, cumulant as f64);
+        for (_, err2) in eval.drain() {
+            smoothed.push(err2);
+        }
+        if t % 200_000 == 0 && t > 0 {
+            println!(
+                "step {t:>8}  mean squared return error = {:.5}",
+                smoothed.get()
+            );
+        }
+    }
+    println!("done: final error {:.5} (predicting zero scores ~0.053)", smoothed.get());
+}

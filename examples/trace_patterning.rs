@@ -1,0 +1,107 @@
+//! Scaled-down Figure-4 experiment as a runnable example: all four
+//! methods (Columnar, Constructive, CCN, best-k T-BPTT) on the trace
+//! patterning benchmark at the same per-step compute budget.
+//!
+//! ```bash
+//! cargo run --release --example trace_patterning -- [steps] [seeds]
+//! ```
+//! Defaults: 5M steps (1/10 of the paper), 3 seeds.
+
+use ccn_rtrl::compute;
+use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
+use ccn_rtrl::coordinator::{aggregate_runs, run_sweep, sweep};
+use ccn_rtrl::metrics::render_table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5_000_000);
+    let n_seeds: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let stage = (steps / 5).max(1); // 5 stages across the run, like the paper
+
+    // the paper's Table-1 configurations (4k-op budget at n = 7)
+    let methods = vec![
+        ("columnar", LearnerKind::Columnar { d: 5 }, 0.003f32),
+        (
+            "constructive",
+            LearnerKind::Constructive {
+                total: 10,
+                steps_per_stage: (steps / 10).max(1),
+            },
+            0.003,
+        ),
+        (
+            "ccn",
+            LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: stage,
+            },
+            0.003,
+        ),
+        ("tbptt 2:30", LearnerKind::Tbptt { d: 2, k: 30 }, 0.003),
+    ];
+
+    let mut configs = Vec::new();
+    for (_, learner, alpha) in &methods {
+        let base = ExperimentConfig {
+            env: EnvKind::TracePatterning,
+            learner: learner.clone(),
+            alpha: *alpha,
+            lambda: 0.99,
+            gamma_override: None,
+            eps: 0.1,
+            steps,
+            seed: 0,
+            curve_points: 50,
+        };
+        configs.extend(sweep::seeds(&base, &(0..n_seeds).collect::<Vec<_>>()));
+    }
+
+    eprintln!(
+        "running {} configs x {} steps on {} threads ...",
+        configs.len(),
+        steps,
+        sweep::default_threads()
+    );
+    let res = run_sweep(configs, sweep::default_threads());
+    let aggs = aggregate_runs(&res.runs);
+
+    let mut rows = Vec::new();
+    for (name, learner, _) in &methods {
+        let a = aggs
+            .iter()
+            .find(|a| a.learner == learner.label())
+            .expect("aggregated");
+        let budget = match learner {
+            LearnerKind::Columnar { d } => compute::columnar_ops(*d as u64, 7),
+            LearnerKind::Constructive { total, .. } => {
+                compute::constructive_ops(*total as u64, 7)
+            }
+            LearnerKind::Ccn {
+                total, per_stage, ..
+            } => compute::ccn_ops(*total as u64, 7, *per_stage as u64),
+            LearnerKind::Tbptt { d, k } => {
+                compute::tbptt_ops(*d as u64, 7, *k as u64)
+            }
+            LearnerKind::Snap1 { d } => 7 * (*d as u64) * (4 * 7 + 8),
+        };
+        rows.push(vec![
+            name.to_string(),
+            format!("{budget}"),
+            format!("{:.5}", a.curve_mean.first().copied().unwrap_or(f64::NAN)),
+            format!("{:.5} ± {:.5}", a.tail_mean, a.tail_stderr),
+            format!("{:.2}M/s", a.mean_steps_per_sec / 1e6),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["method", "ops/step", "initial err", "final err (±se)", "speed"],
+            &rows
+        )
+    );
+    println!(
+        "paper (Fig. 4, 50M steps): constructive ≈ CCN < T-BPTT(2:30) < columnar;\n\
+         at this scale the ordering emerges progressively — run longer to sharpen it."
+    );
+}

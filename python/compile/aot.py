@@ -1,0 +1,195 @@
+"""AOT lowering: jax -> HLO TEXT artifacts for the Rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per (n_cols, m) configuration in MANIFEST below:
+    col_step_c{C}_m{M}.hlo.txt   learning-stage step (fwd + RTRL + norm)
+    col_fwd_c{C}_m{M}.hlo.txt    frozen-stage step  (fwd + norm)
+plus ``manifest.json`` describing every artifact (shapes + io order) so
+the Rust side can discover them without hard-coding.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    columnar_learner_step,
+    example_args_fwd,
+    example_args_step,
+    frozen_stage_step,
+)
+
+
+def _ccn_stage_shapes(n_input, features_per_stage, n_stages):
+    """Input width per CCN stage: stage s sees the raw input plus all
+    previously frozen (normalized) features."""
+    return [
+        (features_per_stage, n_input + features_per_stage * s)
+        for s in range(n_stages)
+    ]
+
+
+def default_manifest():
+    """The artifact set covering the paper's configurations (Table 1).
+
+    - trace patterning (7 inputs: 6 CS + 1 US):
+        columnar: 5 columns;  CCN: 4 features/stage x 5 stages (20 feats);
+        constructive: 1 feature/stage x 10 stages.
+    - Atari prediction (277 inputs: 256 pixels + 20 actions + 1 reward):
+        columnar: 7 columns;  CCN: 5 features/stage x 3 stages.
+    - quickstart demo: 8 columns over 16 inputs.
+    """
+    shapes = set()
+    shapes.add((5, 7))  # trace columnar
+    shapes.update(_ccn_stage_shapes(7, 4, 5))  # trace CCN
+    shapes.update(_ccn_stage_shapes(7, 1, 6))  # trace constructive (first 6)
+    shapes.add((7, 277))  # atari columnar
+    shapes.update(_ccn_stage_shapes(277, 5, 3))  # atari CCN
+    shapes.add((8, 16))  # quickstart
+    shapes.add((3, 4))  # tiny shape used by the cross-language golden test
+    return sorted(shapes)
+
+
+def write_golden(out_dir, eps):
+    """Golden input/output pairs for the Rust integration tests.
+
+    Rust loads col_step_c3_m4 / col_fwd_c3_m4 via PJRT, feeds these inputs
+    and must reproduce these outputs bit-for-bit-ish (f32 tolerance). This
+    is the cross-language equivalent of the paper's PyTorch gradient check.
+    """
+    import numpy as np
+
+    from .model import columnar_learner_step, frozen_stage_step, init_stage
+
+    n_cols, m = 3, 4
+    params, state = init_stage(jax.random.PRNGKey(0), n_cols, m)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m,))
+    step_args = [
+        x, params["w"], params["u"], params["b"],
+        state["h"], state["c"], state["thw"], state["tcw"],
+        state["thu"], state["tcu"], state["thb"], state["tcb"],
+        state["mu"], state["var"],
+    ]
+    step_out = columnar_learner_step(*step_args, eps=eps)
+    fwd_args = [
+        x, params["w"], params["u"], params["b"],
+        state["h"], state["c"], state["mu"], state["var"],
+    ]
+    fwd_out = frozen_stage_step(*fwd_args, eps=eps)
+
+    def pack(arrs):
+        return [
+            {"shape": list(np.asarray(a).shape),
+             "data": [float(v) for v in np.asarray(a, dtype=np.float32).ravel()]}
+            for a in arrs
+        ]
+
+    golden = {
+        "n_cols": n_cols,
+        "m": m,
+        "eps": eps,
+        "step": {"inputs": pack(step_args), "outputs": pack(step_out)},
+        "fwd": {"inputs": pack(fwd_args), "outputs": pack(fwd_out)},
+    }
+    path = os.path.join(out_dir, "golden.json")
+    with open(path, "w") as f:
+        json.dump(golden, f)
+    print(f"wrote {path}")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_step(n_cols, m, eps):
+    fn = lambda *a: columnar_learner_step(*a, eps=eps, interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(*example_args_step(n_cols, m)))
+
+
+def lower_fwd(n_cols, m, eps):
+    fn = lambda *a: frozen_stage_step(*a, eps=eps, interpret=True)
+    return to_hlo_text(jax.jit(fn).lower(*example_args_fwd(n_cols, m)))
+
+
+STEP_INPUTS = [
+    "x", "w", "u", "b", "h", "c",
+    "thw", "tcw", "thu", "tcu", "thb", "tcb", "mu", "var",
+]
+STEP_OUTPUTS = [
+    "h2", "c2", "thw2", "tcw2", "thu2", "tcu2", "thb2", "tcb2",
+    "mu2", "var2", "h_norm", "denom",
+]
+FWD_INPUTS = ["x", "w", "u", "b", "h", "c", "mu", "var"]
+FWD_OUTPUTS = ["h2", "c2", "mu2", "var2", "h_norm", "denom"]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--eps", type=float, default=0.01,
+        help="normalizer epsilon baked into the artifacts",
+    )
+    parser.add_argument(
+        "--shapes", default="",
+        help="optional extra shapes 'C:M,C:M,...' to lower in addition "
+             "to the default manifest",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    shapes = default_manifest()
+    if args.shapes:
+        for tok in args.shapes.split(","):
+            c_str, m_str = tok.split(":")
+            shapes.append((int(c_str), int(m_str)))
+        shapes = sorted(set(shapes))
+
+    manifest = {"eps": args.eps, "gate_order": "ifog", "artifacts": []}
+    for n_cols, m in shapes:
+        for kind, lower, ins, outs in (
+            ("step", lower_step, STEP_INPUTS, STEP_OUTPUTS),
+            ("fwd", lower_fwd, FWD_INPUTS, FWD_OUTPUTS),
+        ):
+            name = f"col_{kind}_c{n_cols}_m{m}.hlo.txt"
+            path = os.path.join(args.out, name)
+            text = lower(n_cols, m, args.eps)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "file": name,
+                    "kind": kind,
+                    "n_cols": n_cols,
+                    "m": m,
+                    "inputs": ins,
+                    "outputs": outs,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    write_golden(args.out, args.eps)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

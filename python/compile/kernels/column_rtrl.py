@@ -1,0 +1,287 @@
+"""Layer-1 Pallas kernel: batched LSTM-column forward + forward-mode RTRL.
+
+This is the paper's compute hot-spot (Appendix B): one LSTM *column* has a
+scalar hidden state ``h`` and cell ``c``, input vector ``x`` of length
+``m``, and parameters
+
+    W  : [4, m]   input weights for the gates (order: i, f, o, g)
+    u  : [4]      recurrent weights
+    b  : [4]      biases
+
+RTRL for a scalar-state column needs one pair of traces per parameter:
+
+    TH_p(t) = dh(t)/dp        TC_p(t) = dc(t)/dp
+
+The paper derives the per-parameter recursions gate by gate; here they are
+fused into one affine-plus-rank-1 update (algebraically identical — the
+per-gate derivation is kept, un-fused, in ``ref.py`` as the oracle):
+
+    gates:  z_a = W_a . x + u_a h + b_a,  a in {i, f, o, g}
+            i, f, o = sigmoid(z_.), g = tanh(z_g)
+            c' = f c + i g,  h' = o tanh(c')
+
+    derivs: di = i(1-i), df = f(1-f), do = o(1-o), dg = 1-g^2
+
+    A = c*df*u_f + i*dg*u_g + g*di*u_i          # dTC'/dTH  (chain via gates)
+    B = tanh(c')*do*u_o                          # dTH'/dTH  (output gate)
+    E = o*(1 - tanh(c')^2)                       # dTH'/dTC'
+    q = [g*di, c*df, 0, i*dg]                    # direct coeff into c'
+    r = [0,    0,    tanh(c')*do, 0]             # direct coeff into h'
+
+    for the W-traces (direct input is x_j), u-traces (direct input is
+    h(t-1)) and b-traces (direct input is 1):
+
+        TC' = f*TC + A*TH + q (x) direct
+        TH' = E*TC' + B*TH + r (x) direct
+
+Columns are fully independent (that is the paper's point), so the kernel
+tiles the **column dimension across the Pallas grid**: each grid step
+holds one block of columns' parameters, state and traces in VMEM, does the
+gate matmul on the MXU (W reshaped [BLK*4, m] @ x) and the trace
+recursions on the VPU. No cross-column reduction exists by construction.
+
+Must run with ``interpret=True`` on CPU — real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Gate order used throughout the repo (python + rust must agree).
+GATE_I, GATE_F, GATE_O, GATE_G = 0, 1, 2, 3
+
+
+def _column_rtrl_kernel(
+    x_ref,
+    w_ref,
+    u_ref,
+    b_ref,
+    h_ref,
+    c_ref,
+    thw_ref,
+    tcw_ref,
+    thu_ref,
+    tcu_ref,
+    thb_ref,
+    tcb_ref,
+    # outputs
+    h2_ref,
+    c2_ref,
+    thw2_ref,
+    tcw2_ref,
+    thu2_ref,
+    tcu2_ref,
+    thb2_ref,
+    tcb2_ref,
+):
+    """One grid step: a [BLK] block of columns. Shapes inside the block:
+
+    x    [m]          shared input (same for every column in a stage)
+    w    [BLK, 4, m]  u,b [BLK, 4]   h,c [BLK]
+    thw/tcw [BLK, 4, m]   thu/tcu/thb/tcb [BLK, 4]
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    b = b_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+
+    blk, _, m = w.shape
+
+    # ---- forward: gate pre-activations via one MXU matmul ----
+    z = jnp.dot(w.reshape(blk * 4, m), x).reshape(blk, 4) + u * h[:, None] + b
+
+    i = jax.nn.sigmoid(z[:, GATE_I])
+    f = jax.nn.sigmoid(z[:, GATE_F])
+    o = jax.nn.sigmoid(z[:, GATE_O])
+    g = jnp.tanh(z[:, GATE_G])
+
+    c2 = f * c + i * g
+    tanh_c2 = jnp.tanh(c2)
+    h2 = o * tanh_c2
+
+    # ---- trace recursion coefficients (per column) ----
+    di = i * (1.0 - i)
+    df = f * (1.0 - f)
+    do = o * (1.0 - o)
+    dg = 1.0 - g * g
+
+    a_coef = c * df * u[:, GATE_F] + i * dg * u[:, GATE_G] + g * di * u[:, GATE_I]
+    b_coef = tanh_c2 * do * u[:, GATE_O]
+    e_coef = o * (1.0 - tanh_c2 * tanh_c2)
+
+    zero = jnp.zeros_like(i)
+    q = jnp.stack([g * di, c * df, zero, i * dg], axis=1)  # [BLK, 4]
+    r = jnp.stack([zero, zero, tanh_c2 * do, zero], axis=1)  # [BLK, 4]
+
+    fb = f[:, None]  # broadcast helpers
+    ab = a_coef[:, None]
+    bb = b_coef[:, None]
+    eb = e_coef[:, None]
+
+    # ---- W traces: direct term is x_j ----
+    tcw2 = fb[..., None] * tcw_ref[...] + ab[..., None] * thw_ref[...] + (
+        q[:, :, None] * x[None, None, :]
+    )
+    thw2 = eb[..., None] * tcw2 + bb[..., None] * thw_ref[...] + (
+        r[:, :, None] * x[None, None, :]
+    )
+
+    # ---- u traces: direct term is h(t-1) ----
+    tcu2 = fb * tcu_ref[...] + ab * thu_ref[...] + q * h[:, None]
+    thu2 = eb * tcu2 + bb * thu_ref[...] + r * h[:, None]
+
+    # ---- b traces: direct term is 1 ----
+    tcb2 = fb * tcb_ref[...] + ab * thb_ref[...] + q
+    thb2 = eb * tcb2 + bb * thb_ref[...] + r
+
+    h2_ref[...] = h2
+    c2_ref[...] = c2
+    thw2_ref[...] = thw2
+    tcw2_ref[...] = tcw2
+    thu2_ref[...] = thu2
+    tcu2_ref[...] = tcu2
+    thb2_ref[...] = thb2
+    tcb2_ref[...] = tcb2
+
+
+def _pick_block(n_cols: int, col_block: int) -> int:
+    """Largest divisor of n_cols not exceeding col_block (grid must tile)."""
+    blk = min(col_block, n_cols)
+    while n_cols % blk != 0:
+        blk -= 1
+    return blk
+
+
+@partial(jax.jit, static_argnames=("col_block", "interpret"))
+def column_rtrl_step(
+    x,
+    w,
+    u,
+    b,
+    h,
+    c,
+    thw,
+    tcw,
+    thu,
+    tcu,
+    thb,
+    tcb,
+    *,
+    col_block: int = 8,
+    interpret: bool = True,
+):
+    """Batched column forward + RTRL trace update.
+
+    Args:
+      x:   [m]        input vector shared by all columns of the stage.
+      w:   [C, 4, m]  gate input weights (gate order i, f, o, g).
+      u:   [C, 4]     recurrent weights.
+      b:   [C, 4]     biases.
+      h,c: [C]        previous hidden / cell state.
+      thw,tcw: [C, 4, m]  dh/dW, dc/dW traces.
+      thu,tcu,thb,tcb: [C, 4]  dh/du, dc/du, dh/db, dc/db traces.
+
+    Returns:
+      (h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2) — same shapes.
+    """
+    n_cols, _, m = w.shape
+    blk = _pick_block(n_cols, col_block)
+    grid = (n_cols // blk,)
+
+    vec_spec = pl.BlockSpec((blk,), lambda idx: (idx,))
+    g4_spec = pl.BlockSpec((blk, 4), lambda idx: (idx, 0))
+    g4m_spec = pl.BlockSpec((blk, 4, m), lambda idx: (idx, 0, 0))
+    x_spec = pl.BlockSpec((m,), lambda idx: (0,))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((n_cols,), w.dtype),  # h2
+        jax.ShapeDtypeStruct((n_cols,), w.dtype),  # c2
+        jax.ShapeDtypeStruct((n_cols, 4, m), w.dtype),  # thw2
+        jax.ShapeDtypeStruct((n_cols, 4, m), w.dtype),  # tcw2
+        jax.ShapeDtypeStruct((n_cols, 4), w.dtype),  # thu2
+        jax.ShapeDtypeStruct((n_cols, 4), w.dtype),  # tcu2
+        jax.ShapeDtypeStruct((n_cols, 4), w.dtype),  # thb2
+        jax.ShapeDtypeStruct((n_cols, 4), w.dtype),  # tcb2
+    )
+
+    return pl.pallas_call(
+        _column_rtrl_kernel,
+        grid=grid,
+        in_specs=[
+            x_spec,
+            g4m_spec,
+            g4_spec,
+            g4_spec,
+            vec_spec,
+            vec_spec,
+            g4m_spec,
+            g4m_spec,
+            g4_spec,
+            g4_spec,
+            g4_spec,
+            g4_spec,
+        ],
+        out_specs=(
+            vec_spec,
+            vec_spec,
+            g4m_spec,
+            g4m_spec,
+            g4_spec,
+            g4_spec,
+            g4_spec,
+            g4_spec,
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, w, u, b, h, c, thw, tcw, thu, tcu, thb, tcb)
+
+
+def _column_forward_kernel(x_ref, w_ref, u_ref, b_ref, h_ref, c_ref, h2_ref, c2_ref):
+    """Forward-only block step for frozen columns (no traces)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+    b = b_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    blk, _, m = w.shape
+    z = jnp.dot(w.reshape(blk * 4, m), x).reshape(blk, 4) + u * h[:, None] + b
+    i = jax.nn.sigmoid(z[:, GATE_I])
+    f = jax.nn.sigmoid(z[:, GATE_F])
+    o = jax.nn.sigmoid(z[:, GATE_O])
+    g = jnp.tanh(z[:, GATE_G])
+    c2 = f * c + i * g
+    h2_ref[...] = o * jnp.tanh(c2)
+    c2_ref[...] = c2
+
+
+@partial(jax.jit, static_argnames=("col_block", "interpret"))
+def column_forward(x, w, u, b, h, c, *, col_block: int = 8, interpret: bool = True):
+    """Forward pass of a block of frozen columns (no trace update).
+
+    Same layouts as :func:`column_rtrl_step`; returns ``(h2, c2)``.
+    """
+    n_cols, _, m = w.shape
+    blk = _pick_block(n_cols, col_block)
+    grid = (n_cols // blk,)
+    vec_spec = pl.BlockSpec((blk,), lambda idx: (idx,))
+    g4_spec = pl.BlockSpec((blk, 4), lambda idx: (idx, 0))
+    g4m_spec = pl.BlockSpec((blk, 4, m), lambda idx: (idx, 0, 0))
+    x_spec = pl.BlockSpec((m,), lambda idx: (0,))
+    out_shapes = (
+        jax.ShapeDtypeStruct((n_cols,), w.dtype),
+        jax.ShapeDtypeStruct((n_cols,), w.dtype),
+    )
+    return pl.pallas_call(
+        _column_forward_kernel,
+        grid=grid,
+        in_specs=[x_spec, g4m_spec, g4_spec, g4_spec, vec_spec, vec_spec],
+        out_specs=(vec_spec, vec_spec),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, w, u, b, h, c)

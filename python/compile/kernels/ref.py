@@ -1,0 +1,115 @@
+"""Pure-jnp oracle for the column-RTRL Pallas kernel.
+
+Implements the Appendix-B recursions *gate by gate, parameter group by
+parameter group* -- deliberately un-fused and as close to the paper's
+derivation as possible -- so that it is an independent check of the fused
+kernel in ``column_rtrl.py``. A second, even stronger oracle (jacfwd of
+the unrolled column) lives in ``python/tests/test_gradients.py``.
+
+Everything here operates on a single column; batching over columns is done
+with ``jax.vmap`` in :func:`column_rtrl_step_ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+GATE_I, GATE_F, GATE_O, GATE_G = 0, 1, 2, 3
+
+
+def lstm_column_forward(x, w, u, b, h, c):
+    """Forward pass of one LSTM column (paper eqs. 11-16).
+
+    Args:
+      x: [m] input.  w: [4, m].  u, b: [4].  h, c: scalars.
+
+    Returns:
+      (h2, c2, (i, f, o, g)).
+    """
+    z = w @ x + u * h + b
+    i = jax.nn.sigmoid(z[GATE_I])
+    f = jax.nn.sigmoid(z[GATE_F])
+    o = jax.nn.sigmoid(z[GATE_O])
+    g = jnp.tanh(z[GATE_G])
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return h2, c2, (i, f, o, g)
+
+
+def _single_column_rtrl(x, w, u, b, h, c, thw, tcw, thu, tcu, thb, tcb):
+    """RTRL trace update for one column, following the paper's derivation.
+
+    For every parameter ``p`` (each of the 4m input weights, 4 recurrent
+    weights and 4 biases) the paper derives:
+
+        dgate_a/dp = act'(z_a) * (u_a * TH_p(t-1) + direct_a(p))
+        TC_p(t) = f*TC_p(t-1) + c(t-1)*df/dp + i*dg/dp + g*di/dp
+        TH_p(t) = o*(1 - tanh(c_t)^2)*TC_p(t) + tanh(c_t)*do/dp
+
+    where ``direct_a(p)`` is x_j if p = W_a[j], h(t-1) if p = u_a, 1 if
+    p = b_a, and 0 if p belongs to a different gate.
+    """
+    h2, c2, (i, f, o, g) = lstm_column_forward(x, w, u, b, h, c)
+
+    di = i * (1 - i)
+    df = f * (1 - f)
+    do = o * (1 - o)
+    dg = 1 - g * g
+    dact = jnp.stack([di, df, do, dg])  # [4] derivative of each gate's act.
+    tanh_c2 = jnp.tanh(c2)
+
+    def gate_grad(th_prev, direct):
+        """dgate_a/dp for all four gates a, given TH_p(t-1) and the direct
+        term (nonzero only at the gate that owns p).
+
+        th_prev: trace(s) of dh(t-1)/dp, shape S.
+        direct:  [4] + S broadcastable direct contribution.
+        Returns [4] + S array of gate derivatives.
+        """
+        return dact.reshape((4,) + (1,) * th_prev.ndim) * (
+            u.reshape((4,) + (1,) * th_prev.ndim) * th_prev[None, ...] + direct
+        )
+
+    def trace_update(th_prev, tc_prev, direct):
+        dgates = gate_grad(th_prev, direct)  # [4] + S
+        tc2 = (
+            f * tc_prev
+            + c * dgates[GATE_F]
+            + i * dgates[GATE_G]
+            + g * dgates[GATE_I]
+        )
+        th2 = o * (1 - tanh_c2 * tanh_c2) * tc2 + tanh_c2 * dgates[GATE_O]
+        return th2, tc2
+
+    eye4 = jnp.eye(4)
+
+    # W traces: parameter W[a, j]; direct term x_j into gate a only.
+    # thw has shape [4, m] (one trace per W entry).
+    direct_w = eye4[:, :, None] * x[None, None, :]  # [4(gate), 4(param-gate), m]
+    thw2, tcw2 = trace_update(thw, tcw, direct_w)
+
+    # u traces: parameter u[a]; direct term h(t-1) into gate a only.
+    direct_u = eye4 * h  # [4, 4]
+    thu2, tcu2 = trace_update(thu, tcu, direct_u)
+
+    # b traces: parameter b[a]; direct term 1 into gate a only.
+    thb2, tcb2 = trace_update(thb, tcb, eye4)
+
+    return h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2
+
+
+def column_rtrl_step_ref(x, w, u, b, h, c, thw, tcw, thu, tcu, thb, tcb):
+    """Batched-over-columns oracle with the same signature/layout as the
+    Pallas kernel: w [C,4,m], u/b [C,4], h/c [C], traces as in the kernel.
+    """
+    fn = jax.vmap(_single_column_rtrl, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+    return fn(x, w, u, b, h, c, thw, tcw, thu, tcu, thb, tcb)
+
+
+def column_forward_ref(x, w, u, b, h, c):
+    """Batched forward-only oracle. Returns (h2, c2)."""
+
+    def one(w_k, u_k, b_k, h_k, c_k):
+        h2, c2, _ = lstm_column_forward(x, w_k, u_k, b_k, h_k, c_k)
+        return h2, c2
+
+    return jax.vmap(one)(w, u, b, h, c)

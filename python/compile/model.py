@@ -1,0 +1,165 @@
+"""Layer-2 JAX model: the CCN/columnar learner step.
+
+This module assembles the paper's per-step computation out of the Layer-1
+Pallas kernel (``kernels/column_rtrl.py``):
+
+  1. advance every *learning* column one step and update its RTRL traces,
+  2. update the online feature normalizer (paper eq. 10),
+  3. emit the normalized features and the denominator needed to scale the
+     trace-gradient into dy/dtheta on the Rust side,
+  4. (frozen stages) advance frozen columns forward-only.
+
+The functions here are lowered once by ``aot.py`` into HLO-text artifacts;
+at run time the Rust coordinator (rust/src/runtime) loads and executes
+them via PJRT. The TD(lambda) weight update itself is O(|theta|) and runs
+in Rust on both the native and the PJRT path, so the artifact boundary is
+"state in, state + features + traces out".
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.column_rtrl import column_forward, column_rtrl_step
+
+# Paper default (Section 3.4): beta = 0.99999 for all experiments.
+NORM_BETA = 0.99999
+
+
+def normalizer_update(mu, var, f, beta=NORM_BETA):
+    """One step of the paper's online mean/variance estimate (eq. 10).
+
+        mu_t    = beta * mu_{t-1} + (1 - beta) * f_t
+        sigma^2 = beta * sigma^2_{t-1}
+                  + (1 - beta) * (mu_t - f_t) * (mu_{t-1} - f_t)
+
+    Args: mu, var, f: [C] per-feature statistics and raw feature values.
+    Returns: (mu2, var2).
+    """
+    mu2 = mu * beta + (1.0 - beta) * f
+    var2 = var * beta + (1.0 - beta) * (mu2 - f) * (mu - f)
+    return mu2, var2
+
+
+def normalize(f, mu, var, eps):
+    """Normalize features with an epsilon-floored standard deviation.
+
+    Returns (f_hat, denom) where denom = max(eps, sigma); the caller needs
+    denom to scale trace-gradients: dy/dp = w_k / denom_k * TH_p.
+    """
+    denom = jnp.maximum(eps, jnp.sqrt(jnp.maximum(var, 0.0)))
+    return (f - mu) / denom, denom
+
+
+@partial(jax.jit, static_argnames=("eps", "beta", "interpret"))
+def columnar_learner_step(
+    x,
+    w,
+    u,
+    b,
+    h,
+    c,
+    thw,
+    tcw,
+    thu,
+    tcu,
+    thb,
+    tcb,
+    mu,
+    var,
+    *,
+    eps: float = 0.01,
+    beta: float = NORM_BETA,
+    interpret: bool = True,
+):
+    """One step for a stage of C learning columns over input x of size m.
+
+    Calls the Pallas kernel for forward + trace update, then updates the
+    normalizer with the *new* hidden states and returns the normalized
+    feature vector.
+
+    Returns (in order):
+      h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2, mu2, var2, h_norm, denom
+    """
+    h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2 = column_rtrl_step(
+        x, w, u, b, h, c, thw, tcw, thu, tcu, thb, tcb, interpret=interpret
+    )
+    mu2, var2 = normalizer_update(mu, var, h2, beta)
+    h_norm, denom = normalize(h2, mu2, var2, eps)
+    return h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2, mu2, var2, h_norm, denom
+
+
+@partial(jax.jit, static_argnames=("eps", "beta", "interpret"))
+def frozen_stage_step(
+    x, w, u, b, h, c, mu, var, *, eps: float = 0.01, beta: float = NORM_BETA,
+    interpret: bool = True
+):
+    """One forward-only step for a frozen stage (no traces; the normalizer
+    keeps running so downstream consumers see stable statistics).
+
+    Returns (h2, c2, mu2, var2, h_norm, denom).
+    """
+    h2, c2 = column_forward(x, w, u, b, h, c, interpret=interpret)
+    mu2, var2 = normalizer_update(mu, var, h2, beta)
+    h_norm, denom = normalize(h2, mu2, var2, eps)
+    return h2, c2, mu2, var2, h_norm, denom
+
+
+def init_stage(key, n_cols, m, w_scale=0.5):
+    """Initialize one stage's parameters and learner state (tests/demos)."""
+    kw, ku, _ = jax.random.split(key, 3)
+    w = jax.random.uniform(kw, (n_cols, 4, m), minval=-w_scale, maxval=w_scale)
+    u = jax.random.uniform(ku, (n_cols, 4), minval=-w_scale, maxval=w_scale)
+    b = jnp.zeros((n_cols, 4))
+    zeros_g4m = jnp.zeros((n_cols, 4, m))
+    zeros_g4 = jnp.zeros((n_cols, 4))
+    state = dict(
+        h=jnp.zeros(n_cols),
+        c=jnp.zeros(n_cols),
+        thw=zeros_g4m,
+        tcw=zeros_g4m,
+        thu=zeros_g4,
+        tcu=zeros_g4,
+        thb=zeros_g4,
+        tcb=zeros_g4,
+        mu=jnp.zeros(n_cols),
+        var=jnp.ones(n_cols),
+    )
+    return dict(w=w, u=u, b=b), state
+
+
+def example_args_step(n_cols, m, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering columnar_learner_step."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((m,), dtype),  # x
+        s((n_cols, 4, m), dtype),  # w
+        s((n_cols, 4), dtype),  # u
+        s((n_cols, 4), dtype),  # b
+        s((n_cols,), dtype),  # h
+        s((n_cols,), dtype),  # c
+        s((n_cols, 4, m), dtype),  # thw
+        s((n_cols, 4, m), dtype),  # tcw
+        s((n_cols, 4), dtype),  # thu
+        s((n_cols, 4), dtype),  # tcu
+        s((n_cols, 4), dtype),  # thb
+        s((n_cols, 4), dtype),  # tcb
+        s((n_cols,), dtype),  # mu
+        s((n_cols,), dtype),  # var
+    )
+
+
+def example_args_fwd(n_cols, m, dtype=jnp.float32):
+    """ShapeDtypeStructs for lowering frozen_stage_step."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((m,), dtype),
+        s((n_cols, 4, m), dtype),
+        s((n_cols, 4), dtype),
+        s((n_cols, 4), dtype),
+        s((n_cols,), dtype),
+        s((n_cols,), dtype),
+        s((n_cols,), dtype),
+        s((n_cols,), dtype),
+    )

@@ -1,0 +1,118 @@
+"""AOT path tests: lowering produces valid, loadable HLO text.
+
+We check the text parses back through xla_client (same parser family the
+Rust side's xla_extension uses), that the manifest enumerates coherent
+shapes, and that numerics survive the round trip jax -> HLO -> execute.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile.aot import (
+    FWD_INPUTS,
+    FWD_OUTPUTS,
+    STEP_INPUTS,
+    STEP_OUTPUTS,
+    default_manifest,
+    lower_fwd,
+    lower_step,
+)
+from compile.model import columnar_learner_step, init_stage
+
+
+def test_default_manifest_covers_paper_configs():
+    shapes = default_manifest()
+    assert (5, 7) in shapes  # trace-patterning columnar
+    assert (4, 7) in shapes and (4, 23) in shapes  # trace CCN stages
+    assert (7, 277) in shapes  # atari columnar
+    assert (5, 277) in shapes  # atari CCN stage 0
+    assert all(c > 0 and m > 0 for c, m in shapes)
+
+
+def test_step_hlo_text_parses():
+    text = lower_step(3, 5, 0.01)
+    assert "HloModule" in text
+    # must re-parse (this is exactly what HloModuleProto::from_text_file
+    # does on the Rust side).
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_fwd_hlo_text_parses():
+    text = lower_fwd(3, 5, 0.01)
+    assert "HloModule" in text
+    comp = xc._xla.hlo_module_from_text(text)
+    assert comp is not None
+
+
+def test_hlo_text_structure():
+    """The lowered step must expose one HLO parameter per model input and
+    return a tuple with one element per model output — the contract the
+    Rust runtime relies on (return_tuple=True, no tupled args)."""
+    n_cols, m = 3, 4
+    def entry_param_count(text):
+        lines = text.splitlines()
+        start = [i for i, l in enumerate(lines) if l.startswith("ENTRY")][0]
+        return "\n".join(lines[start:]).count("parameter(")
+
+    assert entry_param_count(lower_step(n_cols, m, 0.01)) == len(STEP_INPUTS)
+    assert entry_param_count(lower_fwd(n_cols, m, 0.01)) == len(FWD_INPUTS)
+
+
+def test_golden_roundtrip_consistency(tmp_path):
+    """write_golden must emit outputs that re-running the model reproduces
+    (protects the Rust cross-language check from a stale generator)."""
+    from compile.aot import write_golden
+    from compile.model import columnar_learner_step
+
+    write_golden(str(tmp_path), 0.01)
+    golden = json.loads((tmp_path / "golden.json").read_text())
+    assert golden["n_cols"] == 3 and golden["m"] == 4
+    step = golden["step"]
+    args = [
+        jnp.asarray(np.asarray(p["data"], dtype=np.float32).reshape(p["shape"]))
+        for p in step["inputs"]
+    ]
+    outs = columnar_learner_step(*args, eps=golden["eps"])
+    assert len(outs) == len(step["outputs"])
+    for got, want in zip(outs, step["outputs"]):
+        np.testing.assert_allclose(
+            np.asarray(got).ravel(),
+            np.asarray(want["data"], dtype=np.float32),
+            rtol=2e-5, atol=2e-6,
+        )
+
+
+def test_aot_cli_writes_manifest(tmp_path):
+    """Run the module CLI end-to-end on a tiny extra shape set."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert res.returncode == 0, res.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["gate_order"] == "ifog"
+    files = {a["file"] for a in manifest["artifacts"]}
+    assert f"col_step_c5_m7.hlo.txt" in files
+    for a in manifest["artifacts"]:
+        path = out / a["file"]
+        assert path.exists()
+        head = path.read_text()[:200]
+        assert "HloModule" in head
+        if a["kind"] == "step":
+            assert a["inputs"] == STEP_INPUTS
+            assert a["outputs"] == STEP_OUTPUTS
+        else:
+            assert a["inputs"] == FWD_INPUTS
+            assert a["outputs"] == FWD_OUTPUTS

@@ -1,0 +1,165 @@
+"""L1 correctness: Pallas column-RTRL kernel vs the pure-jnp oracle.
+
+hypothesis sweeps column counts, input widths, block sizes and value
+scales; dedicated cases cover saturated gates, zero inputs, and trace
+accumulation over many steps.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.column_rtrl import column_forward, column_rtrl_step
+from compile.kernels.ref import column_forward_ref, column_rtrl_step_ref
+
+RTOL, ATOL = 2e-5, 2e-6
+
+
+def make_args(rng, n_cols, m, scale=1.0, trace_scale=1.0):
+    def r(*shape, s=scale):
+        return jnp.asarray(rng.normal(size=shape) * s, dtype=jnp.float32)
+
+    return (
+        r(m),
+        r(n_cols, 4, m),
+        r(n_cols, 4, s=0.5 * scale),
+        r(n_cols, 4, s=0.1 * scale),
+        r(n_cols),
+        r(n_cols),
+        r(n_cols, 4, m, s=trace_scale),
+        r(n_cols, 4, m, s=trace_scale),
+        r(n_cols, 4, s=trace_scale),
+        r(n_cols, 4, s=trace_scale),
+        r(n_cols, 4, s=trace_scale),
+        r(n_cols, 4, s=trace_scale),
+    )
+
+
+def assert_matches(out_kernel, out_ref):
+    names = ["h2", "c2", "thw2", "tcw2", "thu2", "tcu2", "thb2", "tcb2"]
+    for name, a, b in zip(names, out_kernel, out_ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=RTOL, atol=ATOL, err_msg=name
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_cols=st.integers(min_value=1, max_value=12),
+    m=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([0.1, 1.0, 3.0]),
+)
+def test_rtrl_step_matches_ref_hypothesis(n_cols, m, seed, scale):
+    rng = np.random.default_rng(seed)
+    args = make_args(rng, n_cols, m, scale=scale)
+    assert_matches(column_rtrl_step(*args), column_rtrl_step_ref(*args))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_cols=st.integers(min_value=1, max_value=10),
+    m=st.integers(min_value=1, max_value=16),
+    col_block=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rtrl_step_block_size_invariance(n_cols, m, col_block, seed):
+    """The Pallas grid tiling must not change the numbers."""
+    rng = np.random.default_rng(seed)
+    args = make_args(rng, n_cols, m)
+    base = column_rtrl_step(*args, col_block=n_cols)
+    tiled = column_rtrl_step(*args, col_block=col_block)
+    assert_matches(tiled, base)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_cols=st.integers(min_value=1, max_value=8),
+    m=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_forward_matches_ref_hypothesis(n_cols, m, seed):
+    rng = np.random.default_rng(seed)
+    args = make_args(rng, n_cols, m)[:6]
+    fk = column_forward(*args)
+    fr = column_forward_ref(*args)
+    np.testing.assert_allclose(np.asarray(fk[0]), np.asarray(fr[0]), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(fk[1]), np.asarray(fr[1]), rtol=RTOL, atol=ATOL)
+
+
+def test_saturated_gates():
+    """Huge pre-activations saturate sigmoid/tanh; derivatives go to zero
+    and the update must stay finite (no NaN from 0 * inf)."""
+    rng = np.random.default_rng(7)
+    args = list(make_args(rng, 4, 6))
+    args[1] = args[1] * 0 + 50.0  # w
+    args[3] = args[3] * 0 + 50.0  # b
+    out = column_rtrl_step(*args)
+    for a in out:
+        assert np.all(np.isfinite(np.asarray(a)))
+    assert_matches(out, column_rtrl_step_ref(*args))
+
+
+def test_zero_input_zero_state():
+    """From zero state/traces with zero input, traces of input weights stay
+    zero (direct term is x=0) but bias traces become nonzero."""
+    n_cols, m = 3, 5
+    rng = np.random.default_rng(3)
+    z_g4m = jnp.zeros((n_cols, 4, m), jnp.float32)
+    z_g4 = jnp.zeros((n_cols, 4), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n_cols, 4, m)), dtype=jnp.float32)
+    u = jnp.asarray(rng.normal(size=(n_cols, 4)) * 0.5, dtype=jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n_cols, 4)) * 0.5, dtype=jnp.float32)
+    out = column_rtrl_step(
+        jnp.zeros(m, jnp.float32), w, u, b, jnp.zeros(n_cols, jnp.float32), jnp.zeros(n_cols, jnp.float32),
+        z_g4m, z_g4m, z_g4, z_g4, z_g4, z_g4,
+    )
+    np.testing.assert_allclose(np.asarray(out[2]), 0.0, atol=1e-8)  # thw2
+    np.testing.assert_allclose(np.asarray(out[3]), 0.0, atol=1e-8)  # tcw2
+    assert np.any(np.abs(np.asarray(out[6])) > 1e-6)  # thb2 nonzero
+
+
+def test_multi_step_accumulation_matches_ref():
+    """Run 50 steps; kernel and oracle must stay in lockstep (no drift)."""
+    rng = np.random.default_rng(11)
+    n_cols, m = 5, 7
+    params = make_args(rng, n_cols, m)[1:4]
+    f32 = jnp.float32
+    state_k = state_r = (
+        jnp.zeros(n_cols, f32), jnp.zeros(n_cols, f32),
+        jnp.zeros((n_cols, 4, m), f32), jnp.zeros((n_cols, 4, m), f32),
+        jnp.zeros((n_cols, 4), f32), jnp.zeros((n_cols, 4), f32),
+        jnp.zeros((n_cols, 4), f32), jnp.zeros((n_cols, 4), f32),
+    )
+    for _ in range(50):
+        x = jnp.asarray(rng.normal(size=m), dtype=jnp.float32)
+        state_k = column_rtrl_step(x, *params, *state_k)
+        state_r = column_rtrl_step_ref(x, *params, *state_r)
+    assert_matches(state_k, state_r)
+
+
+def test_column_independence():
+    """Perturbing column i's parameters must not change column j's output —
+    the structural property that makes columnar RTRL linear-cost."""
+    rng = np.random.default_rng(13)
+    n_cols, m = 6, 9
+    args = list(make_args(rng, n_cols, m))
+    base = column_rtrl_step(*args)
+    perturbed = list(args)
+    w2 = np.asarray(perturbed[1]).copy()
+    w2[2] += 1.5  # hit column 2 only
+    perturbed[1] = jnp.asarray(w2)
+    out = column_rtrl_step(*perturbed)
+    others = [k for k in range(n_cols) if k != 2]
+    np.testing.assert_allclose(
+        np.asarray(out[0])[others], np.asarray(base[0])[others], rtol=0, atol=0
+    )
+    assert not np.allclose(np.asarray(out[0])[2], np.asarray(base[0])[2])
+
+
+@pytest.mark.parametrize("n_cols,m", [(1, 1), (1, 64), (16, 1), (13, 277)])
+def test_extreme_shapes(n_cols, m):
+    rng = np.random.default_rng(n_cols * 100 + m)
+    args = make_args(rng, n_cols, m)
+    assert_matches(column_rtrl_step(*args), column_rtrl_step_ref(*args))

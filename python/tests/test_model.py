@@ -1,0 +1,123 @@
+"""L2 tests: normalizer (paper eq. 10), learner-step assembly, shapes."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    NORM_BETA,
+    columnar_learner_step,
+    frozen_stage_step,
+    init_stage,
+    normalize,
+    normalizer_update,
+)
+
+
+def test_normalizer_recursion_matches_paper_eq10():
+    """Literal transcription check of eq. 10 on a hand-computed step."""
+    mu, var, f, beta = 0.5, 2.0, 3.0, 0.9
+    mu2, var2 = normalizer_update(jnp.asarray(mu), jnp.asarray(var),
+                                  jnp.asarray(f), beta)
+    expect_mu2 = mu * beta + (1 - beta) * f  # 0.75
+    expect_var2 = var * beta + (1 - beta) * (expect_mu2 - f) * (mu - f)
+    np.testing.assert_allclose(float(mu2), expect_mu2, rtol=1e-6)
+    np.testing.assert_allclose(float(var2), expect_var2, rtol=1e-6)
+
+
+def test_normalizer_converges_to_moments():
+    """On an iid stream the running estimates approach the true moments."""
+    rng = np.random.default_rng(0)
+    beta = 0.999
+    mu = jnp.zeros(1)
+    var = jnp.ones(1)
+    for _ in range(20000):
+        f = jnp.asarray([rng.normal(loc=2.0, scale=3.0)])
+        mu, var = normalizer_update(mu, var, f, beta)
+    assert abs(float(mu[0]) - 2.0) < 0.3
+    assert abs(float(jnp.sqrt(var[0])) - 3.0) < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    var=st.floats(min_value=0.0, max_value=10.0),
+    eps=st.sampled_from([0.1, 0.01, 0.001]),
+    f=st.floats(min_value=-100.0, max_value=100.0),
+    mu=st.floats(min_value=-10.0, max_value=10.0),
+)
+def test_normalize_epsilon_floor(var, eps, f, mu):
+    """The epsilon floor bounds |f_hat| <= |f - mu| / eps and keeps the
+    output finite even at zero variance (the paper's stability fix)."""
+    f_hat, denom = normalize(jnp.asarray(f), jnp.asarray(mu),
+                             jnp.asarray(var), eps)
+    assert np.isfinite(float(f_hat))
+    assert float(denom) >= eps - 1e-9
+    assert abs(float(f_hat)) <= abs(f - mu) / eps + 1e-6
+
+
+def test_learner_step_shapes_and_finiteness():
+    key = jax.random.PRNGKey(0)
+    n_cols, m = 4, 11
+    params, state = init_stage(key, n_cols, m)
+    x = jax.random.normal(jax.random.PRNGKey(1), (m,))
+    out = columnar_learner_step(
+        x, params["w"], params["u"], params["b"],
+        state["h"], state["c"], state["thw"], state["tcw"],
+        state["thu"], state["tcu"], state["thb"], state["tcb"],
+        state["mu"], state["var"],
+    )
+    assert len(out) == 12
+    shapes = [o.shape for o in out]
+    assert shapes[0] == (n_cols,)  # h2
+    assert shapes[2] == (n_cols, 4, m)  # thw2
+    assert shapes[10] == (n_cols,)  # h_norm
+    for o in out:
+        assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_frozen_step_matches_learning_step_forward():
+    """The frozen (forward-only) step must produce the same h2/c2/norm as
+    the learning step — freezing changes traces, never the forward pass."""
+    key = jax.random.PRNGKey(3)
+    n_cols, m = 5, 7
+    params, state = init_stage(key, n_cols, m)
+    x = jax.random.normal(jax.random.PRNGKey(4), (m,))
+    full = columnar_learner_step(
+        x, params["w"], params["u"], params["b"],
+        state["h"], state["c"], state["thw"], state["tcw"],
+        state["thu"], state["tcu"], state["thb"], state["tcb"],
+        state["mu"], state["var"],
+    )
+    froz = frozen_stage_step(
+        x, params["w"], params["u"], params["b"],
+        state["h"], state["c"], state["mu"], state["var"],
+    )
+    np.testing.assert_allclose(np.asarray(froz[0]), np.asarray(full[0]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(froz[1]), np.asarray(full[1]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(froz[4]), np.asarray(full[10]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(froz[5]), np.asarray(full[11]), rtol=1e-6)
+
+
+def test_learner_step_runs_many_steps_stable():
+    """200 steps on random input: no NaN/inf, normalizer variance stays
+    positive, normalized features stay bounded by the eps floor."""
+    key = jax.random.PRNGKey(5)
+    n_cols, m = 3, 6
+    params, state = init_stage(key, n_cols, m)
+    rng = np.random.default_rng(8)
+    vals = list(state.values())
+    keys = list(state.keys())
+    eps = 0.01
+    for _ in range(200):
+        x = jnp.asarray(rng.normal(size=m), dtype=jnp.float32)
+        out = columnar_learner_step(
+            x, params["w"], params["u"], params["b"], *vals[:10], eps=eps
+        )
+        vals = list(out[:10])
+        h_norm = np.asarray(out[10])
+        assert np.all(np.isfinite(h_norm))
+        # LSTM h in (-1, 1); with the eps floor, |h_norm| < 2 / eps always.
+        assert np.all(np.abs(h_norm) < 2.0 / eps)
+    assert np.all(np.asarray(vals[9]) >= 0)  # var non-negative

@@ -1,0 +1,71 @@
+//! Shared harness for the paper-figure benches (no `criterion` offline).
+//!
+//! Every bench binary regenerates one table/figure of the paper at a
+//! configurable scale and prints the series plus writes CSVs under
+//! results/. Scale knobs (env vars):
+//!
+//!   CCN_BENCH_STEPS   total steps per run   (default per-bench)
+//!   CCN_BENCH_SEEDS   number of seeds       (default 3)
+//!   CCN_BENCH_THREADS worker threads        (default all cores)
+
+#![allow(dead_code)]
+
+use std::path::Path;
+
+use ccn_rtrl::coordinator::{aggregate_runs, run_sweep, sweep, AggregateResult};
+use ccn_rtrl::config::ExperimentConfig;
+use ccn_rtrl::metrics::write_csv;
+
+pub fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn steps(default: u64) -> u64 {
+    env_u64("CCN_BENCH_STEPS", default)
+}
+
+pub fn seeds(default: u64) -> Vec<u64> {
+    (0..env_u64("CCN_BENCH_SEEDS", default)).collect()
+}
+
+pub fn threads() -> usize {
+    env_u64("CCN_BENCH_THREADS", sweep::default_threads() as u64) as usize
+}
+
+/// Run configs x seeds and aggregate.
+pub fn sweep_and_aggregate(
+    bases: Vec<ExperimentConfig>,
+    seed_list: &[u64],
+) -> Vec<AggregateResult> {
+    let mut configs = Vec::new();
+    for base in &bases {
+        configs.extend(sweep::seeds(base, seed_list));
+    }
+    eprintln!(
+        "[bench] {} runs ({} configs x {} seeds) on {} threads",
+        configs.len(),
+        bases.len(),
+        seed_list.len(),
+        threads()
+    );
+    let res = run_sweep(configs, threads());
+    aggregate_runs(&res.runs)
+}
+
+/// Write one aggregate's learning curve as CSV under results/.
+pub fn save_curves(prefix: &str, aggs: &[AggregateResult]) {
+    for a in aggs {
+        let xs: Vec<f64> = a.curve_x.iter().map(|&v| v as f64).collect();
+        let path = format!("results/{prefix}_{}_{}.csv", a.env, a.learner);
+        write_csv(
+            Path::new(&path),
+            &["step", "mse", "stderr"],
+            &[&xs, &a.curve_mean, &a.curve_stderr],
+        )
+        .expect("write curve csv");
+    }
+    eprintln!("[bench] wrote {} curve CSVs under results/ ({prefix}_*)", aggs.len());
+}

@@ -1,0 +1,65 @@
+//! Figure 5: the T-BPTT truncation/width trade-off at a *fixed* ~4k-op
+//! budget on trace patterning. Table-1 pairs: 2:13, 3:10, 5:8, 8:6,
+//! 10:5, 15:4, 20:3, 30:2 (k:d).
+//!
+//! Paper shape: large nets with tiny truncation (13 features, k=2) are
+//! the worst — the truncation bias dominates when k is far below the
+//! longest dependency (ISI up to 26); the best configuration is the
+//! smallest network with the longest window (2:30).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ccn_rtrl::compute::{self, TRACE_TBPTT_PAIRS};
+use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
+use ccn_rtrl::metrics::render_table;
+
+fn main() {
+    let steps = common::steps(2_500_000);
+    let seeds = common::seeds(2);
+
+    let bases: Vec<ExperimentConfig> = TRACE_TBPTT_PAIRS
+        .iter()
+        .map(|&(k, d)| ExperimentConfig {
+            env: EnvKind::TracePatterning,
+            learner: LearnerKind::Tbptt {
+                d: d as usize,
+                k: k as usize,
+            },
+            alpha: 0.001,
+            lambda: 0.99,
+            gamma_override: None,
+            eps: 0.01,
+            steps,
+            seed: 0,
+            curve_points: 50,
+        })
+        .collect();
+
+    let aggs = common::sweep_and_aggregate(bases, &seeds);
+    common::save_curves("fig5", &aggs);
+
+    let mut rows = Vec::new();
+    for &(k, d) in &TRACE_TBPTT_PAIRS {
+        let label = LearnerKind::Tbptt {
+            d: d as usize,
+            k: k as usize,
+        }
+        .label();
+        let a = aggs.iter().find(|a| a.learner == label).unwrap();
+        rows.push(vec![
+            format!("{d}:{k}"),
+            compute::tbptt_ops(d, 7, k).to_string(),
+            format!("{:.5} ± {:.5}", a.tail_mean, a.tail_stderr),
+        ]);
+    }
+    println!("Figure 5 — T-BPTT d:k pairs at equal ~4k-op budget, {steps} steps:");
+    println!(
+        "{}",
+        render_table(&["d:k", "ops/step", "final err (±se)"], &rows)
+    );
+    println!(
+        "expected shape (paper): 13:2 and 10:3 worst (k « longest dependency 26);\n\
+         2:30 best — T-BPTT prefers fewer features + longer window here."
+    );
+}

@@ -1,0 +1,85 @@
+//! Figure 8: per-environment relative error of the CCN vs the best
+//! equal-budget T-BPTT on the Atari-prediction benchmark (our
+//! synthetic-ALE suite — see DESIGN.md §Substitutions), gamma = 0.98,
+//! ~50k-op budget, error normalized so T-BPTT == 1.0 per environment.
+//!
+//! Paper shape: CCN beats T-BPTT in all but ~2 environments, often by
+//! several-fold; worst case ~2x worse.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
+use ccn_rtrl::coordinator::aggregate::relative_errors;
+use ccn_rtrl::env::synthatari;
+use ccn_rtrl::metrics::render_table;
+
+fn main() {
+    let steps = common::steps(200_000);
+    let seeds = common::seeds(2);
+
+    let ccn = LearnerKind::Ccn {
+        total: 15,
+        per_stage: 5,
+        steps_per_stage: (steps / 3).max(1),
+    };
+    let tbptt = LearnerKind::Tbptt { d: 8, k: 5 }; // best Table-1 pair
+
+    let mut bases = Vec::new();
+    for game in synthatari::env_names() {
+        for learner in [ccn.clone(), tbptt.clone()] {
+            bases.push(ExperimentConfig {
+                env: EnvKind::SynthAtari { game: game.into() },
+                learner,
+                alpha: 0.001,
+                lambda: 0.99,
+                gamma_override: None,
+                eps: 0.1,
+                steps,
+                seed: 0,
+                curve_points: 40,
+            });
+        }
+    }
+
+    let aggs = common::sweep_and_aggregate(bases, &seeds);
+    common::save_curves("fig8", &aggs);
+
+    let rel = relative_errors(&aggs, &ccn.label(), &tbptt.label());
+    let mut rows = Vec::new();
+    let mut wins = 0;
+    for (env, r) in &rel {
+        if *r < 1.0 {
+            wins += 1;
+        }
+        let ccn_agg = aggs
+            .iter()
+            .find(|a| a.learner == ccn.label() && &a.env == env)
+            .unwrap();
+        let tb = aggs
+            .iter()
+            .find(|a| a.learner == tbptt.label() && &a.env == env)
+            .unwrap();
+        rows.push(vec![
+            env.clone(),
+            format!("{:.5}", ccn_agg.tail_mean),
+            format!("{:.5}", tb.tail_mean),
+            format!("{:.3}", r),
+        ]);
+    }
+    println!(
+        "Figure 8 — per-environment error, CCN vs best T-BPTT (=1.0), {steps} steps:"
+    );
+    println!(
+        "{}",
+        render_table(
+            &["environment", "ccn err", "tbptt err", "ccn/tbptt"],
+            &rows
+        )
+    );
+    println!(
+        "CCN better in {wins}/{} environments \
+         (paper: all but 2 of 50, many at <0.2x)",
+        rel.len()
+    );
+}

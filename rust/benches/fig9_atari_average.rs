@@ -1,0 +1,71 @@
+//! Figure 9: average T-BPTT-relative error of *all four* methods on the
+//! Atari-prediction benchmark (columnar, constructive, CCN vs the best
+//! T-BPTT).
+//!
+//! Paper shape: all three proposed methods improve on T-BPTT on average;
+//! CCN best, at less than half of T-BPTT's average error.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
+use ccn_rtrl::coordinator::aggregate::relative_errors;
+use ccn_rtrl::env::synthatari;
+use ccn_rtrl::metrics::render_table;
+
+fn main() {
+    let steps = common::steps(150_000);
+    let seeds = common::seeds(1);
+
+    let methods = vec![
+        LearnerKind::Tbptt { d: 8, k: 5 },
+        LearnerKind::Columnar { d: 7 },
+        LearnerKind::Constructive {
+            total: 8,
+            steps_per_stage: (steps / 8).max(1),
+        },
+        LearnerKind::Ccn {
+            total: 15,
+            per_stage: 5,
+            steps_per_stage: (steps / 3).max(1),
+        },
+    ];
+    let baseline = methods[0].label();
+
+    let mut bases = Vec::new();
+    for game in synthatari::env_names() {
+        for learner in &methods {
+            bases.push(ExperimentConfig {
+                env: EnvKind::SynthAtari { game: game.into() },
+                learner: learner.clone(),
+                alpha: 0.001,
+                lambda: 0.99,
+                gamma_override: None,
+                eps: 0.1,
+                steps,
+                seed: 0,
+                curve_points: 30,
+            });
+        }
+    }
+
+    let aggs = common::sweep_and_aggregate(bases, &seeds);
+
+    let mut rows = Vec::new();
+    for learner in &methods {
+        let rel = relative_errors(&aggs, &learner.label(), &baseline);
+        let avg: f64 = rel.iter().map(|(_, r)| r).sum::<f64>() / rel.len() as f64;
+        rows.push(vec![learner.label(), format!("{avg:.3}")]);
+    }
+    println!(
+        "Figure 9 — average relative error (best T-BPTT = 1.0), {steps} steps:"
+    );
+    println!(
+        "{}",
+        render_table(&["method", "avg error rel. to T-BPTT"], &rows)
+    );
+    println!(
+        "expected shape (paper): ccn < constructive < columnar < 1.0 (tbptt);\n\
+         ccn under ~0.5."
+    );
+}

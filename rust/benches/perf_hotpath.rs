@@ -1,0 +1,106 @@
+//! §Perf micro-benchmarks of the real-time hot path: per-step cost of the
+//! column RTRL update, the full learners at the paper's configurations,
+//! and derived throughput (agent-steps/s and column-steps/s).
+//!
+//! The paper's C++ ran 50M trace-patterning steps in ~5 min on one CPU
+//! (~167k agent-steps/s with a 5-column net). Targets (DESIGN.md §7):
+//! beat that by >=10x on the trace config, and keep the 277-input Atari
+//! config above 100k agent-steps/s.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use ccn_rtrl::config::{build_agent, ExperimentConfig, LearnerKind};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::nets::lstm_column::LstmColumn;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn bench<F: FnMut()>(iters: u64, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let iters = common::steps(2_000_000);
+    let mut rows = Vec::new();
+
+    // raw column step at several input widths
+    for &m in &[7usize, 23, 64, 277] {
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut col = LstmColumn::new(m, &mut rng, 0.5);
+        let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let scale_iters = (iters / (m as u64 / 4 + 1)).max(10_000);
+        let per = bench(scale_iters, || col.step_with_traces(&x));
+        rows.push(vec![
+            format!("column m={m} (traces)"),
+            format!("{:.1} ns", per * 1e9),
+            format!("{:.1}M/s", 1e-6 / per),
+        ]);
+        let per_fwd = bench(scale_iters, || col.step_forward_only(&x));
+        rows.push(vec![
+            format!("column m={m} (frozen)"),
+            format!("{:.1} ns", per_fwd * 1e9),
+            format!("{:.1}M/s", 1e-6 / per_fwd),
+        ]);
+    }
+
+    // full agents at paper configs
+    let configs: Vec<(String, LearnerKind, usize)> = vec![
+        ("trace columnar d=5".into(), LearnerKind::Columnar { d: 5 }, 7),
+        (
+            "trace ccn 20/4".into(),
+            LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: u64::MAX / 2,
+            },
+            7,
+        ),
+        ("trace tbptt 2:30".into(), LearnerKind::Tbptt { d: 2, k: 30 }, 7),
+        ("atari columnar d=7".into(), LearnerKind::Columnar { d: 7 }, 277),
+        (
+            "atari ccn 15/5".into(),
+            LearnerKind::Ccn {
+                total: 15,
+                per_stage: 5,
+                steps_per_stage: u64::MAX / 2,
+            },
+            277,
+        ),
+        ("atari tbptt 8:5".into(), LearnerKind::Tbptt { d: 8, k: 5 }, 277),
+    ];
+    for (name, learner, n) in configs {
+        let cfg = ExperimentConfig {
+            learner,
+            ..Default::default()
+        };
+        let mut agent = build_agent(&cfg, n, 0.9);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..n).map(|_| rng.uniform(0.0, 1.0)).collect())
+            .collect();
+        let mut i = 0usize;
+        let agent_iters = (iters / (n as u64 / 4 + 1)).max(10_000);
+        let per = bench(agent_iters, || {
+            agent.step(&xs[i % 64], 0.1);
+            i += 1;
+        });
+        rows.push(vec![
+            name,
+            format!("{:.0} ns", per * 1e9),
+            format!("{:.2}M/s", 1e-6 / per),
+        ]);
+    }
+
+    println!("§Perf hot-path micro-benchmarks:");
+    println!("{}", render_table(&["path", "per step", "throughput"], &rows));
+    println!(
+        "reference: paper's C++ = ~0.17M agent-steps/s on the trace config \
+         (50M steps / ~5 min)"
+    );
+}

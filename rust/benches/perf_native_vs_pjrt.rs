@@ -1,0 +1,84 @@
+//! A2: native-Rust vs PJRT-dispatched column steps — the reproduction of
+//! the paper's appendix claim that a specialized single-stream
+//! implementation (their C++) is ~50x faster than a general framework
+//! (their PyTorch) for small recurrent networks trained one sample at a
+//! time. Our native Rust path plays C++; the XLA/PJRT path plays the
+//! framework. The *crossover* matters too: as the column block grows,
+//! the framework's fixed dispatch cost amortizes.
+//!
+//! Skips gracefully when artifacts/ is absent.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::nets::lstm_column::LstmColumn;
+use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for cand in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn main() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("perf_native_vs_pjrt: artifacts/ not built — skipping");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).expect("pjrt");
+    // shapes lowered by the default manifest: paper trace columnar (5,7),
+    // atari columnar (7,277), quickstart (8,16)
+    let shapes = [(5usize, 7usize), (8, 16), (7, 277)];
+    let pjrt_iters = common::steps(300) as usize;
+    let mut rows = Vec::new();
+    for (c, m) in shapes {
+        let mut stage = PjrtColumnarStage::new(&rt, c, m, 0).expect("stage");
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut cols: Vec<LstmColumn> =
+            (0..c).map(|_| LstmColumn::new(m, &mut rng, 0.5)).collect();
+        stage.set_params_from_columns(&cols);
+        let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        stage.step(&x).unwrap(); // compile + warm
+        let t0 = Instant::now();
+        for _ in 0..pjrt_iters {
+            stage.step(&x).unwrap();
+        }
+        let pjrt_per = t0.elapsed().as_secs_f64() / pjrt_iters as f64;
+
+        let native_iters = 200_000usize / (m / 4 + 1) + 1000;
+        let t1 = Instant::now();
+        for _ in 0..native_iters {
+            for col in cols.iter_mut() {
+                col.step_with_traces(&x);
+            }
+        }
+        let native_per = t1.elapsed().as_secs_f64() / native_iters as f64;
+
+        rows.push(vec![
+            format!("c={c} m={m}"),
+            format!("{:.1} us", pjrt_per * 1e6),
+            format!("{:.2} us", native_per * 1e6),
+            format!("{:.0}x", pjrt_per / native_per),
+        ]);
+    }
+    println!("A2 — per-step column-stage cost, PJRT vs native Rust:");
+    println!(
+        "{}",
+        render_table(&["shape", "pjrt", "native", "native speedup"], &rows)
+    );
+    println!(
+        "paper appendix: specialized C++ ~50x faster than PyTorch for small\n\
+         single-stream nets; dispatch overhead dominates at small shapes and\n\
+         amortizes as m grows — same shape here."
+    );
+}

@@ -1,0 +1,191 @@
+//! Appendix-A operation-count equations and budget allocation.
+//!
+//! Notation (paper): |h| = hidden features d, |x| = input features n,
+//! k = truncation window, u = features-per-stage.
+//!
+//! - LSTM cell forward (per feature):            4|h| + 4|x| + 4
+//! - Fully connected LSTM forward:               4|h|^2 + 4|h||x| + 4|h|
+//! - T-BPTT total:                 (k + 1) (4|h|^2 + 4|h||x| + 4|h|)
+//! - Columnar cell forward:                      4|x| + 8  (hidden = 1)
+//! - Columnar total (learning = 6x forward):     7 |h| (4|x| + 8)
+//! - CCN forward (avg fan-in |h|/2 hidden):      |h| (2|h| + 4|x| + 4)
+//! - CCN total:     |h|(2|h|+4|x|+4) + 6u(2|h|+4|x|+4)
+//! - Constructive = CCN with u = 1.
+
+/// Per-step ops for one forward pass of a fully connected LSTM.
+pub fn lstm_forward_ops(d: u64, n: u64) -> u64 {
+    4 * d * d + 4 * d * n + 4 * d
+}
+
+/// Per-step ops of T-BPTT with truncation k (forward + k-step backward).
+pub fn tbptt_ops(d: u64, n: u64, k: u64) -> u64 {
+    (k + 1) * lstm_forward_ops(d, n)
+}
+
+/// Per-step ops of a columnar network with d columns over n inputs.
+/// RTRL bookkeeping is budgeted at 6x the forward cost (Appendix A).
+pub fn columnar_ops(d: u64, n: u64) -> u64 {
+    d * (4 * n + 8) + 6 * d * (4 * n + 8)
+}
+
+/// Per-step ops of a CCN with d total features, n raw inputs, and u
+/// features learned per stage (average hidden fan-in d/2).
+pub fn ccn_ops(d: u64, n: u64, u: u64) -> u64 {
+    let cell = 2 * d + 4 * n + 4;
+    d * cell + 6 * u * cell
+}
+
+/// Constructive network = CCN learning one feature per stage.
+pub fn constructive_ops(d: u64, n: u64) -> u64 {
+    ccn_ops(d, n, 1)
+}
+
+/// Largest d such that tbptt_ops(d, n, k) <= budget (0 if none).
+pub fn tbptt_features_for_budget(budget: u64, n: u64, k: u64) -> u64 {
+    let mut d = 0;
+    while tbptt_ops(d + 1, n, k) <= budget {
+        d += 1;
+    }
+    d
+}
+
+/// Largest column count within budget for a columnar network.
+pub fn columnar_features_for_budget(budget: u64, n: u64) -> u64 {
+    let per = 7 * (4 * n + 8);
+    budget / per
+}
+
+/// Largest total features within budget for a CCN with u per stage.
+pub fn ccn_features_for_budget(budget: u64, n: u64, u: u64) -> u64 {
+    let mut d = 0;
+    while ccn_ops(d + u, n, u) <= budget {
+        d += u;
+    }
+    d
+}
+
+/// The k:d pairs the paper sweeps for T-BPTT on trace patterning
+/// (Table 1): 2:13, 3:10, 5:8, 8:6, 10:5, 15:4, 20:3, 30:2.
+pub const TRACE_TBPTT_PAIRS: [(u64, u64); 8] = [
+    (2, 13),
+    (3, 10),
+    (5, 8),
+    (8, 6),
+    (10, 5),
+    (15, 4),
+    (20, 3),
+    (30, 2),
+];
+
+/// The k:d pairs for the Atari benchmark (Table 1): 15:2, 8:5, 5:8,
+/// 4:10, 2:25.
+pub const ATARI_TBPTT_PAIRS: [(u64, u64); 5] = [(15, 2), (8, 5), (5, 8), (4, 10), (2, 25)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trace patterning: n = 7 inputs, budget ~ 4,000 ops (Section 4.1).
+    const TRACE_N: u64 = 7;
+    const TRACE_BUDGET: u64 = 4_000;
+
+    /// Atari: n = 277 inputs, budget ~ 50,000 ops (Section 5.2).
+    const ATARI_N: u64 = 277;
+    const ATARI_BUDGET: u64 = 50_000;
+
+    #[test]
+    fn lstm_forward_matches_formula() {
+        assert_eq!(lstm_forward_ops(2, 7), 4 * 4 + 4 * 2 * 7 + 8);
+        assert_eq!(lstm_forward_ops(1, 1), 4 + 4 + 4);
+    }
+
+    #[test]
+    fn paper_trace_tbptt_pairs_fit_budget() {
+        // Every Table-1 k:d pair must land near (and not wildly above) the
+        // ~4k budget; the paper says "approximately" so allow 25% slack.
+        for &(k, d) in &TRACE_TBPTT_PAIRS {
+            let ops = tbptt_ops(d, TRACE_N, k);
+            assert!(
+                ops <= TRACE_BUDGET * 5 / 4,
+                "k={k} d={d}: {ops} ops exceeds trace budget"
+            );
+            // and must be within reach of the budget (not trivially small)
+            assert!(ops >= TRACE_BUDGET / 4, "k={k} d={d}: {ops} too small");
+        }
+    }
+
+    #[test]
+    fn paper_atari_tbptt_pairs_fit_budget() {
+        // The paper's own Table-1 Atari pairs span ~36k..91k ops by its
+        // Appendix-A estimate ("approximately 50k"); assert every pair is
+        // in that sanctioned band rather than exactly on budget.
+        for &(k, d) in &ATARI_TBPTT_PAIRS {
+            let ops = tbptt_ops(d, ATARI_N, k);
+            assert!(
+                ops <= ATARI_BUDGET * 2,
+                "k={k} d={d}: {ops} ops exceeds atari budget band"
+            );
+            assert!(ops >= ATARI_BUDGET / 4, "k={k} d={d}: {ops} too small");
+        }
+    }
+
+    #[test]
+    fn columnar_trace_config_fits() {
+        // Paper: columnar uses 5 features on trace patterning.
+        let ops = columnar_ops(5, TRACE_N);
+        assert!(ops <= TRACE_BUDGET, "columnar 5x7: {ops}");
+        // and 7 features on atari within ~50k (the estimate lands ~9% over
+        // the nominal budget — the paper's "approximately").
+        let ops_atari = columnar_ops(7, ATARI_N);
+        assert!(
+            ops_atari <= ATARI_BUDGET * 5 / 4,
+            "columnar 7x277: {ops_atari}"
+        );
+    }
+
+    #[test]
+    fn ccn_trace_config_fits() {
+        // Paper: CCN has 20 features, 4 per stage on trace patterning.
+        let ops = ccn_ops(20, TRACE_N, 4);
+        assert!(ops <= TRACE_BUDGET, "ccn 20/4 trace: {ops}");
+        // Atari: CCN 5 features/stage; total features grows to ~15.
+        let ops_atari = ccn_ops(15, ATARI_N, 5);
+        assert!(
+            ops_atari <= ATARI_BUDGET * 5 / 4,
+            "ccn 15/5 atari: {ops_atari}"
+        );
+    }
+
+    #[test]
+    fn constructive_is_ccn_u1() {
+        assert_eq!(constructive_ops(10, 7), ccn_ops(10, 7, 1));
+    }
+
+    #[test]
+    fn budget_inversion_consistent() {
+        for &(k, _) in &TRACE_TBPTT_PAIRS {
+            let d = tbptt_features_for_budget(TRACE_BUDGET * 5 / 4, TRACE_N, k);
+            assert!(d >= 1);
+            assert!(tbptt_ops(d, TRACE_N, k) <= TRACE_BUDGET * 5 / 4);
+            assert!(tbptt_ops(d + 1, TRACE_N, k) > TRACE_BUDGET * 5 / 4);
+        }
+        let d = columnar_features_for_budget(TRACE_BUDGET, TRACE_N);
+        assert!(columnar_ops(d, TRACE_N) <= TRACE_BUDGET);
+        assert!(columnar_ops(d + 1, TRACE_N) > TRACE_BUDGET);
+        let d = ccn_features_for_budget(TRACE_BUDGET, TRACE_N, 4);
+        assert!(ccn_ops(d, TRACE_N, 4) <= TRACE_BUDGET);
+    }
+
+    #[test]
+    fn tbptt_monotone_in_k_and_d() {
+        assert!(tbptt_ops(5, 7, 10) < tbptt_ops(5, 7, 20));
+        assert!(tbptt_ops(5, 7, 10) < tbptt_ops(6, 7, 10));
+    }
+
+    #[test]
+    fn fig6_compute_ratio() {
+        // Fig 6 caption: k=20 is ten times the compute of k=2 (same d=10).
+        let r = tbptt_ops(10, 7, 20) as f64 / tbptt_ops(10, 7, 2) as f64;
+        assert!((r - 7.0).abs() < 1.0, "ratio {r}"); // (21/3 = 7x by formula)
+    }
+}

@@ -1,0 +1,12 @@
+//! Per-step compute accounting (paper Appendix A).
+//!
+//! The paper's central experimental control is a fixed per-step floating
+//! point operation budget shared by all learners; the truncation/width
+//! trade-off of Figures 4–5 and the Atari configurations all come from
+//! these equations. We implement them exactly and use them both to choose
+//! configurations and to assert (in tests/benches) that measured operation
+//! counts track the estimates.
+
+pub mod budget;
+
+pub use budget::*;

@@ -1,0 +1,477 @@
+//! Experiment configuration: typed specs, JSON round-trip, CLI overrides,
+//! and the paper's Table-1 presets.
+
+use crate::env::synthatari;
+use crate::env::trace_conditioning::{TraceConditioning, TraceConditioningConfig};
+use crate::env::trace_patterning::{TracePatterning, TracePatterningConfig};
+use crate::env::{cycle_world::CycleWorld, Stream};
+use crate::learn::{TdConfig, TdLambdaAgent};
+use crate::nets::ccn::{CcnConfig, CcnNet};
+use crate::nets::normalizer::NORM_BETA;
+use crate::nets::snap1::Snap1Net;
+use crate::nets::tbptt::TbpttNet;
+use crate::nets::PredictionNet;
+use crate::util::json::Json;
+
+/// Which network/learning algorithm to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LearnerKind {
+    /// d independent columns, learned forever (Section 3.1).
+    Columnar { d: usize },
+    /// grow one feature per stage (Section 3.2).
+    Constructive { total: usize, steps_per_stage: u64 },
+    /// the full CCN (Section 3.3).
+    Ccn {
+        total: usize,
+        per_stage: usize,
+        steps_per_stage: u64,
+    },
+    /// fully connected LSTM + truncated BPTT (the baseline).
+    Tbptt { d: usize, k: usize },
+    /// SnAp-1 diagonal RTRL on a dense LSTM (related-work baseline).
+    Snap1 { d: usize },
+}
+
+impl LearnerKind {
+    pub fn label(&self) -> String {
+        match self {
+            LearnerKind::Columnar { d } => format!("columnar_{d}"),
+            LearnerKind::Constructive {
+                total,
+                steps_per_stage,
+            } => format!("constructive_{total}_{steps_per_stage}"),
+            LearnerKind::Ccn {
+                total,
+                per_stage,
+                steps_per_stage,
+            } => format!("ccn_{total}_{per_stage}_{steps_per_stage}"),
+            LearnerKind::Tbptt { d, k } => format!("tbptt_{d}x{k}"),
+            LearnerKind::Snap1 { d } => format!("snap1_{d}"),
+        }
+    }
+}
+
+/// Which prediction stream to run on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EnvKind {
+    TracePatterning,
+    /// fast variant with short intervals (tests/smoke)
+    TracePatterningTiny,
+    TraceConditioning,
+    CycleWorld { n: u64 },
+    /// one of the synthetic-ALE suite games, e.g. "pong"
+    SynthAtari { game: String },
+}
+
+impl EnvKind {
+    pub fn label(&self) -> String {
+        match self {
+            EnvKind::TracePatterning => "trace_patterning".into(),
+            EnvKind::TracePatterningTiny => "trace_patterning_tiny".into(),
+            EnvKind::TraceConditioning => "trace_conditioning".into(),
+            EnvKind::CycleWorld { n } => format!("cycle_world_{n}"),
+            EnvKind::SynthAtari { game } => format!("atari_{game}"),
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<EnvKind> {
+        match name {
+            "trace_patterning" | "trace" => Some(EnvKind::TracePatterning),
+            "trace_tiny" => Some(EnvKind::TracePatterningTiny),
+            "trace_conditioning" => Some(EnvKind::TraceConditioning),
+            _ => {
+                if let Some(n) = name.strip_prefix("cycle_world_") {
+                    n.parse().ok().map(|n| EnvKind::CycleWorld { n })
+                } else if synthatari::env_names().contains(&name) {
+                    Some(EnvKind::SynthAtari { game: name.into() })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// A fully specified experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub env: EnvKind,
+    pub learner: LearnerKind,
+    pub alpha: f32,
+    pub lambda: f32,
+    /// None => use the stream's prescribed gamma.
+    pub gamma_override: Option<f32>,
+    /// normalizer epsilon (CCN family).
+    pub eps: f32,
+    pub steps: u64,
+    pub seed: u64,
+    /// number of points kept on the learning curve.
+    pub curve_points: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            env: EnvKind::TracePatterning,
+            learner: LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: 10_000_000,
+            },
+            alpha: 0.001,
+            lambda: 0.99,
+            gamma_override: None,
+            eps: 0.01,
+            steps: 50_000_000,
+            seed: 0,
+            curve_points: 200,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper Table-1 presets, scaled by `scale` (1.0 = the paper's 50M
+    /// steps; benches use ~0.02).
+    pub fn paper_trace(learner: LearnerKind, scale: f64, seed: u64) -> Self {
+        let steps = (50_000_000.0 * scale) as u64;
+        let sps = |paper: u64| ((paper as f64 * scale) as u64).max(1);
+        let learner = match learner {
+            LearnerKind::Constructive { total, .. } => LearnerKind::Constructive {
+                total,
+                steps_per_stage: sps(5_000_000),
+            },
+            LearnerKind::Ccn {
+                total, per_stage, ..
+            } => LearnerKind::Ccn {
+                total,
+                per_stage,
+                steps_per_stage: sps(10_000_000),
+            },
+            other => other,
+        };
+        Self {
+            env: EnvKind::TracePatterning,
+            learner,
+            alpha: 0.001,
+            lambda: 0.99,
+            gamma_override: None,
+            eps: 0.01,
+            steps,
+            seed,
+            curve_points: 100,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}:{}:a{}:s{}",
+            self.env.label(),
+            self.learner.label(),
+            self.alpha,
+            self.seed
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let learner = match &self.learner {
+            LearnerKind::Columnar { d } => Json::obj(vec![
+                ("kind", Json::Str("columnar".into())),
+                ("d", Json::Num(*d as f64)),
+            ]),
+            LearnerKind::Constructive {
+                total,
+                steps_per_stage,
+            } => Json::obj(vec![
+                ("kind", Json::Str("constructive".into())),
+                ("total", Json::Num(*total as f64)),
+                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
+            ]),
+            LearnerKind::Ccn {
+                total,
+                per_stage,
+                steps_per_stage,
+            } => Json::obj(vec![
+                ("kind", Json::Str("ccn".into())),
+                ("total", Json::Num(*total as f64)),
+                ("per_stage", Json::Num(*per_stage as f64)),
+                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
+            ]),
+            LearnerKind::Tbptt { d, k } => Json::obj(vec![
+                ("kind", Json::Str("tbptt".into())),
+                ("d", Json::Num(*d as f64)),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            LearnerKind::Snap1 { d } => Json::obj(vec![
+                ("kind", Json::Str("snap1".into())),
+                ("d", Json::Num(*d as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("env", Json::Str(self.env.label())),
+            ("learner", learner),
+            ("alpha", Json::Num(self.alpha as f64)),
+            ("lambda", Json::Num(self.lambda as f64)),
+            (
+                "gamma",
+                self.gamma_override
+                    .map(|g| Json::Num(g as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            ("eps", Json::Num(self.eps as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("curve_points", Json::Num(self.curve_points as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let env = EnvKind::parse(v.get("env")?.as_str()?)
+            .or_else(|| {
+                let s = v.get("env")?.as_str()?;
+                s.strip_prefix("atari_").and_then(|g| {
+                    EnvKind::parse(g)
+                })
+            })?;
+        let l = v.get("learner")?;
+        let learner = match l.get("kind")?.as_str()? {
+            "columnar" => LearnerKind::Columnar {
+                d: l.get("d")?.as_usize()?,
+            },
+            "constructive" => LearnerKind::Constructive {
+                total: l.get("total")?.as_usize()?,
+                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
+            },
+            "ccn" => LearnerKind::Ccn {
+                total: l.get("total")?.as_usize()?,
+                per_stage: l.get("per_stage")?.as_usize()?,
+                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
+            },
+            "tbptt" => LearnerKind::Tbptt {
+                d: l.get("d")?.as_usize()?,
+                k: l.get("k")?.as_usize()?,
+            },
+            "snap1" => LearnerKind::Snap1 {
+                d: l.get("d")?.as_usize()?,
+            },
+            _ => return None,
+        };
+        Some(Self {
+            env,
+            learner,
+            alpha: v.get("alpha")?.as_f64()? as f32,
+            lambda: v.get("lambda")?.as_f64()? as f32,
+            gamma_override: v.get("gamma").and_then(|g| g.as_f64()).map(|g| g as f32),
+            eps: v.get("eps")?.as_f64()? as f32,
+            steps: v.get("steps")?.as_f64()? as u64,
+            seed: v.get("seed")?.as_f64()? as u64,
+            curve_points: v.get("curve_points")?.as_usize()?,
+        })
+    }
+}
+
+/// Build the stream for a config (seeded independently of the learner).
+pub fn build_stream(env: &EnvKind, seed: u64) -> Box<dyn Stream> {
+    match env {
+        EnvKind::TracePatterning => Box::new(TracePatterning::new(
+            TracePatterningConfig::default(),
+            seed,
+        )),
+        EnvKind::TracePatterningTiny => Box::new(TracePatterning::new(
+            TracePatterningConfig::tiny(),
+            seed,
+        )),
+        EnvKind::TraceConditioning => Box::new(TraceConditioning::new(
+            TraceConditioningConfig::default(),
+            seed,
+        )),
+        EnvKind::CycleWorld { n } => Box::new(CycleWorld::new(*n, 0.9)),
+        EnvKind::SynthAtari { game } => Box::new(
+            synthatari::make_env(game, seed)
+                .unwrap_or_else(|| panic!("unknown game {game}")),
+        ),
+    }
+}
+
+/// Build the agent (net + TD(lambda)) for a config over `n_inputs`
+/// features with discount `gamma`.
+pub fn build_agent(
+    cfg: &ExperimentConfig,
+    n_inputs: usize,
+    gamma: f32,
+) -> TdLambdaAgent<Box<dyn PredictionNet>> {
+    let net: Box<dyn PredictionNet> = match &cfg.learner {
+        LearnerKind::Columnar { d } => Box::new(CcnNet::new(
+            CcnConfig {
+                n_inputs,
+                total_features: *d,
+                features_per_stage: *d,
+                steps_per_stage: u64::MAX,
+                init_scale: 1.0,
+                norm_eps: cfg.eps,
+                norm_beta: NORM_BETA,
+            },
+            cfg.seed,
+        )),
+        LearnerKind::Constructive {
+            total,
+            steps_per_stage,
+        } => Box::new(CcnNet::new(
+            CcnConfig {
+                n_inputs,
+                total_features: *total,
+                features_per_stage: 1,
+                steps_per_stage: *steps_per_stage,
+                init_scale: 1.0,
+                norm_eps: cfg.eps,
+                norm_beta: NORM_BETA,
+            },
+            cfg.seed,
+        )),
+        LearnerKind::Ccn {
+            total,
+            per_stage,
+            steps_per_stage,
+        } => Box::new(CcnNet::new(
+            CcnConfig {
+                n_inputs,
+                total_features: *total,
+                features_per_stage: *per_stage,
+                steps_per_stage: *steps_per_stage,
+                init_scale: 1.0,
+                norm_eps: cfg.eps,
+                norm_beta: NORM_BETA,
+            },
+            cfg.seed,
+        )),
+        LearnerKind::Tbptt { d, k } => Box::new(TbpttNet::new(n_inputs, *d, *k, cfg.seed)),
+        LearnerKind::Snap1 { d } => Box::new(Snap1Net::new(n_inputs, *d, cfg.seed)),
+    };
+    TdLambdaAgent::new(
+        net,
+        TdConfig {
+            alpha: cfg.alpha,
+            gamma,
+            lambda: cfg.lambda,
+        },
+    )
+}
+
+impl PredictionNet for Box<dyn PredictionNet> {
+    fn n_features(&self) -> usize {
+        (**self).n_features()
+    }
+    fn advance(&mut self, x: &[f32]) {
+        (**self).advance(x)
+    }
+    fn features(&self) -> &[f32] {
+        (**self).features()
+    }
+    fn n_learnable_params(&self) -> usize {
+        (**self).n_learnable_params()
+    }
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
+        (**self).grad_y(w_out, grad)
+    }
+    fn apply_update(&mut self, delta: &[f32]) {
+        (**self).apply_update(delta)
+    }
+    fn param_epoch(&self) -> u64 {
+        (**self).param_epoch()
+    }
+    fn end_step(&mut self) {
+        (**self).end_step()
+    }
+    fn flops_per_step(&self) -> u64 {
+        (**self).flops_per_step()
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_all_learners() {
+        let learners = vec![
+            LearnerKind::Columnar { d: 5 },
+            LearnerKind::Constructive {
+                total: 10,
+                steps_per_stage: 100,
+            },
+            LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: 200,
+            },
+            LearnerKind::Tbptt { d: 2, k: 30 },
+            LearnerKind::Snap1 { d: 7 },
+        ];
+        for learner in learners {
+            let cfg = ExperimentConfig {
+                learner: learner.clone(),
+                ..Default::default()
+            };
+            let j = cfg.to_json();
+            let back = ExperimentConfig::from_json(&Json::parse(&j.dump()).unwrap())
+                .expect("roundtrip");
+            assert_eq!(back.learner, learner);
+            assert_eq!(back.steps, cfg.steps);
+        }
+    }
+
+    #[test]
+    fn env_parse_names() {
+        assert_eq!(EnvKind::parse("trace"), Some(EnvKind::TracePatterning));
+        assert_eq!(
+            EnvKind::parse("pong"),
+            Some(EnvKind::SynthAtari {
+                game: "pong".into()
+            })
+        );
+        assert_eq!(
+            EnvKind::parse("cycle_world_8"),
+            Some(EnvKind::CycleWorld { n: 8 })
+        );
+        assert_eq!(EnvKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_agent_matches_learner_kind() {
+        let cfg = ExperimentConfig {
+            learner: LearnerKind::Tbptt { d: 2, k: 30 },
+            ..Default::default()
+        };
+        let agent = build_agent(&cfg, 7, 0.9);
+        assert_eq!(agent.net.name(), "tbptt");
+        let cfg2 = ExperimentConfig {
+            learner: LearnerKind::Columnar { d: 5 },
+            ..Default::default()
+        };
+        let agent2 = build_agent(&cfg2, 7, 0.9);
+        assert_eq!(agent2.net.name(), "columnar");
+        assert_eq!(agent2.net.n_features(), 5);
+    }
+
+    #[test]
+    fn paper_trace_preset_scales() {
+        let cfg = ExperimentConfig::paper_trace(
+            LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: 0,
+            },
+            0.01,
+            3,
+        );
+        assert_eq!(cfg.steps, 500_000);
+        match cfg.learner {
+            LearnerKind::Ccn {
+                steps_per_stage, ..
+            } => assert_eq!(steps_per_stage, 100_000),
+            _ => panic!(),
+        }
+    }
+}

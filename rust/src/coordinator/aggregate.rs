@@ -1,0 +1,158 @@
+//! Aggregation of multi-seed runs into the statistics the paper plots:
+//! mean learning curves with standard-error bands (Figs 4–6), final
+//! errors with one-standard-error margins (Fig 8), and T-BPTT-normalized
+//! relative errors (Figs 8, 9, 11).
+
+use std::collections::BTreeMap;
+
+use super::runner::RunResult;
+use crate::metrics::{aggregate_curves, OnlineStats};
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct AggregateResult {
+    pub learner: String,
+    pub env: String,
+    pub n_seeds: usize,
+    pub curve_x: Vec<u64>,
+    pub curve_mean: Vec<f64>,
+    pub curve_stderr: Vec<f64>,
+    pub tail_mean: f64,
+    pub tail_stderr: f64,
+    pub mean_steps_per_sec: f64,
+}
+
+impl AggregateResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("learner", Json::Str(self.learner.clone())),
+            ("env", Json::Str(self.env.clone())),
+            ("n_seeds", Json::Num(self.n_seeds as f64)),
+            (
+                "curve_x",
+                Json::arr_f64(&self.curve_x.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+            ("curve_mean", Json::arr_f64(&self.curve_mean)),
+            ("curve_stderr", Json::arr_f64(&self.curve_stderr)),
+            ("tail_mean", Json::Num(self.tail_mean)),
+            ("tail_stderr", Json::Num(self.tail_stderr)),
+            ("steps_per_sec", Json::Num(self.mean_steps_per_sec)),
+        ])
+    }
+}
+
+/// Group runs by (learner, env) and aggregate over seeds.
+pub fn aggregate_runs(runs: &[RunResult]) -> Vec<AggregateResult> {
+    let mut groups: BTreeMap<(String, String), Vec<&RunResult>> = BTreeMap::new();
+    for r in runs {
+        groups
+            .entry((r.learner.clone(), r.env.clone()))
+            .or_default()
+            .push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((learner, env), rs)| {
+            let curves: Vec<_> = rs.iter().map(|r| r.curve.clone()).collect();
+            let (xs, mean, stderr) = aggregate_curves(&curves);
+            let mut tail = OnlineStats::new();
+            let mut speed = OnlineStats::new();
+            for r in &rs {
+                tail.push(r.tail_error);
+                speed.push(r.steps_per_sec);
+            }
+            AggregateResult {
+                learner,
+                env,
+                n_seeds: rs.len(),
+                curve_x: xs,
+                curve_mean: mean,
+                curve_stderr: stderr,
+                tail_mean: tail.mean(),
+                tail_stderr: tail.stderr(),
+                mean_steps_per_sec: speed.mean(),
+            }
+        })
+        .collect()
+}
+
+/// Per-environment error of `learner`, normalized by `baseline`'s error in
+/// the same environment (the paper's Fig-8/9 metric: baseline == 1.0).
+pub fn relative_errors(
+    aggs: &[AggregateResult],
+    learner: &str,
+    baseline: &str,
+) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for a in aggs.iter().filter(|a| a.learner == learner) {
+        if let Some(b) = aggs
+            .iter()
+            .find(|b| b.learner == baseline && b.env == a.env)
+        {
+            if b.tail_mean > 0.0 {
+                out.push((a.env.clone(), a.tail_mean / b.tail_mean));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Curve;
+
+    fn fake_run(learner: &str, env: &str, seed: u64, errs: &[f64]) -> RunResult {
+        let mut curve = Curve::new(errs.len() as u64, errs.len());
+        for &e in errs {
+            curve.push(e);
+        }
+        curve.finish();
+        RunResult {
+            label: format!("{env}:{learner}:s{seed}"),
+            learner: learner.into(),
+            env: env.into(),
+            seed,
+            tail_error: *errs.last().unwrap(),
+            curve,
+            steps: errs.len() as u64,
+            steps_per_sec: 1000.0,
+            flops_per_step: 42,
+            tail_trace: vec![],
+        }
+    }
+
+    #[test]
+    fn groups_by_learner_and_env() {
+        let runs = vec![
+            fake_run("ccn", "pong", 0, &[4.0, 2.0]),
+            fake_run("ccn", "pong", 1, &[6.0, 4.0]),
+            fake_run("tbptt", "pong", 0, &[8.0, 8.0]),
+        ];
+        let aggs = aggregate_runs(&runs);
+        assert_eq!(aggs.len(), 2);
+        let ccn = aggs.iter().find(|a| a.learner == "ccn").unwrap();
+        assert_eq!(ccn.n_seeds, 2);
+        assert!((ccn.curve_mean[0] - 5.0).abs() < 1e-12);
+        assert!((ccn.tail_mean - 3.0).abs() < 1e-12);
+        assert!(ccn.tail_stderr > 0.0);
+    }
+
+    #[test]
+    fn relative_error_normalizes_baseline_to_one() {
+        let runs = vec![
+            fake_run("ccn", "pong", 0, &[1.0, 2.0]),
+            fake_run("tbptt", "pong", 0, &[1.0, 4.0]),
+            fake_run("ccn", "breakout", 0, &[1.0, 9.0]),
+            fake_run("tbptt", "breakout", 0, &[1.0, 3.0]),
+        ];
+        let aggs = aggregate_runs(&runs);
+        let rel = relative_errors(&aggs, "ccn", "tbptt");
+        let rel_tbptt = relative_errors(&aggs, "tbptt", "tbptt");
+        assert!(rel_tbptt.iter().all(|(_, v)| (v - 1.0).abs() < 1e-12));
+        let pong = rel.iter().find(|(e, _)| e == "pong").unwrap();
+        assert!((pong.1 - 0.5).abs() < 1e-12);
+        let brk = rel.iter().find(|(e, _)| e == "breakout").unwrap();
+        assert!((brk.1 - 3.0).abs() < 1e-12);
+    }
+}

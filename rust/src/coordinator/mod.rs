@@ -1,0 +1,15 @@
+//! Experiment coordination: the online agent loop ([`runner`]), the
+//! multi-seed / multi-config sweep scheduler ([`sweep`]), and result
+//! aggregation ([`aggregate`]). This is the Layer-3 orchestrator — the
+//! paper ran the analogous role with GNU parallel over 1,000 CPUs; we run
+//! a work-stealing thread pool over local cores with identical semantics
+//! (every (config, seed) cell runs exactly once; results are keyed and
+//! aggregated per configuration).
+
+pub mod aggregate;
+pub mod runner;
+pub mod sweep;
+
+pub use aggregate::{aggregate_runs, AggregateResult};
+pub use runner::{run_experiment, RunResult};
+pub use sweep::{run_sweep, SweepResult};

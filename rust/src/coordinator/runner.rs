@@ -1,0 +1,147 @@
+//! The online agent loop: stream -> agent -> return-error curve.
+
+use std::time::Instant;
+
+use crate::config::{build_agent, build_stream, ExperimentConfig};
+use crate::env::returns::ReturnEval;
+use crate::metrics::Curve;
+use crate::util::json::Json;
+
+/// Outcome of one (config, seed) run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    pub learner: String,
+    pub env: String,
+    pub seed: u64,
+    /// mean-squared return error learning curve (binned)
+    pub curve: Curve,
+    /// mean error over the final 10% of the run
+    pub tail_error: f64,
+    pub steps: u64,
+    pub steps_per_sec: f64,
+    /// Appendix-A per-step operation estimate at end of run
+    pub flops_per_step: u64,
+    /// final-phase (y_t, c_t) trace for prediction visualizations (Fig 10)
+    pub tail_trace: Vec<(f32, f32)>,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("learner", Json::Str(self.learner.clone())),
+            ("env", Json::Str(self.env.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "curve_x",
+                Json::arr_f64(&self.curve.xs.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+            ),
+            ("curve_y", Json::arr_f64(&self.curve.ys)),
+            ("tail_error", Json::Num(self.tail_error)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("steps_per_sec", Json::Num(self.steps_per_sec)),
+            ("flops_per_step", Json::Num(self.flops_per_step as f64)),
+        ])
+    }
+}
+
+/// How many trailing (y, c) pairs to keep for Fig-10 style plots.
+const TAIL_TRACE_LEN: usize = 600;
+
+/// Run one experiment to completion.
+pub fn run_experiment(cfg: &ExperimentConfig) -> RunResult {
+    // env and learner use decorrelated seed streams so that comparing
+    // learners on the same seed shares the exact observation sequence.
+    let mut stream = build_stream(&cfg.env, cfg.seed);
+    let gamma = cfg.gamma_override.unwrap_or_else(|| stream.gamma());
+    let mut agent = build_agent(cfg, stream.n_features(), gamma);
+
+    let mut x = vec![0.0f32; stream.n_features()];
+    let mut eval = ReturnEval::new(gamma as f64, 1e-4);
+    let mut curve = Curve::new(cfg.steps, cfg.curve_points);
+    let mut tail_trace: Vec<(f32, f32)> = Vec::with_capacity(TAIL_TRACE_LEN);
+
+    let start = Instant::now();
+    for t in 0..cfg.steps {
+        let c = stream.step_into(&mut x);
+        let y = agent.step(&x, c);
+        eval.push(y as f64, c as f64);
+        for (_, e2) in eval.drain() {
+            curve.push(e2);
+        }
+        if cfg.steps - t <= TAIL_TRACE_LEN as u64 {
+            tail_trace.push((y, c));
+        }
+    }
+    eval.finish();
+    for (_, e2) in eval.drain() {
+        curve.push(e2);
+    }
+    curve.finish();
+    let elapsed = start.elapsed().as_secs_f64();
+
+    RunResult {
+        label: cfg.label(),
+        learner: cfg.learner.label(),
+        env: cfg.env.label(),
+        seed: cfg.seed,
+        tail_error: curve.tail_mean(0.1),
+        curve,
+        steps: cfg.steps,
+        steps_per_sec: cfg.steps as f64 / elapsed.max(1e-9),
+        flops_per_step: agent.flops_per_step(),
+        tail_trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvKind, LearnerKind};
+
+    fn quick_cfg(learner: LearnerKind) -> ExperimentConfig {
+        ExperimentConfig {
+            env: EnvKind::CycleWorld { n: 6 },
+            learner,
+            alpha: 0.01,
+            lambda: 0.9,
+            gamma_override: None,
+            eps: 0.01,
+            steps: 60_000,
+            seed: 0,
+            curve_points: 20,
+        }
+    }
+
+    #[test]
+    fn columnar_run_learns_cycle_world() {
+        let res = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 4 }));
+        assert_eq!(res.curve.ys.len(), 20);
+        let first = res.curve.ys[1];
+        assert!(
+            res.tail_error < first * 0.5,
+            "error must fall: first {first} tail {}",
+            res.tail_error
+        );
+        assert!(res.steps_per_sec > 1000.0);
+        assert_eq!(res.tail_trace.len(), 600);
+    }
+
+    #[test]
+    fn same_seed_same_curve() {
+        let a = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 }));
+        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 }));
+        assert_eq!(a.curve.ys, b.curve.ys, "runs must be deterministic");
+    }
+
+    #[test]
+    fn different_learners_share_observation_stream() {
+        // same env seed => same cumulant sequence regardless of learner.
+        let a = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 2 }));
+        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 4 }));
+        let ca: Vec<f32> = a.tail_trace.iter().map(|&(_, c)| c).collect();
+        let cb: Vec<f32> = b.tail_trace.iter().map(|&(_, c)| c).collect();
+        assert_eq!(ca, cb, "cumulant stream must be learner-independent");
+    }
+}

@@ -1,0 +1,145 @@
+//! Multi-seed / multi-config sweep scheduler.
+//!
+//! A fixed-size worker pool pulls (config) cells from a shared queue —
+//! the local-core equivalent of the paper's GNU-parallel-over-1,000-CPUs
+//! setup. Results arrive unordered and are re-keyed by config label, so
+//! scheduling order can never change the science.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::runner::{run_experiment, RunResult};
+use crate::config::ExperimentConfig;
+
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub runs: Vec<RunResult>,
+}
+
+impl SweepResult {
+    /// All runs for one configuration label (any seed).
+    pub fn runs_for(&self, label_prefix: &str) -> Vec<&RunResult> {
+        self.runs
+            .iter()
+            .filter(|r| r.label.starts_with(label_prefix))
+            .collect()
+    }
+}
+
+/// Run every config once, using up to `threads` workers.
+pub fn run_sweep(configs: Vec<ExperimentConfig>, threads: usize) -> SweepResult {
+    let n = configs.len();
+    let queue: Arc<Mutex<VecDeque<(usize, ExperimentConfig)>>> =
+        Arc::new(Mutex::new(configs.into_iter().enumerate().collect()));
+    let results: Arc<Mutex<Vec<Option<RunResult>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+
+    let workers = threads.max(1).min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = Arc::clone(&queue);
+            let results = Arc::clone(&results);
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop_front();
+                match job {
+                    Some((idx, cfg)) => {
+                        let res = run_experiment(&cfg);
+                        results.lock().unwrap()[idx] = Some(res);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    let runs = Arc::try_unwrap(results)
+        .expect("all workers joined")
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("every cell must have run exactly once"))
+        .collect();
+    SweepResult { runs }
+}
+
+/// Expand one config over a seed list.
+pub fn seeds(cfg: &ExperimentConfig, seed_list: &[u64]) -> Vec<ExperimentConfig> {
+    seed_list
+        .iter()
+        .map(|&seed| ExperimentConfig {
+            seed,
+            ..cfg.clone()
+        })
+        .collect()
+}
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnvKind, LearnerKind};
+    use crate::util::check::{check, prop_assert};
+
+    fn quick(seed: u64, steps: u64) -> ExperimentConfig {
+        ExperimentConfig {
+            env: EnvKind::CycleWorld { n: 5 },
+            learner: LearnerKind::Columnar { d: 2 },
+            alpha: 0.01,
+            lambda: 0.9,
+            gamma_override: None,
+            eps: 0.01,
+            steps,
+            seed,
+            curve_points: 5,
+        }
+    }
+
+    #[test]
+    fn every_cell_runs_exactly_once_in_order() {
+        let configs: Vec<_> = (0..7).map(|s| quick(s, 3000)).collect();
+        let res = run_sweep(configs, 3);
+        assert_eq!(res.runs.len(), 7);
+        for (i, r) in res.runs.iter().enumerate() {
+            assert_eq!(r.seed, i as u64, "results keyed by submission order");
+        }
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let configs: Vec<_> = (0..4).map(|s| quick(s, 5000)).collect();
+        let par = run_sweep(configs.clone(), 4);
+        let ser = run_sweep(configs, 1);
+        for (a, b) in par.runs.iter().zip(&ser.runs) {
+            assert_eq!(a.curve.ys, b.curve.ys, "thread count must not matter");
+        }
+    }
+
+    #[test]
+    fn seeds_helper_expands() {
+        let base = quick(0, 100);
+        let expanded = seeds(&base, &[3, 5, 8]);
+        assert_eq!(expanded.len(), 3);
+        assert_eq!(expanded[2].seed, 8);
+        assert_eq!(expanded[0].steps, 100);
+    }
+
+    #[test]
+    fn prop_sweep_preserves_all_labels() {
+        check("sweep label preservation", 5, |g| {
+            let n = g.sized_usize(1, 6);
+            let configs: Vec<_> = (0..n as u64).map(|s| quick(s, 500)).collect();
+            let labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
+            let res = run_sweep(configs, g.usize_in(1, 4));
+            for (want, run) in labels.iter().zip(&res.runs) {
+                prop_assert(&run.label == want, format!("label {want}"))?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,96 @@
+//! Cycle world: a deterministic N-state ring with an observation that only
+//! distinguishes one state. The cumulant fires at state 0; predicting it
+//! requires counting steps — the minimal "state construction" diagnostic
+//! (cf. the diagnostic MDPs of Rafiee et al. 2022). Deterministic, so a
+//! learner's asymptotic error should approach zero exactly.
+
+use super::{OracleReturn, Stream};
+
+pub struct CycleWorld {
+    n: u64,
+    pos: u64,
+    gamma: f32,
+}
+
+impl CycleWorld {
+    pub fn new(n: u64, gamma: f32) -> Self {
+        assert!(n >= 2);
+        Self { n, pos: 0, gamma }
+    }
+}
+
+pub const N_FEATURES: usize = 2;
+
+impl Stream for CycleWorld {
+    fn n_features(&self) -> usize {
+        N_FEATURES
+    }
+
+    fn gamma(&self) -> f32 {
+        self.gamma
+    }
+
+    fn name(&self) -> &'static str {
+        "cycle_world"
+    }
+
+    /// Features: [at_special, cumulant]; cumulant = 1 exactly at state 0.
+    fn step_into(&mut self, x: &mut [f32]) -> f32 {
+        self.pos = (self.pos + 1) % self.n;
+        let special = if self.pos == 0 { 1.0 } else { 0.0 };
+        x[0] = special;
+        x[1] = special;
+        special
+    }
+}
+
+impl OracleReturn for CycleWorld {
+    fn oracle_return(&self) -> Option<f64> {
+        // steps until next visit of state 0
+        let k = self.n - self.pos;
+        let g = self.gamma as f64;
+        // G = gamma^(k-1) * 1 / (1 - gamma^n) summed over future laps
+        Some(g.powi(k as i32 - 1) / (1.0 - g.powi(self.n as i32)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::returns::ReturnEval;
+
+    #[test]
+    fn fires_every_n_steps() {
+        let mut env = CycleWorld::new(6, 0.9);
+        let mut x = vec![0.0; 2];
+        let mut fires = Vec::new();
+        for t in 0..60 {
+            if env.step_into(&mut x) == 1.0 {
+                fires.push(t);
+            }
+        }
+        assert_eq!(fires.len(), 10);
+        for w in fires.windows(2) {
+            assert_eq!(w[1] - w[0], 6);
+        }
+    }
+
+    #[test]
+    fn oracle_matches_empirical() {
+        let mut env = CycleWorld::new(5, 0.8);
+        let mut ev = ReturnEval::new(0.8, 1e-12);
+        let mut oracle = Vec::new();
+        let mut x = vec![0.0; 2];
+        for _ in 0..3000 {
+            let c = env.step_into(&mut x) as f64;
+            let y = env.oracle_return().unwrap();
+            oracle.push(y);
+            ev.push(y, c);
+        }
+        let errs = ev.drain();
+        assert!(!errs.is_empty());
+        for &(_, e2) in &errs {
+            assert!(e2 < 1e-10, "oracle prediction must have ~zero error: {e2}");
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Environment substrate: online prediction streams (paper Section 2).
+//!
+//! A [`Stream`] produces, at every step, a feature vector `x_t` and a
+//! cumulant `c_t` (a fixed index of `x_t`). The learner's job is to
+//! predict the discounted sum of future cumulants, G_t = sum_{j>t}
+//! gamma^{j-t-1} c_j, online; [`returns::ReturnEval`] computes the
+//! empirical return error with O(1) amortized cost per step.
+//!
+//! Implementations:
+//! - [`trace_patterning`]: the animal-learning benchmark of Section 4.
+//! - [`trace_conditioning`]: single-pattern variant (Rafiee et al. 2022),
+//!   used as a simpler diagnostic.
+//! - [`cycle_world`]: a tiny deterministic memory diagnostic.
+//! - [`synthatari`]: the Atari-prediction substitute — synthetic 16x16
+//!   partially observable games driven by scripted expert policies
+//!   (see DESIGN.md §Substitutions).
+
+pub mod cycle_world;
+pub mod returns;
+pub mod synthatari;
+pub mod trace_conditioning;
+pub mod trace_patterning;
+
+/// An online prediction stream.
+pub trait Stream: Send {
+    /// Number of features in `x_t` (fixed for the stream's lifetime).
+    fn n_features(&self) -> usize;
+
+    /// Advance one step, writing `x_t` into `x` (len == n_features()).
+    /// Returns the cumulant `c_t` carried by this observation.
+    fn step_into(&mut self, x: &mut [f32]) -> f32;
+
+    /// Discount factor the benchmark prescribes for this stream.
+    fn gamma(&self) -> f32;
+
+    /// Human-readable name (used in results files).
+    fn name(&self) -> &'static str;
+
+    /// Convenience allocating step (tests, examples).
+    fn step(&mut self) -> (Vec<f32>, f32) {
+        let mut x = vec![0.0; self.n_features()];
+        let c = self.step_into(&mut x);
+        (x, c)
+    }
+}
+
+/// Ground-truth oracle interface: streams that can report the exact
+/// expected return at the current step (trace patterning can; the
+/// synthetic Atari games cannot in closed form).
+pub trait OracleReturn {
+    /// Exact expected discounted return G_t from the state *after* the
+    /// most recent `step_into` call, if computable.
+    fn oracle_return(&self) -> Option<f64>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::trace_patterning::{TracePatterning, TracePatterningConfig};
+    use super::Stream;
+
+    #[test]
+    fn step_convenience_matches_step_into() {
+        let mut env = TracePatterning::new(TracePatterningConfig::default(), 3);
+        let (x, c) = env.step();
+        assert_eq!(x.len(), env.n_features());
+        assert_eq!(c, x[6]); // cumulant is the US feature
+    }
+}

@@ -1,0 +1,135 @@
+//! BlinkGrid: a pure-memory beacon task in the Atari feature format.
+//! A beacon flashes at a random cell for exactly one frame; `delay` steps
+//! later (delay is *signaled by the beacon's row*), a reward arrives. The
+//! frame is dark in between — the only way to predict the reward timing
+//! is to remember where and when the beacon flashed. This is trace
+//! conditioning lifted into the 256-pixel observation space.
+
+use super::{plot, Game, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+pub struct BlinkGrid {
+    /// steps until the pending reward (None if idle)
+    countdown: Option<u64>,
+    /// steps until the next beacon flash
+    next_flash: u64,
+    rewards: u32,
+    t: u64,
+}
+
+impl BlinkGrid {
+    pub fn new() -> Self {
+        Self {
+            countdown: None,
+            next_flash: 5,
+            rewards: 0,
+            t: 0,
+        }
+    }
+}
+
+impl Default for BlinkGrid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for BlinkGrid {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.countdown = None;
+        self.next_flash = rng.int_in(5, 20);
+        self.rewards = 0;
+        self.t = 0;
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+        let mut reward = 0.0;
+        let action = (self.t % 3) as usize + 10; // arbitrary cycling expert
+
+        if let Some(cd) = self.countdown {
+            if cd == 0 {
+                reward = 1.0;
+                self.rewards += 1;
+                self.countdown = None;
+                self.next_flash = rng.int_in(30, 60);
+            } else {
+                self.countdown = Some(cd - 1);
+            }
+        } else if self.next_flash == 0 {
+            // flash: row encodes the delay (row r => delay 8 + r), column
+            // random. One frame only.
+            let row = rng.int_in(0, 7) as i32;
+            let col = rng.int_in(0, FRAME_W as u64 - 1) as i32;
+            plot(frame, col, row, 1.0);
+            plot(frame, col, row + 8, 1.0); // mirrored blob, 2px signature
+            self.countdown = Some(8 + row as u64);
+        } else {
+            self.next_flash -= 1;
+        }
+
+        let done = self.rewards >= 20;
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        "blinkgrid"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn reward_follows_flash_by_row_coded_delay() {
+        let mut g = BlinkGrid::new();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut flash_t: Option<(u64, u64)> = None; // (time, delay)
+        let mut checked = 0;
+        for t in 0..20_000u64 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            // detect flash
+            let lit: Vec<usize> = (0..FRAME_SIZE).filter(|&i| frame[i] > 0.0).collect();
+            if !lit.is_empty() {
+                let row = (lit[0] / FRAME_W) as u64;
+                flash_t = Some((t, 8 + row));
+            }
+            if r > 0.0 {
+                let (ft, delay) = flash_t.expect("reward without flash");
+                assert_eq!(t - ft, delay + 1, "reward timing");
+                checked += 1;
+            }
+            if done {
+                g.reset(&mut rng);
+                flash_t = None;
+            }
+        }
+        assert!(checked > 50, "rewards checked: {checked}");
+    }
+
+    #[test]
+    fn frame_dark_between_flashes() {
+        let mut g = BlinkGrid::new();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut dark = 0;
+        let mut lit = 0;
+        for _ in 0..1000 {
+            frame.fill(0.0);
+            g.step(&mut rng, &mut frame);
+            if frame.iter().all(|&v| v == 0.0) {
+                dark += 1;
+            } else {
+                lit += 1;
+            }
+        }
+        assert!(dark > 900, "mostly dark: {dark}");
+        assert!(lit > 5, "flashes happen: {lit}");
+    }
+}

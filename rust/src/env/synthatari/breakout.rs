@@ -1,0 +1,216 @@
+//! Breakout-like game: paddle at the bottom, ball, four brick rows.
+//! Bricks are static (always rendered); the ball blinks every other
+//! frame, so predicting the next reward (brick hit) requires integrating
+//! the ball's trajectory over time.
+
+use super::{plot, Game, FRAME_H, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+pub struct Breakout {
+    ball_x: f32,
+    ball_y: f32,
+    vel_x: f32,
+    vel_y: f32,
+    pad_x: f32,
+    /// bricks[row] is a 16-bit column mask, rows 2..=5
+    bricks: [u16; 4],
+    lives: u32,
+    t: u64,
+}
+
+const BRICK_ROW0: usize = 2;
+
+impl Breakout {
+    pub fn new() -> Self {
+        Self {
+            ball_x: 8.0,
+            ball_y: 10.0,
+            vel_x: 0.5,
+            vel_y: -0.7,
+            pad_x: 8.0,
+            bricks: [u16::MAX; 4],
+            lives: 3,
+            t: 0,
+        }
+    }
+
+    fn serve(&mut self, rng: &mut Xoshiro256) {
+        self.ball_x = rng.uniform(4.0, 12.0);
+        self.ball_y = 10.0;
+        self.vel_x = rng.uniform(-0.7, 0.7);
+        self.vel_y = -0.7;
+    }
+
+    fn bricks_left(&self) -> u32 {
+        self.bricks.iter().map(|b| b.count_ones()).sum()
+    }
+}
+
+impl Default for Breakout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Breakout {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.bricks = [u16::MAX; 4];
+        self.lives = 3;
+        self.pad_x = 8.0;
+        self.t = 0;
+        self.serve(rng);
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+
+        // expert: track ball x with noise; actions 0=noop 3=left 4=right
+        let target = self.ball_x + rng.uniform(-1.0, 1.0);
+        let action = if target > self.pad_x + 0.5 {
+            self.pad_x = (self.pad_x + 1.0).min(FRAME_W as f32 - 2.0);
+            4
+        } else if target < self.pad_x - 0.5 {
+            self.pad_x = (self.pad_x - 1.0).max(1.0);
+            3
+        } else {
+            0
+        };
+
+        self.ball_x += self.vel_x;
+        self.ball_y += self.vel_y;
+        // side walls
+        if self.ball_x <= 0.0 || self.ball_x >= FRAME_W as f32 - 1.0 {
+            self.vel_x = -self.vel_x;
+            self.ball_x = self.ball_x.clamp(0.0, FRAME_W as f32 - 1.0);
+        }
+        // ceiling
+        if self.ball_y <= 0.0 {
+            self.vel_y = self.vel_y.abs();
+            self.ball_y = 0.0;
+        }
+
+        let mut reward = 0.0;
+        let mut done = false;
+
+        // brick collision
+        let by = self.ball_y as i32;
+        let bx = self.ball_x as i32;
+        if (BRICK_ROW0 as i32..(BRICK_ROW0 + 4) as i32).contains(&by)
+            && (0..16).contains(&bx)
+        {
+            let row = by as usize - BRICK_ROW0;
+            let bit = 1u16 << bx;
+            if self.bricks[row] & bit != 0 {
+                self.bricks[row] &= !bit;
+                reward = 1.0;
+                self.vel_y = self.vel_y.abs(); // bounce down
+                if self.bricks_left() == 0 {
+                    done = true;
+                }
+            }
+        }
+
+        // paddle / floor
+        if self.ball_y >= FRAME_H as f32 - 2.0 {
+            if (self.ball_x - self.pad_x).abs() <= 2.0 {
+                self.vel_y = -self.vel_y.abs();
+                // english: hitting off-center skews vx
+                self.vel_x += 0.3 * (self.ball_x - self.pad_x).signum();
+                self.vel_x = self.vel_x.clamp(-0.9, 0.9);
+            } else if self.ball_y >= FRAME_H as f32 - 1.0 {
+                self.lives -= 1;
+                reward = -1.0;
+                if self.lives == 0 {
+                    done = true;
+                } else {
+                    self.serve(rng);
+                }
+            }
+        }
+
+        // render: bricks always, paddle always, ball on odd frames only
+        for (r, mask) in self.bricks.iter().enumerate() {
+            for c in 0..16 {
+                if mask & (1 << c) != 0 {
+                    plot(frame, c as i32, (BRICK_ROW0 + r) as i32, 1.0);
+                }
+            }
+        }
+        for dx in -1..=1 {
+            plot(frame, self.pad_x as i32 + dx, FRAME_H as i32 - 1, 1.0);
+        }
+        if self.t % 2 == 1 {
+            plot(frame, self.ball_x as i32, self.ball_y as i32, 1.0);
+        }
+
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        "breakout"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn bricks_get_destroyed_and_reward_matches() {
+        let mut g = Breakout::new();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let before = g.bricks_left();
+        let mut total_reward = 0.0;
+        for _ in 0..5000 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            if r > 0.0 {
+                total_reward += r;
+            }
+            if done {
+                break;
+            }
+        }
+        let destroyed = before - g.bricks_left();
+        assert!(destroyed > 0, "no bricks destroyed");
+        assert_eq!(destroyed as f64, total_reward as f64);
+    }
+
+    #[test]
+    fn ball_blinks_every_other_frame() {
+        let mut g = Breakout::new();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        g.reset(&mut rng);
+        let mut f1 = vec![0.0; FRAME_SIZE];
+        let mut counts = Vec::new();
+        for _ in 0..100 {
+            f1.fill(0.0);
+            g.step(&mut rng, &mut f1);
+            counts.push(f1.iter().filter(|&&v| v > 0.0).count());
+        }
+        // alternating pixel counts (ball present on odd t)
+        let diffs: Vec<i64> = counts
+            .windows(2)
+            .map(|w| w[1] as i64 - w[0] as i64)
+            .collect();
+        assert!(diffs.iter().any(|&d| d != 0), "ball must blink");
+    }
+
+    #[test]
+    fn game_ends_on_life_loss_or_clear() {
+        let mut g = Breakout::new();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        for _ in 0..500_000 {
+            let (_, _, done) = g.step(&mut rng, &mut frame);
+            if done {
+                return;
+            }
+        }
+        panic!("episode never terminated");
+    }
+}

@@ -1,0 +1,201 @@
+//! Chaser: the expert pursues a fleeing prey on the grid. The prey is
+//! rendered only every third frame; between glimpses the learner must
+//! extrapolate its motion to predict the catch (reward +1).
+
+use super::{plot, Game, FRAME_H, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+pub struct Chaser {
+    agent_x: i32,
+    agent_y: i32,
+    prey_x: f32,
+    prey_y: f32,
+    prey_vx: f32,
+    prey_vy: f32,
+    catches: u32,
+    t: u64,
+}
+
+impl Chaser {
+    pub fn new() -> Self {
+        Self {
+            agent_x: 2,
+            agent_y: 2,
+            prey_x: 12.0,
+            prey_y: 12.0,
+            prey_vx: 0.4,
+            prey_vy: -0.3,
+            catches: 0,
+            t: 0,
+        }
+    }
+
+    fn respawn_prey(&mut self, rng: &mut Xoshiro256) {
+        // spawn away from the agent
+        loop {
+            self.prey_x = rng.uniform(1.0, FRAME_W as f32 - 2.0);
+            self.prey_y = rng.uniform(1.0, FRAME_H as f32 - 2.0);
+            let dx = self.prey_x - self.agent_x as f32;
+            let dy = self.prey_y - self.agent_y as f32;
+            if dx * dx + dy * dy > 36.0 {
+                break;
+            }
+        }
+        self.prey_vx = rng.uniform(-0.6, 0.6);
+        self.prey_vy = rng.uniform(-0.6, 0.6);
+    }
+}
+
+impl Default for Chaser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Chaser {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.agent_x = 2;
+        self.agent_y = 2;
+        self.catches = 0;
+        self.t = 0;
+        self.respawn_prey(rng);
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+
+        // expert: greedy step toward prey with 10% random move
+        // actions: 6..=9 = N/S/E/W, 0 = noop
+        let action;
+        if rng.next_f32() < 0.1 {
+            let dir = rng.below(4);
+            action = 6 + dir as usize;
+            match dir {
+                0 => self.agent_y -= 1,
+                1 => self.agent_y += 1,
+                2 => self.agent_x += 1,
+                _ => self.agent_x -= 1,
+            }
+        } else {
+            let dx = self.prey_x - self.agent_x as f32;
+            let dy = self.prey_y - self.agent_y as f32;
+            if dx.abs() > dy.abs() {
+                if dx > 0.0 {
+                    self.agent_x += 1;
+                    action = 8;
+                } else {
+                    self.agent_x -= 1;
+                    action = 9;
+                }
+            } else if dy > 0.0 {
+                self.agent_y += 1;
+                action = 7;
+            } else {
+                self.agent_y -= 1;
+                action = 6;
+            }
+        }
+        self.agent_x = self.agent_x.clamp(0, FRAME_W as i32 - 1);
+        self.agent_y = self.agent_y.clamp(0, FRAME_H as i32 - 1);
+
+        // prey: drift + flee when close
+        let dx = self.prey_x - self.agent_x as f32;
+        let dy = self.prey_y - self.agent_y as f32;
+        let dist2 = dx * dx + dy * dy;
+        if dist2 < 16.0 && dist2 > 1e-6 {
+            let norm = dist2.sqrt();
+            self.prey_vx = 0.7 * dx / norm + rng.uniform(-0.2, 0.2);
+            self.prey_vy = 0.7 * dy / norm + rng.uniform(-0.2, 0.2);
+        }
+        self.prey_x += self.prey_vx;
+        self.prey_y += self.prey_vy;
+        if self.prey_x <= 0.0 || self.prey_x >= FRAME_W as f32 - 1.0 {
+            self.prey_vx = -self.prey_vx;
+            self.prey_x = self.prey_x.clamp(0.0, FRAME_W as f32 - 1.0);
+        }
+        if self.prey_y <= 0.0 || self.prey_y >= FRAME_H as f32 - 1.0 {
+            self.prey_vy = -self.prey_vy;
+            self.prey_y = self.prey_y.clamp(0.0, FRAME_H as f32 - 1.0);
+        }
+
+        // catch?
+        let mut reward = 0.0;
+        let dx = self.prey_x - self.agent_x as f32;
+        let dy = self.prey_y - self.agent_y as f32;
+        if dx * dx + dy * dy <= 2.0 {
+            reward = 1.0;
+            self.catches += 1;
+            self.respawn_prey(rng);
+        }
+
+        // render: agent always; prey every 3rd frame only
+        plot(frame, self.agent_x, self.agent_y, 1.0);
+        if self.t % 3 == 0 {
+            plot(frame, self.prey_x as i32, self.prey_y as i32, 0.7);
+        }
+
+        let done = self.catches >= 8;
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        "chaser"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn expert_catches_prey() {
+        let mut g = Chaser::new();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut catches = 0;
+        for _ in 0..20_000 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            if r > 0.0 {
+                catches += 1;
+            }
+            if done {
+                g.reset(&mut rng);
+            }
+        }
+        assert!(catches > 20, "catches: {catches}");
+    }
+
+    #[test]
+    fn prey_visible_only_every_third_frame() {
+        let mut g = Chaser::new();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut with_prey = 0;
+        for _ in 0..300 {
+            frame.fill(0.0);
+            g.step(&mut rng, &mut frame);
+            let n = frame.iter().filter(|&&v| v > 0.0).count();
+            if n >= 2 {
+                with_prey += 1;
+            }
+        }
+        assert!(with_prey >= 80 && with_prey <= 120, "prey frames: {with_prey}");
+    }
+
+    #[test]
+    fn agent_stays_in_bounds() {
+        let mut g = Chaser::new();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        for _ in 0..5000 {
+            g.step(&mut rng, &mut frame);
+            assert!((0..FRAME_W as i32).contains(&g.agent_x));
+            assert!((0..FRAME_H as i32).contains(&g.agent_y));
+        }
+    }
+}

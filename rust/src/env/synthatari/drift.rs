@@ -1,0 +1,175 @@
+//! LatentDrift: a parametric family of partially observable games. The
+//! latent state is a seed-random 2-oscillator system; two sprites render
+//! its phase with variant-specific blink schedules, and the reward fires
+//! when the latent phases align (a periodic but non-trivially observable
+//! event). Variants `drift0..driftN` differ in frequencies, blink masks
+//! and reward threshold — they stand in for "the other 45 Atari games" so
+//! Figure 8's per-environment comparison has a population to range over.
+
+use super::{plot, Game, FRAME_H, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+pub struct LatentDrift {
+    // per-variant constants (fixed at construction)
+    freq_a: f32,
+    freq_b: f32,
+    blink_a: u64,
+    blink_b: u64,
+    align_thresh: f32,
+    // state
+    phase_a: f32,
+    phase_b: f32,
+    cooldown: u64,
+    rewards: u32,
+    t: u64,
+    variant: u64,
+}
+
+impl LatentDrift {
+    pub fn new(variant: u64) -> Self {
+        // derive variant constants deterministically
+        let mut rng = Xoshiro256::seed_from_u64(0xD21F7 ^ variant.wrapping_mul(0x9E37));
+        Self {
+            freq_a: rng.uniform(0.05, 0.25),
+            freq_b: rng.uniform(0.02, 0.15),
+            blink_a: rng.int_in(2, 4),
+            blink_b: rng.int_in(2, 5),
+            align_thresh: rng.uniform(0.12, 0.3),
+            phase_a: 0.0,
+            phase_b: 0.0,
+            cooldown: 0,
+            rewards: 0,
+            t: 0,
+            variant,
+        }
+    }
+}
+
+impl Game for LatentDrift {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.phase_a = rng.uniform(0.0, std::f32::consts::TAU);
+        self.phase_b = rng.uniform(0.0, std::f32::consts::TAU);
+        self.cooldown = 0;
+        self.rewards = 0;
+        self.t = 0;
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+        self.phase_a += self.freq_a + rng.uniform(-0.005, 0.005);
+        self.phase_b += self.freq_b + rng.uniform(-0.005, 0.005);
+        if self.phase_a > std::f32::consts::TAU {
+            self.phase_a -= std::f32::consts::TAU;
+        }
+        if self.phase_b > std::f32::consts::TAU {
+            self.phase_b -= std::f32::consts::TAU;
+        }
+
+        // sprites trace circles; each has its own blink schedule
+        let ax = 8.0 + 5.0 * self.phase_a.cos();
+        let ay = 8.0 + 5.0 * self.phase_a.sin();
+        let bx = 8.0 + 3.0 * self.phase_b.cos();
+        let by = 8.0 + 3.0 * self.phase_b.sin();
+        if self.t % self.blink_a != 0 {
+            plot(frame, ax as i32, ay as i32, 1.0);
+        }
+        if self.t % self.blink_b == 0 {
+            plot(frame, bx as i32, by as i32, 0.6);
+        }
+        // static corner markers so the frame is never empty
+        plot(frame, 0, 0, 0.3);
+        plot(frame, FRAME_W as i32 - 1, FRAME_H as i32 - 1, 0.3);
+
+        // reward when phases align (within threshold) and off cooldown
+        let mut reward = 0.0;
+        let diff = (self.phase_a - self.phase_b).rem_euclid(std::f32::consts::TAU);
+        let aligned = diff.min(std::f32::consts::TAU - diff) < self.align_thresh;
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+        } else if aligned {
+            reward = 1.0;
+            self.rewards += 1;
+            self.cooldown = 25;
+        }
+
+        let action = ((self.t / 4) % 5) as usize + 15; // cycling expert
+        let done = self.rewards >= 15;
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.variant {
+            0 => "drift0",
+            1 => "drift1",
+            2 => "drift2",
+            3 => "drift3",
+            4 => "drift4",
+            _ => "driftN",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn variants_differ() {
+        let a = LatentDrift::new(0);
+        let b = LatentDrift::new(1);
+        assert!(
+            (a.freq_a - b.freq_a).abs() > 1e-6
+                || (a.freq_b - b.freq_b).abs() > 1e-6,
+            "variants must have different dynamics"
+        );
+    }
+
+    #[test]
+    fn rewards_periodic_with_cooldown() {
+        let mut g = LatentDrift::new(0);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut n_rewards = 0usize;
+        let mut last_reward: Option<u64> = None;
+        for t in 0..20_000u64 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            if r > 0.0 {
+                if let Some(prev) = last_reward {
+                    assert!(t - prev > 25, "cooldown enforced within episode");
+                }
+                last_reward = Some(t);
+                n_rewards += 1;
+            }
+            if done {
+                g.reset(&mut rng);
+                last_reward = None; // cooldown does not span episodes
+            }
+        }
+        assert!(n_rewards > 10, "rewards: {n_rewards}");
+    }
+
+    #[test]
+    fn deterministic_per_variant_and_seed() {
+        for variant in 0..3 {
+            let mut g1 = LatentDrift::new(variant);
+            let mut g2 = LatentDrift::new(variant);
+            let mut r1 = Xoshiro256::seed_from_u64(7);
+            let mut r2 = Xoshiro256::seed_from_u64(7);
+            g1.reset(&mut r1);
+            g2.reset(&mut r2);
+            let mut f1 = vec![0.0; FRAME_SIZE];
+            let mut f2 = vec![0.0; FRAME_SIZE];
+            for _ in 0..500 {
+                f1.fill(0.0);
+                f2.fill(0.0);
+                let s1 = g1.step(&mut r1, &mut f1);
+                let s2 = g2.step(&mut r2, &mut f2);
+                assert_eq!(s1, s2);
+                assert_eq!(f1, f2);
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Freeway-like game: the expert's chicken crosses ten lanes of traffic.
+//! Cars are rendered only on even frames (downscale aliasing), so
+//! predicting an imminent collision (negative reward) needs trajectory
+//! memory. Reward +1 for reaching the top, -1 on collision (knocked back).
+
+use super::{plot, Game, FRAME_H, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+const N_LANES: usize = 10;
+const LANE_ROW0: usize = 3;
+const CHICKEN_COL: i32 = 8;
+
+pub struct Freeway {
+    chicken_y: i32,
+    /// car position per lane (float column) and speed (px/step, signed)
+    car_x: [f32; N_LANES],
+    car_v: [f32; N_LANES],
+    crossings: u32,
+    t: u64,
+}
+
+impl Freeway {
+    pub fn new() -> Self {
+        Self {
+            chicken_y: FRAME_H as i32 - 1,
+            car_x: [0.0; N_LANES],
+            car_v: [0.0; N_LANES],
+            crossings: 0,
+            t: 0,
+        }
+    }
+
+    fn lane_row(lane: usize) -> i32 {
+        (LANE_ROW0 + lane) as i32
+    }
+}
+
+impl Default for Freeway {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Freeway {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.chicken_y = FRAME_H as i32 - 1;
+        self.crossings = 0;
+        self.t = 0;
+        for lane in 0..N_LANES {
+            self.car_x[lane] = rng.uniform(0.0, FRAME_W as f32);
+            let speed = rng.uniform(0.3, 1.1);
+            self.car_v[lane] = if lane % 2 == 0 { speed } else { -speed };
+        }
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+
+        // expert: advance when the next lane is clear over a short
+        // lookahead; if a car is bearing down on the *current* lane, flee
+        // upward regardless. A little stochastic impatience keeps
+        // occasional collisions in the data (as with a real policy).
+        let lane_unsafe = |row: i32, horizon: u64| -> bool {
+            for lane in 0..N_LANES {
+                if Self::lane_row(lane) == row {
+                    for lookahead in 0..=horizon {
+                        let cx = (self.car_x[lane] + self.car_v[lane] * lookahead as f32)
+                            .rem_euclid(FRAME_W as f32);
+                        if (cx - CHICKEN_COL as f32).abs() < 2.5 {
+                            return true;
+                        }
+                    }
+                }
+            }
+            false
+        };
+        let next_unsafe = lane_unsafe(self.chicken_y - 1, 4);
+        let here_unsafe = lane_unsafe(self.chicken_y, 2);
+        let action = if !next_unsafe || rng.next_f32() < 0.01 {
+            self.chicken_y = (self.chicken_y - 1).max(0);
+            5 // up
+        } else if here_unsafe {
+            // both ahead and here are hot: retreat one row
+            self.chicken_y = (self.chicken_y + 1).min(FRAME_H as i32 - 1);
+            6 // down
+        } else {
+            0 // noop
+        };
+
+        // cars advance (wrap around)
+        for lane in 0..N_LANES {
+            self.car_x[lane] += self.car_v[lane];
+            if self.car_x[lane] < 0.0 {
+                self.car_x[lane] += FRAME_W as f32;
+            }
+            if self.car_x[lane] >= FRAME_W as f32 {
+                self.car_x[lane] -= FRAME_W as f32;
+            }
+        }
+
+        let mut reward = 0.0;
+        // collision check
+        for lane in 0..N_LANES {
+            if Self::lane_row(lane) == self.chicken_y
+                && (self.car_x[lane] - CHICKEN_COL as f32).abs() < 1.5
+            {
+                reward = -1.0;
+                self.chicken_y = (self.chicken_y + 4).min(FRAME_H as i32 - 1);
+            }
+        }
+        // crossing
+        if self.chicken_y == 0 {
+            reward = 1.0;
+            self.crossings += 1;
+            self.chicken_y = FRAME_H as i32 - 1;
+        }
+
+        // render: chicken always; cars only on even frames (aliasing)
+        plot(frame, CHICKEN_COL, self.chicken_y, 1.0);
+        if self.t % 2 == 0 {
+            for lane in 0..N_LANES {
+                let row = Self::lane_row(lane);
+                plot(frame, self.car_x[lane] as i32, row, 1.0);
+                plot(frame, self.car_x[lane] as i32 + 1, row, 1.0);
+            }
+        }
+
+        let done = self.crossings >= 10;
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        "freeway"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn chicken_crosses_and_collides() {
+        let mut g = Freeway::new();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let (mut cross, mut hit) = (0, 0);
+        for _ in 0..50_000 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            if r > 0.0 {
+                cross += 1;
+            }
+            if r < 0.0 {
+                hit += 1;
+            }
+            if done {
+                g.reset(&mut rng);
+            }
+        }
+        eprintln!("freeway balance: cross={cross} hit={hit}");
+        assert!(cross > 10, "crossings: {cross}");
+        assert!(hit > 0, "collisions: {hit}");
+        assert!(cross > hit, "expert should cross more than it crashes");
+    }
+
+    #[test]
+    fn cars_aliased_on_odd_frames() {
+        let mut g = Freeway::new();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut odd_pixels = Vec::new();
+        let mut even_pixels = Vec::new();
+        for i in 0..100 {
+            frame.fill(0.0);
+            g.step(&mut rng, &mut frame);
+            let n = frame.iter().filter(|&&v| v > 0.0).count();
+            if (i + 1) % 2 == 0 {
+                even_pixels.push(n);
+            } else {
+                odd_pixels.push(n);
+            }
+        }
+        let avg_even: f64 =
+            even_pixels.iter().sum::<usize>() as f64 / even_pixels.len() as f64;
+        let avg_odd: f64 =
+            odd_pixels.iter().sum::<usize>() as f64 / odd_pixels.len() as f64;
+        assert!(avg_even > avg_odd + 5.0, "cars must blink: {avg_even} vs {avg_odd}");
+    }
+}

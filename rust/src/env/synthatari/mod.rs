@@ -1,0 +1,233 @@
+//! Synthetic Atari-prediction benchmark (substitute for ALE + pre-trained
+//! Rainbow-DQN agents — see DESIGN.md §Substitutions).
+//!
+//! The paper's benchmark exists to pose *high-dimensional, partially
+//! observable* prediction problems: 16x16 downscaled single frames (no
+//! frame stacking), the expert's action one-hot, and the clipped reward.
+//! Single frames are insufficient (the Pong ball is often invisible);
+//! accurate prediction requires remembering the trajectory.
+//!
+//! We reproduce exactly that interface with synthetic games: each
+//! [`Game`] is a small latent-state simulator with a *scripted expert
+//! policy*, rendering to a 16x16 frame in which moving objects are
+//! deliberately rendered intermittently (blink/aliasing) so the stream is
+//! genuinely partially observable. The learner-facing vector is
+//!
+//! ```text
+//! x_t = [ frame_t (256) | one-hot action_{t-1} (20) | r_{t-1} (1) ]
+//! ```
+//!
+//! with cumulant c_t = r_{t-1} (clipped to [-1, 1]), discount 0.98 —
+//! matching Section 5's 277 features.
+
+pub mod blinkgrid;
+pub mod breakout;
+pub mod chaser;
+pub mod dataset;
+pub mod drift;
+pub mod freeway;
+pub mod pong;
+
+use super::Stream;
+use crate::util::prng::Xoshiro256;
+
+pub const FRAME_W: usize = 16;
+pub const FRAME_H: usize = 16;
+pub const FRAME_SIZE: usize = FRAME_W * FRAME_H;
+pub const N_ACTIONS: usize = 20;
+pub const N_FEATURES: usize = FRAME_SIZE + N_ACTIONS + 1; // 277
+pub const REWARD_INDEX: usize = N_FEATURES - 1;
+pub const GAMMA: f32 = 0.98;
+
+/// One latent-state game with a scripted expert policy.
+pub trait Game: Send {
+    /// Reset to the start of an episode.
+    fn reset(&mut self, rng: &mut Xoshiro256);
+
+    /// Advance one step with the expert policy. Renders the (partially
+    /// observable) frame into `frame` and returns (action, reward, done).
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Plot a pixel if inside the frame (row-major).
+#[inline]
+pub fn plot(frame: &mut [f32], x: i32, y: i32, v: f32) {
+    if (0..FRAME_W as i32).contains(&x) && (0..FRAME_H as i32).contains(&y) {
+        frame[y as usize * FRAME_W + x as usize] = v;
+    }
+}
+
+/// Wraps a [`Game`] into the 277-feature prediction [`Stream`].
+pub struct AtariStream {
+    game: Box<dyn Game>,
+    rng: Xoshiro256,
+    prev_action: usize,
+    prev_reward: f32,
+    episode_steps: u64,
+    max_episode_steps: u64,
+}
+
+impl AtariStream {
+    pub fn new(mut game: Box<dyn Game>, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x6174_6172); // "atar"
+        game.reset(&mut rng);
+        Self {
+            game,
+            rng,
+            prev_action: 0,
+            prev_reward: 0.0,
+            episode_steps: 0,
+            max_episode_steps: 2000,
+        }
+    }
+
+    pub fn game_name(&self) -> &'static str {
+        self.game.name()
+    }
+}
+
+impl Stream for AtariStream {
+    fn n_features(&self) -> usize {
+        N_FEATURES
+    }
+
+    fn gamma(&self) -> f32 {
+        GAMMA
+    }
+
+    fn name(&self) -> &'static str {
+        self.game.name()
+    }
+
+    fn step_into(&mut self, x: &mut [f32]) -> f32 {
+        debug_assert_eq!(x.len(), N_FEATURES);
+        x.fill(0.0);
+        let (frame, rest) = x.split_at_mut(FRAME_SIZE);
+        let (action, reward, done) = self.game.step(&mut self.rng, frame);
+        // previous action/reward channels (the learner sees a_{t-1}, r_{t-1})
+        rest[self.prev_action.min(N_ACTIONS - 1)] = 1.0;
+        let c = self.prev_reward.clamp(-1.0, 1.0);
+        rest[N_ACTIONS] = c;
+        self.prev_action = action;
+        self.prev_reward = reward;
+        self.episode_steps += 1;
+        if done || self.episode_steps >= self.max_episode_steps {
+            self.game.reset(&mut self.rng);
+            self.episode_steps = 0;
+        }
+        c
+    }
+}
+
+/// All environments of the benchmark suite (analogous to the paper's
+/// per-game evaluation of Figure 8).
+pub fn env_names() -> Vec<&'static str> {
+    vec![
+        "pong", "breakout", "freeway", "chaser", "blinkgrid",
+        "drift0", "drift1", "drift2", "drift3", "drift4",
+    ]
+}
+
+/// Construct a named environment stream.
+pub fn make_env(name: &str, seed: u64) -> Option<AtariStream> {
+    let game: Box<dyn Game> = match name {
+        "pong" => Box::new(pong::Pong::new()),
+        "breakout" => Box::new(breakout::Breakout::new()),
+        "freeway" => Box::new(freeway::Freeway::new()),
+        "chaser" => Box::new(chaser::Chaser::new()),
+        "blinkgrid" => Box::new(blinkgrid::BlinkGrid::new()),
+        _ => {
+            if let Some(idx) = name.strip_prefix("drift") {
+                let variant: u64 = idx.parse().ok()?;
+                Box::new(drift::LatentDrift::new(variant))
+            } else {
+                return None;
+            }
+        }
+    };
+    Some(AtariStream::new(game, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_every_env() {
+        for name in env_names() {
+            let mut env = make_env(name, 0).unwrap_or_else(|| panic!("{name}"));
+            assert_eq!(env.n_features(), 277);
+            let mut x = vec![0.0; N_FEATURES];
+            for _ in 0..200 {
+                let c = env.step_into(&mut x);
+                assert!((-1.0..=1.0).contains(&c), "{name}: cumulant {c}");
+                assert_eq!(c, x[REWARD_INDEX]);
+                assert!(x.iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn one_hot_action_channel() {
+        let mut env = make_env("pong", 1).unwrap();
+        let mut x = vec![0.0; N_FEATURES];
+        for _ in 0..500 {
+            env.step_into(&mut x);
+            let ones: usize = (FRAME_SIZE..FRAME_SIZE + N_ACTIONS)
+                .filter(|&i| x[i] == 1.0)
+                .count();
+            assert_eq!(ones, 1, "exactly one action bit set");
+        }
+    }
+
+    #[test]
+    fn frames_are_partially_observable() {
+        // Over a window, the pixel count must vary (objects blink) for the
+        // moving-sprite games — otherwise the task degenerates to MDP.
+        for name in ["pong", "breakout", "chaser"] {
+            let mut env = make_env(name, 2).unwrap();
+            let mut x = vec![0.0; N_FEATURES];
+            let mut counts = Vec::new();
+            for _ in 0..300 {
+                env.step_into(&mut x);
+                counts.push(
+                    x[..FRAME_SIZE].iter().filter(|&&v| v > 0.0).count(),
+                );
+            }
+            let min = counts.iter().min().unwrap();
+            let max = counts.iter().max().unwrap();
+            assert!(max > min, "{name}: pixel count constant at {min}");
+        }
+    }
+
+    #[test]
+    fn rewards_occur() {
+        for name in env_names() {
+            let mut env = make_env(name, 3).unwrap();
+            let mut x = vec![0.0; N_FEATURES];
+            let mut nonzero = 0;
+            for _ in 0..20_000 {
+                if env.step_into(&mut x) != 0.0 {
+                    nonzero += 1;
+                }
+            }
+            assert!(nonzero > 0, "{name}: no rewards in 20k steps");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = make_env("freeway", 9).unwrap();
+        let mut b = make_env("freeway", 9).unwrap();
+        let mut xa = vec![0.0; N_FEATURES];
+        let mut xb = vec![0.0; N_FEATURES];
+        for _ in 0..1000 {
+            let ca = a.step_into(&mut xa);
+            let cb = b.step_into(&mut xb);
+            assert_eq!(ca, cb);
+            assert_eq!(xa, xb);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Pong-like game. The ball is rendered only on 2 of every 3 frames —
+//! exactly the property the paper highlights for downscaled Pong ("the
+//! ball or paddles are not visible in many frames"). The expert tracks
+//! the ball with small noise; the scripted opponent is slightly weaker,
+//! so the expert scores more often than it concedes (positive return).
+
+use super::{plot, Game, FRAME_H, FRAME_W};
+use crate::util::prng::Xoshiro256;
+
+pub struct Pong {
+    ball_x: f32,
+    ball_y: f32,
+    vel_x: f32,
+    vel_y: f32,
+    /// expert paddle (left column), center row
+    pad_l: f32,
+    /// opponent paddle (right column)
+    pad_r: f32,
+    t: u64,
+    score_l: u32,
+    score_r: u32,
+}
+
+const PAD_HALF: f32 = 1.5;
+const MAX_SCORE: u32 = 5;
+
+impl Pong {
+    pub fn new() -> Self {
+        Self {
+            ball_x: 8.0,
+            ball_y: 8.0,
+            vel_x: 0.7,
+            vel_y: 0.3,
+            pad_l: 8.0,
+            pad_r: 8.0,
+            t: 0,
+            score_l: 0,
+            score_r: 0,
+        }
+    }
+
+    fn serve(&mut self, rng: &mut Xoshiro256, toward_left: bool) {
+        self.ball_x = 8.0;
+        self.ball_y = rng.uniform(3.0, 12.0);
+        self.vel_x = if toward_left { -0.7 } else { 0.7 };
+        self.vel_y = rng.uniform(-0.5, 0.5);
+    }
+}
+
+impl Default for Pong {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Game for Pong {
+    fn reset(&mut self, rng: &mut Xoshiro256) {
+        self.pad_l = 8.0;
+        self.pad_r = 8.0;
+        self.score_l = 0;
+        self.score_r = 0;
+        self.t = 0;
+        let toward_left = rng.next_u64() & 1 == 0;
+        self.serve(rng, toward_left);
+    }
+
+    fn step(&mut self, rng: &mut Xoshiro256, frame: &mut [f32]) -> (usize, f32, bool) {
+        self.t += 1;
+
+        // --- expert policy: track the ball with noise; actions 0/1/2 ---
+        let target = self.ball_y + rng.uniform(-1.0, 1.0);
+        let action = if target > self.pad_l + 0.5 {
+            self.pad_l = (self.pad_l + 1.0).min(FRAME_H as f32 - 2.0);
+            2 // down
+        } else if target < self.pad_l - 0.5 {
+            self.pad_l = (self.pad_l - 1.0).max(1.0);
+            1 // up
+        } else {
+            0 // noop
+        };
+
+        // --- opponent: slower tracking (0.6 px/step) + more noise ---
+        let opp_target = self.ball_y + rng.uniform(-2.5, 2.5);
+        if opp_target > self.pad_r + 0.5 {
+            self.pad_r = (self.pad_r + 0.6).min(FRAME_H as f32 - 2.0);
+        } else if opp_target < self.pad_r - 0.5 {
+            self.pad_r = (self.pad_r - 0.6).max(1.0);
+        }
+
+        // --- ball physics ---
+        self.ball_x += self.vel_x;
+        self.ball_y += self.vel_y;
+        if self.ball_y <= 0.0 || self.ball_y >= FRAME_H as f32 - 1.0 {
+            self.vel_y = -self.vel_y;
+            self.ball_y = self.ball_y.clamp(0.0, FRAME_H as f32 - 1.0);
+        }
+
+        let mut reward = 0.0;
+        // left wall: expert must intercept
+        if self.ball_x <= 1.0 {
+            if (self.ball_y - self.pad_l).abs() <= PAD_HALF + 0.5 {
+                self.vel_x = self.vel_x.abs();
+                self.vel_y += rng.uniform(-0.2, 0.2);
+            } else {
+                reward = -1.0;
+                self.score_r += 1;
+                self.serve(rng, false);
+            }
+        }
+        // right wall: opponent intercepts
+        if self.ball_x >= FRAME_W as f32 - 2.0 {
+            if (self.ball_y - self.pad_r).abs() <= PAD_HALF + 0.5 {
+                self.vel_x = -self.vel_x.abs();
+                self.vel_y += rng.uniform(-0.2, 0.2);
+            } else {
+                reward = 1.0;
+                self.score_l += 1;
+                self.serve(rng, true);
+            }
+        }
+
+        // --- render (partially observable) ---
+        for dy in -1..=1 {
+            plot(frame, 0, self.pad_l as i32 + dy, 1.0);
+            plot(frame, FRAME_W as i32 - 1, self.pad_r as i32 + dy, 1.0);
+        }
+        // ball blinks: invisible every 3rd frame
+        if self.t % 3 != 0 {
+            plot(frame, self.ball_x as i32, self.ball_y as i32, 1.0);
+        }
+
+        let done = self.score_l >= MAX_SCORE || self.score_r >= MAX_SCORE;
+        (action, reward, done)
+    }
+
+    fn name(&self) -> &'static str {
+        "pong"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::synthatari::FRAME_SIZE;
+
+    #[test]
+    fn expert_scores_more_than_it_concedes() {
+        let mut g = Pong::new();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let (mut plus, mut minus) = (0, 0);
+        for _ in 0..60_000 {
+            frame.fill(0.0);
+            let (_, r, done) = g.step(&mut rng, &mut frame);
+            if r > 0.0 {
+                plus += 1;
+            }
+            if r < 0.0 {
+                minus += 1;
+            }
+            if done {
+                g.reset(&mut rng);
+            }
+        }
+        assert!(plus > 0 && minus > 0, "both sides should score: +{plus} -{minus}");
+        assert!(plus > minus, "expert should win on average: +{plus} -{minus}");
+    }
+
+    #[test]
+    fn ball_blinks() {
+        let mut g = Pong::new();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut visible = 0;
+        let mut hidden = 0;
+        for _ in 0..300 {
+            frame.fill(0.0);
+            g.step(&mut rng, &mut frame);
+            // paddles contribute 6 pixels (possibly fewer at edges)
+            let pixels = frame.iter().filter(|&&v| v > 0.0).count();
+            if pixels > 6 {
+                visible += 1;
+            } else {
+                hidden += 1;
+            }
+        }
+        assert!(visible > 100, "ball mostly visible: {visible}");
+        assert!(hidden > 50, "ball hidden on ~1/3 frames: {hidden}");
+    }
+
+    #[test]
+    fn episode_terminates() {
+        let mut g = Pong::new();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        g.reset(&mut rng);
+        let mut frame = vec![0.0; FRAME_SIZE];
+        let mut done_seen = false;
+        for _ in 0..200_000 {
+            let (_, _, done) = g.step(&mut rng, &mut frame);
+            if done {
+                done_seen = true;
+                break;
+            }
+        }
+        assert!(done_seen);
+    }
+}

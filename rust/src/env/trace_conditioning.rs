@@ -1,0 +1,174 @@
+//! Trace conditioning: the single-stimulus ancestor of trace patterning
+//! (Rafiee et al. 2022). One CS feature, one US feature; every CS is
+//! followed by the US after ISI steps. Pure memory, no discrimination —
+//! used as a fast diagnostic that a learner can bridge a delay at all.
+
+use super::{OracleReturn, Stream};
+use crate::util::prng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct TraceConditioningConfig {
+    pub isi_min: u64,
+    pub isi_max: u64,
+    pub iti_min: u64,
+    pub iti_max: u64,
+    pub gamma: f32,
+}
+
+impl Default for TraceConditioningConfig {
+    fn default() -> Self {
+        Self {
+            isi_min: 10,
+            isi_max: 20,
+            iti_min: 50,
+            iti_max: 80,
+            gamma: 0.9,
+        }
+    }
+}
+
+pub const N_FEATURES: usize = 2;
+pub const US_INDEX: usize = 1;
+
+enum Phase {
+    Cs,
+    Isi { remaining: u64 },
+    Us,
+    Iti { remaining: u64 },
+}
+
+pub struct TraceConditioning {
+    cfg: TraceConditioningConfig,
+    rng: Xoshiro256,
+    phase: Phase,
+}
+
+impl TraceConditioning {
+    pub fn new(cfg: TraceConditioningConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            rng: Xoshiro256::seed_from_u64(seed ^ 0x636f_6e64), // "cond"
+            phase: Phase::Cs,
+        }
+    }
+}
+
+impl Stream for TraceConditioning {
+    fn n_features(&self) -> usize {
+        N_FEATURES
+    }
+
+    fn gamma(&self) -> f32 {
+        self.cfg.gamma
+    }
+
+    fn name(&self) -> &'static str {
+        "trace_conditioning"
+    }
+
+    fn step_into(&mut self, x: &mut [f32]) -> f32 {
+        x.fill(0.0);
+        match self.phase {
+            Phase::Cs => {
+                x[0] = 1.0;
+                let isi = self.rng.int_in(self.cfg.isi_min, self.cfg.isi_max);
+                self.phase = Phase::Isi { remaining: isi };
+                0.0
+            }
+            Phase::Isi { remaining } => {
+                self.phase = if remaining > 1 {
+                    Phase::Isi {
+                        remaining: remaining - 1,
+                    }
+                } else {
+                    Phase::Us
+                };
+                0.0
+            }
+            Phase::Us => {
+                x[US_INDEX] = 1.0;
+                let iti = self.rng.int_in(self.cfg.iti_min, self.cfg.iti_max);
+                self.phase = Phase::Iti { remaining: iti };
+                1.0
+            }
+            Phase::Iti { remaining } => {
+                self.phase = if remaining > 1 {
+                    Phase::Iti {
+                        remaining: remaining - 1,
+                    }
+                } else {
+                    Phase::Cs
+                };
+                0.0
+            }
+        }
+    }
+}
+
+impl OracleReturn for TraceConditioning {
+    fn oracle_return(&self) -> Option<f64> {
+        match self.phase {
+            Phase::Isi { remaining } => {
+                Some((self.cfg.gamma as f64).powi(remaining as i32 - 1))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_cs_followed_by_us() {
+        let mut env = TraceConditioning::new(TraceConditioningConfig::default(), 3);
+        let mut x = vec![0.0; 2];
+        let mut cs_count = 0;
+        let mut us_count = 0;
+        for _ in 0..50_000 {
+            let us = env.step_into(&mut x);
+            if x[0] == 1.0 {
+                cs_count += 1;
+            }
+            if us == 1.0 {
+                us_count += 1;
+            }
+        }
+        assert!(cs_count > 100);
+        assert!((cs_count as i64 - us_count as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn isi_within_bounds() {
+        let cfg = TraceConditioningConfig::default();
+        let mut env = TraceConditioning::new(cfg.clone(), 5);
+        let mut x = vec![0.0; 2];
+        let mut last_cs = None;
+        for t in 0..50_000u64 {
+            let us = env.step_into(&mut x);
+            if x[0] == 1.0 {
+                last_cs = Some(t);
+            }
+            if us == 1.0 {
+                let isi = t - last_cs.unwrap() - 1;
+                assert!((cfg.isi_min..=cfg.isi_max).contains(&isi));
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_only_during_isi() {
+        let mut env = TraceConditioning::new(TraceConditioningConfig::default(), 7);
+        let mut x = vec![0.0; 2];
+        for _ in 0..1000 {
+            let us = env.step_into(&mut x);
+            if us == 1.0 {
+                assert!(env.oracle_return().is_none());
+            }
+            if let Some(g) = env.oracle_return() {
+                assert!(g > 0.0 && g <= 1.0);
+            }
+        }
+    }
+}

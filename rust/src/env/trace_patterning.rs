@@ -1,0 +1,449 @@
+//! Trace patterning (paper Section 4; Rafiee et al. 2022).
+//!
+//! Stream of 7 features: 6 conditional-stimulus (CS) features + 1
+//! unconditional-stimulus (US) feature. Each *trial*:
+//!
+//! 1. a CS pattern (3 of the 6 features set to one; C(6,3) = 20 patterns)
+//!    is shown for `cs_duration` steps,
+//! 2. an inter-stimulus interval (ISI ~ U[isi_min, isi_max]) of silence,
+//! 3. if the pattern is one of the 10 (randomly chosen per seed)
+//!    *activating* patterns, US = 1 for one step; otherwise nothing,
+//! 4. an inter-trial interval (ITI ~ U[iti_min, iti_max]) of silence.
+//!
+//! The cumulant is the US feature; the only way to predict it is to
+//! remember *which* pattern appeared ISI steps ago — a pattern
+//! discrimination plus a memory task.
+//!
+//! The exact expected return is computable (the generator knows the trial
+//! schedule), so this stream also implements [`OracleReturn`], which the
+//! tests use to validate [`super::returns::ReturnEval`] end to end.
+
+use super::{OracleReturn, Stream};
+use crate::util::prng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct TracePatterningConfig {
+    pub isi_min: u64,
+    pub isi_max: u64,
+    pub iti_min: u64,
+    pub iti_max: u64,
+    pub cs_duration: u64,
+    pub gamma: f32,
+}
+
+impl Default for TracePatterningConfig {
+    /// Paper values: ISI ~ U[14,26], ITI ~ U[80,120], gamma = 0.9.
+    fn default() -> Self {
+        Self {
+            isi_min: 14,
+            isi_max: 26,
+            iti_min: 80,
+            iti_max: 120,
+            cs_duration: 1,
+            gamma: 0.9,
+        }
+    }
+}
+
+impl TracePatterningConfig {
+    /// Small intervals for fast tests (matches the paper's Fig-3 sketch).
+    pub fn tiny() -> Self {
+        Self {
+            isi_min: 3,
+            isi_max: 3,
+            iti_min: 7,
+            iti_max: 7,
+            cs_duration: 1,
+            gamma: 0.9,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Phase {
+    /// Showing the CS pattern; counter counts remaining CS steps.
+    Cs { remaining: u64 },
+    /// Waiting out the ISI; if `activate`, US fires at the end.
+    Isi { remaining: u64, activate: bool },
+    /// The US step itself (1 step; US=1 iff activate).
+    Us { activate: bool },
+    /// Inter-trial silence.
+    Iti { remaining: u64 },
+}
+
+pub struct TracePatterning {
+    cfg: TracePatterningConfig,
+    rng: Xoshiro256,
+    /// All 20 patterns as feature-index triples.
+    patterns: Vec<[usize; 3]>,
+    /// patterns[i] activates the US iff activating[i].
+    activating: Vec<bool>,
+    phase: Phase,
+    current_pattern: usize,
+}
+
+pub const N_FEATURES: usize = 7;
+pub const US_INDEX: usize = 6;
+
+fn all_patterns() -> Vec<[usize; 3]> {
+    let mut out = Vec::with_capacity(20);
+    for a in 0..6 {
+        for b in (a + 1)..6 {
+            for c in (b + 1)..6 {
+                out.push([a, b, c]);
+            }
+        }
+    }
+    out
+}
+
+impl TracePatterning {
+    pub fn new(cfg: TracePatterningConfig, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x7261_6365); // "race"
+        let patterns = all_patterns();
+        // 10 randomly chosen activating patterns, fixed for the run.
+        let chosen = rng.choose_indices(patterns.len(), 10);
+        let mut activating = vec![false; patterns.len()];
+        for i in chosen {
+            activating[i] = true;
+        }
+        let mut env = Self {
+            cfg,
+            rng,
+            patterns,
+            activating,
+            phase: Phase::Iti { remaining: 1 },
+            current_pattern: 0,
+        };
+        env.begin_trial();
+        env
+    }
+
+    fn begin_trial(&mut self) {
+        self.current_pattern = self.rng.below(self.patterns.len() as u64) as usize;
+        self.phase = Phase::Cs {
+            remaining: self.cfg.cs_duration,
+        };
+    }
+
+    /// Which patterns activate the US (for tests/oracles).
+    pub fn activating_patterns(&self) -> Vec<[usize; 3]> {
+        self.patterns
+            .iter()
+            .zip(&self.activating)
+            .filter(|(_, &a)| a)
+            .map(|(p, _)| *p)
+            .collect()
+    }
+
+    fn sample_isi(&mut self) -> u64 {
+        self.rng.int_in(self.cfg.isi_min, self.cfg.isi_max)
+    }
+
+    fn sample_iti(&mut self) -> u64 {
+        self.rng.int_in(self.cfg.iti_min, self.cfg.iti_max)
+    }
+
+    /// Exact number of steps until the US fires (from the state after the
+    /// most recent observation), if an activating US is scheduled.
+    fn steps_to_us(&self) -> Option<u64> {
+        match self.phase {
+            // ISI not yet sampled during the CS — oracle undefined there.
+            Phase::Cs { .. } => None,
+            Phase::Isi {
+                remaining,
+                activate,
+            } => {
+                // `remaining` more silent steps, then the US step.
+                if activate {
+                    Some(remaining + 1)
+                } else {
+                    None
+                }
+            }
+            Phase::Us { activate } => {
+                if activate {
+                    Some(1)
+                } else {
+                    None
+                }
+            }
+            Phase::Iti { .. } => None,
+        }
+    }
+}
+
+impl Stream for TracePatterning {
+    fn n_features(&self) -> usize {
+        N_FEATURES
+    }
+
+    fn gamma(&self) -> f32 {
+        self.cfg.gamma
+    }
+
+    fn name(&self) -> &'static str {
+        "trace_patterning"
+    }
+
+    fn step_into(&mut self, x: &mut [f32]) -> f32 {
+        debug_assert_eq!(x.len(), N_FEATURES);
+        x.fill(0.0);
+        match self.phase {
+            Phase::Cs { remaining } => {
+                for &i in &self.patterns[self.current_pattern] {
+                    x[i] = 1.0;
+                }
+                if remaining > 1 {
+                    self.phase = Phase::Cs {
+                        remaining: remaining - 1,
+                    };
+                } else {
+                    // Paper timing (Fig. 3): the US fires exactly ISI steps
+                    // after CS onset, i.e. ISI-1 silent steps in between.
+                    let isi = self.sample_isi();
+                    let activate = self.activating[self.current_pattern];
+                    self.phase = if isi <= 1 {
+                        Phase::Us { activate }
+                    } else {
+                        Phase::Isi {
+                            remaining: isi - 1,
+                            activate,
+                        }
+                    };
+                }
+                0.0
+            }
+            Phase::Isi {
+                remaining,
+                activate,
+            } => {
+                if remaining > 1 {
+                    self.phase = Phase::Isi {
+                        remaining: remaining - 1,
+                        activate,
+                    };
+                } else {
+                    self.phase = Phase::Us { activate };
+                }
+                0.0
+            }
+            Phase::Us { activate } => {
+                let us = if activate { 1.0 } else { 0.0 };
+                x[US_INDEX] = us;
+                let iti = self.sample_iti();
+                self.phase = Phase::Iti { remaining: iti };
+                us
+            }
+            Phase::Iti { remaining } => {
+                if remaining > 1 {
+                    self.phase = Phase::Iti {
+                        remaining: remaining - 1,
+                    };
+                } else {
+                    self.begin_trial();
+                }
+                0.0
+            }
+        }
+    }
+}
+
+impl OracleReturn for TracePatterning {
+    fn oracle_return(&self) -> Option<f64> {
+        // Exact return from "now" (the state after the last emitted obs):
+        // gamma^(k-1) when the US fires in k steps; future-trial
+        // contributions are < gamma^ITI (negligible; tests use a
+        // tolerance that covers them).
+        self.steps_to_us()
+            .map(|k| (self.cfg.gamma as f64).powi(k as i32 - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::returns::ReturnEval;
+    use crate::util::check::{check, prop_assert};
+
+    #[test]
+    fn twenty_patterns_ten_activating() {
+        let env = TracePatterning::new(TracePatterningConfig::default(), 0);
+        assert_eq!(env.patterns.len(), 20);
+        assert_eq!(env.activating.iter().filter(|&&a| a).count(), 10);
+        // patterns distinct
+        let mut seen: Vec<[usize; 3]> = env.patterns.clone();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn activating_set_differs_across_seeds() {
+        let a = TracePatterning::new(TracePatterningConfig::default(), 1)
+            .activating_patterns();
+        let b = TracePatterning::new(TracePatterningConfig::default(), 2)
+            .activating_patterns();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cs_has_three_active_features_us_zero_during_cs() {
+        let mut env = TracePatterning::new(TracePatterningConfig::default(), 5);
+        let mut x = vec![0.0; N_FEATURES];
+        let mut cs_seen = 0;
+        for _ in 0..5000 {
+            env.step_into(&mut x);
+            let n_cs: usize = (0..6).filter(|&i| x[i] == 1.0).count();
+            if n_cs > 0 {
+                assert_eq!(n_cs, 3);
+                assert_eq!(x[US_INDEX], 0.0, "US must not overlap CS");
+                cs_seen += 1;
+            }
+        }
+        assert!(cs_seen >= 30, "CS trials should occur: {cs_seen}");
+    }
+
+    #[test]
+    fn us_fires_only_for_activating_patterns_at_isi() {
+        let cfg = TracePatterningConfig {
+            isi_min: 5,
+            isi_max: 5,
+            iti_min: 10,
+            iti_max: 10,
+            cs_duration: 1,
+            gamma: 0.9,
+        };
+        let mut env = TracePatterning::new(cfg, 11);
+        let activating = env.activating_patterns();
+        let mut x = vec![0.0; N_FEATURES];
+        let mut last_pattern: Option<[usize; 3]> = None;
+        let mut steps_since_cs = 0u64;
+        let mut checked = 0;
+        for _ in 0..20_000 {
+            let us = env.step_into(&mut x);
+            let cs: Vec<usize> = (0..6).filter(|&i| x[i] == 1.0).collect();
+            if cs.len() == 3 {
+                last_pattern = Some([cs[0], cs[1], cs[2]]);
+                steps_since_cs = 0;
+            } else {
+                steps_since_cs += 1;
+            }
+            if us == 1.0 {
+                let p = last_pattern.expect("US without CS");
+                assert!(activating.contains(&p), "US fired for non-activating {p:?}");
+                assert_eq!(steps_since_cs, 5, "US must fire ISI steps after CS onset");
+                checked += 1;
+            }
+        }
+        assert!(checked > 20, "need US events: {checked}");
+    }
+
+    #[test]
+    fn nonactivating_patterns_never_fire() {
+        let mut env = TracePatterning::new(TracePatterningConfig::tiny(), 17);
+        let activating = env.activating_patterns();
+        let mut x = vec![0.0; N_FEATURES];
+        let mut last_pattern = None;
+        for _ in 0..50_000 {
+            let us = env.step_into(&mut x);
+            let cs: Vec<usize> = (0..6).filter(|&i| x[i] == 1.0).collect();
+            if cs.len() == 3 {
+                last_pattern = Some([cs[0], cs[1], cs[2]]);
+            }
+            if let Some(p) = last_pattern {
+                if !activating.contains(&p) {
+                    assert_eq!(us, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isi_iti_within_bounds() {
+        let cfg = TracePatterningConfig::default();
+        let mut env = TracePatterning::new(cfg.clone(), 23);
+        let mut x = vec![0.0; N_FEATURES];
+        let mut last_cs: Option<u64> = None;
+        let mut last_us: Option<u64> = None;
+        for t in 0..100_000u64 {
+            let us = env.step_into(&mut x);
+            let is_cs = (0..6).any(|i| x[i] == 1.0);
+            if is_cs {
+                if let Some(ut) = last_us {
+                    // ITI = silent steps between the US and the next CS.
+                    let iti = t - ut - 1;
+                    assert!(
+                        (cfg.iti_min..=cfg.iti_max).contains(&iti),
+                        "iti {iti} out of bounds"
+                    );
+                }
+                // only measure the ITI against the *immediately preceding*
+                // trial; non-activating trials emit no US.
+                last_us = None;
+                last_cs = Some(t);
+            }
+            if us == 1.0 {
+                let ct = last_cs.expect("US without CS");
+                // paper: US fires exactly ISI steps after CS onset.
+                let isi = t - ct;
+                assert!(
+                    (cfg.isi_min..=cfg.isi_max).contains(&isi),
+                    "isi {isi} out of bounds"
+                );
+                last_us = Some(t);
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_matches_empirical_return() {
+        // During an activating ISI the oracle return gamma^(k-1) must match
+        // the empirical return computed by ReturnEval.
+        let cfg = TracePatterningConfig::default();
+        let gamma = cfg.gamma as f64;
+        let mut env = TracePatterning::new(cfg, 31);
+        let mut ev = ReturnEval::new(gamma, 1e-9);
+        let mut oracle_vals: Vec<(u64, f64)> = Vec::new();
+        let mut x = vec![0.0; N_FEATURES];
+        for t in 0..30_000u64 {
+            let c = env.step_into(&mut x) as f64;
+            // predict the oracle value when known, else 0 (only oracle
+            // steps are checked below).
+            let y = env.oracle_return().unwrap_or(-1.0);
+            if y >= 0.0 {
+                oracle_vals.push((t, y));
+            }
+            ev.push(y.max(0.0), c);
+        }
+        let errs = ev.drain();
+        let mut checked = 0;
+        for &(t, o) in &oracle_vals {
+            if let Ok(idx) = errs.binary_search_by_key(&t, |&(i, _)| i) {
+                let (_, e2) = errs[idx];
+                // future-trial contribution makes this inexact at
+                // ~gamma^(ISI+ITI) — generous tolerance.
+                assert!(e2 < 1e-6, "t={t} oracle {o} err {e2}");
+                checked += 1;
+            }
+        }
+        assert!(checked > 100, "checked {checked}");
+    }
+
+    #[test]
+    fn prop_stream_is_deterministic_per_seed() {
+        check("trace patterning deterministic", 20, |g| {
+            let seed = g.rng.next_u64();
+            let mut a = TracePatterning::new(TracePatterningConfig::tiny(), seed);
+            let mut b = TracePatterning::new(TracePatterningConfig::tiny(), seed);
+            let mut xa = vec![0.0; N_FEATURES];
+            let mut xb = vec![0.0; N_FEATURES];
+            for _ in 0..500 {
+                let ca = a.step_into(&mut xa);
+                let cb = b.step_into(&mut xb);
+                prop_assert(ca == cb && xa == xb, "streams diverged")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,5 @@
+//! Online learning: TD(lambda) over a [`crate::nets::PredictionNet`].
+
+pub mod td_lambda;
+
+pub use td_lambda::{TdConfig, TdLambdaAgent};

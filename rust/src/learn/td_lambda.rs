@@ -1,0 +1,366 @@
+//! Online TD(lambda) with accumulating eligibility traces (Sutton 1988),
+//! applied to non-linear recurrent networks as in the paper (and
+//! TD-Gammon before it).
+//!
+//! Per step t, with observation x_t carrying cumulant c_t:
+//!
+//! 1. advance the net, read features f_t, predict y_t = w . f_t
+//! 2. delta_{t-1} = c_t + gamma * y_t - y_{t-1}
+//! 3. w     += alpha * delta * e_w      (readout eligibility)
+//!    theta += alpha * delta * e_theta  (net-parameter eligibility)
+//! 4. e_w     = gamma * lambda * e_w     + f_t
+//!    e_theta = gamma * lambda * e_theta + dy_t/dtheta  (RTRL / T-BPTT)
+//!
+//! Constructive growth: when the net's feature count grows, w and e_w are
+//! zero-extended (the paper initializes new outgoing weights to zero, so
+//! adding a feature never perturbs predictions); when the net's learnable
+//! parameter set changes identity (stage freeze), e_theta is reset.
+
+use crate::nets::PredictionNet;
+use crate::util::{axpy, dot};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TdConfig {
+    pub alpha: f32,
+    pub gamma: f32,
+    pub lambda: f32,
+}
+
+impl Default for TdConfig {
+    /// Paper trace-patterning defaults: gamma 0.9, lambda 0.99.
+    fn default() -> Self {
+        Self {
+            alpha: 0.001,
+            gamma: 0.9,
+            lambda: 0.99,
+        }
+    }
+}
+
+pub struct TdLambdaAgent<N: PredictionNet> {
+    pub net: N,
+    cfg: TdConfig,
+    /// readout weights over net.features()
+    pub w: Vec<f32>,
+    e_w: Vec<f32>,
+    e_theta: Vec<f32>,
+    grad_buf: Vec<f32>,
+    update_buf: Vec<f32>,
+    y_prev: f32,
+    have_prev: bool,
+    epoch_seen: u64,
+    steps: u64,
+}
+
+impl<N: PredictionNet> TdLambdaAgent<N> {
+    pub fn new(net: N, cfg: TdConfig) -> Self {
+        let d = net.n_features();
+        let np = net.n_learnable_params();
+        let epoch = net.param_epoch();
+        Self {
+            net,
+            cfg,
+            w: vec![0.0; d],
+            e_w: vec![0.0; d],
+            e_theta: vec![0.0; np],
+            grad_buf: vec![0.0; np],
+            update_buf: vec![0.0; np],
+            y_prev: 0.0,
+            have_prev: false,
+            epoch_seen: epoch,
+            steps: 0,
+        }
+    }
+
+    pub fn config(&self) -> TdConfig {
+        self.cfg
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// One online step: consume observation + cumulant, return prediction
+    /// y_t made *at this step* (the value scored against the return).
+    pub fn step(&mut self, x: &[f32], cumulant: f32) -> f32 {
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.cfg;
+
+        self.net.advance(x);
+
+        // constructive growth bookkeeping
+        let d = self.net.n_features();
+        if d > self.w.len() {
+            self.w.resize(d, 0.0); // new outgoing weights start at zero
+            self.e_w.resize(d, 0.0);
+        }
+        if self.net.param_epoch() != self.epoch_seen {
+            self.epoch_seen = self.net.param_epoch();
+            let np = self.net.n_learnable_params();
+            self.e_theta.clear();
+            self.e_theta.resize(np, 0.0);
+            self.grad_buf.clear();
+            self.grad_buf.resize(np, 0.0);
+            self.update_buf.clear();
+            self.update_buf.resize(np, 0.0);
+        }
+
+        let feats = self.net.features();
+        let y = dot(&self.w, feats);
+
+        // TD update for the previous prediction
+        if self.have_prev {
+            let delta = cumulant + gamma * y - self.y_prev;
+            let a_delta = alpha * delta;
+            axpy(a_delta, &self.e_w, &mut self.w);
+            if !self.e_theta.is_empty() {
+                for (u, &e) in self.update_buf.iter_mut().zip(self.e_theta.iter()) {
+                    *u = a_delta * e;
+                }
+                self.net.apply_update(&self.update_buf);
+            }
+        }
+
+        // eligibility decay + accumulate current gradients
+        let gl = gamma * lambda;
+        let feats = self.net.features();
+        for (e, &f) in self.e_w.iter_mut().zip(feats.iter()) {
+            *e = gl * *e + f;
+        }
+        if !self.e_theta.is_empty() {
+            self.net.grad_y(&self.w, &mut self.grad_buf);
+            for (e, &g) in self.e_theta.iter_mut().zip(self.grad_buf.iter()) {
+                *e = gl * *e + g;
+            }
+        }
+
+        self.y_prev = y;
+        self.have_prev = true;
+        self.steps += 1;
+        self.net.end_step();
+        y
+    }
+
+    /// Prediction without learning (evaluation-only passes).
+    pub fn predict_only(&mut self, x: &[f32]) -> f32 {
+        self.net.advance(x);
+        let d = self.net.n_features();
+        if d > self.w.len() {
+            self.w.resize(d, 0.0);
+            self.e_w.resize(d, 0.0);
+        }
+        dot(&self.w, self.net.features())
+    }
+
+    /// Total per-step operation estimate: net + TD bookkeeping.
+    pub fn flops_per_step(&self) -> u64 {
+        // readout + two eligibility updates are O(d + |theta|); the net
+        // dominates, but count them for honesty.
+        let d = self.w.len() as u64;
+        let np = self.e_theta.len() as u64;
+        self.net.flops_per_step() + 4 * d + 3 * np
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::columnar::columnar_net;
+    use crate::nets::tbptt::TbpttNet;
+
+    /// A fixed "identity" feature net for testing TD mechanics in
+    /// isolation: features = x, no learnable params.
+    struct TabularNet {
+        feats: Vec<f32>,
+    }
+
+    impl PredictionNet for TabularNet {
+        fn n_features(&self) -> usize {
+            self.feats.len()
+        }
+        fn advance(&mut self, x: &[f32]) {
+            self.feats.copy_from_slice(x);
+        }
+        fn features(&self) -> &[f32] {
+            &self.feats
+        }
+        fn n_learnable_params(&self) -> usize {
+            0
+        }
+        fn grad_y(&self, _w: &[f32], _g: &mut [f32]) {}
+        fn apply_update(&mut self, _d: &[f32]) {}
+        fn flops_per_step(&self) -> u64 {
+            0
+        }
+        fn name(&self) -> &'static str {
+            "tabular"
+        }
+    }
+
+    #[test]
+    fn td0_converges_to_constant_return() {
+        // single always-on feature, constant cumulant 1, gamma 0.5:
+        // true value = c/(1-gamma) = 2 (cumulant arrives every step).
+        let net = TabularNet { feats: vec![0.0] };
+        let mut agent = TdLambdaAgent::new(
+            net,
+            TdConfig {
+                alpha: 0.05,
+                gamma: 0.5,
+                lambda: 0.0,
+            },
+        );
+        let mut y = 0.0;
+        for _ in 0..5000 {
+            y = agent.step(&[1.0], 1.0);
+        }
+        assert!((y - 2.0).abs() < 0.05, "y = {y}");
+    }
+
+    #[test]
+    fn td_lambda_solves_two_state_chain() {
+        // states A, B alternate; cumulant 1 only on entering A.
+        // gamma = 0.8: v(A) = gamma*v(B) + ... solve: entering A yields
+        // c=1; v(A) = 0 + .8 v(B); v(B) = 1 + .8 v(A)  =>
+        // v(A) = .8(1+.8 v(A)) => v(A)= .8/(1-.64)=2.222, v(B)= 2.778.
+        let net = TabularNet {
+            feats: vec![0.0, 0.0],
+        };
+        let mut agent = TdLambdaAgent::new(
+            net,
+            TdConfig {
+                alpha: 0.02,
+                gamma: 0.8,
+                lambda: 0.9,
+            },
+        );
+        let mut ys = [0.0f32; 2];
+        for t in 0..60_000u64 {
+            let s = (t % 2) as usize; // 0 = A, 1 = B
+            let x = if s == 0 { [1.0, 0.0] } else { [0.0, 1.0] };
+            let c = if s == 0 { 1.0 } else { 0.0 }; // reward on entering A
+            ys[s] = agent.step(&x, c);
+        }
+        assert!((ys[0] - 2.222).abs() < 0.1, "v(A) = {}", ys[0]);
+        assert!((ys[1] - 2.778).abs() < 0.1, "v(B) = {}", ys[1]);
+    }
+
+    #[test]
+    fn columnar_agent_learns_cycle_world() {
+        use crate::env::cycle_world::CycleWorld;
+        use crate::env::returns::ReturnEval;
+        use crate::env::Stream;
+
+        let mut env = CycleWorld::new(6, 0.9);
+        let net = columnar_net(2, 5, 0.01, 0);
+        let mut agent = TdLambdaAgent::new(
+            net,
+            TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+        );
+        let mut x = vec![0.0; 2];
+        let mut early = ReturnEval::new(0.9, 1e-6);
+        let mut late = ReturnEval::new(0.9, 1e-6);
+        let total = 120_000;
+        for t in 0..total {
+            let c = env.step_into(&mut x);
+            let y = agent.step(&x, c);
+            if t < 20_000 {
+                early.push(y as f64, c as f64);
+            }
+            if t >= total - 20_000 {
+                late.push(y as f64, c as f64);
+            }
+        }
+        let mean = |v: Vec<(u64, f64)>| {
+            let n = v.len() as f64;
+            v.iter().map(|&(_, e)| e).sum::<f64>() / n
+        };
+        let e_early = mean(early.drain());
+        let e_late = mean(late.drain());
+        assert!(
+            e_late < e_early * 0.5,
+            "learning must reduce error: early {e_early:.4} late {e_late:.4}"
+        );
+    }
+
+    #[test]
+    fn tbptt_agent_learns_cycle_world() {
+        use crate::env::cycle_world::CycleWorld;
+        use crate::env::returns::ReturnEval;
+        use crate::env::Stream;
+
+        let mut env = CycleWorld::new(5, 0.9);
+        let net = TbpttNet::new(2, 4, 10, 0);
+        let mut agent = TdLambdaAgent::new(
+            net,
+            TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+        );
+        let mut x = vec![0.0; 2];
+        let mut early = ReturnEval::new(0.9, 1e-6);
+        let mut late = ReturnEval::new(0.9, 1e-6);
+        let total = 120_000;
+        for t in 0..total {
+            let c = env.step_into(&mut x);
+            let y = agent.step(&x, c);
+            if t < 20_000 {
+                early.push(y as f64, c as f64);
+            }
+            if t >= total - 20_000 {
+                late.push(y as f64, c as f64);
+            }
+        }
+        let mean = |v: Vec<(u64, f64)>| {
+            let n = v.len() as f64;
+            v.iter().map(|&(_, e)| e).sum::<f64>() / n
+        };
+        let e_early = mean(early.drain());
+        let e_late = mean(late.drain());
+        assert!(
+            e_late < e_early * 0.6,
+            "tbptt must learn: early {e_early:.4} late {e_late:.4}"
+        );
+    }
+
+    #[test]
+    fn growth_extends_weights_with_zeros() {
+        use crate::nets::ccn::{CcnConfig, CcnNet};
+        let net = CcnNet::new(
+            CcnConfig {
+                n_inputs: 2,
+                total_features: 4,
+                features_per_stage: 2,
+                steps_per_stage: 25,
+                init_scale: 0.5,
+                norm_eps: 0.01,
+                norm_beta: 0.999,
+            },
+            0,
+        );
+        let mut agent = TdLambdaAgent::new(net, TdConfig::default());
+        for t in 0..60u64 {
+            let x = [(t % 3) as f32 / 3.0, 1.0];
+            agent.step(&x, 0.1);
+            if t == 24 {
+                assert_eq!(agent.w.len(), 2);
+            }
+            if t == 26 {
+                assert_eq!(agent.w.len(), 4);
+                // new outgoing weights must start at zero (y unperturbed),
+                // but by t==26 one update has already run; check magnitude
+                // is tiny relative to learned weights.
+                assert!(agent.w[2].abs() < 0.1 && agent.w[3].abs() < 0.1);
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # ccn-rtrl — Scalable Real-Time Recurrent Learning with
+//! # Columnar-Constructive Networks
+//!
+//! Production-quality reproduction of Javed, Shah, Sutton & White (2023):
+//! scalable RTRL via Columnar networks, Constructive networks and their
+//! combination (CCN), with TD(lambda) policy evaluation under fixed
+//! per-step compute budgets, benchmarked against equal-budget T-BPTT.
+//!
+//! Architecture (see DESIGN.md):
+//! - [`nets`]/[`learn`]: native Rust learners — the real-time hot path.
+//! - [`runtime`]: PJRT bridge executing the JAX/Pallas-authored AOT
+//!   artifacts (`artifacts/*.hlo.txt`) from Rust; numerically cross-checked
+//!   against the native path.
+//! - [`env`]: prediction streams (trace patterning, synthetic-ALE suite).
+//! - [`coordinator`]: experiment runner, multi-seed sweeps, aggregation.
+//! - [`compute`]: the paper's Appendix-A operation-count budget equations.
+//! - [`util`], [`metrics`], [`config`]: offline-friendly substrates.
+
+pub mod compute;
+pub mod config;
+pub mod coordinator;
+pub mod learn;
+pub mod nets;
+pub mod env;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

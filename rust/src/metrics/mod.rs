@@ -1,0 +1,316 @@
+//! Online metrics: running statistics, windowed errors, learning curves,
+//! and simple CSV/JSON result writers used by the coordinator and benches.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Numerically stable streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn stderr(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Exponentially weighted moving average (the paper plots smoothed error).
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    beta: f64,
+    value: f64,
+    initialized: bool,
+}
+
+impl Ewma {
+    pub fn new(beta: f64) -> Self {
+        Self {
+            beta,
+            value: 0.0,
+            initialized: false,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.initialized {
+            self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        } else {
+            self.value = x;
+            self.initialized = true;
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value
+    }
+}
+
+/// A learning curve recorded at a fixed number of points: pushes stream in,
+/// each bin stores the mean of its window. Keeps memory O(points) for
+/// arbitrarily long runs.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    bin_size: u64,
+    acc: f64,
+    acc_n: u64,
+    pub xs: Vec<u64>,
+    pub ys: Vec<f64>,
+    seen: u64,
+}
+
+impl Curve {
+    /// `total_steps` and `points` fix the bin width up front.
+    pub fn new(total_steps: u64, points: usize) -> Self {
+        Self {
+            bin_size: (total_steps / points.max(1) as u64).max(1),
+            acc: 0.0,
+            acc_n: 0,
+            xs: Vec::new(),
+            ys: Vec::new(),
+            seen: 0,
+        }
+    }
+
+    pub fn push(&mut self, value: f64) {
+        self.acc += value;
+        self.acc_n += 1;
+        self.seen += 1;
+        if self.acc_n >= self.bin_size {
+            self.xs.push(self.seen);
+            self.ys.push(self.acc / self.acc_n as f64);
+            self.acc = 0.0;
+            self.acc_n = 0;
+        }
+    }
+
+    /// Flush a trailing partial bin (call at end of run).
+    pub fn finish(&mut self) {
+        if self.acc_n > 0 {
+            self.xs.push(self.seen);
+            self.ys.push(self.acc / self.acc_n as f64);
+            self.acc = 0.0;
+            self.acc_n = 0;
+        }
+    }
+
+    /// Mean of the last `frac` of the curve (e.g. final-window error).
+    pub fn tail_mean(&self, frac: f64) -> f64 {
+        if self.ys.is_empty() {
+            return f64::NAN;
+        }
+        let k = ((self.ys.len() as f64 * frac).ceil() as usize)
+            .clamp(1, self.ys.len());
+        let tail = &self.ys[self.ys.len() - k..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Mean over aligned curves plus stderr band (for multi-seed plots).
+pub fn aggregate_curves(curves: &[Curve]) -> (Vec<u64>, Vec<f64>, Vec<f64>) {
+    assert!(!curves.is_empty());
+    let len = curves.iter().map(|c| c.ys.len()).min().unwrap();
+    let xs = curves[0].xs[..len].to_vec();
+    let mut mean = Vec::with_capacity(len);
+    let mut stderr = Vec::with_capacity(len);
+    for i in 0..len {
+        let mut st = OnlineStats::new();
+        for c in curves {
+            st.push(c.ys[i]);
+        }
+        mean.push(st.mean());
+        stderr.push(st.stderr());
+    }
+    (xs, mean, stderr)
+}
+
+/// Write a CSV file: header + rows of f64 columns.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    columns: &[&[f64]],
+) -> std::io::Result<()> {
+    assert!(!columns.is_empty());
+    let rows = columns[0].len();
+    assert!(columns.iter().all(|c| c.len() == rows), "ragged columns");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for r in 0..rows {
+        let row: Vec<String> = columns.iter().map(|c| format!("{}", c[r])).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Render an aligned text table (benches print these per paper figure).
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut st = OnlineStats::new();
+        for &x in &xs {
+            st.push(x);
+        }
+        assert!((st.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic dataset is 32/7
+        assert!((st.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_stats_single_value() {
+        let mut st = OnlineStats::new();
+        st.push(3.0);
+        assert_eq!(st.mean(), 3.0);
+        assert_eq!(st.var(), 0.0);
+        assert_eq!(st.stderr(), 0.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.9);
+        e.push(10.0);
+        assert_eq!(e.get(), 10.0); // first value initializes
+        for _ in 0..200 {
+            e.push(2.0);
+        }
+        assert!((e.get() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_bins_and_tail() {
+        let mut c = Curve::new(100, 10);
+        for i in 0..100 {
+            c.push(i as f64);
+        }
+        c.finish();
+        assert_eq!(c.ys.len(), 10);
+        assert!((c.ys[0] - 4.5).abs() < 1e-12); // mean of 0..9
+        assert!((c.tail_mean(0.2) - (84.5 + 94.5) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_partial_bin_flush() {
+        let mut c = Curve::new(10, 3);
+        for i in 0..8 {
+            c.push(i as f64);
+        }
+        c.finish();
+        assert_eq!(*c.xs.last().unwrap(), 8);
+        assert_eq!(c.acc_n, 0);
+    }
+
+    #[test]
+    fn aggregate_mean_and_stderr() {
+        let mut a = Curve::new(4, 2);
+        let mut b = Curve::new(4, 2);
+        for v in [1.0, 1.0, 3.0, 3.0] {
+            a.push(v);
+        }
+        for v in [3.0, 3.0, 5.0, 5.0] {
+            b.push(v);
+        }
+        a.finish();
+        b.finish();
+        let (xs, mean, stderr) = aggregate_curves(&[a, b]);
+        assert_eq!(xs, vec![2, 4]);
+        assert_eq!(mean, vec![2.0, 4.0]);
+        assert!((stderr[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("ccn_test_csv");
+        let path = dir.join("x.csv");
+        write_csv(&path, &["a", "b"], &[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,3\n"));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["method", "err"],
+            &[
+                vec!["ccn".into(), "0.5".into()],
+                vec!["tbptt".into(), "1".into()],
+            ],
+        );
+        assert!(t.contains("method"));
+        assert!(t.lines().count() == 4);
+    }
+}

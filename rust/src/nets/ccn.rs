@@ -1,0 +1,433 @@
+//! Constructive-Columnar Network (paper Section 3.3).
+//!
+//! A CCN grows in *stages*. Stage `s` holds `features_per_stage`
+//! independent LSTM columns whose input is the raw observation
+//! concatenated with the normalized features of all earlier (frozen)
+//! stages — so later stages hold *hierarchical* recurrent features.
+//! Only the newest stage learns (exact, cheap RTRL per column); after
+//! `steps_per_stage` steps it is frozen and the next stage materializes.
+//!
+//! Degenerate corners of the configuration space:
+//! - `features_per_stage == total_features` (one everlasting stage) is a
+//!   **Columnar network** (Section 3.1);
+//! - `features_per_stage == 1` is a **Constructive network** (Section 3.2).
+//!
+//! Within a step, stages are evaluated in order and each consumes the
+//! *current-step* normalized outputs of the stages before it, exactly as
+//! in Figure 2 (h3/h4 read h1/h2's fresh values).
+
+use super::lstm_column::LstmColumn;
+use super::normalizer::OnlineNormalizer;
+use super::PredictionNet;
+use crate::compute;
+use crate::util::prng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct CcnConfig {
+    pub n_inputs: usize,
+    pub total_features: usize,
+    pub features_per_stage: usize,
+    /// Steps before freezing the learning stage; `u64::MAX` never freezes
+    /// (that is the columnar configuration).
+    pub steps_per_stage: u64,
+    pub init_scale: f32,
+    pub norm_eps: f32,
+    pub norm_beta: f32,
+}
+
+impl CcnConfig {
+    /// Paper trace-patterning CCN: 20 features, 4 per stage.
+    pub fn trace_paper() -> Self {
+        Self {
+            n_inputs: 7,
+            total_features: 20,
+            features_per_stage: 4,
+            steps_per_stage: 10_000_000,
+            init_scale: 1.0,
+            norm_eps: 0.01,
+            norm_beta: super::normalizer::NORM_BETA,
+        }
+    }
+}
+
+struct Stage {
+    columns: Vec<LstmColumn>,
+    normalizer: OnlineNormalizer,
+    /// raw hidden states scratch
+    raw: Vec<f32>,
+    /// input width of this stage's columns
+    m: usize,
+}
+
+pub struct CcnNet {
+    cfg: CcnConfig,
+    stages: Vec<Stage>,
+    /// index of the learning stage (== stages.len() - 1)
+    learning_stage: usize,
+    steps_in_stage: u64,
+    epoch: u64,
+    /// normalized features of all materialized columns, stage-major
+    feats: Vec<f32>,
+    /// scratch input buffer: [x_raw | feats of stages 0..s]
+    xbuf: Vec<f32>,
+    rng: Xoshiro256,
+    frozen_forever: bool,
+}
+
+impl CcnNet {
+    pub fn new(cfg: CcnConfig, seed: u64) -> Self {
+        assert!(cfg.total_features >= 1);
+        assert!(cfg.features_per_stage >= 1);
+        assert!(cfg.n_inputs >= 1);
+        let rng = Xoshiro256::seed_from_u64(seed ^ 0x6363_6e6e); // "ccnn"
+        let mut net = Self {
+            cfg,
+            stages: Vec::new(),
+            learning_stage: 0,
+            steps_in_stage: 0,
+            epoch: 0,
+            feats: Vec::new(),
+            xbuf: Vec::new(),
+            rng,
+            frozen_forever: false,
+        };
+        net.push_stage();
+        net
+    }
+
+    fn stage_width(&self, s: usize) -> usize {
+        (self.cfg.features_per_stage)
+            .min(self.cfg.total_features - self.cfg.features_per_stage * s)
+    }
+
+    fn push_stage(&mut self) {
+        let s = self.stages.len();
+        let u = self.stage_width(s);
+        let m = self.cfg.n_inputs + self.cfg.features_per_stage * s;
+        let columns = (0..u)
+            .map(|_| LstmColumn::new(m, &mut self.rng, self.cfg.init_scale))
+            .collect();
+        self.stages.push(Stage {
+            columns,
+            normalizer: OnlineNormalizer::new(u, self.cfg.norm_beta, self.cfg.norm_eps),
+            raw: vec![0.0; u],
+            m,
+        });
+        self.learning_stage = s;
+        self.steps_in_stage = 0;
+        self.feats.resize(self.feats.len() + u, 0.0);
+        self.xbuf = vec![0.0; m + u]; // widest needed so far
+        self.epoch += 1;
+    }
+
+    /// Materialized feature count.
+    fn d(&self) -> usize {
+        self.feats.len()
+    }
+
+    fn learning(&self) -> &Stage {
+        &self.stages[self.learning_stage]
+    }
+
+    /// Exact steps spent in the current stage (tests).
+    pub fn steps_in_stage(&self) -> u64 {
+        self.steps_in_stage
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Access a column (tests / parity checks).
+    pub fn column(&self, stage: usize, k: usize) -> &LstmColumn {
+        &self.stages[stage].columns[k]
+    }
+}
+
+impl PredictionNet for CcnNet {
+    fn n_features(&self) -> usize {
+        self.d()
+    }
+
+    fn advance(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.cfg.n_inputs);
+        let n = self.cfg.n_inputs;
+        self.xbuf[..n].copy_from_slice(x);
+        let mut feat_off = 0; // offset into self.feats / xbuf past raw input
+        let n_stages = self.stages.len();
+        for s in 0..n_stages {
+            let learning = s == self.learning_stage && !self.frozen_forever;
+            let stage = &mut self.stages[s];
+            let width = stage.columns.len();
+            let input = &self.xbuf[..stage.m];
+            for (k, col) in stage.columns.iter_mut().enumerate() {
+                if learning {
+                    col.step_with_traces(input);
+                } else {
+                    col.step_forward_only(input);
+                }
+                stage.raw[k] = col.h;
+            }
+            // normalize this stage's fresh features and expose them both
+            // to the readout (feats) and to later stages (xbuf).
+            let out = &mut self.feats[feat_off..feat_off + width];
+            stage.normalizer.update_and_normalize(&stage.raw, out);
+            self.xbuf[n + feat_off..n + feat_off + width].copy_from_slice(out);
+            feat_off += width;
+        }
+    }
+
+    fn features(&self) -> &[f32] {
+        &self.feats
+    }
+
+    fn n_learnable_params(&self) -> usize {
+        if self.frozen_forever {
+            return 0;
+        }
+        let st = self.learning();
+        st.columns.len() * LstmColumn::n_params(st.m)
+    }
+
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
+        debug_assert_eq!(w_out.len(), self.d());
+        if self.frozen_forever {
+            return;
+        }
+        let st = self.learning();
+        let per = LstmColumn::n_params(st.m);
+        let feat_base = self.cfg.features_per_stage * self.learning_stage;
+        for (k, col) in st.columns.iter().enumerate() {
+            // y = sum w_g * (h_g - mu_g)/denom_g  =>
+            // dy/dtheta_k = w_k / denom_k * TH_theta_k
+            let scale = w_out[feat_base + k] / st.normalizer.denom(k);
+            col.write_grad(scale, &mut grad[k * per..(k + 1) * per]);
+        }
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) {
+        if self.frozen_forever {
+            return;
+        }
+        let st = &mut self.stages[self.learning_stage];
+        let per = LstmColumn::n_params(st.m);
+        for (k, col) in st.columns.iter_mut().enumerate() {
+            col.apply_update(&delta[k * per..(k + 1) * per]);
+        }
+    }
+
+    fn param_epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn end_step(&mut self) {
+        self.steps_in_stage += 1;
+        if self.steps_in_stage >= self.cfg.steps_per_stage && !self.frozen_forever {
+            let materialized = self.d();
+            if materialized < self.cfg.total_features {
+                self.push_stage();
+            } else {
+                // every feature frozen: the net stops adapting its
+                // recurrent parameters (readout keeps learning) — the
+                // plasticity-loss regime Section 6 discusses.
+                self.frozen_forever = true;
+                self.epoch += 1;
+            }
+        }
+    }
+
+    fn flops_per_step(&self) -> u64 {
+        let d = self.d() as u64;
+        let n = self.cfg.n_inputs as u64;
+        let u = self.learning().columns.len() as u64;
+        if self.stages.len() == 1 && self.cfg.steps_per_stage == u64::MAX {
+            compute::columnar_ops(d, n)
+        } else {
+            compute::ccn_ops(d, n, u)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.cfg.steps_per_stage == u64::MAX {
+            "columnar"
+        } else if self.cfg.features_per_stage == 1 {
+            "constructive"
+        } else {
+            "ccn"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, prop_assert};
+
+    fn tiny_cfg() -> CcnConfig {
+        CcnConfig {
+            n_inputs: 3,
+            total_features: 6,
+            features_per_stage: 2,
+            steps_per_stage: 50,
+            init_scale: 0.5,
+            norm_eps: 0.01,
+            norm_beta: 0.999,
+        }
+    }
+
+    fn drive(net: &mut CcnNet, steps: usize, seed: u64) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n = net.cfg.n_inputs;
+        for _ in 0..steps {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            net.end_step();
+        }
+    }
+
+    #[test]
+    fn stages_materialize_on_schedule() {
+        let mut net = CcnNet::new(tiny_cfg(), 0);
+        assert_eq!(net.n_features(), 2);
+        assert_eq!(net.n_stages(), 1);
+        drive(&mut net, 50, 1);
+        assert_eq!(net.n_stages(), 2, "stage 2 after steps_per_stage");
+        assert_eq!(net.n_features(), 4);
+        drive(&mut net, 50, 2);
+        assert_eq!(net.n_stages(), 3);
+        assert_eq!(net.n_features(), 6);
+        // all features materialized; next boundary freezes everything
+        drive(&mut net, 50, 3);
+        assert_eq!(net.n_stages(), 3);
+        assert_eq!(net.n_learnable_params(), 0);
+    }
+
+    #[test]
+    fn stage_input_widths_grow() {
+        let mut net = CcnNet::new(tiny_cfg(), 0);
+        drive(&mut net, 120, 1);
+        assert_eq!(net.stages[0].m, 3);
+        assert_eq!(net.stages[1].m, 5);
+        assert_eq!(net.stages[2].m, 7);
+    }
+
+    #[test]
+    fn frozen_parameters_never_change() {
+        let mut net = CcnNet::new(tiny_cfg(), 7);
+        drive(&mut net, 60, 1); // stage 0 frozen now
+        let frozen = net.column(0, 0).params();
+        // keep learning with updates applied to the learning stage
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        for _ in 0..100 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            let np = net.n_learnable_params();
+            let delta: Vec<f32> = (0..np).map(|_| rng.uniform(-0.01, 0.01)).collect();
+            net.apply_update(&delta);
+            net.end_step();
+        }
+        assert_eq!(net.column(0, 0).params(), frozen, "frozen stage mutated");
+    }
+
+    #[test]
+    fn param_epoch_tracks_stage_transitions() {
+        let mut net = CcnNet::new(tiny_cfg(), 3);
+        let e0 = net.param_epoch();
+        drive(&mut net, 49, 1);
+        assert_eq!(net.param_epoch(), e0);
+        drive(&mut net, 1, 2);
+        assert_eq!(net.param_epoch(), e0 + 1);
+    }
+
+    #[test]
+    fn columnar_corner_never_freezes() {
+        let cfg = CcnConfig {
+            n_inputs: 4,
+            total_features: 5,
+            features_per_stage: 5,
+            steps_per_stage: u64::MAX,
+            init_scale: 0.5,
+            norm_eps: 0.01,
+            norm_beta: 0.999,
+        };
+        let mut net = CcnNet::new(cfg, 0);
+        assert_eq!(net.name(), "columnar");
+        drive(&mut net, 5000, 1);
+        assert_eq!(net.n_stages(), 1);
+        assert!(net.n_learnable_params() > 0);
+    }
+
+    #[test]
+    fn column_independence_within_stage() {
+        // perturbing one learning column's parameters must not affect the
+        // features of its siblings (paper Section 3.1's structural claim).
+        let cfg = tiny_cfg();
+        let mut a = CcnNet::new(cfg.clone(), 5);
+        let mut b = CcnNet::new(cfg, 5);
+        // perturb column 1 of the learning stage in b only
+        let np = b.n_learnable_params();
+        let per = np / 2;
+        let mut delta = vec![0.0; np];
+        for v in delta[per..].iter_mut() {
+            *v = 0.1;
+        }
+        b.apply_update(&delta);
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            a.advance(&x);
+            b.advance(&x);
+            // feature 0 (column 0 of stage 0) must be identical
+            assert_eq!(a.features()[0], b.features()[0]);
+            // feature 1 must differ at some point (checked after loop)
+        }
+        assert_ne!(a.features()[1], b.features()[1]);
+    }
+
+    #[test]
+    fn grad_reflects_normalizer_denominator() {
+        let mut net = CcnNet::new(tiny_cfg(), 13);
+        drive(&mut net, 10, 1);
+        let d = net.n_features();
+        let w = vec![1.0; d];
+        let mut g1 = vec![0.0; net.n_learnable_params()];
+        net.grad_y(&w, &mut g1);
+        // doubling w doubles the gradient
+        let w2 = vec![2.0; d];
+        let mut g2 = vec![0.0; net.n_learnable_params()];
+        net.grad_y(&w2, &mut g2);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((2.0 * a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_feats_finite_and_bounded() {
+        check("ccn features bounded", 10, |g| {
+            let cfg = CcnConfig {
+                n_inputs: g.sized_usize(1, 5),
+                total_features: 4,
+                features_per_stage: g.usize_in(1, 4),
+                steps_per_stage: 30,
+                init_scale: 1.0,
+                norm_eps: 0.01,
+                norm_beta: 0.999,
+            };
+            let mut net = CcnNet::new(cfg.clone(), g.rng.next_u64());
+            let mut rng = Xoshiro256::seed_from_u64(g.rng.next_u64());
+            for _ in 0..200 {
+                let x: Vec<f32> =
+                    (0..cfg.n_inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                net.advance(&x);
+                net.end_step();
+                for &f in net.features() {
+                    prop_assert(
+                        f.is_finite() && f.abs() <= 2.0 / cfg.norm_eps,
+                        format!("feature {f}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

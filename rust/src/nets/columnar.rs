@@ -1,0 +1,61 @@
+//! Columnar networks (paper Section 3.1): one everlasting stage of
+//! independent single-unit LSTM columns, all learning simultaneously
+//! with exact per-column RTRL. Implemented as the never-freezing corner
+//! of [`super::ccn::CcnNet`]'s configuration space.
+
+use super::ccn::{CcnConfig, CcnNet};
+use super::normalizer::NORM_BETA;
+
+/// Build a columnar network of `d` columns over `n_inputs` inputs.
+pub fn columnar_net(n_inputs: usize, d: usize, eps: f32, seed: u64) -> CcnNet {
+    CcnNet::new(
+        CcnConfig {
+            n_inputs,
+            total_features: d,
+            features_per_stage: d,
+            steps_per_stage: u64::MAX,
+            init_scale: 1.0,
+            norm_eps: eps,
+            norm_beta: NORM_BETA,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::PredictionNet;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn columnar_has_all_features_immediately() {
+        let net = columnar_net(7, 5, 0.01, 0);
+        assert_eq!(net.n_features(), 5);
+        assert_eq!(net.name(), "columnar");
+        // 5 columns x (4*7 + 8) params each
+        assert_eq!(net.n_learnable_params(), 5 * 36);
+    }
+
+    #[test]
+    fn learns_forever() {
+        let mut net = columnar_net(3, 4, 0.01, 1);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..10_000 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(0.0, 1.0)).collect();
+            net.advance(&x);
+            net.end_step();
+        }
+        assert!(net.n_learnable_params() > 0);
+        assert_eq!(net.param_epoch(), 1, "no stage transitions ever");
+    }
+
+    #[test]
+    fn flops_match_appendix_formula() {
+        let net = columnar_net(7, 5, 0.01, 3);
+        assert_eq!(
+            net.flops_per_step(),
+            crate::compute::columnar_ops(5, 7)
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Constructive networks (paper Section 3.2): grow the recurrent network
+//! one feature at a time; the single learning unit sees the raw input
+//! plus every previously frozen feature, so deep hierarchical features
+//! emerge across stages. Implemented as the `features_per_stage = 1`
+//! corner of [`super::ccn::CcnNet`].
+
+use super::ccn::{CcnConfig, CcnNet};
+use super::normalizer::NORM_BETA;
+
+/// Build a constructive network growing to `total_features` features,
+/// advancing stages every `steps_per_stage` steps.
+pub fn constructive_net(
+    n_inputs: usize,
+    total_features: usize,
+    steps_per_stage: u64,
+    eps: f32,
+    seed: u64,
+) -> CcnNet {
+    CcnNet::new(
+        CcnConfig {
+            n_inputs,
+            total_features,
+            features_per_stage: 1,
+            steps_per_stage,
+            init_scale: 1.0,
+            norm_eps: eps,
+            norm_beta: NORM_BETA,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lstm_column::LstmColumn;
+    use crate::nets::PredictionNet;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn one_feature_at_a_time() {
+        let mut net = constructive_net(4, 3, 20, 0.01, 0);
+        assert_eq!(net.name(), "constructive");
+        assert_eq!(net.n_features(), 1);
+        // learnable = exactly one column over the raw input
+        assert_eq!(net.n_learnable_params(), LstmColumn::n_params(4));
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            net.end_step();
+        }
+        assert_eq!(net.n_features(), 2);
+        // second unit consumes raw input + 1 frozen feature
+        assert_eq!(net.n_learnable_params(), LstmColumn::n_params(5));
+    }
+
+    #[test]
+    fn uses_less_compute_than_columnar_same_size() {
+        // Section 3.2: "constructive networks use even less per-step
+        // computation than columnar networks".
+        let constructive = constructive_net(7, 10, 1000, 0.01, 0);
+        let columnar = super::super::columnar::columnar_net(7, 10, 0.01, 0);
+        assert!(constructive.flops_per_step() < columnar.flops_per_step());
+    }
+}

@@ -1,0 +1,372 @@
+//! A single LSTM *column*: scalar hidden state, forward-mode RTRL traces
+//! (paper Appendix B). This is the native-Rust twin of the Pallas kernel
+//! `python/compile/kernels/column_rtrl.py`; the math is the same fused
+//! affine-plus-rank-1 form (see the kernel's module docs for the
+//! derivation from the paper's per-gate equations) and the two are held
+//! in lockstep by the golden-file integration test.
+//!
+//! Parameter layout (flat, the order the whole repo uses):
+//!
+//! ```text
+//! [ W_i (m) | W_f (m) | W_o (m) | W_g (m) | u_i u_f u_o u_g | b_i b_f b_o b_g ]
+//! ```
+//!
+//! Per-parameter traces: TH_p = dh/dp and TC_p = dc/dp, stored in the
+//! same layout. A column with input width m has 4m + 8 parameters and
+//! 2(4m + 8) trace scalars.
+
+use crate::util::prng::Xoshiro256;
+use crate::util::sigmoid;
+
+pub const GATE_I: usize = 0;
+pub const GATE_F: usize = 1;
+pub const GATE_O: usize = 2;
+pub const GATE_G: usize = 3;
+
+#[derive(Clone, Debug)]
+pub struct LstmColumn {
+    pub m: usize,
+    /// input weights, [4 * m], gate-major (W_i then W_f, W_o, W_g)
+    pub w: Vec<f32>,
+    /// recurrent weights [u_i, u_f, u_o, u_g]
+    pub u: [f32; 4],
+    /// biases
+    pub b: [f32; 4],
+    /// hidden & cell state
+    pub h: f32,
+    pub c: f32,
+    /// dh/dW and dc/dW traces, [4 * m]
+    pub thw: Vec<f32>,
+    pub tcw: Vec<f32>,
+    /// dh/du, dc/du, dh/db, dc/db traces
+    pub thu: [f32; 4],
+    pub tcu: [f32; 4],
+    pub thb: [f32; 4],
+    pub tcb: [f32; 4],
+}
+
+impl LstmColumn {
+    /// Number of learnable parameters of one column.
+    pub fn n_params(m: usize) -> usize {
+        4 * m + 8
+    }
+
+    /// Random init: weights ~ U[-scale, scale], biases 0, state/traces 0.
+    pub fn new(m: usize, rng: &mut Xoshiro256, scale: f32) -> Self {
+        let w = (0..4 * m).map(|_| rng.uniform(-scale, scale)).collect();
+        let u = [
+            rng.uniform(-scale, scale),
+            rng.uniform(-scale, scale),
+            rng.uniform(-scale, scale),
+            rng.uniform(-scale, scale),
+        ];
+        Self {
+            m,
+            w,
+            u,
+            b: [0.0; 4],
+            h: 0.0,
+            c: 0.0,
+            thw: vec![0.0; 4 * m],
+            tcw: vec![0.0; 4 * m],
+            thu: [0.0; 4],
+            tcu: [0.0; 4],
+            thb: [0.0; 4],
+            tcb: [0.0; 4],
+        }
+    }
+
+    /// Reset state and traces (parameters untouched).
+    pub fn reset_state(&mut self) {
+        self.h = 0.0;
+        self.c = 0.0;
+        self.thw.iter_mut().for_each(|v| *v = 0.0);
+        self.tcw.iter_mut().for_each(|v| *v = 0.0);
+        self.thu = [0.0; 4];
+        self.tcu = [0.0; 4];
+        self.thb = [0.0; 4];
+        self.tcb = [0.0; 4];
+    }
+
+    /// Gate pre-activations and activations for input `x`.
+    ///
+    /// One fused pass over `x` computes all four dot products (4x fewer
+    /// loads of `x` than four separate `dot` calls — this is the hot
+    /// inner loop of the entire framework).
+    #[inline]
+    fn gates(&self, x: &[f32]) -> (f32, f32, f32, f32) {
+        let m = self.m;
+        debug_assert_eq!(x.len(), m);
+        let (wi, rest) = self.w.split_at(m);
+        let (wf, rest) = rest.split_at(m);
+        let (wo, wg) = rest.split_at(m);
+        let (mut zi, mut zf, mut zo, mut zg) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for j in 0..m {
+            let xj = x[j];
+            zi += wi[j] * xj;
+            zf += wf[j] * xj;
+            zo += wo[j] * xj;
+            zg += wg[j] * xj;
+        }
+        (
+            sigmoid(zi + self.u[GATE_I] * self.h + self.b[GATE_I]),
+            sigmoid(zf + self.u[GATE_F] * self.h + self.b[GATE_F]),
+            sigmoid(zo + self.u[GATE_O] * self.h + self.b[GATE_O]),
+            (zg + self.u[GATE_G] * self.h + self.b[GATE_G]).tanh(),
+        )
+    }
+
+    /// Forward + RTRL trace update (the learning-stage step).
+    pub fn step_with_traces(&mut self, x: &[f32]) {
+        let (i, f, o, g) = self.gates(x);
+        let c_prev = self.c;
+        let h_prev = self.h;
+        let c2 = f * c_prev + i * g;
+        let tanh_c2 = c2.tanh();
+        let h2 = o * tanh_c2;
+
+        let di = i * (1.0 - i);
+        let df = f * (1.0 - f);
+        let do_ = o * (1.0 - o);
+        let dg = 1.0 - g * g;
+
+        // fused trace-recursion coefficients (see kernel docs)
+        let a_coef = c_prev * df * self.u[GATE_F]
+            + i * dg * self.u[GATE_G]
+            + g * di * self.u[GATE_I];
+        let b_coef = tanh_c2 * do_ * self.u[GATE_O];
+        let e_coef = o * (1.0 - tanh_c2 * tanh_c2);
+        // per-gate direct coefficients into c' and h'
+        let q = [g * di, c_prev * df, 0.0, i * dg];
+        let r = [0.0, 0.0, tanh_c2 * do_, 0.0];
+
+        let m = self.m;
+        for a in 0..4 {
+            let (qa, ra) = (q[a], r[a]);
+            let base = a * m;
+            // W traces: direct term x_j. Iterator zips remove the bounds
+            // checks in this, the most-executed loop of the framework.
+            let tcw_row = &mut self.tcw[base..base + m];
+            let thw_row = &mut self.thw[base..base + m];
+            for ((tc_j, th_j), &xj) in
+                tcw_row.iter_mut().zip(thw_row.iter_mut()).zip(x.iter())
+            {
+                let th_prev = *th_j;
+                let tc = f * *tc_j + a_coef * th_prev + qa * xj;
+                *th_j = e_coef * tc + b_coef * th_prev + ra * xj;
+                *tc_j = tc;
+            }
+            // u traces: direct term h(t-1)
+            let tcu = f * self.tcu[a] + a_coef * self.thu[a] + qa * h_prev;
+            self.thu[a] = e_coef * tcu + b_coef * self.thu[a] + ra * h_prev;
+            self.tcu[a] = tcu;
+            // b traces: direct term 1
+            let tcb = f * self.tcb[a] + a_coef * self.thb[a] + qa;
+            self.thb[a] = e_coef * tcb + b_coef * self.thb[a] + ra;
+            self.tcb[a] = tcb;
+        }
+
+        self.c = c2;
+        self.h = h2;
+    }
+
+    /// Forward only (frozen column — no trace bookkeeping).
+    pub fn step_forward_only(&mut self, x: &[f32]) {
+        let (i, f, o, g) = self.gates(x);
+        self.c = f * self.c + i * g;
+        self.h = o * self.c.tanh();
+    }
+
+    /// Write `scale * TH_p` for every parameter p into `out`
+    /// (out.len() == n_params). Used for dy/dtheta = w_k/denom_k * TH.
+    pub fn write_grad(&self, scale: f32, out: &mut [f32]) {
+        let m = self.m;
+        debug_assert_eq!(out.len(), Self::n_params(m));
+        for (dst, &src) in out[..4 * m].iter_mut().zip(self.thw.iter()) {
+            *dst = scale * src;
+        }
+        for a in 0..4 {
+            out[4 * m + a] = scale * self.thu[a];
+            out[4 * m + 4 + a] = scale * self.thb[a];
+        }
+    }
+
+    /// theta += delta, same flat layout.
+    pub fn apply_update(&mut self, delta: &[f32]) {
+        let m = self.m;
+        debug_assert_eq!(delta.len(), Self::n_params(m));
+        for (w, &d) in self.w.iter_mut().zip(delta[..4 * m].iter()) {
+            *w += d;
+        }
+        for a in 0..4 {
+            self.u[a] += delta[4 * m + a];
+            self.b[a] += delta[4 * m + 4 + a];
+        }
+    }
+
+    /// Copy a flat parameter vector in (tests / parity checks).
+    pub fn set_params(&mut self, params: &[f32]) {
+        let m = self.m;
+        assert_eq!(params.len(), Self::n_params(m));
+        self.w.copy_from_slice(&params[..4 * m]);
+        for a in 0..4 {
+            self.u[a] = params[4 * m + a];
+            self.b[a] = params[4 * m + 4 + a];
+        }
+    }
+
+    pub fn params(&self) -> Vec<f32> {
+        let mut out = self.w.clone();
+        out.extend_from_slice(&self.u);
+        out.extend_from_slice(&self.b);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, prop_close};
+
+    fn run_sequence(col: &mut LstmColumn, xs: &[Vec<f32>], traces: bool) -> f32 {
+        for x in xs {
+            if traces {
+                col.step_with_traces(x);
+            } else {
+                col.step_forward_only(x);
+            }
+        }
+        col.h
+    }
+
+    /// Central finite difference of h_T w.r.t. parameter `p_idx`.
+    fn fd_grad(
+        base: &LstmColumn,
+        xs: &[Vec<f32>],
+        p_idx: usize,
+        eps: f32,
+    ) -> f32 {
+        let mut params = base.params();
+        params[p_idx] += eps;
+        let mut plus = base.clone();
+        plus.set_params(&params);
+        plus.reset_state();
+        let hp = run_sequence(&mut plus, xs, false);
+
+        params[p_idx] -= 2.0 * eps;
+        let mut minus = base.clone();
+        minus.set_params(&params);
+        minus.reset_state();
+        let hm = run_sequence(&mut minus, xs, false);
+        (hp - hm) / (2.0 * eps)
+    }
+
+    #[test]
+    fn traces_match_finite_differences() {
+        let m = 5;
+        let t_len = 12;
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let mut col = LstmColumn::new(m, &mut rng, 0.8);
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let mut live = col.clone();
+        run_sequence(&mut live, &xs, true);
+
+        let n_params = LstmColumn::n_params(m);
+        let mut grad = vec![0.0; n_params];
+        live.write_grad(1.0, &mut grad);
+        for p in 0..n_params {
+            let fd = fd_grad(&col, &xs, p, 1e-3);
+            assert!(
+                (grad[p] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+                "param {p}: trace {} vs fd {fd}",
+                grad[p]
+            );
+        }
+    }
+
+    #[test]
+    fn forward_only_matches_traced_forward() {
+        let m = 7;
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let col = LstmColumn::new(m, &mut rng, 0.6);
+        let mut a = col.clone();
+        let mut b = col.clone();
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            a.step_with_traces(&x);
+            b.step_forward_only(&x);
+            assert_eq!(a.h, b.h, "freezing must not change the forward pass");
+            assert_eq!(a.c, b.c);
+        }
+    }
+
+    #[test]
+    fn zero_input_keeps_w_traces_zero() {
+        let m = 4;
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut col = LstmColumn::new(m, &mut rng, 0.5);
+        let x = vec![0.0; m];
+        for _ in 0..10 {
+            col.step_with_traces(&x);
+        }
+        assert!(col.thw.iter().all(|&v| v == 0.0));
+        assert!(col.thb.iter().any(|&v| v.abs() > 1e-6), "bias traces flow");
+    }
+
+    #[test]
+    fn saturated_gates_stay_finite() {
+        let m = 3;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut col = LstmColumn::new(m, &mut rng, 0.5);
+        for w in col.w.iter_mut() {
+            *w = 80.0;
+        }
+        col.b = [80.0; 4];
+        let x = vec![1.0; m];
+        for _ in 0..20 {
+            col.step_with_traces(&x);
+            assert!(col.h.is_finite() && col.c.is_finite());
+            assert!(col.thw.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn apply_update_roundtrip() {
+        let m = 4;
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut col = LstmColumn::new(m, &mut rng, 0.5);
+        let before = col.params();
+        let delta: Vec<f32> = (0..LstmColumn::n_params(m))
+            .map(|i| i as f32 * 0.01)
+            .collect();
+        col.apply_update(&delta);
+        let after = col.params();
+        for i in 0..before.len() {
+            assert!((after[i] - before[i] - delta[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_traces_bounded_for_bounded_inputs() {
+        // LSTM gates are contractive for moderate recurrent weights: with
+        // |u| <= 0.5 the traces must not blow up over long horizons.
+        check("column traces bounded", 10, |g| {
+            let m = g.sized_usize(1, 8);
+            let mut rng = Xoshiro256::seed_from_u64(g.rng.next_u64());
+            let mut col = LstmColumn::new(m, &mut rng, 0.5);
+            for _ in 0..2000 {
+                let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                col.step_with_traces(&x);
+            }
+            for &v in col.thw.iter() {
+                prop_close(v.clamp(-1e4, 1e4), v, 0.0, "trace magnitude")?;
+                if !v.is_finite() || v.abs() > 1e4 {
+                    return Err(format!("trace exploded: {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

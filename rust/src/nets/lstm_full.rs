@@ -1,0 +1,358 @@
+//! Fully connected LSTM cell (the T-BPTT comparator's network).
+//!
+//! Parameter layout (flat, gate-major then unit):
+//!
+//! ```text
+//! [ Wx (4*d*n) | Wh (4*d*d) | b (4*d) ]
+//! ```
+//!
+//! with gates ordered i, f, o, g, matching the column layout. The step
+//! returns a [`StepRecord`] holding everything BPTT needs to run the
+//! backward pass later.
+
+use crate::util::prng::Xoshiro256;
+use crate::util::{dot, sigmoid};
+
+pub const GATE_I: usize = 0;
+pub const GATE_F: usize = 1;
+pub const GATE_O: usize = 2;
+pub const GATE_G: usize = 3;
+
+#[derive(Clone, Debug)]
+pub struct LstmFull {
+    pub n: usize,
+    pub d: usize,
+    /// input weights [4 * d * n]: wx[a*d*n + j*n + i]
+    pub wx: Vec<f32>,
+    /// recurrent weights [4 * d * d]: wh[a*d*d + j*d + k]
+    pub wh: Vec<f32>,
+    /// biases [4 * d]
+    pub b: Vec<f32>,
+    pub h: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+/// Everything the backward pass needs about one step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub x: Vec<f32>,
+    pub h_prev: Vec<f32>,
+    pub c_prev: Vec<f32>,
+    pub i: Vec<f32>,
+    pub f: Vec<f32>,
+    pub o: Vec<f32>,
+    pub g: Vec<f32>,
+    pub c: Vec<f32>,
+}
+
+impl StepRecord {
+    pub fn zeroed(n: usize, d: usize) -> Self {
+        Self {
+            x: vec![0.0; n],
+            h_prev: vec![0.0; d],
+            c_prev: vec![0.0; d],
+            i: vec![0.0; d],
+            f: vec![0.0; d],
+            o: vec![0.0; d],
+            g: vec![0.0; d],
+            c: vec![0.0; d],
+        }
+    }
+
+    fn resize(&mut self, n: usize, d: usize) {
+        self.x.resize(n, 0.0);
+        for v in [
+            &mut self.h_prev,
+            &mut self.c_prev,
+            &mut self.i,
+            &mut self.f,
+            &mut self.o,
+            &mut self.g,
+            &mut self.c,
+        ] {
+            v.resize(d, 0.0);
+        }
+    }
+}
+
+impl LstmFull {
+    pub fn n_params(n: usize, d: usize) -> usize {
+        4 * d * n + 4 * d * d + 4 * d
+    }
+
+    pub fn new(n: usize, d: usize, rng: &mut Xoshiro256, scale: f32) -> Self {
+        Self {
+            n,
+            d,
+            wx: (0..4 * d * n).map(|_| rng.uniform(-scale, scale)).collect(),
+            wh: (0..4 * d * d).map(|_| rng.uniform(-scale, scale)).collect(),
+            b: vec![0.0; 4 * d],
+            h: vec![0.0; d],
+            c: vec![0.0; d],
+        }
+    }
+
+    /// One forward step; records the activations for BPTT.
+    pub fn step(&mut self, x: &[f32]) -> StepRecord {
+        let mut rec = StepRecord::zeroed(self.n, self.d);
+        self.step_into_record(x, &mut rec);
+        rec
+    }
+
+    /// Forward step writing into a caller-owned record — the hot path;
+    /// lets [`super::tbptt::TbpttNet`] keep a preallocated ring buffer
+    /// with zero per-step allocation.
+    pub fn step_into_record(&mut self, x: &[f32], rec: &mut StepRecord) {
+        let (n, d) = (self.n, self.d);
+        debug_assert_eq!(x.len(), n);
+        rec.resize(n, d);
+        rec.x.copy_from_slice(x);
+        rec.h_prev.copy_from_slice(&self.h);
+        rec.c_prev.copy_from_slice(&self.c);
+        for j in 0..d {
+            let zi = dot(&self.wx[(GATE_I * d + j) * n..(GATE_I * d + j + 1) * n], x)
+                + dot(&self.wh[(GATE_I * d + j) * d..(GATE_I * d + j + 1) * d], &rec.h_prev)
+                + self.b[GATE_I * d + j];
+            let zf = dot(&self.wx[(GATE_F * d + j) * n..(GATE_F * d + j + 1) * n], x)
+                + dot(&self.wh[(GATE_F * d + j) * d..(GATE_F * d + j + 1) * d], &rec.h_prev)
+                + self.b[GATE_F * d + j];
+            let zo = dot(&self.wx[(GATE_O * d + j) * n..(GATE_O * d + j + 1) * n], x)
+                + dot(&self.wh[(GATE_O * d + j) * d..(GATE_O * d + j + 1) * d], &rec.h_prev)
+                + self.b[GATE_O * d + j];
+            let zg = dot(&self.wx[(GATE_G * d + j) * n..(GATE_G * d + j + 1) * n], x)
+                + dot(&self.wh[(GATE_G * d + j) * d..(GATE_G * d + j + 1) * d], &rec.h_prev)
+                + self.b[GATE_G * d + j];
+            let (i, f, o, g) = (sigmoid(zi), sigmoid(zf), sigmoid(zo), zg.tanh());
+            rec.i[j] = i;
+            rec.f[j] = f;
+            rec.o[j] = o;
+            rec.g[j] = g;
+            self.c[j] = f * rec.c_prev[j] + i * g;
+            self.h[j] = o * self.c[j].tanh();
+        }
+        rec.c.copy_from_slice(&self.c);
+    }
+
+    /// theta += delta (flat layout above).
+    pub fn apply_update(&mut self, delta: &[f32]) {
+        let (n, d) = (self.n, self.d);
+        debug_assert_eq!(delta.len(), Self::n_params(n, d));
+        let (dwx, rest) = delta.split_at(4 * d * n);
+        let (dwh, db) = rest.split_at(4 * d * d);
+        for (w, &dv) in self.wx.iter_mut().zip(dwx) {
+            *w += dv;
+        }
+        for (w, &dv) in self.wh.iter_mut().zip(dwh) {
+            *w += dv;
+        }
+        for (w, &dv) in self.b.iter_mut().zip(db) {
+            *w += dv;
+        }
+    }
+
+    pub fn params(&self) -> Vec<f32> {
+        let mut out = self.wx.clone();
+        out.extend_from_slice(&self.wh);
+        out.extend_from_slice(&self.b);
+        out
+    }
+
+    pub fn set_params(&mut self, p: &[f32]) {
+        let (n, d) = (self.n, self.d);
+        assert_eq!(p.len(), Self::n_params(n, d));
+        self.wx.copy_from_slice(&p[..4 * d * n]);
+        self.wh
+            .copy_from_slice(&p[4 * d * n..4 * d * n + 4 * d * d]);
+        self.b.copy_from_slice(&p[4 * d * n + 4 * d * d..]);
+    }
+
+    pub fn reset_state(&mut self) {
+        self.h.iter_mut().for_each(|v| *v = 0.0);
+        self.c.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Backward pass over `records` (oldest..newest) for dy/dtheta where
+    /// dy/dh_final = `dh_final`. Accumulates into `grad` (flat layout).
+    /// This is truncated BPTT when `records` holds only the last k steps.
+    pub fn bptt_grad(&self, records: &[StepRecord], dh_final: &[f32], grad: &mut [f32]) {
+        self.bptt_grad_rev(records.iter().rev(), dh_final, grad)
+    }
+
+    /// Same as [`LstmFull::bptt_grad`] but takes the records already in
+    /// reverse (newest-first) order — lets callers with ring buffers avoid
+    /// cloning the window every step (the per-step hot path).
+    pub fn bptt_grad_rev<'a, I>(&self, records_rev: I, dh_final: &[f32], grad: &mut [f32])
+    where
+        I: Iterator<Item = &'a StepRecord>,
+    {
+        let (n, d) = (self.n, self.d);
+        debug_assert_eq!(grad.len(), Self::n_params(n, d));
+        grad.iter_mut().for_each(|v| *v = 0.0);
+        let mut dh = dh_final.to_vec();
+        let mut dc = vec![0.0f32; d];
+        let (gwx, rest) = grad.split_at_mut(4 * d * n);
+        let (gwh, gb) = rest.split_at_mut(4 * d * d);
+        let mut dh_prev = vec![0.0f32; d];
+        let mut dz = vec![0.0f32; 4 * d];
+        for rec in records_rev {
+            for j in 0..d {
+                let tanh_c = rec.c[j].tanh();
+                // h = o * tanh(c)
+                let do_ = dh[j] * tanh_c;
+                let dcj = dc[j] + dh[j] * rec.o[j] * (1.0 - tanh_c * tanh_c);
+                // c = f*c_prev + i*g
+                let di = dcj * rec.g[j];
+                let dg = dcj * rec.i[j];
+                let df = dcj * rec.c_prev[j];
+                dz[GATE_I * d + j] = di * rec.i[j] * (1.0 - rec.i[j]);
+                dz[GATE_F * d + j] = df * rec.f[j] * (1.0 - rec.f[j]);
+                dz[GATE_O * d + j] = do_ * rec.o[j] * (1.0 - rec.o[j]);
+                dz[GATE_G * d + j] = dg * (1.0 - rec.g[j] * rec.g[j]);
+                dc[j] = dcj * rec.f[j]; // dc_prev
+            }
+            dh_prev.iter_mut().for_each(|v| *v = 0.0);
+            for a in 0..4 {
+                for j in 0..d {
+                    let dzv = dz[a * d + j];
+                    if dzv == 0.0 {
+                        continue;
+                    }
+                    let row = (a * d + j) * n;
+                    crate::util::axpy(dzv, &rec.x, &mut gwx[row..row + n]);
+                    let rrow = (a * d + j) * d;
+                    crate::util::axpy(dzv, &rec.h_prev, &mut gwh[rrow..rrow + d]);
+                    gb[a * d + j] += dzv;
+                    // dh_prev += wh_row * dz
+                    for k in 0..d {
+                        dh_prev[k] += dzv * self.wh[rrow + k];
+                    }
+                }
+            }
+            std::mem::swap(&mut dh, &mut dh_prev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(full: &mut LstmFull, xs: &[Vec<f32>]) -> Vec<StepRecord> {
+        xs.iter().map(|x| full.step(x)).collect()
+    }
+
+    #[test]
+    fn bptt_full_window_matches_finite_differences() {
+        let (n, d, t_len) = (3, 4, 8);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let base = LstmFull::new(n, d, &mut rng, 0.6);
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let w_out: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+
+        let mut live = base.clone();
+        let records = run(&mut live, &xs);
+        let mut grad = vec![0.0; LstmFull::n_params(n, d)];
+        live.bptt_grad(&records, &w_out, &mut grad);
+
+        let y_of = |params: &[f32]| -> f32 {
+            let mut net = base.clone();
+            net.set_params(params);
+            net.reset_state();
+            for x in &xs {
+                net.step(x);
+            }
+            dot(&w_out, &net.h)
+        };
+        let p0 = base.params();
+        let eps = 1e-3;
+        for p in (0..p0.len()).step_by(7) {
+            let mut pp = p0.clone();
+            pp[p] += eps;
+            let yp = y_of(&pp);
+            pp[p] -= 2.0 * eps;
+            let ym = y_of(&pp);
+            let fd = (yp - ym) / (2.0 * eps);
+            assert!(
+                (grad[p] - fd).abs() < 2e-3 * (1.0 + fd.abs()),
+                "param {p}: bptt {} vs fd {fd}",
+                grad[p]
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_window_ignores_older_inputs() {
+        // with window k, changing an input older than k steps must not
+        // change the truncated gradient *through the recorded window*
+        // (the records capture h_prev as data).
+        let (n, d) = (2, 3);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut net = LstmFull::new(n, d, &mut rng, 0.6);
+        let xs: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let records = run(&mut net, &xs);
+        let w_out = vec![1.0; d];
+        let k = 4;
+        let mut grad_trunc = vec![0.0; LstmFull::n_params(n, d)];
+        net.bptt_grad(&records[10 - k..], &w_out, &mut grad_trunc);
+        let mut grad_full = vec![0.0; LstmFull::n_params(n, d)];
+        net.bptt_grad(&records, &w_out, &mut grad_full);
+        // truncation must actually change the gradient (bias exists)
+        let diff: f32 = grad_trunc
+            .iter()
+            .zip(&grad_full)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-4, "truncated == full would mean no bias to study");
+    }
+
+    #[test]
+    fn single_unit_full_lstm_matches_column_rtrl() {
+        // The paper checked its trace equations against BPTT; we replicate:
+        // a d=1 fully connected LSTM is exactly one column, so untruncated
+        // BPTT's dy/dtheta must equal the column's RTRL traces.
+        use crate::nets::lstm_column::LstmColumn;
+        let n = 4;
+        let t_len = 15;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut full = LstmFull::new(n, 1, &mut rng, 0.7);
+        // build the equivalent column: W rows = wx rows, u = wh, b = b
+        let mut col = LstmColumn::new(n, &mut rng, 0.1);
+        let mut params = Vec::new();
+        params.extend_from_slice(&full.wx); // 4*n, gate-major = column W
+        for a in 0..4 {
+            // u_a
+            params.push(full.wh[a]);
+        }
+        for a in 0..4 {
+            params.push(full.b[a]);
+        }
+        col.set_params(&params);
+
+        let xs: Vec<Vec<f32>> = (0..t_len)
+            .map(|_| (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let records = run(&mut full, &xs);
+        for x in &xs {
+            col.step_with_traces(x);
+        }
+        assert!((full.h[0] - col.h).abs() < 1e-5, "forward passes agree");
+
+        let mut bptt = vec![0.0; LstmFull::n_params(n, 1)];
+        full.bptt_grad(&records, &[1.0], &mut bptt);
+        let mut rtrl = vec![0.0; LstmColumn::n_params(n)];
+        col.write_grad(1.0, &mut rtrl);
+        // layouts: bptt = [wx(4n) | wh(4) | b(4)], rtrl = [W(4n) | u(4) | b(4)]
+        for p in 0..rtrl.len() {
+            assert!(
+                (bptt[p] - rtrl[p]).abs() < 1e-4 * (1.0 + bptt[p].abs()),
+                "param {p}: bptt {} vs rtrl {}",
+                bptt[p],
+                rtrl[p]
+            );
+        }
+    }
+}

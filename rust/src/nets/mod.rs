@@ -1,0 +1,69 @@
+//! Recurrent feature networks (paper Section 3).
+//!
+//! All learners expose the same [`PredictionNet`] interface so the
+//! TD(lambda) agent in [`crate::learn`] is architecture-agnostic:
+//!
+//! - [`ccn::CcnNet`] — the paper's contribution: staged, columnar,
+//!   RTRL-trained. Columnar networks and Constructive networks are the
+//!   two degenerate corners of its configuration space
+//!   ([`columnar::columnar_net`], [`constructive::constructive_net`]).
+//! - [`tbptt::TbpttNet`] — the main comparator: fully connected LSTM
+//!   trained with truncated BPTT.
+//! - [`snap1::Snap1Net`] — the related-work baseline: SnAp-1 / diagonal
+//!   RTRL on a fully connected LSTM.
+//!
+//! [`lstm_column::LstmColumn`] holds the Appendix-B forward-mode trace
+//! math; [`normalizer::OnlineNormalizer`] the Section-3.4 feature
+//! normalization.
+
+pub mod ccn;
+pub mod columnar;
+pub mod constructive;
+pub mod lstm_column;
+pub mod lstm_full;
+pub mod normalizer;
+pub mod snap1;
+pub mod tbptt;
+
+/// A recurrent feature network with per-step gradient estimates of its
+/// linear readout y = w . features().
+pub trait PredictionNet: Send {
+    /// Features currently exposed to the readout (may grow over time for
+    /// constructive nets; the agent zero-extends its weights).
+    fn n_features(&self) -> usize;
+
+    /// Advance the recurrent state with observation `x` and refresh
+    /// features() and the gradient bookkeeping.
+    fn advance(&mut self, x: &[f32]);
+
+    /// The (normalized, where applicable) feature vector after the last
+    /// `advance`; length n_features().
+    fn features(&self) -> &[f32];
+
+    /// Number of *currently learnable* network parameters (excludes the
+    /// readout weights, which the agent owns; excludes frozen stages).
+    fn n_learnable_params(&self) -> usize;
+
+    /// Write dy/dtheta for y = w_out . features() into `grad`
+    /// (len == n_learnable_params()).
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]);
+
+    /// theta += delta over the learnable parameters (same layout as
+    /// `grad_y`).
+    fn apply_update(&mut self, delta: &[f32]);
+
+    /// Monotone counter that increments whenever the identity of the
+    /// learnable parameter set changes (e.g. a CCN stage transition).
+    /// The agent resets its eligibility traces when it observes a change.
+    fn param_epoch(&self) -> u64 {
+        0
+    }
+
+    /// Hook called once per step after the TD update (stage clocks).
+    fn end_step(&mut self) {}
+
+    /// Estimated per-step operation count (Appendix-A accounting).
+    fn flops_per_step(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+}

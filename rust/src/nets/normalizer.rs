@@ -1,0 +1,167 @@
+//! Online feature normalization (paper Section 3.4, eq. 10).
+//!
+//! Features in constructive/CCN networks have varying fan-in, so their
+//! scales differ; normalizing each to zero mean / unit variance with an
+//! epsilon-floored denominator lets one step-size work for all of them.
+//!
+//! ```text
+//! mu_t      = beta mu_{t-1} + (1 - beta) f_t
+//! sigma^2_t = beta sigma^2_{t-1} + (1-beta)(mu_t - f_t)(mu_{t-1} - f_t)
+//! f_hat     = (f - mu) / max(eps, sigma)
+//! ```
+//!
+//! beta = 0.99999 in all the paper's experiments; eps is tuned in
+//! {0.1, 0.01, 0.001}.
+
+/// Paper's beta for all experiments.
+pub const NORM_BETA: f32 = 0.99999;
+
+#[derive(Clone, Debug)]
+pub struct OnlineNormalizer {
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    denom: Vec<f32>,
+    beta: f32,
+    eps: f32,
+}
+
+impl OnlineNormalizer {
+    /// mu starts at 0, sigma^2 at 1 (paper's initialization).
+    pub fn new(n: usize, beta: f32, eps: f32) -> Self {
+        Self {
+            mu: vec![0.0; n],
+            var: vec![1.0; n],
+            denom: vec![1.0; n],
+            beta,
+            eps,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mu.is_empty()
+    }
+
+    /// Add `extra` fresh features (CCN growth): stats start at (0, 1).
+    pub fn grow(&mut self, extra: usize) {
+        self.mu.extend(std::iter::repeat(0.0).take(extra));
+        self.var.extend(std::iter::repeat(1.0).take(extra));
+        self.denom.extend(std::iter::repeat(1.0).take(extra));
+    }
+
+    /// Update running stats with raw features `f` and write the normalized
+    /// values into `out`. `f.len()` may be <= len() (CCN updates only the
+    /// materialized prefix).
+    pub fn update_and_normalize(&mut self, f: &[f32], out: &mut [f32]) {
+        debug_assert!(f.len() <= self.mu.len());
+        debug_assert_eq!(f.len(), out.len());
+        let beta = self.beta;
+        for k in 0..f.len() {
+            let prev_mu = self.mu[k];
+            let mu = beta * prev_mu + (1.0 - beta) * f[k];
+            let var =
+                beta * self.var[k] + (1.0 - beta) * (mu - f[k]) * (prev_mu - f[k]);
+            self.mu[k] = mu;
+            self.var[k] = var;
+            let d = self.eps.max(var.max(0.0).sqrt());
+            self.denom[k] = d;
+            out[k] = (f[k] - mu) / d;
+        }
+    }
+
+    /// Denominator max(eps, sigma_k) from the latest update — needed to
+    /// scale trace gradients: dy/dp = w_k / denom_k * TH_p.
+    #[inline]
+    pub fn denom(&self, k: usize) -> f32 {
+        self.denom[k]
+    }
+
+    pub fn eps(&self) -> f32 {
+        self.eps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, prop_assert};
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn matches_paper_recursion_by_hand() {
+        let mut n = OnlineNormalizer::new(1, 0.9, 0.01);
+        let mut out = [0.0];
+        n.update_and_normalize(&[3.0], &mut out);
+        // mu = 0.9*0 + 0.1*3 = 0.3
+        // var = 0.9*1 + 0.1*(0.3-3)(0-3) = 0.9 + 0.1*8.1 = 1.71
+        assert!((n.mu[0] - 0.3).abs() < 1e-6);
+        assert!((n.var[0] - 1.71).abs() < 1e-5);
+        let expect = (3.0 - 0.3) / 1.71f32.sqrt();
+        assert!((out[0] - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn converges_to_stream_moments() {
+        let mut n = OnlineNormalizer::new(1, 0.999, 0.01);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut out = [0.0];
+        for _ in 0..50_000 {
+            let f = 2.0 + 3.0 * rng.normal() as f32;
+            n.update_and_normalize(&[f], &mut out);
+        }
+        assert!((n.mu[0] - 2.0).abs() < 0.3, "mu {}", n.mu[0]);
+        assert!((n.var[0].sqrt() - 3.0).abs() < 0.5, "sigma {}", n.var[0].sqrt());
+    }
+
+    #[test]
+    fn eps_floor_bounds_output() {
+        // constant feature: variance collapses to ~0; the eps floor must
+        // keep outputs finite and small.
+        let mut n = OnlineNormalizer::new(1, 0.9, 0.1);
+        let mut out = [0.0];
+        for _ in 0..10_000 {
+            n.update_and_normalize(&[5.0], &mut out);
+            assert!(out[0].is_finite());
+        }
+        assert!(out[0].abs() < 1e-3, "normalized constant ~0: {}", out[0]);
+        assert!(n.denom(0) >= 0.1 - 1e-7);
+    }
+
+    #[test]
+    fn grow_preserves_existing_stats() {
+        let mut n = OnlineNormalizer::new(2, 0.9, 0.01);
+        let mut out = [0.0; 2];
+        for _ in 0..100 {
+            n.update_and_normalize(&[1.0, -1.0], &mut out);
+        }
+        let mu0 = n.mu[0];
+        n.grow(3);
+        assert_eq!(n.len(), 5);
+        assert_eq!(n.mu[0], mu0);
+        assert_eq!(n.var[3], 1.0);
+    }
+
+    #[test]
+    fn prop_normalized_bounded_by_eps_law() {
+        check("normalizer bound", 100, |g| {
+            let eps = *[0.1f32, 0.01, 0.001]
+                .get(g.usize_in(0, 2))
+                .unwrap();
+            let mut n = OnlineNormalizer::new(1, 0.99, eps);
+            let mut out = [0.0];
+            for _ in 0..200 {
+                let f = g.f32_in(-2.0, 2.0);
+                n.update_and_normalize(&[f], &mut out);
+                // |f - mu| <= 4 given the range; so |out| <= 4/eps.
+                prop_assert(
+                    out[0].abs() <= 4.0 / eps + 1e-3,
+                    format!("out {} eps {eps}", out[0]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,193 @@
+//! SnAp-1 / diagonal-RTRL baseline (Menick et al. 2021; discussed in the
+//! paper's related work as the "biased but cheap" alternative).
+//!
+//! For a fully connected LSTM, SnAp-1 keeps one trace per parameter but
+//! only through the hidden unit the parameter *directly* affects — all
+//! cross-unit influence (dh_k/dp for k != j(p)) is dropped. For unit j
+//! this is exactly the column trace recursion with input vector
+//! [x ; h_{t-1}] treated as data, and the unit's own recurrent diagonal
+//! Wh[a][j][j] playing the column's `u` role. We therefore implement each
+//! unit as an [`LstmColumn`] over the extended input with its own slot
+//! zeroed (the diagonal lives in `u`; the masked W entry is provably dead
+//! since its direct term is always zero).
+//!
+//! Unlike columnar networks, the *forward* network here is dense — the
+//! gradient, not the function class, is approximated. That is precisely
+//! the trade the paper argues against, and this net lets the benches
+//! show it.
+
+use super::lstm_column::LstmColumn;
+use super::PredictionNet;
+use crate::util::prng::Xoshiro256;
+
+pub struct Snap1Net {
+    n: usize,
+    d: usize,
+    units: Vec<LstmColumn>,
+    h_prev: Vec<f32>,
+    feats: Vec<f32>,
+    xbuf: Vec<f32>,
+}
+
+impl Snap1Net {
+    pub fn new(n_inputs: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x736e_6170); // "snap"
+        let m = n_inputs + d;
+        let mut units: Vec<LstmColumn> = (0..d)
+            .map(|_| LstmColumn::new(m, &mut rng, 1.0))
+            .collect();
+        // the masked diagonal W entries start (and stay) functionally dead;
+        // zero them so params() comparisons are clean.
+        for (j, u) in units.iter_mut().enumerate() {
+            for a in 0..4 {
+                u.w[a * m + n_inputs + j] = 0.0;
+            }
+        }
+        Self {
+            n: n_inputs,
+            d,
+            units,
+            h_prev: vec![0.0; d],
+            feats: vec![0.0; d],
+            xbuf: vec![0.0; m],
+        }
+    }
+}
+
+impl PredictionNet for Snap1Net {
+    fn n_features(&self) -> usize {
+        self.d
+    }
+
+    fn advance(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.n);
+        let n = self.n;
+        self.xbuf[..n].copy_from_slice(x);
+        self.xbuf[n..].copy_from_slice(&self.h_prev);
+        for (j, unit) in self.units.iter_mut().enumerate() {
+            // zero own slot: the unit's self-recurrence flows through `u`
+            let saved = self.xbuf[n + j];
+            self.xbuf[n + j] = 0.0;
+            unit.step_with_traces(&self.xbuf);
+            self.xbuf[n + j] = saved;
+            self.feats[j] = unit.h;
+        }
+        self.h_prev.copy_from_slice(&self.feats);
+    }
+
+    fn features(&self) -> &[f32] {
+        &self.feats
+    }
+
+    fn n_learnable_params(&self) -> usize {
+        self.d * LstmColumn::n_params(self.n + self.d)
+    }
+
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
+        let per = LstmColumn::n_params(self.n + self.d);
+        for (j, unit) in self.units.iter().enumerate() {
+            unit.write_grad(w_out[j], &mut grad[j * per..(j + 1) * per]);
+        }
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) {
+        let per = LstmColumn::n_params(self.n + self.d);
+        for (j, unit) in self.units.iter_mut().enumerate() {
+            unit.apply_update(&delta[j * per..(j + 1) * per]);
+        }
+    }
+
+    fn flops_per_step(&self) -> u64 {
+        // forward + ~6x trace bookkeeping over m = n + d inputs per unit
+        let m = (self.n + self.d) as u64;
+        7 * self.d as u64 * (4 * m + 8)
+    }
+
+    fn name(&self) -> &'static str {
+        "snap1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::lstm_full::LstmFull;
+
+    #[test]
+    fn forward_matches_dense_lstm() {
+        // the SnAp-1 approximation is in the gradient only; the forward
+        // dynamics must equal a fully connected LSTM with the same params.
+        let (n, d) = (3, 4);
+        let snap = Snap1Net::new(n, d, 0);
+        let mut dense = LstmFull::new(n, d, &mut Xoshiro256::seed_from_u64(99), 0.1);
+        // copy snap's params into the dense layout
+        let m = n + d;
+        for a in 0..4 {
+            for j in 0..d {
+                for i in 0..n {
+                    dense.wx[(a * d + j) * n + i] = snap.units[j].w[a * m + i];
+                }
+                for k in 0..d {
+                    dense.wh[(a * d + j) * d + k] = if k == j {
+                        snap.units[j].u[a]
+                    } else {
+                        snap.units[j].w[a * m + n + k]
+                    };
+                }
+                dense.b[a * d + j] = snap.units[j].b[a];
+            }
+        }
+        let mut snap = snap;
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            snap.advance(&x);
+            dense.step(&x);
+            for j in 0..d {
+                assert!(
+                    (snap.features()[j] - dense.h[j]).abs() < 1e-5,
+                    "unit {j}: {} vs {}",
+                    snap.features()[j],
+                    dense.h[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_diagonal_stays_dead() {
+        let (n, d) = (2, 3);
+        let mut snap = Snap1Net::new(n, d, 1);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            snap.advance(&x);
+            // the masked entries' traces never become nonzero
+            let m = n + d;
+            for (j, u) in snap.units.iter().enumerate() {
+                for a in 0..4 {
+                    assert_eq!(u.thw[a * m + n + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_is_biased_vs_full_bptt() {
+        // SnAp-1's whole point: cheaper but biased. Verify its gradient
+        // differs from untruncated BPTT on a dense network (if they were
+        // equal the approximation would be vacuous here).
+        let (n, d) = (2, 3);
+        let mut snap = Snap1Net::new(n, d, 3);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            snap.advance(&x);
+        }
+        let w_out = vec![1.0; d];
+        let mut g = vec![0.0; snap.n_learnable_params()];
+        snap.grad_y(&w_out, &mut g);
+        let nonzero = g.iter().filter(|v| v.abs() > 1e-9).count();
+        assert!(nonzero > 0, "snap gradient must be nonzero");
+    }
+}

@@ -1,0 +1,166 @@
+//! T-BPTT comparator (Williams & Peng 1990; the paper's main baseline).
+//!
+//! A fully connected LSTM whose prediction gradient dy_t/dtheta is
+//! computed every step by backpropagating through the last `k` recorded
+//! steps. Gradients are *biased*: dependencies longer than k are
+//! invisible (Figures 5, 6 and 11 quantify the cost of that bias). The
+//! per-step compute is (k+1) forward-equivalents (Appendix A).
+
+use super::lstm_full::{LstmFull, StepRecord};
+use super::PredictionNet;
+use crate::compute;
+use crate::util::prng::Xoshiro256;
+
+pub struct TbpttNet {
+    lstm: LstmFull,
+    /// preallocated ring of the last k step records (no per-step allocs):
+    /// `ring[(cursor - 1 - i).rem_euclid(k)]` is the i-th newest record.
+    ring: Vec<StepRecord>,
+    cursor: usize,
+    filled: usize,
+    k: usize,
+    feats: Vec<f32>,
+}
+
+impl TbpttNet {
+    pub fn new(n_inputs: usize, d: usize, k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x7470_7474); // "tptt"
+        Self {
+            lstm: LstmFull::new(n_inputs, d, &mut rng, 1.0),
+            ring: (0..k).map(|_| StepRecord::zeroed(n_inputs, d)).collect(),
+            cursor: 0,
+            filled: 0,
+            k,
+            feats: vec![0.0; d],
+        }
+    }
+
+    pub fn truncation(&self) -> usize {
+        self.k
+    }
+
+    /// Records newest-first (the order the backward pass consumes).
+    fn window_rev(&self) -> impl Iterator<Item = &StepRecord> {
+        let (head, tail) = self.ring.split_at(self.cursor);
+        head.iter()
+            .rev()
+            .chain(tail.iter().rev())
+            .take(self.filled)
+    }
+
+    #[cfg(test)]
+    fn window_len(&self) -> usize {
+        self.filled
+    }
+}
+
+impl PredictionNet for TbpttNet {
+    fn n_features(&self) -> usize {
+        self.lstm.d
+    }
+
+    fn advance(&mut self, x: &[f32]) {
+        // write into the ring slot in place — zero allocation per step
+        let slot = self.cursor;
+        // split borrow: lstm and ring are disjoint fields
+        let Self { lstm, ring, .. } = self;
+        lstm.step_into_record(x, &mut ring[slot]);
+        self.cursor = (self.cursor + 1) % self.k;
+        self.filled = (self.filled + 1).min(self.k);
+        self.feats.copy_from_slice(&self.lstm.h);
+    }
+
+    fn features(&self) -> &[f32] {
+        &self.feats
+    }
+
+    fn n_learnable_params(&self) -> usize {
+        LstmFull::n_params(self.lstm.n, self.lstm.d)
+    }
+
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
+        // newest-first walk over the ring buffer; no window clone
+        self.lstm.bptt_grad_rev(self.window_rev(), w_out, grad);
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) {
+        self.lstm.apply_update(delta);
+    }
+
+    fn flops_per_step(&self) -> u64 {
+        compute::tbptt_ops(self.lstm.d as u64, self.lstm.n as u64, self.k as u64)
+    }
+
+    fn name(&self) -> &'static str {
+        "tbptt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_is_bounded_by_k() {
+        let mut net = TbpttNet::new(3, 2, 5, 0);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for t in 0..20 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            assert_eq!(net.window_len(), (t + 1).min(5));
+        }
+    }
+
+    #[test]
+    fn ring_order_is_newest_first() {
+        let mut net = TbpttNet::new(1, 1, 3, 0);
+        for t in 0..7 {
+            net.advance(&[t as f32]);
+            let xs: Vec<f32> = net.window_rev().map(|r| r.x[0]).collect();
+            let want: Vec<f32> = (0..=t)
+                .rev()
+                .take(3)
+                .map(|v| v as f32)
+                .collect();
+            assert_eq!(xs, want, "at t={t}");
+        }
+    }
+
+    #[test]
+    fn grad_changes_with_truncation_window() {
+        let mk = |k: usize| {
+            let mut net = TbpttNet::new(2, 3, k, 9);
+            let mut rng = Xoshiro256::seed_from_u64(2);
+            for _ in 0..30 {
+                let x: Vec<f32> = (0..2).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                net.advance(&x);
+            }
+            let mut grad = vec![0.0; net.n_learnable_params()];
+            net.grad_y(&[0.5, -0.3, 0.9], &mut grad);
+            grad
+        };
+        let g2 = mk(2);
+        let g20 = mk(20);
+        let diff: f32 = g2.iter().zip(&g20).map(|(a, b)| (a - b).abs()).sum();
+        assert!(diff > 1e-4, "longer window must see more credit");
+    }
+
+    #[test]
+    fn flops_match_appendix() {
+        let net = TbpttNet::new(7, 2, 30, 0);
+        assert_eq!(net.flops_per_step(), compute::tbptt_ops(2, 7, 30));
+    }
+
+    #[test]
+    fn features_are_hidden_state() {
+        let mut net = TbpttNet::new(2, 4, 3, 5);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..2).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+        }
+        assert_eq!(net.features(), net.lstm.h.as_slice());
+        assert!(net.features().iter().all(|v| v.abs() <= 1.0));
+    }
+}

@@ -1,0 +1,191 @@
+//! Parsing of the AOT outputs' metadata: `manifest.json` (what was
+//! lowered, at which shapes, with which io orders) and `golden.json`
+//! (the cross-language numeric fixture).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    /// "step" (learning stage) or "fwd" (frozen stage)
+    pub kind: String,
+    pub n_cols: usize,
+    pub m: usize,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub eps: f32,
+    pub gate_order: String,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest: artifacts[]")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactInfo {
+                file: a.get("file").and_then(|x| x.as_str()).context("file")?.into(),
+                kind: a.get("kind").and_then(|x| x.as_str()).context("kind")?.into(),
+                n_cols: a.get("n_cols").and_then(|x| x.as_usize()).context("n_cols")?,
+                m: a.get("m").and_then(|x| x.as_usize()).context("m")?,
+                inputs: a
+                    .get("inputs")
+                    .and_then(|x| x.as_arr())
+                    .context("inputs")?
+                    .iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect(),
+                outputs: a
+                    .get("outputs")
+                    .and_then(|x| x.as_arr())
+                    .context("outputs")?
+                    .iter()
+                    .filter_map(|s| s.as_str().map(String::from))
+                    .collect(),
+            });
+        }
+        Ok(Self {
+            eps: v.get("eps").and_then(|x| x.as_f64()).context("eps")? as f32,
+            gate_order: v
+                .get("gate_order")
+                .and_then(|x| x.as_str())
+                .context("gate_order")?
+                .into(),
+            artifacts,
+        })
+    }
+}
+
+/// One tensor of the golden fixture.
+#[derive(Clone, Debug)]
+pub struct GoldenTensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenCase {
+    pub inputs: Vec<GoldenTensor>,
+    pub outputs: Vec<GoldenTensor>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub n_cols: usize,
+    pub m: usize,
+    pub eps: f32,
+    pub step: GoldenCase,
+    pub fwd: GoldenCase,
+}
+
+fn parse_tensors(v: &Json) -> Result<Vec<GoldenTensor>> {
+    v.as_arr()
+        .context("tensor list")?
+        .iter()
+        .map(|t| {
+            Ok(GoldenTensor {
+                shape: t
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .context("shape")?
+                    .iter()
+                    .filter_map(|x| x.as_f64().map(|f| f as i64))
+                    .collect(),
+                data: t
+                    .get("data")
+                    .and_then(|d| d.to_f32_vec())
+                    .context("data")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_case(v: &Json) -> Result<GoldenCase> {
+    Ok(GoldenCase {
+        inputs: parse_tensors(v.get("inputs").context("inputs")?)?,
+        outputs: parse_tensors(v.get("outputs").context("outputs")?)?,
+    })
+}
+
+impl Golden {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Ok(Self {
+            n_cols: v.get("n_cols").and_then(|x| x.as_usize()).context("n_cols")?,
+            m: v.get("m").and_then(|x| x.as_usize()).context("m")?,
+            eps: v.get("eps").and_then(|x| x.as_f64()).context("eps")? as f32,
+            step: parse_case(v.get("step").context("step")?)?,
+            fwd: parse_case(v.get("fwd").context("fwd")?)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from("artifacts");
+        if dir.join("manifest.json").exists() {
+            Some(dir)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.gate_order, "ifog");
+        assert!(m.artifacts.len() >= 10);
+        // every referenced file exists
+        for a in &m.artifacts {
+            assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            assert!(a.kind == "step" || a.kind == "fwd");
+            assert!(a.n_cols > 0 && a.m > 0);
+        }
+        // the paper's configurations are covered
+        assert!(m.artifacts.iter().any(|a| a.n_cols == 5 && a.m == 7));
+        assert!(m.artifacts.iter().any(|a| a.n_cols == 7 && a.m == 277));
+    }
+
+    #[test]
+    fn golden_parses_when_present() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let g = Golden::load(&dir).unwrap();
+        assert_eq!(g.n_cols, 3);
+        assert_eq!(g.m, 4);
+        assert_eq!(g.step.inputs.len(), 14);
+        assert_eq!(g.step.outputs.len(), 12);
+        assert_eq!(g.fwd.inputs.len(), 8);
+        assert_eq!(g.fwd.outputs.len(), 6);
+        // shapes coherent: w is [3, 4, 4]
+        assert_eq!(g.step.inputs[1].shape, vec![3, 4, 4]);
+        assert_eq!(g.step.inputs[1].data.len(), 48);
+    }
+}

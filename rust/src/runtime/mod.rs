@@ -1,0 +1,165 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts from Rust.
+//!
+//! `make artifacts` lowers the Layer-2 model (which calls the Layer-1
+//! Pallas kernel) to **HLO text** files plus a `manifest.json`; this
+//! module compiles them on the PJRT CPU client (`xla` crate) and exposes
+//! [`PjrtColumnarStage`] — a stage of LSTM columns whose forward + RTRL
+//! trace update runs inside XLA rather than in native Rust. Python never
+//! runs at this point; the Rust binary is self-contained.
+//!
+//! The interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see DESIGN.md and /opt/xla-example).
+//!
+//! Numerical parity with the native path ([`crate::nets::lstm_column`])
+//! is enforced two ways: the `golden.json` cross-language fixture written
+//! by `aot.py`, and step-by-step native-vs-PJRT comparisons in
+//! `rust/tests/pjrt_parity.rs`.
+
+pub mod manifest;
+pub mod stage;
+
+pub use manifest::{ArtifactInfo, Golden, Manifest};
+pub use stage::PjrtColumnarStage;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Compiled-executable cache over the artifact directory.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and connect the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory (env override: CCN_ARTIFACTS).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CCN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Find the artifact for (kind, n_cols, m) if it was lowered.
+    pub fn find(&self, kind: &str, n_cols: usize, m: usize) -> Option<ArtifactInfo> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.n_cols == n_cols && a.m == m)
+            .cloned()
+    }
+
+    /// Execute an artifact with f32 inputs of the given shapes; returns the
+    /// flattened f32 outputs (the lowered functions return one tuple).
+    pub fn execute(
+        &self,
+        file: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        // compile (or fetch) under the lock, then clone the handle out —
+        // PjRtLoadedExecutable is a shared handle into the client.
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if !cache.contains_key(file) {
+                let path = self.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("artifact path utf8")?,
+                )
+                .map_err(|e| anyhow!("parse {file}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+                cache.insert(file.to_string(), exe);
+            }
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(file).unwrap();
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                if shape.len() == 1 && shape[0] as usize == data.len() {
+                    Ok(lit)
+                } else {
+                    lit.reshape(shape)
+                        .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {file}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Run the cross-language golden check written by `aot.py`: execute the
+    /// c3/m4 step and fwd artifacts on the recorded inputs and compare all
+    /// outputs against what JAX computed at build time.
+    pub fn verify_golden(&self) -> Result<()> {
+        let golden = Golden::load(&self.dir)?;
+        for (kind, case) in [("step", &golden.step), ("fwd", &golden.fwd)] {
+            let art = self
+                .find(kind, golden.n_cols, golden.m)
+                .with_context(|| format!("no {kind} artifact for golden shape"))?;
+            let inputs: Vec<(&[f32], &[i64])> = case
+                .inputs
+                .iter()
+                .map(|t| (t.data.as_slice(), t.shape.as_slice()))
+                .collect();
+            let outputs = self.execute(&art.file, &inputs)?;
+            if outputs.len() != case.outputs.len() {
+                return Err(anyhow!(
+                    "{kind}: {} outputs, expected {}",
+                    outputs.len(),
+                    case.outputs.len()
+                ));
+            }
+            for (idx, (got, want)) in outputs.iter().zip(&case.outputs).enumerate() {
+                if got.len() != want.data.len() {
+                    return Err(anyhow!("{kind} output {idx}: length mismatch"));
+                }
+                for (a, b) in got.iter().zip(&want.data) {
+                    if (a - b).abs() > 2e-5 * (1.0 + b.abs()) {
+                        return Err(anyhow!(
+                            "{kind} output {idx}: {a} != {b} (golden)"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

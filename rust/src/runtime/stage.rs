@@ -1,0 +1,187 @@
+//! A stage of LSTM columns whose compute runs through PJRT (the
+//! XLA-compiled JAX/Pallas artifact) instead of native Rust.
+//!
+//! Holds parameters, state, RTRL traces and normalizer statistics as flat
+//! host vectors; every `step`/`step_frozen` round-trips them through the
+//! compiled executable. This is deliberately the *same* state layout as
+//! the Python model, so the golden fixture and the native Rust columns
+//! can both be compared element-for-element.
+
+use anyhow::{anyhow, Result};
+
+use super::PjrtRuntime;
+use crate::nets::lstm_column::LstmColumn;
+use crate::util::prng::Xoshiro256;
+
+pub struct PjrtColumnarStage<'rt> {
+    rt: &'rt PjrtRuntime,
+    step_file: String,
+    fwd_file: String,
+    pub n_cols: usize,
+    pub m: usize,
+    // parameters
+    pub w: Vec<f32>,   // [C*4*m]
+    pub u: Vec<f32>,   // [C*4]
+    pub b: Vec<f32>,   // [C*4]
+    // state
+    pub h: Vec<f32>,   // [C]
+    pub c: Vec<f32>,   // [C]
+    pub thw: Vec<f32>, // [C*4*m]
+    pub tcw: Vec<f32>,
+    pub thu: Vec<f32>, // [C*4]
+    pub tcu: Vec<f32>,
+    pub thb: Vec<f32>,
+    pub tcb: Vec<f32>,
+    pub mu: Vec<f32>,  // [C]
+    pub var: Vec<f32>, // [C]
+    // latest normalized output
+    pub h_norm: Vec<f32>,
+    pub denom: Vec<f32>,
+}
+
+impl<'rt> PjrtColumnarStage<'rt> {
+    /// Create a stage over an (n_cols, m) artifact pair from the manifest.
+    pub fn new(rt: &'rt PjrtRuntime, n_cols: usize, m: usize, seed: u64) -> Result<Self> {
+        let step = rt
+            .find("step", n_cols, m)
+            .ok_or_else(|| anyhow!("no step artifact for c{n_cols} m{m}"))?;
+        let fwd = rt
+            .find("fwd", n_cols, m)
+            .ok_or_else(|| anyhow!("no fwd artifact for c{n_cols} m{m}"))?;
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x706a_7274); // "pjrt"
+        let w = (0..n_cols * 4 * m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let u = (0..n_cols * 4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        Ok(Self {
+            rt,
+            step_file: step.file,
+            fwd_file: fwd.file,
+            n_cols,
+            m,
+            w,
+            u,
+            b: vec![0.0; n_cols * 4],
+            h: vec![0.0; n_cols],
+            c: vec![0.0; n_cols],
+            thw: vec![0.0; n_cols * 4 * m],
+            tcw: vec![0.0; n_cols * 4 * m],
+            thu: vec![0.0; n_cols * 4],
+            tcu: vec![0.0; n_cols * 4],
+            thb: vec![0.0; n_cols * 4],
+            tcb: vec![0.0; n_cols * 4],
+            mu: vec![0.0; n_cols],
+            var: vec![1.0; n_cols],
+            h_norm: vec![0.0; n_cols],
+            denom: vec![1.0; n_cols],
+        })
+    }
+
+    /// Copy parameters from native columns (parity tests).
+    pub fn set_params_from_columns(&mut self, cols: &[LstmColumn]) {
+        assert_eq!(cols.len(), self.n_cols);
+        for (k, col) in cols.iter().enumerate() {
+            assert_eq!(col.m, self.m);
+            self.w[k * 4 * self.m..(k + 1) * 4 * self.m].copy_from_slice(&col.w);
+            for a in 0..4 {
+                self.u[k * 4 + a] = col.u[a];
+                self.b[k * 4 + a] = col.b[a];
+            }
+        }
+    }
+
+    fn shapes(&self) -> ([i64; 1], [i64; 3], [i64; 2], [i64; 1]) {
+        (
+            [self.m as i64],
+            [self.n_cols as i64, 4, self.m as i64],
+            [self.n_cols as i64, 4],
+            [self.n_cols as i64],
+        )
+    }
+
+    /// Learning step: forward + RTRL traces + normalizer, all in XLA.
+    pub fn step(&mut self, x: &[f32]) -> Result<()> {
+        assert_eq!(x.len(), self.m);
+        let (sx, s3, s2, s1) = self.shapes();
+        let outputs = self.rt.execute(
+            &self.step_file,
+            &[
+                (x, &sx),
+                (&self.w, &s3),
+                (&self.u, &s2),
+                (&self.b, &s2),
+                (&self.h, &s1),
+                (&self.c, &s1),
+                (&self.thw, &s3),
+                (&self.tcw, &s3),
+                (&self.thu, &s2),
+                (&self.tcu, &s2),
+                (&self.thb, &s2),
+                (&self.tcb, &s2),
+                (&self.mu, &s1),
+                (&self.var, &s1),
+            ],
+        )?;
+        // outputs: h2 c2 thw2 tcw2 thu2 tcu2 thb2 tcb2 mu2 var2 h_norm denom
+        let [h2, c2, thw2, tcw2, thu2, tcu2, thb2, tcb2, mu2, var2, h_norm, denom]: [Vec<f32>; 12] =
+            outputs
+                .try_into()
+                .map_err(|_| anyhow!("step artifact returned wrong arity"))?;
+        self.h = h2;
+        self.c = c2;
+        self.thw = thw2;
+        self.tcw = tcw2;
+        self.thu = thu2;
+        self.tcu = tcu2;
+        self.thb = thb2;
+        self.tcb = tcb2;
+        self.mu = mu2;
+        self.var = var2;
+        self.h_norm = h_norm;
+        self.denom = denom;
+        Ok(())
+    }
+
+    /// Frozen step: forward + normalizer only.
+    pub fn step_frozen(&mut self, x: &[f32]) -> Result<()> {
+        assert_eq!(x.len(), self.m);
+        let (sx, s3, s2, s1) = self.shapes();
+        let outputs = self.rt.execute(
+            &self.fwd_file,
+            &[
+                (x, &sx),
+                (&self.w, &s3),
+                (&self.u, &s2),
+                (&self.b, &s2),
+                (&self.h, &s1),
+                (&self.c, &s1),
+                (&self.mu, &s1),
+                (&self.var, &s1),
+            ],
+        )?;
+        let [h2, c2, mu2, var2, h_norm, denom]: [Vec<f32>; 6] = outputs
+            .try_into()
+            .map_err(|_| anyhow!("fwd artifact returned wrong arity"))?;
+        self.h = h2;
+        self.c = c2;
+        self.mu = mu2;
+        self.var = var2;
+        self.h_norm = h_norm;
+        self.denom = denom;
+        Ok(())
+    }
+
+    /// dy/dtheta for column k with readout weight w_k (same contract as
+    /// the native path): scale = w_k / denom_k, layout [W | u | b].
+    pub fn write_grad(&self, k: usize, w_k: f32, out: &mut [f32]) {
+        let per = 4 * self.m + 8;
+        assert_eq!(out.len(), per);
+        let scale = w_k / self.denom[k];
+        let base = k * 4 * self.m;
+        for j in 0..4 * self.m {
+            out[j] = scale * self.thw[base + j];
+        }
+        for a in 0..4 {
+            out[4 * self.m + a] = scale * self.thu[k * 4 + a];
+            out[4 * self.m + 4 + a] = scale * self.thb[k * 4 + a];
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Mini property-testing framework (no `proptest` available offline).
+//!
+//! A property is a closure over a seeded RNG; [`check`] runs it across many
+//! seeds and reports the first failing seed with a deterministic repro. A
+//! light "shrink" is provided for integer-sized cases via [`Gen::size`]
+//! bias: early cases draw small sizes so the first failure tends to be
+//! near-minimal.
+//!
+//! ```ignore
+//! check("normalizer bounded", 200, |g| {
+//!     let v = g.f32_in(-10.0, 10.0);
+//!     prop_assert(v.abs() <= 10.0, format!("v = {v}"))
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+
+/// Case generator handed to properties: seeded RNG + a size hint that
+/// grows with the case index (so early failures are small).
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.int_in(lo as u64, hi as u64) as usize
+    }
+
+    /// Integer in [lo, hi] biased toward `lo + size` early in a run.
+    pub fn sized_usize(&mut self, lo: usize, hi: usize) -> usize {
+        let cap = (lo + self.size).min(hi);
+        self.usize_in(lo, cap)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Result of one property case.
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn prop_close(a: f32, b: f32, tol: f32, what: &str) -> PropResult {
+    let denom = 1.0f32.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * denom {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random cases of the property; panic with seed on failure.
+///
+/// Seeds are derived deterministically from the property name so runs are
+/// reproducible without a lockfile, and independent across properties.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let name_seed = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let mut g = Gen {
+            rng: Xoshiro256::seed_from_u64(name_seed ^ (i as u64).wrapping_mul(0x9E3779B9)),
+            size: 1 + i * 64 / cases.max(1),
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {i} (seed base {name_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("always true", 50, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_name() {
+        check("always false", 10, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sized_grows() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        let mut i = 0;
+        check("size grows", 100, |g| {
+            let v = g.sized_usize(1, 1000);
+            if i < 10 {
+                max_early = max_early.max(v);
+            }
+            if i >= 90 {
+                max_late = max_late.max(v);
+            }
+            i += 1;
+            Ok(())
+        });
+        assert!(max_early <= 12, "early cases should be small: {max_early}");
+        assert!(max_late > max_early);
+    }
+
+    #[test]
+    fn prop_close_relative() {
+        assert!(prop_close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(prop_close(1.0, 1.5, 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", 5, |g| {
+            first.push(g.rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det", 5, |g| {
+            second.push(g.rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,192 @@
+//! Tiny CLI argument parser (no `clap` available offline).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value | --key=value] [pos..]`.
+//! Typed accessors with defaults; unknown-flag detection via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = first arg, no argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut it = items.into_iter().peekable();
+        let mut subcommand = None;
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(body.to_string());
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args {
+            subcommand,
+            positional,
+            options,
+            flags,
+            consumed: Vec::new(),
+        }
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_f64(&mut self, name: &str) -> Option<f64> {
+        self.opt_str(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn f64_or(&mut self, name: &str, default: f64) -> f64 {
+        self.opt_f64(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&mut self, name: &str) -> Option<usize> {
+        self.opt_str(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn usize_or(&mut self, name: &str, default: usize) -> usize {
+        self.opt_usize(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&mut self, name: &str, default: u64) -> u64 {
+        self.opt_str(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--seeds 0,1,2`.
+    pub fn usize_list_or(&mut self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.opt_str(name) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Error if any provided option/flag was never consumed (typo guard).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|s| format!("--{s}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let mut a = args(&["run", "--steps", "1000", "--alpha=0.01", "--quiet"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.usize_or("steps", 0), 1000);
+        assert_eq!(a.f64_or("alpha", 0.0), 0.01);
+        assert!(a.flag("quiet"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = args(&["run"]);
+        assert_eq!(a.usize_or("steps", 5), 5);
+        assert_eq!(a.str_or("env", "trace"), "trace");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let mut a = args(&["run", "--oops", "1"]);
+        let _ = a.usize_or("steps", 5);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let mut a = args(&["sweep", "--seeds", "0,1,2,3"]);
+        assert_eq!(a.usize_list_or("seeds", &[9]), vec![0, 1, 2, 3]);
+        let mut b = args(&["sweep"]);
+        assert_eq!(b.usize_list_or("seeds", &[9]), vec![9]);
+    }
+
+    #[test]
+    fn positional_and_trailing_flag() {
+        // Convention: `--name value` binds the next token unless it starts
+        // with `--`; bare flags therefore go last or use `--flag` alone.
+        let mut a = args(&["run", "path/to/file", "--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional, vec!["path/to/file"]);
+        // the binding form:
+        let mut b = args(&["run", "--out", "path/to/file", "--fast"]);
+        assert_eq!(b.opt_str("out").as_deref(), Some("path/to/file"));
+        assert!(b.flag("fast"));
+    }
+
+    #[test]
+    fn no_subcommand_when_leading_dash() {
+        let a = args(&["--help"]);
+        assert_eq!(a.subcommand, None);
+    }
+}

@@ -1,0 +1,85 @@
+//! Substrate utilities the framework is built on.
+//!
+//! Everything here is hand-rolled because the build is fully offline:
+//! deterministic PRNGs ([`prng`]), a JSON codec ([`json`]), a CLI argument
+//! parser ([`cli`]) and a mini property-testing framework ([`check`]).
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+
+/// Dot product — the single most executed routine in the repo; kept here
+/// so every net shares one optimized implementation.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane manual unroll: autovectorizes cleanly with -O3 and avoids the
+    // sequential-FP-add dependency chain.
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut rest = 0.0f32;
+    for i in chunks * 4..n {
+        rest += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + rest
+}
+
+/// `y += alpha * x` (axpy), same unrolling rationale as [`dot`].
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..23).map(|i| i as f32 * 0.3 - 2.0).collect();
+        let b: Vec<f32> = (0..23).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_empty_and_short() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 10.0, 10.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, vec![10.5, 11.0, 11.5]);
+    }
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(30.0) > 0.999_999);
+        assert!(sigmoid(-30.0) < 1e-6);
+        let s = sigmoid(1.3) + sigmoid(-1.3);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+}
