@@ -30,7 +30,7 @@ fn run_with_switch(learner: LearnerKind, steps: u64, seed: u64) -> (f64, f64) {
         seed,
         curve_points: 20,
     };
-    let res1 = run_experiment(&cfg1);
+    let res1 = run_experiment(&cfg1).expect("run");
     // phase 2 proxy: a *different* activating-pattern set (env seed
     // shifted) with the same learner config restarted at the same stage
     // schedule but frozen from the start is not directly expressible via
@@ -54,7 +54,7 @@ fn run_with_switch(learner: LearnerKind, steps: u64, seed: u64) -> (f64, f64) {
         seed: seed + 1000, // different activating set
         ..cfg1.clone()
     };
-    let res2 = run_experiment(&cfg2);
+    let res2 = run_experiment(&cfg2).expect("run");
     (res1.tail_error, res2.tail_error)
 }
 

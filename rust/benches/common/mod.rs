@@ -51,7 +51,7 @@ pub fn sweep_and_aggregate(
         seed_list.len(),
         threads()
     );
-    let res = run_sweep(configs, threads());
+    let res = run_sweep(configs, threads()).expect("sweep");
     aggregate_runs(&res.runs)
 }
 

@@ -45,7 +45,7 @@ fn main() {
         }
     }
     eprintln!("[bench] fig10: {} runs x {steps} steps", configs.len());
-    let res = run_sweep(configs, common::threads());
+    let res = run_sweep(configs, common::threads()).expect("sweep");
 
     let mut rows = Vec::new();
     for r in &res.runs {

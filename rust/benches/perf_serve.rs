@@ -1,0 +1,181 @@
+//! §Serve throughput bench: K concurrent columnar TD(lambda) sessions
+//! stepped through M shards with the SoA batched kernel, versus the same
+//! K sessions stepped sequentially through the scalar path.
+//!
+//! Reports aggregate session-steps/sec for both paths, the speedup, the
+//! p50/p99 latency of single `step` requests through a shard's mpsc
+//! round-trip, and the batched-vs-scalar numerical parity on the final
+//! tick (which must be <= 1e-6; the two paths are arithmetically
+//! identical).
+//!
+//! Scale knobs (env vars):
+//!   CCN_SERVE_SESSIONS  concurrent sessions  (default 256)
+//!   CCN_SERVE_SHARDS    worker shards        (default 8)
+//!   CCN_SERVE_TICKS     steps per session    (default 500)
+//!   CCN_SERVE_COLUMNS   columns per session  (default 8)
+//!   CCN_SERVE_INPUTS    observation width    (default 8)
+
+use std::time::Instant;
+
+use ccn_rtrl::config::LearnerKind;
+use ccn_rtrl::learn::TdConfig;
+use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::serve::protocol::{Request, StepItem};
+use ccn_rtrl::serve::shard::ShardPool;
+use ccn_rtrl::serve::{Session, SessionSpec};
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn spec(d: usize, n_inputs: usize, seed: u64) -> SessionSpec {
+    SessionSpec {
+        learner: LearnerKind::Columnar { d },
+        n_inputs,
+        td: TdConfig {
+            alpha: 0.001,
+            gamma: 0.9,
+            lambda: 0.95,
+        },
+        eps: 0.01,
+        seed,
+    }
+}
+
+fn main() {
+    let sessions = env_usize("CCN_SERVE_SESSIONS", 256);
+    let shards = env_usize("CCN_SERVE_SHARDS", 8);
+    let ticks = env_usize("CCN_SERVE_TICKS", 500);
+    let d = env_usize("CCN_SERVE_COLUMNS", 8);
+    let n = env_usize("CCN_SERVE_INPUTS", 8);
+    eprintln!(
+        "[perf_serve] {sessions} sessions x {ticks} ticks, columnar:{d} \
+         over {n} inputs, {shards} shards"
+    );
+
+    // deterministic per-session observation streams, shared by both paths
+    let mut obs_rngs: Vec<Xoshiro256> = (0..sessions)
+        .map(|s| Xoshiro256::seed_from_u64(1000 + s as u64))
+        .collect();
+    let draw_tick = |rngs: &mut Vec<Xoshiro256>| -> (Vec<Vec<f32>>, Vec<f32>) {
+        let xs: Vec<Vec<f32>> = rngs
+            .iter_mut()
+            .map(|r| (0..n).map(|_| r.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let cs: Vec<f32> = xs.iter().map(|x| 0.5 * x[0]).collect();
+        (xs, cs)
+    };
+
+    // ---- baseline: sequential scalar sessions --------------------------
+    let mut scalar: Vec<Session> = (0..sessions)
+        .map(|s| Session::open(spec(d, n, s as u64)).expect("open"))
+        .collect();
+    let mut scalar_final = vec![0.0f32; sessions];
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        let (xs, cs) = draw_tick(&mut obs_rngs);
+        for (s, session) in scalar.iter_mut().enumerate() {
+            scalar_final[s] = session.step(&xs[s], cs[s]).expect("step");
+        }
+    }
+    let scalar_elapsed = t0.elapsed().as_secs_f64();
+    let scalar_sps = (sessions * ticks) as f64 / scalar_elapsed;
+
+    // ---- sharded + batched path ---------------------------------------
+    let pool = ShardPool::new(shards);
+    let mut ids = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        match pool.open(spec(d, n, s as u64)) {
+            ccn_rtrl::serve::protocol::Response::Opened { id } => ids.push(id),
+            other => panic!("open failed: {other:?}"),
+        }
+    }
+    // reset the observation streams so both paths see identical data
+    let mut obs_rngs: Vec<Xoshiro256> = (0..sessions)
+        .map(|s| Xoshiro256::seed_from_u64(1000 + s as u64))
+        .collect();
+    let mut served_final = vec![0.0f32; sessions];
+    let t1 = Instant::now();
+    for _ in 0..ticks {
+        let (xs, cs) = draw_tick(&mut obs_rngs);
+        let items: Vec<StepItem> = ids
+            .iter()
+            .zip(xs)
+            .zip(&cs)
+            .map(|((&id, x), &c)| StepItem { id, x, c })
+            .collect();
+        let ys = pool.step_batch(items);
+        for (s, y) in ys.into_iter().enumerate() {
+            served_final[s] = y.expect("batched step");
+        }
+    }
+    let served_elapsed = t1.elapsed().as_secs_f64();
+    let served_sps = (sessions * ticks) as f64 / served_elapsed;
+
+    // parity: both paths consumed identical observations, so the final
+    // predictions must agree to <= 1e-6 (they are arithmetically equal).
+    let max_dev = scalar_final
+        .iter()
+        .zip(&served_final)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_dev <= 1e-6,
+        "batched/scalar parity violated: max |dy| = {max_dev}"
+    );
+
+    // ---- single-request latency through the mpsc round-trip -----------
+    let lat_probes = 2000.min(ticks * sessions).max(100);
+    let mut rng = Xoshiro256::seed_from_u64(0xfeed);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(lat_probes);
+    for i in 0..lat_probes {
+        let id = ids[i % ids.len()];
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let t = Instant::now();
+        let resp = pool.call(Request::Step { id, x, c: 0.0 });
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        if let ccn_rtrl::serve::protocol::Response::Error { message } = resp {
+            panic!("latency probe failed: {message}");
+        }
+    }
+    let p50 = percentile(&mut lat_us, 0.50);
+    let p99 = percentile(&mut lat_us, 0.99);
+
+    println!(
+        "{}",
+        render_table(
+            &["path", "sessions", "shards", "steps/s", "speedup"],
+            &[
+                vec![
+                    "scalar sequential".into(),
+                    sessions.to_string(),
+                    "1".into(),
+                    format!("{scalar_sps:.0}"),
+                    "1.0x".into(),
+                ],
+                vec![
+                    "sharded SoA batch".into(),
+                    sessions.to_string(),
+                    shards.to_string(),
+                    format!("{served_sps:.0}"),
+                    format!("{:.1}x", served_sps / scalar_sps),
+                ],
+            ],
+        )
+    );
+    println!(
+        "single-step latency through mpsc: p50 {p50:.1} us, p99 {p99:.1} us \
+         ({lat_probes} probes)"
+    );
+    println!("batched/scalar parity on final tick: max |dy| = {max_dev:.2e}");
+    let stats = pool.stats();
+    let total: u64 = stats.iter().map(|&(_, t)| t).sum();
+    println!(
+        "shard step counts: {:?} (total {total})",
+        stats.iter().map(|&(_, t)| t).collect::<Vec<_>>()
+    );
+}

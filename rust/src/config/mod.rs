@@ -13,6 +13,39 @@ use crate::nets::tbptt::TbpttNet;
 use crate::nets::PredictionNet;
 use crate::util::json::Json;
 
+/// A configuration the rest of the system cannot act on. Carried as a
+/// typed error (not a panic) so the CLI and the serve protocol can report
+/// it to the caller.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    UnknownGame(String),
+    BadLearnerSpec(String),
+    UnsupportedLearner { learner: String, context: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::UnknownGame(game) => write!(
+                f,
+                "unknown game '{game}' (available: {})",
+                synthatari::env_names().join(", ")
+            ),
+            ConfigError::BadLearnerSpec(spec) => write!(
+                f,
+                "bad learner spec '{spec}' (columnar:D | \
+                 constructive:TOTAL:STEPS_PER_STAGE | \
+                 ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE | tbptt:D:K | snap1:D)"
+            ),
+            ConfigError::UnsupportedLearner { learner, context } => {
+                write!(f, "learner '{learner}' is not supported by {context}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Which network/learning algorithm to run.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LearnerKind {
@@ -33,6 +66,108 @@ pub enum LearnerKind {
 }
 
 impl LearnerKind {
+    /// Parse a CLI/protocol spec string, e.g. `columnar:8` or
+    /// `ccn:20:4:100000` (the inverse of nothing in particular — labels
+    /// use `_`, specs use `:`).
+    pub fn parse(spec: &str) -> Result<LearnerKind, ConfigError> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || ConfigError::BadLearnerSpec(spec.to_string());
+        let usize_at = |i: usize| -> Result<usize, ConfigError> {
+            parts.get(i).and_then(|s| s.parse().ok()).ok_or_else(bad)
+        };
+        let u64_at = |i: usize| -> Result<u64, ConfigError> {
+            parts.get(i).and_then(|s| s.parse().ok()).ok_or_else(bad)
+        };
+        match parts[0] {
+            "columnar" => Ok(LearnerKind::Columnar { d: usize_at(1)? }),
+            "constructive" => Ok(LearnerKind::Constructive {
+                total: usize_at(1)?,
+                steps_per_stage: u64_at(2)?,
+            }),
+            "ccn" => Ok(LearnerKind::Ccn {
+                total: usize_at(1)?,
+                per_stage: usize_at(2)?,
+                steps_per_stage: u64_at(3)?,
+            }),
+            "tbptt" => Ok(LearnerKind::Tbptt {
+                d: usize_at(1)?,
+                k: usize_at(2)?,
+            }),
+            "snap1" => Ok(LearnerKind::Snap1 { d: usize_at(1)? }),
+            _ => Err(bad()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            LearnerKind::Columnar { d } => Json::obj(vec![
+                ("kind", Json::Str("columnar".into())),
+                ("d", Json::Num(*d as f64)),
+            ]),
+            LearnerKind::Constructive {
+                total,
+                steps_per_stage,
+            } => Json::obj(vec![
+                ("kind", Json::Str("constructive".into())),
+                ("total", Json::Num(*total as f64)),
+                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
+            ]),
+            LearnerKind::Ccn {
+                total,
+                per_stage,
+                steps_per_stage,
+            } => Json::obj(vec![
+                ("kind", Json::Str("ccn".into())),
+                ("total", Json::Num(*total as f64)),
+                ("per_stage", Json::Num(*per_stage as f64)),
+                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
+            ]),
+            LearnerKind::Tbptt { d, k } => Json::obj(vec![
+                ("kind", Json::Str("tbptt".into())),
+                ("d", Json::Num(*d as f64)),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            LearnerKind::Snap1 { d } => Json::obj(vec![
+                ("kind", Json::Str("snap1".into())),
+                ("d", Json::Num(*d as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(l: &Json) -> Option<LearnerKind> {
+        Some(match l.get("kind")?.as_str()? {
+            "columnar" => LearnerKind::Columnar {
+                d: l.get("d")?.as_usize()?,
+            },
+            "constructive" => LearnerKind::Constructive {
+                total: l.get("total")?.as_usize()?,
+                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
+            },
+            "ccn" => LearnerKind::Ccn {
+                total: l.get("total")?.as_usize()?,
+                per_stage: l.get("per_stage")?.as_usize()?,
+                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
+            },
+            "tbptt" => LearnerKind::Tbptt {
+                d: l.get("d")?.as_usize()?,
+                k: l.get("k")?.as_usize()?,
+            },
+            "snap1" => LearnerKind::Snap1 {
+                d: l.get("d")?.as_usize()?,
+            },
+            _ => return None,
+        })
+    }
+
+    /// True for the serveable CCN family (columnar/constructive/ccn);
+    /// false for the dense benchmark baselines (tbptt/snap1).
+    pub fn is_ccn_family(&self) -> bool {
+        !matches!(
+            self,
+            LearnerKind::Tbptt { .. } | LearnerKind::Snap1 { .. }
+        )
+    }
+
     pub fn label(&self) -> String {
         match self {
             LearnerKind::Columnar { d } => format!("columnar_{d}"),
@@ -173,39 +308,7 @@ impl ExperimentConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        let learner = match &self.learner {
-            LearnerKind::Columnar { d } => Json::obj(vec![
-                ("kind", Json::Str("columnar".into())),
-                ("d", Json::Num(*d as f64)),
-            ]),
-            LearnerKind::Constructive {
-                total,
-                steps_per_stage,
-            } => Json::obj(vec![
-                ("kind", Json::Str("constructive".into())),
-                ("total", Json::Num(*total as f64)),
-                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
-            ]),
-            LearnerKind::Ccn {
-                total,
-                per_stage,
-                steps_per_stage,
-            } => Json::obj(vec![
-                ("kind", Json::Str("ccn".into())),
-                ("total", Json::Num(*total as f64)),
-                ("per_stage", Json::Num(*per_stage as f64)),
-                ("steps_per_stage", Json::Num(*steps_per_stage as f64)),
-            ]),
-            LearnerKind::Tbptt { d, k } => Json::obj(vec![
-                ("kind", Json::Str("tbptt".into())),
-                ("d", Json::Num(*d as f64)),
-                ("k", Json::Num(*k as f64)),
-            ]),
-            LearnerKind::Snap1 { d } => Json::obj(vec![
-                ("kind", Json::Str("snap1".into())),
-                ("d", Json::Num(*d as f64)),
-            ]),
-        };
+        let learner = self.learner.to_json();
         Json::obj(vec![
             ("env", Json::Str(self.env.label())),
             ("learner", learner),
@@ -232,29 +335,7 @@ impl ExperimentConfig {
                     EnvKind::parse(g)
                 })
             })?;
-        let l = v.get("learner")?;
-        let learner = match l.get("kind")?.as_str()? {
-            "columnar" => LearnerKind::Columnar {
-                d: l.get("d")?.as_usize()?,
-            },
-            "constructive" => LearnerKind::Constructive {
-                total: l.get("total")?.as_usize()?,
-                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
-            },
-            "ccn" => LearnerKind::Ccn {
-                total: l.get("total")?.as_usize()?,
-                per_stage: l.get("per_stage")?.as_usize()?,
-                steps_per_stage: l.get("steps_per_stage")?.as_f64()? as u64,
-            },
-            "tbptt" => LearnerKind::Tbptt {
-                d: l.get("d")?.as_usize()?,
-                k: l.get("k")?.as_usize()?,
-            },
-            "snap1" => LearnerKind::Snap1 {
-                d: l.get("d")?.as_usize()?,
-            },
-            _ => return None,
-        };
+        let learner = LearnerKind::from_json(v.get("learner")?)?;
         Some(Self {
             env,
             learner,
@@ -270,8 +351,8 @@ impl ExperimentConfig {
 }
 
 /// Build the stream for a config (seeded independently of the learner).
-pub fn build_stream(env: &EnvKind, seed: u64) -> Box<dyn Stream> {
-    match env {
+pub fn build_stream(env: &EnvKind, seed: u64) -> Result<Box<dyn Stream>, ConfigError> {
+    Ok(match env {
         EnvKind::TracePatterning => Box::new(TracePatterning::new(
             TracePatterningConfig::default(),
             seed,
@@ -287,9 +368,63 @@ pub fn build_stream(env: &EnvKind, seed: u64) -> Box<dyn Stream> {
         EnvKind::CycleWorld { n } => Box::new(CycleWorld::new(*n, 0.9)),
         EnvKind::SynthAtari { game } => Box::new(
             synthatari::make_env(game, seed)
-                .unwrap_or_else(|| panic!("unknown game {game}")),
+                .ok_or_else(|| ConfigError::UnknownGame(game.clone()))?,
         ),
-    }
+    })
+}
+
+/// Build a CCN-family net for a learner spec. Returns an error for the
+/// dense baselines (tbptt/snap1), which are not CCN-shaped — used by the
+/// serve layer, whose snapshot format covers the CCN family only.
+pub fn build_ccn(
+    learner: &LearnerKind,
+    n_inputs: usize,
+    eps: f32,
+    seed: u64,
+) -> Result<CcnNet, ConfigError> {
+    let cfg = match learner {
+        LearnerKind::Columnar { d } => CcnConfig {
+            n_inputs,
+            total_features: *d,
+            features_per_stage: *d,
+            steps_per_stage: u64::MAX,
+            init_scale: 1.0,
+            norm_eps: eps,
+            norm_beta: NORM_BETA,
+        },
+        LearnerKind::Constructive {
+            total,
+            steps_per_stage,
+        } => CcnConfig {
+            n_inputs,
+            total_features: *total,
+            features_per_stage: 1,
+            steps_per_stage: *steps_per_stage,
+            init_scale: 1.0,
+            norm_eps: eps,
+            norm_beta: NORM_BETA,
+        },
+        LearnerKind::Ccn {
+            total,
+            per_stage,
+            steps_per_stage,
+        } => CcnConfig {
+            n_inputs,
+            total_features: *total,
+            features_per_stage: *per_stage,
+            steps_per_stage: *steps_per_stage,
+            init_scale: 1.0,
+            norm_eps: eps,
+            norm_beta: NORM_BETA,
+        },
+        other => {
+            return Err(ConfigError::UnsupportedLearner {
+                learner: other.label(),
+                context: "the CCN family (columnar|constructive|ccn)".into(),
+            })
+        }
+    };
+    Ok(CcnNet::new(cfg, seed))
 }
 
 /// Build the agent (net + TD(lambda)) for a config over `n_inputs`
@@ -300,51 +435,12 @@ pub fn build_agent(
     gamma: f32,
 ) -> TdLambdaAgent<Box<dyn PredictionNet>> {
     let net: Box<dyn PredictionNet> = match &cfg.learner {
-        LearnerKind::Columnar { d } => Box::new(CcnNet::new(
-            CcnConfig {
-                n_inputs,
-                total_features: *d,
-                features_per_stage: *d,
-                steps_per_stage: u64::MAX,
-                init_scale: 1.0,
-                norm_eps: cfg.eps,
-                norm_beta: NORM_BETA,
-            },
-            cfg.seed,
-        )),
-        LearnerKind::Constructive {
-            total,
-            steps_per_stage,
-        } => Box::new(CcnNet::new(
-            CcnConfig {
-                n_inputs,
-                total_features: *total,
-                features_per_stage: 1,
-                steps_per_stage: *steps_per_stage,
-                init_scale: 1.0,
-                norm_eps: cfg.eps,
-                norm_beta: NORM_BETA,
-            },
-            cfg.seed,
-        )),
-        LearnerKind::Ccn {
-            total,
-            per_stage,
-            steps_per_stage,
-        } => Box::new(CcnNet::new(
-            CcnConfig {
-                n_inputs,
-                total_features: *total,
-                features_per_stage: *per_stage,
-                steps_per_stage: *steps_per_stage,
-                init_scale: 1.0,
-                norm_eps: cfg.eps,
-                norm_beta: NORM_BETA,
-            },
-            cfg.seed,
-        )),
         LearnerKind::Tbptt { d, k } => Box::new(TbpttNet::new(n_inputs, *d, *k, cfg.seed)),
         LearnerKind::Snap1 { d } => Box::new(Snap1Net::new(n_inputs, *d, cfg.seed)),
+        ccn_family => Box::new(
+            build_ccn(ccn_family, n_inputs, cfg.eps, cfg.seed)
+                .expect("ccn family specs always build"),
+        ),
     };
     TdLambdaAgent::new(
         net,
@@ -471,7 +567,57 @@ mod tests {
             LearnerKind::Ccn {
                 steps_per_stage, ..
             } => assert_eq!(steps_per_stage, 100_000),
-            _ => panic!(),
+            ref other => panic!("paper_trace must preserve the ccn kind, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn learner_spec_parse_roundtrips_and_rejects() {
+        assert_eq!(
+            LearnerKind::parse("columnar:8").unwrap(),
+            LearnerKind::Columnar { d: 8 }
+        );
+        assert_eq!(
+            LearnerKind::parse("ccn:20:4:100000").unwrap(),
+            LearnerKind::Ccn {
+                total: 20,
+                per_stage: 4,
+                steps_per_stage: 100_000
+            }
+        );
+        assert_eq!(
+            LearnerKind::parse("tbptt:2:30").unwrap(),
+            LearnerKind::Tbptt { d: 2, k: 30 }
+        );
+        assert!(matches!(
+            LearnerKind::parse("columnar"),
+            Err(ConfigError::BadLearnerSpec(_))
+        ));
+        assert!(matches!(
+            LearnerKind::parse("hopfield:4"),
+            Err(ConfigError::BadLearnerSpec(_))
+        ));
+    }
+
+    #[test]
+    fn build_stream_reports_unknown_game() {
+        let err = build_stream(
+            &EnvKind::SynthAtari {
+                game: "nonexistent".into(),
+            },
+            0,
+        )
+        .err()
+        .expect("must not panic on unknown games");
+        assert_eq!(err, ConfigError::UnknownGame("nonexistent".into()));
+        assert!(err.to_string().contains("pong"), "lists alternatives");
+    }
+
+    #[test]
+    fn build_ccn_rejects_dense_baselines() {
+        let err = build_ccn(&LearnerKind::Tbptt { d: 2, k: 10 }, 4, 0.01, 0)
+            .err()
+            .expect("tbptt is not ccn-shaped");
+        assert!(err.to_string().contains("tbptt"));
     }
 }

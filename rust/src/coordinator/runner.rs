@@ -2,7 +2,7 @@
 
 use std::time::Instant;
 
-use crate::config::{build_agent, build_stream, ExperimentConfig};
+use crate::config::{build_agent, build_stream, ConfigError, ExperimentConfig};
 use crate::env::returns::ReturnEval;
 use crate::metrics::Curve;
 use crate::util::json::Json;
@@ -49,11 +49,12 @@ impl RunResult {
 /// How many trailing (y, c) pairs to keep for Fig-10 style plots.
 const TAIL_TRACE_LEN: usize = 600;
 
-/// Run one experiment to completion.
-pub fn run_experiment(cfg: &ExperimentConfig) -> RunResult {
+/// Run one experiment to completion. Fails fast (before any stepping) on
+/// configurations that name resources that don't exist.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult, ConfigError> {
     // env and learner use decorrelated seed streams so that comparing
     // learners on the same seed shares the exact observation sequence.
-    let mut stream = build_stream(&cfg.env, cfg.seed);
+    let mut stream = build_stream(&cfg.env, cfg.seed)?;
     let gamma = cfg.gamma_override.unwrap_or_else(|| stream.gamma());
     let mut agent = build_agent(cfg, stream.n_features(), gamma);
 
@@ -81,7 +82,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> RunResult {
     curve.finish();
     let elapsed = start.elapsed().as_secs_f64();
 
-    RunResult {
+    Ok(RunResult {
         label: cfg.label(),
         learner: cfg.learner.label(),
         env: cfg.env.label(),
@@ -92,7 +93,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> RunResult {
         steps_per_sec: cfg.steps as f64 / elapsed.max(1e-9),
         flops_per_step: agent.flops_per_step(),
         tail_trace,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -116,7 +117,7 @@ mod tests {
 
     #[test]
     fn columnar_run_learns_cycle_world() {
-        let res = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 4 }));
+        let res = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 4 })).unwrap();
         assert_eq!(res.curve.ys.len(), 20);
         let first = res.curve.ys[1];
         assert!(
@@ -130,16 +131,25 @@ mod tests {
 
     #[test]
     fn same_seed_same_curve() {
-        let a = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 }));
-        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 }));
+        let a = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 })).unwrap();
+        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 6 })).unwrap();
         assert_eq!(a.curve.ys, b.curve.ys, "runs must be deterministic");
+    }
+
+    #[test]
+    fn bad_env_surfaces_error_not_panic() {
+        let mut cfg = quick_cfg(LearnerKind::Columnar { d: 2 });
+        cfg.env = EnvKind::SynthAtari {
+            game: "bogus".into(),
+        };
+        assert!(run_experiment(&cfg).is_err());
     }
 
     #[test]
     fn different_learners_share_observation_stream() {
         // same env seed => same cumulant sequence regardless of learner.
-        let a = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 2 }));
-        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 4 }));
+        let a = run_experiment(&quick_cfg(LearnerKind::Columnar { d: 2 })).unwrap();
+        let b = run_experiment(&quick_cfg(LearnerKind::Tbptt { d: 2, k: 4 })).unwrap();
         let ca: Vec<f32> = a.tail_trace.iter().map(|&(_, c)| c).collect();
         let cb: Vec<f32> = b.tail_trace.iter().map(|&(_, c)| c).collect();
         assert_eq!(ca, cb, "cumulant stream must be learner-independent");

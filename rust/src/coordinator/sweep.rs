@@ -9,7 +9,7 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
 use super::runner::{run_experiment, RunResult};
-use crate::config::ExperimentConfig;
+use crate::config::{ConfigError, ExperimentConfig};
 
 #[derive(Clone, Debug)]
 pub struct SweepResult {
@@ -26,12 +26,21 @@ impl SweepResult {
     }
 }
 
-/// Run every config once, using up to `threads` workers.
-pub fn run_sweep(configs: Vec<ExperimentConfig>, threads: usize) -> SweepResult {
+/// Run every config once, using up to `threads` workers. Every config's
+/// environment is validated up front (streams are cheap to construct),
+/// so a bad cell fails the sweep *before* any compute is spent rather
+/// than after hours of valid runs.
+pub fn run_sweep(
+    configs: Vec<ExperimentConfig>,
+    threads: usize,
+) -> Result<SweepResult, ConfigError> {
+    for cfg in &configs {
+        crate::config::build_stream(&cfg.env, cfg.seed)?;
+    }
     let n = configs.len();
     let queue: Arc<Mutex<VecDeque<(usize, ExperimentConfig)>>> =
         Arc::new(Mutex::new(configs.into_iter().enumerate().collect()));
-    let results: Arc<Mutex<Vec<Option<RunResult>>>> =
+    let results: Arc<Mutex<Vec<Option<Result<RunResult, ConfigError>>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
 
     let workers = threads.max(1).min(n.max(1));
@@ -52,14 +61,15 @@ pub fn run_sweep(configs: Vec<ExperimentConfig>, threads: usize) -> SweepResult 
         }
     });
 
-    let runs = Arc::try_unwrap(results)
+    let mut runs = Vec::with_capacity(n);
+    for cell in Arc::try_unwrap(results)
         .expect("all workers joined")
         .into_inner()
         .unwrap()
-        .into_iter()
-        .map(|r| r.expect("every cell must have run exactly once"))
-        .collect();
-    SweepResult { runs }
+    {
+        runs.push(cell.expect("every cell must have run exactly once")?);
+    }
+    Ok(SweepResult { runs })
 }
 
 /// Expand one config over a seed list.
@@ -103,7 +113,7 @@ mod tests {
     #[test]
     fn every_cell_runs_exactly_once_in_order() {
         let configs: Vec<_> = (0..7).map(|s| quick(s, 3000)).collect();
-        let res = run_sweep(configs, 3);
+        let res = run_sweep(configs, 3).unwrap();
         assert_eq!(res.runs.len(), 7);
         for (i, r) in res.runs.iter().enumerate() {
             assert_eq!(r.seed, i as u64, "results keyed by submission order");
@@ -113,8 +123,8 @@ mod tests {
     #[test]
     fn parallel_equals_serial() {
         let configs: Vec<_> = (0..4).map(|s| quick(s, 5000)).collect();
-        let par = run_sweep(configs.clone(), 4);
-        let ser = run_sweep(configs, 1);
+        let par = run_sweep(configs.clone(), 4).unwrap();
+        let ser = run_sweep(configs, 1).unwrap();
         for (a, b) in par.runs.iter().zip(&ser.runs) {
             assert_eq!(a.curve.ys, b.curve.ys, "thread count must not matter");
         }
@@ -135,7 +145,7 @@ mod tests {
             let n = g.sized_usize(1, 6);
             let configs: Vec<_> = (0..n as u64).map(|s| quick(s, 500)).collect();
             let labels: Vec<String> = configs.iter().map(|c| c.label()).collect();
-            let res = run_sweep(configs, g.usize_in(1, 4));
+            let res = run_sweep(configs, g.usize_in(1, 4)).expect("sweep runs");
             for (want, run) in labels.iter().zip(&res.runs) {
                 prop_assert(&run.label == want, format!("label {want}"))?;
             }

@@ -2,4 +2,4 @@
 
 pub mod td_lambda;
 
-pub use td_lambda::{TdConfig, TdLambdaAgent};
+pub use td_lambda::{TdConfig, TdLambdaAgent, TdState};

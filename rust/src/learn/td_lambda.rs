@@ -17,6 +17,7 @@
 //! parameter set changes identity (stage freeze), e_theta is reset.
 
 use crate::nets::PredictionNet;
+use crate::util::json::Json;
 use crate::util::{axpy, dot};
 
 #[derive(Clone, Copy, Debug)]
@@ -34,6 +35,47 @@ impl Default for TdConfig {
             gamma: 0.9,
             lambda: 0.99,
         }
+    }
+}
+
+/// The agent's learning state minus the net: readout weights, both
+/// eligibility traces, and the TD bootstrap bookkeeping. Captured and
+/// restored for session snapshots ([`crate::serve`]); the net itself is
+/// serialized separately.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TdState {
+    pub w: Vec<f32>,
+    pub e_w: Vec<f32>,
+    pub e_theta: Vec<f32>,
+    pub y_prev: f32,
+    pub have_prev: bool,
+    pub epoch_seen: u64,
+    pub steps: u64,
+}
+
+impl TdState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("w", Json::arr_f32(&self.w)),
+            ("e_w", Json::arr_f32(&self.e_w)),
+            ("e_theta", Json::arr_f32(&self.e_theta)),
+            ("y_prev", Json::Num(self.y_prev as f64)),
+            ("have_prev", Json::Bool(self.have_prev)),
+            ("epoch_seen", Json::Num(self.epoch_seen as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        Some(Self {
+            w: v.get("w")?.to_f32_vec()?,
+            e_w: v.get("e_w")?.to_f32_vec()?,
+            e_theta: v.get("e_theta")?.to_f32_vec()?,
+            y_prev: v.get("y_prev")?.as_f64()? as f32,
+            have_prev: v.get("have_prev")?.as_bool()?,
+            epoch_seen: v.get("epoch_seen")?.as_f64()? as u64,
+            steps: v.get("steps")?.as_f64()? as u64,
+        })
     }
 }
 
@@ -78,6 +120,61 @@ impl<N: PredictionNet> TdLambdaAgent<N> {
 
     pub fn steps(&self) -> u64 {
         self.steps
+    }
+
+    /// Capture the learning state (snapshot support; the net is captured
+    /// separately by the caller).
+    pub fn td_state(&self) -> TdState {
+        TdState {
+            w: self.w.clone(),
+            e_w: self.e_w.clone(),
+            e_theta: self.e_theta.clone(),
+            y_prev: self.y_prev,
+            have_prev: self.have_prev,
+            epoch_seen: self.epoch_seen,
+            steps: self.steps,
+        }
+    }
+
+    /// Restore a previously captured [`TdState`]. The state must be
+    /// consistent with the *current* net (feature count, learnable
+    /// parameter count and parameter epoch) — restore the net first.
+    pub fn set_td_state(&mut self, st: TdState) -> Result<(), String> {
+        if st.w.len() != self.net.n_features() {
+            return Err(format!(
+                "td restore: {} readout weights but net has {} features",
+                st.w.len(),
+                self.net.n_features()
+            ));
+        }
+        if st.e_w.len() != st.w.len() {
+            return Err("td restore: e_w / w length mismatch".into());
+        }
+        if st.e_theta.len() != self.net.n_learnable_params() {
+            return Err(format!(
+                "td restore: {} theta traces but net has {} learnable params",
+                st.e_theta.len(),
+                self.net.n_learnable_params()
+            ));
+        }
+        if st.epoch_seen != self.net.param_epoch() {
+            return Err(format!(
+                "td restore: epoch {} but net is at epoch {}",
+                st.epoch_seen,
+                self.net.param_epoch()
+            ));
+        }
+        let np = st.e_theta.len();
+        self.grad_buf = vec![0.0; np];
+        self.update_buf = vec![0.0; np];
+        self.w = st.w;
+        self.e_w = st.e_w;
+        self.e_theta = st.e_theta;
+        self.y_prev = st.y_prev;
+        self.have_prev = st.have_prev;
+        self.epoch_seen = st.epoch_seen;
+        self.steps = st.steps;
+        Ok(())
     }
 
     /// One online step: consume observation + cumulant, return prediction
@@ -330,6 +427,62 @@ mod tests {
             e_late < e_early * 0.6,
             "tbptt must learn: early {e_early:.4} late {e_late:.4}"
         );
+    }
+
+    #[test]
+    fn td_state_roundtrip_continues_identically() {
+        use crate::env::cycle_world::CycleWorld;
+        use crate::env::Stream;
+
+        let mut env = CycleWorld::new(5, 0.9);
+        let make = || {
+            TdLambdaAgent::new(
+                columnar_net(2, 3, 0.01, 4),
+                TdConfig {
+                    alpha: 0.01,
+                    gamma: 0.9,
+                    lambda: 0.9,
+                },
+            )
+        };
+        let mut agent = make();
+        let mut x = vec![0.0; 2];
+        for _ in 0..500 {
+            let c = env.step_into(&mut x);
+            agent.step(&x, c);
+        }
+        // round-trip the TD state through JSON into a fresh agent whose
+        // net is byte-identical (same seed, same step count via replay).
+        let st = agent.td_state();
+        let back = TdState::from_json(&Json::parse(&st.to_json().dump()).unwrap())
+            .expect("td state json");
+        assert_eq!(back, st);
+        let mut restored = make();
+        // replay the net to the same point so epochs/features match
+        let mut env2 = CycleWorld::new(5, 0.9);
+        let mut x2 = vec![0.0; 2];
+        for _ in 0..500 {
+            let c = env2.step_into(&mut x2);
+            restored.step(&x2, c);
+        }
+        restored.set_td_state(back).expect("restore");
+        for _ in 0..200 {
+            let c = env.step_into(&mut x);
+            let c2 = env2.step_into(&mut x2);
+            assert_eq!(c, c2);
+            let ya = agent.step(&x, c);
+            let yb = restored.step(&x2, c2);
+            assert_eq!(ya, yb, "restored agent must continue identically");
+        }
+    }
+
+    #[test]
+    fn set_td_state_rejects_mismatched_shapes() {
+        let mut agent =
+            TdLambdaAgent::new(columnar_net(2, 3, 0.01, 4), TdConfig::default());
+        let mut st = agent.td_state();
+        st.w.push(0.0);
+        assert!(agent.set_td_state(st).is_err());
     }
 
     #[test]

@@ -8,9 +8,14 @@
 //!
 //! Architecture (see DESIGN.md):
 //! - [`nets`]/[`learn`]: native Rust learners — the real-time hot path.
-//! - [`runtime`]: PJRT bridge executing the JAX/Pallas-authored AOT
-//!   artifacts (`artifacts/*.hlo.txt`) from Rust; numerically cross-checked
-//!   against the native path.
+//! - [`serve`]: the online prediction service — thousands of concurrent
+//!   TD(lambda) sessions, stepped by sharded workers and a batched
+//!   structure-of-arrays columnar kernel, spoken to over a JSONL
+//!   protocol (`ccn serve`).
+//! - `runtime` (feature `pjrt`): PJRT bridge executing the
+//!   JAX/Pallas-authored AOT artifacts (`artifacts/*.hlo.txt`) from Rust;
+//!   numerically cross-checked against the native path. Off by default
+//!   because the `xla` crate is unavailable in the offline toolchain.
 //! - [`env`]: prediction streams (trace patterning, synthetic-ALE suite).
 //! - [`coordinator`]: experiment runner, multi-seed sweeps, aggregation.
 //! - [`compute`]: the paper's Appendix-A operation-count budget equations.
@@ -23,5 +28,7 @@ pub mod learn;
 pub mod nets;
 pub mod env;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -3,11 +3,14 @@
 //! Subcommands:
 //!   run          run one experiment (env x learner) and write results
 //!   sweep        run a learner over several seeds in parallel
+//!   serve        multi-session online prediction service (JSONL on
+//!                stdin/stdout; see the serve module docs)
 //!   print-config show the Table-1 default configuration as JSON
 //!   list-envs    list available prediction streams
 //!   pjrt-verify  load AOT artifacts via PJRT and check the golden fixture
+//!                (requires building with --features pjrt)
 //!   pjrt-bench   time native vs PJRT column steps (the C++-vs-framework
-//!                comparison of the paper's appendix)
+//!                comparison of the paper's appendix; --features pjrt)
 
 use std::path::Path;
 
@@ -15,50 +18,17 @@ use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
 use ccn_rtrl::coordinator::{aggregate_runs, run_experiment, run_sweep, sweep};
 use ccn_rtrl::env::synthatari;
 use ccn_rtrl::metrics::render_table;
+#[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
+use ccn_rtrl::serve::Service;
 use ccn_rtrl::util::cli::Args;
 use ccn_rtrl::util::json::Json;
-
-fn parse_learner(spec: &str) -> Result<LearnerKind, String> {
-    let parts: Vec<&str> = spec.split(':').collect();
-    let usize_at = |i: usize| -> Result<usize, String> {
-        parts
-            .get(i)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| format!("bad learner spec '{spec}'"))
-    };
-    let u64_at = |i: usize| -> Result<u64, String> {
-        parts
-            .get(i)
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| format!("bad learner spec '{spec}'"))
-    };
-    match parts[0] {
-        "columnar" => Ok(LearnerKind::Columnar { d: usize_at(1)? }),
-        "constructive" => Ok(LearnerKind::Constructive {
-            total: usize_at(1)?,
-            steps_per_stage: u64_at(2)?,
-        }),
-        "ccn" => Ok(LearnerKind::Ccn {
-            total: usize_at(1)?,
-            per_stage: usize_at(2)?,
-            steps_per_stage: u64_at(3)?,
-        }),
-        "tbptt" => Ok(LearnerKind::Tbptt {
-            d: usize_at(1)?,
-            k: usize_at(2)?,
-        }),
-        "snap1" => Ok(LearnerKind::Snap1 { d: usize_at(1)? }),
-        other => Err(format!(
-            "unknown learner '{other}' (columnar|constructive|ccn|tbptt|snap1)"
-        )),
-    }
-}
 
 fn cfg_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     let env = EnvKind::parse(&args.str_or("env", "trace"))
         .ok_or_else(|| "unknown --env".to_string())?;
-    let learner = parse_learner(&args.str_or("learner", "ccn:20:4:100000"))?;
+    let learner = LearnerKind::parse(&args.str_or("learner", "ccn:20:4:100000"))
+        .map_err(|e| e.to_string())?;
     Ok(ExperimentConfig {
         env,
         learner,
@@ -86,7 +56,7 @@ fn cmd_run(mut args: Args) -> Result<(), String> {
     let out = args.str_or("out", "results/run.json");
     args.finish()?;
     eprintln!("running {} ...", cfg.label());
-    let res = run_experiment(&cfg);
+    let res = run_experiment(&cfg).map_err(|e| e.to_string())?;
     println!(
         "{}",
         render_table(
@@ -123,7 +93,7 @@ fn cmd_sweep(mut args: Args) -> Result<(), String> {
         seed_list.len(),
         threads
     );
-    let res = run_sweep(configs, threads);
+    let res = run_sweep(configs, threads).map_err(|e| e.to_string())?;
     let aggs = aggregate_runs(&res.runs);
     let mut rows = Vec::new();
     for a in &aggs {
@@ -149,6 +119,18 @@ fn cmd_sweep(mut args: Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_serve(mut args: Args) -> Result<(), String> {
+    let shards = args.usize_or("shards", sweep::default_threads());
+    args.finish()?;
+    eprintln!(
+        "ccn serve: {shards} shard(s); JSONL requests on stdin, responses \
+         on stdout (op: open|step|step_batch|predict|snapshot|restore|close|stats)"
+    );
+    let service = Service::new(shards);
+    service.run_stdio()
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_verify(mut args: Args) -> Result<(), String> {
     let dir = args.str_or("artifacts", "artifacts");
     args.finish()?;
@@ -163,6 +145,14 @@ fn cmd_pjrt_verify(mut args: Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt_verify(_args: Args) -> Result<(), String> {
+    Err("this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (requires the vendored xla crate, see Cargo.toml)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_bench(mut args: Args) -> Result<(), String> {
     let dir = args.str_or("artifacts", "artifacts");
     let steps = args.usize_or("steps", 200);
@@ -226,11 +216,19 @@ fn cmd_pjrt_bench(mut args: Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt_bench(_args: Args) -> Result<(), String> {
+    Err("this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (requires the vendored xla crate, see Cargo.toml)"
+        .into())
+}
+
 fn main() {
     let args = Args::from_env();
     let result = match args.subcommand.as_deref() {
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
         Some("print-config") => {
             println!("{}", ExperimentConfig::default().to_json().pretty());
             Ok(())
@@ -249,13 +247,15 @@ fn main() {
         Some("pjrt-bench") => cmd_pjrt_bench(args),
         _ => {
             eprintln!(
-                "usage: ccn <run|sweep|print-config|list-envs|pjrt-verify|pjrt-bench> [options]\n\
+                "usage: ccn <run|sweep|serve|print-config|list-envs|pjrt-verify|pjrt-bench> [options]\n\
                  \n\
                  run options: --env <name> --learner <spec> --steps N --alpha A\n\
                    --lambda L --gamma G --eps E --seed S --out results/run.json\n\
                  learner specs: columnar:D | constructive:TOTAL:STEPS_PER_STAGE |\n\
                    ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE | tbptt:D:K | snap1:D\n\
-                 sweep adds: --seeds 0,1,2 --threads T"
+                 sweep adds: --seeds 0,1,2 --threads T\n\
+                 serve options: --shards N   (JSONL protocol on stdin/stdout;\n\
+                   ops: open|step|step_batch|predict|snapshot|restore|close|stats)"
             );
             std::process::exit(2);
         }

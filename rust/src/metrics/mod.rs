@@ -184,6 +184,20 @@ pub fn write_csv(
     Ok(())
 }
 
+/// Percentile of a sample set by nearest-rank interpolation (p in
+/// [0, 1]); sorts in place. Used for latency reporting (p50/p99) in the
+/// serve benches. NaN samples are sorted last and never selected unless
+/// everything is NaN.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    // total_cmp is a total order that places NaN after every real value
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((samples.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    samples[idx]
+}
+
 /// Render an aligned text table (benches print these per paper figure).
 pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
     let ncols = header.len();
@@ -217,6 +231,21 @@ pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut xs, 1.0), 100.0);
+        assert_eq!(percentile(&mut xs, 0.5), 51.0); // round(99*0.5)=50 -> 51.0
+        let mut one = vec![7.0];
+        assert_eq!(percentile(&mut one, 0.99), 7.0);
+        let mut none: Vec<f64> = vec![];
+        assert!(percentile(&mut none, 0.5).is_nan());
+        // unsorted input
+        let mut shuffled = vec![3.0, 1.0, 2.0];
+        assert_eq!(percentile(&mut shuffled, 1.0), 3.0);
+    }
 
     #[test]
     fn online_stats_matches_closed_form() {

@@ -20,6 +20,7 @@ use super::lstm_column::LstmColumn;
 use super::normalizer::OnlineNormalizer;
 use super::PredictionNet;
 use crate::compute;
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 
 #[derive(Clone, Debug)]
@@ -47,6 +48,46 @@ impl CcnConfig {
             norm_eps: 0.01,
             norm_beta: super::normalizer::NORM_BETA,
         }
+    }
+
+    /// `steps_per_stage == u64::MAX` (the columnar corner) is encoded as
+    /// JSON null, since f64 cannot hold u64::MAX exactly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n_inputs", Json::Num(self.n_inputs as f64)),
+            ("total_features", Json::Num(self.total_features as f64)),
+            (
+                "features_per_stage",
+                Json::Num(self.features_per_stage as f64),
+            ),
+            (
+                "steps_per_stage",
+                if self.steps_per_stage == u64::MAX {
+                    Json::Null
+                } else {
+                    Json::Num(self.steps_per_stage as f64)
+                },
+            ),
+            ("init_scale", Json::Num(self.init_scale as f64)),
+            ("norm_eps", Json::Num(self.norm_eps as f64)),
+            ("norm_beta", Json::Num(self.norm_beta as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let steps_per_stage = match v.get("steps_per_stage")? {
+            Json::Null => u64::MAX,
+            other => other.as_f64()? as u64,
+        };
+        Some(Self {
+            n_inputs: v.get("n_inputs")?.as_usize()?,
+            total_features: v.get("total_features")?.as_usize()?,
+            features_per_stage: v.get("features_per_stage")?.as_usize()?,
+            steps_per_stage,
+            init_scale: v.get("init_scale")?.as_f64()? as f32,
+            norm_eps: v.get("norm_eps")?.as_f64()? as f32,
+            norm_beta: v.get("norm_beta")?.as_f64()? as f32,
+        })
     }
 }
 
@@ -138,9 +179,162 @@ impl CcnNet {
         self.stages.len()
     }
 
-    /// Access a column (tests / parity checks).
+    /// Access a column (tests / parity checks / SoA packing).
     pub fn column(&self, stage: usize, k: usize) -> &LstmColumn {
         &self.stages[stage].columns[k]
+    }
+
+    /// A stage's online normalizer (read-only; SoA packing + snapshots).
+    pub fn stage_norm(&self, stage: usize) -> &OnlineNormalizer {
+        &self.stages[stage].normalizer
+    }
+
+    pub fn config(&self) -> &CcnConfig {
+        &self.cfg
+    }
+
+    /// Rebuild a net from captured per-stage state. `stages_parts[s]` is
+    /// `(columns, normalizer)`; widths must match what `cfg` prescribes
+    /// for stage `s`. The rebuilt net continues exactly where the
+    /// original left off (all cross-step state lives in the columns, the
+    /// normalizers, the stage clock and the rng).
+    pub fn from_parts(
+        cfg: CcnConfig,
+        stages_parts: Vec<(Vec<LstmColumn>, OnlineNormalizer)>,
+        steps_in_stage: u64,
+        epoch: u64,
+        frozen_forever: bool,
+        rng: Xoshiro256,
+    ) -> Result<Self, String> {
+        if stages_parts.is_empty() {
+            return Err("ccn: at least one stage required".into());
+        }
+        let mut stages = Vec::with_capacity(stages_parts.len());
+        let mut total = 0usize;
+        for (s, (columns, normalizer)) in stages_parts.into_iter().enumerate() {
+            if s > 0 && cfg.features_per_stage * s >= cfg.total_features {
+                return Err(format!("ccn: stage {s} exceeds total_features"));
+            }
+            let want_u = cfg
+                .features_per_stage
+                .min(cfg.total_features - cfg.features_per_stage * s);
+            let want_m = cfg.n_inputs + cfg.features_per_stage * s;
+            if columns.len() != want_u {
+                return Err(format!(
+                    "ccn stage {s}: {} columns, want {want_u}",
+                    columns.len()
+                ));
+            }
+            if columns.iter().any(|c| c.m != want_m) {
+                return Err(format!("ccn stage {s}: column width != {want_m}"));
+            }
+            if normalizer.len() != want_u {
+                return Err(format!(
+                    "ccn stage {s}: normalizer width {} != {want_u}",
+                    normalizer.len()
+                ));
+            }
+            total += want_u;
+            stages.push(Stage {
+                raw: vec![0.0; want_u],
+                m: want_m,
+                columns,
+                normalizer,
+            });
+        }
+        let last = stages.len() - 1;
+        let xbuf_len = stages[last].m + stages[last].columns.len();
+        Ok(Self {
+            cfg,
+            learning_stage: last,
+            steps_in_stage,
+            epoch,
+            feats: vec![0.0; total],
+            xbuf: vec![0.0; xbuf_len],
+            rng,
+            frozen_forever,
+            stages,
+        })
+    }
+
+    /// Full serialization of parameters, traces, normalizer statistics
+    /// and growth bookkeeping (the session snapshot format of
+    /// [`crate::serve`]).
+    pub fn to_json(&self) -> Json {
+        let stages: Vec<Json> = self
+            .stages
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    (
+                        "columns",
+                        Json::Arr(st.columns.iter().map(|c| c.to_json()).collect()),
+                    ),
+                    ("norm", st.normalizer.to_json()),
+                ])
+            })
+            .collect();
+        let rng_state: Vec<Json> = self
+            .rng
+            .state()
+            .iter()
+            .map(|s| Json::Str(format!("{s:016x}")))
+            .collect();
+        Json::obj(vec![
+            ("cfg", self.cfg.to_json()),
+            ("stages", Json::Arr(stages)),
+            ("steps_in_stage", Json::Num(self.steps_in_stage as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("frozen_forever", Json::Bool(self.frozen_forever)),
+            ("rng", Json::Arr(rng_state)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let bad = |what: &str| format!("ccn snapshot: bad or missing '{what}'");
+        let cfg = CcnConfig::from_json(v.get("cfg").ok_or_else(|| bad("cfg"))?)
+            .ok_or_else(|| bad("cfg"))?;
+        let mut parts = Vec::new();
+        for sj in v
+            .get("stages")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| bad("stages"))?
+        {
+            let cols_json =
+                sj.get("columns").and_then(|c| c.as_arr()).ok_or_else(|| bad("columns"))?;
+            let mut columns = Vec::with_capacity(cols_json.len());
+            for cj in cols_json {
+                columns.push(LstmColumn::from_json(cj).ok_or_else(|| bad("column"))?);
+            }
+            let norm = OnlineNormalizer::from_json(
+                sj.get("norm").ok_or_else(|| bad("norm"))?,
+            )
+            .ok_or_else(|| bad("norm"))?;
+            parts.push((columns, norm));
+        }
+        let mut rng_state = [0u64; 4];
+        let rng_json =
+            v.get("rng").and_then(|r| r.as_arr()).ok_or_else(|| bad("rng"))?;
+        if rng_json.len() != 4 {
+            return Err(bad("rng"));
+        }
+        for (dst, src) in rng_state.iter_mut().zip(rng_json) {
+            let s = src.as_str().ok_or_else(|| bad("rng"))?;
+            *dst = u64::from_str_radix(s, 16).map_err(|_| bad("rng"))?;
+        }
+        Self::from_parts(
+            cfg,
+            parts,
+            v.get("steps_in_stage")
+                .and_then(|s| s.as_f64())
+                .ok_or_else(|| bad("steps_in_stage"))? as u64,
+            v.get("epoch").and_then(|e| e.as_f64()).ok_or_else(|| bad("epoch"))?
+                as u64,
+            v.get("frozen_forever")
+                .and_then(|f| f.as_bool())
+                .ok_or_else(|| bad("frozen_forever"))?,
+            Xoshiro256::from_state(rng_state),
+        )
     }
 }
 
@@ -399,6 +593,50 @@ mod tests {
         for (a, b) in g1.iter().zip(&g2) {
             assert!((2.0 * a - b).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_continues_identically() {
+        // run a net through a stage transition, snapshot, restore, and
+        // check both nets evolve identically afterwards (features and
+        // growth schedule).
+        let mut net = CcnNet::new(tiny_cfg(), 21);
+        drive(&mut net, 75, 1); // mid-stage-2
+        let snap = net.to_json();
+        let text = snap.dump();
+        let mut back = CcnNet::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .expect("roundtrip");
+        assert_eq!(back.n_stages(), net.n_stages());
+        assert_eq!(back.steps_in_stage(), net.steps_in_stage());
+        assert_eq!(back.param_epoch(), net.param_epoch());
+        assert_eq!(back.n_features(), net.n_features());
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        for t in 0..120 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            back.advance(&x);
+            assert_eq!(net.features(), back.features(), "step {t}");
+            net.end_step();
+            back.end_step();
+            assert_eq!(net.n_stages(), back.n_stages(), "growth must match");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_inconsistent_stages() {
+        let net = CcnNet::new(tiny_cfg(), 0);
+        let j = net.to_json();
+        // corrupt: claim 2 inputs while columns are built for 3
+        let mut cfg = tiny_cfg();
+        cfg.n_inputs = 2;
+        let mut o = match j {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("cfg".into(), cfg.to_json());
+        assert!(CcnNet::from_json(&Json::Obj(o)).is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! same layout. A column with input width m has 4m + 8 parameters and
 //! 2(4m + 8) trace scalars.
 
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 use crate::util::sigmoid;
 
@@ -74,6 +75,74 @@ impl LstmColumn {
             thb: [0.0; 4],
             tcb: [0.0; 4],
         }
+    }
+
+    /// All-zero column of input width `m` — a blank slate for unpacking
+    /// SoA lanes ([`crate::serve::batch`]) or deserialized state into.
+    pub fn zeroed(m: usize) -> Self {
+        Self {
+            m,
+            w: vec![0.0; 4 * m],
+            u: [0.0; 4],
+            b: [0.0; 4],
+            h: 0.0,
+            c: 0.0,
+            thw: vec![0.0; 4 * m],
+            tcw: vec![0.0; 4 * m],
+            thu: [0.0; 4],
+            tcu: [0.0; 4],
+            thb: [0.0; 4],
+            tcb: [0.0; 4],
+        }
+    }
+
+    /// Full serialization: parameters, state and traces. f32 -> f64 JSON
+    /// numbers are exact, so the round trip is lossless.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("m", Json::Num(self.m as f64)),
+            ("w", Json::arr_f32(&self.w)),
+            ("u", Json::arr_f32(&self.u)),
+            ("b", Json::arr_f32(&self.b)),
+            ("h", Json::Num(self.h as f64)),
+            ("c", Json::Num(self.c as f64)),
+            ("thw", Json::arr_f32(&self.thw)),
+            ("tcw", Json::arr_f32(&self.tcw)),
+            ("thu", Json::arr_f32(&self.thu)),
+            ("tcu", Json::arr_f32(&self.tcu)),
+            ("thb", Json::arr_f32(&self.thb)),
+            ("tcb", Json::arr_f32(&self.tcb)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let m = v.get("m")?.as_usize()?;
+        let vec_of = |key: &str, len: usize| -> Option<Vec<f32>> {
+            let arr = v.get(key)?.to_f32_vec()?;
+            if arr.len() == len {
+                Some(arr)
+            } else {
+                None
+            }
+        };
+        let four = |key: &str| -> Option<[f32; 4]> {
+            vec_of(key, 4)?.try_into().ok()
+        };
+        Some(Self {
+            m,
+            w: vec_of("w", 4 * m)?,
+            u: four("u")?,
+            b: four("b")?,
+            h: v.get("h")?.as_f64()? as f32,
+            c: v.get("c")?.as_f64()? as f32,
+            thw: vec_of("thw", 4 * m)?,
+            tcw: vec_of("tcw", 4 * m)?,
+            thu: four("thu")?,
+            tcu: four("tcu")?,
+            thb: four("thb")?,
+            tcb: four("tcb")?,
+        })
     }
 
     /// Reset state and traces (parameters untouched).
@@ -346,6 +415,50 @@ mod tests {
         for i in 0..before.len() {
             assert!((after[i] - before[i] - delta[i]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let m = 6;
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut col = LstmColumn::new(m, &mut rng, 0.7);
+        for _ in 0..25 {
+            let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            col.step_with_traces(&x);
+        }
+        let j = col.to_json();
+        let text = j.dump();
+        let back = LstmColumn::from_json(&crate::util::json::Json::parse(&text).unwrap())
+            .expect("roundtrip");
+        assert_eq!(back.m, col.m);
+        assert_eq!(back.w, col.w);
+        assert_eq!(back.u, col.u);
+        assert_eq!(back.h, col.h);
+        assert_eq!(back.c, col.c);
+        assert_eq!(back.thw, col.thw);
+        assert_eq!(back.tcw, col.tcw);
+        assert_eq!(back.tcb, col.tcb);
+        // the restored column must continue exactly like the original
+        let mut a = col.clone();
+        let mut b = back;
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            a.step_with_traces(&x);
+            b.step_with_traces(&x);
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.thw, b.thw);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let col = LstmColumn::new(3, &mut rng, 0.5);
+        let mut j = col.to_json();
+        if let crate::util::json::Json::Obj(o) = &mut j {
+            o.insert("m".into(), crate::util::json::Json::Num(5.0));
+        }
+        assert!(LstmColumn::from_json(&j).is_none(), "m=5 but arrays sized 3");
     }
 
     #[test]

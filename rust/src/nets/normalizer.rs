@@ -16,6 +16,8 @@
 /// Paper's beta for all experiments.
 pub const NORM_BETA: f32 = 0.99999;
 
+use crate::util::json::Json;
+
 #[derive(Clone, Debug)]
 pub struct OnlineNormalizer {
     mu: Vec<f32>,
@@ -82,6 +84,56 @@ impl OnlineNormalizer {
     pub fn eps(&self) -> f32 {
         self.eps
     }
+
+    pub fn beta(&self) -> f32 {
+        self.beta
+    }
+
+    /// Running statistics as `(mu, var, denom)` — read-only views for
+    /// SoA packing ([`crate::serve::batch`]) and serialization.
+    pub fn state(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.mu, &self.var, &self.denom)
+    }
+
+    /// Rebuild from captured statistics; `None` if lengths disagree.
+    pub fn from_state(
+        beta: f32,
+        eps: f32,
+        mu: Vec<f32>,
+        var: Vec<f32>,
+        denom: Vec<f32>,
+    ) -> Option<Self> {
+        if mu.len() != var.len() || mu.len() != denom.len() {
+            return None;
+        }
+        Some(Self {
+            mu,
+            var,
+            denom,
+            beta,
+            eps,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("beta", Json::Num(self.beta as f64)),
+            ("eps", Json::Num(self.eps as f64)),
+            ("mu", Json::arr_f32(&self.mu)),
+            ("var", Json::arr_f32(&self.var)),
+            ("denom", Json::arr_f32(&self.denom)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        Self::from_state(
+            v.get("beta")?.as_f64()? as f32,
+            v.get("eps")?.as_f64()? as f32,
+            v.get("mu")?.to_f32_vec()?,
+            v.get("var")?.to_f32_vec()?,
+            v.get("denom")?.to_f32_vec()?,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +194,27 @@ mod tests {
         assert_eq!(n.len(), 5);
         assert_eq!(n.mu[0], mu0);
         assert_eq!(n.var[3], 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip_continues_identically() {
+        let mut n = OnlineNormalizer::new(3, 0.99, 0.01);
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        let mut out = [0.0; 3];
+        for _ in 0..500 {
+            let f: Vec<f32> = (0..3).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            n.update_and_normalize(&f, &mut out);
+        }
+        let mut back =
+            OnlineNormalizer::from_json(&n.to_json()).expect("roundtrip");
+        let mut out2 = [0.0; 3];
+        for _ in 0..50 {
+            let f: Vec<f32> = (0..3).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            n.update_and_normalize(&f, &mut out);
+            back.update_and_normalize(&f, &mut out2);
+            assert_eq!(out, out2);
+            assert_eq!(n.denom(1), back.denom(1));
+        }
     }
 
     #[test]

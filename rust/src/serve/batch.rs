@@ -1,0 +1,1200 @@
+//! Batched structure-of-arrays columnar stepping — the serving hot path.
+//!
+//! The paper's structural trick (columns are independent modules, so RTRL
+//! factorizes per column) is also a *batching* opportunity: B independent
+//! columns with the same input width can be advanced in one pass over
+//! lane-interleaved arrays, turning the per-column scalar recurrences into
+//! vectorizable inner loops across lanes.
+//!
+//! Two layers live here:
+//!
+//! - [`BatchedColumnStepper`]: B·d independent LSTM columns in SoA form
+//!   (lane-innermost layout `[gate][j][lane]`), advanced with full RTRL
+//!   traces in one cache-friendly pass. Numerically **identical** to
+//!   [`LstmColumn::step_with_traces`] lane by lane — every per-lane
+//!   floating-point expression is evaluated in the same order as the
+//!   scalar code, so parity is exact, not approximate.
+//! - [`ColumnarSessionBatch`]: B complete TD(lambda) *sessions* (columnar
+//!   net + online normalizer + readout + both eligibility traces) over a
+//!   shared spec, stepped together. Lane `l = k * B + b` holds column `k`
+//!   of session `b`. Sessions enter and leave a batch as
+//!   [`ColumnarLane`] bundles (used by the shard layer and by snapshots).
+
+use crate::learn::{TdConfig, TdState};
+use crate::nets::lstm_column::LstmColumn;
+use crate::util::{dot, sigmoid};
+
+/// B·d independent LSTM columns in structure-of-arrays form.
+///
+/// `batch` sessions × `groups` columns each; all columns share input
+/// width `m`. Lane `l = k * batch + b` is column `k` of session `b`, and
+/// a step consumes one observation per *session* (shape `[m][batch]`,
+/// batch-innermost), broadcast across that session's column group.
+/// `groups == 1` gives B fully independent columns, each with its own
+/// input — the configuration the parity property tests exercise.
+pub struct BatchedColumnStepper {
+    m: usize,
+    batch: usize,
+    groups: usize,
+    /// input weights `[4][m][L]`, lane-innermost
+    pub(super) w: Vec<f32>,
+    /// recurrent weights `[4][L]`
+    pub(super) u: Vec<f32>,
+    /// biases `[4][L]`
+    pub(super) b: Vec<f32>,
+    /// hidden / cell state `[L]`
+    pub(super) h: Vec<f32>,
+    pub(super) c: Vec<f32>,
+    /// RTRL traces, same layouts as the parameters
+    pub(super) thw: Vec<f32>,
+    pub(super) tcw: Vec<f32>,
+    pub(super) thu: Vec<f32>,
+    pub(super) tcu: Vec<f32>,
+    pub(super) thb: Vec<f32>,
+    pub(super) tcb: Vec<f32>,
+    // per-lane scratch, reused every step
+    z: Vec<f32>, // [4][L]
+    f_gate: Vec<f32>,
+    a_coef: Vec<f32>,
+    b_coef: Vec<f32>,
+    e_coef: Vec<f32>,
+    qi: Vec<f32>,
+    qf: Vec<f32>,
+    qg: Vec<f32>,
+    ro: Vec<f32>,
+    h_prev: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+impl BatchedColumnStepper {
+    pub fn new(m: usize, batch: usize, groups: usize) -> Self {
+        let l = batch * groups;
+        Self {
+            m,
+            batch,
+            groups,
+            w: vec![0.0; 4 * m * l],
+            u: vec![0.0; 4 * l],
+            b: vec![0.0; 4 * l],
+            h: vec![0.0; l],
+            c: vec![0.0; l],
+            thw: vec![0.0; 4 * m * l],
+            tcw: vec![0.0; 4 * m * l],
+            thu: vec![0.0; 4 * l],
+            tcu: vec![0.0; 4 * l],
+            thb: vec![0.0; 4 * l],
+            tcb: vec![0.0; 4 * l],
+            z: vec![0.0; 4 * l],
+            f_gate: vec![0.0; l],
+            a_coef: vec![0.0; l],
+            b_coef: vec![0.0; l],
+            e_coef: vec![0.0; l],
+            qi: vec![0.0; l],
+            qf: vec![0.0; l],
+            qg: vec![0.0; l],
+            ro: vec![0.0; l],
+            h_prev: vec![0.0; l],
+            zero: vec![0.0; l],
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.batch * self.groups
+    }
+
+    pub fn h(&self, lane: usize) -> f32 {
+        self.h[lane]
+    }
+
+    pub fn c(&self, lane: usize) -> f32 {
+        self.c[lane]
+    }
+
+    /// Pack a scalar column (params, state, traces) into lane `lane`.
+    pub fn load_lane(&mut self, lane: usize, col: &LstmColumn) {
+        assert_eq!(col.m, self.m, "column width mismatch");
+        assert!(lane < self.lanes());
+        let (m, l) = (self.m, self.lanes());
+        for a in 0..4 {
+            for j in 0..m {
+                let p = a * m + j;
+                self.w[p * l + lane] = col.w[p];
+                self.thw[p * l + lane] = col.thw[p];
+                self.tcw[p * l + lane] = col.tcw[p];
+            }
+            self.u[a * l + lane] = col.u[a];
+            self.b[a * l + lane] = col.b[a];
+            self.thu[a * l + lane] = col.thu[a];
+            self.tcu[a * l + lane] = col.tcu[a];
+            self.thb[a * l + lane] = col.thb[a];
+            self.tcb[a * l + lane] = col.tcb[a];
+        }
+        self.h[lane] = col.h;
+        self.c[lane] = col.c;
+    }
+
+    /// Unpack lane `lane` back into a scalar column.
+    pub fn extract_lane(&self, lane: usize) -> LstmColumn {
+        assert!(lane < self.lanes());
+        let (m, l) = (self.m, self.lanes());
+        let mut col = LstmColumn::zeroed(m);
+        for a in 0..4 {
+            for j in 0..m {
+                let p = a * m + j;
+                col.w[p] = self.w[p * l + lane];
+                col.thw[p] = self.thw[p * l + lane];
+                col.tcw[p] = self.tcw[p * l + lane];
+            }
+            col.u[a] = self.u[a * l + lane];
+            col.b[a] = self.b[a * l + lane];
+            col.thu[a] = self.thu[a * l + lane];
+            col.tcu[a] = self.tcu[a * l + lane];
+            col.thb[a] = self.thb[a * l + lane];
+            col.tcb[a] = self.tcb[a * l + lane];
+        }
+        col.h = self.h[lane];
+        col.c = self.c[lane];
+        col
+    }
+
+    /// Gate pre-activations: `z[a][l] = sum_j w[a][j][l] * x[j][l % B]`.
+    /// One pass over the weights; the inner loop is contiguous in both
+    /// `w` and `x` so it autovectorizes across the batch.
+    fn accumulate_gate_preacts(&mut self, x: &[f32]) {
+        let (m, bsz, groups) = (self.m, self.batch, self.groups);
+        let l = bsz * groups;
+        debug_assert_eq!(x.len(), m * bsz);
+        self.z.iter_mut().for_each(|v| *v = 0.0);
+        for a in 0..4 {
+            for j in 0..m {
+                let row = (a * m + j) * l;
+                let wrow = &self.w[row..row + l];
+                let xrow = &x[j * bsz..j * bsz + bsz];
+                let zrow = &mut self.z[a * l..a * l + l];
+                for k in 0..groups {
+                    let zs = &mut zrow[k * bsz..k * bsz + bsz];
+                    let ws = &wrow[k * bsz..k * bsz + bsz];
+                    for ((zv, &wv), &xv) in zs.iter_mut().zip(ws).zip(xrow) {
+                        *zv += wv * xv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Gate activations and the fused trace-recursion coefficients; also
+    /// advances `h`/`c`. Mirrors the scalar column expression-for-
+    /// expression so lane results are bit-identical.
+    fn activate(&mut self, fill_scratch: bool) {
+        let l = self.lanes();
+        for lane in 0..l {
+            let h_prev = self.h[lane];
+            let c_prev = self.c[lane];
+            let i = sigmoid(self.z[lane] + self.u[lane] * h_prev + self.b[lane]);
+            let f = sigmoid(
+                self.z[l + lane] + self.u[l + lane] * h_prev + self.b[l + lane],
+            );
+            let o = sigmoid(
+                self.z[2 * l + lane]
+                    + self.u[2 * l + lane] * h_prev
+                    + self.b[2 * l + lane],
+            );
+            let g = (self.z[3 * l + lane]
+                + self.u[3 * l + lane] * h_prev
+                + self.b[3 * l + lane])
+                .tanh();
+            let c2 = f * c_prev + i * g;
+            let tanh_c2 = c2.tanh();
+            let h2 = o * tanh_c2;
+            if fill_scratch {
+                let di = i * (1.0 - i);
+                let df = f * (1.0 - f);
+                let do_ = o * (1.0 - o);
+                let dg = 1.0 - g * g;
+                self.a_coef[lane] = c_prev * df * self.u[l + lane]
+                    + i * dg * self.u[3 * l + lane]
+                    + g * di * self.u[lane];
+                self.b_coef[lane] = tanh_c2 * do_ * self.u[2 * l + lane];
+                self.e_coef[lane] = o * (1.0 - tanh_c2 * tanh_c2);
+                self.qi[lane] = g * di;
+                self.qf[lane] = c_prev * df;
+                self.qg[lane] = i * dg;
+                self.ro[lane] = tanh_c2 * do_;
+                self.f_gate[lane] = f;
+                self.h_prev[lane] = h_prev;
+            }
+            self.h[lane] = h2;
+            self.c[lane] = c2;
+        }
+    }
+
+    /// Forward + RTRL trace update for every lane: the batched twin of
+    /// [`LstmColumn::step_with_traces`]. `x` has shape `[m][batch]`
+    /// (batch-innermost); session `b`'s observation feeds all its lanes.
+    pub fn step_traces(&mut self, x: &[f32]) {
+        if self.lanes() == 0 {
+            return;
+        }
+        self.accumulate_gate_preacts(x);
+        self.activate(true);
+        let Self {
+            m,
+            batch,
+            groups,
+            thw,
+            tcw,
+            thu,
+            tcu,
+            thb,
+            tcb,
+            f_gate,
+            a_coef,
+            b_coef,
+            e_coef,
+            qi,
+            qf,
+            qg,
+            ro,
+            h_prev,
+            zero,
+            ..
+        } = self;
+        let (m, bsz, groups) = (*m, *batch, *groups);
+        let l = bsz * groups;
+        for a in 0..4 {
+            // per-gate direct coefficients into c' (q) and h' (r); only
+            // the output gate has an r term, only the others have q.
+            let (q, r): (&[f32], &[f32]) = match a {
+                0 => (&qi[..], &zero[..]),
+                1 => (&qf[..], &zero[..]),
+                2 => (&zero[..], &ro[..]),
+                _ => (&qg[..], &zero[..]),
+            };
+            // W traces: direct term x_j
+            for j in 0..m {
+                let row = (a * m + j) * l;
+                for k in 0..groups {
+                    let off = row + k * bsz;
+                    let lane0 = k * bsz;
+                    for bb in 0..bsz {
+                        let lane = lane0 + bb;
+                        let xj = x[j * bsz + bb];
+                        let th_prev = thw[off + bb];
+                        let tc = f_gate[lane] * tcw[off + bb]
+                            + a_coef[lane] * th_prev
+                            + q[lane] * xj;
+                        thw[off + bb] =
+                            e_coef[lane] * tc + b_coef[lane] * th_prev + r[lane] * xj;
+                        tcw[off + bb] = tc;
+                    }
+                }
+            }
+            // u traces (direct term h(t-1)) and b traces (direct term 1)
+            let row = a * l;
+            for lane in 0..l {
+                let idx = row + lane;
+                let hp = h_prev[lane];
+                let th_prev = thu[idx];
+                let tc = f_gate[lane] * tcu[idx] + a_coef[lane] * th_prev + q[lane] * hp;
+                thu[idx] = e_coef[lane] * tc + b_coef[lane] * th_prev + r[lane] * hp;
+                tcu[idx] = tc;
+                let thb_prev = thb[idx];
+                let tcb_new = f_gate[lane] * tcb[idx] + a_coef[lane] * thb_prev + q[lane];
+                thb[idx] = e_coef[lane] * tcb_new + b_coef[lane] * thb_prev + r[lane];
+                tcb[idx] = tcb_new;
+            }
+        }
+    }
+
+    /// Forward only, no trace bookkeeping (frozen columns).
+    pub fn step_forward(&mut self, x: &[f32]) {
+        if self.lanes() == 0 {
+            return;
+        }
+        self.accumulate_gate_preacts(x);
+        self.activate(false);
+    }
+
+    /// Advance a *single* lane with traces: the strided scalar path used
+    /// for per-session protocol steps against a batched store. Identical
+    /// arithmetic to [`Self::step_traces`], visiting only one lane.
+    pub fn step_lane_traces(&mut self, lane: usize, x: &[f32]) {
+        let (m, l) = (self.m, self.lanes());
+        assert!(lane < l);
+        debug_assert_eq!(x.len(), m);
+        let mut z = [0.0f32; 4];
+        for (a, zv) in z.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (j, &xj) in x.iter().enumerate() {
+                acc += self.w[(a * m + j) * l + lane] * xj;
+            }
+            *zv = acc;
+        }
+        let h_prev = self.h[lane];
+        let c_prev = self.c[lane];
+        let i = sigmoid(z[0] + self.u[lane] * h_prev + self.b[lane]);
+        let f = sigmoid(z[1] + self.u[l + lane] * h_prev + self.b[l + lane]);
+        let o = sigmoid(z[2] + self.u[2 * l + lane] * h_prev + self.b[2 * l + lane]);
+        let g = (z[3] + self.u[3 * l + lane] * h_prev + self.b[3 * l + lane]).tanh();
+        let c2 = f * c_prev + i * g;
+        let tanh_c2 = c2.tanh();
+        let h2 = o * tanh_c2;
+        let di = i * (1.0 - i);
+        let df = f * (1.0 - f);
+        let do_ = o * (1.0 - o);
+        let dg = 1.0 - g * g;
+        let a_coef = c_prev * df * self.u[l + lane]
+            + i * dg * self.u[3 * l + lane]
+            + g * di * self.u[lane];
+        let b_coef = tanh_c2 * do_ * self.u[2 * l + lane];
+        let e_coef = o * (1.0 - tanh_c2 * tanh_c2);
+        let q = [g * di, c_prev * df, 0.0, i * dg];
+        let r = [0.0, 0.0, tanh_c2 * do_, 0.0];
+        for a in 0..4 {
+            let (qa, ra) = (q[a], r[a]);
+            for (j, &xj) in x.iter().enumerate() {
+                let idx = (a * m + j) * l + lane;
+                let th_prev = self.thw[idx];
+                let tc = f * self.tcw[idx] + a_coef * th_prev + qa * xj;
+                self.thw[idx] = e_coef * tc + b_coef * th_prev + ra * xj;
+                self.tcw[idx] = tc;
+            }
+            let idx = a * l + lane;
+            let tcu = f * self.tcu[idx] + a_coef * self.thu[idx] + qa * h_prev;
+            self.thu[idx] = e_coef * tcu + b_coef * self.thu[idx] + ra * h_prev;
+            self.tcu[idx] = tcu;
+            let tcb = f * self.tcb[idx] + a_coef * self.thb[idx] + qa;
+            self.thb[idx] = e_coef * tcb + b_coef * self.thb[idx] + ra;
+            self.tcb[idx] = tcb;
+        }
+        self.h[lane] = h2;
+        self.c[lane] = c2;
+    }
+}
+
+/// The shared shape of every session in a [`ColumnarSessionBatch`].
+#[derive(Clone, Debug)]
+pub struct ColumnarBatchSpec {
+    pub n_inputs: usize,
+    /// columns (= features) per session
+    pub d: usize,
+    pub td: TdConfig,
+    /// normalizer epsilon
+    pub eps: f32,
+    /// normalizer beta
+    pub beta: f32,
+}
+
+/// One session's complete state, extracted from (or insertable into) a
+/// batch: the d columns with their traces, the normalizer statistics and
+/// the TD(lambda) learning state. This is the interchange format between
+/// the batched store, the scalar [`super::session::Session`] path and
+/// snapshots.
+#[derive(Clone, Debug)]
+pub struct ColumnarLane {
+    pub columns: Vec<LstmColumn>,
+    pub norm_mu: Vec<f32>,
+    pub norm_var: Vec<f32>,
+    pub norm_denom: Vec<f32>,
+    pub td: TdState,
+}
+
+/// B columnar TD(lambda) sessions stepped as one SoA batch.
+///
+/// Per step and per session this performs exactly the scalar pipeline —
+/// advance columns with RTRL traces, update/apply the online normalizer,
+/// predict through the linear readout, TD-update readout and column
+/// parameters, decay both eligibility traces — with every per-session
+/// floating-point expression evaluated in the scalar order, so a batched
+/// session's trajectory is identical to the same session stepped alone.
+pub struct ColumnarSessionBatch {
+    spec: ColumnarBatchSpec,
+    stepper: BatchedColumnStepper,
+    // normalizer SoA, [L]
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    denom: Vec<f32>,
+    feats: Vec<f32>,
+    // readout + eligibilities, [L]
+    w_out: Vec<f32>,
+    e_w: Vec<f32>,
+    // theta eligibilities, parallel to the stepper's parameter layout
+    ew_w: Vec<f32>, // [4][m][L]
+    ew_u: Vec<f32>, // [4][L]
+    ew_b: Vec<f32>, // [4][L]
+    // per-session TD bookkeeping, [B]
+    y_prev: Vec<f32>,
+    have_prev: Vec<bool>,
+    steps: Vec<u64>,
+    // scratch
+    xt: Vec<f32>,      // [m][B] observation transpose
+    ys: Vec<f32>,      // [B]
+    a_delta: Vec<f32>, // [B]
+    scale: Vec<f32>,   // [L]
+    wbuf: Vec<f32>,    // [d]
+    fbuf: Vec<f32>,    // [d]
+}
+
+impl ColumnarSessionBatch {
+    /// Expected flat e_theta length for one session under `spec`.
+    fn e_theta_len(spec: &ColumnarBatchSpec) -> usize {
+        spec.d * LstmColumn::n_params(spec.n_inputs)
+    }
+
+    /// Build a batch holding `lanes` sessions (possibly zero).
+    pub fn from_lanes(
+        spec: ColumnarBatchSpec,
+        lanes: &[ColumnarLane],
+    ) -> Result<Self, String> {
+        let (n, d) = (spec.n_inputs, spec.d);
+        let bsz = lanes.len();
+        let l = d * bsz;
+        let mut batch = Self {
+            stepper: BatchedColumnStepper::new(n, bsz, d),
+            mu: vec![0.0; l],
+            var: vec![0.0; l],
+            denom: vec![0.0; l],
+            feats: vec![0.0; l],
+            w_out: vec![0.0; l],
+            e_w: vec![0.0; l],
+            ew_w: vec![0.0; 4 * n * l],
+            ew_u: vec![0.0; 4 * l],
+            ew_b: vec![0.0; 4 * l],
+            y_prev: vec![0.0; bsz],
+            have_prev: vec![false; bsz],
+            steps: vec![0; bsz],
+            xt: vec![0.0; n * bsz],
+            ys: vec![0.0; bsz],
+            a_delta: vec![0.0; bsz],
+            scale: vec![0.0; l],
+            wbuf: vec![0.0; d],
+            fbuf: vec![0.0; d],
+            spec,
+        };
+        for (b_, lane) in lanes.iter().enumerate() {
+            batch.write_lane(b_, lane)?;
+        }
+        Ok(batch)
+    }
+
+    /// Number of sessions currently in the batch.
+    pub fn len(&self) -> usize {
+        self.y_prev.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn spec(&self) -> &ColumnarBatchSpec {
+        &self.spec
+    }
+
+    pub fn session_steps(&self, b: usize) -> u64 {
+        self.steps[b]
+    }
+
+    fn write_lane(&mut self, b_: usize, lane: &ColumnarLane) -> Result<(), String> {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let bsz = self.len();
+        let l = d * bsz;
+        let np = LstmColumn::n_params(n);
+        if lane.columns.len() != d {
+            return Err(format!("lane has {} columns, want {d}", lane.columns.len()));
+        }
+        if lane.columns.iter().any(|c| c.m != n) {
+            return Err(format!("lane column width != {n}"));
+        }
+        if lane.norm_mu.len() != d
+            || lane.norm_var.len() != d
+            || lane.norm_denom.len() != d
+        {
+            return Err("lane normalizer width mismatch".into());
+        }
+        if lane.td.w.len() != d || lane.td.e_w.len() != d {
+            return Err("lane readout width mismatch".into());
+        }
+        if lane.td.e_theta.len() != d * np {
+            return Err(format!(
+                "lane e_theta length {} != {}",
+                lane.td.e_theta.len(),
+                d * np
+            ));
+        }
+        for k in 0..d {
+            let ln = k * bsz + b_;
+            self.stepper.load_lane(ln, &lane.columns[k]);
+            self.mu[ln] = lane.norm_mu[k];
+            self.var[ln] = lane.norm_var[k];
+            self.denom[ln] = lane.norm_denom[k];
+            self.w_out[ln] = lane.td.w[k];
+            self.e_w[ln] = lane.td.e_w[k];
+            // scalar e_theta layout per column: [4n W | 4 u | 4 b]
+            let base = k * np;
+            for a in 0..4 {
+                for j in 0..n {
+                    self.ew_w[(a * n + j) * l + ln] = lane.td.e_theta[base + a * n + j];
+                }
+                self.ew_u[a * l + ln] = lane.td.e_theta[base + 4 * n + a];
+                self.ew_b[a * l + ln] = lane.td.e_theta[base + 4 * n + 4 + a];
+            }
+        }
+        self.y_prev[b_] = lane.td.y_prev;
+        self.have_prev[b_] = lane.td.have_prev;
+        self.steps[b_] = lane.td.steps;
+        Ok(())
+    }
+
+    /// Extract session `b_` as a standalone [`ColumnarLane`] (the batch
+    /// is unchanged).
+    pub fn extract_lane(&self, b_: usize) -> ColumnarLane {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let bsz = self.len();
+        let l = d * bsz;
+        let np = LstmColumn::n_params(n);
+        let mut columns = Vec::with_capacity(d);
+        let mut norm_mu = Vec::with_capacity(d);
+        let mut norm_var = Vec::with_capacity(d);
+        let mut norm_denom = Vec::with_capacity(d);
+        let mut w = Vec::with_capacity(d);
+        let mut e_w = Vec::with_capacity(d);
+        let mut e_theta = vec![0.0; d * np];
+        for k in 0..d {
+            let ln = k * bsz + b_;
+            columns.push(self.stepper.extract_lane(ln));
+            norm_mu.push(self.mu[ln]);
+            norm_var.push(self.var[ln]);
+            norm_denom.push(self.denom[ln]);
+            w.push(self.w_out[ln]);
+            e_w.push(self.e_w[ln]);
+            let base = k * np;
+            for a in 0..4 {
+                for j in 0..n {
+                    e_theta[base + a * n + j] = self.ew_w[(a * n + j) * l + ln];
+                }
+                e_theta[base + 4 * n + a] = self.ew_u[a * l + ln];
+                e_theta[base + 4 * n + 4 + a] = self.ew_b[a * l + ln];
+            }
+        }
+        ColumnarLane {
+            columns,
+            norm_mu,
+            norm_var,
+            norm_denom,
+            td: TdState {
+                w,
+                e_w,
+                e_theta,
+                y_prev: self.y_prev[b_],
+                have_prev: self.have_prev[b_],
+                epoch_seen: 1, // columnar nets never change epoch after init
+                steps: self.steps[b_],
+            },
+        }
+    }
+
+    pub fn extract_all(&self) -> Vec<ColumnarLane> {
+        (0..self.len()).map(|b_| self.extract_lane(b_)).collect()
+    }
+
+    /// Add a session; returns its lane index. O(total batch state) — the
+    /// SoA arrays are re-laid-out — which is fine for open/restore but
+    /// not for per-step paths.
+    pub fn push_lane(&mut self, lane: ColumnarLane) -> Result<usize, String> {
+        let mut lanes = self.extract_all();
+        lanes.push(lane);
+        *self = Self::from_lanes(self.spec.clone(), &lanes)?;
+        Ok(self.len() - 1)
+    }
+
+    /// Remove session `idx`, returning it. The **last** session moves
+    /// into slot `idx` (swap-remove) — callers owning an id→lane map
+    /// must re-key that moved session.
+    pub fn swap_remove_lane(&mut self, idx: usize) -> Result<ColumnarLane, String> {
+        let mut lanes = self.extract_all();
+        if idx >= lanes.len() {
+            return Err(format!("lane {idx} out of range"));
+        }
+        let removed = lanes.swap_remove(idx);
+        *self = Self::from_lanes(self.spec.clone(), &lanes)?;
+        Ok(removed)
+    }
+
+    /// Shared normalizer recursion (identical to
+    /// [`crate::nets::normalizer::OnlineNormalizer::update_and_normalize`]).
+    #[inline]
+    fn normalize_lane(&mut self, lane: usize) {
+        let beta = self.spec.beta;
+        let fv = self.stepper.h[lane];
+        let prev_mu = self.mu[lane];
+        let mu = beta * prev_mu + (1.0 - beta) * fv;
+        let var = beta * self.var[lane] + (1.0 - beta) * (mu - fv) * (prev_mu - fv);
+        self.mu[lane] = mu;
+        self.var[lane] = var;
+        let dn = self.spec.eps.max(var.max(0.0).sqrt());
+        self.denom[lane] = dn;
+        self.feats[lane] = (fv - mu) / dn;
+    }
+
+    /// Readout prediction for session `b_`, gathered into contiguous
+    /// buffers so the dot product uses the exact summation order of the
+    /// scalar agent's `util::dot`.
+    #[inline]
+    fn predict_session(&mut self, b_: usize) -> f32 {
+        let (d, bsz) = (self.spec.d, self.len());
+        for k in 0..d {
+            self.wbuf[k] = self.w_out[k * bsz + b_];
+            self.fbuf[k] = self.feats[k * bsz + b_];
+        }
+        dot(&self.wbuf, &self.fbuf)
+    }
+
+    /// One TD(lambda) step for **all** sessions: `obs` is `[B][n]`
+    /// session-major, `cumulants` is `[B]`. Returns the predictions made
+    /// this step. This is the serving hot path.
+    pub fn step_all(&mut self, obs: &[f32], cumulants: &[f32]) -> &[f32] {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let bsz = self.len();
+        assert_eq!(obs.len(), n * bsz, "obs shape");
+        assert_eq!(cumulants.len(), bsz, "cumulant shape");
+        if bsz == 0 {
+            return &self.ys;
+        }
+        let l = d * bsz;
+        // transpose observations to [n][B] for the SoA kernel
+        for j in 0..n {
+            for b_ in 0..bsz {
+                self.xt[j * bsz + b_] = obs[b_ * n + j];
+            }
+        }
+        self.stepper.step_traces(&self.xt);
+        for lane in 0..l {
+            self.normalize_lane(lane);
+        }
+        for b_ in 0..bsz {
+            self.ys[b_] = self.predict_session(b_);
+        }
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.spec.td;
+        for b_ in 0..bsz {
+            self.a_delta[b_] = if self.have_prev[b_] {
+                alpha * (cumulants[b_] + gamma * self.ys[b_] - self.y_prev[b_])
+            } else {
+                0.0
+            };
+        }
+        // TD update of readout and column parameters (using the
+        // eligibilities accumulated through t-1), then trace decay with
+        // this step's gradients — the scalar agent's order.
+        for lane in 0..l {
+            self.w_out[lane] += self.a_delta[lane % bsz] * self.e_w[lane];
+        }
+        for a in 0..4 {
+            for j in 0..n {
+                let row = (a * n + j) * l;
+                for lane in 0..l {
+                    self.stepper.w[row + lane] +=
+                        self.a_delta[lane % bsz] * self.ew_w[row + lane];
+                }
+            }
+            let row = a * l;
+            for lane in 0..l {
+                let ad = self.a_delta[lane % bsz];
+                self.stepper.u[row + lane] += ad * self.ew_u[row + lane];
+                self.stepper.b[row + lane] += ad * self.ew_b[row + lane];
+            }
+        }
+        let gl = gamma * lambda;
+        for lane in 0..l {
+            self.e_w[lane] = gl * self.e_w[lane] + self.feats[lane];
+        }
+        // dy/dtheta = (w_k / denom_k) * TH — with the *updated* readout,
+        // as in the scalar agent.
+        for lane in 0..l {
+            self.scale[lane] = self.w_out[lane] / self.denom[lane];
+        }
+        for a in 0..4 {
+            for j in 0..n {
+                let row = (a * n + j) * l;
+                for lane in 0..l {
+                    self.ew_w[row + lane] = gl * self.ew_w[row + lane]
+                        + self.scale[lane] * self.stepper.thw[row + lane];
+                }
+            }
+            let row = a * l;
+            for lane in 0..l {
+                self.ew_u[row + lane] = gl * self.ew_u[row + lane]
+                    + self.scale[lane] * self.stepper.thu[row + lane];
+                self.ew_b[row + lane] = gl * self.ew_b[row + lane]
+                    + self.scale[lane] * self.stepper.thb[row + lane];
+            }
+        }
+        for b_ in 0..bsz {
+            self.y_prev[b_] = self.ys[b_];
+            self.have_prev[b_] = true;
+            self.steps[b_] += 1;
+        }
+        &self.ys
+    }
+
+    /// One TD(lambda) step for a single session (strided path for
+    /// per-session protocol requests). Identical arithmetic to
+    /// [`Self::step_all`] restricted to session `b_`.
+    pub fn step_one(&mut self, b_: usize, x: &[f32], cumulant: f32) -> f32 {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let bsz = self.len();
+        assert!(b_ < bsz);
+        assert_eq!(x.len(), n, "obs width");
+        let l = d * bsz;
+        for k in 0..d {
+            self.stepper.step_lane_traces(k * bsz + b_, x);
+        }
+        for k in 0..d {
+            self.normalize_lane(k * bsz + b_);
+        }
+        let y = self.predict_session(b_);
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.spec.td;
+        if self.have_prev[b_] {
+            let ad = alpha * (cumulant + gamma * y - self.y_prev[b_]);
+            for k in 0..d {
+                let lane = k * bsz + b_;
+                self.w_out[lane] += ad * self.e_w[lane];
+            }
+            for a in 0..4 {
+                for j in 0..n {
+                    for k in 0..d {
+                        let idx = (a * n + j) * l + k * bsz + b_;
+                        self.stepper.w[idx] += ad * self.ew_w[idx];
+                    }
+                }
+                for k in 0..d {
+                    let idx = a * l + k * bsz + b_;
+                    self.stepper.u[idx] += ad * self.ew_u[idx];
+                    self.stepper.b[idx] += ad * self.ew_b[idx];
+                }
+            }
+        }
+        let gl = gamma * lambda;
+        for k in 0..d {
+            let lane = k * bsz + b_;
+            self.e_w[lane] = gl * self.e_w[lane] + self.feats[lane];
+            let scale = self.w_out[lane] / self.denom[lane];
+            for a in 0..4 {
+                for j in 0..n {
+                    let idx = (a * n + j) * l + lane;
+                    self.ew_w[idx] =
+                        gl * self.ew_w[idx] + scale * self.stepper.thw[idx];
+                }
+                let idx = a * l + lane;
+                self.ew_u[idx] = gl * self.ew_u[idx] + scale * self.stepper.thu[idx];
+                self.ew_b[idx] = gl * self.ew_b[idx] + scale * self.stepper.thb[idx];
+            }
+        }
+        self.y_prev[b_] = y;
+        self.have_prev[b_] = true;
+        self.steps[b_] += 1;
+        y
+    }
+
+    /// Prediction without learning for one session. The recurrent state,
+    /// traces and normalizer advance (exactly like the scalar agent's
+    /// `predict_only`), but no TD update happens and the bootstrap
+    /// bookkeeping is untouched.
+    pub fn predict_one(&mut self, b_: usize, x: &[f32]) -> f32 {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let bsz = self.len();
+        assert!(b_ < bsz);
+        assert_eq!(x.len(), n, "obs width");
+        for k in 0..d {
+            self.stepper.step_lane_traces(k * bsz + b_, x);
+        }
+        for k in 0..d {
+            self.normalize_lane(k * bsz + b_);
+        }
+        self.predict_session(b_)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+    use crate::util::prng::Xoshiro256;
+
+    fn random_column(m: usize, rng: &mut Xoshiro256) -> LstmColumn {
+        let mut col = LstmColumn::new(m, rng, 0.8);
+        // randomize state and traces too, so parity covers warm columns
+        col.h = rng.uniform(-0.5, 0.5);
+        col.c = rng.uniform(-0.5, 0.5);
+        for v in col.thw.iter_mut().chain(col.tcw.iter_mut()) {
+            *v = rng.uniform(-0.1, 0.1);
+        }
+        col
+    }
+
+    fn assert_lane_close(cols: &[LstmColumn], stepper: &BatchedColumnStepper, tol: f32) {
+        for (lane, col) in cols.iter().enumerate() {
+            let got = stepper.extract_lane(lane);
+            assert!((got.h - col.h).abs() <= tol, "h: {} vs {}", got.h, col.h);
+            assert!((got.c - col.c).abs() <= tol, "c: {} vs {}", got.c, col.c);
+            for p in 0..4 * col.m {
+                assert!(
+                    (got.thw[p] - col.thw[p]).abs() <= tol,
+                    "TH[{p}]: {} vs {}",
+                    got.thw[p],
+                    col.thw[p]
+                );
+                assert!(
+                    (got.tcw[p] - col.tcw[p]).abs() <= tol,
+                    "TC[{p}]: {} vs {}",
+                    got.tcw[p],
+                    col.tcw[p]
+                );
+            }
+            for a in 0..4 {
+                assert!((got.thu[a] - col.thu[a]).abs() <= tol);
+                assert!((got.tcu[a] - col.tcu[a]).abs() <= tol);
+                assert!((got.thb[a] - col.thb[a]).abs() <= tol);
+                assert!((got.tcb[a] - col.tcb[a]).abs() <= tol);
+            }
+        }
+    }
+
+    #[test]
+    fn load_extract_roundtrip_is_exact() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = 5;
+        let cols: Vec<LstmColumn> = (0..6).map(|_| random_column(m, &mut rng)).collect();
+        let mut st = BatchedColumnStepper::new(m, 6, 1);
+        for (i, c) in cols.iter().enumerate() {
+            st.load_lane(i, c);
+        }
+        for (i, c) in cols.iter().enumerate() {
+            let got = st.extract_lane(i);
+            assert_eq!(got.w, c.w);
+            assert_eq!(got.u, c.u);
+            assert_eq!(got.h, c.h);
+            assert_eq!(got.thw, c.thw);
+            assert_eq!(got.tcb, c.tcb);
+        }
+    }
+
+    /// The ISSUE's acceptance property: batched == scalar to <= 1e-6 on
+    /// h, c, TH, TC over random widths, batch sizes and 100-step
+    /// rollouts. (The implementation is expression-for-expression
+    /// identical, so this holds exactly; the tolerance is the contract.)
+    #[test]
+    fn prop_batched_stepper_matches_scalar_columns() {
+        check("batched == scalar column stepping", 15, |g| {
+            let m = g.sized_usize(1, 9);
+            let bsz = g.sized_usize(1, 7);
+            let mut rng = Xoshiro256::seed_from_u64(g.rng.next_u64());
+            let mut cols: Vec<LstmColumn> =
+                (0..bsz).map(|_| random_column(m, &mut rng)).collect();
+            let mut st = BatchedColumnStepper::new(m, bsz, 1);
+            for (i, c) in cols.iter().enumerate() {
+                st.load_lane(i, c);
+            }
+            for _ in 0..100 {
+                // one observation per lane (groups == 1): shape [m][B]
+                let xs: Vec<Vec<f32>> = (0..bsz)
+                    .map(|_| (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect())
+                    .collect();
+                let mut xt = vec![0.0f32; m * bsz];
+                for (b_, x) in xs.iter().enumerate() {
+                    for j in 0..m {
+                        xt[j * bsz + b_] = x[j];
+                    }
+                }
+                st.step_traces(&xt);
+                for (col, x) in cols.iter_mut().zip(&xs) {
+                    col.step_with_traces(x);
+                }
+            }
+            for (lane, col) in cols.iter().enumerate() {
+                let got = st.extract_lane(lane);
+                let tol = 1e-6f32;
+                if (got.h - col.h).abs() > tol || (got.c - col.c).abs() > tol {
+                    return Err(format!("state diverged: h {} vs {}", got.h, col.h));
+                }
+                for p in 0..4 * m {
+                    if (got.thw[p] - col.thw[p]).abs() > tol
+                        || (got.tcw[p] - col.tcw[p]).abs() > tol
+                    {
+                        return Err(format!("trace {p} diverged"));
+                    }
+                }
+                for a in 0..4 {
+                    if (got.thu[a] - col.thu[a]).abs() > tol
+                        || (got.tcu[a] - col.tcu[a]).abs() > tol
+                        || (got.thb[a] - col.thb[a]).abs() > tol
+                        || (got.tcb[a] - col.tcb[a]).abs() > tol
+                    {
+                        return Err(format!("u/b trace {a} diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_lanes_share_observations() {
+        // groups = d > 1: all of a session's columns see the same x.
+        let (m, bsz, d) = (4, 3, 2);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let cols: Vec<Vec<LstmColumn>> = (0..bsz)
+            .map(|_| (0..d).map(|_| random_column(m, &mut rng)).collect())
+            .collect();
+        let mut st = BatchedColumnStepper::new(m, bsz, d);
+        for (b_, session) in cols.iter().enumerate() {
+            for (k, c) in session.iter().enumerate() {
+                st.load_lane(k * bsz + b_, c);
+            }
+        }
+        let mut scalar = cols.clone();
+        for _ in 0..60 {
+            let xs: Vec<Vec<f32>> = (0..bsz)
+                .map(|_| (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect())
+                .collect();
+            let mut xt = vec![0.0f32; m * bsz];
+            for (b_, x) in xs.iter().enumerate() {
+                for j in 0..m {
+                    xt[j * bsz + b_] = x[j];
+                }
+            }
+            st.step_traces(&xt);
+            for (b_, session) in scalar.iter_mut().enumerate() {
+                for col in session.iter_mut() {
+                    col.step_with_traces(&xs[b_]);
+                }
+            }
+        }
+        let flat: Vec<LstmColumn> = (0..d)
+            .flat_map(|k| (0..bsz).map(move |b_| (k, b_)))
+            .map(|(k, b_)| scalar[b_][k].clone())
+            .collect();
+        assert_lane_close(&flat, &st, 1e-6);
+    }
+
+    #[test]
+    fn step_lane_matches_full_step() {
+        let (m, bsz) = (5, 4);
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let cols: Vec<LstmColumn> =
+            (0..bsz).map(|_| random_column(m, &mut rng)).collect();
+        let mut full = BatchedColumnStepper::new(m, bsz, 1);
+        let mut lane_wise = BatchedColumnStepper::new(m, bsz, 1);
+        for (i, c) in cols.iter().enumerate() {
+            full.load_lane(i, c);
+            lane_wise.load_lane(i, c);
+        }
+        for _ in 0..40 {
+            let xs: Vec<Vec<f32>> = (0..bsz)
+                .map(|_| (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect())
+                .collect();
+            let mut xt = vec![0.0f32; m * bsz];
+            for (b_, x) in xs.iter().enumerate() {
+                for j in 0..m {
+                    xt[j * bsz + b_] = x[j];
+                }
+            }
+            full.step_traces(&xt);
+            for (b_, x) in xs.iter().enumerate() {
+                lane_wise.step_lane_traces(b_, x);
+            }
+        }
+        for lane in 0..bsz {
+            let a = full.extract_lane(lane);
+            let b = lane_wise.extract_lane(lane);
+            assert_eq!(a.h, b.h, "strided single-lane path must match batch");
+            assert_eq!(a.thw, b.thw);
+            assert_eq!(a.tcu, b.tcu);
+        }
+    }
+
+    fn fresh_lane(spec: &ColumnarBatchSpec, seed: u64) -> ColumnarLane {
+        // a freshly opened session: random columns, unit normalizer
+        // stats, zero learning state — exactly what a scalar columnar
+        // CcnNet + TdLambdaAgent start from.
+        let net = crate::config::build_ccn(
+            &crate::config::LearnerKind::Columnar { d: spec.d },
+            spec.n_inputs,
+            spec.eps,
+            seed,
+        )
+        .unwrap();
+        let columns = (0..spec.d).map(|k| net.column(0, k).clone()).collect();
+        let (mu, var, denom) = net.stage_norm(0).state();
+        ColumnarLane {
+            columns,
+            norm_mu: mu.to_vec(),
+            norm_var: var.to_vec(),
+            norm_denom: denom.to_vec(),
+            td: TdState {
+                w: vec![0.0; spec.d],
+                e_w: vec![0.0; spec.d],
+                e_theta: vec![0.0; spec.d * LstmColumn::n_params(spec.n_inputs)],
+                y_prev: 0.0,
+                have_prev: false,
+                epoch_seen: 1,
+                steps: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn batched_sessions_match_scalar_agents_exactly() {
+        use crate::config::{build_ccn, LearnerKind};
+        use crate::learn::TdLambdaAgent;
+
+        // beta must be NORM_BETA so the scalar twins (built via
+        // build_ccn, which hardwires the paper's beta) match the batch.
+        let spec = ColumnarBatchSpec {
+            n_inputs: 3,
+            d: 4,
+            td: TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+            eps: 0.01,
+            beta: crate::nets::normalizer::NORM_BETA,
+        };
+        let bsz = 3;
+        let lanes: Vec<ColumnarLane> =
+            (0..bsz as u64).map(|s| fresh_lane(&spec, s)).collect();
+        let mut batch = ColumnarSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        let mut scalars: Vec<TdLambdaAgent<crate::nets::ccn::CcnNet>> = (0..bsz
+            as u64)
+            .map(|s| {
+                let net = build_ccn(
+                    &LearnerKind::Columnar { d: spec.d },
+                    spec.n_inputs,
+                    spec.eps,
+                    s,
+                )
+                .unwrap();
+                TdLambdaAgent::new(net, spec.td)
+            })
+            .collect();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for t in 0..300 {
+            let obs: Vec<f32> = (0..bsz * spec.n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let cs: Vec<f32> = (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            for (b_, agent) in scalars.iter_mut().enumerate() {
+                let x = &obs[b_ * spec.n_inputs..(b_ + 1) * spec.n_inputs];
+                let y = agent.step(x, cs[b_]);
+                assert!(
+                    (ys[b_] - y).abs() <= 1e-6,
+                    "t={t} b={b_}: batched {} vs scalar {y}",
+                    ys[b_]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_one_matches_step_all() {
+        let spec = ColumnarBatchSpec {
+            n_inputs: 4,
+            d: 3,
+            td: TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.95,
+            },
+            eps: 0.01,
+            beta: 0.999,
+        };
+        let bsz = 4usize;
+        let lanes: Vec<ColumnarLane> =
+            (0..bsz as u64).map(|s| fresh_lane(&spec, s)).collect();
+        let mut a = ColumnarSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        let mut b = ColumnarSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for _ in 0..100 {
+            let obs: Vec<f32> = (0..bsz * spec.n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let cs: Vec<f32> = (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = a.step_all(&obs, &cs).to_vec();
+            for b_ in 0..bsz {
+                let y = b.step_one(
+                    b_,
+                    &obs[b_ * spec.n_inputs..(b_ + 1) * spec.n_inputs],
+                    cs[b_],
+                );
+                assert_eq!(ys[b_], y, "session {b_}");
+            }
+        }
+    }
+
+    #[test]
+    fn membership_changes_leave_survivors_untouched() {
+        let spec = ColumnarBatchSpec {
+            n_inputs: 3,
+            d: 2,
+            td: TdConfig::default(),
+            eps: 0.01,
+            beta: 0.999,
+        };
+        let lanes: Vec<ColumnarLane> =
+            (0..3u64).map(|s| fresh_lane(&spec, s)).collect();
+        let mut batch = ColumnarSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        let mut solo = ColumnarSessionBatch::from_lanes(
+            spec.clone(),
+            &[lanes[1].clone()],
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        // step everyone a while
+        for _ in 0..50 {
+            let obs: Vec<f32> = (0..3 * spec.n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let cs = [0.1f32, -0.2, 0.3];
+            batch.step_all(&obs, &cs);
+            solo.step_one(
+                0,
+                &obs[spec.n_inputs..2 * spec.n_inputs],
+                cs[1],
+            );
+        }
+        // remove session 0; session 2 swaps into slot 0, session 1 stays
+        batch.swap_remove_lane(0).unwrap();
+        assert_eq!(batch.len(), 2);
+        // grow again
+        batch.push_lane(fresh_lane(&spec, 99)).unwrap();
+        assert_eq!(batch.len(), 3);
+        // session 1 (still at index 1) must have been unaffected
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..spec.n_inputs).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y_batch = batch.step_one(1, &x, 0.05);
+            let y_solo = solo.step_one(0, &x, 0.05);
+            assert_eq!(y_batch, y_solo, "membership churn corrupted a survivor");
+        }
+    }
+}

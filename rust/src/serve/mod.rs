@@ -1,0 +1,146 @@
+//! `serve` — the multi-session online prediction service.
+//!
+//! The paper's learners run one stream at a time
+//! ([`crate::coordinator::runner`]). Production traffic is thousands of
+//! concurrent streams, each an independent online TD(lambda) session.
+//! This subsystem turns the reproduction into that service:
+//!
+//! - [`session`]: session lifecycle — open from a [`crate::config::LearnerKind`]
+//!   spec, step, predict, snapshot to JSON, restore, close. Sessions wrap
+//!   the existing [`crate::learn::TdLambdaAgent`] over a concrete
+//!   [`crate::nets::ccn::CcnNet`].
+//! - [`batch`]: the hot path — B independent columns (and full columnar
+//!   sessions) laid out in structure-of-arrays form and advanced in one
+//!   fused, vectorizable pass, parity-checked against the scalar
+//!   [`crate::nets::lstm_column::LstmColumn`].
+//! - [`shard`]: N worker threads each owning a disjoint id-routed set of
+//!   sessions behind an mpsc queue; aggregate throughput scales with
+//!   cores and the hot path takes no locks.
+//! - [`protocol`]: the JSONL wire format.
+//!
+//! # Protocol
+//!
+//! `ccn serve --shards N` speaks JSON-Lines over stdin/stdout: one
+//! request object per input line produces exactly one response object on
+//! stdout, in order. Every response has `"ok": true` or
+//! `"ok": false, "error": "..."`.
+//!
+//! | op | request | response |
+//! |----|---------|----------|
+//! | `open` | `{"op":"open","learner":"columnar:8","n_inputs":8,"alpha":0.001,"gamma":0.9,"lambda":0.99,"eps":0.01,"seed":0}` | `{"ok":true,"id":1}` |
+//! | `step` | `{"op":"step","id":1,"x":[...],"c":0.25}` | `{"ok":true,"y":0.41}` |
+//! | `step_batch` | `{"op":"step_batch","ids":[1,2],"xs":[[...],[...]],"cs":[0,1]}` | `{"ok":true,"ys":[0.4,0.2]}` (failed items are `null`, detailed under `"errors"`) |
+//! | `predict` | `{"op":"predict","id":1,"x":[...]}` | `{"ok":true,"y":0.41}` (advances state, no learning) |
+//! | `snapshot` | `{"op":"snapshot","id":1}` | `{"ok":true,"state":{...}}` |
+//! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically) |
+//! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"steps":5000,"shards":[...]}` |
+//!
+//! `learner` accepts the CCN family: `columnar:D`,
+//! `constructive:TOTAL:STEPS_PER_STAGE`, `ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE`.
+//! The dense baselines (`tbptt`, `snap1`) are benchmark comparators, not
+//! serveable learners, and are refused at `open`.
+//!
+//! Pure-columnar sessions with identical shape are transparently stored
+//! in SoA batches per shard; a `step_batch` covering all of them advances
+//! each shard's batch in one fused pass. Batched and scalar paths produce
+//! identical numbers — placement is purely a throughput decision.
+
+pub mod batch;
+pub mod protocol;
+pub mod session;
+pub mod shard;
+
+pub use batch::{BatchedColumnStepper, ColumnarBatchSpec, ColumnarLane, ColumnarSessionBatch};
+pub use session::{Session, SessionSpec};
+pub use shard::{ShardPool, ShardState};
+
+use std::io::{BufRead, Write};
+
+use crate::util::json::Json;
+use protocol::{parse_wire_op, Request, Response, WireOp};
+
+/// The protocol front end: parses request lines, routes them through a
+/// [`ShardPool`], encodes responses.
+pub struct Service {
+    pool: ShardPool,
+}
+
+impl Service {
+    pub fn new(n_shards: usize) -> Self {
+        Self {
+            pool: ShardPool::new(n_shards),
+        }
+    }
+
+    pub fn pool(&self) -> &ShardPool {
+        &self.pool
+    }
+
+    /// Execute one already-parsed wire operation.
+    pub fn handle_op(&self, op: WireOp) -> Json {
+        let resp = match op {
+            WireOp::Open(spec) => self.pool.open(spec),
+            WireOp::Step { id, x, c } => self.pool.call(Request::Step { id, x, c }),
+            WireOp::StepBatch(items) => Response::SteppedMany {
+                ys: self.pool.step_batch(items),
+            },
+            WireOp::Predict { id, x } => self.pool.call(Request::Predict { id, x }),
+            WireOp::Snapshot { id } => self.pool.call(Request::Snapshot { id }),
+            WireOp::Restore(state) => self.pool.restore(state),
+            WireOp::Close { id } => self.pool.call(Request::Close { id }),
+            WireOp::Stats => {
+                let per_shard = self.pool.stats();
+                let (sessions, steps) = per_shard
+                    .iter()
+                    .fold((0usize, 0u64), |(a, b), &(s, t)| (a + s, b + t));
+                let shards: Vec<Json> = per_shard
+                    .iter()
+                    .map(|&(s, t)| {
+                        Json::obj(vec![
+                            ("sessions", Json::Num(s as f64)),
+                            ("steps", Json::Num(t as f64)),
+                        ])
+                    })
+                    .collect();
+                return Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("sessions", Json::Num(sessions as f64)),
+                    ("steps", Json::Num(steps as f64)),
+                    ("shards", Json::Arr(shards)),
+                ]);
+            }
+        };
+        resp.to_json()
+    }
+
+    /// Handle one raw request line (the unit the JSONL loop and the
+    /// end-to-end tests drive). Always returns a single-line response.
+    pub fn handle_line(&self, line: &str) -> String {
+        let reply = match Json::parse(line) {
+            Err(e) => Response::error(format!("bad json: {e}")).to_json(),
+            Ok(v) => match parse_wire_op(&v) {
+                Err(e) => Response::error(e).to_json(),
+                Ok(op) => self.handle_op(op),
+            },
+        };
+        reply.dump()
+    }
+
+    /// Serve JSONL over stdin/stdout until EOF. Blank lines are ignored.
+    pub fn run_stdio(&self) -> Result<(), String> {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        for line in stdin.lock().lines() {
+            let line = line.map_err(|e| e.to_string())?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = self.handle_line(&line);
+            writeln!(out, "{reply}").map_err(|e| e.to_string())?;
+            out.flush().map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    }
+}

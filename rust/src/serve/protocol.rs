@@ -1,0 +1,342 @@
+//! The serve wire protocol: JSONL requests/responses over stdin/stdout.
+//!
+//! One JSON object per line in, one JSON object per line out, strictly in
+//! request order. Every response carries `"ok": true|false`; failures
+//! carry `"error"`. See [`crate::serve`] module docs for the full
+//! operation reference with examples.
+
+use crate::util::json::Json;
+
+use super::session::SessionSpec;
+
+/// A single step item: session id, observation, cumulant.
+#[derive(Clone, Debug)]
+pub struct StepItem {
+    pub id: u64,
+    pub x: Vec<f32>,
+    pub c: f32,
+}
+
+/// Requests a shard can execute. `Open`/`Restore` carry the id the
+/// service pre-assigned (ids are allocated centrally, routed by
+/// `id % n_shards`).
+#[derive(Clone, Debug)]
+pub enum Request {
+    Open { id: u64, spec: SessionSpec },
+    Step { id: u64, x: Vec<f32>, c: f32 },
+    /// Step many sessions of this shard in one call (the batched path).
+    StepMany { items: Vec<StepItem> },
+    Predict { id: u64, x: Vec<f32> },
+    Snapshot { id: u64 },
+    Restore { id: u64, state: Json },
+    Close { id: u64 },
+    Stats,
+}
+
+impl Request {
+    /// The session id this request routes on (`None` for shard-local
+    /// aggregates like `Stats` and pre-partitioned `StepMany`).
+    pub fn route_id(&self) -> Option<u64> {
+        match self {
+            Request::Open { id, .. }
+            | Request::Step { id, .. }
+            | Request::Predict { id, .. }
+            | Request::Snapshot { id }
+            | Request::Restore { id, .. }
+            | Request::Close { id } => Some(*id),
+            Request::StepMany { .. } | Request::Stats => None,
+        }
+    }
+}
+
+/// Shard replies, mirrored 1:1 from requests.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Opened { id: u64 },
+    Stepped { y: f32 },
+    SteppedMany { ys: Vec<Result<f32, String>> },
+    Predicted { y: f32 },
+    Snapshotted { state: Json },
+    Closed { id: u64, steps: u64 },
+    Stats { sessions: usize, steps: u64 },
+    Error { message: String },
+}
+
+impl Response {
+    pub fn error(message: impl Into<String>) -> Response {
+        Response::Error {
+            message: message.into(),
+        }
+    }
+
+    /// Encode as one wire object.
+    pub fn to_json(&self) -> Json {
+        let ok = |mut fields: Vec<(&str, Json)>| {
+            let mut all = vec![("ok", Json::Bool(true))];
+            all.append(&mut fields);
+            Json::obj(all)
+        };
+        match self {
+            Response::Opened { id } => ok(vec![("id", Json::Num(*id as f64))]),
+            Response::Stepped { y } => ok(vec![("y", Json::Num(*y as f64))]),
+            Response::SteppedMany { ys } => {
+                let arr: Vec<Json> = ys
+                    .iter()
+                    .map(|r| match r {
+                        Ok(y) => Json::Num(*y as f64),
+                        Err(_) => Json::Null,
+                    })
+                    .collect();
+                let errors: Vec<Json> = ys
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, r)| match r {
+                        Ok(_) => None,
+                        Err(e) => Some(Json::obj(vec![
+                            ("index", Json::Num(i as f64)),
+                            ("error", Json::Str(e.clone())),
+                        ])),
+                    })
+                    .collect();
+                let mut fields = vec![("ys", Json::Arr(arr))];
+                if !errors.is_empty() {
+                    fields.push(("errors", Json::Arr(errors)));
+                }
+                ok(fields)
+            }
+            Response::Predicted { y } => ok(vec![("y", Json::Num(*y as f64))]),
+            Response::Snapshotted { state } => {
+                ok(vec![("state", state.clone())])
+            }
+            Response::Closed { id, steps } => ok(vec![
+                ("id", Json::Num(*id as f64)),
+                ("steps", Json::Num(*steps as f64)),
+            ]),
+            Response::Stats { sessions, steps } => ok(vec![
+                ("sessions", Json::Num(*sessions as f64)),
+                ("steps", Json::Num(*steps as f64)),
+            ]),
+            Response::Error { message } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(message.clone())),
+            ]),
+        }
+    }
+}
+
+/// A parsed wire operation, before the service assigns ids / routes.
+#[derive(Clone, Debug)]
+pub enum WireOp {
+    Open(SessionSpec),
+    Step { id: u64, x: Vec<f32>, c: f32 },
+    StepBatch(Vec<StepItem>),
+    Predict { id: u64, x: Vec<f32> },
+    Snapshot { id: u64 },
+    Restore(Json),
+    Close { id: u64 },
+    Stats,
+}
+
+fn get_id(v: &Json) -> Result<u64, String> {
+    v.get("id")
+        .and_then(|n| n.as_f64())
+        .map(|n| n as u64)
+        .ok_or_else(|| "missing or non-numeric 'id'".into())
+}
+
+fn get_obs(v: &Json, key: &str) -> Result<Vec<f32>, String> {
+    v.get(key)
+        .and_then(|x| x.to_f32_vec())
+        .ok_or_else(|| format!("missing or non-array '{key}'"))
+}
+
+/// Parse one request line. The `open` op accepts the spec fields inline:
+///
+/// ```json
+/// {"op":"open","learner":"columnar:8","n_inputs":8,"alpha":0.001,
+///  "gamma":0.9,"lambda":0.99,"eps":0.01,"seed":0}
+/// ```
+pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
+    let op = v
+        .get("op")
+        .and_then(|o| o.as_str())
+        .ok_or("missing 'op' field")?;
+    match op {
+        "open" => {
+            let learner_spec = v
+                .get("learner")
+                .and_then(|l| l.as_str())
+                .ok_or("open: missing 'learner' spec string")?;
+            let learner = crate::config::LearnerKind::parse(learner_spec)
+                .map_err(|e| e.to_string())?;
+            // absent fields take defaults; *present but non-numeric*
+            // fields are an error — silently defaulting a typo would
+            // train with the wrong hyperparameters undetected.
+            let num = |key: &str, default: f64| -> Result<f64, String> {
+                match v.get(key) {
+                    None => Ok(default),
+                    Some(j) => j
+                        .as_f64()
+                        .ok_or_else(|| format!("open: '{key}' must be a number")),
+                }
+            };
+            let n_inputs = v
+                .get("n_inputs")
+                .and_then(|n| n.as_usize())
+                .ok_or("open: missing 'n_inputs'")?;
+            Ok(WireOp::Open(SessionSpec {
+                learner,
+                n_inputs,
+                td: crate::learn::TdConfig {
+                    alpha: num("alpha", 0.001)? as f32,
+                    gamma: num("gamma", 0.9)? as f32,
+                    lambda: num("lambda", 0.99)? as f32,
+                },
+                eps: num("eps", 0.01)? as f32,
+                seed: num("seed", 0.0)? as u64,
+            }))
+        }
+        "step" => Ok(WireOp::Step {
+            id: get_id(v)?,
+            x: get_obs(v, "x")?,
+            c: match v.get("c") {
+                None => 0.0,
+                Some(j) => {
+                    j.as_f64().ok_or("step: 'c' must be a number")? as f32
+                }
+            },
+        }),
+        "step_batch" => {
+            let ids = v
+                .get("ids")
+                .and_then(|a| a.as_arr())
+                .ok_or("step_batch: missing 'ids'")?;
+            let xs = v
+                .get("xs")
+                .and_then(|a| a.as_arr())
+                .ok_or("step_batch: missing 'xs'")?;
+            let cs = v
+                .get("cs")
+                .and_then(|a| a.to_f32_vec())
+                .ok_or("step_batch: missing 'cs'")?;
+            if ids.len() != xs.len() || ids.len() != cs.len() {
+                return Err(format!(
+                    "step_batch: ids/xs/cs lengths differ ({}/{}/{})",
+                    ids.len(),
+                    xs.len(),
+                    cs.len()
+                ));
+            }
+            let mut items = Vec::with_capacity(ids.len());
+            for ((idj, xj), &c) in ids.iter().zip(xs).zip(&cs) {
+                let id = idj
+                    .as_f64()
+                    .ok_or("step_batch: non-numeric id")? as u64;
+                let x = xj
+                    .to_f32_vec()
+                    .ok_or("step_batch: non-array observation")?;
+                items.push(StepItem { id, x, c });
+            }
+            Ok(WireOp::StepBatch(items))
+        }
+        "predict" => Ok(WireOp::Predict {
+            id: get_id(v)?,
+            x: get_obs(v, "x")?,
+        }),
+        "snapshot" => Ok(WireOp::Snapshot { id: get_id(v)? }),
+        "restore" => Ok(WireOp::Restore(
+            v.get("state").cloned().ok_or("restore: missing 'state'")?,
+        )),
+        "close" => Ok(WireOp::Close { id: get_id(v)? }),
+        "stats" => Ok(WireOp::Stats),
+        other => Err(format!(
+            "unknown op '{other}' \
+             (open|step|step_batch|predict|snapshot|restore|close|stats)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<WireOp, String> {
+        parse_wire_op(&Json::parse(text).map_err(|e| e.to_string())?)
+    }
+
+    #[test]
+    fn open_parses_with_defaults() {
+        let op = parse(r#"{"op":"open","learner":"columnar:4","n_inputs":3}"#)
+            .unwrap();
+        match op {
+            WireOp::Open(spec) => {
+                assert_eq!(spec.n_inputs, 3);
+                assert_eq!(spec.td.gamma, 0.9);
+                assert_eq!(spec.td.lambda, 0.99);
+                assert_eq!(spec.seed, 0);
+            }
+            other => panic!("wrong op {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_and_batch_parse() {
+        let op = parse(r#"{"op":"step","id":4,"x":[1,2,3],"c":0.5}"#).unwrap();
+        match op {
+            WireOp::Step { id, x, c } => {
+                assert_eq!(id, 4);
+                assert_eq!(x, vec![1.0, 2.0, 3.0]);
+                assert_eq!(c, 0.5);
+            }
+            other => panic!("wrong op {other:?}"),
+        }
+        let op = parse(
+            r#"{"op":"step_batch","ids":[1,2],"xs":[[0.1],[0.2]],"cs":[0,1]}"#,
+        )
+        .unwrap();
+        match op {
+            WireOp::StepBatch(items) => {
+                assert_eq!(items.len(), 2);
+                assert_eq!(items[1].id, 2);
+                assert_eq!(items[1].c, 1.0);
+            }
+            other => panic!("wrong op {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_error_cleanly() {
+        assert!(parse(r#"{"op":"warp"}"#).is_err());
+        assert!(parse(r#"{"learner":"columnar:4"}"#).is_err());
+        assert!(parse(r#"{"op":"step","id":1}"#).is_err());
+        // present-but-malformed numeric fields must error, not default
+        assert!(parse(
+            r#"{"op":"open","learner":"columnar:4","n_inputs":3,"gamma":"0.99"}"#
+        )
+        .is_err());
+        assert!(parse(r#"{"op":"step","id":1,"x":[1],"c":"big"}"#).is_err());
+        assert!(parse(
+            r#"{"op":"step_batch","ids":[1],"xs":[[1],[2]],"cs":[0]}"#
+        )
+        .is_err());
+        assert!(parse(r#"{"op":"open","learner":"tbptt","n_inputs":2}"#).is_err());
+    }
+
+    #[test]
+    fn responses_encode_ok_and_error() {
+        let r = Response::Stepped { y: 0.25 }.to_json();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("y"), Some(&Json::Num(0.25)));
+        let e = Response::error("nope").to_json();
+        assert_eq!(e.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(e.get("error"), Some(&Json::Str("nope".into())));
+        let m = Response::SteppedMany {
+            ys: vec![Ok(1.0), Err("gone".into())],
+        }
+        .to_json();
+        let ys = m.get("ys").unwrap().as_arr().unwrap();
+        assert_eq!(ys[0], Json::Num(1.0));
+        assert_eq!(ys[1], Json::Null);
+        assert!(m.get("errors").is_some());
+    }
+}

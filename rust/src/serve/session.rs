@@ -1,0 +1,366 @@
+//! Session lifecycle: a single online TD(lambda) learner owned by the
+//! prediction service.
+//!
+//! A [`Session`] wraps the existing [`TdLambdaAgent`] over a concrete
+//! [`CcnNet`] (the CCN family — columnar, constructive, ccn — is the
+//! serveable set; the dense baselines have no snapshot story and are
+//! rejected at open). Sessions are created from a [`SessionSpec`],
+//! stepped one observation at a time, snapshotted to JSON, restored from
+//! a snapshot, and closed.
+//!
+//! Pure-columnar sessions can also live inside a
+//! [`super::batch::ColumnarSessionBatch`]; [`Session::to_lane`] /
+//! [`Session::from_lane`] convert between the two representations
+//! without loss (both paths step with identical arithmetic).
+
+use crate::config::{build_ccn, LearnerKind};
+use crate::learn::{TdConfig, TdLambdaAgent, TdState};
+use crate::nets::ccn::CcnNet;
+use crate::nets::lstm_column::LstmColumn;
+use crate::nets::normalizer::{OnlineNormalizer, NORM_BETA};
+use crate::util::json::Json;
+use crate::util::prng::Xoshiro256;
+
+use super::batch::{ColumnarBatchSpec, ColumnarLane};
+
+/// Everything needed to open (or re-open) a session.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub learner: LearnerKind,
+    pub n_inputs: usize,
+    pub td: TdConfig,
+    /// normalizer epsilon
+    pub eps: f32,
+    /// column-initialization seed
+    pub seed: u64,
+}
+
+impl SessionSpec {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("learner", self.learner.to_json()),
+            ("n_inputs", Json::Num(self.n_inputs as f64)),
+            ("alpha", Json::Num(self.td.alpha as f64)),
+            ("gamma", Json::Num(self.td.gamma as f64)),
+            ("lambda", Json::Num(self.td.lambda as f64)),
+            ("eps", Json::Num(self.eps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        Some(Self {
+            learner: LearnerKind::from_json(v.get("learner")?)?,
+            n_inputs: v.get("n_inputs")?.as_usize()?,
+            td: TdConfig {
+                alpha: v.get("alpha")?.as_f64()? as f32,
+                gamma: v.get("gamma")?.as_f64()? as f32,
+                lambda: v.get("lambda")?.as_f64()? as f32,
+            },
+            eps: v.get("eps")?.as_f64()? as f32,
+            seed: v.get("seed")?.as_f64()? as u64,
+        })
+    }
+
+    /// True when the session is a pure columnar net — the shape the
+    /// batched SoA store can hold.
+    pub fn batchable(&self) -> Option<ColumnarBatchSpec> {
+        match self.learner {
+            LearnerKind::Columnar { d } => Some(ColumnarBatchSpec {
+                n_inputs: self.n_inputs,
+                d,
+                td: self.td,
+                eps: self.eps,
+                beta: NORM_BETA,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// One live scalar session.
+pub struct Session {
+    spec: SessionSpec,
+    agent: TdLambdaAgent<CcnNet>,
+}
+
+/// Snapshot format version (bumped on breaking changes).
+const SNAPSHOT_VERSION: f64 = 1.0;
+
+impl Session {
+    /// Open a fresh session. Dense baselines (tbptt/snap1) are refused:
+    /// they are benchmark comparators, not serveable CCN-family nets.
+    pub fn open(spec: SessionSpec) -> Result<Session, String> {
+        if spec.n_inputs == 0 {
+            return Err("session: n_inputs must be >= 1".into());
+        }
+        let net = build_ccn(&spec.learner, spec.n_inputs, spec.eps, spec.seed)
+            .map_err(|e| e.to_string())?;
+        let agent = TdLambdaAgent::new(net, spec.td);
+        Ok(Session { spec, agent })
+    }
+
+    pub fn spec(&self) -> &SessionSpec {
+        &self.spec
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.agent.steps()
+    }
+
+    /// One online learning step: observation + cumulant in, prediction
+    /// made at this step out.
+    pub fn step(&mut self, x: &[f32], cumulant: f32) -> Result<f32, String> {
+        if x.len() != self.spec.n_inputs {
+            return Err(format!(
+                "session expects {} inputs, got {}",
+                self.spec.n_inputs,
+                x.len()
+            ));
+        }
+        Ok(self.agent.step(x, cumulant))
+    }
+
+    /// Prediction without learning. The recurrent state still advances
+    /// (a prediction *consumes* the observation), but no TD update runs.
+    pub fn predict(&mut self, x: &[f32]) -> Result<f32, String> {
+        if x.len() != self.spec.n_inputs {
+            return Err(format!(
+                "session expects {} inputs, got {}",
+                self.spec.n_inputs,
+                x.len()
+            ));
+        }
+        Ok(self.agent.predict_only(x))
+    }
+
+    /// Serialize the complete session (spec + net + TD state). The
+    /// snapshot restores to a session that continues bit-identically.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(SNAPSHOT_VERSION)),
+            ("spec", self.spec.to_json()),
+            ("net", self.agent.net.to_json()),
+            ("td", self.agent.td_state().to_json()),
+        ])
+    }
+
+    /// Rebuild a session from [`Self::snapshot`] output.
+    pub fn from_snapshot(v: &Json) -> Result<Session, String> {
+        let version = v
+            .get("v")
+            .and_then(|n| n.as_f64())
+            .ok_or("snapshot: missing version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(format!("snapshot: unsupported version {version}"));
+        }
+        let spec = v
+            .get("spec")
+            .and_then(SessionSpec::from_json)
+            .ok_or("snapshot: bad spec")?;
+        // reject specs we could never have produced (cheap check only;
+        // net/spec consistency is validated below and by set_td_state)
+        if !spec.learner.is_ccn_family() {
+            return Err(format!(
+                "snapshot: learner '{}' is not serveable",
+                spec.learner.label()
+            ));
+        }
+        let net = CcnNet::from_json(v.get("net").ok_or("snapshot: missing net")?)?;
+        if net.config().n_inputs != spec.n_inputs {
+            return Err("snapshot: net/spec input width mismatch".into());
+        }
+        let td = v
+            .get("td")
+            .and_then(TdState::from_json)
+            .ok_or("snapshot: bad td state")?;
+        let mut agent = TdLambdaAgent::new(net, spec.td);
+        agent.set_td_state(td)?;
+        Ok(Session { spec, agent })
+    }
+
+    /// Extract this (columnar) session's state as a batch lane. Errors
+    /// for non-columnar sessions.
+    pub fn to_lane(&self) -> Result<ColumnarLane, String> {
+        let d = match self.spec.learner {
+            LearnerKind::Columnar { d } => d,
+            _ => return Err("only columnar sessions are batchable".into()),
+        };
+        let net = &self.agent.net;
+        let columns: Vec<LstmColumn> =
+            (0..d).map(|k| net.column(0, k).clone()).collect();
+        let (mu, var, denom) = net.stage_norm(0).state();
+        Ok(ColumnarLane {
+            columns,
+            norm_mu: mu.to_vec(),
+            norm_var: var.to_vec(),
+            norm_denom: denom.to_vec(),
+            td: self.agent.td_state(),
+        })
+    }
+
+    /// Rebuild a scalar session from a batch lane (inverse of
+    /// [`Self::to_lane`]). The columnar net never consumes its rng after
+    /// construction, so a fresh stream seeded from the spec is
+    /// equivalent to the original.
+    pub fn from_lane(spec: SessionSpec, lane: &ColumnarLane) -> Result<Session, String> {
+        let batch_spec = spec
+            .batchable()
+            .ok_or("only columnar sessions are batchable")?;
+        let d = batch_spec.d;
+        if lane.columns.len() != d {
+            return Err(format!(
+                "lane has {} columns, spec wants {d}",
+                lane.columns.len()
+            ));
+        }
+        let cfg = crate::nets::ccn::CcnConfig {
+            n_inputs: spec.n_inputs,
+            total_features: d,
+            features_per_stage: d,
+            steps_per_stage: u64::MAX,
+            init_scale: 1.0,
+            norm_eps: spec.eps,
+            norm_beta: batch_spec.beta,
+        };
+        let norm = OnlineNormalizer::from_state(
+            batch_spec.beta,
+            spec.eps,
+            lane.norm_mu.clone(),
+            lane.norm_var.clone(),
+            lane.norm_denom.clone(),
+        )
+        .ok_or("lane normalizer state inconsistent")?;
+        let net = CcnNet::from_parts(
+            cfg,
+            vec![(lane.columns.clone(), norm)],
+            lane.td.steps,
+            1,
+            false,
+            Xoshiro256::seed_from_u64(spec.seed),
+        )?;
+        let mut agent = TdLambdaAgent::new(net, spec.td);
+        agent.set_td_state(lane.td.clone())?;
+        Ok(Session { spec, agent })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn columnar_spec() -> SessionSpec {
+        SessionSpec {
+            learner: LearnerKind::Columnar { d: 4 },
+            n_inputs: 3,
+            td: TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+            eps: 0.01,
+            seed: 7,
+        }
+    }
+
+    fn drive(s: &mut Session, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x: Vec<f32> = (0..s.spec().n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let c = rng.uniform(-0.5, 0.5);
+            ys.push(s.step(&x, c).unwrap());
+        }
+        ys
+    }
+
+    #[test]
+    fn open_rejects_dense_baselines_and_zero_inputs() {
+        let mut spec = columnar_spec();
+        spec.learner = LearnerKind::Tbptt { d: 4, k: 10 };
+        assert!(Session::open(spec).is_err());
+        let mut spec = columnar_spec();
+        spec.n_inputs = 0;
+        assert!(Session::open(spec).is_err());
+    }
+
+    #[test]
+    fn step_checks_observation_width() {
+        let mut s = Session::open(columnar_spec()).unwrap();
+        assert!(s.step(&[0.0, 0.0], 0.0).is_err());
+        assert!(s.step(&[0.0, 0.0, 0.0], 0.0).is_ok());
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically() {
+        let mut s = Session::open(columnar_spec()).unwrap();
+        drive(&mut s, 400, 1);
+        let snap = s.snapshot();
+        // round-trip through text to exercise the full codec
+        let mut restored = Session::from_snapshot(
+            &Json::parse(&snap.dump()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(restored.steps(), s.steps());
+        let a = drive(&mut s, 200, 2);
+        let b = drive(&mut restored, 200, 2);
+        assert_eq!(a, b, "restored session must continue identically");
+    }
+
+    #[test]
+    fn snapshot_restore_works_for_growing_ccn() {
+        let spec = SessionSpec {
+            learner: LearnerKind::Ccn {
+                total: 6,
+                per_stage: 2,
+                steps_per_stage: 120,
+            },
+            n_inputs: 3,
+            td: TdConfig::default(),
+            eps: 0.01,
+            seed: 3,
+        };
+        let mut s = Session::open(spec).unwrap();
+        drive(&mut s, 150, 4); // past one stage boundary
+        let snap = s.snapshot();
+        let mut restored = Session::from_snapshot(&snap).unwrap();
+        // continue across the *next* boundary too: the restored rng must
+        // initialize the new stage's columns identically
+        let a = drive(&mut s, 200, 5);
+        let b = drive(&mut restored, 200, 5);
+        assert_eq!(a, b, "growth after restore must match");
+    }
+
+    #[test]
+    fn lane_roundtrip_continues_identically() {
+        let mut s = Session::open(columnar_spec()).unwrap();
+        drive(&mut s, 300, 9);
+        let lane = s.to_lane().unwrap();
+        let mut back = Session::from_lane(s.spec().clone(), &lane).unwrap();
+        let a = drive(&mut s, 150, 10);
+        let b = drive(&mut back, 150, 10);
+        assert_eq!(a, b, "lane extraction must be lossless");
+    }
+
+    #[test]
+    fn restore_rejects_corrupted_snapshots() {
+        let s = Session::open(columnar_spec()).unwrap();
+        let snap = s.snapshot();
+        // wrong version
+        let mut o = match snap.clone() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("v".into(), Json::Num(99.0));
+        assert!(Session::from_snapshot(&Json::Obj(o)).is_err());
+        // missing net
+        let mut o = match snap {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.remove("net");
+        assert!(Session::from_snapshot(&Json::Obj(o)).is_err());
+    }
+}

@@ -1,0 +1,655 @@
+//! Sharded session ownership: N worker threads, each owning a disjoint
+//! set of sessions behind an mpsc queue.
+//!
+//! Sessions are routed by `id % n_shards`, so a session's state is only
+//! ever touched by its owning shard — the hot path takes no locks.
+//! Within a shard, pure-columnar sessions live in SoA
+//! [`ColumnarSessionBatch`]es keyed by their shape; a `StepMany` request
+//! that covers a whole batch advances it in one fused pass. Everything
+//! else (growing CCN/constructive sessions, partial batches) takes the
+//! scalar path. Both paths produce identical numbers — membership is a
+//! performance decision, never a semantic one.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::util::json::Json;
+
+use super::batch::ColumnarSessionBatch;
+use super::protocol::{Request, Response, StepItem};
+use super::session::{Session, SessionSpec};
+
+/// Hashable key for "sessions with this shape can share a batch":
+/// (n_inputs, d, alpha, gamma, lambda, eps) with floats by bit pattern.
+type BatchKey = (usize, usize, u32, u32, u32, u32);
+
+fn batch_key(spec: &SessionSpec) -> Option<BatchKey> {
+    spec.batchable().map(|b| {
+        (
+            b.n_inputs,
+            b.d,
+            b.td.alpha.to_bits(),
+            b.td.gamma.to_bits(),
+            b.td.lambda.to_bits(),
+            b.eps.to_bits(),
+        )
+    })
+}
+
+/// Where a session's state lives inside a shard.
+enum Slot {
+    Scalar(Box<Session>),
+    /// `(batch key, lane index)` — the spec is kept for snapshots.
+    Batched(BatchKey, usize, SessionSpec),
+}
+
+/// Single-threaded session store; one per worker thread.
+#[derive(Default)]
+pub struct ShardState {
+    slots: HashMap<u64, Slot>,
+    batches: HashMap<BatchKey, ColumnarSessionBatch>,
+    /// lane index -> session id, per batch (to re-key on swap-remove and
+    /// to detect full-batch coverage)
+    lane_ids: HashMap<BatchKey, Vec<u64>>,
+    steps_served: u64,
+}
+
+impl ShardState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn n_sessions(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Execute one request against this shard's sessions.
+    pub fn handle(&mut self, req: Request) -> Response {
+        match req {
+            Request::Open { id, spec } => self.open(id, spec),
+            Request::Step { id, x, c } => match self.step_session(id, &x, c) {
+                Ok(y) => Response::Stepped { y },
+                Err(e) => Response::error(e),
+            },
+            Request::StepMany { items } => Response::SteppedMany {
+                ys: self.step_many(items),
+            },
+            Request::Predict { id, x } => match self.predict_session(id, &x) {
+                Ok(y) => Response::Predicted { y },
+                Err(e) => Response::error(e),
+            },
+            Request::Snapshot { id } => match self.snapshot_session(id) {
+                Ok(state) => Response::Snapshotted { state },
+                Err(e) => Response::error(e),
+            },
+            Request::Restore { id, state } => match Session::from_snapshot(&state) {
+                Ok(session) => self.insert(id, session),
+                Err(e) => Response::error(e),
+            },
+            Request::Close { id } => self.close(id),
+            Request::Stats => Response::Stats {
+                sessions: self.slots.len(),
+                steps: self.steps_served,
+            },
+        }
+    }
+
+    fn open(&mut self, id: u64, spec: SessionSpec) -> Response {
+        match Session::open(spec) {
+            Ok(session) => self.insert(id, session),
+            Err(e) => Response::error(e),
+        }
+    }
+
+    /// Place a (fresh or restored) session: batched store when the shape
+    /// allows, scalar otherwise.
+    fn insert(&mut self, id: u64, session: Session) -> Response {
+        if self.slots.contains_key(&id) {
+            return Response::error(format!("session {id} already exists"));
+        }
+        let spec = session.spec().clone();
+        if let Some(key) = batch_key(&spec) {
+            let lane = match session.to_lane() {
+                Ok(lane) => lane,
+                Err(e) => return Response::error(e),
+            };
+            let batch_spec = spec.batchable().expect("key implies batchable");
+            let batch = match self.batches.entry(key) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    match ColumnarSessionBatch::from_lanes(batch_spec, &[]) {
+                        Ok(b) => e.insert(b),
+                        Err(msg) => return Response::error(msg),
+                    }
+                }
+            };
+            match batch.push_lane(lane) {
+                Ok(idx) => {
+                    self.lane_ids.entry(key).or_default().push(id);
+                    debug_assert_eq!(self.lane_ids[&key].len(), idx + 1);
+                    self.slots.insert(id, Slot::Batched(key, idx, spec));
+                    Response::Opened { id }
+                }
+                Err(e) => Response::error(e),
+            }
+        } else {
+            self.slots.insert(id, Slot::Scalar(Box::new(session)));
+            Response::Opened { id }
+        }
+    }
+
+    fn step_session(&mut self, id: u64, x: &[f32], c: f32) -> Result<f32, String> {
+        let y = match self
+            .slots
+            .get_mut(&id)
+            .ok_or_else(|| format!("no session {id}"))?
+        {
+            Slot::Scalar(session) => session.step(x, c)?,
+            Slot::Batched(key, lane, spec) => {
+                if x.len() != spec.n_inputs {
+                    return Err(format!(
+                        "session expects {} inputs, got {}",
+                        spec.n_inputs,
+                        x.len()
+                    ));
+                }
+                self.batches
+                    .get_mut(key)
+                    .expect("batch exists for batched slot")
+                    .step_one(*lane, x, c)
+            }
+        };
+        self.steps_served += 1;
+        Ok(y)
+    }
+
+    fn predict_session(&mut self, id: u64, x: &[f32]) -> Result<f32, String> {
+        match self
+            .slots
+            .get_mut(&id)
+            .ok_or_else(|| format!("no session {id}"))?
+        {
+            Slot::Scalar(session) => session.predict(x),
+            Slot::Batched(key, lane, spec) => {
+                if x.len() != spec.n_inputs {
+                    return Err(format!(
+                        "session expects {} inputs, got {}",
+                        spec.n_inputs,
+                        x.len()
+                    ));
+                }
+                Ok(self
+                    .batches
+                    .get_mut(key)
+                    .expect("batch exists for batched slot")
+                    .predict_one(*lane, x))
+            }
+        }
+    }
+
+    /// Step many sessions. Groups that cover an entire SoA batch run
+    /// through the fused [`ColumnarSessionBatch::step_all`]; everything
+    /// else falls back to per-session stepping. Result order matches
+    /// input order.
+    fn step_many(&mut self, items: Vec<StepItem>) -> Vec<Result<f32, String>> {
+        let n_items = items.len();
+        let mut out: Vec<Option<Result<f32, String>>> = vec![None; n_items];
+        // partition: which batch does each item belong to (if any)?
+        let mut per_batch: HashMap<BatchKey, Vec<(usize, usize)>> = HashMap::new();
+        for (pos, item) in items.iter().enumerate() {
+            if let Some(Slot::Batched(key, lane, _)) = self.slots.get(&item.id) {
+                per_batch.entry(*key).or_default().push((pos, *lane));
+            }
+        }
+        for (key, members) in per_batch {
+            let batch = self.batches.get_mut(&key).expect("batch exists");
+            let bsz = batch.len();
+            let n = batch.spec().n_inputs;
+            // fused path only when every lane is covered exactly once and
+            // every observation has the right width
+            let full = members.len() == bsz && {
+                let mut seen = vec![false; bsz];
+                members.iter().all(|&(pos, lane)| {
+                    let fresh = !seen[lane];
+                    seen[lane] = true;
+                    fresh && items[pos].x.len() == n
+                })
+            };
+            if !full {
+                continue; // handled by the scalar fallback below
+            }
+            let mut obs = vec![0.0f32; bsz * n];
+            let mut cs = vec![0.0f32; bsz];
+            for &(pos, lane) in &members {
+                obs[lane * n..(lane + 1) * n].copy_from_slice(&items[pos].x);
+                cs[lane] = items[pos].c;
+            }
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            for &(pos, lane) in &members {
+                out[pos] = Some(Ok(ys[lane]));
+            }
+            self.steps_served += bsz as u64;
+        }
+        // scalar fallback for everything not answered by a fused pass
+        for (pos, item) in items.into_iter().enumerate() {
+            if out[pos].is_none() {
+                out[pos] = Some(self.step_session(item.id, &item.x, item.c));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every item answered")).collect()
+    }
+
+    fn snapshot_session(&self, id: u64) -> Result<Json, String> {
+        match self.slots.get(&id).ok_or_else(|| format!("no session {id}"))? {
+            Slot::Scalar(session) => Ok(session.snapshot()),
+            Slot::Batched(key, lane, spec) => {
+                let batch = self.batches.get(key).expect("batch exists");
+                let extracted = batch.extract_lane(*lane);
+                let session = Session::from_lane(spec.clone(), &extracted)?;
+                Ok(session.snapshot())
+            }
+        }
+    }
+
+    fn close(&mut self, id: u64) -> Response {
+        match self.slots.remove(&id) {
+            None => Response::error(format!("no session {id}")),
+            Some(Slot::Scalar(session)) => Response::Closed {
+                id,
+                steps: session.steps(),
+            },
+            Some(Slot::Batched(key, lane, _)) => {
+                let batch = self.batches.get_mut(&key).expect("batch exists");
+                let steps = batch.session_steps(lane);
+                if let Err(e) = batch.swap_remove_lane(lane) {
+                    return Response::error(e);
+                }
+                // the last lane moved into `lane`: re-key that session
+                let ids = self.lane_ids.get_mut(&key).expect("lane ids exist");
+                let moved = ids.pop().expect("non-empty lane list");
+                if moved != id {
+                    ids[lane] = moved;
+                    if let Some(Slot::Batched(_, l, _)) = self.slots.get_mut(&moved) {
+                        *l = lane;
+                    }
+                }
+                if batch.is_empty() {
+                    self.batches.remove(&key);
+                    self.lane_ids.remove(&key);
+                }
+                Response::Closed { id, steps }
+            }
+        }
+    }
+}
+
+enum Job {
+    Run(Request, mpsc::Sender<Response>),
+    Shutdown,
+}
+
+/// N shard worker threads plus the request router. The only shared state
+/// is the id allocator — sessions live entirely inside their shard.
+pub struct ShardPool {
+    txs: Vec<mpsc::Sender<Job>>,
+    joins: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl ShardPool {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            txs.push(tx);
+            joins.push(std::thread::spawn(move || {
+                let mut state = ShardState::new();
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Run(req, reply) => {
+                            // receiver may have hung up; that's fine
+                            let _ = reply.send(state.handle(req));
+                        }
+                        Job::Shutdown => break,
+                    }
+                }
+            }));
+        }
+        Self {
+            txs,
+            joins,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn shard_of(&self, id: u64) -> usize {
+        (id % self.txs.len() as u64) as usize
+    }
+
+    fn call_shard(&self, shard: usize, req: Request) -> Response {
+        let (tx, rx) = mpsc::channel();
+        if self.txs[shard].send(Job::Run(req, tx)).is_err() {
+            return Response::error("shard worker is gone");
+        }
+        rx.recv()
+            .unwrap_or_else(|_| Response::error("shard worker dropped the reply"))
+    }
+
+    /// Allocate an id and open a session on its shard.
+    pub fn open(&self, spec: SessionSpec) -> Response {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.call_shard(self.shard_of(id), Request::Open { id, spec })
+    }
+
+    /// Allocate an id and restore a snapshot onto its shard.
+    pub fn restore(&self, state: Json) -> Response {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.call_shard(self.shard_of(id), Request::Restore { id, state })
+    }
+
+    /// Route a single-session request to its owner.
+    pub fn call(&self, req: Request) -> Response {
+        match req.route_id() {
+            Some(id) => self.call_shard(self.shard_of(id), req),
+            None => Response::error("request has no routing id"),
+        }
+    }
+
+    /// Scatter step items to their shards, step all shards *in
+    /// parallel*, gather results back into input order. This is the
+    /// aggregate hot path: one channel round-trip per shard per tick.
+    pub fn step_batch(&self, items: Vec<StepItem>) -> Vec<Result<f32, String>> {
+        let n_items = items.len();
+        let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.txs.len()];
+        let mut shard_items: Vec<Vec<StepItem>> = vec![Vec::new(); self.txs.len()];
+        for (pos, item) in items.into_iter().enumerate() {
+            let s = self.shard_of(item.id);
+            per_shard[s].push(pos);
+            shard_items[s].push(item);
+        }
+        let mut replies: Vec<Option<mpsc::Receiver<Response>>> =
+            (0..self.txs.len()).map(|_| None).collect();
+        for (s, batch) in shard_items.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            if self.txs[s]
+                .send(Job::Run(Request::StepMany { items: batch }, tx))
+                .is_ok()
+            {
+                replies[s] = Some(rx);
+            }
+        }
+        let mut out: Vec<Result<f32, String>> =
+            vec![Err("unanswered".into()); n_items];
+        for (s, rx) in replies.into_iter().enumerate() {
+            let Some(rx) = rx else {
+                for &pos in &per_shard[s] {
+                    out[pos] = Err("shard worker is gone".into());
+                }
+                continue;
+            };
+            match rx.recv() {
+                Ok(Response::SteppedMany { ys }) => {
+                    for (&pos, y) in per_shard[s].iter().zip(ys) {
+                        out[pos] = y;
+                    }
+                }
+                Ok(other) => {
+                    let msg = match other {
+                        Response::Error { message } => message,
+                        _ => "unexpected shard reply".into(),
+                    };
+                    for &pos in &per_shard[s] {
+                        out[pos] = Err(msg.clone());
+                    }
+                }
+                Err(_) => {
+                    for &pos in &per_shard[s] {
+                        out[pos] = Err("shard worker dropped the reply".into());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `(sessions, steps_served)` per shard.
+    pub fn stats(&self) -> Vec<(usize, u64)> {
+        (0..self.txs.len())
+            .map(|s| match self.call_shard(s, Request::Stats) {
+                Response::Stats { sessions, steps } => (sessions, steps),
+                _ => (0, 0),
+            })
+            .collect()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LearnerKind;
+    use crate::learn::TdConfig;
+    use crate::util::prng::Xoshiro256;
+
+    fn spec(learner: LearnerKind, seed: u64) -> SessionSpec {
+        SessionSpec {
+            learner,
+            n_inputs: 3,
+            td: TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+            eps: 0.01,
+            seed,
+        }
+    }
+
+    fn open_ok(state: &mut ShardState, id: u64, s: SessionSpec) {
+        match state.handle(Request::Open { id, spec: s }) {
+            Response::Opened { id: got } => assert_eq!(got, id),
+            other => panic!("open failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_state_full_lifecycle() {
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Columnar { d: 4 }, 0));
+        open_ok(
+            &mut st,
+            2,
+            spec(
+                LearnerKind::Ccn {
+                    total: 4,
+                    per_stage: 2,
+                    steps_per_stage: 1000,
+                },
+                1,
+            ),
+        );
+        assert_eq!(st.n_sessions(), 2);
+        let y = st.step_session(1, &[0.1, 0.2, 0.3], 0.5).unwrap();
+        assert!(y.is_finite());
+        assert!(st.step_session(9, &[0.0; 3], 0.0).is_err(), "unknown id");
+        assert!(st.step_session(1, &[0.0; 2], 0.0).is_err(), "bad width");
+        let snap = st.snapshot_session(1).unwrap();
+        match st.handle(Request::Restore { id: 3, state: snap }) {
+            Response::Opened { id } => assert_eq!(id, 3),
+            other => panic!("restore failed: {other:?}"),
+        }
+        match st.handle(Request::Close { id: 1 }) {
+            Response::Closed { id, steps } => {
+                assert_eq!(id, 1);
+                assert_eq!(steps, 1);
+            }
+            other => panic!("close failed: {other:?}"),
+        }
+        assert_eq!(st.n_sessions(), 2);
+    }
+
+    #[test]
+    fn batched_and_scalar_routes_agree() {
+        // same columnar spec through the batched store and through a
+        // standalone scalar session: identical predictions.
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Columnar { d: 4 }, 42));
+        let mut scalar = Session::open(spec(LearnerKind::Columnar { d: 4 }, 42)).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        for _ in 0..200 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            let y_shard = st.step_session(1, &x, c).unwrap();
+            let y_scalar = scalar.step(&x, c).unwrap();
+            assert_eq!(y_shard, y_scalar, "batched lane must equal scalar agent");
+        }
+    }
+
+    #[test]
+    fn step_many_fused_path_matches_fallback() {
+        let mk = |st: &mut ShardState| {
+            for id in 0..5u64 {
+                open_ok(st, id + 1, spec(LearnerKind::Columnar { d: 3 }, id));
+            }
+        };
+        let mut fused = ShardState::new();
+        let mut fallback = ShardState::new();
+        mk(&mut fused);
+        mk(&mut fallback);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..50 {
+            let items: Vec<StepItem> = (0..5u64)
+                .map(|id| StepItem {
+                    id: id + 1,
+                    x: (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                    c: rng.uniform(-0.5, 0.5),
+                })
+                .collect();
+            // fused: all 5 lanes of the batch in one request
+            let ys_fused = fused.step_many(items.clone());
+            // fallback: one at a time (never a full batch in one call)
+            let ys_one: Vec<Result<f32, String>> = items
+                .iter()
+                .map(|it| fallback.step_session(it.id, &it.x, it.c))
+                .collect();
+            for (a, b) in ys_fused.iter().zip(&ys_one) {
+                assert_eq!(
+                    a.as_ref().unwrap(),
+                    b.as_ref().unwrap(),
+                    "fused and scalar paths must agree"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn step_many_reports_per_item_errors() {
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Columnar { d: 3 }, 0));
+        let items = vec![
+            StepItem {
+                id: 1,
+                x: vec![0.0; 3],
+                c: 0.0,
+            },
+            StepItem {
+                id: 77,
+                x: vec![0.0; 3],
+                c: 0.0,
+            },
+        ];
+        let ys = st.step_many(items);
+        assert!(ys[0].is_ok());
+        assert!(ys[1].is_err());
+    }
+
+    #[test]
+    fn close_rekeys_swapped_batch_lane() {
+        let mut st = ShardState::new();
+        for id in 1..=3u64 {
+            open_ok(&mut st, id, spec(LearnerKind::Columnar { d: 2 }, id));
+        }
+        // twin of session 3 to verify integrity after the swap
+        let mut twin = Session::open(spec(LearnerKind::Columnar { d: 2 }, 3)).unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            for id in 1..=3u64 {
+                let y = st.step_session(id, &x, 0.1).unwrap();
+                if id == 3 {
+                    assert_eq!(y, twin.step(&x, 0.1).unwrap());
+                }
+            }
+        }
+        // closing session 1 moves session 3 into lane 0
+        st.handle(Request::Close { id: 1 });
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = st.step_session(3, &x, 0.1).unwrap();
+            assert_eq!(y, twin.step(&x, 0.1).unwrap(), "lane re-key broke state");
+        }
+    }
+
+    #[test]
+    fn pool_routes_and_parallel_steps() {
+        let pool = ShardPool::new(3);
+        let mut ids = Vec::new();
+        for s in 0..6u64 {
+            match pool.open(spec(LearnerKind::Columnar { d: 3 }, s)) {
+                Response::Opened { id } => ids.push(id),
+                other => panic!("open failed: {other:?}"),
+            }
+        }
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        for _ in 0..20 {
+            let items: Vec<StepItem> = ids
+                .iter()
+                .map(|&id| StepItem {
+                    id,
+                    x: (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                    c: 0.1,
+                })
+                .collect();
+            let ys = pool.step_batch(items);
+            assert!(ys.iter().all(|y| y.is_ok()));
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats.iter().map(|&(s, _)| s).sum::<usize>(), 6);
+        assert_eq!(
+            stats.iter().map(|&(_, st)| st).sum::<u64>(),
+            6 * 20,
+            "every step accounted"
+        );
+        // snapshot through the pool round-trips
+        let snap = match pool.call(Request::Snapshot { id: ids[0] }) {
+            Response::Snapshotted { state } => state,
+            other => panic!("snapshot failed: {other:?}"),
+        };
+        match pool.restore(snap) {
+            Response::Opened { .. } => {}
+            other => panic!("restore failed: {other:?}"),
+        }
+    }
+}

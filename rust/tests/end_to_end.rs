@@ -56,7 +56,7 @@ fn every_learner_reduces_error_on_cycle_world() {
         let label = learner.label();
         let mut c = cfg(EnvKind::CycleWorld { n: 8 }, learner, 0.01, 120_000, 0);
         c.lambda = 0.9;
-        let res = run_experiment(&c);
+        let res = run_experiment(&c).unwrap();
         let imp = improvement(&res);
         assert!(
             imp > 10.0,
@@ -79,7 +79,7 @@ fn tbptt_learns_trace_conditioning() {
         0,
     );
     c.lambda = 0.99;
-    let res = run_experiment(&c);
+    let res = run_experiment(&c).unwrap();
     let imp = improvement(&res);
     assert!(
         imp > 1.3,
@@ -105,7 +105,7 @@ fn ccn_learns_trace_conditioning() {
         0,
     );
     c.lambda = 0.99;
-    let res = run_experiment(&c);
+    let res = run_experiment(&c).unwrap();
     let imp = improvement(&res);
     assert!(
         imp > 1.1,
@@ -124,7 +124,7 @@ fn sweep_aggregates_multiple_seeds() {
         0,
     );
     let configs = sweep::seeds(&base, &[0, 1, 2]);
-    let res = run_sweep(configs, 3);
+    let res = run_sweep(configs, 3).unwrap();
     let aggs = aggregate_runs(&res.runs);
     assert_eq!(aggs.len(), 1);
     assert_eq!(aggs[0].n_seeds, 3);
@@ -148,7 +148,8 @@ fn atari_stream_learners_stay_stable() {
             0.001,
             60_000,
             0,
-        ));
+        ))
+        .unwrap();
         assert!(
             res.tail_error.is_finite() && res.tail_error >= 0.0,
             "{label}: tail {:?}",

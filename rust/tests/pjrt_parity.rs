@@ -8,6 +8,9 @@
 //!
 //! Requires `make artifacts` to have run; tests skip (with a note) when
 //! the artifact directory is absent so `cargo test` works standalone.
+//! The whole file is gated on the `pjrt` feature (the `xla` crate is not
+//! available in the offline toolchain).
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 

@@ -1,0 +1,209 @@
+//! End-to-end tests of the serve subsystem over the JSONL wire protocol:
+//! the acceptance path is open -> step x N -> snapshot -> restore ->
+//! close, with the restored session continuing identically to the
+//! original.
+
+use ccn_rtrl::serve::Service;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn ok(reply: &str) -> Json {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(true)),
+        "expected ok response, got: {reply}"
+    );
+    v
+}
+
+fn err(reply: &str) -> String {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(false)),
+        "expected error response, got: {reply}"
+    );
+    v.get("error").and_then(|e| e.as_str()).unwrap().to_string()
+}
+
+fn obs_line(op: &str, id: u64, x: &[f32], c: f32) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(
+        r#"{{"op":"{op}","id":{id},"x":[{}],"c":{c}}}"#,
+        xs.join(",")
+    )
+}
+
+#[test]
+fn open_step_snapshot_restore_close_roundtrip() {
+    let service = Service::new(2);
+    // open
+    let reply = service.handle_line(
+        r#"{"op":"open","learner":"columnar:6","n_inputs":4,"alpha":0.005,"gamma":0.9,"lambda":0.95,"eps":0.01,"seed":11}"#,
+    );
+    let id = ok(&reply).get("id").unwrap().as_f64().unwrap() as u64;
+
+    // step x N
+    let mut rng = Xoshiro256::seed_from_u64(0);
+    let mut last_y = 0.0;
+    for _ in 0..300 {
+        let x: Vec<f32> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let reply = service.handle_line(&obs_line("step", id, &x, 0.25));
+        last_y = ok(&reply).get("y").unwrap().as_f64().unwrap();
+    }
+    assert!(last_y.is_finite());
+
+    // snapshot
+    let reply = service.handle_line(&format!(r#"{{"op":"snapshot","id":{id}}}"#));
+    let state = ok(&reply).get("state").unwrap().clone();
+
+    // restore -> a second, independent session with identical state
+    let restore_req = Json::obj(vec![
+        ("op", Json::Str("restore".into())),
+        ("state", state),
+    ]);
+    let reply = service.handle_line(&restore_req.dump());
+    let id2 = ok(&reply).get("id").unwrap().as_f64().unwrap() as u64;
+    assert_ne!(id, id2);
+
+    // both sessions must now evolve identically under identical input
+    for _ in 0..200 {
+        let x: Vec<f32> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ya = ok(&service.handle_line(&obs_line("step", id, &x, -0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let yb = ok(&service.handle_line(&obs_line("step", id2, &x, -0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(ya, yb, "restored session diverged from the original");
+    }
+
+    // close both; the original served 500 steps, the restore 300 + 200
+    let reply = service.handle_line(&format!(r#"{{"op":"close","id":{id}}}"#));
+    let steps = ok(&reply).get("steps").unwrap().as_f64().unwrap() as u64;
+    assert_eq!(steps, 500);
+    let reply = service.handle_line(&format!(r#"{{"op":"close","id":{id2}}}"#));
+    let steps2 = ok(&reply).get("steps").unwrap().as_f64().unwrap() as u64;
+    assert_eq!(steps2, 500, "snapshot carries the step count");
+
+    // gone now
+    let msg = err(&service.handle_line(&obs_line("step", id, &[0.0; 4], 0.0)));
+    assert!(msg.contains("no session"), "{msg}");
+}
+
+#[test]
+fn snapshot_restore_roundtrips_growing_ccn_sessions() {
+    let service = Service::new(1);
+    let reply = service.handle_line(
+        r#"{"op":"open","learner":"ccn:6:2:100","n_inputs":3,"seed":5}"#,
+    );
+    let id = ok(&reply).get("id").unwrap().as_f64().unwrap() as u64;
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    for _ in 0..150 {
+        // crosses the first stage boundary at step 100
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        ok(&service.handle_line(&obs_line("step", id, &x, 0.1)));
+    }
+    let state = ok(&service.handle_line(&format!(r#"{{"op":"snapshot","id":{id}}}"#)))
+        .get("state")
+        .unwrap()
+        .clone();
+    let restore_req =
+        Json::obj(vec![("op", Json::Str("restore".into())), ("state", state)]);
+    let id2 = ok(&service.handle_line(&restore_req.dump()))
+        .get("id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    // continue both across the next stage boundary (step 200)
+    for _ in 0..120 {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ya = ok(&service.handle_line(&obs_line("step", id, &x, 0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let yb = ok(&service.handle_line(&obs_line("step", id2, &x, 0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(ya, yb, "growing ccn session diverged after restore");
+    }
+}
+
+#[test]
+fn step_batch_matches_individual_steps() {
+    let batched = Service::new(2);
+    let singles = Service::new(2);
+    let mut ids_a = Vec::new();
+    let mut ids_b = Vec::new();
+    for s in 0..6 {
+        let open = format!(
+            r#"{{"op":"open","learner":"columnar:4","n_inputs":2,"seed":{s}}}"#
+        );
+        ids_a.push(
+            ok(&batched.handle_line(&open)).get("id").unwrap().as_f64().unwrap()
+                as u64,
+        );
+        ids_b.push(
+            ok(&singles.handle_line(&open)).get("id").unwrap().as_f64().unwrap()
+                as u64,
+        );
+    }
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for _ in 0..40 {
+        let xs: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..2).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let ids_json: Vec<String> = ids_a.iter().map(|i| i.to_string()).collect();
+        let xs_json: Vec<String> = xs
+            .iter()
+            .map(|x| format!("[{},{}]", x[0], x[1]))
+            .collect();
+        let req = format!(
+            r#"{{"op":"step_batch","ids":[{}],"xs":[{}],"cs":[0.1,0.1,0.1,0.1,0.1,0.1]}}"#,
+            ids_json.join(","),
+            xs_json.join(",")
+        );
+        let ys = ok(&batched.handle_line(&req));
+        let ys = ys.get("ys").unwrap().as_arr().unwrap();
+        for (k, (&id_b, x)) in ids_b.iter().zip(&xs).enumerate() {
+            let y_single = ok(&singles.handle_line(&obs_line("step", id_b, x, 0.1)))
+                .get("y")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert_eq!(
+                ys[k].as_f64().unwrap(),
+                y_single,
+                "batched wire path diverged from single-step path"
+            );
+        }
+    }
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let service = Service::new(1);
+    assert!(err(&service.handle_line("not json")).contains("bad json"));
+    assert!(err(&service.handle_line(r#"{"op":"warp"}"#)).contains("unknown op"));
+    assert!(err(&service.handle_line(r#"{"op":"step","id":99,"x":[1],"c":0}"#))
+        .contains("no session"));
+    // dense baselines are refused with a useful message
+    let msg = err(&service.handle_line(
+        r#"{"op":"open","learner":"tbptt:4:10","n_inputs":2}"#,
+    ));
+    assert!(msg.contains("tbptt"), "{msg}");
+    // the service survives all of the above
+    ok(&service.handle_line(
+        r#"{"op":"open","learner":"constructive:3:1000","n_inputs":2}"#,
+    ));
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(stats.get("sessions"), Some(&Json::Num(1.0)));
+}
