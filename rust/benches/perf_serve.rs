@@ -1,28 +1,35 @@
 //! §Serve throughput bench: K concurrent columnar TD(lambda) sessions
 //! stepped through M shards with the SoA batched kernel, versus the same
-//! K sessions stepped sequentially through the scalar path.
+//! K sessions stepped sequentially through the scalar path — plus a
+//! mixed-kind load (ccn + tbptt + snap1 cohorts resident on one pool)
+//! now that every net family serves through the registry surface.
 //!
-//! Reports aggregate session-steps/sec for both paths, the speedup, the
-//! p50/p99 latency of single `step` requests through a shard's mpsc
-//! round-trip, and the batched-vs-scalar numerical parity on the final
-//! tick (which must be <= 1e-6; the two paths are arithmetically
-//! identical).
+//! Reports aggregate session-steps/sec for both columnar paths, the
+//! speedup, per-kind steps/s and p50/p99 single-`step` latency through a
+//! shard's mpsc round-trip, and the batched-vs-scalar numerical parity
+//! on the final tick (which must be <= 1e-6; the two paths are
+//! arithmetically identical). Writes the whole record to
+//! `results/BENCH_serve.json` (override with CCN_SERVE_OUT) so the perf
+//! trajectory is machine-comparable across commits.
 //!
 //! Scale knobs (env vars):
-//!   CCN_SERVE_SESSIONS  concurrent sessions  (default 256)
-//!   CCN_SERVE_SHARDS    worker shards        (default 8)
-//!   CCN_SERVE_TICKS     steps per session    (default 500)
-//!   CCN_SERVE_COLUMNS   columns per session  (default 8)
-//!   CCN_SERVE_INPUTS    observation width    (default 8)
+//!   CCN_SERVE_SESSIONS  concurrent columnar sessions   (default 256)
+//!   CCN_SERVE_SHARDS    worker shards                  (default 8)
+//!   CCN_SERVE_TICKS     steps per session              (default 500)
+//!   CCN_SERVE_COLUMNS   columns per session            (default 8)
+//!   CCN_SERVE_INPUTS    observation width              (default 8)
+//!   CCN_SERVE_MIXED     sessions per mixed kind        (default 16)
+//!   CCN_SERVE_OUT       result file                    (default results/BENCH_serve.json)
 
 use std::time::Instant;
 
 use ccn_rtrl::config::LearnerKind;
 use ccn_rtrl::learn::TdConfig;
 use ccn_rtrl::metrics::{percentile, render_table};
-use ccn_rtrl::serve::protocol::{Request, StepItem};
+use ccn_rtrl::serve::protocol::{Request, Response, StepItem};
 use ccn_rtrl::serve::shard::ShardPool;
 use ccn_rtrl::serve::{Session, SessionSpec};
+use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -32,9 +39,9 @@ fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn spec(d: usize, n_inputs: usize, seed: u64) -> SessionSpec {
+fn spec(learner: LearnerKind, n_inputs: usize, seed: u64) -> SessionSpec {
     SessionSpec {
-        learner: LearnerKind::Columnar { d },
+        learner,
         n_inputs,
         td: TdConfig {
             alpha: 0.001,
@@ -46,15 +53,75 @@ fn spec(d: usize, n_inputs: usize, seed: u64) -> SessionSpec {
     }
 }
 
+/// Open `count` sessions of one kind on the pool; returns their ids.
+fn open_cohort(
+    pool: &ShardPool,
+    learner: &LearnerKind,
+    count: usize,
+    n_inputs: usize,
+    seed_base: u64,
+) -> Vec<u64> {
+    (0..count)
+        .map(|s| {
+            match pool.open(spec(learner.clone(), n_inputs, seed_base + s as u64)) {
+                Response::Opened { id } => id,
+                other => panic!("open {} failed: {other:?}", learner.label()),
+            }
+        })
+        .collect()
+}
+
+/// Drive one cohort for `ticks` batched steps; returns steps/s.
+fn drive_cohort(pool: &ShardPool, ids: &[u64], n: usize, ticks: usize) -> f64 {
+    let mut rng = Xoshiro256::seed_from_u64(0xc0_4057);
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        let items: Vec<StepItem> = ids
+            .iter()
+            .map(|&id| StepItem {
+                id,
+                x: (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                c: rng.uniform(-0.5, 0.5),
+            })
+            .collect();
+        for y in pool.step_batch(items) {
+            y.expect("cohort step");
+        }
+    }
+    (ids.len() * ticks) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// p50/p99 of single-`step` requests (microseconds) against `ids`.
+fn probe_latency(pool: &ShardPool, ids: &[u64], n: usize, probes: usize) -> (f64, f64) {
+    let mut rng = Xoshiro256::seed_from_u64(0xfeed);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(probes);
+    for i in 0..probes {
+        let id = ids[i % ids.len()];
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let t = Instant::now();
+        let resp = pool.call(Request::Step { id, x, c: 0.0 });
+        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        if let Response::Error { message } = resp {
+            panic!("latency probe failed: {message}");
+        }
+    }
+    let p50 = percentile(&mut lat_us, 0.50).expect("probes > 0");
+    let p99 = percentile(&mut lat_us, 0.99).expect("probes > 0");
+    (p50, p99)
+}
+
 fn main() {
     let sessions = env_usize("CCN_SERVE_SESSIONS", 256);
     let shards = env_usize("CCN_SERVE_SHARDS", 8);
     let ticks = env_usize("CCN_SERVE_TICKS", 500);
     let d = env_usize("CCN_SERVE_COLUMNS", 8);
     let n = env_usize("CCN_SERVE_INPUTS", 8);
+    let mixed = env_usize("CCN_SERVE_MIXED", 16);
+    let out_path = std::env::var("CCN_SERVE_OUT")
+        .unwrap_or_else(|_| "results/BENCH_serve.json".into());
     eprintln!(
         "[perf_serve] {sessions} sessions x {ticks} ticks, columnar:{d} \
-         over {n} inputs, {shards} shards"
+         over {n} inputs, {shards} shards; mixed load {mixed}/kind"
     );
 
     // deterministic per-session observation streams, shared by both paths
@@ -70,9 +137,12 @@ fn main() {
         (xs, cs)
     };
 
-    // ---- baseline: sequential scalar sessions --------------------------
+    // ---- baseline: sequential scalar columnar sessions -----------------
     let mut scalar: Vec<Session> = (0..sessions)
-        .map(|s| Session::open(spec(d, n, s as u64)).expect("open"))
+        .map(|s| {
+            Session::open(spec(LearnerKind::Columnar { d }, n, s as u64))
+                .expect("open")
+        })
         .collect();
     let mut scalar_final = vec![0.0f32; sessions];
     let t0 = Instant::now();
@@ -85,15 +155,9 @@ fn main() {
     let scalar_elapsed = t0.elapsed().as_secs_f64();
     let scalar_sps = (sessions * ticks) as f64 / scalar_elapsed;
 
-    // ---- sharded + batched path ---------------------------------------
+    // ---- sharded + batched columnar path -------------------------------
     let pool = ShardPool::new(shards);
-    let mut ids = Vec::with_capacity(sessions);
-    for s in 0..sessions {
-        match pool.open(spec(d, n, s as u64)) {
-            ccn_rtrl::serve::protocol::Response::Opened { id } => ids.push(id),
-            other => panic!("open failed: {other:?}"),
-        }
-    }
+    let ids = open_cohort(&pool, &LearnerKind::Columnar { d }, sessions, n, 0);
     // reset the observation streams so both paths see identical data
     let mut obs_rngs: Vec<Xoshiro256> = (0..sessions)
         .map(|s| Xoshiro256::seed_from_u64(1000 + s as u64))
@@ -128,22 +192,67 @@ fn main() {
         "batched/scalar parity violated: max |dy| = {max_dev}"
     );
 
-    // ---- single-request latency through the mpsc round-trip -----------
-    let lat_probes = 2000.min(ticks * sessions).max(100);
-    let mut rng = Xoshiro256::seed_from_u64(0xfeed);
-    let mut lat_us: Vec<f64> = Vec::with_capacity(lat_probes);
-    for i in 0..lat_probes {
-        let id = ids[i % ids.len()];
-        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
-        let t = Instant::now();
-        let resp = pool.call(Request::Step { id, x, c: 0.0 });
-        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
-        if let ccn_rtrl::serve::protocol::Response::Error { message } = resp {
-            panic!("latency probe failed: {message}");
-        }
+    // ---- mixed-kind load: ccn + tbptt + snap1 on the same pool ---------
+    // every kind opens through the same registry surface; cohorts stay
+    // resident together so the pool genuinely hosts a mixed population.
+    let mixed_ticks = (ticks / 4).max(20);
+    let mixed_kinds: Vec<(&str, LearnerKind)> = vec![
+        (
+            "ccn",
+            LearnerKind::Ccn {
+                total: d.max(2),
+                per_stage: (d / 2).max(1),
+                steps_per_stage: 100_000,
+            },
+        ),
+        ("tbptt", LearnerKind::Tbptt { d, k: 10 }),
+        ("snap1", LearnerKind::Snap1 { d }),
+    ];
+    let cohorts: Vec<(&str, Vec<u64>)> = mixed_kinds
+        .iter()
+        .enumerate()
+        .map(|(i, (tag, learner))| {
+            let ids =
+                open_cohort(&pool, learner, mixed, n, 10_000 + 100 * i as u64);
+            (*tag, ids)
+        })
+        .collect();
+    let lat_probes = 500;
+    let mut kind_rows: Vec<Vec<String>> = Vec::new();
+    let mut kind_json: std::collections::BTreeMap<String, Json> =
+        std::collections::BTreeMap::new();
+    // the columnar cohort from the batched phase doubles as the
+    // "columnar" entry of the mixed population.
+    let mut all: Vec<(&str, &[u64], f64)> = Vec::new();
+    let columnar_mixed_sps = drive_cohort(&pool, &ids, n, mixed_ticks);
+    all.push(("columnar", ids.as_slice(), columnar_mixed_sps));
+    for (tag, cohort_ids) in &cohorts {
+        let sps = drive_cohort(&pool, cohort_ids, n, mixed_ticks);
+        all.push((*tag, cohort_ids.as_slice(), sps));
     }
-    let p50 = percentile(&mut lat_us, 0.50);
-    let p99 = percentile(&mut lat_us, 0.99);
+    for &(tag, cohort_ids, sps) in &all {
+        if cohort_ids.is_empty() {
+            // CCN_SERVE_MIXED=0 / CCN_SERVE_SESSIONS=0 disable a cohort
+            continue;
+        }
+        let (p50, p99) = probe_latency(&pool, cohort_ids, n, lat_probes);
+        kind_rows.push(vec![
+            tag.into(),
+            cohort_ids.len().to_string(),
+            format!("{sps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        kind_json.insert(
+            tag.to_string(),
+            Json::obj(vec![
+                ("sessions", Json::Num(cohort_ids.len() as f64)),
+                ("steps_per_s", Json::Num(sps)),
+                ("p50_us", Json::Num(p50)),
+                ("p99_us", Json::Num(p99)),
+            ]),
+        );
+    }
 
     println!(
         "{}",
@@ -167,15 +276,42 @@ fn main() {
             ],
         )
     );
-    println!(
-        "single-step latency through mpsc: p50 {p50:.1} us, p99 {p99:.1} us \
-         ({lat_probes} probes)"
-    );
     println!("batched/scalar parity on final tick: max |dy| = {max_dev:.2e}");
-    let stats = pool.stats();
-    let total: u64 = stats.iter().map(|&(_, t)| t).sum();
     println!(
-        "shard step counts: {:?} (total {total})",
-        stats.iter().map(|&(_, t)| t).collect::<Vec<_>>()
+        "\nmixed-kind load ({mixed_ticks} ticks/kind, latency over \
+         {lat_probes} probes):\n{}",
+        render_table(
+            &["kind", "sessions", "steps/s", "p50 us", "p99 us"],
+            &kind_rows
+        )
     );
+    let stats = pool.stats();
+    let total: u64 = stats.iter().map(|s| s.steps).sum();
+    let kind_counts = ccn_rtrl::serve::protocol::ShardStats::merge_kinds(&stats);
+    println!(
+        "shard step counts: {:?} (total {total}); resident kinds: {kind_counts:?}",
+        stats.iter().map(|s| s.steps).collect::<Vec<_>>()
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("perf_serve".into())),
+        ("sessions", Json::Num(sessions as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("ticks", Json::Num(ticks as f64)),
+        ("columns", Json::Num(d as f64)),
+        ("inputs", Json::Num(n as f64)),
+        ("columnar_scalar_steps_per_s", Json::Num(scalar_sps)),
+        ("columnar_batched_steps_per_s", Json::Num(served_sps)),
+        ("batched_speedup", Json::Num(served_sps / scalar_sps)),
+        ("parity_max_dev", Json::Num(max_dev as f64)),
+        ("mixed_ticks", Json::Num(mixed_ticks as f64)),
+        ("kinds", Json::Obj(kind_json)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create results dir");
+        }
+    }
+    std::fs::write(&out_path, record.pretty()).expect("write BENCH_serve.json");
+    eprintln!("wrote {out_path}");
 }

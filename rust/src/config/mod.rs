@@ -10,7 +10,7 @@ use crate::nets::ccn::{CcnConfig, CcnNet};
 use crate::nets::normalizer::NORM_BETA;
 use crate::nets::snap1::Snap1Net;
 use crate::nets::tbptt::TbpttNet;
-use crate::nets::PredictionNet;
+use crate::nets::ServableNet;
 use crate::util::json::Json;
 
 /// A configuration the rest of the system cannot act on. Carried as a
@@ -98,6 +98,23 @@ impl LearnerKind {
         }
     }
 
+    /// The stable net-kind tag of this learner spec, always in the same
+    /// [`crate::nets::NetRegistry`] *family* as the built net's
+    /// `PersistableNet::kind`. The two tags are usually equal, but a
+    /// degenerate spec can build a net that self-reports a sibling
+    /// corner of its family (e.g. `ccn:T:1:S` builds a net whose
+    /// `kind()` is `constructive`); snapshot restore only requires
+    /// family equality, so both tags restore interchangeably.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LearnerKind::Columnar { .. } => "columnar",
+            LearnerKind::Constructive { .. } => "constructive",
+            LearnerKind::Ccn { .. } => "ccn",
+            LearnerKind::Tbptt { .. } => "tbptt",
+            LearnerKind::Snap1 { .. } => "snap1",
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             LearnerKind::Columnar { d } => Json::obj(vec![
@@ -159,8 +176,10 @@ impl LearnerKind {
         })
     }
 
-    /// True for the serveable CCN family (columnar/constructive/ccn);
-    /// false for the dense benchmark baselines (tbptt/snap1).
+    /// True for the CCN family (columnar/constructive/ccn) — the kinds
+    /// that share [`crate::nets::ccn::CcnNet`]'s snapshot format; false
+    /// for the dense baselines (tbptt/snap1). All five kinds are
+    /// serveable; v1 snapshot envelopes covered only this family.
     pub fn is_ccn_family(&self) -> bool {
         !matches!(
             self,
@@ -427,21 +446,32 @@ pub fn build_ccn(
     Ok(CcnNet::new(cfg, seed))
 }
 
+/// Build *any* learner kind as a boxed [`ServableNet`] — the single net
+/// factory behind the experiment runner and the serve layer's `open`.
+/// Every kind the registry can restore can also be built here.
+pub fn build_servable(
+    learner: &LearnerKind,
+    n_inputs: usize,
+    eps: f32,
+    seed: u64,
+) -> Result<Box<dyn ServableNet>, ConfigError> {
+    let net: Box<dyn ServableNet> = match learner {
+        LearnerKind::Tbptt { d, k } => Box::new(TbpttNet::new(n_inputs, *d, *k, seed)),
+        LearnerKind::Snap1 { d } => Box::new(Snap1Net::new(n_inputs, *d, seed)),
+        ccn_family => Box::new(build_ccn(ccn_family, n_inputs, eps, seed)?),
+    };
+    Ok(net)
+}
+
 /// Build the agent (net + TD(lambda)) for a config over `n_inputs`
 /// features with discount `gamma`.
 pub fn build_agent(
     cfg: &ExperimentConfig,
     n_inputs: usize,
     gamma: f32,
-) -> TdLambdaAgent<Box<dyn PredictionNet>> {
-    let net: Box<dyn PredictionNet> = match &cfg.learner {
-        LearnerKind::Tbptt { d, k } => Box::new(TbpttNet::new(n_inputs, *d, *k, cfg.seed)),
-        LearnerKind::Snap1 { d } => Box::new(Snap1Net::new(n_inputs, *d, cfg.seed)),
-        ccn_family => Box::new(
-            build_ccn(ccn_family, n_inputs, cfg.eps, cfg.seed)
-                .expect("ccn family specs always build"),
-        ),
-    };
+) -> TdLambdaAgent<Box<dyn ServableNet>> {
+    let net = build_servable(&cfg.learner, n_inputs, cfg.eps, cfg.seed)
+        .expect("every learner kind is servable");
     TdLambdaAgent::new(
         net,
         TdConfig {
@@ -452,42 +482,10 @@ pub fn build_agent(
     )
 }
 
-impl PredictionNet for Box<dyn PredictionNet> {
-    fn n_features(&self) -> usize {
-        (**self).n_features()
-    }
-    fn advance(&mut self, x: &[f32]) {
-        (**self).advance(x)
-    }
-    fn features(&self) -> &[f32] {
-        (**self).features()
-    }
-    fn n_learnable_params(&self) -> usize {
-        (**self).n_learnable_params()
-    }
-    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
-        (**self).grad_y(w_out, grad)
-    }
-    fn apply_update(&mut self, delta: &[f32]) {
-        (**self).apply_update(delta)
-    }
-    fn param_epoch(&self) -> u64 {
-        (**self).param_epoch()
-    }
-    fn end_step(&mut self) {
-        (**self).end_step()
-    }
-    fn flops_per_step(&self) -> u64 {
-        (**self).flops_per_step()
-    }
-    fn name(&self) -> &'static str {
-        (**self).name()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nets::{PersistableNet, PredictionNet};
 
     #[test]
     fn json_roundtrip_all_learners() {
@@ -611,6 +609,30 @@ mod tests {
         .expect("must not panic on unknown games");
         assert_eq!(err, ConfigError::UnknownGame("nonexistent".into()));
         assert!(err.to_string().contains("pong"), "lists alternatives");
+    }
+
+    #[test]
+    fn build_servable_builds_every_kind_with_matching_tag() {
+        let learners = vec![
+            LearnerKind::Columnar { d: 3 },
+            LearnerKind::Constructive {
+                total: 4,
+                steps_per_stage: 100,
+            },
+            LearnerKind::Ccn {
+                total: 4,
+                per_stage: 2,
+                steps_per_stage: 100,
+            },
+            LearnerKind::Tbptt { d: 2, k: 5 },
+            LearnerKind::Snap1 { d: 2 },
+        ];
+        for learner in learners {
+            let net = build_servable(&learner, 3, 0.01, 0)
+                .unwrap_or_else(|e| panic!("{}: {e}", learner.label()));
+            assert_eq!(net.kind(), learner.kind(), "{}", learner.label());
+            assert_eq!(net.n_inputs(), 3);
+        }
     }
 
     #[test]

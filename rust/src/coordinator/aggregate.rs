@@ -111,6 +111,7 @@ mod tests {
         RunResult {
             label: format!("{env}:{learner}:s{seed}"),
             learner: learner.into(),
+            kind: learner.into(),
             env: env.into(),
             seed,
             tail_error: *errs.last().unwrap(),

@@ -5,6 +5,7 @@ use std::time::Instant;
 use crate::config::{build_agent, build_stream, ConfigError, ExperimentConfig};
 use crate::env::returns::ReturnEval;
 use crate::metrics::Curve;
+use crate::nets::PersistableNet;
 use crate::util::json::Json;
 
 /// Outcome of one (config, seed) run.
@@ -12,6 +13,10 @@ use crate::util::json::Json;
 pub struct RunResult {
     pub label: String,
     pub learner: String,
+    /// registered net-kind tag ([`crate::nets::NetRegistry`]) the run's
+    /// net self-reported; same registry family as the learner spec's
+    /// kind (equal for all non-degenerate specs)
+    pub kind: String,
     pub env: String,
     pub seed: u64,
     /// mean-squared return error learning curve (binned)
@@ -31,6 +36,7 @@ impl RunResult {
         Json::obj(vec![
             ("label", Json::Str(self.label.clone())),
             ("learner", Json::Str(self.learner.clone())),
+            ("kind", Json::Str(self.kind.clone())),
             ("env", Json::Str(self.env.clone())),
             ("seed", Json::Num(self.seed as f64)),
             (
@@ -85,6 +91,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunResult, ConfigError> 
     Ok(RunResult {
         label: cfg.label(),
         learner: cfg.learner.label(),
+        kind: agent.net.kind().to_string(),
         env: cfg.env.label(),
         seed: cfg.seed,
         tail_error: curve.tail_mean(0.1),

@@ -41,7 +41,10 @@ impl Default for TdConfig {
 /// The agent's learning state minus the net: readout weights, both
 /// eligibility traces, and the TD bootstrap bookkeeping. Captured and
 /// restored for session snapshots ([`crate::serve`]); the net itself is
-/// serialized separately.
+/// serialized separately through [`crate::nets::PersistableNet::save`]
+/// and restored by [`crate::nets::NetRegistry`] under its kind tag —
+/// restore the net first, then [`TdLambdaAgent::set_td_state`] validates
+/// this state against it (shapes and parameter epoch).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TdState {
     pub w: Vec<f32>,

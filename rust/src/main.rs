@@ -18,6 +18,7 @@ use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
 use ccn_rtrl::coordinator::{aggregate_runs, run_experiment, run_sweep, sweep};
 use ccn_rtrl::env::synthatari;
 use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::nets::NetRegistry;
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
 use ccn_rtrl::serve::Service;
@@ -124,7 +125,9 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     args.finish()?;
     eprintln!(
         "ccn serve: {shards} shard(s); JSONL requests on stdin, responses \
-         on stdout (op: open|step|step_batch|predict|snapshot|restore|close|stats)"
+         on stdout (op: open|step|step_batch|predict|snapshot|restore|close|stats; \
+         net kinds: {})",
+        NetRegistry::kinds().join("|")
     );
     let service = Service::new(shards);
     service.run_stdio()
@@ -255,7 +258,8 @@ fn main() {
                    ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE | tbptt:D:K | snap1:D\n\
                  sweep adds: --seeds 0,1,2 --threads T\n\
                  serve options: --shards N   (JSONL protocol on stdin/stdout;\n\
-                   ops: open|step|step_batch|predict|snapshot|restore|close|stats)"
+                   ops: open|step|step_batch|predict|snapshot|restore|close|stats;\n\
+                   every learner spec above is serveable and snapshot-safe)"
             );
             std::process::exit(2);
         }

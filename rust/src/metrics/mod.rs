@@ -184,18 +184,26 @@ pub fn write_csv(
     Ok(())
 }
 
-/// Percentile of a sample set by nearest-rank interpolation (p in
-/// [0, 1]); sorts in place. Used for latency reporting (p50/p99) in the
-/// serve benches. NaN samples are sorted last and never selected unless
-/// everything is NaN.
-pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+/// Percentile of a sample set by nearest rank; sorts in place. Used for
+/// latency reporting (p50/p99) in the serve benches.
+///
+/// Convention:
+/// - `None` for an empty sample set (there is no percentile to report —
+///   callers must not invent one);
+/// - `p` is a fraction and is clamped to `[0, 1]`: `p = 0.0` selects the
+///   minimum, `p = 1.0` the maximum, and a single-element slice returns
+///   that element for every `p`;
+/// - the selected rank is `round((len - 1) * p)`;
+/// - NaN samples sort last (`f64::total_cmp`) and are only selected when
+///   every sample is NaN.
+pub fn percentile(samples: &mut [f64], p: f64) -> Option<f64> {
     if samples.is_empty() {
-        return f64::NAN;
+        return None;
     }
     // total_cmp is a total order that places NaN after every real value
     samples.sort_by(|a, b| a.total_cmp(b));
     let idx = ((samples.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
-    samples[idx]
+    Some(samples[idx])
 }
 
 /// Render an aligned text table (benches print these per paper figure).
@@ -235,16 +243,33 @@ mod tests {
     #[test]
     fn percentile_nearest_rank() {
         let mut xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&mut xs, 0.0), 1.0);
-        assert_eq!(percentile(&mut xs, 1.0), 100.0);
-        assert_eq!(percentile(&mut xs, 0.5), 51.0); // round(99*0.5)=50 -> 51.0
-        let mut one = vec![7.0];
-        assert_eq!(percentile(&mut one, 0.99), 7.0);
-        let mut none: Vec<f64> = vec![];
-        assert!(percentile(&mut none, 0.5).is_nan());
+        assert_eq!(percentile(&mut xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&mut xs, 1.0), Some(100.0));
+        assert_eq!(percentile(&mut xs, 0.5), Some(51.0)); // round(99*0.5)=50 -> 51.0
         // unsorted input
         let mut shuffled = vec![3.0, 1.0, 2.0];
-        assert_eq!(percentile(&mut shuffled, 1.0), 3.0);
+        assert_eq!(percentile(&mut shuffled, 1.0), Some(3.0));
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // empty: no percentile exists
+        let mut none: Vec<f64> = vec![];
+        assert_eq!(percentile(&mut none, 0.5), None);
+        // single element: every p selects it, including the extremes
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            let mut one = vec![7.0];
+            assert_eq!(percentile(&mut one, p), Some(7.0));
+        }
+        // out-of-range p clamps to min/max instead of panicking
+        let mut xs = vec![1.0, 2.0, 3.0];
+        assert_eq!(percentile(&mut xs, -0.5), Some(1.0));
+        assert_eq!(percentile(&mut xs, 100.0), Some(3.0));
+        // NaN sorts last: selected only when everything is NaN
+        let mut with_nan = vec![f64::NAN, 2.0, 1.0];
+        assert_eq!(percentile(&mut with_nan, 0.5), Some(2.0));
+        let mut all_nan = vec![f64::NAN, f64::NAN];
+        assert!(percentile(&mut all_nan, 0.5).unwrap().is_nan());
     }
 
     #[test]

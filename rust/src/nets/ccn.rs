@@ -18,7 +18,7 @@
 
 use super::lstm_column::LstmColumn;
 use super::normalizer::OnlineNormalizer;
-use super::PredictionNet;
+use super::{BatchCapability, PersistableNet, PredictionNet};
 use crate::compute;
 use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
@@ -449,6 +449,43 @@ impl PredictionNet for CcnNet {
         } else {
             "ccn"
         }
+    }
+}
+
+impl PersistableNet for CcnNet {
+    /// The three CCN-family kinds share one snapshot format; any of them
+    /// restores through [`CcnNet::from_json`].
+    fn kind(&self) -> &'static str {
+        self.name()
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.cfg.n_inputs
+    }
+
+    fn save(&self) -> Json {
+        self.to_json()
+    }
+
+    /// A single never-freezing stage *is* the pure-columnar shape the SoA
+    /// batch store holds; everything that grows or freezes stays scalar.
+    fn batch_capability(&self) -> BatchCapability {
+        if self.cfg.steps_per_stage == u64::MAX && self.stages.len() == 1 {
+            BatchCapability::Columnar {
+                n_inputs: self.cfg.n_inputs,
+                d: self.stages[0].columns.len(),
+                eps: self.cfg.norm_eps,
+                beta: self.cfg.norm_beta,
+            }
+        } else {
+            BatchCapability::None
+        }
+    }
+}
+
+impl super::ServableNet for CcnNet {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 

@@ -10,6 +10,7 @@
 //! returns a [`StepRecord`] holding everything BPTT needs to run the
 //! backward pass later.
 
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 use crate::util::{dot, sigmoid};
 
@@ -59,6 +60,44 @@ impl StepRecord {
         }
     }
 
+    /// Full serialization; f32 -> f64 JSON numbers are exact so the round
+    /// trip is lossless.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("x", Json::arr_f32(&self.x)),
+            ("h_prev", Json::arr_f32(&self.h_prev)),
+            ("c_prev", Json::arr_f32(&self.c_prev)),
+            ("i", Json::arr_f32(&self.i)),
+            ("f", Json::arr_f32(&self.f)),
+            ("o", Json::arr_f32(&self.o)),
+            ("g", Json::arr_f32(&self.g)),
+            ("c", Json::arr_f32(&self.c)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`] for a record of shape `(n, d)`;
+    /// `None` on any length mismatch.
+    pub fn from_json(v: &Json, n: usize, d: usize) -> Option<Self> {
+        let vec_of = |key: &str, len: usize| -> Option<Vec<f32>> {
+            let arr = v.get(key)?.to_f32_vec()?;
+            if arr.len() == len {
+                Some(arr)
+            } else {
+                None
+            }
+        };
+        Some(Self {
+            x: vec_of("x", n)?,
+            h_prev: vec_of("h_prev", d)?,
+            c_prev: vec_of("c_prev", d)?,
+            i: vec_of("i", d)?,
+            f: vec_of("f", d)?,
+            o: vec_of("o", d)?,
+            g: vec_of("g", d)?,
+            c: vec_of("c", d)?,
+        })
+    }
+
     fn resize(&mut self, n: usize, d: usize) {
         self.x.resize(n, 0.0);
         for v in [
@@ -90,6 +129,46 @@ impl LstmFull {
             h: vec![0.0; d],
             c: vec![0.0; d],
         }
+    }
+
+    /// Full serialization: parameters and recurrent state. The round
+    /// trip is lossless (f32 -> f64 JSON numbers are exact).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("d", Json::Num(self.d as f64)),
+            ("wx", Json::arr_f32(&self.wx)),
+            ("wh", Json::arr_f32(&self.wh)),
+            ("b", Json::arr_f32(&self.b)),
+            ("h", Json::arr_f32(&self.h)),
+            ("c", Json::arr_f32(&self.c)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`]; `None` on shape mismatch.
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let n = v.get("n")?.as_usize()?;
+        let d = v.get("d")?.as_usize()?;
+        if n == 0 || d == 0 {
+            return None;
+        }
+        let vec_of = |key: &str, len: usize| -> Option<Vec<f32>> {
+            let arr = v.get(key)?.to_f32_vec()?;
+            if arr.len() == len {
+                Some(arr)
+            } else {
+                None
+            }
+        };
+        Some(Self {
+            n,
+            d,
+            wx: vec_of("wx", 4 * d * n)?,
+            wh: vec_of("wh", 4 * d * d)?,
+            b: vec_of("b", 4 * d)?,
+            h: vec_of("h", d)?,
+            c: vec_of("c", d)?,
+        })
     }
 
     /// One forward step; records the activations for BPTT.
@@ -307,6 +386,38 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .sum();
         assert!(diff > 1e-4, "truncated == full would mean no bias to study");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_params_state_and_records() {
+        let (n, d) = (3, 4);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut net = LstmFull::new(n, d, &mut rng, 0.7);
+        let mut rec = StepRecord::zeroed(n, d);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.step_into_record(&x, &mut rec);
+        }
+        let back = LstmFull::from_json(
+            &crate::util::json::Json::parse(&net.to_json().dump()).unwrap(),
+        )
+        .expect("lstm roundtrip");
+        assert_eq!(back.wx, net.wx);
+        assert_eq!(back.wh, net.wh);
+        assert_eq!(back.b, net.b);
+        assert_eq!(back.h, net.h);
+        assert_eq!(back.c, net.c);
+        let rec_back = StepRecord::from_json(
+            &crate::util::json::Json::parse(&rec.to_json().dump()).unwrap(),
+            n,
+            d,
+        )
+        .expect("record roundtrip");
+        assert_eq!(rec_back.x, rec.x);
+        assert_eq!(rec_back.h_prev, rec.h_prev);
+        assert_eq!(rec_back.c, rec.c);
+        // wrong shape is rejected
+        assert!(StepRecord::from_json(&rec.to_json(), n + 1, d).is_none());
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! [`lstm_column::LstmColumn`] holds the Appendix-B forward-mode trace
 //! math; [`normalizer::OnlineNormalizer`] the Section-3.4 feature
 //! normalization.
+//!
+//! Every family also implements [`PersistableNet`] (complete JSON state
+//! capture under a stable `kind` tag) and is registered in
+//! [`registry::NetRegistry`], which maps kind -> constructor-from-json.
+//! [`ServableNet`] combines the two traits; the serve layer holds
+//! sessions as `Box<dyn ServableNet>` and discovers the SoA batched fast
+//! path through [`PersistableNet::batch_capability`] instead of matching
+//! on concrete types.
 
 pub mod ccn;
 pub mod columnar;
@@ -22,8 +30,13 @@ pub mod constructive;
 pub mod lstm_column;
 pub mod lstm_full;
 pub mod normalizer;
+pub mod registry;
 pub mod snap1;
 pub mod tbptt;
+
+pub use registry::NetRegistry;
+
+use crate::util::json::Json;
 
 /// A recurrent feature network with per-step gradient estimates of its
 /// linear readout y = w . features().
@@ -66,4 +79,110 @@ pub trait PredictionNet: Send {
     fn flops_per_step(&self) -> u64;
 
     fn name(&self) -> &'static str;
+}
+
+/// How a net can participate in the serve layer's SoA fast path
+/// ([`crate::serve::batch`]). Capability is *discovered* from the net, so
+/// the batched store never needs to know which architectures exist.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BatchCapability {
+    /// No batched representation; sessions stay on the scalar path.
+    None,
+    /// The net is `d` forever-learning independent LSTM columns over
+    /// `n_inputs` raw inputs behind one online normalizer — the exact
+    /// shape a `ColumnarSessionBatch` lane holds.
+    Columnar {
+        n_inputs: usize,
+        d: usize,
+        /// normalizer epsilon
+        eps: f32,
+        /// normalizer beta
+        beta: f32,
+    },
+}
+
+/// The persistence companion to [`PredictionNet`]: a net that can write
+/// its complete state (parameters, recurrent state, gradient bookkeeping)
+/// to JSON and be rebuilt from it by [`NetRegistry::restore`] under its
+/// [`kind`](PersistableNet::kind) tag. Implemented by every net family so
+/// the serve layer can snapshot and restore any of them through one
+/// versioned envelope.
+pub trait PersistableNet {
+    /// Stable snapshot tag this net restores under; one of
+    /// [`NetRegistry::kinds`] (`columnar`, `constructive`, `ccn`,
+    /// `tbptt`, `snap1`).
+    fn kind(&self) -> &'static str;
+
+    /// Observation width the net consumes (snapshot/spec consistency
+    /// checks).
+    fn n_inputs(&self) -> usize;
+
+    /// Complete state serialization. `NetRegistry::restore(self.kind(),
+    /// &self.save())` rebuilds a net that continues bit-identically.
+    fn save(&self) -> Json;
+
+    /// Batched-stepping capability discovery; defaults to scalar-only.
+    fn batch_capability(&self) -> BatchCapability {
+        BatchCapability::None
+    }
+}
+
+/// Everything the serve layer needs from a net: stepping
+/// ([`PredictionNet`]), persistence ([`PersistableNet`]) and runtime
+/// downcasting (`as_any`, for lossless conversion into specialized
+/// stores like the SoA columnar batch).
+pub trait ServableNet: PredictionNet + PersistableNet {
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Boxed nets (including trait objects like `Box<dyn ServableNet>`)
+/// forward both traits to their contents, so `TdLambdaAgent` can own a
+/// net of any family behind one type. A method added to either trait
+/// without a default body is forwarded automatically.
+impl<T: PredictionNet + ?Sized> PredictionNet for Box<T> {
+    fn n_features(&self) -> usize {
+        (**self).n_features()
+    }
+    fn advance(&mut self, x: &[f32]) {
+        (**self).advance(x)
+    }
+    fn features(&self) -> &[f32] {
+        (**self).features()
+    }
+    fn n_learnable_params(&self) -> usize {
+        (**self).n_learnable_params()
+    }
+    fn grad_y(&self, w_out: &[f32], grad: &mut [f32]) {
+        (**self).grad_y(w_out, grad)
+    }
+    fn apply_update(&mut self, delta: &[f32]) {
+        (**self).apply_update(delta)
+    }
+    fn param_epoch(&self) -> u64 {
+        (**self).param_epoch()
+    }
+    fn end_step(&mut self) {
+        (**self).end_step()
+    }
+    fn flops_per_step(&self) -> u64 {
+        (**self).flops_per_step()
+    }
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+impl<T: PersistableNet + ?Sized> PersistableNet for Box<T> {
+    fn kind(&self) -> &'static str {
+        (**self).kind()
+    }
+    fn n_inputs(&self) -> usize {
+        (**self).n_inputs()
+    }
+    fn save(&self) -> Json {
+        (**self).save()
+    }
+    fn batch_capability(&self) -> BatchCapability {
+        (**self).batch_capability()
+    }
 }

@@ -1,0 +1,127 @@
+//! The net registry: snapshot kind -> constructor-from-json.
+//!
+//! Every [`super::PersistableNet`] family registers its restore function
+//! here under the stable kind tag its `kind()` reports. The serve layer's
+//! versioned snapshot envelope (`{"v":2,"kind":...,"net":...}`) routes
+//! through [`NetRegistry::restore`], so adding a new architecture to the
+//! service is one entry in the registration table — no session, shard or
+//! protocol code changes.
+//!
+//! Kinds are grouped into *families* that share a serialization format:
+//! `columnar`, `constructive` and `ccn` are the three corners of the
+//! [`CcnNet`] configuration space and all restore through
+//! [`CcnNet::from_json`]; `tbptt` and `snap1` are their own families.
+
+use super::ccn::CcnNet;
+use super::snap1::Snap1Net;
+use super::tbptt::TbpttNet;
+use super::ServableNet;
+use crate::util::json::Json;
+
+type RestoreFn = fn(&Json) -> Result<Box<dyn ServableNet>, String>;
+
+fn restore_ccn(v: &Json) -> Result<Box<dyn ServableNet>, String> {
+    CcnNet::from_json(v).map(|n| Box::new(n) as Box<dyn ServableNet>)
+}
+
+fn restore_tbptt(v: &Json) -> Result<Box<dyn ServableNet>, String> {
+    TbpttNet::from_json(v).map(|n| Box::new(n) as Box<dyn ServableNet>)
+}
+
+fn restore_snap1(v: &Json) -> Result<Box<dyn ServableNet>, String> {
+    Snap1Net::from_json(v).map(|n| Box::new(n) as Box<dyn ServableNet>)
+}
+
+/// `(kind, family, restore)` for every registered net kind.
+const ENTRIES: &[(&str, &str, RestoreFn)] = &[
+    ("columnar", "ccn", restore_ccn),
+    ("constructive", "ccn", restore_ccn),
+    ("ccn", "ccn", restore_ccn),
+    ("tbptt", "tbptt", restore_tbptt),
+    ("snap1", "snap1", restore_snap1),
+];
+
+/// Static lookup from snapshot kind tags to net constructors.
+pub struct NetRegistry;
+
+impl NetRegistry {
+    /// Every registered kind tag, in registration order.
+    pub fn kinds() -> Vec<&'static str> {
+        ENTRIES.iter().map(|e| e.0).collect()
+    }
+
+    /// The serialization family a kind belongs to (`None` for unknown
+    /// kinds). Kinds in the same family restore through the same
+    /// constructor and may be used interchangeably in envelopes.
+    pub fn family(kind: &str) -> Option<&'static str> {
+        ENTRIES.iter().find(|e| e.0 == kind).map(|e| e.1)
+    }
+
+    /// Rebuild a net from `PersistableNet::save` output under `kind`.
+    pub fn restore(kind: &str, net: &Json) -> Result<Box<dyn ServableNet>, String> {
+        let entry = ENTRIES.iter().find(|e| e.0 == kind).ok_or_else(|| {
+            format!(
+                "unknown net kind '{kind}' (registered: {})",
+                NetRegistry::kinds().join(", ")
+            )
+        })?;
+        (entry.2)(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{PersistableNet, PredictionNet};
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn every_kind_is_registered_with_a_family() {
+        let kinds = NetRegistry::kinds();
+        assert_eq!(
+            kinds,
+            vec!["columnar", "constructive", "ccn", "tbptt", "snap1"]
+        );
+        for k in kinds {
+            assert!(NetRegistry::family(k).is_some());
+        }
+        assert_eq!(NetRegistry::family("columnar"), NetRegistry::family("ccn"));
+        assert_ne!(NetRegistry::family("tbptt"), NetRegistry::family("snap1"));
+        assert_eq!(NetRegistry::family("hopfield"), None);
+    }
+
+    #[test]
+    fn save_restore_roundtrips_through_kind_tag() {
+        // one net per family, driven, saved, restored through the
+        // registry by its own kind() tag, then stepped in lockstep.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let nets: Vec<Box<dyn ServableNet>> = vec![
+            Box::new(crate::nets::columnar::columnar_net(3, 4, 0.01, 1)),
+            Box::new(crate::nets::tbptt::TbpttNet::new(3, 2, 6, 2)),
+            Box::new(crate::nets::snap1::Snap1Net::new(3, 2, 3)),
+        ];
+        for mut net in nets {
+            for _ in 0..40 {
+                let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                net.advance(&x);
+                net.end_step();
+            }
+            let mut back = NetRegistry::restore(net.kind(), &net.save())
+                .unwrap_or_else(|e| panic!("{} restore: {e}", net.kind()));
+            assert_eq!(back.kind(), net.kind());
+            assert_eq!(back.n_inputs(), 3);
+            for _ in 0..20 {
+                let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                net.advance(&x);
+                back.advance(&x);
+                assert_eq!(net.features(), back.features(), "{}", net.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_unknown_kind() {
+        let err = NetRegistry::restore("hopfield", &Json::Null).unwrap_err();
+        assert!(err.contains("hopfield") && err.contains("tbptt"), "{err}");
+    }
+}

@@ -17,7 +17,8 @@
 //! show it.
 
 use super::lstm_column::LstmColumn;
-use super::PredictionNet;
+use super::{PersistableNet, PredictionNet};
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 
 pub struct Snap1Net {
@@ -51,6 +52,72 @@ impl Snap1Net {
             feats: vec![0.0; d],
             xbuf: vec![0.0; m],
         }
+    }
+
+    /// Full serialization: every unit column (parameters + SnAp-1 traces)
+    /// plus the dense hidden state. Lossless round trip.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("d", Json::Num(self.d as f64)),
+            (
+                "units",
+                Json::Arr(self.units.iter().map(|u| u.to_json()).collect()),
+            ),
+            ("h_prev", Json::arr_f32(&self.h_prev)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`] (the [`super::NetRegistry`] `snap1`
+    /// constructor).
+    pub fn from_json(v: &Json) -> Result<Snap1Net, String> {
+        let bad = |what: &str| format!("snap1 snapshot: bad or missing '{what}'");
+        let n = v
+            .get("n")
+            .and_then(|x| x.as_usize())
+            .filter(|&n| n >= 1)
+            .ok_or_else(|| bad("n"))?;
+        let d = v
+            .get("d")
+            .and_then(|x| x.as_usize())
+            .filter(|&d| d >= 1)
+            .ok_or_else(|| bad("d"))?;
+        let m = n + d;
+        let units_json = v
+            .get("units")
+            .and_then(|u| u.as_arr())
+            .ok_or_else(|| bad("units"))?;
+        if units_json.len() != d {
+            return Err(format!(
+                "snap1 snapshot: {} units, d = {d}",
+                units_json.len()
+            ));
+        }
+        let mut units = Vec::with_capacity(d);
+        for uj in units_json {
+            let unit = LstmColumn::from_json(uj).ok_or_else(|| bad("units"))?;
+            if unit.m != m {
+                return Err(format!(
+                    "snap1 snapshot: unit width {} != n + d = {m}",
+                    unit.m
+                ));
+            }
+            units.push(unit);
+        }
+        let h_prev = v
+            .get("h_prev")
+            .and_then(|h| h.to_f32_vec())
+            .filter(|h| h.len() == d)
+            .ok_or_else(|| bad("h_prev"))?;
+        // features() mirrors h_prev after every advance; xbuf is scratch.
+        Ok(Self {
+            n,
+            d,
+            units,
+            feats: h_prev.clone(),
+            h_prev,
+            xbuf: vec![0.0; m],
+        })
     }
 }
 
@@ -105,6 +172,26 @@ impl PredictionNet for Snap1Net {
 
     fn name(&self) -> &'static str {
         "snap1"
+    }
+}
+
+impl PersistableNet for Snap1Net {
+    fn kind(&self) -> &'static str {
+        "snap1"
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.n
+    }
+
+    fn save(&self) -> Json {
+        self.to_json()
+    }
+}
+
+impl super::ServableNet for Snap1Net {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 }
 
@@ -169,6 +256,45 @@ mod tests {
                     assert_eq!(u.thw[a * m + n + j], 0.0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_continues_bit_exactly() {
+        let (n, d) = (3, 4);
+        let mut snap = Snap1Net::new(n, d, 9);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _ in 0..60 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            snap.advance(&x);
+        }
+        let text = snap.to_json().dump();
+        let mut back =
+            Snap1Net::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .expect("snap1 roundtrip");
+        assert_eq!(back.features(), snap.features());
+        let w_out: Vec<f32> = (0..d).map(|j| 0.1 * j as f32 - 0.2).collect();
+        let mut ga = vec![0.0; snap.n_learnable_params()];
+        let mut gb = vec![0.0; back.n_learnable_params()];
+        snap.grad_y(&w_out, &mut ga);
+        back.grad_y(&w_out, &mut gb);
+        assert_eq!(ga, gb, "restored traces must match");
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            snap.advance(&x);
+            back.advance(&x);
+            assert_eq!(snap.features(), back.features());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_unit_width() {
+        let snap = Snap1Net::new(2, 2, 0);
+        let j = snap.to_json();
+        if let crate::util::json::Json::Obj(mut o) = j {
+            // claim n = 3: unit width 4 no longer equals n + d = 5
+            o.insert("n".into(), crate::util::json::Json::Num(3.0));
+            assert!(Snap1Net::from_json(&crate::util::json::Json::Obj(o)).is_err());
         }
     }
 

@@ -7,8 +7,9 @@
 //! per-step compute is (k+1) forward-equivalents (Appendix A).
 
 use super::lstm_full::{LstmFull, StepRecord};
-use super::PredictionNet;
+use super::{PersistableNet, PredictionNet};
 use crate::compute;
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 
 pub struct TbpttNet {
@@ -38,6 +39,72 @@ impl TbpttNet {
 
     pub fn truncation(&self) -> usize {
         self.k
+    }
+
+    /// Full serialization: LSTM parameters/state plus the BPTT ring
+    /// buffer in storage order with its cursor, so the newest-first
+    /// window walk (and therefore `grad_y`) resumes bit-identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("k", Json::Num(self.k as f64)),
+            ("lstm", self.lstm.to_json()),
+            (
+                "ring",
+                Json::Arr(self.ring.iter().map(|r| r.to_json()).collect()),
+            ),
+            ("cursor", Json::Num(self.cursor as f64)),
+            ("filled", Json::Num(self.filled as f64)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`] (the [`super::NetRegistry`] `tbptt`
+    /// constructor).
+    pub fn from_json(v: &Json) -> Result<TbpttNet, String> {
+        let bad = |what: &str| format!("tbptt snapshot: bad or missing '{what}'");
+        let k = v
+            .get("k")
+            .and_then(|n| n.as_usize())
+            .filter(|&k| k >= 1)
+            .ok_or_else(|| bad("k"))?;
+        let lstm = LstmFull::from_json(v.get("lstm").ok_or_else(|| bad("lstm"))?)
+            .ok_or_else(|| bad("lstm"))?;
+        let ring_json = v
+            .get("ring")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| bad("ring"))?;
+        if ring_json.len() != k {
+            return Err(format!(
+                "tbptt snapshot: ring has {} records, k = {k}",
+                ring_json.len()
+            ));
+        }
+        let mut ring = Vec::with_capacity(k);
+        for rj in ring_json {
+            ring.push(
+                StepRecord::from_json(rj, lstm.n, lstm.d).ok_or_else(|| bad("ring"))?,
+            );
+        }
+        let cursor = v
+            .get("cursor")
+            .and_then(|n| n.as_usize())
+            .filter(|&c| c < k)
+            .ok_or_else(|| bad("cursor"))?;
+        let filled = v
+            .get("filled")
+            .and_then(|n| n.as_usize())
+            .filter(|&f| f <= k)
+            .ok_or_else(|| bad("filled"))?;
+        // features() mirrors the hidden state after every advance, so it
+        // is reconstructed rather than stored.
+        let feats = lstm.h.clone();
+        Ok(Self {
+            ring,
+            cursor,
+            filled,
+            k,
+            feats,
+            lstm,
+        })
     }
 
     /// Records newest-first (the order the backward pass consumes).
@@ -97,6 +164,26 @@ impl PredictionNet for TbpttNet {
     }
 }
 
+impl PersistableNet for TbpttNet {
+    fn kind(&self) -> &'static str {
+        "tbptt"
+    }
+
+    fn n_inputs(&self) -> usize {
+        self.lstm.n
+    }
+
+    fn save(&self) -> Json {
+        self.to_json()
+    }
+}
+
+impl super::ServableNet for TbpttNet {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +231,55 @@ mod tests {
         let g20 = mk(20);
         let diff: f32 = g2.iter().zip(&g20).map(|(a, b)| (a - b).abs()).sum();
         assert!(diff > 1e-4, "longer window must see more credit");
+    }
+
+    #[test]
+    fn json_roundtrip_continues_bit_exactly() {
+        // the restored net must produce the *same gradients* as the
+        // original, which exercises the ring cursor/filled bookkeeping.
+        let mut net = TbpttNet::new(3, 2, 5, 11);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for _ in 0..17 {
+            // 17 % 5 != 0: cursor lands mid-ring
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+        }
+        let text = net.to_json().dump();
+        let mut back =
+            TbpttNet::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .expect("tbptt roundtrip");
+        assert_eq!(back.features(), net.features());
+        let w_out = vec![0.3, -0.7];
+        let mut ga = vec![0.0; net.n_learnable_params()];
+        let mut gb = vec![0.0; back.n_learnable_params()];
+        net.grad_y(&w_out, &mut ga);
+        back.grad_y(&w_out, &mut gb);
+        assert_eq!(ga, gb, "restored BPTT window must match");
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            net.advance(&x);
+            back.advance(&x);
+            assert_eq!(net.features(), back.features());
+        }
+        net.grad_y(&w_out, &mut ga);
+        back.grad_y(&w_out, &mut gb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn from_json_rejects_corrupted_ring() {
+        let net = TbpttNet::new(2, 2, 3, 0);
+        let j = net.to_json();
+        // cursor out of range
+        if let crate::util::json::Json::Obj(mut o) = j.clone() {
+            o.insert("cursor".into(), crate::util::json::Json::Num(3.0));
+            assert!(TbpttNet::from_json(&crate::util::json::Json::Obj(o)).is_err());
+        }
+        // ring length != k
+        if let crate::util::json::Json::Obj(mut o) = j {
+            o.insert("k".into(), crate::util::json::Json::Num(4.0));
+            assert!(TbpttNet::from_json(&crate::util::json::Json::Obj(o)).is_err());
+        }
     }
 
     #[test]

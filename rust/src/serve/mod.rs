@@ -7,8 +7,9 @@
 //!
 //! - [`session`]: session lifecycle — open from a [`crate::config::LearnerKind`]
 //!   spec, step, predict, snapshot to JSON, restore, close. Sessions wrap
-//!   the existing [`crate::learn::TdLambdaAgent`] over a concrete
-//!   [`crate::nets::ccn::CcnNet`].
+//!   the existing [`crate::learn::TdLambdaAgent`] over a boxed
+//!   [`crate::nets::ServableNet`], so every net family the crate
+//!   implements is serveable through one surface.
 //! - [`batch`]: the hot path — B independent columns (and full columnar
 //!   sessions) laid out in structure-of-arrays form and advanced in one
 //!   fused, vectorizable pass, parity-checked against the scalar
@@ -17,6 +18,38 @@
 //!   sessions behind an mpsc queue; aggregate throughput scales with
 //!   cores and the hot path takes no locks.
 //! - [`protocol`]: the JSONL wire format.
+//!
+//! # The registry/trait surface
+//!
+//! Serving is architecture-agnostic through three traits
+//! ([`crate::nets`]):
+//!
+//! - [`crate::nets::PredictionNet`] — stepping and gradient estimates
+//!   (pre-existing; the TD(lambda) agent's interface).
+//! - [`crate::nets::PersistableNet`] — `kind()` (a stable snapshot tag),
+//!   `save()` (complete JSON state capture), `n_inputs()` and
+//!   `batch_capability()` (SoA fast-path discovery).
+//! - [`crate::nets::ServableNet`] — the sum of the two plus runtime
+//!   downcasting; sessions hold `Box<dyn ServableNet>`.
+//!
+//! [`crate::nets::NetRegistry`] maps every registered kind —
+//! `columnar`, `constructive`, `ccn`, `tbptt`, `snap1` — to its
+//! constructor-from-json. Adding an architecture to the service is one
+//! registry entry plus the two trait impls; no session, shard or
+//! protocol changes.
+//!
+//! # Snapshot envelope (v2)
+//!
+//! ```json
+//! {"v":2, "kind":"tbptt", "spec":{...}, "net":{...}, "td":{...}}
+//! ```
+//!
+//! `kind` routes `net` through the registry on restore; `spec` is the
+//! opening [`SessionSpec`]; `td` is the TD(lambda) learning state.
+//! Version-1 envelopes (PR 1; CCN family only, no `kind`) restore
+//! through a migration shim. Restores are validated: unknown kinds,
+//! kind/spec family mismatches, input-width mismatches and TD-shape
+//! mismatches are all rejected with a useful error.
 //!
 //! # Protocol
 //!
@@ -34,17 +67,28 @@
 //! | `snapshot` | `{"op":"snapshot","id":1}` | `{"ok":true,"state":{...}}` |
 //! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically) |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
-//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"steps":5000,"shards":[...]}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"steps":5000,"kinds":{"columnar":2,"tbptt":1},"shards":[...]}` |
 //!
-//! `learner` accepts the CCN family: `columnar:D`,
-//! `constructive:TOTAL:STEPS_PER_STAGE`, `ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE`.
-//! The dense baselines (`tbptt`, `snap1`) are benchmark comparators, not
-//! serveable learners, and are refused at `open`.
+//! `open` accepts any registered kind: `columnar:D`,
+//! `constructive:TOTAL:STEPS_PER_STAGE`,
+//! `ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE`, `tbptt:D:K`, `snap1:D`.
+//! Opening and driving a T-BPTT comparator session, for example:
 //!
-//! Pure-columnar sessions with identical shape are transparently stored
-//! in SoA batches per shard; a `step_batch` covering all of them advances
-//! each shard's batch in one fused pass. Batched and scalar paths produce
-//! identical numbers — placement is purely a throughput decision.
+//! ```json
+//! {"op":"open","learner":"tbptt:16:10","n_inputs":8,"alpha":0.001,"gamma":0.9,"lambda":0.99,"seed":7}
+//! {"ok":true,"id":4}
+//! {"op":"step","id":4,"x":[0.1,0,0,0.3,0,0,0,0.9],"c":0.25}
+//! {"ok":true,"y":0.0312}
+//! {"op":"snapshot","id":4}
+//! {"ok":true,"state":{"v":2,"kind":"tbptt","spec":{...},"net":{...},"td":{...}}}
+//! ```
+//!
+//! Sessions whose net reports a columnar [`crate::nets::BatchCapability`]
+//! and share a shape are transparently stored in SoA batches per shard;
+//! a `step_batch` covering all of them advances each shard's batch in
+//! one fused pass. Batched and scalar paths produce identical numbers —
+//! placement is purely a throughput decision. `stats` reports per-kind
+//! session counts so mixed-kind deployments can see what they host.
 
 pub mod batch;
 pub mod protocol;
@@ -91,15 +135,19 @@ impl Service {
             WireOp::Close { id } => self.pool.call(Request::Close { id }),
             WireOp::Stats => {
                 let per_shard = self.pool.stats();
-                let (sessions, steps) = per_shard
-                    .iter()
-                    .fold((0usize, 0u64), |(a, b), &(s, t)| (a + s, b + t));
+                let sessions: usize = per_shard.iter().map(|s| s.sessions).sum();
+                let steps: u64 = per_shard.iter().map(|s| s.steps).sum();
+                let kinds: std::collections::BTreeMap<String, Json> =
+                    protocol::ShardStats::merge_kinds(&per_shard)
+                        .into_iter()
+                        .map(|(k, n)| (k, Json::Num(n as f64)))
+                        .collect();
                 let shards: Vec<Json> = per_shard
                     .iter()
-                    .map(|&(s, t)| {
+                    .map(|st| {
                         Json::obj(vec![
-                            ("sessions", Json::Num(s as f64)),
-                            ("steps", Json::Num(t as f64)),
+                            ("sessions", Json::Num(st.sessions as f64)),
+                            ("steps", Json::Num(st.steps as f64)),
                         ])
                     })
                     .collect();
@@ -107,6 +155,7 @@ impl Service {
                     ("ok", Json::Bool(true)),
                     ("sessions", Json::Num(sessions as f64)),
                     ("steps", Json::Num(steps as f64)),
+                    ("kinds", Json::Obj(kinds)),
                     ("shards", Json::Arr(shards)),
                 ]);
             }

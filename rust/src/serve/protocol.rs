@@ -17,6 +17,30 @@ pub struct StepItem {
     pub c: f32,
 }
 
+/// One shard's stats snapshot: live sessions, steps served, and session
+/// counts per learner kind (sorted by kind tag).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub sessions: usize,
+    pub steps: u64,
+    pub kinds: Vec<(String, usize)>,
+}
+
+impl ShardStats {
+    /// Merge the per-kind session counts of many shards into one total,
+    /// keyed and sorted by kind tag (the service's `stats` reply and the
+    /// serve bench both report this).
+    pub fn merge_kinds(stats: &[ShardStats]) -> std::collections::BTreeMap<String, usize> {
+        let mut totals = std::collections::BTreeMap::new();
+        for st in stats {
+            for (kind, n) in &st.kinds {
+                *totals.entry(kind.clone()).or_insert(0) += n;
+            }
+        }
+        totals
+    }
+}
+
 /// Requests a shard can execute. `Open`/`Restore` carry the id the
 /// service pre-assigned (ids are allocated centrally, routed by
 /// `id % n_shards`).
@@ -58,7 +82,7 @@ pub enum Response {
     Predicted { y: f32 },
     Snapshotted { state: Json },
     Closed { id: u64, steps: u64 },
-    Stats { sessions: usize, steps: u64 },
+    Stats(ShardStats),
     Error { message: String },
 }
 
@@ -112,10 +136,18 @@ impl Response {
                 ("id", Json::Num(*id as f64)),
                 ("steps", Json::Num(*steps as f64)),
             ]),
-            Response::Stats { sessions, steps } => ok(vec![
-                ("sessions", Json::Num(*sessions as f64)),
-                ("steps", Json::Num(*steps as f64)),
-            ]),
+            Response::Stats(st) => {
+                let kinds: std::collections::BTreeMap<String, Json> = st
+                    .kinds
+                    .iter()
+                    .map(|(k, n)| (k.clone(), Json::Num(*n as f64)))
+                    .collect();
+                ok(vec![
+                    ("sessions", Json::Num(st.sessions as f64)),
+                    ("steps", Json::Num(st.steps as f64)),
+                    ("kinds", Json::Obj(kinds)),
+                ])
+            }
             Response::Error { message } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
                 ("error", Json::Str(message.clone())),

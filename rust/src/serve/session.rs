@@ -1,23 +1,34 @@
 //! Session lifecycle: a single online TD(lambda) learner owned by the
 //! prediction service.
 //!
-//! A [`Session`] wraps the existing [`TdLambdaAgent`] over a concrete
-//! [`CcnNet`] (the CCN family — columnar, constructive, ccn — is the
-//! serveable set; the dense baselines have no snapshot story and are
-//! rejected at open). Sessions are created from a [`SessionSpec`],
-//! stepped one observation at a time, snapshotted to JSON, restored from
-//! a snapshot, and closed.
+//! A [`Session`] wraps the existing [`TdLambdaAgent`] over a boxed
+//! [`ServableNet`], so *every* registered net family — `columnar`,
+//! `constructive`, `ccn`, `tbptt`, `snap1` — opens, steps, snapshots and
+//! restores through the same surface. Snapshots use a versioned envelope:
 //!
-//! Pure-columnar sessions can also live inside a
-//! [`super::batch::ColumnarSessionBatch`]; [`Session::to_lane`] /
-//! [`Session::from_lane`] convert between the two representations
-//! without loss (both paths step with identical arithmetic).
+//! ```json
+//! {"v":2, "kind":"tbptt", "spec":{...}, "net":{...}, "td":{...}}
+//! ```
+//!
+//! where `net` is [`PersistableNet::save`] output and restore routes
+//! through [`NetRegistry::restore`] by the `kind` tag. Version-1
+//! envelopes (PR 1's CCN-only format, no `kind` field) still restore
+//! through a migration shim.
+//!
+//! Sessions whose net reports [`BatchCapability::Columnar`] can also
+//! live inside a [`super::batch::ColumnarSessionBatch`];
+//! [`Session::to_lane`] / [`Session::from_lane`] convert between the two
+//! representations without loss (both paths step with identical
+//! arithmetic). The capability is *discovered from the net*, never
+//! pattern-matched from a learner kind, so future batchable families
+//! only need to report their shape.
 
-use crate::config::{build_ccn, LearnerKind};
+use crate::config::{build_servable, LearnerKind};
 use crate::learn::{TdConfig, TdLambdaAgent, TdState};
 use crate::nets::ccn::CcnNet;
 use crate::nets::lstm_column::LstmColumn;
-use crate::nets::normalizer::{OnlineNormalizer, NORM_BETA};
+use crate::nets::normalizer::OnlineNormalizer;
+use crate::nets::{BatchCapability, NetRegistry, PersistableNet, ServableNet};
 use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 
@@ -61,40 +72,26 @@ impl SessionSpec {
             seed: v.get("seed")?.as_f64()? as u64,
         })
     }
-
-    /// True when the session is a pure columnar net — the shape the
-    /// batched SoA store can hold.
-    pub fn batchable(&self) -> Option<ColumnarBatchSpec> {
-        match self.learner {
-            LearnerKind::Columnar { d } => Some(ColumnarBatchSpec {
-                n_inputs: self.n_inputs,
-                d,
-                td: self.td,
-                eps: self.eps,
-                beta: NORM_BETA,
-            }),
-            _ => None,
-        }
-    }
 }
 
 /// One live scalar session.
 pub struct Session {
     spec: SessionSpec,
-    agent: TdLambdaAgent<CcnNet>,
+    agent: TdLambdaAgent<Box<dyn ServableNet>>,
 }
 
-/// Snapshot format version (bumped on breaking changes).
-const SNAPSHOT_VERSION: f64 = 1.0;
+/// Snapshot envelope version (bumped on breaking changes). v2 added the
+/// `kind` tag and registry-routed restore; v1 (CCN family only) restores
+/// through a migration shim in [`Session::from_snapshot`].
+const SNAPSHOT_VERSION: f64 = 2.0;
 
 impl Session {
-    /// Open a fresh session. Dense baselines (tbptt/snap1) are refused:
-    /// they are benchmark comparators, not serveable CCN-family nets.
+    /// Open a fresh session for *any* registered learner kind.
     pub fn open(spec: SessionSpec) -> Result<Session, String> {
         if spec.n_inputs == 0 {
             return Err("session: n_inputs must be >= 1".into());
         }
-        let net = build_ccn(&spec.learner, spec.n_inputs, spec.eps, spec.seed)
+        let net = build_servable(&spec.learner, spec.n_inputs, spec.eps, spec.seed)
             .map_err(|e| e.to_string())?;
         let agent = TdLambdaAgent::new(net, spec.td);
         Ok(Session { spec, agent })
@@ -104,8 +101,33 @@ impl Session {
         &self.spec
     }
 
+    /// The net's registered snapshot-kind tag.
+    pub fn kind(&self) -> &'static str {
+        self.agent.net.kind()
+    }
+
     pub fn steps(&self) -> u64 {
         self.agent.steps()
+    }
+
+    /// The SoA batch shape this session can live in, discovered from the
+    /// net's [`BatchCapability`]; `None` keeps the session scalar.
+    pub fn columnar_batch_spec(&self) -> Option<ColumnarBatchSpec> {
+        match self.agent.net.batch_capability() {
+            BatchCapability::Columnar {
+                n_inputs,
+                d,
+                eps,
+                beta,
+            } => Some(ColumnarBatchSpec {
+                n_inputs,
+                d,
+                td: self.spec.td,
+                eps,
+                beta,
+            }),
+            BatchCapability::None => None,
+        }
     }
 
     /// One online learning step: observation + cumulant in, prediction
@@ -134,40 +156,63 @@ impl Session {
         Ok(self.agent.predict_only(x))
     }
 
-    /// Serialize the complete session (spec + net + TD state). The
-    /// snapshot restores to a session that continues bit-identically.
+    /// Serialize the complete session (spec + net + TD state) into the
+    /// v2 envelope. The snapshot restores to a session that continues
+    /// bit-identically.
     pub fn snapshot(&self) -> Json {
         Json::obj(vec![
             ("v", Json::Num(SNAPSHOT_VERSION)),
+            ("kind", Json::Str(self.kind().into())),
             ("spec", self.spec.to_json()),
-            ("net", self.agent.net.to_json()),
+            ("net", self.agent.net.save()),
             ("td", self.agent.td_state().to_json()),
         ])
     }
 
-    /// Rebuild a session from [`Self::snapshot`] output.
+    /// Rebuild a session from [`Self::snapshot`] output (v2) or from a
+    /// PR-1 v1 CCN snapshot (migration shim).
     pub fn from_snapshot(v: &Json) -> Result<Session, String> {
         let version = v
             .get("v")
             .and_then(|n| n.as_f64())
             .ok_or("snapshot: missing version")?;
-        if version != SNAPSHOT_VERSION {
-            return Err(format!("snapshot: unsupported version {version}"));
-        }
         let spec = v
             .get("spec")
             .and_then(SessionSpec::from_json)
             .ok_or("snapshot: bad spec")?;
-        // reject specs we could never have produced (cheap check only;
-        // net/spec consistency is validated below and by set_td_state)
-        if !spec.learner.is_ccn_family() {
-            return Err(format!(
-                "snapshot: learner '{}' is not serveable",
-                spec.learner.label()
-            ));
-        }
-        let net = CcnNet::from_json(v.get("net").ok_or("snapshot: missing net")?)?;
-        if net.config().n_inputs != spec.n_inputs {
+        let net_json = v.get("net").ok_or("snapshot: missing net")?;
+        let net: Box<dyn ServableNet> = if version == 1.0 {
+            // v1 envelopes carried no `kind` and covered the CCN family
+            // only; their `net` payload is exactly CcnNet::from_json's
+            // input, so migration is a direct restore.
+            if !spec.learner.is_ccn_family() {
+                return Err(format!(
+                    "snapshot: v1 envelopes cover the CCN family only, \
+                     spec says '{}'",
+                    spec.learner.label()
+                ));
+            }
+            Box::new(CcnNet::from_json(net_json)?)
+        } else if version == SNAPSHOT_VERSION {
+            let kind = v
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or("snapshot: missing kind")?;
+            // the envelope kind must serialize-compatibly match the spec:
+            // same registry family (the CCN corners share one format).
+            let spec_family = NetRegistry::family(spec.learner.kind())
+                .ok_or("snapshot: spec learner is not registered")?;
+            if NetRegistry::family(kind) != Some(spec_family) {
+                return Err(format!(
+                    "snapshot: kind '{kind}' does not match spec learner '{}'",
+                    spec.learner.label()
+                ));
+            }
+            NetRegistry::restore(kind, net_json)?
+        } else {
+            return Err(format!("snapshot: unsupported version {version}"));
+        };
+        if net.n_inputs() != spec.n_inputs {
             return Err("snapshot: net/spec input width mismatch".into());
         }
         let td = v
@@ -179,14 +224,21 @@ impl Session {
         Ok(Session { spec, agent })
     }
 
-    /// Extract this (columnar) session's state as a batch lane. Errors
-    /// for non-columnar sessions.
+    /// Extract this session's state as a batch lane. Errors for sessions
+    /// without [`BatchCapability::Columnar`].
     pub fn to_lane(&self) -> Result<ColumnarLane, String> {
-        let d = match self.spec.learner {
-            LearnerKind::Columnar { d } => d,
-            _ => return Err("only columnar sessions are batchable".into()),
+        let d = match self.agent.net.batch_capability() {
+            BatchCapability::Columnar { d, .. } => d,
+            BatchCapability::None => {
+                return Err("session's net reports no batch capability".into())
+            }
         };
-        let net = &self.agent.net;
+        let net = self
+            .agent
+            .net
+            .as_any()
+            .downcast_ref::<CcnNet>()
+            .ok_or("columnar batch capability implies a CCN-family net")?;
         let columns: Vec<LstmColumn> =
             (0..d).map(|k| net.column(0, k).clone()).collect();
         let (mu, var, denom) = net.stage_norm(0).state();
@@ -200,32 +252,34 @@ impl Session {
     }
 
     /// Rebuild a scalar session from a batch lane (inverse of
-    /// [`Self::to_lane`]). The columnar net never consumes its rng after
-    /// construction, so a fresh stream seeded from the spec is
-    /// equivalent to the original.
-    pub fn from_lane(spec: SessionSpec, lane: &ColumnarLane) -> Result<Session, String> {
-        let batch_spec = spec
-            .batchable()
-            .ok_or("only columnar sessions are batchable")?;
+    /// [`Self::to_lane`]; `batch_spec` is the shape of the batch the lane
+    /// lived in). The columnar net never consumes its rng after
+    /// construction, so a fresh stream seeded from the spec is equivalent
+    /// to the original.
+    pub fn from_lane(
+        spec: SessionSpec,
+        batch_spec: &ColumnarBatchSpec,
+        lane: &ColumnarLane,
+    ) -> Result<Session, String> {
         let d = batch_spec.d;
         if lane.columns.len() != d {
             return Err(format!(
-                "lane has {} columns, spec wants {d}",
+                "lane has {} columns, batch wants {d}",
                 lane.columns.len()
             ));
         }
         let cfg = crate::nets::ccn::CcnConfig {
-            n_inputs: spec.n_inputs,
+            n_inputs: batch_spec.n_inputs,
             total_features: d,
             features_per_stage: d,
             steps_per_stage: u64::MAX,
             init_scale: 1.0,
-            norm_eps: spec.eps,
+            norm_eps: batch_spec.eps,
             norm_beta: batch_spec.beta,
         };
         let norm = OnlineNormalizer::from_state(
             batch_spec.beta,
-            spec.eps,
+            batch_spec.eps,
             lane.norm_mu.clone(),
             lane.norm_var.clone(),
             lane.norm_denom.clone(),
@@ -239,7 +293,8 @@ impl Session {
             false,
             Xoshiro256::seed_from_u64(spec.seed),
         )?;
-        let mut agent = TdLambdaAgent::new(net, spec.td);
+        let mut agent =
+            TdLambdaAgent::new(Box::new(net) as Box<dyn ServableNet>, spec.td);
         agent.set_td_state(lane.td.clone())?;
         Ok(Session { spec, agent })
     }
@@ -263,6 +318,13 @@ mod tests {
         }
     }
 
+    fn spec_for(learner: LearnerKind) -> SessionSpec {
+        SessionSpec {
+            learner,
+            ..columnar_spec()
+        }
+    }
+
     fn drive(s: &mut Session, n: usize, seed: u64) -> Vec<f32> {
         let mut rng = Xoshiro256::seed_from_u64(seed);
         let mut ys = Vec::with_capacity(n);
@@ -277,10 +339,30 @@ mod tests {
     }
 
     #[test]
-    fn open_rejects_dense_baselines_and_zero_inputs() {
-        let mut spec = columnar_spec();
-        spec.learner = LearnerKind::Tbptt { d: 4, k: 10 };
-        assert!(Session::open(spec).is_err());
+    fn open_accepts_every_registered_kind() {
+        for learner in [
+            LearnerKind::Columnar { d: 4 },
+            LearnerKind::Constructive {
+                total: 4,
+                steps_per_stage: 50,
+            },
+            LearnerKind::Ccn {
+                total: 4,
+                per_stage: 2,
+                steps_per_stage: 50,
+            },
+            LearnerKind::Tbptt { d: 3, k: 6 },
+            LearnerKind::Snap1 { d: 3 },
+        ] {
+            let kind = learner.kind();
+            let mut s = Session::open(spec_for(learner)).unwrap();
+            assert_eq!(s.kind(), kind);
+            assert!(s.step(&[0.1, 0.2, 0.3], 0.0).unwrap().is_finite());
+        }
+    }
+
+    #[test]
+    fn open_rejects_zero_inputs() {
         let mut spec = columnar_spec();
         spec.n_inputs = 0;
         assert!(Session::open(spec).is_err());
@@ -294,19 +376,53 @@ mod tests {
     }
 
     #[test]
-    fn snapshot_restore_continues_identically() {
-        let mut s = Session::open(columnar_spec()).unwrap();
-        drive(&mut s, 400, 1);
-        let snap = s.snapshot();
-        // round-trip through text to exercise the full codec
-        let mut restored = Session::from_snapshot(
-            &Json::parse(&snap.dump()).unwrap(),
-        )
-        .unwrap();
-        assert_eq!(restored.steps(), s.steps());
-        let a = drive(&mut s, 200, 2);
-        let b = drive(&mut restored, 200, 2);
-        assert_eq!(a, b, "restored session must continue identically");
+    fn batch_capability_is_columnar_only() {
+        let s = Session::open(columnar_spec()).unwrap();
+        assert!(s.columnar_batch_spec().is_some());
+        for learner in [
+            LearnerKind::Ccn {
+                total: 4,
+                per_stage: 2,
+                steps_per_stage: 50,
+            },
+            LearnerKind::Tbptt { d: 2, k: 4 },
+            LearnerKind::Snap1 { d: 2 },
+        ] {
+            let s = Session::open(spec_for(learner)).unwrap();
+            assert!(s.columnar_batch_spec().is_none(), "{}", s.kind());
+            assert!(s.to_lane().is_err());
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_continues_identically_for_every_kind() {
+        for learner in [
+            LearnerKind::Columnar { d: 4 },
+            LearnerKind::Constructive {
+                total: 4,
+                steps_per_stage: 120,
+            },
+            LearnerKind::Tbptt { d: 3, k: 7 },
+            LearnerKind::Snap1 { d: 3 },
+        ] {
+            let mut s = Session::open(spec_for(learner)).unwrap();
+            drive(&mut s, 400, 1);
+            let snap = s.snapshot();
+            assert_eq!(snap.get("v"), Some(&Json::Num(2.0)));
+            assert_eq!(
+                snap.get("kind").and_then(|k| k.as_str()),
+                Some(s.kind())
+            );
+            // round-trip through text to exercise the full codec
+            let mut restored =
+                Session::from_snapshot(&Json::parse(&snap.dump()).unwrap())
+                    .unwrap_or_else(|e| panic!("{}: {e}", s.kind()));
+            assert_eq!(restored.steps(), s.steps());
+            assert_eq!(restored.kind(), s.kind());
+            let a = drive(&mut s, 200, 2);
+            let b = drive(&mut restored, 200, 2);
+            assert_eq!(a, b, "{} must continue identically", s.kind());
+        }
     }
 
     #[test]
@@ -334,11 +450,46 @@ mod tests {
     }
 
     #[test]
+    fn v1_ccn_snapshot_restores_through_migration_shim() {
+        let mut s = Session::open(columnar_spec()).unwrap();
+        drive(&mut s, 300, 8);
+        // rewrite the v2 envelope into the exact shape PR 1 wrote:
+        // {"v":1,"spec","net","td"} with no "kind" field.
+        let mut o = match s.snapshot() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("v".into(), Json::Num(1.0));
+        o.remove("kind");
+        let mut restored = Session::from_snapshot(&Json::Obj(o)).unwrap();
+        let a = drive(&mut s, 100, 9);
+        let b = drive(&mut restored, 100, 9);
+        assert_eq!(a, b, "v1 shim must restore losslessly");
+    }
+
+    #[test]
+    fn v1_shim_rejects_dense_baselines() {
+        let mut s = Session::open(spec_for(LearnerKind::Tbptt { d: 2, k: 4 }))
+            .unwrap();
+        drive(&mut s, 20, 1);
+        let mut o = match s.snapshot() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("v".into(), Json::Num(1.0));
+        o.remove("kind");
+        let err = Session::from_snapshot(&Json::Obj(o)).unwrap_err();
+        assert!(err.contains("v1"), "{err}");
+    }
+
+    #[test]
     fn lane_roundtrip_continues_identically() {
         let mut s = Session::open(columnar_spec()).unwrap();
         drive(&mut s, 300, 9);
+        let batch_spec = s.columnar_batch_spec().unwrap();
         let lane = s.to_lane().unwrap();
-        let mut back = Session::from_lane(s.spec().clone(), &lane).unwrap();
+        let mut back =
+            Session::from_lane(s.spec().clone(), &batch_spec, &lane).unwrap();
         let a = drive(&mut s, 150, 10);
         let b = drive(&mut back, 150, 10);
         assert_eq!(a, b, "lane extraction must be lossless");
@@ -356,11 +507,19 @@ mod tests {
         o.insert("v".into(), Json::Num(99.0));
         assert!(Session::from_snapshot(&Json::Obj(o)).is_err());
         // missing net
-        let mut o = match snap {
+        let mut o = match snap.clone() {
             Json::Obj(o) => o,
             _ => unreachable!(),
         };
         o.remove("net");
         assert!(Session::from_snapshot(&Json::Obj(o)).is_err());
+        // kind from a different family than the spec
+        let mut o = match snap {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("kind".into(), Json::Str("tbptt".into()));
+        let err = Session::from_snapshot(&Json::Obj(o)).unwrap_err();
+        assert!(err.contains("does not match"), "{err}");
     }
 }

@@ -3,39 +3,42 @@
 //!
 //! Sessions are routed by `id % n_shards`, so a session's state is only
 //! ever touched by its owning shard — the hot path takes no locks.
-//! Within a shard, pure-columnar sessions live in SoA
+//! Within a shard, sessions whose net reports
+//! [`crate::nets::BatchCapability::Columnar`] live in SoA
 //! [`ColumnarSessionBatch`]es keyed by their shape; a `StepMany` request
 //! that covers a whole batch advances it in one fused pass. Everything
-//! else (growing CCN/constructive sessions, partial batches) takes the
-//! scalar path. Both paths produce identical numbers — membership is a
-//! performance decision, never a semantic one.
+//! else (growing CCN/constructive sessions, dense baselines, partial
+//! batches) takes the scalar path. Both paths produce identical numbers —
+//! membership is a performance decision, never a semantic one.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use crate::util::json::Json;
 
-use super::batch::ColumnarSessionBatch;
-use super::protocol::{Request, Response, StepItem};
+use super::batch::{ColumnarBatchSpec, ColumnarSessionBatch};
+use super::protocol::{Request, Response, ShardStats, StepItem};
 use super::session::{Session, SessionSpec};
 
 /// Hashable key for "sessions with this shape can share a batch":
-/// (n_inputs, d, alpha, gamma, lambda, eps) with floats by bit pattern.
-type BatchKey = (usize, usize, u32, u32, u32, u32);
+/// (n_inputs, d, alpha, gamma, lambda, eps, beta) with floats by bit
+/// pattern. Every shape-defining field of [`ColumnarBatchSpec`] must
+/// appear here — beta included, since a restored snapshot may carry a
+/// non-default normalizer beta.
+type BatchKey = (usize, usize, u32, u32, u32, u32, u32);
 
-fn batch_key(spec: &SessionSpec) -> Option<BatchKey> {
-    spec.batchable().map(|b| {
-        (
-            b.n_inputs,
-            b.d,
-            b.td.alpha.to_bits(),
-            b.td.gamma.to_bits(),
-            b.td.lambda.to_bits(),
-            b.eps.to_bits(),
-        )
-    })
+fn batch_key(spec: &ColumnarBatchSpec) -> BatchKey {
+    (
+        spec.n_inputs,
+        spec.d,
+        spec.td.alpha.to_bits(),
+        spec.td.gamma.to_bits(),
+        spec.td.lambda.to_bits(),
+        spec.eps.to_bits(),
+        spec.beta.to_bits(),
+    )
 }
 
 /// Where a session's state lives inside a shard.
@@ -89,11 +92,30 @@ impl ShardState {
                 Err(e) => Response::error(e),
             },
             Request::Close { id } => self.close(id),
-            Request::Stats => Response::Stats {
+            Request::Stats => Response::Stats(ShardStats {
                 sessions: self.slots.len(),
                 steps: self.steps_served,
-            },
+                kinds: self.kind_counts(),
+            }),
         }
+    }
+
+    /// Session counts per learner kind (as opened, i.e. the spec's kind
+    /// tag — batched slots are always `columnar`-shaped but report the
+    /// kind they were opened under).
+    fn kind_counts(&self) -> Vec<(String, usize)> {
+        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        for slot in self.slots.values() {
+            let kind = match slot {
+                Slot::Scalar(session) => session.spec().learner.kind(),
+                Slot::Batched(_, _, spec) => spec.learner.kind(),
+            };
+            *counts.entry(kind).or_insert(0) += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(k, n)| (k.to_string(), n))
+            .collect()
     }
 
     fn open(&mut self, id: u64, spec: SessionSpec) -> Response {
@@ -103,19 +125,19 @@ impl ShardState {
         }
     }
 
-    /// Place a (fresh or restored) session: batched store when the shape
-    /// allows, scalar otherwise.
+    /// Place a (fresh or restored) session: batched store when the net's
+    /// discovered capability allows, scalar otherwise.
     fn insert(&mut self, id: u64, session: Session) -> Response {
         if self.slots.contains_key(&id) {
             return Response::error(format!("session {id} already exists"));
         }
         let spec = session.spec().clone();
-        if let Some(key) = batch_key(&spec) {
+        if let Some(batch_spec) = session.columnar_batch_spec() {
+            let key = batch_key(&batch_spec);
             let lane = match session.to_lane() {
                 Ok(lane) => lane,
                 Err(e) => return Response::error(e),
             };
-            let batch_spec = spec.batchable().expect("key implies batchable");
             let batch = match self.batches.entry(key) {
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                 std::collections::hash_map::Entry::Vacant(e) => {
@@ -247,7 +269,8 @@ impl ShardState {
             Slot::Batched(key, lane, spec) => {
                 let batch = self.batches.get(key).expect("batch exists");
                 let extracted = batch.extract_lane(*lane);
-                let session = Session::from_lane(spec.clone(), &extracted)?;
+                let session =
+                    Session::from_lane(spec.clone(), batch.spec(), &extracted)?;
                 Ok(session.snapshot())
             }
         }
@@ -423,12 +446,13 @@ impl ShardPool {
         out
     }
 
-    /// `(sessions, steps_served)` per shard.
-    pub fn stats(&self) -> Vec<(usize, u64)> {
+    /// Per-shard stats snapshots (sessions, steps served, per-kind
+    /// session counts).
+    pub fn stats(&self) -> Vec<ShardStats> {
         (0..self.txs.len())
             .map(|s| match self.call_shard(s, Request::Stats) {
-                Response::Stats { sessions, steps } => (sessions, steps),
-                _ => (0, 0),
+                Response::Stats(st) => st,
+                _ => ShardStats::default(),
             })
             .collect()
     }
@@ -564,6 +588,37 @@ mod tests {
     }
 
     #[test]
+    fn dense_baselines_serve_on_the_scalar_path() {
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Tbptt { d: 2, k: 5 }, 0));
+        open_ok(&mut st, 2, spec(LearnerKind::Snap1 { d: 2 }, 1));
+        open_ok(&mut st, 3, spec(LearnerKind::Columnar { d: 2 }, 2));
+        assert_eq!(st.batches.len(), 1, "only the columnar session batches");
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            for id in 1..=3u64 {
+                assert!(st.step_session(id, &x, 0.1).unwrap().is_finite());
+            }
+        }
+        // snapshot/restore a dense session through the shard
+        let snap = st.snapshot_session(1).unwrap();
+        match st.handle(Request::Restore { id: 9, state: snap }) {
+            Response::Opened { id } => assert_eq!(id, 9),
+            other => panic!("tbptt restore failed: {other:?}"),
+        }
+        let kinds = st.kind_counts();
+        assert_eq!(
+            kinds,
+            vec![
+                ("columnar".to_string(), 1),
+                ("snap1".to_string(), 1),
+                ("tbptt".to_string(), 2),
+            ]
+        );
+    }
+
+    #[test]
     fn step_many_reports_per_item_errors() {
         let mut st = ShardState::new();
         open_ok(&mut st, 1, spec(LearnerKind::Columnar { d: 3 }, 0));
@@ -636,9 +691,9 @@ mod tests {
         }
         let stats = pool.stats();
         assert_eq!(stats.len(), 3);
-        assert_eq!(stats.iter().map(|&(s, _)| s).sum::<usize>(), 6);
+        assert_eq!(stats.iter().map(|s| s.sessions).sum::<usize>(), 6);
         assert_eq!(
-            stats.iter().map(|&(_, st)| st).sum::<u64>(),
+            stats.iter().map(|s| s.steps).sum::<u64>(),
             6 * 20,
             "every step accounted"
         );

@@ -60,9 +60,14 @@ impl Xoshiro256 {
     }
 
     /// Rebuild a generator from a previously captured [`Self::state`].
+    ///
+    /// The all-zero state is xoshiro's single degenerate fixed point (it
+    /// would emit zeros forever). Since snapshots travel through JSON,
+    /// a corrupted or hand-built snapshot can present it; we map it to
+    /// the canonical reseed `seed_from_u64(0)` rather than returning a
+    /// dead generator. No state captured from a live generator is ever
+    /// all-zero, so the remap never changes a legitimate restore.
     pub fn from_state(s: [u64; 4]) -> Self {
-        // all-zero is the one invalid xoshiro state; map it to a valid one
-        // rather than looping forever on zeros.
         if s == [0, 0, 0, 0] {
             return Self::seed_from_u64(0);
         }
@@ -173,6 +178,26 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn from_state_all_zero_reseeds_canonically() {
+        // regression: an all-zero state would be a fixed point emitting
+        // zeros forever; from_state must remap it to the canonical
+        // seed_from_u64(0) stream.
+        let mut z = Xoshiro256::from_state([0, 0, 0, 0]);
+        assert_ne!(z.state(), [0, 0, 0, 0], "degenerate state must not survive");
+        let mut canon = Xoshiro256::seed_from_u64(0);
+        let mut saw_nonzero = false;
+        for _ in 0..100 {
+            let v = z.next_u64();
+            assert_eq!(v, canon.next_u64(), "remap must be the canonical reseed");
+            saw_nonzero |= v != 0;
+        }
+        assert!(saw_nonzero, "generator must actually produce entropy");
+        // and a nonzero state passes through untouched
+        let live = Xoshiro256::seed_from_u64(5).state();
+        assert_eq!(Xoshiro256::from_state(live).state(), live);
     }
 
     #[test]

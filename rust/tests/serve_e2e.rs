@@ -1,9 +1,11 @@
 //! End-to-end tests of the serve subsystem over the JSONL wire protocol:
 //! the acceptance path is open -> step x N -> snapshot -> restore ->
 //! close, with the restored session continuing identically to the
-//! original.
+//! original — for every registered net kind, plus the v1 -> v2 snapshot
+//! migration shim.
 
 use ccn_rtrl::serve::Service;
+use ccn_rtrl::util::check::check;
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
@@ -195,15 +197,178 @@ fn protocol_errors_are_reported_not_fatal() {
     assert!(err(&service.handle_line(r#"{"op":"warp"}"#)).contains("unknown op"));
     assert!(err(&service.handle_line(r#"{"op":"step","id":99,"x":[1],"c":0}"#))
         .contains("no session"));
-    // dense baselines are refused with a useful message
+    // unknown learner kinds are refused with a useful message
     let msg = err(&service.handle_line(
-        r#"{"op":"open","learner":"tbptt:4:10","n_inputs":2}"#,
+        r#"{"op":"open","learner":"hopfield:4","n_inputs":2}"#,
     ));
-    assert!(msg.contains("tbptt"), "{msg}");
+    assert!(msg.contains("hopfield"), "{msg}");
     // the service survives all of the above
     ok(&service.handle_line(
         r#"{"op":"open","learner":"constructive:3:1000","n_inputs":2}"#,
     ));
     let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
     assert_eq!(stats.get("sessions"), Some(&Json::Num(1.0)));
+}
+
+/// Every kind in the registry: `columnar:D`, `constructive:T:S`,
+/// `ccn:T:P:S`, `tbptt:D:K`, `snap1:D` — all opened, stepped, snapshotted
+/// and restored over the same JSONL protocol.
+const ALL_KINDS: [(&str, &str); 5] = [
+    ("columnar", "columnar:4"),
+    ("constructive", "constructive:4:60"),
+    ("ccn", "ccn:6:2:60"),
+    ("tbptt", "tbptt:3:8"),
+    ("snap1", "snap1:3"),
+];
+
+#[test]
+fn every_kind_serves_over_the_wire_with_per_kind_stats() {
+    let service = Service::new(2);
+    let mut ids = Vec::new();
+    for (_, spec) in ALL_KINDS {
+        let open = format!(
+            r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":1}}"#
+        );
+        ids.push(
+            ok(&service.handle_line(&open)).get("id").unwrap().as_f64().unwrap()
+                as u64,
+        );
+    }
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    for _ in 0..50 {
+        for &id in &ids {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = ok(&service.handle_line(&obs_line("step", id, &x, 0.1)))
+                .get("y")
+                .unwrap()
+                .as_f64()
+                .unwrap();
+            assert!(y.is_finite());
+        }
+    }
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(stats.get("sessions"), Some(&Json::Num(5.0)));
+    assert_eq!(stats.get("steps"), Some(&Json::Num(250.0)));
+    let kinds = stats.get("kinds").expect("stats must report kinds");
+    for (kind, _) in ALL_KINDS {
+        assert_eq!(kinds.get(kind), Some(&Json::Num(1.0)), "kind {kind}");
+    }
+}
+
+#[test]
+fn prop_snapshot_restore_bit_exact_for_every_kind() {
+    // property: for any registered kind, any seed and any split point,
+    // snapshot -> restore -> N steps is bit-exact with the uninterrupted
+    // session (the restored twin sees identical inputs).
+    check("serve snapshot roundtrip", 3, |g| {
+        let service = Service::new(2);
+        for (kind, spec) in ALL_KINDS {
+            let seed = g.usize_in(0, 1000);
+            let warmup = g.usize_in(30, 150);
+            let cont = g.usize_in(20, 120);
+            let open = format!(
+                r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":{seed}}}"#
+            );
+            let id = ok(&service.handle_line(&open))
+                .get("id")
+                .unwrap()
+                .as_f64()
+                .unwrap() as u64;
+            let mut rng = Xoshiro256::seed_from_u64(seed as u64 ^ 0xabcd);
+            for _ in 0..warmup {
+                let x: Vec<f32> =
+                    (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                ok(&service.handle_line(&obs_line("step", id, &x, 0.2)));
+            }
+            let state = ok(&service
+                .handle_line(&format!(r#"{{"op":"snapshot","id":{id}}}"#)))
+            .get("state")
+            .unwrap()
+            .clone();
+            // the envelope is versioned and kind-tagged
+            if state.get("v") != Some(&Json::Num(2.0)) {
+                return Err(format!("{kind}: snapshot not v2: {state:?}"));
+            }
+            if state.get("kind").and_then(|k| k.as_str()) != Some(kind) {
+                return Err(format!("{kind}: wrong kind tag in envelope"));
+            }
+            let restore =
+                Json::obj(vec![("op", Json::Str("restore".into())), ("state", state)]);
+            let id2 = ok(&service.handle_line(&restore.dump()))
+                .get("id")
+                .unwrap()
+                .as_f64()
+                .unwrap() as u64;
+            for t in 0..cont {
+                let x: Vec<f32> =
+                    (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let ya = ok(&service.handle_line(&obs_line("step", id, &x, -0.1)))
+                    .get("y")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap();
+                let yb = ok(&service.handle_line(&obs_line("step", id2, &x, -0.1)))
+                    .get("y")
+                    .unwrap()
+                    .as_f64()
+                    .unwrap();
+                if ya != yb {
+                    return Err(format!(
+                        "{kind}: diverged at step {t}: {ya} vs {yb}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn v1_ccn_snapshot_restores_through_the_wire_shim() {
+    let service = Service::new(1);
+    let id = ok(&service.handle_line(
+        r#"{"op":"open","learner":"ccn:4:2:80","n_inputs":3,"seed":9}"#,
+    ))
+    .get("id")
+    .unwrap()
+    .as_f64()
+    .unwrap() as u64;
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    for _ in 0..120 {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        ok(&service.handle_line(&obs_line("step", id, &x, 0.1)));
+    }
+    let state = ok(&service.handle_line(&format!(r#"{{"op":"snapshot","id":{id}}}"#)))
+        .get("state")
+        .unwrap()
+        .clone();
+    // rewrite the v2 envelope into PR 1's v1 shape: v = 1, no kind tag
+    let v1 = match state {
+        Json::Obj(mut o) => {
+            o.insert("v".into(), Json::Num(1.0));
+            o.remove("kind");
+            Json::Obj(o)
+        }
+        other => panic!("snapshot must be an object, got {other:?}"),
+    };
+    let restore = Json::obj(vec![("op", Json::Str("restore".into())), ("state", v1)]);
+    let id2 = ok(&service.handle_line(&restore.dump()))
+        .get("id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    for _ in 0..80 {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let ya = ok(&service.handle_line(&obs_line("step", id, &x, 0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        let yb = ok(&service.handle_line(&obs_line("step", id2, &x, 0.1)))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(ya, yb, "v1 shim restore diverged");
+    }
 }
