@@ -1,0 +1,202 @@
+//! §Durable-tier churn bench: 4x more mixed-kind sessions than resident
+//! capacity, stepped round-robin so (nearly) every step evicts one
+//! session to disk and rehydrates another.
+//!
+//! Reports aggregate churn steps/s, explicit rehydration latency
+//! (p50/p99 over timed `warm` ops against freshly parked sessions),
+//! evictions/s and the final store stats, and writes the record to
+//! `results/BENCH_store.json` (override with CCN_STORE_OUT) so the perf
+//! trajectory is machine-comparable across commits.
+//!
+//! Scale knobs (env vars):
+//!   CCN_STORE_SESSIONS  total sessions                (default 256)
+//!   CCN_STORE_CAP       resident sessions per shard   (default sessions / (4 * shards))
+//!   CCN_STORE_SHARDS    worker shards                 (default 4)
+//!   CCN_STORE_TICKS     round-robin passes            (default 30)
+//!   CCN_STORE_INPUTS    observation width             (default 8)
+//!   CCN_STORE_PROBES    park+warm latency probes      (default 200)
+//!   CCN_STORE_DIR       store directory               (default: fresh tempdir, removed after)
+//!   CCN_STORE_OUT       result file                   (default results/BENCH_store.json)
+
+use std::time::Instant;
+
+use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::serve::protocol::{Request, Response};
+use ccn_rtrl::serve::shard::ShardPool;
+use ccn_rtrl::store::StoreConfig;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let sessions = env_usize("CCN_STORE_SESSIONS", 256);
+    let shards = env_usize("CCN_STORE_SHARDS", 4);
+    let cap = env_usize("CCN_STORE_CAP", (sessions / (4 * shards)).max(1));
+    let ticks = env_usize("CCN_STORE_TICKS", 30);
+    let n = env_usize("CCN_STORE_INPUTS", 8);
+    let probes = env_usize("CCN_STORE_PROBES", 200);
+    let out_path = std::env::var("CCN_STORE_OUT")
+        .unwrap_or_else(|_| "results/BENCH_store.json".into());
+    let (dir, ephemeral) = match std::env::var("CCN_STORE_DIR") {
+        Ok(d) => (std::path::PathBuf::from(d), false),
+        Err(_) => {
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos();
+            (
+                std::env::temp_dir().join(format!(
+                    "ccn-bench-store-{}-{nanos}",
+                    std::process::id()
+                )),
+                true,
+            )
+        }
+    };
+    eprintln!(
+        "[perf_store] {sessions} mixed-kind sessions, resident cap \
+         {cap}/shard x {shards} shards ({}x oversubscribed), {ticks} \
+         round-robin ticks; store at {}",
+        sessions as f64 / (cap * shards) as f64,
+        dir.display()
+    );
+
+    let pool = ShardPool::with_store(shards, Some(StoreConfig::new(&dir, cap)))
+        .expect("mount store");
+    let kinds = ["columnar:8", "ccn:8:2:100000", "tbptt:4:10", "snap1:4"];
+    let mut ids = Vec::with_capacity(sessions);
+    for s in 0..sessions {
+        let spec = ccn_rtrl::serve::SessionSpec {
+            learner: ccn_rtrl::config::LearnerKind::parse(kinds[s % kinds.len()])
+                .unwrap(),
+            n_inputs: n,
+            td: ccn_rtrl::learn::TdConfig {
+                alpha: 0.001,
+                gamma: 0.9,
+                lambda: 0.95,
+            },
+            eps: 0.01,
+            seed: s as u64,
+        };
+        match pool.open(spec) {
+            Response::Opened { id } => ids.push(id),
+            other => panic!("open failed: {other:?}"),
+        }
+    }
+
+    // ---- churn: round-robin single steps, constant evict/rehydrate ----
+    let mut rng = Xoshiro256::seed_from_u64(0x5704e);
+    let t0 = Instant::now();
+    for _ in 0..ticks {
+        for &id in &ids {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            match pool.call(Request::Step { id, x, c }) {
+                Response::Stepped { y } => assert!(y.is_finite()),
+                other => panic!("churn step failed: {other:?}"),
+            }
+        }
+    }
+    let churn_elapsed = t0.elapsed().as_secs_f64();
+    let churn_sps = (sessions * ticks) as f64 / churn_elapsed;
+
+    // ---- park/rehydrate latency probes --------------------------------
+    // Each probe first warms the session and dirties it with one step,
+    // so the timed park is a real snapshot + synced append (an
+    // already-parked or clean session would make `park` an idempotent
+    // no-op and poison the recorded latency), and the timed warm is a
+    // real load + registry-routed restore.
+    let mut park_us: Vec<f64> = Vec::with_capacity(probes);
+    let mut warm_us: Vec<f64> = Vec::with_capacity(probes);
+    for i in 0..probes {
+        let id = ids[i % ids.len()];
+        match pool.call(Request::Warm { id }) {
+            Response::Warmed { .. } => {}
+            other => panic!("probe pre-warm failed: {other:?}"),
+        }
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        match pool.call(Request::Step { id, x, c: 0.0 }) {
+            Response::Stepped { .. } => {}
+            other => panic!("probe dirtying step failed: {other:?}"),
+        }
+        let t = Instant::now();
+        match pool.call(Request::Park { id }) {
+            Response::Parked { .. } => {}
+            other => panic!("park probe failed: {other:?}"),
+        }
+        park_us.push(t.elapsed().as_secs_f64() * 1e6);
+        let t = Instant::now();
+        match pool.call(Request::Warm { id }) {
+            Response::Warmed { rehydrated, .. } => {
+                assert!(rehydrated, "probe target must have been parked")
+            }
+            other => panic!("warm probe failed: {other:?}"),
+        }
+        warm_us.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let warm_p50 = percentile(&mut warm_us, 0.50).expect("probes > 0");
+    let warm_p99 = percentile(&mut warm_us, 0.99).expect("probes > 0");
+    let park_p50 = percentile(&mut park_us, 0.50).expect("probes > 0");
+    let park_p99 = percentile(&mut park_us, 0.99).expect("probes > 0");
+
+    let stats = pool.stats();
+    let evictions: u64 = stats.iter().map(|s| s.evictions).sum();
+    let rehydrations: u64 = stats.iter().map(|s| s.rehydrations).sum();
+    let store_bytes: u64 = stats.iter().map(|s| s.store_bytes).sum();
+    let parked: usize = stats.iter().map(|s| s.parked).sum();
+    let evictions_per_s = evictions as f64 / churn_elapsed;
+
+    println!(
+        "{}",
+        render_table(
+            &["metric", "value"],
+            &[
+                vec!["churn steps/s".into(), format!("{churn_sps:.0}")],
+                vec!["evictions".into(), evictions.to_string()],
+                vec!["evictions/s (churn phase)".into(), format!("{evictions_per_s:.0}")],
+                vec!["rehydrations".into(), rehydrations.to_string()],
+                vec!["rehydrate p50".into(), format!("{warm_p50:.1} us")],
+                vec!["rehydrate p99".into(), format!("{warm_p99:.1} us")],
+                vec!["park p50".into(), format!("{park_p50:.1} us")],
+                vec!["park p99".into(), format!("{park_p99:.1} us")],
+                vec!["parked sessions".into(), parked.to_string()],
+                vec!["store bytes".into(), store_bytes.to_string()],
+            ],
+        )
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("perf_store".into())),
+        ("sessions", Json::Num(sessions as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("resident_cap", Json::Num(cap as f64)),
+        ("ticks", Json::Num(ticks as f64)),
+        ("inputs", Json::Num(n as f64)),
+        ("churn_steps_per_s", Json::Num(churn_sps)),
+        ("evictions", Json::Num(evictions as f64)),
+        ("evictions_per_s", Json::Num(evictions_per_s)),
+        ("rehydrations", Json::Num(rehydrations as f64)),
+        ("rehydrate_p50_us", Json::Num(warm_p50)),
+        ("rehydrate_p99_us", Json::Num(warm_p99)),
+        ("park_p50_us", Json::Num(park_p50)),
+        ("park_p99_us", Json::Num(park_p99)),
+        ("store_bytes", Json::Num(store_bytes as f64)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create results dir");
+        }
+    }
+    std::fs::write(&out_path, record.pretty()).expect("write BENCH_store.json");
+    eprintln!("wrote {out_path}");
+    if ephemeral {
+        drop(pool);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

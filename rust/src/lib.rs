@@ -12,6 +12,9 @@
 //!   TD(lambda) sessions, stepped by sharded workers and a batched
 //!   structure-of-arrays columnar kernel, spoken to over a JSONL
 //!   protocol (`ccn serve`).
+//! - [`store`]: the durable session tier — per-shard append-compact
+//!   segment files of snapshot envelopes, LRU eviction, lazy
+//!   rehydration and crash recovery (`--store-dir`/`--resident-cap`).
 //! - `runtime` (feature `pjrt`): PJRT bridge executing the
 //!   JAX/Pallas-authored AOT artifacts (`artifacts/*.hlo.txt`) from Rust;
 //!   numerically cross-checked against the native path. Off by default
@@ -31,4 +34,5 @@ pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod util;

@@ -22,6 +22,7 @@ use ccn_rtrl::nets::NetRegistry;
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
 use ccn_rtrl::serve::Service;
+use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::cli::Args;
 use ccn_rtrl::util::json::Json;
 
@@ -122,15 +123,56 @@ fn cmd_sweep(mut args: Args) -> Result<(), String> {
 
 fn cmd_serve(mut args: Args) -> Result<(), String> {
     let shards = args.usize_or("shards", sweep::default_threads());
+    let store_dir = args.opt_str("store-dir");
+    let resident_cap = args.usize_or("resident-cap", 0);
     args.finish()?;
+    if resident_cap > 0 && store_dir.is_none() {
+        return Err(
+            "--resident-cap needs --store-dir: evicting a session without \
+             a durable store would destroy it"
+                .into(),
+        );
+    }
+    let store_cfg = store_dir.map(|dir| StoreConfig::new(dir, resident_cap));
     eprintln!(
         "ccn serve: {shards} shard(s); JSONL requests on stdin, responses \
-         on stdout (op: open|step|step_batch|predict|snapshot|restore|close|stats; \
-         net kinds: {})",
+         on stdout (op: open|step|step_batch|predict|snapshot|restore|park|\
+         warm|close|stats; net kinds: {})",
         NetRegistry::kinds().join("|")
     );
-    let service = Service::new(shards);
-    service.run_stdio()
+    if let Some(cfg) = &store_cfg {
+        eprintln!(
+            "durable tier: {} (resident cap {}/shard)",
+            cfg.dir.display(),
+            if cfg.resident_cap == 0 {
+                "unlimited".to_string()
+            } else {
+                cfg.resident_cap.to_string()
+            }
+        );
+    }
+    let mut service = Service::with_store(shards, store_cfg)?;
+    let parked = match service.pool().stats().iter().map(|s| s.parked).sum::<usize>()
+    {
+        0 => String::new(),
+        n => format!("; resumed {n} parked session(s)"),
+    };
+    eprintln!("ready{parked}");
+    // Flush the durable tier even when the stdio loop errored (a client
+    // hanging up is routine and must not cost session state); report
+    // whichever failure matters more.
+    let served = service.run_stdio();
+    match service.close() {
+        Ok(flushed) if flushed > 0 => {
+            eprintln!("flushed {flushed} session(s) to the store")
+        }
+        Ok(_) => {}
+        Err(e) => {
+            served?; // a stdio error is the root cause; surface it first
+            return Err(format!("shutdown flush: {e}"));
+        }
+    }
+    served
 }
 
 #[cfg(feature = "pjrt")]
@@ -257,9 +299,13 @@ fn main() {
                  learner specs: columnar:D | constructive:TOTAL:STEPS_PER_STAGE |\n\
                    ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE | tbptt:D:K | snap1:D\n\
                  sweep adds: --seeds 0,1,2 --threads T\n\
-                 serve options: --shards N   (JSONL protocol on stdin/stdout;\n\
-                   ops: open|step|step_batch|predict|snapshot|restore|close|stats;\n\
-                   every learner spec above is serveable and snapshot-safe)"
+                 serve options: --shards N --store-dir DIR --resident-cap K\n\
+                   (JSONL protocol on stdin/stdout; ops: open|step|step_batch|\n\
+                   predict|snapshot|restore|park|warm|close|stats; every learner\n\
+                   spec above is serveable and snapshot-safe. --store-dir mounts\n\
+                   the durable session tier: sessions beyond K per shard are\n\
+                   LRU-evicted to disk, rehydrated on demand, and survive\n\
+                   restarts)"
             );
             std::process::exit(2);
         }

@@ -172,6 +172,7 @@ impl BatchedColumnStepper {
     /// Gate pre-activations: `z[a][l] = sum_j w[a][j][l] * x[j][l % B]`.
     /// One pass over the weights; the inner loop is contiguous in both
     /// `w` and `x` so it autovectorizes across the batch.
+    #[inline]
     fn accumulate_gate_preacts(&mut self, x: &[f32]) {
         let (m, bsz, groups) = (self.m, self.batch, self.groups);
         let l = bsz * groups;
@@ -196,25 +197,58 @@ impl BatchedColumnStepper {
 
     /// Gate activations and the fused trace-recursion coefficients; also
     /// advances `h`/`c`. Mirrors the scalar column expression-for-
-    /// expression so lane results are bit-identical.
+    /// expression so lane results are bit-identical. The per-gate rows of
+    /// `z`/`u`/`b` are split into slices up front — the lane loop then
+    /// runs over equal-length slices with no residual bounds checks and
+    /// four independent gate chains per iteration for the scheduler to
+    /// overlap.
+    #[inline]
     fn activate(&mut self, fill_scratch: bool) {
         let l = self.lanes();
+        let Self {
+            z,
+            u,
+            b,
+            h,
+            c,
+            f_gate,
+            a_coef,
+            b_coef,
+            e_coef,
+            qi,
+            qf,
+            qg,
+            ro,
+            h_prev: h_prev_buf,
+            ..
+        } = self;
+        let (zi, zrest) = z.split_at(l);
+        let (zf, zrest) = zrest.split_at(l);
+        let (zo, zg) = zrest.split_at(l);
+        let (ui, urest) = u.split_at(l);
+        let (uf, urest) = urest.split_at(l);
+        let (uo, ug) = urest.split_at(l);
+        let (bi, brest) = b.split_at(l);
+        let (bf, brest) = brest.split_at(l);
+        let (bo, bg) = brest.split_at(l);
+        let h = &mut h[..l];
+        let c = &mut c[..l];
+        let f_gate = &mut f_gate[..l];
+        let a_coef = &mut a_coef[..l];
+        let b_coef = &mut b_coef[..l];
+        let e_coef = &mut e_coef[..l];
+        let qi = &mut qi[..l];
+        let qf = &mut qf[..l];
+        let qg = &mut qg[..l];
+        let ro = &mut ro[..l];
+        let h_prev_buf = &mut h_prev_buf[..l];
         for lane in 0..l {
-            let h_prev = self.h[lane];
-            let c_prev = self.c[lane];
-            let i = sigmoid(self.z[lane] + self.u[lane] * h_prev + self.b[lane]);
-            let f = sigmoid(
-                self.z[l + lane] + self.u[l + lane] * h_prev + self.b[l + lane],
-            );
-            let o = sigmoid(
-                self.z[2 * l + lane]
-                    + self.u[2 * l + lane] * h_prev
-                    + self.b[2 * l + lane],
-            );
-            let g = (self.z[3 * l + lane]
-                + self.u[3 * l + lane] * h_prev
-                + self.b[3 * l + lane])
-                .tanh();
+            let h_prev = h[lane];
+            let c_prev = c[lane];
+            let i = sigmoid(zi[lane] + ui[lane] * h_prev + bi[lane]);
+            let f = sigmoid(zf[lane] + uf[lane] * h_prev + bf[lane]);
+            let o = sigmoid(zo[lane] + uo[lane] * h_prev + bo[lane]);
+            let g = (zg[lane] + ug[lane] * h_prev + bg[lane]).tanh();
             let c2 = f * c_prev + i * g;
             let tanh_c2 = c2.tanh();
             let h2 = o * tanh_c2;
@@ -223,26 +257,33 @@ impl BatchedColumnStepper {
                 let df = f * (1.0 - f);
                 let do_ = o * (1.0 - o);
                 let dg = 1.0 - g * g;
-                self.a_coef[lane] = c_prev * df * self.u[l + lane]
-                    + i * dg * self.u[3 * l + lane]
-                    + g * di * self.u[lane];
-                self.b_coef[lane] = tanh_c2 * do_ * self.u[2 * l + lane];
-                self.e_coef[lane] = o * (1.0 - tanh_c2 * tanh_c2);
-                self.qi[lane] = g * di;
-                self.qf[lane] = c_prev * df;
-                self.qg[lane] = i * dg;
-                self.ro[lane] = tanh_c2 * do_;
-                self.f_gate[lane] = f;
-                self.h_prev[lane] = h_prev;
+                a_coef[lane] = c_prev * df * uf[lane]
+                    + i * dg * ug[lane]
+                    + g * di * ui[lane];
+                b_coef[lane] = tanh_c2 * do_ * uo[lane];
+                e_coef[lane] = o * (1.0 - tanh_c2 * tanh_c2);
+                qi[lane] = g * di;
+                qf[lane] = c_prev * df;
+                qg[lane] = i * dg;
+                ro[lane] = tanh_c2 * do_;
+                f_gate[lane] = f;
+                h_prev_buf[lane] = h_prev;
             }
-            self.h[lane] = h2;
-            self.c[lane] = c2;
+            h[lane] = h2;
+            c[lane] = c2;
         }
     }
 
     /// Forward + RTRL trace update for every lane: the batched twin of
     /// [`LstmColumn::step_with_traces`]. `x` has shape `[m][batch]`
     /// (batch-innermost); session `b`'s observation feeds all its lanes.
+    ///
+    /// Per-lane arithmetic is expression-for-expression the scalar
+    /// column's, in the same order — the ILP work here (row reslicing,
+    /// hoisted bounds checks, `#[inline]` stages) changes only how the
+    /// lanes are walked, never what each lane computes, and the
+    /// lane-exact parity property test pins that down.
+    #[inline]
     pub fn step_traces(&mut self, x: &[f32]) {
         if self.lanes() == 0 {
             return;
@@ -282,38 +323,61 @@ impl BatchedColumnStepper {
                 2 => (&zero[..], &ro[..]),
                 _ => (&qg[..], &zero[..]),
             };
-            // W traces: direct term x_j
+            // W traces: direct term x_j. Each (row, group) chunk is
+            // resliced once so the batch-innermost loop runs over
+            // equal-length slices — bounds checks hoist out and the
+            // three-term recurrences across lanes are independent, which
+            // is what lets the backend vectorize/overlap them.
             for j in 0..m {
                 let row = (a * m + j) * l;
+                let xrow = &x[j * bsz..j * bsz + bsz];
                 for k in 0..groups {
                     let off = row + k * bsz;
                     let lane0 = k * bsz;
+                    let th_row = &mut thw[off..off + bsz];
+                    let tc_row = &mut tcw[off..off + bsz];
+                    let fg = &f_gate[lane0..lane0 + bsz];
+                    let ac = &a_coef[lane0..lane0 + bsz];
+                    let ec = &e_coef[lane0..lane0 + bsz];
+                    let bc = &b_coef[lane0..lane0 + bsz];
+                    let qs = &q[lane0..lane0 + bsz];
+                    let rs = &r[lane0..lane0 + bsz];
                     for bb in 0..bsz {
-                        let lane = lane0 + bb;
-                        let xj = x[j * bsz + bb];
-                        let th_prev = thw[off + bb];
-                        let tc = f_gate[lane] * tcw[off + bb]
-                            + a_coef[lane] * th_prev
-                            + q[lane] * xj;
-                        thw[off + bb] =
-                            e_coef[lane] * tc + b_coef[lane] * th_prev + r[lane] * xj;
-                        tcw[off + bb] = tc;
+                        let xj = xrow[bb];
+                        let th_prev = th_row[bb];
+                        let tc =
+                            fg[bb] * tc_row[bb] + ac[bb] * th_prev + qs[bb] * xj;
+                        th_row[bb] = ec[bb] * tc + bc[bb] * th_prev + rs[bb] * xj;
+                        tc_row[bb] = tc;
                     }
                 }
             }
-            // u traces (direct term h(t-1)) and b traces (direct term 1)
+            // u traces (direct term h(t-1)) and b traces (direct term 1),
+            // same reslicing: one gate row of each trace array at a time.
             let row = a * l;
+            let thu_row = &mut thu[row..row + l];
+            let tcu_row = &mut tcu[row..row + l];
+            let thb_row = &mut thb[row..row + l];
+            let tcb_row = &mut tcb[row..row + l];
+            let fg = &f_gate[..l];
+            let ac = &a_coef[..l];
+            let ec = &e_coef[..l];
+            let bc = &b_coef[..l];
+            let hp_s = &h_prev[..l];
+            let qs = &q[..l];
+            let rs = &r[..l];
             for lane in 0..l {
-                let idx = row + lane;
-                let hp = h_prev[lane];
-                let th_prev = thu[idx];
-                let tc = f_gate[lane] * tcu[idx] + a_coef[lane] * th_prev + q[lane] * hp;
-                thu[idx] = e_coef[lane] * tc + b_coef[lane] * th_prev + r[lane] * hp;
-                tcu[idx] = tc;
-                let thb_prev = thb[idx];
-                let tcb_new = f_gate[lane] * tcb[idx] + a_coef[lane] * thb_prev + q[lane];
-                thb[idx] = e_coef[lane] * tcb_new + b_coef[lane] * thb_prev + r[lane];
-                tcb[idx] = tcb_new;
+                let hp = hp_s[lane];
+                let th_prev = thu_row[lane];
+                let tc =
+                    fg[lane] * tcu_row[lane] + ac[lane] * th_prev + qs[lane] * hp;
+                thu_row[lane] = ec[lane] * tc + bc[lane] * th_prev + rs[lane] * hp;
+                tcu_row[lane] = tc;
+                let thb_prev = thb_row[lane];
+                let tcb_new =
+                    fg[lane] * tcb_row[lane] + ac[lane] * thb_prev + qs[lane];
+                thb_row[lane] = ec[lane] * tcb_new + bc[lane] * thb_prev + rs[lane];
+                tcb_row[lane] = tcb_new;
             }
         }
     }

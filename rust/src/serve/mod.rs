@@ -18,6 +18,8 @@
 //!   sessions behind an mpsc queue; aggregate throughput scales with
 //!   cores and the hot path takes no locks.
 //! - [`protocol`]: the JSONL wire format.
+//! - [`crate::store`] (mounted via `--store-dir`): the durable session
+//!   tier — cold sessions park on disk, hot ones stay resident.
 //!
 //! # The registry/trait surface
 //!
@@ -66,8 +68,10 @@
 //! | `predict` | `{"op":"predict","id":1,"x":[...]}` | `{"ok":true,"y":0.41}` (advances state, no learning) |
 //! | `snapshot` | `{"op":"snapshot","id":1}` | `{"ok":true,"state":{...}}` |
 //! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically) |
+//! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
+//! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
-//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"steps":5000,"kinds":{"columnar":2,"tbptt":1},"shards":[...]}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...]}` |
 //!
 //! `open` accepts any registered kind: `columnar:D`,
 //! `constructive:TOTAL:STEPS_PER_STAGE`,
@@ -89,6 +93,38 @@
 //! one fused pass. Batched and scalar paths produce identical numbers —
 //! placement is purely a throughput decision. `stats` reports per-kind
 //! session counts so mixed-kind deployments can see what they host.
+//!
+//! # The durable session tier
+//!
+//! `ccn serve --store-dir DIR --resident-cap K` mounts [`crate::store`]:
+//! each shard keeps at most K sessions resident, evicting its coldest
+//! (snapshot -> park -> drop, SoA lane included) and transparently
+//! rehydrating parked sessions on their next op. Because eviction rides
+//! the same envelope as `snapshot`/`restore`, a session that bounced
+//! through disk continues **bit-identically** — and because every `park`
+//! is synced before it is acknowledged, a killed server restarts with
+//! every parked session intact (`stats` shows them under `"parked"`).
+//! Explicitly parking a cold session and warming it later:
+//!
+//! ```json
+//! {"op":"open","learner":"ccn:8:2:50000","n_inputs":4,"seed":3}
+//! {"ok":true,"id":9}
+//! {"op":"step","id":9,"x":[0.1,0,0,0.7],"c":0.5}
+//! {"ok":true,"y":0.0188}
+//! {"op":"park","id":9}
+//! {"ok":true,"id":9,"parked":true}
+//! {"op":"stats"}
+//! {"ok":true,"sessions":1,"resident":0,"parked":1,...}
+//! {"op":"warm","id":9}
+//! {"ok":true,"id":9,"resident":true,"rehydrated":true}
+//! {"op":"step","id":9,"x":[0,0.2,0,0.7],"c":0.5}
+//! {"ok":true,"y":0.0191}
+//! ```
+//!
+//! (`warm` is optional — a bare `step` to a parked id rehydrates too;
+//! warming ahead of expected traffic just moves the load off the
+//! latency path.) A graceful shutdown ([`Service::close`]) flushes every
+//! resident session, so nothing is lost across planned restarts either.
 
 pub mod batch;
 pub mod protocol;
@@ -101,6 +137,7 @@ pub use shard::{ShardPool, ShardState};
 
 use std::io::{BufRead, Write};
 
+use crate::store::StoreConfig;
 use crate::util::json::Json;
 use protocol::{parse_wire_op, Request, Response, WireOp};
 
@@ -117,8 +154,27 @@ impl Service {
         }
     }
 
+    /// A service with the durable session tier mounted (see
+    /// [`crate::store`]): boot recovers every parked session from the
+    /// store directory before the first request is served.
+    pub fn with_store(
+        n_shards: usize,
+        cfg: Option<StoreConfig>,
+    ) -> Result<Self, String> {
+        Ok(Self {
+            pool: ShardPool::with_store(n_shards, cfg)?,
+        })
+    }
+
     pub fn pool(&self) -> &ShardPool {
         &self.pool
+    }
+
+    /// Graceful shutdown: flush every resident session to the store and
+    /// join the shard workers. Returns the number of sessions flushed,
+    /// or an error naming the sessions that could not be flushed.
+    pub fn close(&mut self) -> Result<usize, String> {
+        self.pool.close()
     }
 
     /// Execute one already-parsed wire operation.
@@ -132,11 +188,20 @@ impl Service {
             WireOp::Predict { id, x } => self.pool.call(Request::Predict { id, x }),
             WireOp::Snapshot { id } => self.pool.call(Request::Snapshot { id }),
             WireOp::Restore(state) => self.pool.restore(state),
+            WireOp::Park { id } => self.pool.call(Request::Park { id }),
+            WireOp::Warm { id } => self.pool.call(Request::Warm { id }),
             WireOp::Close { id } => self.pool.call(Request::Close { id }),
             WireOp::Stats => {
                 let per_shard = self.pool.stats();
                 let sessions: usize = per_shard.iter().map(|s| s.sessions).sum();
+                let resident: usize = per_shard.iter().map(|s| s.resident).sum();
+                let parked: usize = per_shard.iter().map(|s| s.parked).sum();
                 let steps: u64 = per_shard.iter().map(|s| s.steps).sum();
+                let store_bytes: u64 =
+                    per_shard.iter().map(|s| s.store_bytes).sum();
+                let evictions: u64 = per_shard.iter().map(|s| s.evictions).sum();
+                let rehydrations: u64 =
+                    per_shard.iter().map(|s| s.rehydrations).sum();
                 let kinds: std::collections::BTreeMap<String, Json> =
                     protocol::ShardStats::merge_kinds(&per_shard)
                         .into_iter()
@@ -147,6 +212,8 @@ impl Service {
                     .map(|st| {
                         Json::obj(vec![
                             ("sessions", Json::Num(st.sessions as f64)),
+                            ("resident", Json::Num(st.resident as f64)),
+                            ("parked", Json::Num(st.parked as f64)),
                             ("steps", Json::Num(st.steps as f64)),
                         ])
                     })
@@ -154,7 +221,12 @@ impl Service {
                 return Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("sessions", Json::Num(sessions as f64)),
+                    ("resident", Json::Num(resident as f64)),
+                    ("parked", Json::Num(parked as f64)),
                     ("steps", Json::Num(steps as f64)),
+                    ("store_bytes", Json::Num(store_bytes as f64)),
+                    ("evictions", Json::Num(evictions as f64)),
+                    ("rehydrations", Json::Num(rehydrations as f64)),
                     ("kinds", Json::Obj(kinds)),
                     ("shards", Json::Arr(shards)),
                 ]);

@@ -17,13 +17,25 @@ pub struct StepItem {
     pub c: f32,
 }
 
-/// One shard's stats snapshot: live sessions, steps served, and session
-/// counts per learner kind (sorted by kind tag).
+/// One shard's stats snapshot: known sessions (resident + parked), steps
+/// served, session counts per learner kind (sorted by kind tag), and the
+/// durable-tier counters (zero when no store is mounted).
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
+    /// resident + parked
     pub sessions: usize,
     pub steps: u64,
     pub kinds: Vec<(String, usize)>,
+    /// sessions live in shard memory
+    pub resident: usize,
+    /// sessions parked on disk only
+    pub parked: usize,
+    /// on-disk record volume of this shard's store
+    pub store_bytes: u64,
+    /// LRU evictions (snapshot -> park -> drop) since boot
+    pub evictions: u64,
+    /// lazy rehydrations (load -> restore) since boot
+    pub rehydrations: u64,
 }
 
 impl ShardStats {
@@ -53,13 +65,19 @@ pub enum Request {
     Predict { id: u64, x: Vec<f32> },
     Snapshot { id: u64 },
     Restore { id: u64, state: Json },
+    /// Evict a session to the durable store now (explicit `park` op).
+    Park { id: u64 },
+    /// Rehydrate a parked session into shard memory (explicit `warm`).
+    Warm { id: u64 },
     Close { id: u64 },
     Stats,
+    /// Flush every resident session to the store (graceful shutdown).
+    Drain,
 }
 
 impl Request {
     /// The session id this request routes on (`None` for shard-local
-    /// aggregates like `Stats` and pre-partitioned `StepMany`).
+    /// aggregates like `Stats`/`Drain` and pre-partitioned `StepMany`).
     pub fn route_id(&self) -> Option<u64> {
         match self {
             Request::Open { id, .. }
@@ -67,8 +85,10 @@ impl Request {
             | Request::Predict { id, .. }
             | Request::Snapshot { id }
             | Request::Restore { id, .. }
+            | Request::Park { id }
+            | Request::Warm { id }
             | Request::Close { id } => Some(*id),
-            Request::StepMany { .. } | Request::Stats => None,
+            Request::StepMany { .. } | Request::Stats | Request::Drain => None,
         }
     }
 }
@@ -81,8 +101,15 @@ pub enum Response {
     SteppedMany { ys: Vec<Result<f32, String>> },
     Predicted { y: f32 },
     Snapshotted { state: Json },
+    /// The session is now on disk (idempotent for already-parked ids).
+    Parked { id: u64 },
+    /// The session is resident; `rehydrated` is false when it already was.
+    Warmed { id: u64, rehydrated: bool },
     Closed { id: u64, steps: u64 },
     Stats(ShardStats),
+    /// Shutdown flush: how many resident sessions were written out, and
+    /// per-session failures (the drain keeps going past them).
+    Drained { flushed: usize, errors: Vec<String> },
     Error { message: String },
 }
 
@@ -132,6 +159,15 @@ impl Response {
             Response::Snapshotted { state } => {
                 ok(vec![("state", state.clone())])
             }
+            Response::Parked { id } => ok(vec![
+                ("id", Json::Num(*id as f64)),
+                ("parked", Json::Bool(true)),
+            ]),
+            Response::Warmed { id, rehydrated } => ok(vec![
+                ("id", Json::Num(*id as f64)),
+                ("resident", Json::Bool(true)),
+                ("rehydrated", Json::Bool(*rehydrated)),
+            ]),
             Response::Closed { id, steps } => ok(vec![
                 ("id", Json::Num(*id as f64)),
                 ("steps", Json::Num(*steps as f64)),
@@ -144,9 +180,26 @@ impl Response {
                     .collect();
                 ok(vec![
                     ("sessions", Json::Num(st.sessions as f64)),
+                    ("resident", Json::Num(st.resident as f64)),
+                    ("parked", Json::Num(st.parked as f64)),
                     ("steps", Json::Num(st.steps as f64)),
+                    ("store_bytes", Json::Num(st.store_bytes as f64)),
+                    ("evictions", Json::Num(st.evictions as f64)),
+                    ("rehydrations", Json::Num(st.rehydrations as f64)),
                     ("kinds", Json::Obj(kinds)),
                 ])
+            }
+            Response::Drained { flushed, errors } => {
+                let mut fields = vec![("flushed", Json::Num(*flushed as f64))];
+                if !errors.is_empty() {
+                    fields.push((
+                        "errors",
+                        Json::Arr(
+                            errors.iter().map(|e| Json::Str(e.clone())).collect(),
+                        ),
+                    ));
+                }
+                ok(fields)
             }
             Response::Error { message } => Json::obj(vec![
                 ("ok", Json::Bool(false)),
@@ -165,6 +218,8 @@ pub enum WireOp {
     Predict { id: u64, x: Vec<f32> },
     Snapshot { id: u64 },
     Restore(Json),
+    Park { id: u64 },
+    Warm { id: u64 },
     Close { id: u64 },
     Stats,
 }
@@ -279,11 +334,13 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
         "restore" => Ok(WireOp::Restore(
             v.get("state").cloned().ok_or("restore: missing 'state'")?,
         )),
+        "park" => Ok(WireOp::Park { id: get_id(v)? }),
+        "warm" => Ok(WireOp::Warm { id: get_id(v)? }),
         "close" => Ok(WireOp::Close { id: get_id(v)? }),
         "stats" => Ok(WireOp::Stats),
         other => Err(format!(
             "unknown op '{other}' \
-             (open|step|step_batch|predict|snapshot|restore|close|stats)"
+             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats)"
         )),
     }
 }
@@ -352,6 +409,46 @@ mod tests {
         )
         .is_err());
         assert!(parse(r#"{"op":"open","learner":"tbptt","n_inputs":2}"#).is_err());
+    }
+
+    #[test]
+    fn park_and_warm_parse_and_encode() {
+        match parse(r#"{"op":"park","id":3}"#).unwrap() {
+            WireOp::Park { id } => assert_eq!(id, 3),
+            other => panic!("wrong op {other:?}"),
+        }
+        match parse(r#"{"op":"warm","id":4}"#).unwrap() {
+            WireOp::Warm { id } => assert_eq!(id, 4),
+            other => panic!("wrong op {other:?}"),
+        }
+        assert!(parse(r#"{"op":"park"}"#).is_err());
+        assert!(parse(r#"{"op":"warm","id":"x"}"#).is_err());
+        let p = Response::Parked { id: 3 }.to_json();
+        assert_eq!(p.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(p.get("parked"), Some(&Json::Bool(true)));
+        let w = Response::Warmed {
+            id: 4,
+            rehydrated: true,
+        }
+        .to_json();
+        assert_eq!(w.get("resident"), Some(&Json::Bool(true)));
+        assert_eq!(w.get("rehydrated"), Some(&Json::Bool(true)));
+        // stats carries the durable-tier counters
+        let st = Response::Stats(ShardStats {
+            sessions: 3,
+            resident: 1,
+            parked: 2,
+            store_bytes: 640,
+            evictions: 5,
+            rehydrations: 4,
+            ..ShardStats::default()
+        })
+        .to_json();
+        assert_eq!(st.get("resident"), Some(&Json::Num(1.0)));
+        assert_eq!(st.get("parked"), Some(&Json::Num(2.0)));
+        assert_eq!(st.get("store_bytes"), Some(&Json::Num(640.0)));
+        assert_eq!(st.get("evictions"), Some(&Json::Num(5.0)));
+        assert_eq!(st.get("rehydrations"), Some(&Json::Num(4.0)));
     }
 
     #[test]

@@ -10,12 +10,34 @@
 //! else (growing CCN/constructive sessions, dense baselines, partial
 //! batches) takes the scalar path. Both paths produce identical numbers —
 //! membership is a performance decision, never a semantic one.
+//!
+//! # The durable tier
+//!
+//! With a [`StoreConfig`] mounted, each shard also owns a
+//! [`SessionStore`] under `<dir>/shard-<k>/` and keeps at most
+//! `resident_cap` sessions in memory. Every session-addressed op touches
+//! an LRU; crossing the cap evicts the coldest session (snapshot ->
+//! [`SessionStore::park`] -> drop the slot, including its SoA batch
+//! lane). Ops addressed to a parked id transparently rehydrate it (load
+//! -> [`Session::from_snapshot`], which routes the envelope's kind tag
+//! through [`crate::nets::NetRegistry`]). Eviction and rehydration reuse
+//! the snapshot codec, so a session that bounced through disk continues
+//! bit-identically — membership in memory, like membership in a batch,
+//! is never a semantic decision.
+//!
+//! [`ShardPool::close`] drains every shard (flushing resident sessions to
+//! the store) and joins the workers deterministically; dropping the pool
+//! without closing joins the workers but skips the flush, which is
+//! exactly a crash as far as the store is concerned — only parked state
+//! survives, and boot-time recovery resumes it.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
+use crate::nets::NetRegistry;
+use crate::store::{SessionStore, StoreConfig};
 use crate::util::json::Json;
 
 use super::batch::{ColumnarBatchSpec, ColumnarSessionBatch};
@@ -48,7 +70,7 @@ enum Slot {
     Batched(BatchKey, usize, SessionSpec),
 }
 
-/// Single-threaded session store; one per worker thread.
+/// Single-threaded session owner; one per worker thread.
 #[derive(Default)]
 pub struct ShardState {
     slots: HashMap<u64, Slot>,
@@ -57,6 +79,19 @@ pub struct ShardState {
     /// to detect full-batch coverage)
     lane_ids: HashMap<BatchKey, Vec<u64>>,
     steps_served: u64,
+    /// durable tier (None = everything stays resident forever)
+    store: Option<SessionStore>,
+    /// max resident sessions before LRU eviction; 0 = unlimited
+    resident_cap: usize,
+    /// LRU bookkeeping: a monotone clock, id -> last-touch tick, and the
+    /// inverse (tick -> id, ticks are unique) for O(log n) victim picks
+    clock: u64,
+    last_used: HashMap<u64, u64>,
+    lru: BTreeMap<u64, u64>,
+    /// resident sessions whose state is newer than their parked copy
+    dirty: HashSet<u64>,
+    evictions: u64,
+    rehydrations: u64,
 }
 
 impl ShardState {
@@ -64,8 +99,35 @@ impl ShardState {
         Self::default()
     }
 
+    /// A shard with the durable tier mounted.
+    pub fn with_store(store: Option<SessionStore>, resident_cap: usize) -> Self {
+        Self {
+            store,
+            resident_cap,
+            ..Self::default()
+        }
+    }
+
+    /// Resident session count (parked sessions live in the store).
     pub fn n_sessions(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Mark `id` most-recently-used.
+    fn touch(&mut self, id: u64) {
+        self.clock += 1;
+        if let Some(old) = self.last_used.insert(id, self.clock) {
+            self.lru.remove(&old);
+        }
+        self.lru.insert(self.clock, id);
+    }
+
+    /// Forget LRU/dirty bookkeeping for a session leaving residency.
+    fn untrack(&mut self, id: u64) {
+        if let Some(clk) = self.last_used.remove(&id) {
+            self.lru.remove(&clk);
+        }
+        self.dirty.remove(&id);
     }
 
     /// Execute one request against this shard's sessions.
@@ -91,31 +153,204 @@ impl ShardState {
                 Ok(session) => self.insert(id, session),
                 Err(e) => Response::error(e),
             },
+            Request::Park { id } => self.park(id),
+            Request::Warm { id } => match self.ensure_resident(id) {
+                Ok(rehydrated) => Response::Warmed { id, rehydrated },
+                Err(e) => Response::error(e),
+            },
             Request::Close { id } => self.close(id),
-            Request::Stats => Response::Stats(ShardStats {
-                sessions: self.slots.len(),
-                steps: self.steps_served,
-                kinds: self.kind_counts(),
-            }),
+            Request::Stats => Response::Stats(self.stats()),
+            Request::Drain => self.drain(),
         }
     }
 
-    /// Session counts per learner kind (as opened, i.e. the spec's kind
-    /// tag — batched slots are always `columnar`-shaped but report the
-    /// kind they were opened under).
+    fn stats(&self) -> ShardStats {
+        let parked = self.store.as_ref().map_or(0, |s| {
+            s.ids()
+                .into_iter()
+                .filter(|id| !self.slots.contains_key(id))
+                .count()
+        });
+        ShardStats {
+            sessions: self.slots.len() + parked,
+            steps: self.steps_served,
+            kinds: self.kind_counts(),
+            resident: self.slots.len(),
+            parked,
+            store_bytes: self.store.as_ref().map_or(0, |s| s.bytes()),
+            evictions: self.evictions,
+            rehydrations: self.rehydrations,
+        }
+    }
+
+    /// Make `id` resident: a no-op touch when it already is, a store
+    /// load + registry-routed restore when it is parked. Returns whether
+    /// a rehydration happened.
+    fn ensure_resident(&mut self, id: u64) -> Result<bool, String> {
+        if self.slots.contains_key(&id) {
+            self.touch(id);
+            return Ok(false);
+        }
+        let parked = self.store.as_ref().is_some_and(|s| s.contains(id));
+        if !parked {
+            return Err(format!("no session {id}"));
+        }
+        let envelope = self.store.as_ref().expect("store present").load(id)?;
+        let session = Session::from_snapshot(&envelope)
+            .map_err(|e| format!("rehydrate session {id}: {e}"))?;
+        self.place(id, session)?;
+        self.rehydrations += 1;
+        self.touch(id);
+        // freshly rehydrated state equals the disk copy
+        self.dirty.remove(&id);
+        self.evict_to_cap()?;
+        Ok(true)
+    }
+
+    /// Evict least-recently-used sessions until the resident count is
+    /// back under the cap. Touch the session you are serving *before*
+    /// calling this.
+    fn evict_to_cap(&mut self) -> Result<(), String> {
+        if self.resident_cap == 0 || self.store.is_none() {
+            return Ok(());
+        }
+        while self.slots.len() > self.resident_cap {
+            let victim = match self.lru.iter().next() {
+                Some((_, &id)) => id,
+                None => break,
+            };
+            self.park_out(victim)?;
+            self.evictions += 1;
+        }
+        Ok(())
+    }
+
+    /// Snapshot -> park -> drop the resident slot. The snapshot is
+    /// written (and synced) *before* the slot is removed, so a store
+    /// failure leaves the session resident rather than lost. Clean
+    /// sessions (parked copy already current) skip the write.
+    fn park_out(&mut self, id: u64) -> Result<(), String> {
+        if self.store.is_none() {
+            return Err("no store configured (start serve with --store-dir)".into());
+        }
+        let current_on_disk = !self.dirty.contains(&id)
+            && self.store.as_ref().is_some_and(|s| s.contains(id));
+        if !current_on_disk {
+            let snap = self.snapshot_resident(id)?;
+            self.store
+                .as_mut()
+                .expect("store present")
+                .park(id, &snap)?;
+        }
+        let _ = self.take_session(id)?;
+        Ok(())
+    }
+
+    /// Explicit `park` op: idempotent for already-parked ids.
+    fn park(&mut self, id: u64) -> Response {
+        if self.slots.contains_key(&id) {
+            match self.park_out(id) {
+                Ok(()) => Response::Parked { id },
+                Err(e) => Response::error(e),
+            }
+        } else if self.store.as_ref().is_some_and(|s| s.contains(id)) {
+            Response::Parked { id }
+        } else {
+            Response::error(format!("no session {id}"))
+        }
+    }
+
+    /// Graceful-shutdown flush: every resident session moves to the
+    /// store. A failed park never aborts the drain — the remaining
+    /// sessions still get their chance, and every failure is reported.
+    /// Without a store this is a no-op (nothing to flush into).
+    fn drain(&mut self) -> Response {
+        if self.store.is_none() {
+            return Response::Drained {
+                flushed: 0,
+                errors: Vec::new(),
+            };
+        }
+        let mut ids: Vec<u64> = self.slots.keys().copied().collect();
+        ids.sort_unstable();
+        let mut flushed = 0;
+        let mut errors = Vec::new();
+        for id in ids {
+            match self.park_out(id) {
+                Ok(()) => flushed += 1,
+                Err(e) => errors.push(format!("session {id}: {e}")),
+            }
+        }
+        Response::Drained { flushed, errors }
+    }
+
+    /// Remove a resident session and hand it back as a scalar
+    /// [`Session`], extracting (and re-keying) its batch lane if it was
+    /// batched.
+    fn take_session(&mut self, id: u64) -> Result<Box<Session>, String> {
+        let slot = self
+            .slots
+            .remove(&id)
+            .ok_or_else(|| format!("no session {id}"))?;
+        self.untrack(id);
+        match slot {
+            Slot::Scalar(session) => Ok(session),
+            Slot::Batched(key, lane, spec) => {
+                let batch = self
+                    .batches
+                    .get_mut(&key)
+                    .expect("batch exists for batched slot");
+                // swap_remove hands back the removed lane directly (no
+                // separate extract_lane pass). Note the SoA batch still
+                // re-lays-out all surviving lanes on membership change —
+                // O(batch state) per evict/rehydrate; see the ROADMAP
+                // follow-up on capacity-padded strides.
+                let extracted = batch.swap_remove_lane(lane)?;
+                let session = Session::from_lane(spec, batch.spec(), &extracted)?;
+                let emptied = batch.is_empty();
+                // the last lane moved into `lane`: re-key that session
+                let ids = self.lane_ids.get_mut(&key).expect("lane ids exist");
+                let moved = ids.pop().expect("non-empty lane list");
+                if moved != id {
+                    ids[lane] = moved;
+                    if let Some(Slot::Batched(_, l, _)) = self.slots.get_mut(&moved)
+                    {
+                        *l = lane;
+                    }
+                }
+                if emptied {
+                    self.batches.remove(&key);
+                    self.lane_ids.remove(&key);
+                }
+                Ok(Box::new(session))
+            }
+        }
+    }
+
+    /// Session counts per learner kind. Resident sessions count under
+    /// the spec tag they were opened with (batched slots are always
+    /// `columnar`-shaped but report their opening kind); parked sessions
+    /// count under their envelope's kind tag, read from the store index
+    /// without touching disk.
     fn kind_counts(&self) -> Vec<(String, usize)> {
-        let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
         for slot in self.slots.values() {
             let kind = match slot {
                 Slot::Scalar(session) => session.spec().learner.kind(),
                 Slot::Batched(_, _, spec) => spec.learner.kind(),
             };
-            *counts.entry(kind).or_insert(0) += 1;
+            *counts.entry(kind.to_string()).or_insert(0) += 1;
         }
-        counts
-            .into_iter()
-            .map(|(k, n)| (k.to_string(), n))
-            .collect()
+        if let Some(store) = &self.store {
+            for id in store.ids() {
+                if !self.slots.contains_key(&id) {
+                    if let Some(kind) = store.kind_of(id) {
+                        *counts.entry(kind.to_string()).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        counts.into_iter().collect()
     }
 
     fn open(&mut self, id: u64, spec: SessionSpec) -> Response {
@@ -125,44 +360,56 @@ impl ShardState {
         }
     }
 
-    /// Place a (fresh or restored) session: batched store when the net's
-    /// discovered capability allows, scalar otherwise.
+    /// Admit a brand-new or wire-restored session: place it, mark it
+    /// most-recently-used and dirty (the store has no copy yet), and
+    /// enforce the resident cap.
     fn insert(&mut self, id: u64, session: Session) -> Response {
+        if self.store.as_ref().is_some_and(|s| s.contains(id)) {
+            return Response::error(format!("session {id} already exists (parked)"));
+        }
+        if let Err(e) = self.place(id, session) {
+            return Response::error(e);
+        }
+        self.touch(id);
+        self.dirty.insert(id);
+        if let Err(e) = self.evict_to_cap() {
+            // the open must fail atomically: a session the client never
+            // got an id for must not stay resident eating the cap
+            let _ = self.take_session(id);
+            return Response::error(format!("open aborted, eviction failed: {e}"));
+        }
+        Response::Opened { id }
+    }
+
+    /// Place a session into a resident slot: batched representation when
+    /// the net's discovered capability allows, scalar otherwise. No LRU
+    /// or dirty bookkeeping — callers decide that.
+    fn place(&mut self, id: u64, session: Session) -> Result<(), String> {
         if self.slots.contains_key(&id) {
-            return Response::error(format!("session {id} already exists"));
+            return Err(format!("session {id} already exists"));
         }
         let spec = session.spec().clone();
         if let Some(batch_spec) = session.columnar_batch_spec() {
             let key = batch_key(&batch_spec);
-            let lane = match session.to_lane() {
-                Ok(lane) => lane,
-                Err(e) => return Response::error(e),
-            };
+            let lane = session.to_lane()?;
             let batch = match self.batches.entry(key) {
                 std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
                 std::collections::hash_map::Entry::Vacant(e) => {
-                    match ColumnarSessionBatch::from_lanes(batch_spec, &[]) {
-                        Ok(b) => e.insert(b),
-                        Err(msg) => return Response::error(msg),
-                    }
+                    e.insert(ColumnarSessionBatch::from_lanes(batch_spec, &[])?)
                 }
             };
-            match batch.push_lane(lane) {
-                Ok(idx) => {
-                    self.lane_ids.entry(key).or_default().push(id);
-                    debug_assert_eq!(self.lane_ids[&key].len(), idx + 1);
-                    self.slots.insert(id, Slot::Batched(key, idx, spec));
-                    Response::Opened { id }
-                }
-                Err(e) => Response::error(e),
-            }
+            let idx = batch.push_lane(lane)?;
+            self.lane_ids.entry(key).or_default().push(id);
+            debug_assert_eq!(self.lane_ids[&key].len(), idx + 1);
+            self.slots.insert(id, Slot::Batched(key, idx, spec));
         } else {
             self.slots.insert(id, Slot::Scalar(Box::new(session)));
-            Response::Opened { id }
         }
+        Ok(())
     }
 
     fn step_session(&mut self, id: u64, x: &[f32], c: f32) -> Result<f32, String> {
+        self.ensure_resident(id)?;
         let y = match self
             .slots
             .get_mut(&id)
@@ -184,10 +431,14 @@ impl ShardState {
             }
         };
         self.steps_served += 1;
+        self.dirty.insert(id);
         Ok(y)
     }
 
     fn predict_session(&mut self, id: u64, x: &[f32]) -> Result<f32, String> {
+        self.ensure_resident(id)?;
+        // prediction advances recurrent state, so the disk copy goes stale
+        self.dirty.insert(id);
         match self
             .slots
             .get_mut(&id)
@@ -218,6 +469,11 @@ impl ShardState {
     fn step_many(&mut self, items: Vec<StepItem>) -> Vec<Result<f32, String>> {
         let n_items = items.len();
         let mut out: Vec<Option<Result<f32, String>>> = vec![None; n_items];
+        // rehydrate parked members first so the fused pass can cover
+        // them; failures surface per item in the scalar fallback
+        for item in &items {
+            let _ = self.ensure_resident(item.id);
+        }
         // partition: which batch does each item belong to (if any)?
         let mut per_batch: HashMap<BatchKey, Vec<(usize, usize)>> = HashMap::new();
         for (pos, item) in items.iter().enumerate() {
@@ -251,6 +507,7 @@ impl ShardState {
             let ys = batch.step_all(&obs, &cs).to_vec();
             for &(pos, lane) in &members {
                 out[pos] = Some(Ok(ys[lane]));
+                self.dirty.insert(items[pos].id);
             }
             self.steps_served += bsz as u64;
         }
@@ -263,7 +520,25 @@ impl ShardState {
         out.into_iter().map(|r| r.expect("every item answered")).collect()
     }
 
-    fn snapshot_session(&self, id: u64) -> Result<Json, String> {
+    /// Snapshot a session wherever it lives: resident sessions serialize
+    /// their live state; parked sessions return the stored envelope
+    /// without rehydrating.
+    fn snapshot_session(&mut self, id: u64) -> Result<Json, String> {
+        if self.slots.contains_key(&id) {
+            self.touch(id);
+            return self.snapshot_resident(id);
+        }
+        if let Some(store) = &self.store {
+            if store.contains(id) {
+                return store.load(id);
+            }
+        }
+        Err(format!("no session {id}"))
+    }
+
+    /// Serialize a resident session (scalar slot or batch lane) into the
+    /// versioned envelope; the slot is untouched.
+    fn snapshot_resident(&self, id: u64) -> Result<Json, String> {
         match self.slots.get(&id).ok_or_else(|| format!("no session {id}"))? {
             Slot::Scalar(session) => Ok(session.snapshot()),
             Slot::Batched(key, lane, spec) => {
@@ -276,34 +551,44 @@ impl ShardState {
         }
     }
 
+    /// Terminate a session for good, wherever it lives. Parked sessions
+    /// report the step count recorded in their envelope — no rehydration
+    /// just to say goodbye.
     fn close(&mut self, id: u64) -> Response {
-        match self.slots.remove(&id) {
-            None => Response::error(format!("no session {id}")),
-            Some(Slot::Scalar(session)) => Response::Closed {
-                id,
-                steps: session.steps(),
-            },
-            Some(Slot::Batched(key, lane, _)) => {
-                let batch = self.batches.get_mut(&key).expect("batch exists");
-                let steps = batch.session_steps(lane);
-                if let Err(e) = batch.swap_remove_lane(lane) {
+        if self.slots.contains_key(&id) {
+            // retire the parked copy *before* dropping the live slot: if
+            // the delete fails the session stays resident, instead of a
+            // stale envelope surviving to resurrect on a later step
+            if let Some(store) = self.store.as_mut() {
+                if let Err(e) = store.delete(id) {
                     return Response::error(e);
                 }
-                // the last lane moved into `lane`: re-key that session
-                let ids = self.lane_ids.get_mut(&key).expect("lane ids exist");
-                let moved = ids.pop().expect("non-empty lane list");
-                if moved != id {
-                    ids[lane] = moved;
-                    if let Some(Slot::Batched(_, l, _)) = self.slots.get_mut(&moved) {
-                        *l = lane;
-                    }
-                }
-                if batch.is_empty() {
-                    self.batches.remove(&key);
-                    self.lane_ids.remove(&key);
-                }
-                Response::Closed { id, steps }
             }
+            return match self.take_session(id) {
+                Ok(session) => Response::Closed {
+                    id,
+                    steps: session.steps(),
+                },
+                Err(e) => Response::error(e),
+            };
+        }
+        let Some(store) = self.store.as_mut() else {
+            return Response::error(format!("no session {id}"));
+        };
+        if !store.contains(id) {
+            return Response::error(format!("no session {id}"));
+        }
+        let steps = match store.load(id) {
+            Ok(env) => env
+                .get("td")
+                .and_then(|t| t.get("steps"))
+                .and_then(|s| s.as_f64())
+                .unwrap_or(0.0) as u64,
+            Err(e) => return Response::error(e),
+        };
+        match store.delete(id) {
+            Ok(_) => Response::Closed { id, steps },
+            Err(e) => Response::error(e),
         }
     }
 }
@@ -323,14 +608,36 @@ pub struct ShardPool {
 
 impl ShardPool {
     pub fn new(n_shards: usize) -> Self {
+        Self::with_store(n_shards, None)
+            .expect("a storeless pool cannot fail to boot")
+    }
+
+    /// A pool with the durable tier mounted: shard `k` owns
+    /// `<dir>/shard-<k>/`. Boot scans every shard store, adopts sessions
+    /// stranded by a different historical shard count, validates that
+    /// all parked kinds are restorable by this binary, and starts the id
+    /// allocator above every parked id — so a restarted server resumes
+    /// exactly where the stores left off.
+    pub fn with_store(
+        n_shards: usize,
+        cfg: Option<StoreConfig>,
+    ) -> Result<Self, String> {
         let n = n_shards.max(1);
+        let (stores, first_id) = match &cfg {
+            None => ((0..n).map(|_| None).collect::<Vec<_>>(), 1),
+            Some(cfg) => {
+                let (stores, max_id) = Self::open_stores(cfg, n)?;
+                (stores.into_iter().map(Some).collect(), max_id + 1)
+            }
+        };
+        let resident_cap = cfg.as_ref().map_or(0, |c| c.resident_cap);
         let mut txs = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
-        for _ in 0..n {
+        for store in stores {
             let (tx, rx) = mpsc::channel::<Job>();
             txs.push(tx);
             joins.push(std::thread::spawn(move || {
-                let mut state = ShardState::new();
+                let mut state = ShardState::with_store(store, resident_cap);
                 while let Ok(job) = rx.recv() {
                     match job {
                         Job::Run(req, reply) => {
@@ -342,11 +649,87 @@ impl ShardPool {
                 }
             }));
         }
-        Self {
+        Ok(Self {
             txs,
             joins,
-            next_id: AtomicU64::new(1),
+            next_id: AtomicU64::new(first_id),
+        })
+    }
+
+    /// Open the per-shard stores and reconcile them with the current
+    /// shard count: sessions in `shard-<j>/` dirs with `j >= n` (an
+    /// earlier run had more shards) and sessions whose `id % n` no
+    /// longer matches their directory are re-parked where the router
+    /// will look for them. Returns the stores plus the highest parked id.
+    fn open_stores(
+        cfg: &StoreConfig,
+        n: usize,
+    ) -> Result<(Vec<SessionStore>, u64), String> {
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| format!("store root {}: {e}", cfg.dir.display()))?;
+        let mut stores: Vec<SessionStore> = Vec::with_capacity(n);
+        for k in 0..n {
+            stores.push(SessionStore::open(cfg.shard_dir(k))?);
         }
+        // Migration is always park-into-the-new-home *first*, delete the
+        // old copy *after*: a crash in between leaves a duplicate (which
+        // the next boot's misplaced-id pass resolves), never a loss.
+        for entry in std::fs::read_dir(&cfg.dir)
+            .map_err(|e| format!("store root list: {e}"))?
+        {
+            let entry = entry.map_err(|e| format!("store root list: {e}"))?;
+            let name = entry.file_name();
+            let idx = name
+                .to_string_lossy()
+                .strip_prefix("shard-")
+                .and_then(|s| s.parse::<usize>().ok());
+            if let Some(idx) = idx {
+                if idx >= n && entry.path().is_dir() {
+                    let path = entry.path();
+                    let mut orphan = SessionStore::open(&path)?;
+                    for (id, env) in orphan.scan()? {
+                        stores[(id % n as u64) as usize].park(id, &env)?;
+                        orphan.delete(id)?;
+                    }
+                    drop(orphan);
+                    // fully migrated: retire the directory so future
+                    // boots stop re-opening and replaying dead records
+                    let _ = std::fs::remove_dir_all(&path);
+                }
+            }
+        }
+        for k in 0..n {
+            let misplaced: Vec<u64> = stores[k]
+                .ids()
+                .into_iter()
+                .filter(|id| (id % n as u64) as usize != k)
+                .collect();
+            for id in misplaced {
+                let env = stores[k].load(id)?;
+                stores[(id % n as u64) as usize].park(id, &env)?;
+                stores[k].delete(id)?;
+            }
+        }
+        // fail fast on envelopes this binary cannot restore (version
+        // skew is a boot-time error, not a mid-traffic surprise)
+        let mut unknown: Vec<String> = Vec::new();
+        for s in &stores {
+            for id in s.ids() {
+                if let Some(kind) = s.kind_of(id) {
+                    if NetRegistry::family(kind).is_none() {
+                        unknown.push(format!("{id}:{kind}"));
+                    }
+                }
+            }
+        }
+        if !unknown.is_empty() {
+            return Err(format!(
+                "store holds sessions of unregistered kinds: {}",
+                unknown.join(", ")
+            ));
+        }
+        let max_id = stores.iter().flat_map(|s| s.ids()).max().unwrap_or(0);
+        Ok((stores, max_id))
     }
 
     pub fn n_shards(&self) -> usize {
@@ -368,21 +751,85 @@ impl ShardPool {
 
     /// Allocate an id and open a session on its shard.
     pub fn open(&self, spec: SessionSpec) -> Response {
+        if self.txs.is_empty() {
+            return Response::error("shard pool is closed");
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.call_shard(self.shard_of(id), Request::Open { id, spec })
     }
 
     /// Allocate an id and restore a snapshot onto its shard.
     pub fn restore(&self, state: Json) -> Response {
+        if self.txs.is_empty() {
+            return Response::error("shard pool is closed");
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.call_shard(self.shard_of(id), Request::Restore { id, state })
     }
 
     /// Route a single-session request to its owner.
     pub fn call(&self, req: Request) -> Response {
+        if self.txs.is_empty() {
+            return Response::error("shard pool is closed");
+        }
         match req.route_id() {
             Some(id) => self.call_shard(self.shard_of(id), req),
             None => Response::error("request has no routing id"),
+        }
+    }
+
+    /// Flush every shard's resident sessions to its store (no-op without
+    /// a store). Returns how many sessions were written out plus every
+    /// per-session failure — a partial flush must never read as a full
+    /// one.
+    pub fn drain(&self) -> (usize, Vec<String>) {
+        let mut flushed = 0;
+        let mut errors = Vec::new();
+        for s in 0..self.txs.len() {
+            match self.call_shard(s, Request::Drain) {
+                Response::Drained {
+                    flushed: f,
+                    errors: e,
+                } => {
+                    flushed += f;
+                    errors.extend(e);
+                }
+                Response::Error { message } => {
+                    errors.push(format!("shard {s}: {message}"))
+                }
+                other => errors.push(format!("shard {s}: unexpected {other:?}")),
+            }
+        }
+        (flushed, errors)
+    }
+
+    /// Graceful, deterministic shutdown: drain every shard, then stop
+    /// and join the workers. All requests sent before `close` are
+    /// answered (the mpsc queue is FIFO and `Shutdown` goes last);
+    /// requests after it get a clean "pool is closed" error instead of a
+    /// hang. Idempotent. Returns the number of sessions flushed, or an
+    /// error naming every session that could not be flushed (the workers
+    /// are shut down and joined either way).
+    pub fn close(&mut self) -> Result<usize, String> {
+        if self.txs.is_empty() {
+            return Ok(0);
+        }
+        let (flushed, errors) = self.drain();
+        for tx in &self.txs {
+            let _ = tx.send(Job::Shutdown);
+        }
+        self.txs.clear();
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+        if errors.is_empty() {
+            Ok(flushed)
+        } else {
+            Err(format!(
+                "flushed {flushed} session(s), {} failed: {}",
+                errors.len(),
+                errors.join("; ")
+            ))
         }
     }
 
@@ -390,6 +837,12 @@ impl ShardPool {
     /// parallel*, gather results back into input order. This is the
     /// aggregate hot path: one channel round-trip per shard per tick.
     pub fn step_batch(&self, items: Vec<StepItem>) -> Vec<Result<f32, String>> {
+        if self.txs.is_empty() {
+            return items
+                .iter()
+                .map(|_| Err("shard pool is closed".into()))
+                .collect();
+        }
         let n_items = items.len();
         let mut per_shard: Vec<Vec<usize>> = vec![Vec::new(); self.txs.len()];
         let mut shard_items: Vec<Vec<StepItem>> = vec![Vec::new(); self.txs.len()];
@@ -446,8 +899,9 @@ impl ShardPool {
         out
     }
 
-    /// Per-shard stats snapshots (sessions, steps served, per-kind
-    /// session counts).
+    /// Per-shard stats snapshots (resident/parked sessions, steps
+    /// served, per-kind counts, store volume, eviction/rehydration
+    /// counters).
     pub fn stats(&self) -> Vec<ShardStats> {
         (0..self.txs.len())
             .map(|s| match self.call_shard(s, Request::Stats) {
@@ -460,9 +914,15 @@ impl ShardPool {
 
 impl Drop for ShardPool {
     fn drop(&mut self) {
+        // Deliberately NOT a drain: dropping an unclosed pool is the
+        // crash path — only parked state survives, which is what the
+        // kill/restart recovery tests rely on. Workers are still joined,
+        // so in-flight requests finish and their replies are delivered
+        // before drop returns.
         for tx in &self.txs {
             let _ = tx.send(Job::Shutdown);
         }
+        self.txs.clear();
         for join in self.joins.drain(..) {
             let _ = join.join();
         }
@@ -664,6 +1124,217 @@ mod tests {
             let y = st.step_session(3, &x, 0.1).unwrap();
             assert_eq!(y, twin.step(&x, 0.1).unwrap(), "lane re-key broke state");
         }
+    }
+
+    fn fresh_dir(tag: &str) -> std::path::PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!(
+            "ccn-shard-{tag}-{}-{nanos}",
+            std::process::id()
+        ))
+    }
+
+    fn fresh_store(tag: &str) -> (std::path::PathBuf, SessionStore) {
+        let dir = fresh_dir(tag);
+        let store = SessionStore::open(&dir).unwrap();
+        (dir, store)
+    }
+
+    #[test]
+    fn lru_evicts_coldest_and_rehydrates_bit_exact() {
+        let (dir, store) = fresh_store("lru");
+        let mut st = ShardState::with_store(Some(store), 2);
+        let mut twins = Vec::new();
+        for id in 1..=3u64 {
+            open_ok(&mut st, id, spec(LearnerKind::Columnar { d: 3 }, id));
+            twins.push(Session::open(spec(LearnerKind::Columnar { d: 3 }, id)).unwrap());
+        }
+        // cap 2: opening the third evicted the coldest (session 1)
+        assert_eq!(st.n_sessions(), 2);
+        let stats = st.stats();
+        assert_eq!(stats.sessions, 3, "evicted sessions still count");
+        assert_eq!(stats.resident, 2);
+        assert_eq!(stats.parked, 1);
+        assert_eq!(stats.evictions, 1);
+        assert!(stats.store_bytes > 0);
+        // round-robin stepping churns sessions through the store; every
+        // prediction must match the never-evicted twin exactly
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for _ in 0..60 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            for (i, twin) in twins.iter_mut().enumerate() {
+                let id = i as u64 + 1;
+                let y = st.step_session(id, &x, c).unwrap();
+                assert_eq!(y, twin.step(&x, c).unwrap(), "session {id}");
+            }
+            assert!(st.n_sessions() <= 2, "cap respected");
+        }
+        let stats = st.stats();
+        assert_eq!(stats.sessions, 3);
+        assert!(stats.rehydrations > 0, "churn must have rehydrated");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn explicit_park_warm_snapshot_and_close_for_parked_sessions() {
+        let (dir, store) = fresh_store("parkwarm");
+        let mut st = ShardState::with_store(Some(store), 0);
+        open_ok(&mut st, 1, spec(LearnerKind::Columnar { d: 2 }, 0));
+        open_ok(&mut st, 2, spec(LearnerKind::Tbptt { d: 2, k: 4 }, 1));
+        for _ in 0..20 {
+            st.step_session(1, &[0.1, 0.2, 0.3], 0.1).unwrap();
+            st.step_session(2, &[0.1, 0.2, 0.3], 0.1).unwrap();
+        }
+        // park both (batched and scalar slots)
+        for id in 1..=2u64 {
+            match st.handle(Request::Park { id }) {
+                Response::Parked { id: got } => assert_eq!(got, id),
+                other => panic!("park failed: {other:?}"),
+            }
+        }
+        assert_eq!(st.n_sessions(), 0);
+        // parked sessions still snapshot (straight from the store) and
+        // count in stats/kinds
+        let snap = st.snapshot_session(1).unwrap();
+        assert_eq!(snap.get("kind").and_then(|k| k.as_str()), Some("columnar"));
+        let stats = st.stats();
+        assert_eq!(stats.parked, 2);
+        assert!(stats
+            .kinds
+            .iter()
+            .any(|(k, n)| k == "tbptt" && *n == 1));
+        // park again: idempotent
+        match st.handle(Request::Park { id: 1 }) {
+            Response::Parked { .. } => {}
+            other => panic!("re-park failed: {other:?}"),
+        }
+        // warm rehydrates exactly once
+        match st.handle(Request::Warm { id: 1 }) {
+            Response::Warmed { rehydrated, .. } => assert!(rehydrated),
+            other => panic!("warm failed: {other:?}"),
+        }
+        match st.handle(Request::Warm { id: 1 }) {
+            Response::Warmed { rehydrated, .. } => assert!(!rehydrated),
+            other => panic!("re-warm failed: {other:?}"),
+        }
+        // closing a parked session reports its recorded step count
+        match st.handle(Request::Close { id: 2 }) {
+            Response::Closed { id, steps } => {
+                assert_eq!(id, 2);
+                assert_eq!(steps, 20);
+            }
+            other => panic!("close parked failed: {other:?}"),
+        }
+        assert!(st.step_session(2, &[0.0; 3], 0.0).is_err(), "closed for good");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn park_without_store_errors_cleanly() {
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Snap1 { d: 2 }, 0));
+        match st.handle(Request::Park { id: 1 }) {
+            Response::Error { message } => {
+                assert!(message.contains("store"), "{message}")
+            }
+            other => panic!("expected error, got {other:?}"),
+        }
+        // the session is untouched
+        assert!(st.step_session(1, &[0.0; 3], 0.0).is_ok());
+    }
+
+    #[test]
+    fn pool_close_is_deterministic_and_idempotent() {
+        let dir = fresh_dir("close");
+        let cfg = StoreConfig::new(&dir, 0);
+        let mut pool = ShardPool::with_store(2, Some(cfg.clone())).unwrap();
+        let mut ids = Vec::new();
+        for s in 0..4u64 {
+            match pool.open(spec(LearnerKind::Columnar { d: 2 }, s)) {
+                Response::Opened { id } => ids.push(id),
+                other => panic!("open failed: {other:?}"),
+            }
+        }
+        for &id in &ids {
+            match pool.call(Request::Step {
+                id,
+                x: vec![0.1, 0.2, 0.3],
+                c: 0.0,
+            }) {
+                Response::Stepped { .. } => {}
+                other => panic!("step failed: {other:?}"),
+            }
+        }
+        // close flushes every resident session and joins the workers
+        assert_eq!(pool.close().unwrap(), 4);
+        assert_eq!(pool.close().unwrap(), 0, "second close is a no-op");
+        // requests after close fail cleanly instead of hanging/panicking
+        match pool.call(Request::Step {
+            id: ids[0],
+            x: vec![0.0; 3],
+            c: 0.0,
+        }) {
+            Response::Error { message } => assert!(message.contains("closed")),
+            other => panic!("expected closed error, got {other:?}"),
+        }
+        let ys = pool.step_batch(vec![StepItem {
+            id: ids[0],
+            x: vec![0.0; 3],
+            c: 0.0,
+        }]);
+        assert!(ys[0].is_err());
+        match pool.open(spec(LearnerKind::Columnar { d: 2 }, 9)) {
+            Response::Error { .. } => {}
+            other => panic!("expected closed error, got {other:?}"),
+        }
+        drop(pool);
+        // a fresh pool on the same store resumes all four, parked
+        let pool = ShardPool::with_store(2, Some(cfg)).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.iter().map(|s| s.parked).sum::<usize>(), 4);
+        assert_eq!(stats.iter().map(|s| s.resident).sum::<usize>(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn boot_adopts_sessions_from_a_different_shard_count() {
+        let dir = fresh_dir("reshard");
+        let cfg = StoreConfig::new(&dir, 0);
+        // park 6 sessions on a 3-shard pool
+        let mut pool = ShardPool::with_store(3, Some(cfg.clone())).unwrap();
+        let mut ids = Vec::new();
+        for s in 0..6u64 {
+            match pool.open(spec(LearnerKind::Columnar { d: 2 }, s)) {
+                Response::Opened { id } => ids.push(id),
+                other => panic!("open failed: {other:?}"),
+            }
+        }
+        assert_eq!(pool.close().unwrap(), 6);
+        drop(pool);
+        // reboot with 2 shards: every session must still be reachable
+        let pool = ShardPool::with_store(2, Some(cfg)).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.iter().map(|s| s.sessions).sum::<usize>(), 6);
+        for &id in &ids {
+            match pool.call(Request::Step {
+                id,
+                x: vec![0.1, 0.2, 0.3],
+                c: 0.0,
+            }) {
+                Response::Stepped { y } => assert!(y.is_finite()),
+                other => panic!("resharded step failed: {other:?}"),
+            }
+        }
+        // new ids never collide with parked ones
+        match pool.open(spec(LearnerKind::Columnar { d: 2 }, 9)) {
+            Response::Opened { id } => assert!(id > *ids.iter().max().unwrap()),
+            other => panic!("open failed: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,74 @@
+//! `store` — the durable session tier under the serve subsystem.
+//!
+//! The serve layer ([`crate::serve`]) can snapshot any net family into
+//! the versioned `{"v":2,"kind":...}` envelope; this module gives those
+//! envelopes a disk home so sessions survive memory pressure and process
+//! restarts. The paper's learners keep *exact* RTRL gradients in O(1)
+//! memory per step — cheap enough that a session's complete state is a
+//! few kilobytes — so unlike truncated/approximate estimators the service
+//! never has to trade gradient quality for capacity: it parks cold
+//! sessions instead.
+//!
+//! Layers:
+//!
+//! - [`segment`]: the on-disk format — newline-delimited JSON records
+//!   (`park` snapshots and `del` tombstones) in numbered append-only
+//!   segment files, torn-tail tolerant.
+//! - [`SessionStore`]: one directory = one store — in-memory index
+//!   (id -> segment/offset/length/kind), synced appends, and
+//!   append-compact garbage collection committed by atomic
+//!   write-then-rename.
+//! - [`StoreConfig`]: how the serve layer mounts the tier — a root
+//!   directory (each shard claims `shard-<k>/` under it) and a
+//!   per-shard resident capacity.
+//!
+//! # Lifecycle with the serve layer
+//!
+//! Each shard owns a `SessionStore` and a resident-session LRU. When a
+//! shard exceeds its resident capacity it evicts the coldest session:
+//! snapshot -> [`SessionStore::park`] -> drop the in-memory slot
+//! (including the session's lane in the SoA columnar batch). Any
+//! subsequent op addressed to a parked id transparently rehydrates it
+//! through [`crate::nets::NetRegistry`]. On graceful shutdown every
+//! resident session is flushed; on boot [`SessionStore::scan`] (via the
+//! rebuilt index) resumes every parked session lazily. See
+//! [`crate::serve`] for the `park`/`warm` wire ops and the protocol
+//! example.
+//!
+//! Crash model: a `park` is acknowledged only after the record is synced,
+//! so an acknowledged snapshot survives `kill -9`. A torn final append is
+//! truncated on the next open; an interrupted compaction leaves either
+//! the old segments or the complete new one, never a mix.
+
+pub mod segment;
+pub mod session_store;
+
+pub use session_store::SessionStore;
+
+use std::path::PathBuf;
+
+/// Mount configuration for the durable tier, carried from the CLI
+/// (`ccn serve --store-dir DIR --resident-cap K`) into the shard pool.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Root directory; shard `k` stores under `<dir>/shard-<k>/`.
+    pub dir: PathBuf,
+    /// Resident sessions each shard keeps in memory before evicting its
+    /// least-recently-used to disk. `0` means unlimited (the store still
+    /// serves explicit `park` ops and shutdown flushes).
+    pub resident_cap: usize,
+}
+
+impl StoreConfig {
+    pub fn new(dir: impl Into<PathBuf>, resident_cap: usize) -> StoreConfig {
+        StoreConfig {
+            dir: dir.into(),
+            resident_cap,
+        }
+    }
+
+    /// The per-shard store directory.
+    pub fn shard_dir(&self, shard: usize) -> PathBuf {
+        self.dir.join(format!("shard-{shard}"))
+    }
+}

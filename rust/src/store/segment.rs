@@ -1,0 +1,260 @@
+//! Segment-file format for the durable session store.
+//!
+//! A segment is a plain append-only file of newline-delimited JSON
+//! records, named `seg-<generation>.log` (zero-padded so lexical order is
+//! generation order). Two record shapes exist:
+//!
+//! ```json
+//! {"id":7,"op":"park","state":{"v":2,"kind":"tbptt",...}}
+//! {"id":7,"op":"del"}
+//! ```
+//!
+//! `state` is the serve layer's versioned snapshot envelope, carried
+//! opaquely — the store never interprets net internals, which is what
+//! makes the tier kind-agnostic. [`Json::dump`] never emits raw
+//! newlines (control characters are escaped), so one record is always
+//! exactly one line and a byte offset + length addresses it uniquely.
+//!
+//! Crash model: appends can tear, so only the *final* line of a segment
+//! may be unparseable — [`read_segment`] reports the length of the valid
+//! prefix and the caller truncates before appending again. An invalid
+//! line anywhere else is real corruption and is reported as an error
+//! rather than silently skipped.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// `seg-0000000042.log`
+const PREFIX: &str = "seg-";
+const SUFFIX: &str = ".log";
+
+/// Path of the segment file with generation `gen` under `dir`.
+pub fn segment_path(dir: &Path, gen: u64) -> PathBuf {
+    dir.join(format!("{PREFIX}{gen:010}{SUFFIX}"))
+}
+
+/// Parse a generation number back out of a segment file name.
+pub fn parse_generation(file_name: &str) -> Option<u64> {
+    file_name
+        .strip_prefix(PREFIX)?
+        .strip_suffix(SUFFIX)?
+        .parse()
+        .ok()
+}
+
+/// One durable record: a parked snapshot or a tombstone.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    Park { id: u64, state: Json },
+    Delete { id: u64 },
+}
+
+impl Record {
+    pub fn id(&self) -> u64 {
+        match self {
+            Record::Park { id, .. } | Record::Delete { id } => *id,
+        }
+    }
+
+    /// Encode as a single line (no trailing newline).
+    pub fn encode(&self) -> String {
+        match self {
+            Record::Park { id, state } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("park".into())),
+                ("state", state.clone()),
+            ])
+            .dump(),
+            Record::Delete { id } => Json::obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("op", Json::Str("del".into())),
+            ])
+            .dump(),
+        }
+    }
+
+    pub fn decode(line: &str) -> Result<Record, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad record: {e}"))?;
+        let id = v
+            .get("id")
+            .and_then(|n| n.as_f64())
+            .ok_or("record missing numeric 'id'")? as u64;
+        match v.get("op").and_then(|o| o.as_str()) {
+            Some("park") => {
+                let state = v.get("state").ok_or("park record missing 'state'")?;
+                Ok(Record::Park {
+                    id,
+                    state: state.clone(),
+                })
+            }
+            Some("del") => Ok(Record::Delete { id }),
+            _ => Err("record missing 'op' (park|del)".into()),
+        }
+    }
+}
+
+/// Append one record to an open segment file; returns `(offset, len)` of
+/// the encoded line (len excludes the newline). The write is flushed and
+/// synced before returning — a record the store acknowledged survives a
+/// crash.
+pub fn append_record(
+    file: &mut File,
+    offset: u64,
+    rec: &Record,
+) -> Result<(u64, u64), String> {
+    let line = rec.encode();
+    file.write_all(line.as_bytes())
+        .and_then(|()| file.write_all(b"\n"))
+        .and_then(|()| file.flush())
+        .and_then(|()| file.sync_data())
+        .map_err(|e| format!("segment append: {e}"))?;
+    Ok((offset, line.len() as u64))
+}
+
+/// Replay one segment file: every decoded record with its byte offset
+/// and length, plus the length of the valid prefix (== file length unless
+/// the final line is torn).
+///
+/// `tolerate_torn_tail` should be true only for the highest-generation
+/// (active) segment — a crash mid-append can only tear the end of the
+/// file that was being written.
+pub fn read_segment(
+    path: &Path,
+    tolerate_torn_tail: bool,
+) -> Result<(Vec<(u64, u64, Record)>, u64), String> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    let mut pos: usize = 0;
+    while pos < bytes.len() {
+        let rel_end = bytes[pos..].iter().position(|&b| b == b'\n');
+        let (line_end, complete) = match rel_end {
+            Some(r) => (pos + r, true),
+            None => (bytes.len(), false),
+        };
+        let parsed = std::str::from_utf8(&bytes[pos..line_end])
+            .ok()
+            .map(Record::decode);
+        match parsed {
+            Some(Ok(rec)) if complete => {
+                out.push((pos as u64, (line_end - pos) as u64, rec));
+                pos = line_end + 1;
+            }
+            // incomplete or unparseable final data: torn append
+            _ if tolerate_torn_tail && {
+                // only torn if nothing but this chunk remains
+                !complete
+                    || bytes[line_end + 1..]
+                        .iter()
+                        .all(|&b| b == b'\n' || b == b' ')
+            } =>
+            {
+                return Ok((out, pos as u64));
+            }
+            _ => {
+                return Err(format!(
+                    "corrupt record at byte {pos} of {}",
+                    path.display()
+                ));
+            }
+        }
+    }
+    Ok((out, bytes.len() as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_file(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!(
+            "ccn-seg-{tag}-{}-{nanos}.log",
+            std::process::id()
+        ))
+    }
+
+    fn park(id: u64, mark: &str) -> Record {
+        Record::Park {
+            id,
+            state: Json::obj(vec![
+                ("v", Json::Num(2.0)),
+                ("kind", Json::Str(mark.into())),
+            ]),
+        }
+    }
+
+    #[test]
+    fn record_encode_decode_roundtrip() {
+        for rec in [park(3, "columnar"), Record::Delete { id: 9 }] {
+            let line = rec.encode();
+            assert!(!line.contains('\n'), "records must be single lines");
+            assert_eq!(Record::decode(&line).unwrap(), rec);
+        }
+        assert!(Record::decode("{}").is_err());
+        assert!(Record::decode(r#"{"id":1,"op":"park"}"#).is_err());
+        assert!(Record::decode("not json").is_err());
+    }
+
+    #[test]
+    fn segment_names_roundtrip_and_sort() {
+        let dir = PathBuf::from("/x");
+        let p = segment_path(&dir, 42);
+        let name = p.file_name().unwrap().to_str().unwrap().to_string();
+        assert_eq!(parse_generation(&name), Some(42));
+        assert_eq!(parse_generation("seg-abc.log"), None);
+        assert_eq!(parse_generation("other.log"), None);
+        // zero padding keeps lexical order == numeric order
+        let a = segment_path(&dir, 9);
+        let b = segment_path(&dir, 10);
+        assert!(a.file_name().unwrap() < b.file_name().unwrap());
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let path = tmp_file("rw");
+        let mut f = File::create(&path).unwrap();
+        let mut off = 0;
+        let recs = vec![park(1, "a"), Record::Delete { id: 1 }, park(2, "b")];
+        for r in &recs {
+            let (o, l) = append_record(&mut f, off, r).unwrap();
+            assert_eq!(o, off);
+            off = o + l + 1;
+        }
+        let (got, valid) = read_segment(&path, false).unwrap();
+        assert_eq!(valid, off);
+        assert_eq!(got.len(), 3);
+        for ((o, l, rec), want) in got.iter().zip(&recs) {
+            assert_eq!(rec, want);
+            // the (offset, len) pair must address exactly the record
+            let bytes = std::fs::read(&path).unwrap();
+            let line =
+                std::str::from_utf8(&bytes[*o as usize..(*o + *l) as usize])
+                    .unwrap();
+            assert_eq!(&Record::decode(line).unwrap(), want);
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_only_when_asked() {
+        let path = tmp_file("torn");
+        let mut f = File::create(&path).unwrap();
+        let (o, l) = append_record(&mut f, 0, &park(5, "x")).unwrap();
+        let good_len = o + l + 1;
+        // simulate a torn append: half a record, no newline
+        f.write_all(b"{\"id\":6,\"op\":\"pa").unwrap();
+        f.flush().unwrap();
+        let (recs, valid) = read_segment(&path, true).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(valid, good_len, "valid prefix ends after the good record");
+        assert!(read_segment(&path, false).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,604 @@
+//! The durable session store: an append-compact log of parked session
+//! snapshots with an in-memory index.
+//!
+//! One store owns one directory (the serve layer gives each shard its
+//! own, so stores are single-writer by construction). State lives in
+//! numbered segment files ([`super::segment`]); the index maps session id
+//! to the `(generation, offset, len)` of its newest `park` record, plus
+//! the envelope's `kind` tag so stats never have to touch disk.
+//!
+//! Write path: `park`/`delete` append one synced record to the active
+//! segment. Overwritten and deleted records become dead bytes; when dead
+//! bytes exceed both a floor and the live volume, [`SessionStore`]
+//! compacts — all live records are copied byte-for-byte into a fresh
+//! segment written to a temp file, synced, and atomically renamed into
+//! place before the old segments are unlinked. A crash at any point
+//! leaves either the old segments or the complete new one.
+//!
+//! Read path: `load` seeks straight to the indexed record; `scan` is the
+//! boot-time replay that rebuilds the index (tolerating a torn final
+//! append, the only kind of damage a crash can inflict).
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::segment::{
+    append_record, parse_generation, read_segment, segment_path, Record,
+};
+
+/// Where the newest record for a session id lives.
+#[derive(Clone, Debug)]
+struct IndexEntry {
+    gen: u64,
+    offset: u64,
+    len: u64,
+    /// the envelope's `kind` tag, cached for stats / boot validation
+    kind: String,
+}
+
+/// Durable, crash-recoverable store of parked session envelopes.
+pub struct SessionStore {
+    dir: PathBuf,
+    index: HashMap<u64, IndexEntry>,
+    active_gen: u64,
+    active: File,
+    active_len: u64,
+    /// bytes of indexed (live) records
+    live_bytes: u64,
+    /// bytes of superseded records and tombstones across all segments
+    dead_bytes: u64,
+    /// seal the active segment when it grows past this
+    pub roll_bytes: u64,
+    /// compact when dead bytes exceed max(this, live bytes)
+    pub compact_min_dead: u64,
+}
+
+impl SessionStore {
+    /// Open (or create) the store rooted at `dir`, replaying every
+    /// segment to rebuild the index. A torn final append is truncated
+    /// away; any other damage is an error.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SessionStore, String> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("store: create {}: {e}", dir.display()))?;
+        // Single-writer guard (best effort in a zero-dep build): a pid
+        // lock file. A live foreign pid refuses the mount — two writers
+        // would unlink each other's segments under compaction; a stale
+        // pid (crashed predecessor) is taken over silently, so crash
+        // recovery never needs manual lock removal.
+        let lock_path = dir.join("LOCK");
+        if let Ok(prev) = std::fs::read_to_string(&lock_path) {
+            if let Ok(pid) = prev.trim().parse::<u32>() {
+                if pid != std::process::id()
+                    && Path::new(&format!("/proc/{pid}")).exists()
+                {
+                    return Err(format!(
+                        "store {} is locked by live process {pid}",
+                        dir.display()
+                    ));
+                }
+            }
+        }
+        std::fs::write(&lock_path, std::process::id().to_string())
+            .map_err(|e| format!("store: write lock: {e}"))?;
+        let mut gens: Vec<u64> = Vec::new();
+        for entry in std::fs::read_dir(&dir)
+            .map_err(|e| format!("store: list {}: {e}", dir.display()))?
+        {
+            let entry = entry.map_err(|e| format!("store: list: {e}"))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".tmp") {
+                // leftover from a compaction that never committed
+                let _ = std::fs::remove_file(entry.path());
+            } else if let Some(gen) = parse_generation(&name) {
+                gens.push(gen);
+            }
+        }
+        gens.sort_unstable();
+
+        let mut index: HashMap<u64, IndexEntry> = HashMap::new();
+        let mut live_bytes = 0u64;
+        let mut dead_bytes = 0u64;
+        let mut active_len = 0u64;
+        for (i, &gen) in gens.iter().enumerate() {
+            let last = i + 1 == gens.len();
+            let path = segment_path(&dir, gen);
+            let (records, valid_len) = read_segment(&path, last)?;
+            let file_len = std::fs::metadata(&path)
+                .map_err(|e| format!("store: stat: {e}"))?
+                .len();
+            if valid_len < file_len {
+                // torn append: drop the partial record before reuse
+                OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_len(valid_len))
+                    .map_err(|e| format!("store: truncate torn tail: {e}"))?;
+            }
+            if last {
+                active_len = valid_len;
+            }
+            for (offset, len, rec) in records {
+                match rec {
+                    Record::Park { id, state } => {
+                        if let Some(old) = index.remove(&id) {
+                            live_bytes -= old.len;
+                            dead_bytes += old.len;
+                        }
+                        let kind = state
+                            .get("kind")
+                            .and_then(|k| k.as_str())
+                            .unwrap_or("?")
+                            .to_string();
+                        live_bytes += len;
+                        index.insert(
+                            id,
+                            IndexEntry {
+                                gen,
+                                offset,
+                                len,
+                                kind,
+                            },
+                        );
+                    }
+                    Record::Delete { id } => {
+                        if let Some(old) = index.remove(&id) {
+                            live_bytes -= old.len;
+                            dead_bytes += old.len;
+                        }
+                        dead_bytes += len;
+                    }
+                }
+            }
+        }
+        let active_gen = gens.last().copied().unwrap_or(1);
+        let active = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(segment_path(&dir, active_gen))
+            .map_err(|e| format!("store: open active segment: {e}"))?;
+        Ok(SessionStore {
+            dir,
+            index,
+            active_gen,
+            active,
+            active_len,
+            live_bytes,
+            dead_bytes,
+            roll_bytes: 4 << 20,
+            compact_min_dead: 64 << 10,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of parked sessions.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Parked session ids, ascending.
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.index.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// The cached envelope `kind` tag of a parked session.
+    pub fn kind_of(&self, id: u64) -> Option<&str> {
+        self.index.get(&id).map(|e| e.kind.as_str())
+    }
+
+    /// Parked session counts per envelope kind.
+    pub fn kind_counts(&self) -> BTreeMap<String, usize> {
+        let mut counts = BTreeMap::new();
+        for e in self.index.values() {
+            *counts.entry(e.kind.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// Total on-disk record volume (live + dead).
+    pub fn bytes(&self) -> u64 {
+        self.live_bytes + self.dead_bytes
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Durably park a session envelope under `id`, replacing any previous
+    /// snapshot. The envelope must be an object carrying the versioned
+    /// `"v"`/`"kind"` tags (the store stays agnostic to everything else).
+    pub fn park(&mut self, id: u64, state: &Json) -> Result<(), String> {
+        if state.get("v").and_then(|v| v.as_f64()).is_none() {
+            return Err("store: envelope missing version tag 'v'".into());
+        }
+        let kind = state
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or("store: envelope missing 'kind' tag")?
+            .to_string();
+        self.maybe_roll()?;
+        let rec = Record::Park {
+            id,
+            state: state.clone(),
+        };
+        let (offset, len) = append_record(&mut self.active, self.active_len, &rec)?;
+        self.active_len = offset + len + 1;
+        if let Some(old) = self.index.remove(&id) {
+            self.live_bytes -= old.len;
+            self.dead_bytes += old.len;
+        }
+        self.live_bytes += len;
+        self.index.insert(
+            id,
+            IndexEntry {
+                gen: self.active_gen,
+                offset,
+                len,
+                kind,
+            },
+        );
+        self.maybe_compact()
+    }
+
+    /// Load the parked envelope for `id` straight from its segment.
+    pub fn load(&self, id: u64) -> Result<Json, String> {
+        let entry = self
+            .index
+            .get(&id)
+            .ok_or_else(|| format!("store: no parked session {id}"))?;
+        let path = segment_path(&self.dir, entry.gen);
+        let mut f = File::open(&path)
+            .map_err(|e| format!("store: open {}: {e}", path.display()))?;
+        f.seek(SeekFrom::Start(entry.offset))
+            .map_err(|e| format!("store: seek: {e}"))?;
+        let mut buf = vec![0u8; entry.len as usize];
+        f.read_exact(&mut buf)
+            .map_err(|e| format!("store: read record: {e}"))?;
+        let line = std::str::from_utf8(&buf)
+            .map_err(|_| "store: record is not utf-8".to_string())?;
+        match Record::decode(line)? {
+            Record::Park { id: got, state } if got == id => Ok(state),
+            _ => Err(format!("store: index points at a foreign record for {id}")),
+        }
+    }
+
+    /// Remove a parked session (appends a tombstone). Returns whether the
+    /// id was present. The tombstone hits disk *before* the index
+    /// forgets the id — a failed append leaves memory and disk agreeing
+    /// that the session still exists, instead of a phantom delete that
+    /// resurrects on the next boot.
+    pub fn delete(&mut self, id: u64) -> Result<bool, String> {
+        let Some(old_len) = self.index.get(&id).map(|e| e.len) else {
+            return Ok(false);
+        };
+        self.maybe_roll()?;
+        let (offset, len) =
+            append_record(&mut self.active, self.active_len, &Record::Delete { id })?;
+        self.active_len = offset + len + 1;
+        self.index.remove(&id);
+        self.live_bytes -= old_len;
+        self.dead_bytes += old_len + len;
+        self.maybe_compact()?;
+        Ok(true)
+    }
+
+    /// Every parked `(id, envelope)`, ascending by id — the boot-time
+    /// resume path and the migration path both drive this.
+    pub fn scan(&self) -> Result<Vec<(u64, Json)>, String> {
+        self.ids()
+            .into_iter()
+            .map(|id| Ok((id, self.load(id)?)))
+            .collect()
+    }
+
+    /// Seal the active segment and start a new one when it is large.
+    fn maybe_roll(&mut self) -> Result<(), String> {
+        if self.active_len < self.roll_bytes {
+            return Ok(());
+        }
+        self.active_gen += 1;
+        self.active = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(segment_path(&self.dir, self.active_gen))
+            .map_err(|e| format!("store: roll segment: {e}"))?;
+        self.active_len = 0;
+        Ok(())
+    }
+
+    /// Copy all live records into one fresh segment (write temp file,
+    /// sync, rename) and unlink the old segments.
+    fn maybe_compact(&mut self) -> Result<(), String> {
+        if self.dead_bytes < self.compact_min_dead.max(self.live_bytes) {
+            return Ok(());
+        }
+        use std::io::Write as _;
+        let compact_gen = self.active_gen + 1;
+        let tmp_path = self.dir.join("compact.tmp");
+        let mut tmp = File::create(&tmp_path)
+            .map_err(|e| format!("store: create compact.tmp: {e}"))?;
+        // copy record lines byte-for-byte, grouped by source segment so
+        // each old file is read once
+        let mut by_gen: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for (&id, e) in &self.index {
+            by_gen.entry(e.gen).or_default().push(id);
+        }
+        let mut new_index: HashMap<u64, IndexEntry> = HashMap::new();
+        let mut offset = 0u64;
+        for (gen, mut ids) in by_gen {
+            ids.sort_unstable();
+            let path = segment_path(&self.dir, gen);
+            let mut src = File::open(&path)
+                .map_err(|e| format!("store: open {}: {e}", path.display()))?;
+            for id in ids {
+                let entry = &self.index[&id];
+                src.seek(SeekFrom::Start(entry.offset))
+                    .map_err(|e| format!("store: seek: {e}"))?;
+                let mut buf = vec![0u8; entry.len as usize];
+                src.read_exact(&mut buf)
+                    .map_err(|e| format!("store: read record: {e}"))?;
+                tmp.write_all(&buf)
+                    .and_then(|()| tmp.write_all(b"\n"))
+                    .map_err(|e| format!("store: compact write: {e}"))?;
+                new_index.insert(
+                    id,
+                    IndexEntry {
+                        gen: compact_gen,
+                        offset,
+                        len: entry.len,
+                        kind: entry.kind.clone(),
+                    },
+                );
+                offset += entry.len + 1;
+            }
+        }
+        tmp.sync_all()
+            .map_err(|e| format!("store: compact sync: {e}"))?;
+        drop(tmp);
+        let compact_path = segment_path(&self.dir, compact_gen);
+        std::fs::rename(&tmp_path, &compact_path)
+            .map_err(|e| format!("store: commit compaction: {e}"))?;
+        // make the rename itself durable (best effort: not all platforms
+        // allow fsync on a directory handle)
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        // the compacted segment is sealed; appends continue in a fresh one
+        let old_last = self.active_gen;
+        self.active_gen = compact_gen + 1;
+        self.active = OpenOptions::new()
+            .create_new(true)
+            .append(true)
+            .open(segment_path(&self.dir, self.active_gen))
+            .map_err(|e| format!("store: post-compact segment: {e}"))?;
+        self.active_len = 0;
+        for gen in (0..=old_last).rev() {
+            let _ = std::fs::remove_file(segment_path(&self.dir, gen));
+        }
+        self.index = new_index;
+        self.dead_bytes = 0;
+        // live_bytes is unchanged: the same records, new home
+        Ok(())
+    }
+}
+
+impl Drop for SessionStore {
+    fn drop(&mut self) {
+        // release the pid lock on clean teardown; a crash leaves it
+        // behind and the stale-pid check in `open` takes over
+        let lock_path = self.dir.join("LOCK");
+        if let Ok(prev) = std::fs::read_to_string(&lock_path) {
+            if prev.trim() == std::process::id().to_string() {
+                let _ = std::fs::remove_file(&lock_path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!(
+            "ccn-store-{tag}-{}-{nanos}",
+            std::process::id()
+        ))
+    }
+
+    fn envelope(kind: &str, mark: f64) -> Json {
+        Json::obj(vec![
+            ("v", Json::Num(2.0)),
+            ("kind", Json::Str(kind.into())),
+            ("net", Json::obj(vec![("mark", Json::Num(mark))])),
+        ])
+    }
+
+    #[test]
+    fn park_load_delete_scan_roundtrip() {
+        let dir = fresh_dir("crud");
+        let mut s = SessionStore::open(&dir).unwrap();
+        assert!(s.is_empty());
+        s.park(1, &envelope("columnar", 1.0)).unwrap();
+        s.park(2, &envelope("tbptt", 2.0)).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(1) && s.contains(2) && !s.contains(3));
+        assert_eq!(s.load(1).unwrap(), envelope("columnar", 1.0));
+        assert_eq!(s.kind_of(2), Some("tbptt"));
+        // overwrite keeps the newest
+        s.park(1, &envelope("columnar", 9.0)).unwrap();
+        assert_eq!(s.load(1).unwrap(), envelope("columnar", 9.0));
+        assert_eq!(s.len(), 2);
+        // scan returns everything in id order
+        let all = s.scan().unwrap();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, 1);
+        assert_eq!(all[1].1, envelope("tbptt", 2.0));
+        // delete
+        assert!(s.delete(1).unwrap());
+        assert!(!s.delete(1).unwrap(), "double delete is a no-op");
+        assert!(s.load(1).is_err());
+        assert_eq!(s.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn park_rejects_untagged_envelopes() {
+        let dir = fresh_dir("tags");
+        let mut s = SessionStore::open(&dir).unwrap();
+        let no_kind = Json::obj(vec![("v", Json::Num(2.0))]);
+        assert!(s.park(1, &no_kind).is_err());
+        let no_v = Json::obj(vec![("kind", Json::Str("ccn".into()))]);
+        assert!(s.park(1, &no_v).is_err());
+        assert!(s.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_recovers_index_and_bytes() {
+        let dir = fresh_dir("reopen");
+        {
+            let mut s = SessionStore::open(&dir).unwrap();
+            for id in 1..=5 {
+                s.park(id, &envelope("snap1", id as f64)).unwrap();
+            }
+            s.delete(3).unwrap();
+            s.park(2, &envelope("snap1", 22.0)).unwrap();
+        } // dropped without any shutdown hook: durability is per-append
+        let s = SessionStore::open(&dir).unwrap();
+        assert_eq!(s.ids(), vec![1, 2, 4, 5]);
+        assert_eq!(s.load(2).unwrap(), envelope("snap1", 22.0));
+        assert_eq!(s.load(4).unwrap(), envelope("snap1", 4.0));
+        assert_eq!(s.kind_counts().get("snap1"), Some(&4));
+        assert!(s.bytes() > s.live_bytes());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open() {
+        let dir = fresh_dir("torn");
+        {
+            let mut s = SessionStore::open(&dir).unwrap();
+            s.park(1, &envelope("ccn", 1.0)).unwrap();
+        }
+        // simulate a crash mid-append: garbage half-record at the tail
+        let seg = segment_path(&dir, 1);
+        let mut f = OpenOptions::new().append(true).open(&seg).unwrap();
+        use std::io::Write as _;
+        f.write_all(b"{\"id\":2,\"op\":\"park\",\"state\":{\"v\"").unwrap();
+        drop(f);
+        let mut s = SessionStore::open(&dir).unwrap();
+        assert_eq!(s.ids(), vec![1], "torn record must not surface");
+        // the truncated segment accepts appends again, at a valid offset
+        s.park(2, &envelope("ccn", 2.0)).unwrap();
+        assert_eq!(s.load(2).unwrap(), envelope("ccn", 2.0));
+        drop(s);
+        let s = SessionStore::open(&dir).unwrap();
+        assert_eq!(s.ids(), vec![1, 2]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compaction_drops_dead_bytes_and_preserves_live_state() {
+        let dir = fresh_dir("compact");
+        let mut s = SessionStore::open(&dir).unwrap();
+        s.roll_bytes = 512; // force rolling across several segments
+        s.compact_min_dead = 256;
+        for round in 0..20 {
+            for id in 1..=4u64 {
+                s.park(id, &envelope("columnar", (round * 10 + id as usize) as f64))
+                    .unwrap();
+            }
+        }
+        // overwrites dominate: compaction must have fired at least once
+        assert!(
+            s.dead_bytes < s.live_bytes + s.compact_min_dead,
+            "dead bytes stay bounded: dead={} live={}",
+            s.dead_bytes,
+            s.live_bytes
+        );
+        for id in 1..=4u64 {
+            assert_eq!(
+                s.load(id).unwrap(),
+                envelope("columnar", (190 + id as usize) as f64),
+                "newest snapshot survives compaction"
+            );
+        }
+        // no stale segments or temp files left behind
+        let files: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(files.iter().all(|f| !f.ends_with(".tmp")));
+        // reopen agrees byte for byte
+        let ids_before = s.ids();
+        drop(s);
+        let s = SessionStore::open(&dir).unwrap();
+        assert_eq!(s.ids(), ids_before);
+        for id in 1..=4u64 {
+            assert_eq!(
+                s.load(id).unwrap(),
+                envelope("columnar", (190 + id as usize) as f64)
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn second_writer_is_refused_while_lock_is_live() {
+        let dir = fresh_dir("lock");
+        let s = SessionStore::open(&dir).unwrap();
+        drop(s);
+        assert!(!dir.join("LOCK").exists(), "clean drop releases the lock");
+        // a live foreign pid refuses the mount (pid 1 always exists)
+        std::fs::write(dir.join("LOCK"), "1").unwrap();
+        let err = SessionStore::open(&dir).unwrap_err();
+        assert!(err.contains("locked by live process 1"), "{err}");
+        // a stale pid (crashed predecessor) is taken over silently
+        std::fs::write(dir.join("LOCK"), "999999999").unwrap();
+        let s = SessionStore::open(&dir).unwrap();
+        assert!(s.is_empty());
+        drop(s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn interrupted_compaction_leaves_a_consistent_store() {
+        let dir = fresh_dir("tmpclean");
+        {
+            let mut s = SessionStore::open(&dir).unwrap();
+            s.park(7, &envelope("tbptt", 7.0)).unwrap();
+        }
+        // a compaction that died before the rename leaves only a .tmp
+        std::fs::write(dir.join("compact.tmp"), b"half-written garbage").unwrap();
+        let s = SessionStore::open(&dir).unwrap();
+        assert_eq!(s.ids(), vec![7]);
+        assert!(
+            !dir.join("compact.tmp").exists(),
+            "stale temp files are cleaned up"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

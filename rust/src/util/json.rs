@@ -290,6 +290,16 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))
     }
 
+    /// Four hex digits starting at byte `start` (used by \u escapes).
+    fn hex4(&self, start: usize) -> Result<u32, JsonError> {
+        if start + 4 > self.bytes.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[start..start + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -312,16 +322,46 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{0008}'),
                         Some(b'f') => out.push('\u{000C}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.bytes.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                            // self.pos is at 'u'; 4 hex digits follow
+                            let code = self.hex4(self.pos + 1)?;
                             self.pos += 4;
+                            if (0xD800..=0xDBFF).contains(&code) {
+                                // high surrogate: standard encoders write
+                                // non-BMP characters as \uD8xx\uDCxx
+                                // pairs — consume the low half and
+                                // combine, instead of mangling both into
+                                // replacement characters.
+                                if self.bytes.get(self.pos + 1) != Some(&b'\\')
+                                    || self.bytes.get(self.pos + 2) != Some(&b'u')
+                                {
+                                    return Err(self.err(
+                                        "unpaired surrogate in \\u escape",
+                                    ));
+                                }
+                                let lo = self.hex4(self.pos + 3)?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err(self.err(
+                                        "unpaired surrogate in \\u escape",
+                                    ));
+                                }
+                                let combined = 0x10000
+                                    + ((code - 0xD800) << 10)
+                                    + (lo - 0xDC00);
+                                out.push(
+                                    char::from_u32(combined)
+                                        .expect("combined surrogates are valid"),
+                                );
+                                self.pos += 6; // the \uXXXX of the low half
+                            } else if (0xDC00..=0xDFFF).contains(&code) {
+                                return Err(
+                                    self.err("unpaired surrogate in \\u escape")
+                                );
+                            } else {
+                                out.push(
+                                    char::from_u32(code)
+                                        .expect("non-surrogate BMP scalar"),
+                                );
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -445,6 +485,89 @@ mod tests {
         assert_eq!(v.as_str(), Some("Aπ"));
         let round = Json::parse(&v.dump()).unwrap();
         assert_eq!(v, round);
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_to_one_scalar() {
+        // the shape every ensure_ascii encoder writes for non-BMP chars
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+        // first and last scalars of the supplementary planes
+        assert_eq!(
+            Json::parse("\"\\ud800\\udc00\"").unwrap().as_str(),
+            Some("\u{10000}")
+        );
+        assert_eq!(
+            Json::parse("\"\\udbff\\udfff\"").unwrap().as_str(),
+            Some("\u{10FFFF}")
+        );
+        // mixed with raw text and uppercase hex
+        assert_eq!(
+            Json::parse("\"a\\uD83D\\uDE00b\"").unwrap().as_str(),
+            Some("a😀b")
+        );
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected_not_mangled() {
+        // pre-fix these silently decoded to replacement characters,
+        // making parse(write(s)) != s for externally produced files
+        for bad in [
+            "\"\\ud800\"",        // lone high at end
+            "\"\\ud800x\"",       // high followed by raw char
+            "\"\\ud800\\u0041\"", // high followed by non-surrogate escape
+            "\"\\udc00\"",        // lone low
+            "\"\\ude00\\ud83d\"", // reversed pair
+            "\"\\u12\"",          // truncated escape
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn prop_adversarial_strings_roundtrip() {
+        use crate::util::check::check;
+        // pools chosen to hit every escaping path: controls the writer
+        // must \u-encode, the named escapes, the quote/backslash pair,
+        // BMP text, and non-BMP scalars the parser must reassemble
+        const POOL: &[char] = &[
+            '\u{0000}', '\u{0001}', '\u{0008}', '\u{000C}', '\u{001F}',
+            '\n', '\r', '\t', '"', '\\', '/', ' ', 'a', 'Z', '0',
+            'π', 'ß', '\u{2028}', '\u{FFFD}', '\u{FFFF}',
+            '😀', '\u{10000}', '\u{10FFFF}', '𝕊',
+        ];
+        check("json adversarial string roundtrip", 60, |g| {
+            let len = g.sized_usize(0, 40);
+            let s: String = (0..len)
+                .map(|_| POOL[g.usize_in(0, POOL.len() - 1)])
+                .collect();
+            // exercise strings as values, as object keys, and nested
+            let v = Json::obj(vec![
+                ("s", Json::Str(s.clone())),
+                (
+                    "nested",
+                    Json::Arr(vec![Json::Str(s.clone()), Json::Num(1.5)]),
+                ),
+            ]);
+            let v = match v {
+                Json::Obj(mut o) => {
+                    o.insert(s.clone(), Json::Bool(true));
+                    Json::Obj(o)
+                }
+                _ => unreachable!(),
+            };
+            let compact = Json::parse(&v.dump())
+                .map_err(|e| format!("compact reparse: {e} (s = {s:?})"))?;
+            if compact != v {
+                return Err(format!("compact roundtrip mutated {s:?}"));
+            }
+            let pretty = Json::parse(&v.pretty())
+                .map_err(|e| format!("pretty reparse: {e} (s = {s:?})"))?;
+            if pretty != v {
+                return Err(format!("pretty roundtrip mutated {s:?}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! End-to-end tests of the durable session tier (`store` + serve
+//! integration) over the JSONL wire protocol.
+//!
+//! The acceptance path: with `resident-cap = K`, opening 4x more
+//! mixed-kind sessions than capacity and stepping them round-robin
+//! produces predictions **bit-identical** to an unconstrained run (every
+//! step churns sessions through evict -> park -> rehydrate), and a
+//! kill/restart against the same store directory resumes every parked
+//! session with no data loss.
+
+use ccn_rtrl::serve::Service;
+use ccn_rtrl::store::StoreConfig;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn ok(reply: &str) -> Json {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(true)),
+        "expected ok response, got: {reply}"
+    );
+    v
+}
+
+fn err(reply: &str) -> String {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(false)),
+        "expected error response, got: {reply}"
+    );
+    v.get("error").and_then(|e| e.as_str()).unwrap().to_string()
+}
+
+fn step_line(id: u64, x: &[f32], c: f32) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}],"c":{c}}}"#, xs.join(","))
+}
+
+fn step_y(service: &Service, id: u64, x: &[f32], c: f32) -> f64 {
+    ok(&service.handle_line(&step_line(id, x, c)))
+        .get("y")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+}
+
+fn open_id(service: &Service, spec: &str, seed: u64) -> u64 {
+    let line = format!(
+        r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":{seed}}}"#
+    );
+    ok(&service.handle_line(&line)).get("id").unwrap().as_f64().unwrap() as u64
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.get(key).unwrap().as_f64().unwrap()
+}
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    std::env::temp_dir().join(format!(
+        "ccn-store-e2e-{tag}-{}-{nanos}",
+        std::process::id()
+    ))
+}
+
+/// All five registered kinds, cycled across the session population.
+const KINDS: [&str; 5] = [
+    "columnar:4",
+    "constructive:4:60",
+    "ccn:6:2:60",
+    "tbptt:3:8",
+    "snap1:3",
+];
+
+/// The ISSUE acceptance test: cap K per shard, 4x oversubscription,
+/// mixed kinds, round-robin stepping — bit-identical to an unconstrained
+/// twin — then a kill (drop without close) with everything parked and a
+/// restart against the same store dir that loses nothing.
+#[test]
+fn churn_is_bit_identical_to_unconstrained_and_survives_restart() {
+    let dir = fresh_dir("churn");
+    let shards = 2;
+    let cap = 2; // resident capacity 4 total; 16 sessions = 4x
+    let n_sessions = 16u64;
+    let constrained =
+        Service::with_store(shards, Some(StoreConfig::new(&dir, cap))).unwrap();
+    let unconstrained = Service::new(shards);
+
+    let mut ids = Vec::new();
+    for s in 0..n_sessions {
+        let spec = KINDS[s as usize % KINDS.len()];
+        let a = open_id(&constrained, spec, s);
+        let b = open_id(&unconstrained, spec, s);
+        assert_eq!(a, b, "both services must allocate identical ids");
+        ids.push(a);
+    }
+
+    let mut rng = Xoshiro256::seed_from_u64(0x570e);
+    let mut drive = |constrained: &Service, ticks: usize| {
+        for _ in 0..ticks {
+            for &id in &ids {
+                let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let c = rng.uniform(-0.5, 0.5);
+                let ya = step_y(constrained, id, &x, c);
+                let yb = step_y(&unconstrained, id, &x, c);
+                assert_eq!(
+                    ya, yb,
+                    "constrained run diverged from unconstrained (id {id})"
+                );
+            }
+        }
+    };
+    // phase 1: heavy churn (every step evicts someone and rehydrates the
+    // target), across constructive/ccn stage boundaries at step 60
+    drive(&constrained, 40);
+    let stats = ok(&constrained.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(num(&stats, "sessions") as u64, n_sessions);
+    assert_eq!(num(&stats, "resident") as u64, shards as u64 * cap as u64);
+    assert_eq!(
+        num(&stats, "parked") as u64,
+        n_sessions - shards as u64 * cap as u64
+    );
+    assert!(num(&stats, "evictions") > 0.0);
+    assert!(num(&stats, "rehydrations") > 0.0);
+    assert!(num(&stats, "store_bytes") > 0.0);
+
+    // phase 2: park everything, then kill (drop without close)
+    for &id in &ids {
+        ok(&constrained.handle_line(&format!(r#"{{"op":"park","id":{id}}}"#)));
+    }
+    drop(constrained);
+
+    // phase 3: restart against the same store dir — every session
+    // resumes with its exact state
+    let constrained =
+        Service::with_store(shards, Some(StoreConfig::new(&dir, cap))).unwrap();
+    let stats = ok(&constrained.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(num(&stats, "sessions") as u64, n_sessions, "no data loss");
+    assert_eq!(num(&stats, "resident"), 0.0);
+    assert_eq!(num(&stats, "parked") as u64, n_sessions);
+    let kinds = stats.get("kinds").unwrap();
+    for kind in ["columnar", "tbptt", "snap1"] {
+        assert!(
+            kinds.get(kind).and_then(|n| n.as_f64()).unwrap_or(0.0) > 0.0,
+            "restart must report parked kind {kind}"
+        );
+    }
+    drive(&constrained, 25);
+
+    // closing a session reports the full step count across both lives
+    let reply =
+        ok(&constrained.handle_line(&format!(r#"{{"op":"close","id":{}}}"#, ids[0])));
+    assert_eq!(num(&reply, "steps") as u64, 65);
+    let msg = err(&constrained.handle_line(&step_line(ids[0], &[0.0; 3], 0.0)));
+    assert!(msg.contains("no session"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite: evict -> rehydrate is bit-exact for each of the five kinds
+/// individually — step N, force eviction via the wire `park` op, step M
+/// more against a never-evicted twin, step for step.
+#[test]
+fn evict_rehydrate_is_bit_exact_for_every_kind() {
+    let dir = fresh_dir("kinds");
+    let service =
+        Service::with_store(1, Some(StoreConfig::new(&dir, 0))).unwrap();
+    let twin = Service::new(1);
+    for (k, spec) in KINDS.iter().enumerate() {
+        let id_a = open_id(&service, spec, 100 + k as u64);
+        let id_b = open_id(&twin, spec, 100 + k as u64);
+        let mut rng = Xoshiro256::seed_from_u64(k as u64 ^ 0xeeee);
+        // step N: past the first constructive/ccn stage boundary
+        for _ in 0..80 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            assert_eq!(
+                step_y(&service, id_a, &x, c),
+                step_y(&twin, id_b, &x, c),
+                "{spec} diverged before eviction"
+            );
+        }
+        // force eviction; the next step transparently rehydrates
+        let parked =
+            ok(&service.handle_line(&format!(r#"{{"op":"park","id":{id_a}}}"#)));
+        assert_eq!(parked.get("parked"), Some(&Json::Bool(true)));
+        // a snapshot of a parked session comes straight from the store
+        let snap =
+            ok(&service.handle_line(&format!(r#"{{"op":"snapshot","id":{id_a}}}"#)));
+        assert_eq!(
+            snap.get("state").unwrap().get("v"),
+            Some(&Json::Num(2.0)),
+            "{spec}: parked snapshot must be the v2 envelope"
+        );
+        // step M: crosses the *next* stage boundary for growing kinds
+        for t in 0..100 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            assert_eq!(
+                step_y(&service, id_a, &x, c),
+                step_y(&twin, id_b, &x, c),
+                "{spec} diverged at step {t} after rehydration"
+            );
+        }
+        // explicit warm on an already-resident session is a no-op
+        let warm =
+            ok(&service.handle_line(&format!(r#"{{"op":"warm","id":{id_a}}}"#)));
+        assert_eq!(warm.get("rehydrated"), Some(&Json::Bool(false)));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Kill semantics: sessions that were only resident (never parked) die
+/// with the process; parked sessions survive. The restarted service
+/// reports exactly the parked population.
+#[test]
+fn kill_preserves_parked_sessions_only() {
+    let dir = fresh_dir("kill");
+    let cfg = StoreConfig::new(&dir, 0);
+    let (id_parked, id_lost);
+    {
+        let service = Service::with_store(1, Some(cfg.clone())).unwrap();
+        id_parked = open_id(&service, "columnar:4", 1);
+        id_lost = open_id(&service, "tbptt:3:8", 2);
+        for id in [id_parked, id_lost] {
+            for _ in 0..10 {
+                step_y(&service, id, &[0.1, -0.2, 0.3], 0.1);
+            }
+        }
+        ok(&service.handle_line(&format!(r#"{{"op":"park","id":{id_parked}}}"#)));
+        // dropped without close(): the crash path
+    }
+    let service = Service::with_store(1, Some(cfg)).unwrap();
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(num(&stats, "sessions"), 1.0);
+    let y = step_y(&service, id_parked, &[0.1, -0.2, 0.3], 0.1);
+    assert!(y.is_finite());
+    let msg = err(&service.handle_line(&step_line(id_lost, &[0.0; 3], 0.0)));
+    assert!(msg.contains("no session"), "{msg}");
+    // new ids never collide with surviving (parked) sessions — the id
+    // watermark restarts above the highest parked id; ids of sessions
+    // that died with the process are free for reuse
+    let fresh = open_id(&service, "snap1:3", 9);
+    assert!(fresh > id_parked, "fresh id {fresh} collides with survivor");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Graceful shutdown flushes resident sessions without an explicit park;
+/// the restarted service continues them bit-identically.
+#[test]
+fn graceful_close_flushes_everything() {
+    let dir = fresh_dir("grace");
+    let cfg = StoreConfig::new(&dir, 0);
+    let twin = Service::new(2);
+    let mut service = Service::with_store(2, Some(cfg.clone())).unwrap();
+    let mut ids = Vec::new();
+    let mut rng = Xoshiro256::seed_from_u64(0xace);
+    for s in 0..6u64 {
+        let spec = KINDS[s as usize % KINDS.len()];
+        let a = open_id(&service, spec, s);
+        assert_eq!(a, open_id(&twin, spec, s));
+        ids.push(a);
+    }
+    for _ in 0..30 {
+        for &id in &ids {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            assert_eq!(step_y(&service, id, &x, c), step_y(&twin, id, &x, c));
+        }
+    }
+    assert_eq!(
+        service.close().unwrap(),
+        6,
+        "close must flush every resident session"
+    );
+    drop(service);
+    let service = Service::with_store(2, Some(cfg)).unwrap();
+    for _ in 0..20 {
+        for &id in &ids {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            assert_eq!(
+                step_y(&service, id, &x, c),
+                step_y(&twin, id, &x, c),
+                "flushed session {id} diverged after restart"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Store ops degrade cleanly without a mounted store, and park/warm
+/// report missing sessions with useful errors when one is mounted.
+#[test]
+fn store_ops_error_cleanly() {
+    let storeless = Service::new(1);
+    let id = open_id(&storeless, "columnar:4", 0);
+    let msg = err(&storeless.handle_line(&format!(r#"{{"op":"park","id":{id}}}"#)));
+    assert!(msg.contains("store"), "{msg}");
+    // the session is untouched by the failed park
+    assert!(step_y(&storeless, id, &[0.0; 3], 0.0).is_finite());
+    let stats = ok(&storeless.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(num(&stats, "parked"), 0.0);
+    assert_eq!(num(&stats, "store_bytes"), 0.0);
+
+    let dir = fresh_dir("errs");
+    let service =
+        Service::with_store(1, Some(StoreConfig::new(&dir, 0))).unwrap();
+    let msg = err(&service.handle_line(r#"{"op":"park","id":404}"#));
+    assert!(msg.contains("no session"), "{msg}");
+    let msg = err(&service.handle_line(r#"{"op":"warm","id":404}"#));
+    assert!(msg.contains("no session"), "{msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
