@@ -1,0 +1,223 @@
+//! §Transport throughput bench: M concurrent TCP clients drive a live
+//! listener, each owning a cohort of mixed-kind sessions stepped
+//! round-robin through real sockets — the full ingress path (socket ->
+//! reader thread -> shard mpsc -> SoA/scalar step -> writer thread ->
+//! socket).
+//!
+//! Reports aggregate steps/s over the wire, per-net-kind steps/s and
+//! p50/p99 single-step round-trip latency, and the refusal/connection
+//! counters, and writes the record to `results/BENCH_transport.json`
+//! (override with CCN_TRANSPORT_OUT) so the perf trajectory is
+//! machine-comparable across commits.
+//!
+//! Scale knobs (env vars):
+//!   CCN_TRANSPORT_CLIENTS   concurrent client threads  (default 8)
+//!   CCN_TRANSPORT_SESSIONS  sessions per client        (default 4)
+//!   CCN_TRANSPORT_TICKS     steps per session          (default 200)
+//!   CCN_TRANSPORT_SHARDS    worker shards              (default 4)
+//!   CCN_TRANSPORT_INPUTS    observation width          (default 8)
+//!   CCN_TRANSPORT_OUT      result file (default results/BENCH_transport.json)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+const KINDS: [&str; 4] = ["columnar:8", "ccn:8:2:100000", "tbptt:4:10", "snap1:4"];
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(local: &str) -> Client {
+        let hostport = local.strip_prefix("tcp://").expect("tcp addr");
+        let stream = TcpStream::connect(hostport).expect("connect");
+        stream.set_nodelay(true).expect("nodelay");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("recv");
+        let v = Json::parse(reply.trim()).expect("reply json");
+        assert_eq!(
+            v.get("ok"),
+            Some(&Json::Bool(true)),
+            "request failed: {line} -> {reply}"
+        );
+        v
+    }
+}
+
+/// Per-kind latency samples (us) one client collected.
+type KindSamples = Vec<(&'static str, Vec<f64>)>;
+
+fn main() {
+    let clients = env_usize("CCN_TRANSPORT_CLIENTS", 8);
+    let sessions = env_usize("CCN_TRANSPORT_SESSIONS", 4);
+    let ticks = env_usize("CCN_TRANSPORT_TICKS", 200);
+    let shards = env_usize("CCN_TRANSPORT_SHARDS", 4);
+    let n = env_usize("CCN_TRANSPORT_INPUTS", 8);
+    let out_path = std::env::var("CCN_TRANSPORT_OUT")
+        .unwrap_or_else(|_| "results/BENCH_transport.json".into());
+
+    let server = Server::bind(
+        Service::new(shards),
+        &ListenAddr::parse("tcp://127.0.0.1:0").expect("addr"),
+        0,
+    )
+    .expect("bind");
+    let local = server.local_addr().to_string();
+    eprintln!(
+        "[perf_transport] {clients} clients x {sessions} sessions x {ticks} \
+         ticks over {local} ({shards} shards)"
+    );
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut joins = Vec::new();
+    for k in 0..clients {
+        let local = local.clone();
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || -> (u64, KindSamples) {
+            let mut client = Client::connect(&local);
+            let specs: Vec<&'static str> = (0..sessions)
+                .map(|j| KINDS[(k * sessions + j) % KINDS.len()])
+                .collect();
+            let ids: Vec<u64> = specs
+                .iter()
+                .enumerate()
+                .map(|(j, spec)| {
+                    let line = format!(
+                        r#"{{"op":"open","learner":"{spec}","n_inputs":{n},"seed":{}}}"#,
+                        k * sessions + j
+                    );
+                    client.call(&line).get("id").unwrap().as_f64().unwrap() as u64
+                })
+                .collect();
+            let mut rng = Xoshiro256::seed_from_u64(0xbe9c + k as u64);
+            let mut samples: KindSamples =
+                KINDS.iter().map(|kind| (*kind, Vec::new())).collect();
+            barrier.wait(); // aligned start: measure true concurrency
+            let mut steps = 0u64;
+            for _ in 0..ticks {
+                for (j, &id) in ids.iter().enumerate() {
+                    let x: Vec<String> = (0..n)
+                        .map(|_| format!("{}", rng.uniform(-1.0, 1.0)))
+                        .collect();
+                    let c = rng.uniform(-0.5, 0.5);
+                    let line = format!(
+                        r#"{{"op":"step","id":{id},"x":[{}],"c":{c}}}"#,
+                        x.join(",")
+                    );
+                    let t = Instant::now();
+                    client.call(&line);
+                    let us = t.elapsed().as_secs_f64() * 1e6;
+                    steps += 1;
+                    let kind_idx = (k * sessions + j) % KINDS.len();
+                    samples[kind_idx].1.push(us);
+                }
+            }
+            barrier.wait(); // aligned stop
+            (steps, samples)
+        }));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    barrier.wait();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut total_steps = 0u64;
+    let mut by_kind: Vec<(&'static str, Vec<f64>)> =
+        KINDS.iter().map(|kind| (*kind, Vec::new())).collect();
+    for join in joins {
+        let (steps, samples) = join.join().expect("client thread");
+        total_steps += steps;
+        for (slot, (_, lat)) in by_kind.iter_mut().zip(samples) {
+            slot.1.extend(lat);
+        }
+    }
+    let steps_per_s = total_steps as f64 / elapsed;
+
+    let stats = server.service().pool().stats();
+    let served: u64 = stats.iter().map(|s| s.steps).sum();
+    assert_eq!(served, total_steps, "server must account every wire step");
+    server.shutdown().expect("shutdown");
+
+    let mut rows = Vec::new();
+    let mut kind_json = std::collections::BTreeMap::new();
+    for (kind, mut lat) in by_kind {
+        if lat.is_empty() {
+            continue;
+        }
+        let count = lat.len();
+        let p50 = percentile(&mut lat, 0.50).expect("samples");
+        let p99 = percentile(&mut lat, 0.99).expect("samples");
+        let kind_sps = count as f64 / elapsed;
+        rows.push(vec![
+            kind.to_string(),
+            count.to_string(),
+            format!("{kind_sps:.0}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+        ]);
+        kind_json.insert(
+            kind.to_string(),
+            Json::obj(vec![
+                ("steps", Json::Num(count as f64)),
+                ("steps_per_s", Json::Num(kind_sps)),
+                ("p50_us", Json::Num(p50)),
+                ("p99_us", Json::Num(p99)),
+            ]),
+        );
+    }
+    println!(
+        "{}",
+        render_table(
+            &["kind", "steps", "steps/s", "p50 us", "p99 us"],
+            &rows
+        )
+    );
+    println!(
+        "total: {total_steps} steps over {clients} connections in \
+         {elapsed:.2}s = {steps_per_s:.0} steps/s"
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("perf_transport".into())),
+        ("conns", Json::Num(clients as f64)),
+        ("sessions_per_conn", Json::Num(sessions as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("ticks", Json::Num(ticks as f64)),
+        ("inputs", Json::Num(n as f64)),
+        ("steps", Json::Num(total_steps as f64)),
+        ("steps_per_s", Json::Num(steps_per_s)),
+        ("kinds", Json::Obj(kind_json)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create results dir");
+        }
+    }
+    std::fs::write(&out_path, record.pretty()).expect("write BENCH_transport.json");
+    eprintln!("wrote {out_path}");
+}

@@ -11,7 +11,8 @@
 //! - [`serve`]: the online prediction service — thousands of concurrent
 //!   TD(lambda) sessions, stepped by sharded workers and a batched
 //!   structure-of-arrays columnar kernel, spoken to over a JSONL
-//!   protocol (`ccn serve`).
+//!   protocol on stdio or a concurrent TCP/UDS listener
+//!   (`ccn serve [--listen tcp://H:P]`).
 //! - [`store`]: the durable session tier — per-shard append-compact
 //!   segment files of snapshot envelopes, LRU eviction, lazy
 //!   rehydration and crash recovery (`--store-dir`/`--resident-cap`).

@@ -12,6 +12,7 @@
 //!   pjrt-bench   time native vs PJRT column steps (the C++-vs-framework
 //!                comparison of the paper's appendix; --features pjrt)
 
+use std::io::Read;
 use std::path::Path;
 
 use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
@@ -21,7 +22,7 @@ use ccn_rtrl::metrics::render_table;
 use ccn_rtrl::nets::NetRegistry;
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
-use ccn_rtrl::serve::Service;
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::cli::Args;
 use ccn_rtrl::util::json::Json;
@@ -125,6 +126,8 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let shards = args.usize_or("shards", sweep::default_threads());
     let store_dir = args.opt_str("store-dir");
     let resident_cap = args.usize_or("resident-cap", 0);
+    let listen = args.opt_str("listen");
+    let max_conns = args.usize_or("max-conns", 0);
     args.finish()?;
     if resident_cap > 0 && store_dir.is_none() {
         return Err(
@@ -133,11 +136,22 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
                 .into(),
         );
     }
+    if max_conns > 0 && listen.is_none() {
+        return Err(
+            "--max-conns needs --listen: the stdio loop has exactly one client"
+                .into(),
+        );
+    }
+    let listen = listen.map(|s| ListenAddr::parse(&s)).transpose()?;
     let store_cfg = store_dir.map(|dir| StoreConfig::new(dir, resident_cap));
     eprintln!(
-        "ccn serve: {shards} shard(s); JSONL requests on stdin, responses \
-         on stdout (op: open|step|step_batch|predict|snapshot|restore|park|\
-         warm|close|stats; net kinds: {})",
+        "ccn serve: {shards} shard(s); {} (op: open|step|step_batch|predict|\
+         snapshot|restore|park|warm|close|stats; net kinds: {})",
+        if listen.is_none() {
+            "JSONL requests on stdin, responses on stdout"
+        } else {
+            "JSONL over the listener below; stdin only signals shutdown"
+        },
         NetRegistry::kinds().join("|")
     );
     if let Some(cfg) = &store_cfg {
@@ -158,21 +172,69 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
         n => format!("; resumed {n} parked session(s)"),
     };
     eprintln!("ready{parked}");
-    // Flush the durable tier even when the stdio loop errored (a client
-    // hanging up is routine and must not cost session state); report
-    // whichever failure matters more.
-    let served = service.run_stdio();
-    match service.close() {
-        Ok(flushed) if flushed > 0 => {
-            eprintln!("flushed {flushed} session(s) to the store")
+    let Some(addr) = listen else {
+        // Flush the durable tier even when the stdio loop errored (a
+        // client hanging up is routine and must not cost session state);
+        // report whichever failure matters more.
+        let served = service.run_stdio();
+        match service.close() {
+            Ok(flushed) if flushed > 0 => {
+                eprintln!("flushed {flushed} session(s) to the store")
+            }
+            Ok(_) => {}
+            Err(e) => {
+                served?; // a stdio error is the root cause; surface it first
+                return Err(format!("shutdown flush: {e}"));
+            }
         }
-        Ok(_) => {}
-        Err(e) => {
-            served?; // a stdio error is the root cause; surface it first
-            return Err(format!("shutdown flush: {e}"));
+        return served;
+    };
+    let server = Server::bind(service, &addr, max_conns)?;
+    eprintln!(
+        "listening on {} ({} conns max); serving until stdin closes",
+        server.local_addr(),
+        if max_conns == 0 {
+            "unlimited".to_string()
+        } else {
+            max_conns.to_string()
+        }
+    );
+    // Park until stdin reaches EOF — Ctrl-D in the foreground, or the
+    // parent closing the pipe, is the graceful-shutdown signal; console
+    // input is otherwise ignored (the protocol runs on the sockets).
+    // When stdin is *already* closed at startup (daemonized:
+    // `ccn serve --listen ... < /dev/null &`, a service manager, etc.)
+    // there is no shutdown channel: serve until killed. A kill is the
+    // crash path — parked state survives, resident state does not.
+    fn park_forever() -> ! {
+        eprintln!(
+            "stdin is closed or unreadable: serving until killed (no \
+             graceful shutdown channel; only parked sessions survive a kill)"
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
-    served
+    let mut stdin = std::io::stdin().lock();
+    let mut scratch = [0u8; 4096];
+    let mut first_read = true;
+    loop {
+        match stdin.read(&mut scratch) {
+            Ok(0) if first_read => park_forever(),
+            Ok(0) => break,
+            Ok(_) => first_read = false,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // an unreadable stdin at startup (fd 0 closed by a
+            // supervisor) is the daemonized case, not a shutdown request
+            Err(_) if first_read => park_forever(),
+            Err(_) => break,
+        }
+    }
+    let flushed = server.shutdown()?;
+    if flushed > 0 {
+        eprintln!("flushed {flushed} session(s) to the store");
+    }
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
@@ -300,12 +362,15 @@ fn main() {
                    ccn:TOTAL:PER_STAGE:STEPS_PER_STAGE | tbptt:D:K | snap1:D\n\
                  sweep adds: --seeds 0,1,2 --threads T\n\
                  serve options: --shards N --store-dir DIR --resident-cap K\n\
-                   (JSONL protocol on stdin/stdout; ops: open|step|step_batch|\n\
-                   predict|snapshot|restore|park|warm|close|stats; every learner\n\
-                   spec above is serveable and snapshot-safe. --store-dir mounts\n\
-                   the durable session tier: sessions beyond K per shard are\n\
-                   LRU-evicted to disk, rehydrated on demand, and survive\n\
-                   restarts)"
+                   --listen tcp://HOST:PORT|unix://PATH --max-conns M\n\
+                   (JSONL protocol on stdin/stdout by default; ops: open|step|\n\
+                   step_batch|predict|snapshot|restore|park|warm|close|stats;\n\
+                   every learner spec above is serveable and snapshot-safe.\n\
+                   --store-dir mounts the durable session tier: sessions beyond\n\
+                   K per shard are LRU-evicted to disk, rehydrated on demand,\n\
+                   and survive restarts. --listen serves many concurrent\n\
+                   clients over TCP or a unix socket instead of stdio,\n\
+                   until stdin closes)"
             );
             std::process::exit(2);
         }

@@ -18,6 +18,9 @@
 //!   sessions behind an mpsc queue; aggregate throughput scales with
 //!   cores and the hot path takes no locks.
 //! - [`protocol`]: the JSONL wire format.
+//! - [`transport`]: the network front end — a concurrent TCP/UDS
+//!   listener (`--listen`) running one reader/writer thread pair per
+//!   client over the same protocol and service.
 //! - [`crate::store`] (mounted via `--store-dir`): the durable session
 //!   tier — cold sessions park on disk, hot ones stay resident.
 //!
@@ -125,15 +128,54 @@
 //! warming ahead of expected traffic just moves the load off the
 //! latency path.) A graceful shutdown ([`Service::close`]) flushes every
 //! resident session, so nothing is lost across planned restarts either.
+//!
+//! # The network transport
+//!
+//! Stdio serves exactly one client. `ccn serve --listen tcp://HOST:PORT`
+//! (or `unix://PATH`) puts a concurrent listener ([`transport::Server`])
+//! in front of the same service: each accepted connection gets a
+//! reader/writer thread pair, replies come back strictly in per-client
+//! request order, and every op for a session id serializes through its
+//! owning shard no matter which client sent it — so per-session
+//! histories stay exactly replayable while different sessions from
+//! different clients interleave freely. `--max-conns N` caps concurrent
+//! clients (excess connections get one error line and are closed), and
+//! `stats` over the transport reports a `"transport"` block tagging the
+//! asking connection and listing every live one.
+//!
+//! Quickstart from a shell (any JSONL-speaking client works — here `nc`;
+//! `< /dev/null &` daemonizes: with stdin closed at startup the server
+//! runs until killed instead of watching for EOF):
+//!
+//! ```text
+//! $ ccn serve --shards 4 --listen tcp://127.0.0.1:7777 < /dev/null &
+//! $ nc 127.0.0.1 7777
+//! {"op":"open","learner":"columnar:8","n_inputs":4,"seed":1}
+//! {"ok":true,"id":1}
+//! {"op":"step","id":1,"x":[0.1,0,0,0.4],"c":0.5}
+//! {"ok":true,"y":0.0132}
+//! {"op":"snapshot","id":1}
+//! {"ok":true,"state":{"v":2,"kind":"columnar",...}}
+//! {"op":"stats"}
+//! {"ok":true,...,"transport":{"conn":1,"active_conns":1,...}}
+//! ```
+//!
+//! A listening server with a live stdin runs until stdin closes, then
+//! drains every connection and flushes the store; started with stdin
+//! already closed (daemonized) it serves until killed. Killing is the
+//! crash path — acknowledged `park`s survive, everything else is lost,
+//! and the next boot resumes the parked sessions.
 
 pub mod batch;
 pub mod protocol;
 pub mod session;
 pub mod shard;
+pub mod transport;
 
 pub use batch::{BatchedColumnStepper, ColumnarBatchSpec, ColumnarLane, ColumnarSessionBatch};
 pub use session::{Session, SessionSpec};
 pub use shard::{ShardPool, ShardState};
+pub use transport::{ListenAddr, Server};
 
 use std::io::{BufRead, Write};
 

@@ -224,17 +224,47 @@ pub enum WireOp {
     Stats,
 }
 
+/// A session id must be a non-negative integer; anything else (strings,
+/// negatives, fractions) is a malformed request, not "session 0".
+fn id_value(n: &Json) -> Result<u64, String> {
+    match n.as_f64() {
+        // strictly below 2^64: `u64::MAX as f64` rounds UP to 2^64, so
+        // an inclusive bound would silently saturate the out-of-range
+        // id 2^64 onto u64::MAX instead of rejecting it
+        Some(f) if f >= 0.0 && f.fract() == 0.0 && f < u64::MAX as f64 => {
+            Ok(f as u64)
+        }
+        Some(_) => Err("'id' must be a non-negative integer".into()),
+        None => Err("missing or non-numeric 'id'".into()),
+    }
+}
+
 fn get_id(v: &Json) -> Result<u64, String> {
-    v.get("id")
-        .and_then(|n| n.as_f64())
-        .map(|n| n as u64)
-        .ok_or_else(|| "missing or non-numeric 'id'".into())
+    id_value(v.get("id").unwrap_or(&Json::Null))
+}
+
+/// Strict numeric-array decode. [`Json::to_f32_vec`] silently *drops*
+/// non-numeric entries (fine for trusted files, lethal for a wire
+/// protocol: `[1,"a",2]` would step a 2-input session with the wrong
+/// observation instead of erroring).
+fn f32s(x: &Json, what: &str) -> Result<Vec<f32>, String> {
+    let arr = x
+        .as_arr()
+        .ok_or_else(|| format!("'{what}' must be an array of numbers"))?;
+    arr.iter()
+        .map(|e| {
+            e.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| format!("'{what}' must be an array of numbers"))
+        })
+        .collect()
 }
 
 fn get_obs(v: &Json, key: &str) -> Result<Vec<f32>, String> {
-    v.get(key)
-        .and_then(|x| x.to_f32_vec())
-        .ok_or_else(|| format!("missing or non-array '{key}'"))
+    match v.get(key) {
+        None => Err(format!("missing or non-array '{key}'")),
+        Some(x) => f32s(x, key),
+    }
 }
 
 /// Parse one request line. The `open` op accepts the spec fields inline:
@@ -244,6 +274,9 @@ fn get_obs(v: &Json, key: &str) -> Result<Vec<f32>, String> {
 ///  "gamma":0.9,"lambda":0.99,"eps":0.01,"seed":0}
 /// ```
 pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
+    if v.as_obj().is_none() {
+        return Err("request must be a json object".into());
+    }
     let op = v
         .get("op")
         .and_then(|o| o.as_str())
@@ -302,10 +335,10 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
                 .get("xs")
                 .and_then(|a| a.as_arr())
                 .ok_or("step_batch: missing 'xs'")?;
-            let cs = v
-                .get("cs")
-                .and_then(|a| a.to_f32_vec())
-                .ok_or("step_batch: missing 'cs'")?;
+            let cs = match v.get("cs") {
+                None => return Err("step_batch: missing 'cs'".into()),
+                Some(a) => f32s(a, "cs").map_err(|e| format!("step_batch: {e}"))?,
+            };
             if ids.len() != xs.len() || ids.len() != cs.len() {
                 return Err(format!(
                     "step_batch: ids/xs/cs lengths differ ({}/{}/{})",
@@ -316,12 +349,9 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
             }
             let mut items = Vec::with_capacity(ids.len());
             for ((idj, xj), &c) in ids.iter().zip(xs).zip(&cs) {
-                let id = idj
-                    .as_f64()
-                    .ok_or("step_batch: non-numeric id")? as u64;
-                let x = xj
-                    .to_f32_vec()
-                    .ok_or("step_batch: non-array observation")?;
+                let id =
+                    id_value(idj).map_err(|e| format!("step_batch: {e}"))?;
+                let x = f32s(xj, "xs").map_err(|e| format!("step_batch: {e}"))?;
                 items.push(StepItem { id, x, c });
             }
             Ok(WireOp::StepBatch(items))
@@ -409,6 +439,38 @@ mod tests {
         )
         .is_err());
         assert!(parse(r#"{"op":"open","learner":"tbptt","n_inputs":2}"#).is_err());
+    }
+
+    #[test]
+    fn wrong_typed_fields_are_rejected_not_coerced() {
+        // a request must be an object at all
+        assert!(parse(r#"[1,2,3]"#).is_err());
+        assert!(parse(r#""step""#).is_err());
+        // ids: negatives, fractions and strings are malformed, never
+        // silently cast to some other session's id
+        assert!(parse(r#"{"op":"step","id":-1,"x":[1],"c":0}"#).is_err());
+        assert!(parse(r#"{"op":"step","id":1.5,"x":[1],"c":0}"#).is_err());
+        assert!(parse(r#"{"op":"snapshot","id":"7"}"#).is_err());
+        // 2^64 would saturate to u64::MAX under an `as` cast; reject it
+        assert!(parse(r#"{"op":"snapshot","id":18446744073709551616}"#).is_err());
+        // observations with non-numeric entries must error loudly —
+        // to_f32_vec-style dropping would step with a wrong-width x
+        assert!(parse(r#"{"op":"step","id":1,"x":[1,"a",2],"c":0}"#).is_err());
+        assert!(parse(r#"{"op":"predict","id":1,"x":[null]}"#).is_err());
+        assert!(parse(
+            r#"{"op":"step_batch","ids":[1,2],"xs":[[1],["b"]],"cs":[0,0]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"op":"step_batch","ids":[1,2],"xs":[[1],[2]],"cs":[0,true]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"op":"step_batch","ids":[1,-2],"xs":[[1],[2]],"cs":[0,0]}"#
+        )
+        .is_err());
+        // well-typed requests still parse after all that strictness
+        assert!(parse(r#"{"op":"step","id":1,"x":[1,2],"c":0.5}"#).is_ok());
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::sync::mpsc;
 use std::thread::JoinHandle;
 
 use crate::nets::NetRegistry;
-use crate::store::{SessionStore, StoreConfig};
+use crate::store::{IdWatermark, SessionStore, StoreConfig};
 use crate::util::json::Json;
 
 use super::batch::{ColumnarBatchSpec, ColumnarSessionBatch};
@@ -604,6 +604,10 @@ pub struct ShardPool {
     txs: Vec<mpsc::Sender<Job>>,
     joins: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Durable id floor (store-backed pools only): an id is burned on
+    /// disk before any client sees it, so a crash can never lead to a
+    /// reused id — not even for sessions that were never parked.
+    watermark: Option<IdWatermark>,
 }
 
 impl ShardPool {
@@ -623,11 +627,15 @@ impl ShardPool {
         cfg: Option<StoreConfig>,
     ) -> Result<Self, String> {
         let n = n_shards.max(1);
-        let (stores, first_id) = match &cfg {
-            None => ((0..n).map(|_| None).collect::<Vec<_>>(), 1),
+        let (stores, first_id, watermark) = match &cfg {
+            None => ((0..n).map(|_| None).collect::<Vec<_>>(), 1, None),
             Some(cfg) => {
                 let (stores, max_id) = Self::open_stores(cfg, n)?;
-                (stores.into_iter().map(Some).collect(), max_id + 1)
+                let wm = IdWatermark::open(cfg.watermark_path())?;
+                // parked ids catch crashes of pre-watermark stores; the
+                // floor catches ids that were live but never parked
+                let first = (max_id + 1).max(wm.floor().max(1));
+                (stores.into_iter().map(Some).collect(), first, Some(wm))
             }
         };
         let resident_cap = cfg.as_ref().map_or(0, |c| c.resident_cap);
@@ -653,6 +661,7 @@ impl ShardPool {
             txs,
             joins,
             next_id: AtomicU64::new(first_id),
+            watermark,
         })
     }
 
@@ -749,13 +758,26 @@ impl ShardPool {
             .unwrap_or_else(|_| Response::error("shard worker dropped the reply"))
     }
 
+    /// Allocate a fresh session id, durably burning it in the watermark
+    /// (store-backed pools) before anyone can see it.
+    fn alloc_id(&self) -> Result<u64, String> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(wm) = &self.watermark {
+            wm.ensure_covers(id)
+                .map_err(|e| format!("id allocation: {e}"))?;
+        }
+        Ok(id)
+    }
+
     /// Allocate an id and open a session on its shard.
     pub fn open(&self, spec: SessionSpec) -> Response {
         if self.txs.is_empty() {
             return Response::error("shard pool is closed");
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.call_shard(self.shard_of(id), Request::Open { id, spec })
+        match self.alloc_id() {
+            Ok(id) => self.call_shard(self.shard_of(id), Request::Open { id, spec }),
+            Err(e) => Response::error(e),
+        }
     }
 
     /// Allocate an id and restore a snapshot onto its shard.
@@ -763,8 +785,12 @@ impl ShardPool {
         if self.txs.is_empty() {
             return Response::error("shard pool is closed");
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.call_shard(self.shard_of(id), Request::Restore { id, state })
+        match self.alloc_id() {
+            Ok(id) => {
+                self.call_shard(self.shard_of(id), Request::Restore { id, state })
+            }
+            Err(e) => Response::error(e),
+        }
     }
 
     /// Route a single-session request to its owner.

@@ -1,0 +1,732 @@
+//! The network front end: a concurrent TCP / Unix-domain-socket listener
+//! speaking the existing JSONL protocol ([`super::protocol`]).
+//!
+//! The stdio loop ([`super::Service::run_stdio`]) serves exactly one
+//! client. This module puts a `std::net` listener in front of the same
+//! [`super::Service`] so *N* clients drive the session machinery
+//! concurrently — the system-level counterpart of the paper's
+//! linear-compute-scaling claim: capacity grows with connections and
+//! shards, never with gradient-quality compromises.
+//!
+//! # Design
+//!
+//! - [`ListenAddr`] parses `tcp://HOST:PORT` and `unix://PATH`.
+//! - [`Server::bind`] owns the accept loop on its own thread; every
+//!   accepted connection gets a **reader/writer thread pair**. The reader
+//!   parses one request line at a time, executes it against the shared
+//!   [`super::Service`] (a blocking shard round trip) and enqueues the
+//!   reply; the writer drains the queue to the socket. One request in
+//!   flight per connection means replies come back strictly in request
+//!   order, and all ops for a session id — from any connection —
+//!   serialize through the session's owning shard, so per-session
+//!   history stays replayable. Requests for *different* sessions from
+//!   different connections interleave freely across shards.
+//! - Connection lifecycle: a client EOF (or socket error) ends the
+//!   reader; the writer drains every already-queued reply, shuts the
+//!   socket down, and the connection deregisters. Sessions are owned by
+//!   the service, not the connection — a dropped client loses nothing.
+//! - `max_conns > 0` caps concurrent clients: a connection over the cap
+//!   is answered with one JSONL error line and closed (counted under
+//!   `refused`).
+//! - `stats` replies over the transport carry an extra `"transport"`
+//!   object tagging the asking connection and describing every live one:
+//!   `{"conn":ID,"active_conns":..,"total_conns":..,"refused":..,
+//!   "max_conns":..,"conns":[{"id":..,"peer":..,"requests":..,
+//!   "errors":..}]}`.
+//! - [`Server::shutdown`] stops the accept loop, drains and joins every
+//!   connection, then closes the service — flushing every resident
+//!   session to the store. Killing the process instead is the crash
+//!   path: only parked state survives, exactly as with the stdio loop.
+//!
+//! Blocking reads poll a stop flag via short read timeouts, so shutdown
+//! never hangs on an idle client; writes carry a timeout so a stalled
+//! client cannot wedge its writer thread forever. Non-UTF-8 request
+//! lines get a structured error reply instead of killing the connection.
+//!
+//! See the `ccn serve --listen` flag and the module docs of
+//! [`crate::serve`] for a wire-level quickstart.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::protocol::{parse_wire_op, Response, WireOp};
+use super::Service;
+
+/// How often blocked readers/accepts wake to poll the stop flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+/// A reply write slower than this counts as a dead client.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// Longest request line a connection may send. Snapshot envelopes are a
+/// few KB, so 16MB is generous headroom — while a client that streams
+/// bytes without ever sending a newline gets one error reply per capped
+/// "line" instead of growing the read buffer until the process is
+/// OOM-killed (which would lose every non-parked session).
+const MAX_LINE_BYTES: usize = 16 << 20;
+
+/// A parsed `--listen` endpoint.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ListenAddr {
+    /// `tcp://HOST:PORT` (port 0 binds an ephemeral port).
+    Tcp(String),
+    /// `unix://PATH` — a filesystem socket, removed again on shutdown.
+    Unix(PathBuf),
+}
+
+impl ListenAddr {
+    pub fn parse(s: &str) -> Result<ListenAddr, String> {
+        if let Some(rest) = s.strip_prefix("tcp://") {
+            if rest.is_empty() || !rest.contains(':') {
+                return Err(format!(
+                    "listen: tcp address needs HOST:PORT, got '{rest}'"
+                ));
+            }
+            Ok(ListenAddr::Tcp(rest.to_string()))
+        } else if let Some(rest) = s.strip_prefix("unix://") {
+            if rest.is_empty() {
+                return Err("listen: unix address needs a path".into());
+            }
+            Ok(ListenAddr::Unix(PathBuf::from(rest)))
+        } else {
+            Err(format!(
+                "listen: expected tcp://HOST:PORT or unix://PATH, got '{s}'"
+            ))
+        }
+    }
+}
+
+/// One accepted connection, TCP or UDS, behind a uniform surface.
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            Stream::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        match self {
+            Stream::Tcp(s) => s
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:?".into()),
+            Stream::Unix(_) => "unix".into(),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &ListenAddr) -> Result<(Listener, String), String> {
+        match addr {
+            ListenAddr::Tcp(hostport) => {
+                let l = TcpListener::bind(hostport)
+                    .map_err(|e| format!("listen: bind tcp://{hostport}: {e}"))?;
+                let local = l
+                    .local_addr()
+                    .map(|a| format!("tcp://{a}"))
+                    .unwrap_or_else(|_| format!("tcp://{hostport}"));
+                Ok((Listener::Tcp(l), local))
+            }
+            ListenAddr::Unix(path) => {
+                let l = match UnixListener::bind(path) {
+                    Ok(l) => l,
+                    Err(e) if e.kind() == ErrorKind::AddrInUse => {
+                        // A socket file from an earlier run. If nobody
+                        // accepts on it the server crashed without
+                        // cleanup: remove the stale file and rebind. If
+                        // someone answers, a live server owns it.
+                        if UnixStream::connect(path).is_ok() {
+                            return Err(format!(
+                                "listen: {} is owned by a live server",
+                                path.display()
+                            ));
+                        }
+                        std::fs::remove_file(path).map_err(|e| {
+                            format!(
+                                "listen: remove stale socket {}: {e}",
+                                path.display()
+                            )
+                        })?;
+                        UnixListener::bind(path).map_err(|e| {
+                            format!("listen: bind unix://{}: {e}", path.display())
+                        })?
+                    }
+                    Err(e) => {
+                        return Err(format!(
+                            "listen: bind unix://{}: {e}",
+                            path.display()
+                        ))
+                    }
+                };
+                Ok((Listener::Unix(l), format!("unix://{}", path.display())))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+/// Per-connection counters, visible through the `stats` op.
+struct ConnStats {
+    id: u64,
+    peer: String,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// State shared by the accept loop and every connection thread.
+struct Shared {
+    stop: AtomicBool,
+    conns: Mutex<BTreeMap<u64, Arc<ConnStats>>>,
+    total_conns: AtomicU64,
+    refused: AtomicU64,
+    max_conns: usize,
+}
+
+/// A live listener serving the JSONL protocol to concurrent clients.
+///
+/// Constructed by [`Server::bind`]; torn down by [`Server::shutdown`]
+/// (which is also the graceful store flush — do not skip it unless a
+/// crash is exactly what you want to simulate).
+pub struct Server {
+    service: Arc<Service>,
+    shared: Arc<Shared>,
+    accept_join: Option<JoinHandle<()>>,
+    conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    local: String,
+    unix_path: Option<PathBuf>,
+}
+
+impl Server {
+    /// Bind the endpoint and start accepting. `max_conns == 0` means
+    /// unlimited.
+    pub fn bind(
+        service: Service,
+        addr: &ListenAddr,
+        max_conns: usize,
+    ) -> Result<Server, String> {
+        let (listener, local) = Listener::bind(addr)?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listen: set nonblocking: {e}"))?;
+        let service = Arc::new(service);
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(BTreeMap::new()),
+            total_conns: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            max_conns,
+        });
+        let conn_joins = Arc::new(Mutex::new(Vec::new()));
+        let accept_join = {
+            let service = Arc::clone(&service);
+            let shared = Arc::clone(&shared);
+            let conn_joins = Arc::clone(&conn_joins);
+            std::thread::spawn(move || {
+                run_accept(listener, service, shared, conn_joins)
+            })
+        };
+        Ok(Server {
+            service,
+            shared,
+            accept_join: Some(accept_join),
+            conn_joins,
+            local,
+            unix_path: match addr {
+                ListenAddr::Unix(p) => Some(p.clone()),
+                ListenAddr::Tcp(_) => None,
+            },
+        })
+    }
+
+    /// The bound endpoint, e.g. `tcp://127.0.0.1:40123` — with the real
+    /// port when the request was for port 0.
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Currently connected clients.
+    pub fn active_conns(&self) -> usize {
+        self.shared.conns.lock().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// The service behind the listener (stats introspection).
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// Graceful shutdown: stop accepting, drain and join every
+    /// connection (queued replies are still delivered), remove the unix
+    /// socket file, then close the service — flushing every resident
+    /// session to the store. Returns the number flushed.
+    pub fn shutdown(mut self) -> Result<usize, String> {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+        let joins: Vec<JoinHandle<()>> = match self.conn_joins.lock() {
+            Ok(mut j) => std::mem::take(&mut *j),
+            Err(_) => Vec::new(),
+        };
+        for join in joins {
+            let _ = join.join();
+        }
+        if let Some(path) = &self.unix_path {
+            let _ = std::fs::remove_file(path);
+        }
+        let mut service = Arc::try_unwrap(self.service)
+            .map_err(|_| "shutdown: a connection thread still holds the service")?;
+        service.close()
+    }
+}
+
+fn run_accept(
+    listener: Listener,
+    service: Arc<Service>,
+    shared: Arc<Shared>,
+    conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_conn = 1u64;
+    while !shared.stop.load(Ordering::Relaxed) {
+        let stream = match listener.accept() {
+            Ok(s) => s,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                std::thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // transient accept failure (EMFILE, aborted handshake):
+                // back off instead of spinning or dying
+                std::thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+        };
+        // accepted sockets may inherit the listener's nonblocking mode on
+        // some platforms; make them blocking-with-timeout explicitly
+        let _ = stream.set_nonblocking(false);
+        let active = shared.conns.lock().map(|c| c.len()).unwrap_or(usize::MAX);
+        if shared.max_conns > 0 && active >= shared.max_conns {
+            shared.refused.fetch_add(1, Ordering::Relaxed);
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(WRITE_TIMEOUT));
+            let reply = Response::error(format!(
+                "server is at --max-conns ({})",
+                shared.max_conns
+            ))
+            .to_json()
+            .dump();
+            let _ = writeln!(s, "{reply}");
+            let _ = s.flush();
+            s.shutdown();
+            continue;
+        }
+        let id = next_conn;
+        next_conn += 1;
+        shared.total_conns.fetch_add(1, Ordering::Relaxed);
+        let stats = Arc::new(ConnStats {
+            id,
+            peer: stream.peer(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => {
+                stream.shutdown();
+                continue;
+            }
+        };
+        if let Ok(mut conns) = shared.conns.lock() {
+            conns.insert(id, Arc::clone(&stats));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel::<String>();
+        let writer = std::thread::spawn(move || run_writer(write_half, reply_rx));
+        let reader = {
+            let service = Arc::clone(&service);
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                run_reader(stream, service, Arc::clone(&shared), stats, reply_tx);
+                if let Ok(mut conns) = shared.conns.lock() {
+                    conns.remove(&id);
+                }
+            })
+        };
+        if let Ok(mut joins) = conn_joins.lock() {
+            // reap handles of connections that already finished, so a
+            // long-lived server churning short-lived clients doesn't
+            // accumulate one dead JoinHandle pair per connection forever
+            joins.retain(|j| !j.is_finished());
+            joins.push(reader);
+            joins.push(writer);
+        }
+    }
+}
+
+/// Outcome of reading one request line off a connection.
+enum LineRead {
+    /// A line (or a final unterminated line at EOF) is in the buffer.
+    Line,
+    /// The line crossed [`MAX_LINE_BYTES`]; its excess was discarded up
+    /// to (and including) the terminating newline. The buffer is empty.
+    TooLong,
+    /// Clean end of stream with nothing buffered (or server stop).
+    Eof,
+}
+
+/// Read one `\n`-terminated line into `buf`, riding out read timeouts
+/// (which exist only so the stop flag gets polled) and capping the
+/// buffered length at `max` — an over-long line is *drained*, not
+/// stored, so the connection stays usable and memory stays bounded.
+fn read_line_bytes(
+    reader: &mut BufReader<Stream>,
+    buf: &mut Vec<u8>,
+    stop: &AtomicBool,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    let mut over = false;
+    loop {
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock
+                        | ErrorKind::TimedOut
+                        | ErrorKind::Interrupted
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(LineRead::Eof);
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            // EOF: flush a final unterminated line if one is buffered
+            return Ok(if over {
+                LineRead::TooLong
+            } else if buf.is_empty() {
+                LineRead::Eof
+            } else {
+                LineRead::Line
+            });
+        }
+        let newline = chunk.iter().position(|&b| b == b'\n');
+        let take = newline.map_or(chunk.len(), |p| p + 1);
+        if !over {
+            if buf.len() + take > max {
+                over = true;
+                buf.clear(); // stop storing; keep draining to the newline
+            } else {
+                buf.extend_from_slice(&chunk[..take]);
+            }
+        }
+        reader.consume(take);
+        if newline.is_some() {
+            return Ok(if over { LineRead::TooLong } else { LineRead::Line });
+        }
+    }
+}
+
+fn run_reader(
+    stream: Stream,
+    service: Arc<Service>,
+    shared: Arc<Shared>,
+    stats: Arc<ConnStats>,
+    reply_tx: mpsc::Sender<String>,
+) {
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        buf.clear();
+        match read_line_bytes(&mut reader, &mut buf, &shared.stop, MAX_LINE_BYTES)
+        {
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::TooLong) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let reply = Response::error(format!(
+                    "request line exceeds {MAX_LINE_BYTES} bytes"
+                ))
+                .to_json()
+                .dump();
+                if reply_tx.send(reply).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Ok(LineRead::Eof) | Err(_) => break,
+        }
+        let reply = match std::str::from_utf8(&buf) {
+            Err(_) => {
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                Response::error("request line is not valid utf-8")
+                    .to_json()
+                    .dump()
+            }
+            Ok(text) => {
+                let line = text.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                stats.requests.fetch_add(1, Ordering::Relaxed);
+                handle_request(&service, &shared, &stats, line)
+            }
+        };
+        if reply_tx.send(reply).is_err() {
+            break; // writer is gone (client stopped reading)
+        }
+    }
+    // dropping reply_tx lets the writer drain queued replies and exit
+}
+
+fn run_writer(stream: Stream, replies: mpsc::Receiver<String>) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut out = BufWriter::new(stream);
+    for reply in replies {
+        if writeln!(out, "{reply}")
+            .and_then(|()| out.flush())
+            .is_err()
+        {
+            break;
+        }
+    }
+    // drain done (or client dead): half-close so the client sees EOF
+    if let Ok(inner) = out.into_inner() {
+        inner.shutdown();
+    }
+}
+
+/// Execute one request line; `stats` replies grow the `"transport"` tag.
+fn handle_request(
+    service: &Service,
+    shared: &Shared,
+    me: &ConnStats,
+    line: &str,
+) -> String {
+    let reply = match Json::parse(line) {
+        Err(e) => Response::error(format!("bad json: {e}")).to_json(),
+        Ok(v) => match parse_wire_op(&v) {
+            Err(e) => Response::error(e).to_json(),
+            Ok(op) => {
+                let is_stats = matches!(op, WireOp::Stats);
+                let reply = service.handle_op(op);
+                if is_stats {
+                    attach_transport(reply, shared, me)
+                } else {
+                    reply
+                }
+            }
+        },
+    };
+    if reply.get("ok") == Some(&Json::Bool(false)) {
+        me.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    reply.dump()
+}
+
+fn attach_transport(reply: Json, shared: &Shared, me: &ConnStats) -> Json {
+    let (active, conn_list) = match shared.conns.lock() {
+        Ok(conns) => (
+            conns.len(),
+            conns
+                .values()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("id", Json::Num(c.id as f64)),
+                        ("peer", Json::Str(c.peer.clone())),
+                        (
+                            "requests",
+                            Json::Num(c.requests.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "errors",
+                            Json::Num(c.errors.load(Ordering::Relaxed) as f64),
+                        ),
+                    ])
+                })
+                .collect::<Vec<Json>>(),
+        ),
+        Err(_) => (0, Vec::new()),
+    };
+    match reply {
+        Json::Obj(mut o) => {
+            o.insert(
+                "transport".into(),
+                Json::obj(vec![
+                    ("conn", Json::Num(me.id as f64)),
+                    ("active_conns", Json::Num(active as f64)),
+                    (
+                        "total_conns",
+                        Json::Num(shared.total_conns.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "refused",
+                        Json::Num(shared.refused.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("max_conns", Json::Num(shared.max_conns as f64)),
+                    ("conns", Json::Arr(conn_list)),
+                ]),
+            );
+            Json::Obj(o)
+        }
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_addr_parses_and_rejects() {
+        assert_eq!(
+            ListenAddr::parse("tcp://127.0.0.1:7777").unwrap(),
+            ListenAddr::Tcp("127.0.0.1:7777".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("unix:///tmp/ccn.sock").unwrap(),
+            ListenAddr::Unix(PathBuf::from("/tmp/ccn.sock"))
+        );
+        assert!(ListenAddr::parse("tcp://").is_err());
+        assert!(ListenAddr::parse("tcp://nohost").is_err());
+        assert!(ListenAddr::parse("unix://").is_err());
+        assert!(ListenAddr::parse("http://x:1").is_err());
+        assert!(ListenAddr::parse("127.0.0.1:7777").is_err());
+    }
+
+    #[test]
+    fn bind_reports_the_real_port_and_shuts_down_cleanly() {
+        let server = Server::bind(
+            Service::new(1),
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let local = server.local_addr().to_string();
+        assert!(local.starts_with("tcp://127.0.0.1:"), "{local}");
+        assert!(!local.ends_with(":0"), "port 0 must resolve: {local}");
+        assert_eq!(server.active_conns(), 0);
+        // storeless close flushes nothing but must join everything
+        assert_eq!(server.shutdown().unwrap(), 0);
+    }
+
+    #[test]
+    fn stale_unix_socket_is_replaced_live_one_refused() {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir()
+            .join(format!("ccn-stale-{}-{nanos}.sock", std::process::id()));
+        // a socket file nobody listens on (simulated crash leftover)
+        drop(UnixListener::bind(&path).unwrap());
+        assert!(path.exists());
+        let addr = ListenAddr::Unix(path.clone());
+        let server = Server::bind(Service::new(1), &addr, 0).unwrap();
+        // while this server is live, a second bind must refuse
+        let err = Server::bind(Service::new(1), &addr, 0).unwrap_err();
+        assert!(err.contains("live server"), "{err}");
+        server.shutdown().unwrap();
+        assert!(!path.exists(), "shutdown removes the socket file");
+    }
+}

@@ -21,6 +21,9 @@
 //! - [`StoreConfig`]: how the serve layer mounts the tier — a root
 //!   directory (each shard claims `shard-<k>/` under it) and a
 //!   per-shard resident capacity.
+//! - [`IdWatermark`]: a durable, chunk-persisted floor for the pool-wide
+//!   session-id allocator (`<dir>/next-id`), so ids of sessions that
+//!   were never parked cannot be reused after a crash.
 //!
 //! # Lifecycle with the serve layer
 //!
@@ -45,7 +48,10 @@ pub mod session_store;
 
 pub use session_store::SessionStore;
 
+use std::fs::File;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Mount configuration for the durable tier, carried from the CLI
 /// (`ccn serve --store-dir DIR --resident-cap K`) into the shard pool.
@@ -70,5 +76,159 @@ impl StoreConfig {
     /// The per-shard store directory.
     pub fn shard_dir(&self, shard: usize) -> PathBuf {
         self.dir.join(format!("shard-{shard}"))
+    }
+
+    /// The pool-wide next-id watermark file (ids are allocated centrally
+    /// by the shard pool, so the watermark lives at the root, not in a
+    /// shard directory).
+    pub fn watermark_path(&self) -> PathBuf {
+        self.dir.join("next-id")
+    }
+}
+
+/// The watermark file is rewritten once per this many allocated ids, not
+/// on every `open` — a crash burns at most one chunk of the (64-bit) id
+/// space instead of costing a synced write per session.
+const WATERMARK_CHUNK: u64 = 1024;
+
+/// Persisted floor for the session-id allocator.
+///
+/// Boot-time recovery used to start the allocator just above the highest
+/// *parked* id — but ids of sessions that were never parked (opened,
+/// stepped, lost in a crash) were forgotten and could be handed out
+/// again after a restart. A client still holding such an id from before
+/// the crash would then silently talk to a stranger's fresh session.
+/// The watermark closes that hole: every id the pool hands out is
+/// covered by a durable floor *before* the client sees it, and the next
+/// boot allocates from `max(highest parked id + 1, floor)`.
+///
+/// Written atomically (temp file, fsync, rename), so the file always
+/// holds a complete value.
+pub struct IdWatermark {
+    path: PathBuf,
+    /// ids below this are burned — never handed out again
+    covered: AtomicU64,
+    /// serializes file rewrites (readers use `covered` lock-free)
+    write_lock: Mutex<()>,
+}
+
+impl IdWatermark {
+    /// Open (or create-on-first-write) the watermark at `path`. A
+    /// missing file means a floor of 0 (fresh store).
+    pub fn open(path: PathBuf) -> Result<IdWatermark, String> {
+        let floor = match std::fs::read_to_string(&path) {
+            Ok(text) => text.trim().parse::<u64>().map_err(|_| {
+                format!(
+                    "watermark {}: not an integer: {:?}",
+                    path.display(),
+                    text.trim()
+                )
+            })?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => 0,
+            Err(e) => return Err(format!("watermark {}: {e}", path.display())),
+        };
+        Ok(IdWatermark {
+            path,
+            covered: AtomicU64::new(floor),
+            write_lock: Mutex::new(()),
+        })
+    }
+
+    /// The durable floor: the allocator must start at or above this.
+    pub fn floor(&self) -> u64 {
+        self.covered.load(Ordering::Acquire)
+    }
+
+    /// Make the floor cover `id` durably. A no-op (lock-free) for all
+    /// but one in [`WATERMARK_CHUNK`] allocations; when the chunk is
+    /// exhausted the next multiple is committed before returning, so an
+    /// id is never visible to a client without being burned on disk.
+    pub fn ensure_covers(&self, id: u64) -> Result<(), String> {
+        if id < self.covered.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        let _guard = self
+            .write_lock
+            .lock()
+            .map_err(|_| "watermark lock poisoned".to_string())?;
+        if id < self.covered.load(Ordering::Acquire) {
+            return Ok(()); // another allocator raised it while we waited
+        }
+        let new = (id / WATERMARK_CHUNK + 1).saturating_mul(WATERMARK_CHUNK);
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, new.to_string())
+            .map_err(|e| format!("watermark write: {e}"))?;
+        File::open(&tmp)
+            .and_then(|f| f.sync_all())
+            .map_err(|e| format!("watermark sync: {e}"))?;
+        std::fs::rename(&tmp, &self.path)
+            .map_err(|e| format!("watermark commit: {e}"))?;
+        // make the rename itself durable — without a directory sync the
+        // floor bump can vanish in a crash, which is the exact id-reuse
+        // hole the watermark exists to close (best effort: not all
+        // platforms allow fsync on a directory handle)
+        if let Some(parent) = self.path.parent() {
+            if let Ok(d) = File::open(parent) {
+                let _ = d.sync_all();
+            }
+        }
+        self.covered.store(new, Ordering::Release);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let dir = std::env::temp_dir().join(format!(
+            "ccn-wm-{tag}-{}-{nanos}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn watermark_opens_empty_persists_in_chunks_and_reloads() {
+        let dir = fresh_dir("basic");
+        let path = dir.join("next-id");
+        let wm = IdWatermark::open(path.clone()).unwrap();
+        assert_eq!(wm.floor(), 0);
+        wm.ensure_covers(1).unwrap();
+        assert_eq!(wm.floor(), WATERMARK_CHUNK);
+        // covered ids cost nothing (no rewrite): floor is unchanged
+        wm.ensure_covers(500).unwrap();
+        assert_eq!(wm.floor(), WATERMARK_CHUNK);
+        // crossing the chunk bumps to the next multiple
+        wm.ensure_covers(WATERMARK_CHUNK).unwrap();
+        assert_eq!(wm.floor(), 2 * WATERMARK_CHUNK);
+        drop(wm);
+        // a "restarted" allocator reads the burned floor back
+        let wm = IdWatermark::open(path).unwrap();
+        assert_eq!(wm.floor(), 2 * WATERMARK_CHUNK);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn watermark_rejects_garbage_and_ignores_stale_tmp() {
+        let dir = fresh_dir("garbage");
+        let path = dir.join("next-id");
+        std::fs::write(&path, "not-a-number").unwrap();
+        assert!(IdWatermark::open(path.clone()).is_err());
+        std::fs::write(&path, "2048").unwrap();
+        // a crash between write and rename leaves a .tmp; it must not
+        // shadow the committed value and gets overwritten on next bump
+        std::fs::write(dir.join("next-id.tmp"), "999999").unwrap();
+        let wm = IdWatermark::open(path).unwrap();
+        assert_eq!(wm.floor(), 2048);
+        wm.ensure_covers(5000).unwrap();
+        assert_eq!(wm.floor(), 5 * WATERMARK_CHUNK);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -18,6 +18,12 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Maximum container nesting the parser accepts. The parser is
+/// recursive-descent, so unbounded depth is a stack overflow — an
+/// *abort*, not an `Err` — on adversarial input like `[[[[…`; 128 is far
+/// beyond anything the crate writes (snapshot envelopes nest < 10).
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
@@ -25,7 +31,7 @@ impl Json {
             pos: 0,
         };
         p.skip_ws();
-        let v = p.value()?;
+        let v = p.value(0)?;
         p.skip_ws();
         if p.pos != p.bytes.len() {
             return Err(p.err("trailing characters"));
@@ -238,10 +244,13 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -380,7 +389,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
@@ -390,7 +399,7 @@ impl<'a> Parser<'a> {
         }
         loop {
             self.skip_ws();
-            out.push(self.value()?);
+            out.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.peek() {
                 Some(b',') => self.pos += 1,
@@ -403,7 +412,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> Result<Json, JsonError> {
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
         self.expect(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
@@ -417,7 +426,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             self.expect(b':')?;
             self.skip_ws();
-            let val = self.value()?;
+            let val = self.value(depth + 1)?;
             out.insert(key, val);
             self.skip_ws();
             match self.peek() {
@@ -568,6 +577,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // an adversarial client can send megabytes of "[[[["; the parser
+        // must return Err, not blow the thread stack (an abort)
+        for (open, close) in [("[", "]"), (r#"{"k":"#, "}")] {
+            let deep =
+                open.repeat(100_000) + "null" + &close.repeat(100_000);
+            let err = Json::parse(&deep).unwrap_err();
+            assert!(err.msg.contains("nesting"), "{}", err.msg);
+        }
+        // unterminated nesting bombs die the same way
+        assert!(Json::parse(&"[".repeat(1_000_000)).is_err());
+        // realistic depth stays fine
+        let ok = "[".repeat(64) + "1" + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Cross-kind negative tests: mismatched, forged and corrupted snapshot
+//! envelopes must fail with a structured error — and the shard must keep
+//! serving as if nothing happened.
+//!
+//! Covered: restoring a v2 envelope whose `kind` tag belongs to a
+//! different family than its `spec`; warming an id whose *parked*
+//! envelope was written under a different kind than its spec claims;
+//! v1-shim envelopes with corrupted or dense-baseline specs; and a v2
+//! envelope whose net payload is garbage.
+
+use ccn_rtrl::config::LearnerKind;
+use ccn_rtrl::learn::TdConfig;
+use ccn_rtrl::serve::protocol::{Request, Response};
+use ccn_rtrl::serve::{Service, Session, SessionSpec, ShardState};
+use ccn_rtrl::store::SessionStore;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn ok(reply: &str) -> Json {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(true)),
+        "expected ok response, got: {reply}"
+    );
+    v
+}
+
+fn err(reply: &str) -> String {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(false)),
+        "expected error response, got: {reply}"
+    );
+    v.get("error").and_then(|e| e.as_str()).unwrap().to_string()
+}
+
+fn spec_of(learner: LearnerKind, seed: u64) -> SessionSpec {
+    SessionSpec {
+        learner,
+        n_inputs: 3,
+        td: TdConfig {
+            alpha: 0.01,
+            gamma: 0.9,
+            lambda: 0.9,
+        },
+        eps: 0.01,
+        seed,
+    }
+}
+
+/// A driven session's v2 envelope, as `Json`.
+fn envelope_of(learner: LearnerKind, seed: u64, steps: usize) -> Json {
+    let mut s = Session::open(spec_of(learner, seed)).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x5eed);
+    for _ in 0..steps {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        s.step(&x, 0.1).unwrap();
+    }
+    s.snapshot()
+}
+
+fn mutate(
+    envelope: &Json,
+    f: impl FnOnce(&mut std::collections::BTreeMap<String, Json>),
+) -> Json {
+    match envelope.clone() {
+        Json::Obj(mut o) => {
+            f(&mut o);
+            Json::Obj(o)
+        }
+        other => panic!("envelope must be an object, got {other:?}"),
+    }
+}
+
+fn restore_line(state: &Json) -> String {
+    Json::obj(vec![("op", Json::Str("restore".into())), ("state", state.clone())])
+        .dump()
+}
+
+/// After each rejected restore the service must still open, step and
+/// answer stats — the error was the session's, never the shard's.
+fn assert_still_serving(service: &Service, expect_sessions: f64) {
+    let id = ok(&service.handle_line(
+        r#"{"op":"open","learner":"columnar:4","n_inputs":3,"seed":99}"#,
+    ))
+    .get("id")
+    .unwrap()
+    .as_f64()
+    .unwrap() as u64;
+    let y = ok(&service.handle_line(&format!(
+        r#"{{"op":"step","id":{id},"x":[0.1,0.2,0.3],"c":0.5}}"#
+    )))
+    .get("y")
+    .unwrap()
+    .as_f64()
+    .unwrap();
+    assert!(y.is_finite());
+    ok(&service.handle_line(&format!(r#"{{"op":"close","id":{id}}}"#)));
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(stats.get("sessions"), Some(&Json::Num(expect_sessions)));
+}
+
+#[test]
+fn restore_rejects_kind_spec_family_mismatch_over_the_wire() {
+    let service = Service::new(2);
+    // a tbptt envelope whose kind tag is forged to the columnar family
+    let envelope = envelope_of(LearnerKind::Tbptt { d: 3, k: 5 }, 1, 40);
+    let forged = mutate(&envelope, |o| {
+        o.insert("kind".into(), Json::Str("columnar".into()));
+    });
+    let msg = err(&service.handle_line(&restore_line(&forged)));
+    assert!(msg.contains("does not match"), "{msg}");
+    // and the symmetric forgery: columnar envelope, snap1 kind tag
+    let envelope = envelope_of(LearnerKind::Columnar { d: 4 }, 2, 40);
+    let forged = mutate(&envelope, |o| {
+        o.insert("kind".into(), Json::Str("snap1".into()));
+    });
+    let msg = err(&service.handle_line(&restore_line(&forged)));
+    assert!(msg.contains("does not match"), "{msg}");
+    // unknown kinds name themselves in the error
+    let forged = mutate(&envelope, |o| {
+        o.insert("kind".into(), Json::Str("hopfield".into()));
+    });
+    let msg = err(&service.handle_line(&restore_line(&forged)));
+    assert!(msg.contains("hopfield") || msg.contains("does not match"), "{msg}");
+    assert_still_serving(&service, 0.0);
+}
+
+#[test]
+fn restore_rejects_corrupted_net_payload_and_keeps_serving() {
+    let service = Service::new(1);
+    let envelope = envelope_of(LearnerKind::Snap1 { d: 3 }, 3, 30);
+    for wreck in [
+        mutate(&envelope, |o| {
+            o.insert("net".into(), Json::Str("zeroed".into()));
+        }),
+        mutate(&envelope, |o| {
+            o.insert("net".into(), Json::obj(vec![("w", Json::Null)]));
+        }),
+        mutate(&envelope, |o| {
+            o.remove("td");
+        }),
+        mutate(&envelope, |o| {
+            o.remove("spec");
+        }),
+    ] {
+        err(&service.handle_line(&restore_line(&wreck)));
+    }
+    assert_still_serving(&service, 0.0);
+}
+
+#[test]
+fn v1_shim_rejects_corrupted_and_dense_specs() {
+    let service = Service::new(1);
+    // v1 envelopes cover the CCN family only: a dense-baseline spec in a
+    // v1 wrapper is a forgery, not a migration
+    let envelope = envelope_of(LearnerKind::Tbptt { d: 2, k: 4 }, 4, 20);
+    let v1_dense = mutate(&envelope, |o| {
+        o.insert("v".into(), Json::Num(1.0));
+        o.remove("kind");
+    });
+    let msg = err(&service.handle_line(&restore_line(&v1_dense)));
+    assert!(msg.contains("v1"), "{msg}");
+    // a v1 envelope whose spec is garbled must fail as a bad spec, not
+    // restore with defaults
+    let ccn = envelope_of(
+        LearnerKind::Ccn {
+            total: 4,
+            per_stage: 2,
+            steps_per_stage: 50,
+        },
+        5,
+        60,
+    );
+    let v1_broken_spec = mutate(&ccn, |o| {
+        o.insert("v".into(), Json::Num(1.0));
+        o.remove("kind");
+        o.insert(
+            "spec".into(),
+            Json::obj(vec![("learner", Json::Str("ccn:4:2:50".into()))]),
+        );
+    });
+    let msg = err(&service.handle_line(&restore_line(&v1_broken_spec)));
+    assert!(msg.contains("spec"), "{msg}");
+    let v1_no_spec = mutate(&ccn, |o| {
+        o.insert("v".into(), Json::Num(1.0));
+        o.remove("kind");
+        o.remove("spec");
+    });
+    err(&service.handle_line(&restore_line(&v1_no_spec)));
+    assert_still_serving(&service, 0.0);
+}
+
+/// `warm` of an id whose parked envelope carries a different kind than
+/// its spec claims: the rehydration must fail loudly (naming the id),
+/// stay failed on retry, and leave the shard fully operational.
+#[test]
+fn warm_of_id_parked_under_a_different_kind_fails_loudly() {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let dir = std::env::temp_dir().join(format!(
+        "ccn-crosskind-{}-{nanos}",
+        std::process::id()
+    ));
+    let mut store = SessionStore::open(&dir).unwrap();
+    // a tbptt envelope, re-tagged so the store believes it parks a
+    // columnar-family session (a corrupted or forged durable record)
+    let envelope = envelope_of(LearnerKind::Tbptt { d: 3, k: 5 }, 7, 25);
+    let forged = mutate(&envelope, |o| {
+        o.insert("kind".into(), Json::Str("ccn".into()));
+    });
+    store.park(5, &forged).unwrap();
+    // an honest parked neighbor proves the store itself still works
+    let honest = envelope_of(LearnerKind::Snap1 { d: 3 }, 8, 25);
+    store.park(6, &honest).unwrap();
+
+    let mut shard = ShardState::with_store(Some(store), 0);
+    for attempt in 0..2 {
+        match shard.handle(Request::Warm { id: 5 }) {
+            Response::Error { message } => {
+                assert!(
+                    message.contains("rehydrate session 5"),
+                    "attempt {attempt}: {message}"
+                );
+                assert!(
+                    message.contains("does not match"),
+                    "attempt {attempt}: {message}"
+                );
+            }
+            other => panic!("forged warm must fail, got {other:?}"),
+        }
+    }
+    // stepping the forged id fails the same way (step rehydrates too)
+    match shard.handle(Request::Step {
+        id: 5,
+        x: vec![0.1, 0.2, 0.3],
+        c: 0.0,
+    }) {
+        Response::Error { message } => {
+            assert!(message.contains("rehydrate"), "{message}")
+        }
+        other => panic!("forged step must fail, got {other:?}"),
+    }
+    // the shard still serves: honest parked sessions warm, fresh ones open
+    match shard.handle(Request::Warm { id: 6 }) {
+        Response::Warmed { rehydrated, .. } => assert!(rehydrated),
+        other => panic!("honest warm failed: {other:?}"),
+    }
+    match shard.handle(Request::Open {
+        id: 11,
+        spec: spec_of(LearnerKind::Columnar { d: 4 }, 12),
+    }) {
+        Response::Opened { id } => assert_eq!(id, 11),
+        other => panic!("open after forgery failed: {other:?}"),
+    }
+    match shard.handle(Request::Step {
+        id: 11,
+        x: vec![0.1, 0.2, 0.3],
+        c: 0.1,
+    }) {
+        Response::Stepped { y } => assert!(y.is_finite()),
+        other => panic!("step after forgery failed: {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,314 @@
+//! Protocol torture/property suite: seeded-random malformed JSONL fed
+//! straight into the serve loop.
+//!
+//! The contract under test: **every** input line — truncated requests,
+//! surrogate-abusing strings, nesting bombs, wrong-typed fields,
+//! megabyte lines, valid ops aimed at nonsense ids — yields exactly one
+//! parseable JSON response carrying an `"ok"` boolean. Never a panic,
+//! never a wedged shard: sessions opened *before* the garbage keep
+//! stepping bit-exactly *after* it (verified against twin sessions on a
+//! service that never saw the storm).
+
+use ccn_rtrl::serve::Service;
+use ccn_rtrl::util::check::{check, Gen};
+use ccn_rtrl::util::json::Json;
+
+const KINDS: [&str; 5] = [
+    "columnar:4",
+    "constructive:4:60",
+    "ccn:6:2:60",
+    "tbptt:3:8",
+    "snap1:3",
+];
+
+fn ok(reply: &str) -> Json {
+    let v = Json::parse(reply).expect("response must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(true)),
+        "expected ok response, got: {reply}"
+    );
+    v
+}
+
+fn open_id(service: &Service, spec: &str, seed: u64) -> u64 {
+    let line = format!(
+        r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":{seed}}}"#
+    );
+    ok(&service.handle_line(&line)).get("id").unwrap().as_f64().unwrap() as u64
+}
+
+fn step_line(id: u64, x: &[f32], c: f32) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}],"c":{c}}}"#, xs.join(","))
+}
+
+fn step_y(service: &Service, line: &str) -> f64 {
+    ok(&service.handle_line(line)).get("y").unwrap().as_f64().unwrap()
+}
+
+/// The reply contract: one line, valid JSON, with a boolean `"ok"`.
+fn assert_contract(line: &str, reply: &str) -> Result<(), String> {
+    if reply.contains('\n') {
+        return Err(format!("multi-line reply to {line:?}: {reply:?}"));
+    }
+    let v = Json::parse(reply)
+        .map_err(|e| format!("unparseable reply to {line:?}: {e}"))?;
+    match v.get("ok") {
+        Some(Json::Bool(_)) => Ok(()),
+        other => Err(format!(
+            "reply to {line:?} has no boolean 'ok' (got {other:?}): {reply}"
+        )),
+    }
+}
+
+/// One seeded malformed (or adversarially shaped) request line.
+fn garbage_line(g: &mut Gen, live_ids: &[u64]) -> String {
+    let id = live_ids[g.usize_in(0, live_ids.len() - 1)];
+    match g.usize_in(0, 11) {
+        // raw character soup (always valid utf-8: handle_line takes &str)
+        0 => {
+            const POOL: &[char] = &[
+                '{', '}', '[', ']', '"', ':', ',', '\\', 'a', '0', '-',
+                '.', ' ', '\t', 'π', '😀', '\u{0000}', '\u{FFFD}', 'e',
+                'n', 'u', 'l', 't', 'r',
+            ];
+            let len = g.sized_usize(1, 200);
+            (0..len).map(|_| POOL[g.usize_in(0, POOL.len() - 1)]).collect()
+        }
+        // a valid request truncated at a random char boundary
+        1 => {
+            let full = if g.bool() {
+                step_line(id, &[0.1, -0.2, 0.3], 0.5)
+            } else {
+                format!(
+                    r#"{{"op":"open","learner":"{}","n_inputs":3,"seed":1}}"#,
+                    KINDS[g.usize_in(0, KINDS.len() - 1)]
+                )
+            };
+            let cut = g.usize_in(0, full.chars().count().saturating_sub(1));
+            full.chars().take(cut).collect()
+        }
+        // surrogate-abusing \u escapes (lone halves, reversed pairs)
+        2 => {
+            const BAD: [&str; 5] = [
+                r#"{"op":"open","learner":"\ud800","n_inputs":3}"#,
+                r#"{"op":"\udc00step","id":1}"#,
+                r#"{"op":"step","id":1,"x":[1,2,3],"c":0,"tag":"\ud800x"}"#,
+                r#"{"op":"\ude00\ud83d"}"#,
+                r#"{"\ud800":1,"op":"stats"}"#,
+            ];
+            BAD[g.usize_in(0, BAD.len() - 1)].to_string()
+        }
+        // a *valid* surrogate pair: parses, then fails as unknown op
+        3 => r#"{"op":"😀"}"#.to_string(),
+        // nesting bombs, bare and tucked inside a field of a valid op
+        // (depths straddle the parser's MAX_DEPTH of 128)
+        4 => {
+            let depth = g.usize_in(4, 4_000);
+            if g.bool() {
+                "[".repeat(depth)
+            } else {
+                format!(
+                    r#"{{"op":"step","id":{id},"x":{}{}{},"c":0}}"#,
+                    "[".repeat(depth),
+                    "0.5",
+                    "]".repeat(depth)
+                )
+            }
+        }
+        // wrong-typed fields on every op
+        5 => {
+            let templates = [
+                r#"{"op":"step","id":"one","x":[1,2,3],"c":0}"#.to_string(),
+                r#"{"op":"step","id":-4,"x":[1,2,3],"c":0}"#.to_string(),
+                format!(r#"{{"op":"step","id":{id},"x":"wide","c":0}}"#),
+                format!(r#"{{"op":"step","id":{id},"x":[1,"a",3],"c":0}}"#),
+                format!(r#"{{"op":"step","id":{id},"x":[1,2,3],"c":[]}}"#),
+                r#"{"op":"open","learner":42,"n_inputs":3}"#.to_string(),
+                r#"{"op":"open","learner":"columnar:4","n_inputs":"3"}"#
+                    .to_string(),
+                r#"{"op":"open","learner":"columnar:4","n_inputs":3,"alpha":{"v":1}}"#
+                    .to_string(),
+                r#"{"op":"restore","state":"not-an-envelope"}"#.to_string(),
+                r#"{"op":"restore","state":{"v":99,"kind":"columnar"}}"#
+                    .to_string(),
+                r#"{"op":"step_batch","ids":[1,2],"xs":[[1]],"cs":[0,0]}"#
+                    .to_string(),
+                r#"{"op":"step_batch","ids":"all","xs":[],"cs":[]}"#.to_string(),
+                format!(r#"{{"op":"snapshot","id":{}}}"#, u64::MAX),
+                r#"{"op":null}"#.to_string(),
+                r#"[{"op":"stats"}]"#.to_string(),
+                r#""stats""#.to_string(),
+                r#"12345"#.to_string(),
+            ];
+            templates[g.usize_in(0, templates.len() - 1)].clone()
+        }
+        // big lines: tens-of-KB to ~0.5MB of x payload or string junk
+        // (the flat-1MB case has its own dedicated test)
+        6 => {
+            let n = g.usize_in(10, 60_000);
+            if g.bool() {
+                // a huge (wrong-width) observation on a real session
+                let xs = vec!["0.125"; n].join(",");
+                format!(r#"{{"op":"step","id":{id},"x":[{xs}],"c":0}}"#)
+            } else {
+                format!(r#"{{"op":"open","learner":"{}"}}"#, "g".repeat(n * 8))
+            }
+        }
+        // valid ops aimed at ids that do not exist
+        7 => {
+            let ghost = 10_000 + g.usize_in(0, 1000) as u64;
+            let ops = [
+                step_line(ghost, &[0.1, 0.2, 0.3], 0.0),
+                format!(r#"{{"op":"snapshot","id":{ghost}}}"#),
+                format!(r#"{{"op":"close","id":{ghost}}}"#),
+                format!(r#"{{"op":"park","id":{ghost}}}"#),
+                format!(r#"{{"op":"warm","id":{ghost}}}"#),
+                format!(r#"{{"op":"predict","id":{ghost},"x":[1,2,3]}}"#),
+            ];
+            ops[g.usize_in(0, ops.len() - 1)].clone()
+        }
+        // structurally valid JSON that is not a request object
+        8 => {
+            const SHAPES: [&str; 5] =
+                ["null", "true", "[]", "{}", r#"{"ok":true}"#];
+            SHAPES[g.usize_in(0, SHAPES.len() - 1)].to_string()
+        }
+        // duplicate keys / trailing junk / unterminated strings
+        9 => {
+            const SHAPES: [&str; 4] = [
+                r#"{"op":"stats","op":"step"}"#,
+                r#"{"op":"stats"} {"op":"stats"}"#,
+                r#"{"op":"stats"#,
+                r#"{"op":"stats"}]"#,
+            ];
+            SHAPES[g.usize_in(0, SHAPES.len() - 1)].to_string()
+        }
+        // bad escapes and bad numbers
+        10 => {
+            const SHAPES: [&str; 5] = [
+                r#"{"op":"step","id":1e999,"x":[1,2,3],"c":0}"#,
+                r#"{"op":"step","id":1,"x":[1,2,3],"c":-}"#,
+                r#"{"op":"step","id":1,"x":[01],"c":0}"#,
+                r#"{"op":"st\qep"}"#,
+                r#"{"op":"step","id":1,"x":[1,2,3],"c":0,}"#,
+            ];
+            SHAPES[g.usize_in(0, SHAPES.len() - 1)].to_string()
+        }
+        // a wrong-width but otherwise perfect step on a live session
+        _ => step_line(id, &[0.5; 7], 0.1),
+    }
+}
+
+#[test]
+fn torture_lines_never_wedge_the_service_or_corrupt_sessions() {
+    let service = Service::new(2);
+    let twin = Service::new(2);
+    let mut ids = Vec::new();
+    for (s, spec) in KINDS.iter().enumerate() {
+        let a = open_id(&service, spec, s as u64);
+        let b = open_id(&twin, spec, s as u64);
+        assert_eq!(a, b, "twin services must allocate identical ids");
+        ids.push(a);
+    }
+    // settle both populations identically before the storm
+    for t in 0..30 {
+        for &id in &ids {
+            let line = step_line(id, &[0.1, -0.05 * t as f32, 0.3], 0.2);
+            assert_eq!(step_y(&service, &line), step_y(&twin, &line));
+        }
+    }
+    // the storm: garbage interleaved with valid traffic; every reply
+    // honors the contract and valid traffic stays bit-exact throughout
+    check("protocol torture", 120, |g| {
+        for _ in 0..g.usize_in(1, 4) {
+            let line = garbage_line(g, &ids);
+            let reply = service.handle_line(&line);
+            assert_contract(&line, &reply)?;
+        }
+        let id = ids[g.usize_in(0, ids.len() - 1)];
+        let x = g.f32_vec(3, -1.0, 1.0);
+        let c = g.f32_in(-0.5, 0.5);
+        let line = step_line(id, &x, c);
+        let ya = step_y(&service, &line);
+        let yb = step_y(&twin, &line);
+        if ya != yb {
+            return Err(format!(
+                "session {id} diverged from its twin after garbage: {ya} vs {yb}"
+            ));
+        }
+        Ok(())
+    });
+    // after the storm: every session still steps bit-exactly, and the
+    // service still answers aggregates
+    for t in 0..50 {
+        for &id in &ids {
+            let line = step_line(id, &[0.01 * t as f32, 0.2, -0.3], -0.1);
+            assert_eq!(
+                step_y(&service, &line),
+                step_y(&twin, &line),
+                "session {id} corrupted by the torture run"
+            );
+        }
+    }
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(
+        stats.get("sessions"),
+        Some(&Json::Num(KINDS.len() as f64)),
+        "sessions lost during the torture run"
+    );
+}
+
+/// A flat 1MB line — one valid-shaped op with a massive payload and one
+/// of pure noise — must produce a single error reply, not a hang or OOM
+/// spiral, and the service must keep serving.
+#[test]
+fn megabyte_lines_get_one_error_reply_each() {
+    let service = Service::new(1);
+    let id = open_id(&service, "columnar:4", 0);
+    let xs = vec!["0.25"; 131_072].join(","); // ~0.8MB of numbers
+    let wide = format!(r#"{{"op":"step","id":{id},"x":[{xs}],"c":0}}"#);
+    assert!(wide.len() > 700_000);
+    let reply = service.handle_line(&wide);
+    assert_contract(&wide, &reply).unwrap();
+    assert!(reply.contains("\"ok\":false"), "oversized x must error: {reply}");
+
+    let noise = "x".repeat(1 << 20);
+    let reply = service.handle_line(&noise);
+    assert_contract(&noise, &reply).unwrap();
+    assert!(reply.contains("\"ok\":false"));
+
+    // still alive and numerically sane
+    let y = step_y(&service, &step_line(id, &[0.1, 0.2, 0.3], 0.5));
+    assert!(y.is_finite());
+}
+
+/// The parser rejects lone surrogates and nesting bombs with errors (not
+/// aborts), and the serve loop wraps those errors in the reply contract.
+#[test]
+fn surrogates_and_nesting_bombs_are_structured_errors() {
+    let service = Service::new(1);
+    for line in [
+        r#"{"op":"open","learner":"\ud800bad","n_inputs":3}"#.to_string(),
+        r#"{"op":"\udc00"}"#.to_string(),
+        "[".repeat(500_000),
+        format!(r#"{{"x":{}1{}}}"#, "[".repeat(3_000), "]".repeat(3_000)),
+    ] {
+        let reply = service.handle_line(&line);
+        assert_contract(&line, &reply).unwrap();
+        assert!(
+            reply.contains("\"ok\":false"),
+            "line {:.40}... must error, got {reply}",
+            line
+        );
+    }
+    // a *paired* surrogate is legal JSON — it fails later, as an op error
+    let reply = service.handle_line(r#"{"op":"😀"}"#);
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        v.get("error").and_then(|e| e.as_str()).unwrap().contains("unknown op"),
+        "{reply}"
+    );
+}

@@ -241,11 +241,51 @@ fn kill_preserves_parked_sessions_only() {
     assert!(y.is_finite());
     let msg = err(&service.handle_line(&step_line(id_lost, &[0.0; 3], 0.0)));
     assert!(msg.contains("no session"), "{msg}");
-    // new ids never collide with surviving (parked) sessions — the id
-    // watermark restarts above the highest parked id; ids of sessions
-    // that died with the process are free for reuse
+    // new ids never collide with *any* pre-crash id: parked survivors
+    // are covered by the boot scan, and never-parked casualties by the
+    // persisted next-id watermark
     let fresh = open_id(&service, "snap1:3", 9);
     assert!(fresh > id_parked, "fresh id {fresh} collides with survivor");
+    assert!(fresh > id_lost, "fresh id {fresh} reuses a dead session's id");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Regression (ROADMAP fix): before the persisted next-id watermark, a
+/// crash forgot every id that was never parked — the next boot started
+/// the allocator just above the highest *parked* id, so a client still
+/// holding a pre-crash id could silently end up talking to a stranger's
+/// fresh session. Now every handed-out id is durably burned first.
+#[test]
+fn next_id_watermark_survives_kill_without_any_parks() {
+    let dir = fresh_dir("watermark");
+    let cfg = StoreConfig::new(&dir, 0);
+    let mut pre_crash = Vec::new();
+    {
+        let service = Service::with_store(2, Some(cfg.clone())).unwrap();
+        for s in 0..5u64 {
+            let id = open_id(&service, KINDS[s as usize % KINDS.len()], s);
+            step_y(&service, id, &[0.1, 0.2, 0.3], 0.1);
+            pre_crash.push(id);
+        }
+        // dropped without close(): nothing was ever parked, the store
+        // segments are empty — only the watermark knows these ids
+    }
+    let service = Service::with_store(2, Some(cfg.clone())).unwrap();
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    assert_eq!(num(&stats, "sessions"), 0.0, "nothing parked, nothing resumes");
+    let max_pre = *pre_crash.iter().max().unwrap();
+    for s in 0..5u64 {
+        let fresh = open_id(&service, "columnar:4", 100 + s);
+        assert!(
+            fresh > max_pre,
+            "post-crash id {fresh} reuses a pre-crash id (max was {max_pre})"
+        );
+    }
+    drop(service);
+    // a second crash/restart cycle keeps the floor monotone
+    let service = Service::with_store(2, Some(cfg)).unwrap();
+    let again = open_id(&service, "snap1:3", 7);
+    assert!(again > max_pre, "watermark floor regressed to {again}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
 

@@ -1,0 +1,484 @@
+//! End-to-end tests of the TCP/UDS transport: concurrent clients drive
+//! the serve protocol over real sockets.
+//!
+//! The acceptance soak: 8 concurrent TCP clients, each owning several
+//! mixed-kind sessions, step them through a live listener; afterwards
+//! every session's snapshot is **bit-identical** to a single-threaded
+//! stdio replay of the same per-session op sequence. Plus: UDS
+//! roundtrip, `--max-conns` refusal, disconnect cleanup, per-connection
+//! stats tagging, and a store-backed shutdown/restart (flush + id
+//! watermark) over the wire.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Barrier};
+
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::store::StoreConfig;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+const KINDS: [&str; 5] = [
+    "columnar:4",
+    "constructive:4:60",
+    "ccn:6:2:60",
+    "tbptt:3:8",
+    "snap1:3",
+];
+
+/// A blocking JSONL client: one call = one request line, one reply line.
+struct Client<S: Read + Write> {
+    reader: BufReader<S>,
+    writer: S,
+}
+
+impl Client<TcpStream> {
+    /// Connect to a [`Server::local_addr`] string (`tcp://HOST:PORT`).
+    fn connect_tcp(local: &str) -> Client<TcpStream> {
+        let hostport = local.strip_prefix("tcp://").expect("tcp local addr");
+        let stream = TcpStream::connect(hostport).expect("connect");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+}
+
+impl Client<UnixStream> {
+    fn connect_unix(path: &std::path::Path) -> Client<UnixStream> {
+        let stream = UnixStream::connect(path).expect("connect uds");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+}
+
+impl<S: Read + Write> Client<S> {
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("recv");
+        assert!(
+            reply.ends_with('\n'),
+            "reply must be one full line, got {reply:?}"
+        );
+        Json::parse(reply.trim()).expect("reply must be valid json")
+    }
+
+    fn call_ok(&mut self, line: &str) -> Json {
+        let v = self.call(line);
+        assert_eq!(
+            v.get("ok"),
+            Some(&Json::Bool(true)),
+            "expected ok reply to {line}: {v:?}"
+        );
+        v
+    }
+
+    fn open(&mut self, spec: &str, seed: u64) -> u64 {
+        let line = format!(
+            r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":{seed}}}"#
+        );
+        self.call_ok(&line).get("id").unwrap().as_f64().unwrap() as u64
+    }
+}
+
+/// The shared step-line builder: the soak client and the stdio replay
+/// must format observations identically so the comparison is bit-exact.
+fn step_line(id: u64, x: &[f32], c: f32) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}],"c":{c}}}"#, xs.join(","))
+}
+
+/// One session's pre-generated workload (ids are assigned at open time,
+/// so only the raw observations are fixed up front).
+struct SessionPlan {
+    spec: &'static str,
+    seed: u64,
+    steps: Vec<(Vec<f32>, f32)>,
+}
+
+fn make_plan(spec: &'static str, seed: u64, n_steps: usize) -> SessionPlan {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x50a1);
+    let steps = (0..n_steps)
+        .map(|_| {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (x, rng.uniform(-0.5, 0.5))
+        })
+        .collect();
+    SessionPlan { spec, seed, steps }
+}
+
+/// The ISSUE acceptance test: >= 8 concurrent TCP clients, mixed kinds,
+/// results bit-identical to a single-threaded stdio replay.
+#[test]
+fn tcp_soak_8_clients_bit_identical_to_stdio_replay() {
+    const CLIENTS: usize = 8;
+    const SESSIONS_PER_CLIENT: usize = 3;
+    const STEPS: usize = 40;
+
+    let server = Server::bind(
+        Service::new(3),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let local = server.local_addr().to_string();
+
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let mut joins = Vec::new();
+    for k in 0..CLIENTS {
+        let local = local.clone();
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || {
+            let mut client = Client::connect_tcp(&local);
+            let plans: Vec<SessionPlan> = (0..SESSIONS_PER_CLIENT)
+                .map(|j| {
+                    let n = k * SESSIONS_PER_CLIENT + j;
+                    make_plan(KINDS[n % KINDS.len()], 1000 + n as u64, STEPS)
+                })
+                .collect();
+            let ids: Vec<u64> = plans
+                .iter()
+                .map(|p| client.open(p.spec, p.seed))
+                .collect();
+            // all clients are connected with sessions open: one client
+            // observes the full concurrency through `stats`
+            barrier.wait();
+            if k == 0 {
+                let stats = client.call_ok(r#"{"op":"stats"}"#);
+                let transport = stats.get("transport").expect("transport block");
+                assert_eq!(
+                    transport.get("active_conns"),
+                    Some(&Json::Num(CLIENTS as f64)),
+                    "soak must run {CLIENTS} concurrent clients: {transport:?}"
+                );
+                assert_eq!(
+                    transport.get("conns").unwrap().as_arr().unwrap().len(),
+                    CLIENTS
+                );
+            }
+            barrier.wait();
+            // interleave this client's sessions round-robin; replies are
+            // strictly in request order (one in flight per connection)
+            for t in 0..STEPS {
+                for (p, &id) in plans.iter().zip(&ids) {
+                    let (x, c) = &p.steps[t];
+                    let y = client
+                        .call_ok(&step_line(id, x, *c))
+                        .get("y")
+                        .unwrap()
+                        .as_f64()
+                        .unwrap();
+                    assert!(y.is_finite());
+                }
+            }
+            plans
+                .iter()
+                .zip(&ids)
+                .map(|(p, &id)| {
+                    let snap = client
+                        .call_ok(&format!(r#"{{"op":"snapshot","id":{id}}}"#))
+                        .get("state")
+                        .unwrap()
+                        .clone();
+                    (p.spec, p.seed, p.steps.clone(), snap)
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let mut outcomes = Vec::new();
+    for join in joins {
+        outcomes.extend(join.join().expect("client thread panicked"));
+    }
+    assert_eq!(server.shutdown().unwrap(), 0, "storeless server flushes nothing");
+
+    // single-threaded stdio replay of every per-session op sequence
+    let replay = Service::new(1);
+    for (spec, seed, steps, transported) in outcomes {
+        let open = format!(
+            r#"{{"op":"open","learner":"{spec}","n_inputs":3,"seed":{seed}}}"#
+        );
+        let v = Json::parse(&replay.handle_line(&open)).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{v:?}");
+        let id = v.get("id").unwrap().as_f64().unwrap() as u64;
+        for (x, c) in &steps {
+            let r = Json::parse(&replay.handle_line(&step_line(id, x, *c))).unwrap();
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r:?}");
+        }
+        let r = Json::parse(
+            &replay.handle_line(&format!(r#"{{"op":"snapshot","id":{id}}}"#)),
+        )
+        .unwrap();
+        let replayed = r.get("state").unwrap();
+        assert_eq!(
+            &transported, replayed,
+            "session (spec {spec}, seed {seed}) is not bit-identical to \
+             its stdio replay"
+        );
+    }
+}
+
+#[test]
+fn uds_roundtrip_serves_the_full_protocol() {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let path = std::env::temp_dir()
+        .join(format!("ccn-uds-{}-{nanos}.sock", std::process::id()));
+    let server = Server::bind(
+        Service::new(2),
+        &ListenAddr::Unix(path.clone()),
+        0,
+    )
+    .unwrap();
+    let mut client = Client::connect_unix(&path);
+    let id = client.open("tbptt:3:8", 4);
+    for _ in 0..20 {
+        let y = client
+            .call_ok(&step_line(id, &[0.1, -0.2, 0.3], 0.25))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(y.is_finite());
+    }
+    let snap = client
+        .call_ok(&format!(r#"{{"op":"snapshot","id":{id}}}"#))
+        .get("state")
+        .unwrap()
+        .clone();
+    assert_eq!(snap.get("kind").and_then(|k| k.as_str()), Some("tbptt"));
+    let restore =
+        Json::obj(vec![("op", Json::Str("restore".into())), ("state", snap)]);
+    let id2 = client
+        .call_ok(&restore.dump())
+        .get("id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    // original and restore answer identically through the socket
+    for _ in 0..20 {
+        let ya = client.call_ok(&step_line(id, &[0.3, 0.1, -0.4], 0.0));
+        let yb = client.call_ok(&step_line(id2, &[0.3, 0.1, -0.4], 0.0));
+        assert_eq!(ya.get("y"), yb.get("y"));
+    }
+    let stats = client.call_ok(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("sessions"), Some(&Json::Num(2.0)));
+    let transport = stats.get("transport").unwrap();
+    assert_eq!(transport.get("active_conns"), Some(&Json::Num(1.0)));
+    client.call_ok(&format!(r#"{{"op":"close","id":{id2}}}"#));
+    server.shutdown().unwrap();
+    assert!(!path.exists(), "shutdown must remove the socket file");
+}
+
+#[test]
+fn max_conns_refuses_with_an_error_line_then_recovers() {
+    let server = Server::bind(
+        Service::new(1),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        1,
+    )
+    .unwrap();
+    let local = server.local_addr().to_string();
+    let mut first = Client::connect_tcp(&local);
+    // a full round trip proves the first client is accepted + registered
+    first.call_ok(r#"{"op":"stats"}"#);
+
+    let hostport = local.strip_prefix("tcp://").unwrap();
+    let refused = TcpStream::connect(hostport).unwrap();
+    let mut reader = BufReader::new(refused);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        v.get("error").and_then(|e| e.as_str()).unwrap().contains("max-conns"),
+        "{v:?}"
+    );
+    // the refused socket is closed after the error line
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF");
+
+    // the refusal is counted, and the first client is unharmed
+    let stats = first.call_ok(r#"{"op":"stats"}"#);
+    let transport = stats.get("transport").unwrap();
+    assert_eq!(transport.get("refused"), Some(&Json::Num(1.0)));
+    assert_eq!(transport.get("max_conns"), Some(&Json::Num(1.0)));
+
+    // freeing the slot lets a new client in (poll: deregistration races
+    // the accept loop, and a refused socket may die mid-roundtrip)
+    drop(first);
+    let mut admitted = None;
+    for _ in 0..200 {
+        let stream = TcpStream::connect(hostport).unwrap();
+        let mut c = Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        };
+        let sent = writeln!(c.writer, r#"{{"op":"stats"}}"#)
+            .and_then(|()| c.writer.flush())
+            .is_ok();
+        let mut line = String::new();
+        if sent && c.reader.read_line(&mut line).unwrap_or(0) > 0 {
+            if let Ok(v) = Json::parse(line.trim()) {
+                if v.get("ok") == Some(&Json::Bool(true)) {
+                    admitted = Some(c);
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    let mut c = admitted.expect("a freed slot must admit a new client");
+    c.call_ok(r#"{"op":"stats"}"#);
+    server.shutdown().unwrap();
+}
+
+/// A client that streams far past the request-line cap (16MB) without a
+/// newline must get exactly one error reply once the line finally ends —
+/// with the excess drained, not buffered — and the connection (and
+/// server) must keep working afterwards.
+#[test]
+fn overlong_line_is_drained_with_one_error_and_the_conn_survives() {
+    let server = Server::bind(
+        Service::new(1),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let mut client = Client::connect_tcp(&server.local_addr().to_string());
+    let chunk = vec![b'a'; 1 << 20];
+    for _ in 0..17 {
+        client.writer.write_all(&chunk).unwrap();
+    }
+    client.writer.write_all(b"\n").unwrap();
+    client.writer.flush().unwrap();
+    let mut reply = String::new();
+    client.reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(reply.trim()).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(
+        v.get("error").and_then(|e| e.as_str()).unwrap().contains("exceeds"),
+        "{reply}"
+    );
+    // same connection, next line: business as usual
+    let id = client.open("columnar:4", 1);
+    let y = client
+        .call_ok(&step_line(id, &[0.1, 0.2, 0.3], 0.5))
+        .get("y")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(y.is_finite());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn disconnect_frees_the_connection_but_not_the_sessions() {
+    let server = Server::bind(
+        Service::new(1),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let local = server.local_addr().to_string();
+    let mut keeper = Client::connect_tcp(&local);
+    let id = {
+        let mut ephemeral = Client::connect_tcp(&local);
+        let id = ephemeral.open("columnar:4", 7);
+        ephemeral
+            .call_ok(&step_line(id, &[0.1, 0.2, 0.3], 0.5));
+        id
+        // ephemeral drops here: EOF on the server's reader
+    };
+    // the connection deregisters (poll for the reader to notice EOF)...
+    let mut active = usize::MAX;
+    for _ in 0..200 {
+        let stats = keeper.call_ok(r#"{"op":"stats"}"#);
+        let transport = stats.get("transport").unwrap();
+        active = transport.get("active_conns").unwrap().as_f64().unwrap() as usize;
+        if active == 1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(active, 1, "dropped client must deregister");
+    // ...but the session it opened is server-owned and lives on
+    let y = keeper
+        .call_ok(&step_line(id, &[0.1, 0.2, 0.3], 0.5))
+        .get("y")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(y.is_finite());
+    server.shutdown().unwrap();
+}
+
+/// Store-backed server over TCP: shutdown flushes every session; a
+/// restarted listener on the same store resumes them, and the persisted
+/// id watermark keeps post-restart ids collision-free.
+#[test]
+fn shutdown_flush_and_watermark_survive_a_transport_restart() {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let dir = std::env::temp_dir().join(format!(
+        "ccn-transport-store-{}-{nanos}",
+        std::process::id()
+    ));
+    let cfg = StoreConfig::new(&dir, 0);
+
+    let server = Server::bind(
+        Service::with_store(2, Some(cfg.clone())).unwrap(),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let mut client = Client::connect_tcp(&server.local_addr().to_string());
+    let mut ids = Vec::new();
+    for s in 0..3u64 {
+        let id = client.open(KINDS[s as usize % KINDS.len()], s);
+        for _ in 0..10 {
+            client.call_ok(&step_line(id, &[0.2, -0.1, 0.4], 0.1));
+        }
+        ids.push(id);
+    }
+    drop(client);
+    assert_eq!(server.shutdown().unwrap(), 3, "shutdown must flush all three");
+
+    let server = Server::bind(
+        Service::with_store(2, Some(cfg)).unwrap(),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let mut client = Client::connect_tcp(&server.local_addr().to_string());
+    let stats = client.call_ok(r#"{"op":"stats"}"#);
+    assert_eq!(stats.get("sessions"), Some(&Json::Num(3.0)));
+    assert_eq!(stats.get("parked"), Some(&Json::Num(3.0)));
+    // parked sessions step (transparent rehydration) through the socket
+    for &id in &ids {
+        let y = client
+            .call_ok(&step_line(id, &[0.0, 0.1, -0.2], 0.0))
+            .get("y")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(y.is_finite());
+    }
+    // the id watermark started above every pre-restart id
+    let fresh = client.open("snap1:3", 50);
+    assert!(
+        fresh > *ids.iter().max().unwrap(),
+        "post-restart id {fresh} collides with a pre-restart session"
+    );
+    drop(client);
+    assert_eq!(server.shutdown().unwrap(), 4);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
