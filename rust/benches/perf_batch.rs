@@ -1,0 +1,200 @@
+//! §SoA batch-membership bench: stepping throughput and evict/rehydrate
+//! latency of the capacity-padded [`ColumnarSessionBatch`] under session
+//! churn.
+//!
+//! The layout claim under test: membership ops are O(one lane's state),
+//! so a single evict (`swap_remove_lane`) or rehydrate (`push_lane`)
+//! costs the same against a 256-session resident batch as against a
+//! 16-session one — p50/p99 flat across batch sizes instead of scaling
+//! with them — and steady-state churn no longer erodes stepping
+//! throughput. Reports, per batch size: fused `step_all` steps/s with
+//! churn off and with churn on (one evict+rehydrate pair per tick), and
+//! the p50/p99 of the individual evict and rehydrate ops. Writes the
+//! record to `results/BENCH_batch.json` (override with CCN_BATCH_OUT) so
+//! the perf trajectory is machine-comparable across commits.
+//!
+//! Scale knobs (env vars):
+//!   CCN_BATCH_SIZES      comma-separated batch sizes   (default 16,64,256)
+//!   CCN_BATCH_TICKS      step_all passes per phase     (default 200)
+//!   CCN_BATCH_CHURN_OPS  evict+rehydrate pairs timed   (default 400)
+//!   CCN_BATCH_INPUTS     observation width             (default 8)
+//!   CCN_BATCH_D          columns per session           (default 8)
+//!   CCN_BATCH_OUT        result file                   (default results/BENCH_batch.json)
+
+use std::time::Instant;
+
+use ccn_rtrl::config::LearnerKind;
+use ccn_rtrl::learn::TdConfig;
+use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::serve::{ColumnarSessionBatch, Session, SessionSpec};
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn env_sizes(name: &str, default: &[usize]) -> Vec<usize> {
+    std::env::var(name)
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn main() {
+    let sizes = env_sizes("CCN_BATCH_SIZES", &[16, 64, 256]);
+    let ticks = env_usize("CCN_BATCH_TICKS", 200);
+    let churn_ops = env_usize("CCN_BATCH_CHURN_OPS", 400);
+    let n = env_usize("CCN_BATCH_INPUTS", 8);
+    let d = env_usize("CCN_BATCH_D", 8);
+    let out_path = std::env::var("CCN_BATCH_OUT")
+        .unwrap_or_else(|_| "results/BENCH_batch.json".into());
+    eprintln!(
+        "[perf_batch] batch sizes {sizes:?}, d={d}, n={n}, {ticks} ticks, \
+         {churn_ops} evict+rehydrate pairs"
+    );
+
+    let mut rows_table: Vec<Vec<String>> = Vec::new();
+    let mut rows_json: Vec<Json> = Vec::new();
+    for &bsz in &sizes {
+        // one real session per lane, opened through the serving surface
+        let mut batch: Option<ColumnarSessionBatch> = None;
+        for s in 0..bsz {
+            let session = Session::open(SessionSpec {
+                learner: LearnerKind::Columnar { d },
+                n_inputs: n,
+                td: TdConfig {
+                    alpha: 0.001,
+                    gamma: 0.9,
+                    lambda: 0.95,
+                },
+                eps: 0.01,
+                seed: s as u64,
+            })
+            .expect("open columnar session");
+            let spec = session
+                .columnar_batch_spec()
+                .expect("columnar sessions are batchable");
+            let lane = session.to_lane().expect("columnar sessions convert");
+            batch
+                .get_or_insert_with(|| {
+                    ColumnarSessionBatch::with_capacity(spec, bsz)
+                })
+                .push_lane(lane)
+                .expect("push lane");
+        }
+        let mut batch = batch.expect("at least one session");
+        assert_eq!(batch.len(), bsz);
+
+        let mut rng = Xoshiro256::seed_from_u64(0xba7c4);
+        let mut obs = vec![0.0f32; bsz * n];
+        let mut cs = vec![0.0f32; bsz];
+        let fill = |rng: &mut Xoshiro256, obs: &mut [f32], cs: &mut [f32]| {
+            for v in obs.iter_mut() {
+                *v = rng.uniform(-1.0, 1.0);
+            }
+            for v in cs.iter_mut() {
+                *v = rng.uniform(-0.5, 0.5);
+            }
+        };
+
+        // ---- phase 1: fused stepping, membership stable ---------------
+        let t0 = Instant::now();
+        for _ in 0..ticks {
+            fill(&mut rng, &mut obs, &mut cs);
+            batch.step_all(&obs, &cs);
+        }
+        let sps_stable = (bsz * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+        // ---- phase 2: membership churn --------------------------------
+        // Each op pair is one LRU eviction + one rehydration as the shard
+        // layer performs them: swap-remove a random lane out of the
+        // batch, then push a (the same) lane back in. Individual op
+        // latencies are the acceptance metric — O(lane) means flat
+        // across batch sizes.
+        let mut evict_us: Vec<f64> = Vec::with_capacity(churn_ops);
+        let mut rehydrate_us: Vec<f64> = Vec::with_capacity(churn_ops);
+        let t0 = Instant::now();
+        let mut churn_steps = 0usize;
+        for op in 0..churn_ops {
+            let idx = rng.int_in(0, bsz as u64 - 1) as usize;
+            let t = Instant::now();
+            let lane = batch.swap_remove_lane(idx).expect("evict");
+            evict_us.push(t.elapsed().as_secs_f64() * 1e6);
+            let t = Instant::now();
+            batch.push_lane(lane).expect("rehydrate");
+            rehydrate_us.push(t.elapsed().as_secs_f64() * 1e6);
+            // keep the batch hot between membership ops, as serving would
+            if op % 4 == 0 {
+                fill(&mut rng, &mut obs, &mut cs);
+                batch.step_all(&obs, &cs);
+                churn_steps += bsz;
+            }
+        }
+        let churn_elapsed = t0.elapsed().as_secs_f64();
+        let sps_churn = churn_steps as f64 / churn_elapsed;
+        let evict_p50 = percentile(&mut evict_us, 0.50).expect("ops > 0");
+        let evict_p99 = percentile(&mut evict_us, 0.99).expect("ops > 0");
+        let re_p50 = percentile(&mut rehydrate_us, 0.50).expect("ops > 0");
+        let re_p99 = percentile(&mut rehydrate_us, 0.99).expect("ops > 0");
+
+        rows_table.push(vec![
+            bsz.to_string(),
+            format!("{sps_stable:.0}"),
+            format!("{sps_churn:.0}"),
+            format!("{evict_p50:.1}"),
+            format!("{evict_p99:.1}"),
+            format!("{re_p50:.1}"),
+            format!("{re_p99:.1}"),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("sessions", Json::Num(bsz as f64)),
+            ("steps_per_s", Json::Num(sps_stable)),
+            ("steps_per_s_churn", Json::Num(sps_churn)),
+            ("evict_p50_us", Json::Num(evict_p50)),
+            ("evict_p99_us", Json::Num(evict_p99)),
+            ("rehydrate_p50_us", Json::Num(re_p50)),
+            ("rehydrate_p99_us", Json::Num(re_p99)),
+        ]));
+    }
+
+    println!(
+        "{}",
+        render_table(
+            &[
+                "batch",
+                "steps/s",
+                "steps/s (churn)",
+                "evict p50 us",
+                "evict p99 us",
+                "rehydrate p50 us",
+                "rehydrate p99 us",
+            ],
+            &rows_table,
+        )
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("perf_batch".into())),
+        ("inputs", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("ticks", Json::Num(ticks as f64)),
+        ("churn_ops", Json::Num(churn_ops as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    if let Some(parent) = std::path::Path::new(&out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create results dir");
+        }
+    }
+    std::fs::write(&out_path, record.pretty()).expect("write BENCH_batch.json");
+    eprintln!("wrote {out_path}");
+}

@@ -8,41 +8,111 @@
 //!
 //! Two layers live here:
 //!
-//! - [`BatchedColumnStepper`]: B·d independent LSTM columns in SoA form
-//!   (lane-innermost layout `[gate][j][lane]`), advanced with full RTRL
-//!   traces in one cache-friendly pass. Numerically **identical** to
-//!   [`LstmColumn::step_with_traces`] lane by lane — every per-lane
-//!   floating-point expression is evaluated in the same order as the
-//!   scalar code, so parity is exact, not approximate.
+//! - [`BatchedColumnStepper`]: B·d independent LSTM columns in SoA form,
+//!   advanced with full RTRL traces in one cache-friendly pass.
+//!   Numerically **identical** to [`LstmColumn::step_with_traces`] lane
+//!   by lane — every per-lane floating-point expression is evaluated in
+//!   the same order as the scalar code, so parity is exact, not
+//!   approximate.
 //! - [`ColumnarSessionBatch`]: B complete TD(lambda) *sessions* (columnar
 //!   net + online normalizer + readout + both eligibility traces) over a
-//!   shared spec, stepped together. Lane `l = k * B + b` holds column `k`
-//!   of session `b`. Sessions enter and leave a batch as
+//!   shared spec, stepped together. Sessions enter and leave a batch as
 //!   [`ColumnarLane`] bundles (used by the shard layer and by snapshots).
+//!
+//! # Capacity-padded lane strides
+//!
+//! All lane-innermost arrays are allocated at a fixed session
+//! **capacity**, not at the current session count: a per-column row is a
+//! `cap`-entry chunk of which only the first `active` entries are live
+//! (layout `[gate][j][column][cap]`, lane `l = k * cap + b` for column
+//! `k` of session slot `b`). Because the stride is the capacity, it is
+//! **invariant across membership changes**, which makes both membership
+//! ops O(one lane's state) instead of O(the whole batch):
+//!
+//! - [`ColumnarSessionBatch::push_lane`] writes one session's columns
+//!   into slot `active` in place and bumps the count — no other lane
+//!   moves. When the batch is full, capacity doubles first: a re-stride
+//!   that relocates every live lane bit-for-bit, paid amortized O(1)
+//!   per insertion;
+//! - [`ColumnarSessionBatch::swap_remove_lane`] copies exactly the last
+//!   session's lanes over the removed slot and decrements the count.
+//!
+//! Invariants:
+//!
+//! - **Dense prefix**: live sessions always occupy slots `0..active` of
+//!   every chunk — swap-remove compaction keeps the prefix dense, so the
+//!   occupancy mask is implicit (`slot < active` ⇔ live) and the hot
+//!   loops simply iterate `0..active` within each `cap`-strided chunk.
+//! - **Padding is dead**: slots `active..cap` hold stale bytes that are
+//!   never read; every write path ([`BatchedColumnStepper::load_lane`] +
+//!   the lane write in `push_lane`) rewrites a slot completely before it
+//!   becomes live again.
+//! - **Bit-exact moves**: grow, shrink ([`ColumnarSessionBatch::compact`])
+//!   and swap-remove copy f32 values verbatim — a session's trajectory
+//!   is unaffected by where (or at what stride) its lanes live. The
+//!   membership-churn property test pins this down against scalar
+//!   agents and against a `from_lanes`-rebuilt twin.
+//!
+//! `compact()` re-strides the arrays down to twice the live count (so
+//! the next insertion still lands in padding instead of forcing an
+//! immediate regrow). It is the one deliberately O(batch state)
+//! operation and runs only on cold paths: the shard layer invokes it
+//! after a removal leaves a batch at ≤ 1/4 occupancy, so a drained
+//! population does not pin its high-water-mark allocation, while
+//! steady-state churn never re-strides at all.
+//!
+//! Observations enter the stepper in the same padded layout (`[m][cap]`,
+//! live prefix `active`), so the innermost loops run over equal-length
+//! contiguous slices and stay vectorizable exactly as before.
 
 use crate::learn::{TdConfig, TdState};
 use crate::nets::lstm_column::LstmColumn;
 use crate::util::{dot, sigmoid};
 
+/// Smallest non-zero capacity `push_lane` grows to: batches churn from
+/// empty constantly (the shard layer creates them on first placement),
+/// so skip the 1→2→4 doubling steps.
+const MIN_CAPACITY: usize = 4;
+
+/// Re-stride `v` — a sequence of `chunks` equal chunks of `old_cap`
+/// entries — to `new_cap`-entry chunks, preserving each chunk's first
+/// `live` entries bit-for-bit and zero-filling the rest. Works in both
+/// directions (grow and compact).
+fn restride(v: &mut Vec<f32>, chunks: usize, old_cap: usize, new_cap: usize, live: usize) {
+    debug_assert_eq!(v.len(), chunks * old_cap);
+    debug_assert!(live <= old_cap && live <= new_cap);
+    let mut next = vec![0.0f32; chunks * new_cap];
+    for ch in 0..chunks {
+        let (s, d) = (ch * old_cap, ch * new_cap);
+        next[d..d + live].copy_from_slice(&v[s..s + live]);
+    }
+    *v = next;
+}
+
 /// B·d independent LSTM columns in structure-of-arrays form.
 ///
-/// `batch` sessions × `groups` columns each; all columns share input
-/// width `m`. Lane `l = k * batch + b` is column `k` of session `b`, and
-/// a step consumes one observation per *session* (shape `[m][batch]`,
-/// batch-innermost), broadcast across that session's column group.
-/// `groups == 1` gives B fully independent columns, each with its own
-/// input — the configuration the parity property tests exercise.
+/// `batch` live sessions × `groups` columns each, padded to a `cap`
+/// session capacity; all columns share input width `m`. Lane
+/// `l = k * cap + b` is column `k` of session slot `b` (`b < batch`),
+/// and a step consumes one observation per *session* (shape `[m][cap]`,
+/// slot-innermost with live prefix `batch`), broadcast across that
+/// session's column group. `groups == 1` gives B fully independent
+/// columns, each with its own input — the configuration the parity
+/// property tests exercise.
 pub struct BatchedColumnStepper {
     m: usize,
+    /// live sessions (dense prefix of every chunk)
     batch: usize,
+    /// session capacity — the stride unit; invariant across membership
+    cap: usize,
     groups: usize,
-    /// input weights `[4][m][L]`, lane-innermost
+    /// input weights `[4][m][groups][cap]`, lane-innermost
     pub(super) w: Vec<f32>,
-    /// recurrent weights `[4][L]`
+    /// recurrent weights `[4][groups][cap]`
     pub(super) u: Vec<f32>,
-    /// biases `[4][L]`
+    /// biases `[4][groups][cap]`
     pub(super) b: Vec<f32>,
-    /// hidden / cell state `[L]`
+    /// hidden / cell state `[groups][cap]`
     pub(super) h: Vec<f32>,
     pub(super) c: Vec<f32>,
     /// RTRL traces, same layouts as the parameters
@@ -53,7 +123,7 @@ pub struct BatchedColumnStepper {
     pub(super) thb: Vec<f32>,
     pub(super) tcb: Vec<f32>,
     // per-lane scratch, reused every step
-    z: Vec<f32>, // [4][L]
+    z: Vec<f32>, // [4][groups][cap]
     f_gate: Vec<f32>,
     a_coef: Vec<f32>,
     b_coef: Vec<f32>,
@@ -67,11 +137,19 @@ pub struct BatchedColumnStepper {
 }
 
 impl BatchedColumnStepper {
+    /// A stepper whose capacity equals its live count (no padding slack).
     pub fn new(m: usize, batch: usize, groups: usize) -> Self {
-        let l = batch * groups;
+        Self::with_capacity(m, batch, groups, batch)
+    }
+
+    /// A stepper padded to `cap` session slots, `batch` of them live.
+    pub fn with_capacity(m: usize, batch: usize, groups: usize, cap: usize) -> Self {
+        assert!(batch <= cap, "live count {batch} exceeds capacity {cap}");
+        let l = cap * groups;
         Self {
             m,
             batch,
+            cap,
             groups,
             w: vec![0.0; 4 * m * l],
             u: vec![0.0; 4 * l],
@@ -110,8 +188,95 @@ impl BatchedColumnStepper {
         self.groups
     }
 
+    /// Session capacity (the stride unit of every chunk).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Live lanes (`batch * groups`); padding lanes are not counted.
     pub fn lanes(&self) -> usize {
         self.batch * self.groups
+    }
+
+    /// Allocated lanes including padding — the stride of a gate row.
+    #[inline]
+    fn lcap(&self) -> usize {
+        self.cap * self.groups
+    }
+
+    /// Set the live-session count (callers have already written — or
+    /// logically removed — the affected slots).
+    pub(super) fn set_batch(&mut self, n: usize) {
+        assert!(n <= self.cap, "live count {n} exceeds capacity {}", self.cap);
+        self.batch = n;
+    }
+
+    /// Copy every per-lane value (parameters, traces, state) from lane
+    /// `src` to lane `dst` — the O(lane) primitive behind swap-remove.
+    /// Scratch is not copied; it is recomputed inside every step.
+    pub(super) fn copy_lane(&mut self, src: usize, dst: usize) {
+        let (m, lcap) = (self.m, self.lcap());
+        debug_assert!(src < lcap && dst < lcap);
+        if src == dst {
+            return;
+        }
+        for p in 0..4 * m {
+            let row = p * lcap;
+            self.w[row + dst] = self.w[row + src];
+            self.thw[row + dst] = self.thw[row + src];
+            self.tcw[row + dst] = self.tcw[row + src];
+        }
+        for a in 0..4 {
+            let row = a * lcap;
+            self.u[row + dst] = self.u[row + src];
+            self.b[row + dst] = self.b[row + src];
+            self.thu[row + dst] = self.thu[row + src];
+            self.tcu[row + dst] = self.tcu[row + src];
+            self.thb[row + dst] = self.thb[row + src];
+            self.tcb[row + dst] = self.tcb[row + src];
+        }
+        self.h[dst] = self.h[src];
+        self.c[dst] = self.c[src];
+    }
+
+    /// Re-stride every array to a new session capacity (grow or shrink),
+    /// preserving the live prefix of each chunk bit-for-bit.
+    pub(super) fn set_capacity(&mut self, new_cap: usize) {
+        debug_assert!(self.batch <= new_cap);
+        let (old, live) = (self.cap, self.batch);
+        if new_cap == old {
+            return;
+        }
+        let (m, groups) = (self.m, self.groups);
+        restride(&mut self.w, 4 * m * groups, old, new_cap, live);
+        restride(&mut self.thw, 4 * m * groups, old, new_cap, live);
+        restride(&mut self.tcw, 4 * m * groups, old, new_cap, live);
+        restride(&mut self.u, 4 * groups, old, new_cap, live);
+        restride(&mut self.b, 4 * groups, old, new_cap, live);
+        restride(&mut self.thu, 4 * groups, old, new_cap, live);
+        restride(&mut self.tcu, 4 * groups, old, new_cap, live);
+        restride(&mut self.thb, 4 * groups, old, new_cap, live);
+        restride(&mut self.tcb, 4 * groups, old, new_cap, live);
+        restride(&mut self.h, groups, old, new_cap, live);
+        restride(&mut self.c, groups, old, new_cap, live);
+        // scratch is recomputed every step: reallocate at the new stride
+        let l = new_cap * groups;
+        self.z = vec![0.0; 4 * l];
+        for v in [
+            &mut self.f_gate,
+            &mut self.a_coef,
+            &mut self.b_coef,
+            &mut self.e_coef,
+            &mut self.qi,
+            &mut self.qf,
+            &mut self.qg,
+            &mut self.ro,
+            &mut self.h_prev,
+            &mut self.zero,
+        ] {
+            *v = vec![0.0; l];
+        }
+        self.cap = new_cap;
     }
 
     pub fn h(&self, lane: usize) -> f32 {
@@ -122,11 +287,13 @@ impl BatchedColumnStepper {
         self.c[lane]
     }
 
-    /// Pack a scalar column (params, state, traces) into lane `lane`.
+    /// Pack a scalar column (params, state, traces) into lane `lane`
+    /// (padded coordinates: `lane = k * capacity + slot`). Writes every
+    /// per-lane value, so a stale padding slot becomes fully defined.
     pub fn load_lane(&mut self, lane: usize, col: &LstmColumn) {
         assert_eq!(col.m, self.m, "column width mismatch");
-        assert!(lane < self.lanes());
-        let (m, l) = (self.m, self.lanes());
+        let (m, l) = (self.m, self.lcap());
+        assert!(lane < l);
         for a in 0..4 {
             for j in 0..m {
                 let p = a * m + j;
@@ -145,10 +312,14 @@ impl BatchedColumnStepper {
         self.c[lane] = col.c;
     }
 
-    /// Unpack lane `lane` back into a scalar column.
+    /// Unpack lane `lane` back into a scalar column. Unlike
+    /// [`Self::load_lane`] (which may target padding about to become
+    /// live), reading is only meaningful for live lanes — dead padding
+    /// is a bookkeeping bug, caught here instead of returning garbage.
     pub fn extract_lane(&self, lane: usize) -> LstmColumn {
-        assert!(lane < self.lanes());
-        let (m, l) = (self.m, self.lanes());
+        let (m, l) = (self.m, self.lcap());
+        assert!(lane < l);
+        assert!(lane % self.cap < self.batch, "lane {lane} is not live");
         let mut col = LstmColumn::zeroed(m);
         for a in 0..4 {
             for j in 0..m {
@@ -169,24 +340,32 @@ impl BatchedColumnStepper {
         col
     }
 
-    /// Gate pre-activations: `z[a][l] = sum_j w[a][j][l] * x[j][l % B]`.
-    /// One pass over the weights; the inner loop is contiguous in both
-    /// `w` and `x` so it autovectorizes across the batch.
+    /// Gate pre-activations: `z[a][l] = sum_j w[a][j][l] * x[j][slot]`.
+    /// One pass over the weights; the inner loop runs over the live
+    /// prefix of each `cap`-strided chunk, contiguous in both `w` and
+    /// `x`, so it autovectorizes across the batch exactly as the tight
+    /// layout did — padding is skipped, never computed.
     #[inline]
     fn accumulate_gate_preacts(&mut self, x: &[f32]) {
-        let (m, bsz, groups) = (self.m, self.batch, self.groups);
-        let l = bsz * groups;
-        debug_assert_eq!(x.len(), m * bsz);
-        self.z.iter_mut().for_each(|v| *v = 0.0);
+        let (m, bsz, cap, groups) = (self.m, self.batch, self.cap, self.groups);
+        let l = cap * groups;
+        debug_assert_eq!(x.len(), m * cap);
+        // zero only the live windows — padding z slots are never read
+        for a in 0..4 {
+            let zrow = &mut self.z[a * l..a * l + l];
+            for k in 0..groups {
+                zrow[k * cap..k * cap + bsz].iter_mut().for_each(|v| *v = 0.0);
+            }
+        }
         for a in 0..4 {
             for j in 0..m {
                 let row = (a * m + j) * l;
                 let wrow = &self.w[row..row + l];
-                let xrow = &x[j * bsz..j * bsz + bsz];
+                let xrow = &x[j * cap..j * cap + bsz];
                 let zrow = &mut self.z[a * l..a * l + l];
                 for k in 0..groups {
-                    let zs = &mut zrow[k * bsz..k * bsz + bsz];
-                    let ws = &wrow[k * bsz..k * bsz + bsz];
+                    let zs = &mut zrow[k * cap..k * cap + bsz];
+                    let ws = &wrow[k * cap..k * cap + bsz];
                     for ((zv, &wv), &xv) in zs.iter_mut().zip(ws).zip(xrow) {
                         *zv += wv * xv;
                     }
@@ -198,13 +377,15 @@ impl BatchedColumnStepper {
     /// Gate activations and the fused trace-recursion coefficients; also
     /// advances `h`/`c`. Mirrors the scalar column expression-for-
     /// expression so lane results are bit-identical. The per-gate rows of
-    /// `z`/`u`/`b` are split into slices up front — the lane loop then
-    /// runs over equal-length slices with no residual bounds checks and
-    /// four independent gate chains per iteration for the scheduler to
+    /// `z`/`u`/`b` are split into slices up front and each group's live
+    /// window is resliced once — the lane loop then runs over
+    /// equal-length slices with no residual bounds checks and four
+    /// independent gate chains per iteration for the scheduler to
     /// overlap.
     #[inline]
     fn activate(&mut self, fill_scratch: bool) {
-        let l = self.lanes();
+        let (bsz, cap, groups) = (self.batch, self.cap, self.groups);
+        let l = cap * groups;
         let Self {
             z,
             u,
@@ -231,58 +412,74 @@ impl BatchedColumnStepper {
         let (bi, brest) = b.split_at(l);
         let (bf, brest) = brest.split_at(l);
         let (bo, bg) = brest.split_at(l);
-        let h = &mut h[..l];
-        let c = &mut c[..l];
-        let f_gate = &mut f_gate[..l];
-        let a_coef = &mut a_coef[..l];
-        let b_coef = &mut b_coef[..l];
-        let e_coef = &mut e_coef[..l];
-        let qi = &mut qi[..l];
-        let qf = &mut qf[..l];
-        let qg = &mut qg[..l];
-        let ro = &mut ro[..l];
-        let h_prev_buf = &mut h_prev_buf[..l];
-        for lane in 0..l {
-            let h_prev = h[lane];
-            let c_prev = c[lane];
-            let i = sigmoid(zi[lane] + ui[lane] * h_prev + bi[lane]);
-            let f = sigmoid(zf[lane] + uf[lane] * h_prev + bf[lane]);
-            let o = sigmoid(zo[lane] + uo[lane] * h_prev + bo[lane]);
-            let g = (zg[lane] + ug[lane] * h_prev + bg[lane]).tanh();
-            let c2 = f * c_prev + i * g;
-            let tanh_c2 = c2.tanh();
-            let h2 = o * tanh_c2;
-            if fill_scratch {
-                let di = i * (1.0 - i);
-                let df = f * (1.0 - f);
-                let do_ = o * (1.0 - o);
-                let dg = 1.0 - g * g;
-                a_coef[lane] = c_prev * df * uf[lane]
-                    + i * dg * ug[lane]
-                    + g * di * ui[lane];
-                b_coef[lane] = tanh_c2 * do_ * uo[lane];
-                e_coef[lane] = o * (1.0 - tanh_c2 * tanh_c2);
-                qi[lane] = g * di;
-                qf[lane] = c_prev * df;
-                qg[lane] = i * dg;
-                ro[lane] = tanh_c2 * do_;
-                f_gate[lane] = f;
-                h_prev_buf[lane] = h_prev;
+        for k in 0..groups {
+            let s = k * cap;
+            let e = s + bsz;
+            let zi = &zi[s..e];
+            let zf = &zf[s..e];
+            let zo = &zo[s..e];
+            let zg = &zg[s..e];
+            let ui = &ui[s..e];
+            let uf = &uf[s..e];
+            let uo = &uo[s..e];
+            let ug = &ug[s..e];
+            let bi = &bi[s..e];
+            let bf = &bf[s..e];
+            let bo = &bo[s..e];
+            let bg = &bg[s..e];
+            let h = &mut h[s..e];
+            let c = &mut c[s..e];
+            let f_gate = &mut f_gate[s..e];
+            let a_coef = &mut a_coef[s..e];
+            let b_coef = &mut b_coef[s..e];
+            let e_coef = &mut e_coef[s..e];
+            let qi = &mut qi[s..e];
+            let qf = &mut qf[s..e];
+            let qg = &mut qg[s..e];
+            let ro = &mut ro[s..e];
+            let h_prev_buf = &mut h_prev_buf[s..e];
+            for lane in 0..bsz {
+                let h_prev = h[lane];
+                let c_prev = c[lane];
+                let i = sigmoid(zi[lane] + ui[lane] * h_prev + bi[lane]);
+                let f = sigmoid(zf[lane] + uf[lane] * h_prev + bf[lane]);
+                let o = sigmoid(zo[lane] + uo[lane] * h_prev + bo[lane]);
+                let g = (zg[lane] + ug[lane] * h_prev + bg[lane]).tanh();
+                let c2 = f * c_prev + i * g;
+                let tanh_c2 = c2.tanh();
+                let h2 = o * tanh_c2;
+                if fill_scratch {
+                    let di = i * (1.0 - i);
+                    let df = f * (1.0 - f);
+                    let do_ = o * (1.0 - o);
+                    let dg = 1.0 - g * g;
+                    a_coef[lane] = c_prev * df * uf[lane]
+                        + i * dg * ug[lane]
+                        + g * di * ui[lane];
+                    b_coef[lane] = tanh_c2 * do_ * uo[lane];
+                    e_coef[lane] = o * (1.0 - tanh_c2 * tanh_c2);
+                    qi[lane] = g * di;
+                    qf[lane] = c_prev * df;
+                    qg[lane] = i * dg;
+                    ro[lane] = tanh_c2 * do_;
+                    f_gate[lane] = f;
+                    h_prev_buf[lane] = h_prev;
+                }
+                h[lane] = h2;
+                c[lane] = c2;
             }
-            h[lane] = h2;
-            c[lane] = c2;
         }
     }
 
-    /// Forward + RTRL trace update for every lane: the batched twin of
-    /// [`LstmColumn::step_with_traces`]. `x` has shape `[m][batch]`
-    /// (batch-innermost); session `b`'s observation feeds all its lanes.
+    /// Forward + RTRL trace update for every live lane: the batched twin
+    /// of [`LstmColumn::step_with_traces`]. `x` has shape `[m][cap]`
+    /// (slot-innermost, live prefix `batch`); session `b`'s observation
+    /// feeds all its lanes.
     ///
     /// Per-lane arithmetic is expression-for-expression the scalar
-    /// column's, in the same order — the ILP work here (row reslicing,
-    /// hoisted bounds checks, `#[inline]` stages) changes only how the
-    /// lanes are walked, never what each lane computes, and the
-    /// lane-exact parity property test pins that down.
+    /// column's, in the same order — the padded stride changes only
+    /// *where* a lane's values live, never what each lane computes, and
+    /// the lane-exact parity property tests pin that down.
     #[inline]
     pub fn step_traces(&mut self, x: &[f32]) {
         if self.lanes() == 0 {
@@ -293,6 +490,7 @@ impl BatchedColumnStepper {
         let Self {
             m,
             batch,
+            cap,
             groups,
             thw,
             tcw,
@@ -312,8 +510,8 @@ impl BatchedColumnStepper {
             zero,
             ..
         } = self;
-        let (m, bsz, groups) = (*m, *batch, *groups);
-        let l = bsz * groups;
+        let (m, bsz, cap, groups) = (*m, *batch, *cap, *groups);
+        let l = cap * groups;
         for a in 0..4 {
             // per-gate direct coefficients into c' (q) and h' (r); only
             // the output gate has an r term, only the others have q.
@@ -323,17 +521,17 @@ impl BatchedColumnStepper {
                 2 => (&zero[..], &ro[..]),
                 _ => (&qg[..], &zero[..]),
             };
-            // W traces: direct term x_j. Each (row, group) chunk is
-            // resliced once so the batch-innermost loop runs over
+            // W traces: direct term x_j. Each (row, group) live window is
+            // resliced once so the slot-innermost loop runs over
             // equal-length slices — bounds checks hoist out and the
             // three-term recurrences across lanes are independent, which
             // is what lets the backend vectorize/overlap them.
             for j in 0..m {
                 let row = (a * m + j) * l;
-                let xrow = &x[j * bsz..j * bsz + bsz];
+                let xrow = &x[j * cap..j * cap + bsz];
                 for k in 0..groups {
-                    let off = row + k * bsz;
-                    let lane0 = k * bsz;
+                    let off = row + k * cap;
+                    let lane0 = k * cap;
                     let th_row = &mut thw[off..off + bsz];
                     let tc_row = &mut tcw[off..off + bsz];
                     let fg = &f_gate[lane0..lane0 + bsz];
@@ -353,31 +551,37 @@ impl BatchedColumnStepper {
                 }
             }
             // u traces (direct term h(t-1)) and b traces (direct term 1),
-            // same reslicing: one gate row of each trace array at a time.
+            // same reslicing: one gate row's live window per group.
             let row = a * l;
-            let thu_row = &mut thu[row..row + l];
-            let tcu_row = &mut tcu[row..row + l];
-            let thb_row = &mut thb[row..row + l];
-            let tcb_row = &mut tcb[row..row + l];
-            let fg = &f_gate[..l];
-            let ac = &a_coef[..l];
-            let ec = &e_coef[..l];
-            let bc = &b_coef[..l];
-            let hp_s = &h_prev[..l];
-            let qs = &q[..l];
-            let rs = &r[..l];
-            for lane in 0..l {
-                let hp = hp_s[lane];
-                let th_prev = thu_row[lane];
-                let tc =
-                    fg[lane] * tcu_row[lane] + ac[lane] * th_prev + qs[lane] * hp;
-                thu_row[lane] = ec[lane] * tc + bc[lane] * th_prev + rs[lane] * hp;
-                tcu_row[lane] = tc;
-                let thb_prev = thb_row[lane];
-                let tcb_new =
-                    fg[lane] * tcb_row[lane] + ac[lane] * thb_prev + qs[lane];
-                thb_row[lane] = ec[lane] * tcb_new + bc[lane] * thb_prev + rs[lane];
-                tcb_row[lane] = tcb_new;
+            for k in 0..groups {
+                let s = k * cap;
+                let thu_row = &mut thu[row + s..row + s + bsz];
+                let tcu_row = &mut tcu[row + s..row + s + bsz];
+                let thb_row = &mut thb[row + s..row + s + bsz];
+                let tcb_row = &mut tcb[row + s..row + s + bsz];
+                let fg = &f_gate[s..s + bsz];
+                let ac = &a_coef[s..s + bsz];
+                let ec = &e_coef[s..s + bsz];
+                let bc = &b_coef[s..s + bsz];
+                let hp_s = &h_prev[s..s + bsz];
+                let qs = &q[s..s + bsz];
+                let rs = &r[s..s + bsz];
+                for lane in 0..bsz {
+                    let hp = hp_s[lane];
+                    let th_prev = thu_row[lane];
+                    let tc = fg[lane] * tcu_row[lane]
+                        + ac[lane] * th_prev
+                        + qs[lane] * hp;
+                    thu_row[lane] =
+                        ec[lane] * tc + bc[lane] * th_prev + rs[lane] * hp;
+                    tcu_row[lane] = tc;
+                    let thb_prev = thb_row[lane];
+                    let tcb_new =
+                        fg[lane] * tcb_row[lane] + ac[lane] * thb_prev + qs[lane];
+                    thb_row[lane] =
+                        ec[lane] * tcb_new + bc[lane] * thb_prev + rs[lane];
+                    tcb_row[lane] = tcb_new;
+                }
             }
         }
     }
@@ -393,10 +597,12 @@ impl BatchedColumnStepper {
 
     /// Advance a *single* lane with traces: the strided scalar path used
     /// for per-session protocol steps against a batched store. Identical
-    /// arithmetic to [`Self::step_traces`], visiting only one lane.
+    /// arithmetic to [`Self::step_traces`], visiting only one lane
+    /// (padded coordinates).
     pub fn step_lane_traces(&mut self, lane: usize, x: &[f32]) {
-        let (m, l) = (self.m, self.lanes());
+        let (m, l) = (self.m, self.lcap());
         assert!(lane < l);
+        assert!(lane % self.cap < self.batch, "lane {lane} is not live");
         debug_assert_eq!(x.len(), m);
         let mut z = [0.0f32; 4];
         for (a, zv) in z.iter_mut().enumerate() {
@@ -465,7 +671,8 @@ pub struct ColumnarBatchSpec {
 /// batch: the d columns with their traces, the normalizer statistics and
 /// the TD(lambda) learning state. This is the interchange format between
 /// the batched store, the scalar [`super::session::Session`] path and
-/// snapshots.
+/// snapshots — it is stride-independent, so it survives any batch
+/// re-layout unchanged.
 #[derive(Clone, Debug)]
 pub struct ColumnarLane {
     pub columns: Vec<LstmColumn>,
@@ -483,30 +690,37 @@ pub struct ColumnarLane {
 /// parameters, decay both eligibility traces — with every per-session
 /// floating-point expression evaluated in the scalar order, so a batched
 /// session's trajectory is identical to the same session stepped alone.
+///
+/// Sessions occupy slots `0..len()` of capacity-padded arrays (see the
+/// module docs): [`Self::push_lane`] and [`Self::swap_remove_lane`] are
+/// O(one session's state), so membership churn against a large resident
+/// batch costs the same as against a small one.
 pub struct ColumnarSessionBatch {
     spec: ColumnarBatchSpec,
     stepper: BatchedColumnStepper,
-    // normalizer SoA, [L]
+    /// live sessions — slots `0..active` of every padded chunk
+    active: usize,
+    // normalizer SoA, [d][cap]
     mu: Vec<f32>,
     var: Vec<f32>,
     denom: Vec<f32>,
     feats: Vec<f32>,
-    // readout + eligibilities, [L]
+    // readout + eligibilities, [d][cap]
     w_out: Vec<f32>,
     e_w: Vec<f32>,
     // theta eligibilities, parallel to the stepper's parameter layout
-    ew_w: Vec<f32>, // [4][m][L]
-    ew_u: Vec<f32>, // [4][L]
-    ew_b: Vec<f32>, // [4][L]
-    // per-session TD bookkeeping, [B]
+    ew_w: Vec<f32>, // [4][m][d][cap]
+    ew_u: Vec<f32>, // [4][d][cap]
+    ew_b: Vec<f32>, // [4][d][cap]
+    // per-session TD bookkeeping, [cap]
     y_prev: Vec<f32>,
     have_prev: Vec<bool>,
     steps: Vec<u64>,
     // scratch
-    xt: Vec<f32>,      // [m][B] observation transpose
-    ys: Vec<f32>,      // [B]
-    a_delta: Vec<f32>, // [B]
-    scale: Vec<f32>,   // [L]
+    xt: Vec<f32>,      // [n][cap] observation transpose
+    ys: Vec<f32>,      // [cap]
+    a_delta: Vec<f32>, // [cap]
+    scale: Vec<f32>,   // [d][cap]
     wbuf: Vec<f32>,    // [d]
     fbuf: Vec<f32>,    // [d]
 }
@@ -517,16 +731,13 @@ impl ColumnarSessionBatch {
         spec.d * LstmColumn::n_params(spec.n_inputs)
     }
 
-    /// Build a batch holding `lanes` sessions (possibly zero).
-    pub fn from_lanes(
-        spec: ColumnarBatchSpec,
-        lanes: &[ColumnarLane],
-    ) -> Result<Self, String> {
+    /// An empty batch padded to `cap` session slots.
+    pub fn with_capacity(spec: ColumnarBatchSpec, cap: usize) -> Self {
         let (n, d) = (spec.n_inputs, spec.d);
-        let bsz = lanes.len();
-        let l = d * bsz;
-        let mut batch = Self {
-            stepper: BatchedColumnStepper::new(n, bsz, d),
+        let l = d * cap;
+        Self {
+            stepper: BatchedColumnStepper::with_capacity(n, 0, d, cap),
+            active: 0,
             mu: vec![0.0; l],
             var: vec![0.0; l],
             denom: vec![0.0; l],
@@ -536,30 +747,44 @@ impl ColumnarSessionBatch {
             ew_w: vec![0.0; 4 * n * l],
             ew_u: vec![0.0; 4 * l],
             ew_b: vec![0.0; 4 * l],
-            y_prev: vec![0.0; bsz],
-            have_prev: vec![false; bsz],
-            steps: vec![0; bsz],
-            xt: vec![0.0; n * bsz],
-            ys: vec![0.0; bsz],
-            a_delta: vec![0.0; bsz],
+            y_prev: vec![0.0; cap],
+            have_prev: vec![false; cap],
+            steps: vec![0; cap],
+            xt: vec![0.0; n * cap],
+            ys: vec![0.0; cap],
+            a_delta: vec![0.0; cap],
             scale: vec![0.0; l],
             wbuf: vec![0.0; d],
             fbuf: vec![0.0; d],
             spec,
-        };
-        for (b_, lane) in lanes.iter().enumerate() {
-            batch.write_lane(b_, lane)?;
+        }
+    }
+
+    /// Build a batch holding `lanes` sessions (possibly zero), with
+    /// capacity exactly `lanes.len()`.
+    pub fn from_lanes(
+        spec: ColumnarBatchSpec,
+        lanes: &[ColumnarLane],
+    ) -> Result<Self, String> {
+        let mut batch = Self::with_capacity(spec, lanes.len());
+        for lane in lanes {
+            batch.push_ref(lane)?;
         }
         Ok(batch)
     }
 
     /// Number of sessions currently in the batch.
     pub fn len(&self) -> usize {
-        self.y_prev.len()
+        self.active
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.active == 0
+    }
+
+    /// Allocated session slots; `capacity() - len()` is padding slack.
+    pub fn capacity(&self) -> usize {
+        self.stepper.capacity()
     }
 
     pub fn spec(&self) -> &ColumnarBatchSpec {
@@ -567,14 +792,14 @@ impl ColumnarSessionBatch {
     }
 
     pub fn session_steps(&self, b: usize) -> u64 {
+        debug_assert!(b < self.active);
         self.steps[b]
     }
 
-    fn write_lane(&mut self, b_: usize, lane: &ColumnarLane) -> Result<(), String> {
+    /// Check a lane bundle's shape against the batch spec without
+    /// touching any state.
+    fn validate_lane(&self, lane: &ColumnarLane) -> Result<(), String> {
         let (n, d) = (self.spec.n_inputs, self.spec.d);
-        let bsz = self.len();
-        let l = d * bsz;
-        let np = LstmColumn::n_params(n);
         if lane.columns.len() != d {
             return Err(format!("lane has {} columns, want {d}", lane.columns.len()));
         }
@@ -590,15 +815,27 @@ impl ColumnarSessionBatch {
         if lane.td.w.len() != d || lane.td.e_w.len() != d {
             return Err("lane readout width mismatch".into());
         }
-        if lane.td.e_theta.len() != d * np {
+        if lane.td.e_theta.len() != Self::e_theta_len(&self.spec) {
             return Err(format!(
                 "lane e_theta length {} != {}",
                 lane.td.e_theta.len(),
-                d * np
+                Self::e_theta_len(&self.spec)
             ));
         }
+        Ok(())
+    }
+
+    /// Write one session's complete state into slot `b_` (which may be a
+    /// dead padding slot — every field is overwritten). The caller must
+    /// have run [`Self::validate_lane`] first (and, in `push_ref`,
+    /// before growing — so a rejected lane leaves the batch untouched).
+    fn write_lane(&mut self, b_: usize, lane: &ColumnarLane) {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let cap = self.capacity();
+        let l = d * cap;
+        let np = LstmColumn::n_params(n);
         for k in 0..d {
-            let ln = k * bsz + b_;
+            let ln = k * cap + b_;
             self.stepper.load_lane(ln, &lane.columns[k]);
             self.mu[ln] = lane.norm_mu[k];
             self.var[ln] = lane.norm_var[k];
@@ -609,7 +846,8 @@ impl ColumnarSessionBatch {
             let base = k * np;
             for a in 0..4 {
                 for j in 0..n {
-                    self.ew_w[(a * n + j) * l + ln] = lane.td.e_theta[base + a * n + j];
+                    self.ew_w[(a * n + j) * l + ln] =
+                        lane.td.e_theta[base + a * n + j];
                 }
                 self.ew_u[a * l + ln] = lane.td.e_theta[base + 4 * n + a];
                 self.ew_b[a * l + ln] = lane.td.e_theta[base + 4 * n + 4 + a];
@@ -618,15 +856,17 @@ impl ColumnarSessionBatch {
         self.y_prev[b_] = lane.td.y_prev;
         self.have_prev[b_] = lane.td.have_prev;
         self.steps[b_] = lane.td.steps;
-        Ok(())
     }
 
     /// Extract session `b_` as a standalone [`ColumnarLane`] (the batch
-    /// is unchanged).
+    /// is unchanged). O(one session's state) — reads straight out of the
+    /// padded arrays; the snapshot/park path never materializes any
+    /// other lane.
     pub fn extract_lane(&self, b_: usize) -> ColumnarLane {
+        assert!(b_ < self.active, "lane {b_} out of range");
         let (n, d) = (self.spec.n_inputs, self.spec.d);
-        let bsz = self.len();
-        let l = d * bsz;
+        let cap = self.capacity();
+        let l = d * cap;
         let np = LstmColumn::n_params(n);
         let mut columns = Vec::with_capacity(d);
         let mut norm_mu = Vec::with_capacity(d);
@@ -636,7 +876,7 @@ impl ColumnarSessionBatch {
         let mut e_w = Vec::with_capacity(d);
         let mut e_theta = vec![0.0; d * np];
         for k in 0..d {
-            let ln = k * bsz + b_;
+            let ln = k * cap + b_;
             columns.push(self.stepper.extract_lane(ln));
             norm_mu.push(self.mu[ln]);
             norm_var.push(self.var[ln]);
@@ -673,27 +913,133 @@ impl ColumnarSessionBatch {
         (0..self.len()).map(|b_| self.extract_lane(b_)).collect()
     }
 
-    /// Add a session; returns its lane index. O(total batch state) — the
-    /// SoA arrays are re-laid-out — which is fine for open/restore but
-    /// not for per-step paths.
+    /// Add a session in place; returns its slot index. O(one session's
+    /// state): the new lane is written into the first padding slot, no
+    /// existing lane moves and the stride does not change. When the
+    /// batch is full, capacity doubles first (amortized O(1) re-layouts
+    /// per insertion).
     pub fn push_lane(&mut self, lane: ColumnarLane) -> Result<usize, String> {
-        let mut lanes = self.extract_all();
-        lanes.push(lane);
-        *self = Self::from_lanes(self.spec.clone(), &lanes)?;
-        Ok(self.len() - 1)
+        self.push_ref(&lane)
     }
 
-    /// Remove session `idx`, returning it. The **last** session moves
-    /// into slot `idx` (swap-remove) — callers owning an id→lane map
-    /// must re-key that moved session.
+    fn push_ref(&mut self, lane: &ColumnarLane) -> Result<usize, String> {
+        // validate before growing: a rejected lane must not leave a
+        // permanently re-strided (and twice as large) batch behind
+        self.validate_lane(lane)?;
+        if self.active == self.capacity() {
+            self.set_capacity((self.capacity() * 2).max(MIN_CAPACITY));
+        }
+        let b_ = self.active;
+        self.write_lane(b_, lane);
+        self.active += 1;
+        self.stepper.set_batch(self.active);
+        Ok(b_)
+    }
+
+    /// Remove session `idx` in place, returning it. The **last** session
+    /// is copied into slot `idx` (swap-remove) — callers owning an
+    /// id→lane map must re-key that moved session. O(one session's
+    /// state): exactly one lane is extracted and at most one copied; no
+    /// re-layout, no allocation beyond the returned bundle.
     pub fn swap_remove_lane(&mut self, idx: usize) -> Result<ColumnarLane, String> {
-        let mut lanes = self.extract_all();
-        if idx >= lanes.len() {
+        if idx >= self.active {
             return Err(format!("lane {idx} out of range"));
         }
-        let removed = lanes.swap_remove(idx);
-        *self = Self::from_lanes(self.spec.clone(), &lanes)?;
+        let removed = self.extract_lane(idx);
+        self.discard_lane(idx)?;
         Ok(removed)
+    }
+
+    /// Remove session `idx` in place **without** materializing it: the
+    /// evict path, where the state was already snapshotted straight from
+    /// the live arrays — same swap-remove mechanics as
+    /// [`Self::swap_remove_lane`], zero extraction or allocation.
+    pub fn discard_lane(&mut self, idx: usize) -> Result<(), String> {
+        if idx >= self.active {
+            return Err(format!("lane {idx} out of range"));
+        }
+        let last = self.active - 1;
+        if idx != last {
+            self.copy_session(last, idx);
+        }
+        self.active = last;
+        self.stepper.set_batch(last);
+        Ok(())
+    }
+
+    /// Shrink a sparse batch's padded arrays (slot order preserved,
+    /// values copied bit-for-bit, id→lane maps stay valid). Capacity
+    /// drops to **twice** the live count (min `MIN_CAPACITY`), not an
+    /// exact fit — an exact fit would guarantee the very next
+    /// `push_lane` pays an immediate O(batch) re-stride. Deliberately
+    /// O(batch state) — run it on cold paths (the shard layer calls it
+    /// when a batch drops to ≤ 1/4 occupancy), never per membership op.
+    pub fn compact(&mut self) {
+        let target = (self.active * 2).max(MIN_CAPACITY);
+        if target < self.capacity() {
+            self.set_capacity(target);
+        }
+    }
+
+    /// Re-stride every array to a new session capacity, preserving live
+    /// state bit-for-bit and reallocating scratch.
+    fn set_capacity(&mut self, new_cap: usize) {
+        debug_assert!(new_cap >= self.active);
+        let old = self.capacity();
+        if new_cap == old {
+            return;
+        }
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let live = self.active;
+        self.stepper.set_capacity(new_cap);
+        restride(&mut self.mu, d, old, new_cap, live);
+        restride(&mut self.var, d, old, new_cap, live);
+        restride(&mut self.denom, d, old, new_cap, live);
+        restride(&mut self.w_out, d, old, new_cap, live);
+        restride(&mut self.e_w, d, old, new_cap, live);
+        restride(&mut self.ew_w, 4 * n * d, old, new_cap, live);
+        restride(&mut self.ew_u, 4 * d, old, new_cap, live);
+        restride(&mut self.ew_b, 4 * d, old, new_cap, live);
+        restride(&mut self.y_prev, 1, old, new_cap, live);
+        self.have_prev.resize(new_cap, false);
+        self.steps.resize(new_cap, 0);
+        // scratch is fully rewritten inside every step before it is read
+        let l = d * new_cap;
+        self.feats = vec![0.0; l];
+        self.scale = vec![0.0; l];
+        self.xt = vec![0.0; n * new_cap];
+        self.ys = vec![0.0; new_cap];
+        self.a_delta = vec![0.0; new_cap];
+    }
+
+    /// Copy every piece of session state (stepper lanes, normalizer,
+    /// readout, eligibilities, TD bookkeeping) from slot `src` to slot
+    /// `dst` — the O(lane) primitive behind swap-remove.
+    fn copy_session(&mut self, src: usize, dst: usize) {
+        let (n, d) = (self.spec.n_inputs, self.spec.d);
+        let cap = self.capacity();
+        let l = d * cap;
+        for k in 0..d {
+            let (s, t) = (k * cap + src, k * cap + dst);
+            self.stepper.copy_lane(s, t);
+            self.mu[t] = self.mu[s];
+            self.var[t] = self.var[s];
+            self.denom[t] = self.denom[s];
+            self.w_out[t] = self.w_out[s];
+            self.e_w[t] = self.e_w[s];
+            for a in 0..4 {
+                for j in 0..n {
+                    let row = (a * n + j) * l;
+                    self.ew_w[row + t] = self.ew_w[row + s];
+                }
+                let row = a * l;
+                self.ew_u[row + t] = self.ew_u[row + s];
+                self.ew_b[row + t] = self.ew_b[row + s];
+            }
+        }
+        self.y_prev[dst] = self.y_prev[src];
+        self.have_prev[dst] = self.have_prev[src];
+        self.steps[dst] = self.steps[src];
     }
 
     /// Shared normalizer recursion (identical to
@@ -717,35 +1063,39 @@ impl ColumnarSessionBatch {
     /// scalar agent's `util::dot`.
     #[inline]
     fn predict_session(&mut self, b_: usize) -> f32 {
-        let (d, bsz) = (self.spec.d, self.len());
+        let (d, cap) = (self.spec.d, self.capacity());
         for k in 0..d {
-            self.wbuf[k] = self.w_out[k * bsz + b_];
-            self.fbuf[k] = self.feats[k * bsz + b_];
+            self.wbuf[k] = self.w_out[k * cap + b_];
+            self.fbuf[k] = self.feats[k * cap + b_];
         }
         dot(&self.wbuf, &self.fbuf)
     }
 
     /// One TD(lambda) step for **all** sessions: `obs` is `[B][n]`
-    /// session-major, `cumulants` is `[B]`. Returns the predictions made
-    /// this step. This is the serving hot path.
+    /// session-major, `cumulants` is `[B]` (`B = len()`, tight — the
+    /// padding is internal). Returns the predictions made this step.
+    /// This is the serving hot path.
     pub fn step_all(&mut self, obs: &[f32], cumulants: &[f32]) -> &[f32] {
         let (n, d) = (self.spec.n_inputs, self.spec.d);
-        let bsz = self.len();
+        let bsz = self.active;
         assert_eq!(obs.len(), n * bsz, "obs shape");
         assert_eq!(cumulants.len(), bsz, "cumulant shape");
         if bsz == 0 {
-            return &self.ys;
+            return &self.ys[..0];
         }
-        let l = d * bsz;
-        // transpose observations to [n][B] for the SoA kernel
+        let cap = self.capacity();
+        let l = d * cap;
+        // transpose observations to padded [n][cap] for the SoA kernel
         for j in 0..n {
             for b_ in 0..bsz {
-                self.xt[j * bsz + b_] = obs[b_ * n + j];
+                self.xt[j * cap + b_] = obs[b_ * n + j];
             }
         }
         self.stepper.step_traces(&self.xt);
-        for lane in 0..l {
-            self.normalize_lane(lane);
+        for k in 0..d {
+            for b_ in 0..bsz {
+                self.normalize_lane(k * cap + b_);
+            }
         }
         for b_ in 0..bsz {
             self.ys[b_] = self.predict_session(b_);
@@ -764,48 +1114,72 @@ impl ColumnarSessionBatch {
         }
         // TD update of readout and column parameters (using the
         // eligibilities accumulated through t-1), then trace decay with
-        // this step's gradients — the scalar agent's order.
-        for lane in 0..l {
-            self.w_out[lane] += self.a_delta[lane % bsz] * self.e_w[lane];
+        // this step's gradients — the scalar agent's order. Every loop
+        // walks the live prefix of each cap-strided chunk.
+        for k in 0..d {
+            let s = k * cap;
+            for b_ in 0..bsz {
+                self.w_out[s + b_] += self.a_delta[b_] * self.e_w[s + b_];
+            }
         }
         for a in 0..4 {
             for j in 0..n {
                 let row = (a * n + j) * l;
-                for lane in 0..l {
-                    self.stepper.w[row + lane] +=
-                        self.a_delta[lane % bsz] * self.ew_w[row + lane];
+                for k in 0..d {
+                    let off = row + k * cap;
+                    for b_ in 0..bsz {
+                        self.stepper.w[off + b_] +=
+                            self.a_delta[b_] * self.ew_w[off + b_];
+                    }
                 }
             }
             let row = a * l;
-            for lane in 0..l {
-                let ad = self.a_delta[lane % bsz];
-                self.stepper.u[row + lane] += ad * self.ew_u[row + lane];
-                self.stepper.b[row + lane] += ad * self.ew_b[row + lane];
+            for k in 0..d {
+                let off = row + k * cap;
+                for b_ in 0..bsz {
+                    let ad = self.a_delta[b_];
+                    self.stepper.u[off + b_] += ad * self.ew_u[off + b_];
+                    self.stepper.b[off + b_] += ad * self.ew_b[off + b_];
+                }
             }
         }
         let gl = gamma * lambda;
-        for lane in 0..l {
-            self.e_w[lane] = gl * self.e_w[lane] + self.feats[lane];
+        for k in 0..d {
+            let s = k * cap;
+            for b_ in 0..bsz {
+                self.e_w[s + b_] = gl * self.e_w[s + b_] + self.feats[s + b_];
+            }
         }
         // dy/dtheta = (w_k / denom_k) * TH — with the *updated* readout,
         // as in the scalar agent.
-        for lane in 0..l {
-            self.scale[lane] = self.w_out[lane] / self.denom[lane];
+        for k in 0..d {
+            let s = k * cap;
+            for b_ in 0..bsz {
+                self.scale[s + b_] = self.w_out[s + b_] / self.denom[s + b_];
+            }
         }
         for a in 0..4 {
             for j in 0..n {
                 let row = (a * n + j) * l;
-                for lane in 0..l {
-                    self.ew_w[row + lane] = gl * self.ew_w[row + lane]
-                        + self.scale[lane] * self.stepper.thw[row + lane];
+                for k in 0..d {
+                    let off = row + k * cap;
+                    let s = k * cap;
+                    for b_ in 0..bsz {
+                        self.ew_w[off + b_] = gl * self.ew_w[off + b_]
+                            + self.scale[s + b_] * self.stepper.thw[off + b_];
+                    }
                 }
             }
             let row = a * l;
-            for lane in 0..l {
-                self.ew_u[row + lane] = gl * self.ew_u[row + lane]
-                    + self.scale[lane] * self.stepper.thu[row + lane];
-                self.ew_b[row + lane] = gl * self.ew_b[row + lane]
-                    + self.scale[lane] * self.stepper.thb[row + lane];
+            for k in 0..d {
+                let off = row + k * cap;
+                let s = k * cap;
+                for b_ in 0..bsz {
+                    self.ew_u[off + b_] = gl * self.ew_u[off + b_]
+                        + self.scale[s + b_] * self.stepper.thu[off + b_];
+                    self.ew_b[off + b_] = gl * self.ew_b[off + b_]
+                        + self.scale[s + b_] * self.stepper.thb[off + b_];
+                }
             }
         }
         for b_ in 0..bsz {
@@ -813,7 +1187,7 @@ impl ColumnarSessionBatch {
             self.have_prev[b_] = true;
             self.steps[b_] += 1;
         }
-        &self.ys
+        &self.ys[..bsz]
     }
 
     /// One TD(lambda) step for a single session (strided path for
@@ -821,15 +1195,15 @@ impl ColumnarSessionBatch {
     /// [`Self::step_all`] restricted to session `b_`.
     pub fn step_one(&mut self, b_: usize, x: &[f32], cumulant: f32) -> f32 {
         let (n, d) = (self.spec.n_inputs, self.spec.d);
-        let bsz = self.len();
-        assert!(b_ < bsz);
+        assert!(b_ < self.active);
         assert_eq!(x.len(), n, "obs width");
-        let l = d * bsz;
+        let cap = self.capacity();
+        let l = d * cap;
         for k in 0..d {
-            self.stepper.step_lane_traces(k * bsz + b_, x);
+            self.stepper.step_lane_traces(k * cap + b_, x);
         }
         for k in 0..d {
-            self.normalize_lane(k * bsz + b_);
+            self.normalize_lane(k * cap + b_);
         }
         let y = self.predict_session(b_);
         let TdConfig {
@@ -840,18 +1214,18 @@ impl ColumnarSessionBatch {
         if self.have_prev[b_] {
             let ad = alpha * (cumulant + gamma * y - self.y_prev[b_]);
             for k in 0..d {
-                let lane = k * bsz + b_;
+                let lane = k * cap + b_;
                 self.w_out[lane] += ad * self.e_w[lane];
             }
             for a in 0..4 {
                 for j in 0..n {
                     for k in 0..d {
-                        let idx = (a * n + j) * l + k * bsz + b_;
+                        let idx = (a * n + j) * l + k * cap + b_;
                         self.stepper.w[idx] += ad * self.ew_w[idx];
                     }
                 }
                 for k in 0..d {
-                    let idx = a * l + k * bsz + b_;
+                    let idx = a * l + k * cap + b_;
                     self.stepper.u[idx] += ad * self.ew_u[idx];
                     self.stepper.b[idx] += ad * self.ew_b[idx];
                 }
@@ -859,7 +1233,7 @@ impl ColumnarSessionBatch {
         }
         let gl = gamma * lambda;
         for k in 0..d {
-            let lane = k * bsz + b_;
+            let lane = k * cap + b_;
             self.e_w[lane] = gl * self.e_w[lane] + self.feats[lane];
             let scale = self.w_out[lane] / self.denom[lane];
             for a in 0..4 {
@@ -885,14 +1259,14 @@ impl ColumnarSessionBatch {
     /// bookkeeping is untouched.
     pub fn predict_one(&mut self, b_: usize, x: &[f32]) -> f32 {
         let (n, d) = (self.spec.n_inputs, self.spec.d);
-        let bsz = self.len();
-        assert!(b_ < bsz);
+        assert!(b_ < self.active);
         assert_eq!(x.len(), n, "obs width");
+        let cap = self.capacity();
         for k in 0..d {
-            self.stepper.step_lane_traces(k * bsz + b_, x);
+            self.stepper.step_lane_traces(k * cap + b_, x);
         }
         for k in 0..d {
-            self.normalize_lane(k * bsz + b_);
+            self.normalize_lane(k * cap + b_);
         }
         self.predict_session(b_)
     }
@@ -1019,6 +1393,41 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Padding slack must be invisible: a stepper with capacity 8 but
+    /// only 3 live lanes steps those lanes bit-identically to the
+    /// scalar columns (the padded tail is never computed or read).
+    #[test]
+    fn padded_slack_keeps_scalar_parity() {
+        let (m, live, cap) = (4usize, 3usize, 8usize);
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let mut cols: Vec<LstmColumn> =
+            (0..live).map(|_| random_column(m, &mut rng)).collect();
+        let mut st = BatchedColumnStepper::with_capacity(m, 0, 1, cap);
+        assert_eq!(st.capacity(), cap);
+        for (i, c) in cols.iter().enumerate() {
+            st.load_lane(i, c);
+            st.set_batch(i + 1);
+        }
+        assert_eq!(st.batch(), live);
+        for _ in 0..60 {
+            let xs: Vec<Vec<f32>> = (0..live)
+                .map(|_| (0..m).map(|_| rng.uniform(-1.0, 1.0)).collect())
+                .collect();
+            // padded observation layout: [m][cap], live prefix filled
+            let mut xt = vec![0.0f32; m * cap];
+            for (b_, x) in xs.iter().enumerate() {
+                for j in 0..m {
+                    xt[j * cap + b_] = x[j];
+                }
+            }
+            st.step_traces(&xt);
+            for (col, x) in cols.iter_mut().zip(&xs) {
+                col.step_with_traces(x);
+            }
+        }
+        assert_lane_close(&cols, &st, 0.0);
     }
 
     #[test]
@@ -1260,5 +1669,168 @@ mod tests {
             let y_solo = solo.step_one(0, &x, 0.05);
             assert_eq!(y_batch, y_solo, "membership churn corrupted a survivor");
         }
+    }
+
+    /// Capacity mechanics: push doubles amortized (no per-push
+    /// re-layout), compact shrinks to fit, and neither perturbs a single
+    /// bit of live state.
+    #[test]
+    fn grow_and_compact_preserve_state_bit_exact() {
+        let spec = ColumnarBatchSpec {
+            n_inputs: 3,
+            d: 2,
+            td: TdConfig {
+                alpha: 0.01,
+                gamma: 0.9,
+                lambda: 0.9,
+            },
+            eps: 0.01,
+            beta: 0.999,
+        };
+        let mut batch = ColumnarSessionBatch::from_lanes(spec.clone(), &[]).unwrap();
+        assert_eq!(batch.capacity(), 0);
+        let mut caps = Vec::new();
+        for s in 0..6u64 {
+            batch.push_lane(fresh_lane(&spec, s)).unwrap();
+            caps.push(batch.capacity());
+        }
+        assert_eq!(caps, vec![4, 4, 4, 4, 8, 8], "amortized doubling");
+        // warm everyone up
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..30 {
+            let obs: Vec<f32> = (0..6 * spec.n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let cs: Vec<f32> = (0..6).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            batch.step_all(&obs, &cs);
+        }
+        // a near-full batch never shrinks (6 live in cap 8 keeps its
+        // headroom)...
+        batch.compact();
+        assert_eq!(batch.capacity(), 8, "compact must not strip headroom");
+        // ...a sparse one shrinks to twice its live count, so the next
+        // push still lands in padding instead of forcing a regrow
+        for _ in 0..4 {
+            batch.swap_remove_lane(batch.len() - 1).unwrap();
+        }
+        let mut twin =
+            ColumnarSessionBatch::from_lanes(spec.clone(), &batch.extract_all())
+                .unwrap();
+        batch.compact();
+        assert_eq!(batch.capacity(), 4);
+        assert_eq!(batch.len(), 2);
+        batch.push_lane(fresh_lane(&spec, 50)).unwrap();
+        twin.push_lane(fresh_lane(&spec, 50)).unwrap();
+        assert_eq!(batch.capacity(), 4, "post-compact push must not regrow");
+        for _ in 0..20 {
+            let obs: Vec<f32> = (0..3 * spec.n_inputs)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect();
+            let cs: Vec<f32> = (0..3).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let a = batch.step_all(&obs, &cs).to_vec();
+            let b = twin.step_all(&obs, &cs).to_vec();
+            assert_eq!(a, b, "compact must preserve state bit-for-bit");
+        }
+    }
+
+    /// The padded-layout acceptance property: an arbitrary interleaving
+    /// of step_all / push_lane / swap_remove_lane / compact (grow rides
+    /// on push) stays **bit-exact** against (a) never-batched scalar
+    /// agents stepped in lockstep and (b) a from_lanes-rebuilt twin at
+    /// the end.
+    #[test]
+    fn prop_membership_churn_is_bit_exact() {
+        use crate::config::{build_ccn, LearnerKind};
+        use crate::learn::TdLambdaAgent;
+
+        check("padded membership churn == scalar agents", 8, |g| {
+            let spec = ColumnarBatchSpec {
+                n_inputs: g.sized_usize(1, 4),
+                d: g.sized_usize(1, 3),
+                td: TdConfig {
+                    alpha: 0.01,
+                    gamma: 0.9,
+                    lambda: 0.9,
+                },
+                eps: 0.01,
+                beta: crate::nets::normalizer::NORM_BETA,
+            };
+            let mut rng = Xoshiro256::seed_from_u64(g.rng.next_u64());
+            let mut batch = ColumnarSessionBatch::from_lanes(spec.clone(), &[])?;
+            let mut twins: Vec<TdLambdaAgent<crate::nets::ccn::CcnNet>> = Vec::new();
+            let mut next_seed = 0u64;
+            for _ in 0..40 {
+                match rng.int_in(0, 9) {
+                    // push (drives the 0→4→8 capacity doublings)
+                    0 | 1 if batch.len() < 6 => {
+                        let seed = next_seed;
+                        next_seed += 1;
+                        batch.push_lane(fresh_lane(&spec, seed))?;
+                        let net = build_ccn(
+                            &LearnerKind::Columnar { d: spec.d },
+                            spec.n_inputs,
+                            spec.eps,
+                            seed,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        twins.push(TdLambdaAgent::new(net, spec.td));
+                    }
+                    // swap-remove a random session; twins mirror the swap
+                    2 if !batch.is_empty() => {
+                        let idx =
+                            rng.int_in(0, batch.len() as u64 - 1) as usize;
+                        batch.swap_remove_lane(idx)?;
+                        twins.swap_remove(idx);
+                    }
+                    // shrink-to-fit mid-stream
+                    3 => batch.compact(),
+                    // one synchronized step of everyone
+                    _ => {
+                        let bsz = batch.len();
+                        if bsz == 0 {
+                            continue;
+                        }
+                        let obs: Vec<f32> = (0..bsz * spec.n_inputs)
+                            .map(|_| rng.uniform(-1.0, 1.0))
+                            .collect();
+                        let cs: Vec<f32> =
+                            (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+                        let ys = batch.step_all(&obs, &cs).to_vec();
+                        for (b_, twin) in twins.iter_mut().enumerate() {
+                            let x = &obs
+                                [b_ * spec.n_inputs..(b_ + 1) * spec.n_inputs];
+                            let y = twin.step(x, cs[b_]);
+                            if ys[b_] != y {
+                                return Err(format!(
+                                    "slot {b_} diverged after churn: {} vs {y}",
+                                    ys[b_]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            // a twin rebuilt through the interchange format must continue
+            // bit-identically to the churned original
+            let mut rebuilt =
+                ColumnarSessionBatch::from_lanes(spec.clone(), &batch.extract_all())?;
+            for _ in 0..5 {
+                let bsz = batch.len();
+                if bsz == 0 {
+                    break;
+                }
+                let obs: Vec<f32> = (0..bsz * spec.n_inputs)
+                    .map(|_| rng.uniform(-1.0, 1.0))
+                    .collect();
+                let cs: Vec<f32> =
+                    (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+                let a = batch.step_all(&obs, &cs).to_vec();
+                let b = rebuilt.step_all(&obs, &cs).to_vec();
+                if a != b {
+                    return Err("from_lanes-rebuilt twin diverged".into());
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -13,7 +13,11 @@
 //! - [`batch`]: the hot path — B independent columns (and full columnar
 //!   sessions) laid out in structure-of-arrays form and advanced in one
 //!   fused, vectorizable pass, parity-checked against the scalar
-//!   [`crate::nets::lstm_column::LstmColumn`].
+//!   [`crate::nets::lstm_column::LstmColumn`]. Lanes are
+//!   **capacity-padded** (stride = capacity, not population), so a
+//!   session entering or leaving a batch — every LRU evict/rehydrate
+//!   under `--resident-cap` — is O(that session's state), not a
+//!   re-layout of the whole batch.
 //! - [`shard`]: N worker threads each owning a disjoint id-routed set of
 //!   sessions behind an mpsc queue; aggregate throughput scales with
 //!   cores and the hot path takes no locks.

@@ -225,7 +225,10 @@ impl Session {
     }
 
     /// Extract this session's state as a batch lane. Errors for sessions
-    /// without [`BatchCapability::Columnar`].
+    /// without [`BatchCapability::Columnar`]. The [`ColumnarLane`]
+    /// interchange format is stride-independent: the batch writes it
+    /// into (and reads it out of) its capacity-padded arrays without the
+    /// scalar side ever seeing the padding.
     pub fn to_lane(&self) -> Result<ColumnarLane, String> {
         let d = match self.agent.net.batch_capability() {
             BatchCapability::Columnar { d, .. } => d,

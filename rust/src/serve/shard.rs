@@ -25,6 +25,13 @@
 //! bit-identically — membership in memory, like membership in a batch,
 //! is never a semantic decision.
 //!
+//! Batch membership ops ride the capacity-padded SoA layout
+//! ([`super::batch`]): inserting a rehydrated session writes one lane in
+//! place and evicting one swap-removes one lane — both O(that session's
+//! state), so churn under `--resident-cap` costs the same against a
+//! 256-session batch as against a 16-session one. Sparse batches are
+//! compacted on the removal path (<= 1/4 occupancy), never per op.
+//!
 //! [`ShardPool::close`] drains every shard (flushing resident sessions to
 //! the store) and joins the workers deterministically; dropping the pool
 //! without closing joins the workers but skips the flush, which is
@@ -242,7 +249,9 @@ impl ShardState {
                 .expect("store present")
                 .park(id, &snap)?;
         }
-        let _ = self.take_session(id)?;
+        // the snapshot above already read everything out of the live
+        // arrays — drop the slot without materializing a second copy
+        self.drop_slot(id)?;
         Ok(())
     }
 
@@ -300,29 +309,77 @@ impl ShardState {
                     .batches
                     .get_mut(&key)
                     .expect("batch exists for batched slot");
-                // swap_remove hands back the removed lane directly (no
-                // separate extract_lane pass). Note the SoA batch still
-                // re-lays-out all surviving lanes on membership change —
-                // O(batch state) per evict/rehydrate; see the ROADMAP
-                // follow-up on capacity-padded strides.
+                // swap_remove is O(one lane's state) under the
+                // capacity-padded layout: the removed lane is read
+                // straight out of the padded arrays and only the last
+                // lane is copied over the hole — the stride (and every
+                // surviving lane) stays put, so evict/rehydrate churn
+                // costs O(lane), not O(batch).
                 let extracted = batch.swap_remove_lane(lane)?;
-                let session = Session::from_lane(spec, batch.spec(), &extracted)?;
-                let emptied = batch.is_empty();
-                // the last lane moved into `lane`: re-key that session
-                let ids = self.lane_ids.get_mut(&key).expect("lane ids exist");
-                let moved = ids.pop().expect("non-empty lane list");
-                if moved != id {
-                    ids[lane] = moved;
-                    if let Some(Slot::Batched(_, l, _)) = self.slots.get_mut(&moved)
-                    {
-                        *l = lane;
-                    }
-                }
-                if emptied {
-                    self.batches.remove(&key);
-                    self.lane_ids.remove(&key);
-                }
+                let batch_spec = batch.spec().clone();
+                // re-key the moved lane *before* the fallible session
+                // construction: an error below must not leave lane_ids
+                // and the moved session's slot pointing at a dead lane
+                self.finish_batched_removal(key, lane, id);
+                let session = Session::from_lane(spec, &batch_spec, &extracted)?;
                 Ok(Box::new(session))
+            }
+        }
+    }
+
+    /// Drop a resident session's slot without materializing its state —
+    /// the evict path, where [`Self::snapshot_resident`] already read
+    /// everything out of the live arrays. O(lane) with zero extraction
+    /// and no throwaway [`Session`] construction.
+    fn drop_slot(&mut self, id: u64) -> Result<(), String> {
+        let slot = self
+            .slots
+            .remove(&id)
+            .ok_or_else(|| format!("no session {id}"))?;
+        self.untrack(id);
+        match slot {
+            Slot::Scalar(_) => Ok(()),
+            Slot::Batched(key, lane, _) => {
+                // a tracked slot's lane index is always in range (the
+                // re-key invariant); an out-of-range error here would
+                // mean corrupted bookkeeping, where continuing with
+                // half-removed state would be worse than stopping
+                self.batches
+                    .get_mut(&key)
+                    .expect("batch exists for batched slot")
+                    .discard_lane(lane)
+                    .expect("tracked lane index in range");
+                self.finish_batched_removal(key, lane, id);
+                Ok(())
+            }
+        }
+    }
+
+    /// Post-removal bookkeeping shared by [`Self::take_session`] and
+    /// [`Self::drop_slot`]: re-key the session whose lane was swapped
+    /// into the hole, retire emptied batches, and compact sparse ones.
+    fn finish_batched_removal(&mut self, key: BatchKey, lane: usize, id: u64) {
+        // the last lane moved into `lane`: re-key that session
+        let ids = self.lane_ids.get_mut(&key).expect("lane ids exist");
+        let moved = ids.pop().expect("non-empty lane list");
+        let emptied = ids.is_empty();
+        if moved != id {
+            ids[lane] = moved;
+            if let Some(Slot::Batched(_, l, _)) = self.slots.get_mut(&moved) {
+                *l = lane;
+            }
+        }
+        if emptied {
+            self.batches.remove(&key);
+            self.lane_ids.remove(&key);
+        } else {
+            // cold-path compaction: once removals leave a batch at
+            // <= 1/4 occupancy, shrink the padded arrays so a drained
+            // population doesn't pin its high-water-mark allocation.
+            // Slot order is preserved, so the id->lane map stays valid.
+            let batch = self.batches.get_mut(&key).expect("batch still exists");
+            if batch.capacity() >= 8 && batch.len() * 4 <= batch.capacity() {
+                batch.compact();
             }
         }
     }
@@ -375,7 +432,7 @@ impl ShardState {
         if let Err(e) = self.evict_to_cap() {
             // the open must fail atomically: a session the client never
             // got an id for must not stay resident eating the cap
-            let _ = self.take_session(id);
+            let _ = self.drop_slot(id);
             return Response::error(format!("open aborted, eviction failed: {e}"));
         }
         Response::Opened { id }
@@ -383,7 +440,9 @@ impl ShardState {
 
     /// Place a session into a resident slot: batched representation when
     /// the net's discovered capability allows, scalar otherwise. No LRU
-    /// or dirty bookkeeping — callers decide that.
+    /// or dirty bookkeeping — callers decide that. Batch insertion is
+    /// O(one lane's state) — `push_lane` writes the new session into a
+    /// padding slot in place (amortized-doubling growth when full).
     fn place(&mut self, id: u64, session: Session) -> Result<(), String> {
         if self.slots.contains_key(&id) {
             return Err(format!("session {id} already exists"));
@@ -1149,6 +1208,44 @@ mod tests {
             let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
             let y = st.step_session(3, &x, 0.1).unwrap();
             assert_eq!(y, twin.step(&x, 0.1).unwrap(), "lane re-key broke state");
+        }
+    }
+
+    #[test]
+    fn sparse_batches_compact_without_corrupting_survivors() {
+        // grow one columnar batch through several capacity doublings,
+        // then close almost everyone: the <=1/4-occupancy compaction
+        // must fire without disturbing the survivor's trajectory.
+        let mut st = ShardState::new();
+        for id in 1..=9u64 {
+            open_ok(&mut st, id, spec(LearnerKind::Columnar { d: 2 }, id));
+        }
+        let survivor = 9u64;
+        let mut twin = Session::open(spec(LearnerKind::Columnar { d: 2 }, survivor))
+            .unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        for _ in 0..25 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            for id in 1..=9u64 {
+                let y = st.step_session(id, &x, 0.2).unwrap();
+                if id == survivor {
+                    assert_eq!(y, twin.step(&x, 0.2).unwrap());
+                }
+            }
+        }
+        // close 8 of 9: repeated swap-removes move the survivor around
+        // and eventually trigger compaction of the padded arrays
+        for id in 1..=8u64 {
+            match st.handle(Request::Close { id }) {
+                Response::Closed { .. } => {}
+                other => panic!("close failed: {other:?}"),
+            }
+        }
+        assert_eq!(st.n_sessions(), 1);
+        for _ in 0..25 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = st.step_session(survivor, &x, 0.2).unwrap();
+            assert_eq!(y, twin.step(&x, 0.2).unwrap(), "compaction broke state");
         }
     }
 

@@ -15,12 +15,15 @@
 //!   accepted connection gets a **reader/writer thread pair**. The reader
 //!   parses one request line at a time, executes it against the shared
 //!   [`super::Service`] (a blocking shard round trip) and enqueues the
-//!   reply; the writer drains the queue to the socket. One request in
-//!   flight per connection means replies come back strictly in request
-//!   order, and all ops for a session id — from any connection —
-//!   serialize through the session's owning shard, so per-session
-//!   history stays replayable. Requests for *different* sessions from
-//!   different connections interleave freely across shards.
+//!   reply on a **bounded** queue; the writer drains the queue to the
+//!   socket. One request in flight per connection means replies come
+//!   back strictly in request order, and all ops for a session id — from
+//!   any connection — serialize through the session's owning shard, so
+//!   per-session history stays replayable. Requests for *different*
+//!   sessions from different connections interleave freely across
+//!   shards. The reply queue holds at most `REPLY_QUEUE_CAP` entries: a
+//!   client that stops draining replies blocks its own reader (TCP
+//!   backpressure) instead of buffering server memory without limit.
 //! - Connection lifecycle: a client EOF (or socket error) ends the
 //!   reader; the writer drains every already-queued reply, shuts the
 //!   socket down, and the connection deregisters. Sessions are owned by
@@ -71,6 +74,16 @@ const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// "line" instead of growing the read buffer until the process is
 /// OOM-killed (which would lose every non-parked session).
 const MAX_LINE_BYTES: usize = 16 << 20;
+/// Replies that may queue between a connection's reader and writer
+/// before the reader blocks. A client that sends requests faster than it
+/// drains replies (or stops reading entirely) used to grow this queue
+/// without bound — snapshot replies are megabytes, so a handful of slow
+/// clients could OOM the server. Bounded, the reader stalls instead,
+/// which stops consuming the client's requests and pushes the
+/// backpressure onto its socket; a genuinely dead client is unwedged by
+/// the writer's [`WRITE_TIMEOUT`], which drops the queue and errors the
+/// reader out.
+const REPLY_QUEUE_CAP: usize = 64;
 
 /// A parsed `--listen` endpoint.
 #[derive(Clone, Debug, PartialEq)]
@@ -432,7 +445,7 @@ fn run_accept(
         if let Ok(mut conns) = shared.conns.lock() {
             conns.insert(id, Arc::clone(&stats));
         }
-        let (reply_tx, reply_rx) = mpsc::channel::<String>();
+        let (reply_tx, reply_rx) = mpsc::sync_channel::<String>(REPLY_QUEUE_CAP);
         let writer = std::thread::spawn(move || run_writer(write_half, reply_rx));
         let reader = {
             let service = Arc::clone(&service);
@@ -527,7 +540,7 @@ fn run_reader(
     service: Arc<Service>,
     shared: Arc<Shared>,
     stats: Arc<ConnStats>,
-    reply_tx: mpsc::Sender<String>,
+    reply_tx: mpsc::SyncSender<String>,
 ) {
     let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
     let mut reader = BufReader::new(stream);

@@ -333,6 +333,63 @@ fn graceful_close_flushes_everything() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Capacity-overflow churn: the resident SoA batch's padded arrays must
+/// double through several grow steps while LRU eviction churns sessions
+/// through the store, then shrink again (compaction) as the population
+/// drains — bit-identical to an unconstrained twin throughout.
+#[test]
+fn batch_capacity_growth_and_compaction_stay_bit_exact() {
+    let dir = fresh_dir("grow");
+    // one shard, resident cap 12: 16 columnar sessions oversubscribe it,
+    // so the batch grows 0 -> 4 -> 8 -> 16 *while* evict/rehydrate churn
+    // swap-removes and re-pushes lanes on almost every step
+    let constrained =
+        Service::with_store(1, Some(StoreConfig::new(&dir, 12))).unwrap();
+    let unconstrained = Service::new(1);
+    let mut ids = Vec::new();
+    let open_both = |s: u64| {
+        let a = open_id(&constrained, "columnar:4", s);
+        let b = open_id(&unconstrained, "columnar:4", s);
+        assert_eq!(a, b, "both services must allocate identical ids");
+        a
+    };
+    let mut rng = Xoshiro256::seed_from_u64(0x9409);
+    let drive = |ids: &[u64], rng: &mut Xoshiro256, ticks: usize| {
+        for _ in 0..ticks {
+            for &id in ids {
+                let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let c = rng.uniform(-0.5, 0.5);
+                assert_eq!(
+                    step_y(&constrained, id, &x, c),
+                    step_y(&unconstrained, id, &x, c),
+                    "constrained run diverged (id {id})"
+                );
+            }
+        }
+    };
+    // wave 1: a small population, batch capacity settles at 4
+    for s in 0..3u64 {
+        ids.push(open_both(s));
+    }
+    drive(&ids, &mut rng, 10);
+    // wave 2: 13 more sessions force capacity doublings under live churn
+    for s in 3..16u64 {
+        ids.push(open_both(s));
+    }
+    drive(&ids, &mut rng, 15);
+    let stats = ok(&constrained.handle_line(r#"{"op":"stats"}"#));
+    assert!(num(&stats, "evictions") > 0.0, "cap 12 must have churned");
+    assert!(num(&stats, "rehydrations") > 0.0);
+    // wave 3: close 13 of 16 on both services — repeated swap-removes
+    // plus the <=1/4-occupancy compaction of the padded arrays
+    for &id in &ids[..13] {
+        ok(&constrained.handle_line(&format!(r#"{{"op":"close","id":{id}}}"#)));
+        ok(&unconstrained.handle_line(&format!(r#"{{"op":"close","id":{id}}}"#)));
+    }
+    drive(&ids[13..], &mut rng, 10);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 /// Store ops degrade cleanly without a mounted store, and park/warm
 /// report missing sessions with useful errors when one is mounted.
 #[test]
