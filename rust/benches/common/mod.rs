@@ -15,12 +15,42 @@ use std::path::Path;
 use ccn_rtrl::coordinator::{aggregate_runs, run_sweep, sweep, AggregateResult};
 use ccn_rtrl::config::ExperimentConfig;
 use ccn_rtrl::metrics::write_csv;
+use ccn_rtrl::util::json::Json;
+
+/// Schema tag stamped into every bench JSON artifact. CI validates the
+/// shape (`scripts/check_bench_schema.py`): a top-level `schema` +
+/// `bench` pair, and every embedded latency histogram in the
+/// `obs::HistogramSnapshot::to_json` shape (count == sum of bucket
+/// counts, ascending bucket bounds, monotone percentiles).
+pub const BENCH_SCHEMA: &str = "ccn.bench.v1";
 
 pub fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name)
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    env_u64(name, default as u64) as usize
+}
+
+/// Write one unified-schema bench artifact: `fields` prefixed with the
+/// `schema`/`bench` identity pair, pretty-printed to `out_path`.
+pub fn write_bench_json(out_path: &str, bench: &str, fields: Vec<(&str, Json)>) {
+    let mut all: Vec<(&str, Json)> = vec![
+        ("schema", Json::Str(BENCH_SCHEMA.to_string())),
+        ("bench", Json::Str(bench.to_string())),
+    ];
+    all.extend(fields);
+    let json = Json::obj(all);
+    if let Some(parent) = Path::new(out_path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).expect("create results dir");
+        }
+    }
+    std::fs::write(out_path, json.pretty()).expect("write bench json");
+    eprintln!("[bench] wrote {out_path}");
 }
 
 pub fn steps(default: u64) -> u64 {

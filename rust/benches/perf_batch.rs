@@ -10,8 +10,10 @@
 //! throughput. Reports, per batch size: fused `step_all` steps/s with
 //! churn off and with churn on (one evict+rehydrate pair per tick), and
 //! the p50/p99 of the individual evict and rehydrate ops. Writes the
-//! record to `results/BENCH_batch.json` (override with CCN_BATCH_OUT) so
-//! the perf trajectory is machine-comparable across commits.
+//! record in the unified `ccn.bench.v1` schema to
+//! `results/BENCH_batch.json` (override with CCN_BATCH_OUT) so the perf
+//! trajectory is machine-comparable across commits; the evict/rehydrate
+//! latencies embed the full `obs::Histogram` JSON.
 //!
 //! Scale knobs (env vars):
 //!   CCN_BATCH_SIZES      comma-separated batch sizes   (default 16,64,256)
@@ -21,20 +23,23 @@
 //!   CCN_BATCH_D          columns per session           (default 8)
 //!   CCN_BATCH_OUT        result file                   (default results/BENCH_batch.json)
 
+mod common;
+
 use std::time::Instant;
 
 use ccn_rtrl::config::LearnerKind;
 use ccn_rtrl::learn::TdConfig;
-use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
 use ccn_rtrl::serve::{ColumnarSessionBatch, Session, SessionSpec};
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+use common::env_usize;
+
+/// Nearest-rank percentile of a histogram snapshot, in microseconds.
+fn pct_us(snap: &HistogramSnapshot, p: f64) -> f64 {
+    snap.percentile(p) as f64 / 1000.0
 }
 
 fn env_sizes(name: &str, default: &[usize]) -> Vec<usize> {
@@ -120,18 +125,18 @@ fn main() {
         // batch, then push a (the same) lane back in. Individual op
         // latencies are the acceptance metric — O(lane) means flat
         // across batch sizes.
-        let mut evict_us: Vec<f64> = Vec::with_capacity(churn_ops);
-        let mut rehydrate_us: Vec<f64> = Vec::with_capacity(churn_ops);
+        let evict_hist = Histogram::new();
+        let rehydrate_hist = Histogram::new();
         let t0 = Instant::now();
         let mut churn_steps = 0usize;
         for op in 0..churn_ops {
             let idx = rng.int_in(0, bsz as u64 - 1) as usize;
             let t = Instant::now();
             let lane = batch.swap_remove_lane(idx).expect("evict");
-            evict_us.push(t.elapsed().as_secs_f64() * 1e6);
+            evict_hist.record_duration(t.elapsed());
             let t = Instant::now();
             batch.push_lane(lane).expect("rehydrate");
-            rehydrate_us.push(t.elapsed().as_secs_f64() * 1e6);
+            rehydrate_hist.record_duration(t.elapsed());
             // keep the batch hot between membership ops, as serving would
             if op % 4 == 0 {
                 fill(&mut rng, &mut obs, &mut cs);
@@ -141,28 +146,24 @@ fn main() {
         }
         let churn_elapsed = t0.elapsed().as_secs_f64();
         let sps_churn = churn_steps as f64 / churn_elapsed;
-        let evict_p50 = percentile(&mut evict_us, 0.50).expect("ops > 0");
-        let evict_p99 = percentile(&mut evict_us, 0.99).expect("ops > 0");
-        let re_p50 = percentile(&mut rehydrate_us, 0.50).expect("ops > 0");
-        let re_p99 = percentile(&mut rehydrate_us, 0.99).expect("ops > 0");
+        let evict = evict_hist.snapshot();
+        let rehydrate = rehydrate_hist.snapshot();
 
         rows_table.push(vec![
             bsz.to_string(),
             format!("{sps_stable:.0}"),
             format!("{sps_churn:.0}"),
-            format!("{evict_p50:.1}"),
-            format!("{evict_p99:.1}"),
-            format!("{re_p50:.1}"),
-            format!("{re_p99:.1}"),
+            format!("{:.1}", pct_us(&evict, 0.50)),
+            format!("{:.1}", pct_us(&evict, 0.99)),
+            format!("{:.1}", pct_us(&rehydrate, 0.50)),
+            format!("{:.1}", pct_us(&rehydrate, 0.99)),
         ]);
         rows_json.push(Json::obj(vec![
             ("sessions", Json::Num(bsz as f64)),
             ("steps_per_s", Json::Num(sps_stable)),
             ("steps_per_s_churn", Json::Num(sps_churn)),
-            ("evict_p50_us", Json::Num(evict_p50)),
-            ("evict_p99_us", Json::Num(evict_p99)),
-            ("rehydrate_p50_us", Json::Num(re_p50)),
-            ("rehydrate_p99_us", Json::Num(re_p99)),
+            ("evict", evict.to_json()),
+            ("rehydrate", rehydrate.to_json()),
         ]));
     }
 
@@ -182,19 +183,15 @@ fn main() {
         )
     );
 
-    let record = Json::obj(vec![
-        ("bench", Json::Str("perf_batch".into())),
-        ("inputs", Json::Num(n as f64)),
-        ("d", Json::Num(d as f64)),
-        ("ticks", Json::Num(ticks as f64)),
-        ("churn_ops", Json::Num(churn_ops as f64)),
-        ("rows", Json::Arr(rows_json)),
-    ]);
-    if let Some(parent) = std::path::Path::new(&out_path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).expect("create results dir");
-        }
-    }
-    std::fs::write(&out_path, record.pretty()).expect("write BENCH_batch.json");
-    eprintln!("wrote {out_path}");
+    common::write_bench_json(
+        &out_path,
+        "perf_batch",
+        vec![
+            ("inputs", Json::Num(n as f64)),
+            ("d", Json::Num(d as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("churn_ops", Json::Num(churn_ops as f64)),
+            ("rows", Json::Arr(rows_json)),
+        ],
+    );
 }

@@ -8,9 +8,10 @@
 //! speedup, per-kind steps/s and p50/p99 single-`step` latency through a
 //! shard's mpsc round-trip, and the batched-vs-scalar numerical parity
 //! on the final tick (which must be <= 1e-6; the two paths are
-//! arithmetically identical). Writes the whole record to
-//! `results/BENCH_serve.json` (override with CCN_SERVE_OUT) so the perf
-//! trajectory is machine-comparable across commits.
+//! arithmetically identical). Writes the whole record in the unified
+//! `ccn.bench.v1` schema to `results/BENCH_serve.json` (override with
+//! CCN_SERVE_OUT) so the perf trajectory is machine-comparable across
+//! commits; per-kind latency embeds the full `obs::Histogram` JSON.
 //!
 //! Scale knobs (env vars):
 //!   CCN_SERVE_SESSIONS  concurrent columnar sessions   (default 256)
@@ -21,22 +22,25 @@
 //!   CCN_SERVE_MIXED     sessions per mixed kind        (default 16)
 //!   CCN_SERVE_OUT       result file                    (default results/BENCH_serve.json)
 
+mod common;
+
 use std::time::Instant;
 
 use ccn_rtrl::config::LearnerKind;
 use ccn_rtrl::learn::TdConfig;
-use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
 use ccn_rtrl::serve::protocol::{Request, Response, StepItem};
 use ccn_rtrl::serve::shard::ShardPool;
 use ccn_rtrl::serve::{Session, SessionSpec};
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+use common::env_usize;
+
+/// Nearest-rank percentile of a histogram snapshot, in microseconds.
+fn pct_us(snap: &HistogramSnapshot, p: f64) -> f64 {
+    snap.percentile(p) as f64 / 1000.0
 }
 
 fn spec(learner: LearnerKind, n_inputs: usize, seed: u64) -> SessionSpec {
@@ -91,23 +95,26 @@ fn drive_cohort(pool: &ShardPool, ids: &[u64], n: usize, ticks: usize) -> f64 {
     (ids.len() * ticks) as f64 / t0.elapsed().as_secs_f64()
 }
 
-/// p50/p99 of single-`step` requests (microseconds) against `ids`.
-fn probe_latency(pool: &ShardPool, ids: &[u64], n: usize, probes: usize) -> (f64, f64) {
+/// Latency histogram of single-`step` requests against `ids`.
+fn probe_latency(
+    pool: &ShardPool,
+    ids: &[u64],
+    n: usize,
+    probes: usize,
+) -> HistogramSnapshot {
     let mut rng = Xoshiro256::seed_from_u64(0xfeed);
-    let mut lat_us: Vec<f64> = Vec::with_capacity(probes);
+    let hist = Histogram::new();
     for i in 0..probes {
         let id = ids[i % ids.len()];
         let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let t = Instant::now();
         let resp = pool.call(Request::Step { id, x, c: 0.0 });
-        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+        hist.record_duration(t.elapsed());
         if let Response::Error { message } = resp {
             panic!("latency probe failed: {message}");
         }
     }
-    let p50 = percentile(&mut lat_us, 0.50).expect("probes > 0");
-    let p99 = percentile(&mut lat_us, 0.99).expect("probes > 0");
-    (p50, p99)
+    hist.snapshot()
 }
 
 fn main() {
@@ -235,21 +242,20 @@ fn main() {
             // CCN_SERVE_MIXED=0 / CCN_SERVE_SESSIONS=0 disable a cohort
             continue;
         }
-        let (p50, p99) = probe_latency(&pool, cohort_ids, n, lat_probes);
+        let snap = probe_latency(&pool, cohort_ids, n, lat_probes);
         kind_rows.push(vec![
             tag.into(),
             cohort_ids.len().to_string(),
             format!("{sps:.0}"),
-            format!("{p50:.1}"),
-            format!("{p99:.1}"),
+            format!("{:.1}", pct_us(&snap, 0.50)),
+            format!("{:.1}", pct_us(&snap, 0.99)),
         ]);
         kind_json.insert(
             tag.to_string(),
             Json::obj(vec![
                 ("sessions", Json::Num(cohort_ids.len() as f64)),
                 ("steps_per_s", Json::Num(sps)),
-                ("p50_us", Json::Num(p50)),
-                ("p99_us", Json::Num(p99)),
+                ("latency", snap.to_json()),
             ]),
         );
     }
@@ -293,25 +299,21 @@ fn main() {
         stats.iter().map(|s| s.steps).collect::<Vec<_>>()
     );
 
-    let record = Json::obj(vec![
-        ("bench", Json::Str("perf_serve".into())),
-        ("sessions", Json::Num(sessions as f64)),
-        ("shards", Json::Num(shards as f64)),
-        ("ticks", Json::Num(ticks as f64)),
-        ("columns", Json::Num(d as f64)),
-        ("inputs", Json::Num(n as f64)),
-        ("columnar_scalar_steps_per_s", Json::Num(scalar_sps)),
-        ("columnar_batched_steps_per_s", Json::Num(served_sps)),
-        ("batched_speedup", Json::Num(served_sps / scalar_sps)),
-        ("parity_max_dev", Json::Num(max_dev as f64)),
-        ("mixed_ticks", Json::Num(mixed_ticks as f64)),
-        ("kinds", Json::Obj(kind_json)),
-    ]);
-    if let Some(parent) = std::path::Path::new(&out_path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).expect("create results dir");
-        }
-    }
-    std::fs::write(&out_path, record.pretty()).expect("write BENCH_serve.json");
-    eprintln!("wrote {out_path}");
+    common::write_bench_json(
+        &out_path,
+        "perf_serve",
+        vec![
+            ("sessions", Json::Num(sessions as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("columns", Json::Num(d as f64)),
+            ("inputs", Json::Num(n as f64)),
+            ("columnar_scalar_steps_per_s", Json::Num(scalar_sps)),
+            ("columnar_batched_steps_per_s", Json::Num(served_sps)),
+            ("batched_speedup", Json::Num(served_sps / scalar_sps)),
+            ("parity_max_dev", Json::Num(max_dev as f64)),
+            ("mixed_ticks", Json::Num(mixed_ticks as f64)),
+            ("kinds", Json::Obj(kind_json)),
+        ],
+    );
 }

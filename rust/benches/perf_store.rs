@@ -4,9 +4,11 @@
 //!
 //! Reports aggregate churn steps/s, explicit rehydration latency
 //! (p50/p99 over timed `warm` ops against freshly parked sessions),
-//! evictions/s and the final store stats, and writes the record to
-//! `results/BENCH_store.json` (override with CCN_STORE_OUT) so the perf
-//! trajectory is machine-comparable across commits.
+//! evictions/s and the final store stats, and writes the record in the
+//! unified `ccn.bench.v1` schema to `results/BENCH_store.json` (override
+//! with CCN_STORE_OUT) so the perf trajectory is machine-comparable
+//! across commits; park/rehydrate latencies embed the full
+//! `obs::Histogram` JSON.
 //!
 //! Scale knobs (env vars):
 //!   CCN_STORE_SESSIONS  total sessions                (default 256)
@@ -18,20 +20,23 @@
 //!   CCN_STORE_DIR       store directory               (default: fresh tempdir, removed after)
 //!   CCN_STORE_OUT       result file                   (default results/BENCH_store.json)
 
+mod common;
+
 use std::time::Instant;
 
-use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
 use ccn_rtrl::serve::protocol::{Request, Response};
 use ccn_rtrl::serve::shard::ShardPool;
 use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+use common::env_usize;
+
+/// Nearest-rank percentile of a histogram snapshot, in microseconds.
+fn pct_us(snap: &HistogramSnapshot, p: f64) -> f64 {
+    snap.percentile(p) as f64 / 1000.0
 }
 
 fn main() {
@@ -112,8 +117,8 @@ fn main() {
     // already-parked or clean session would make `park` an idempotent
     // no-op and poison the recorded latency), and the timed warm is a
     // real load + registry-routed restore.
-    let mut park_us: Vec<f64> = Vec::with_capacity(probes);
-    let mut warm_us: Vec<f64> = Vec::with_capacity(probes);
+    let park_hist = Histogram::new();
+    let warm_hist = Histogram::new();
     for i in 0..probes {
         let id = ids[i % ids.len()];
         match pool.call(Request::Warm { id }) {
@@ -130,7 +135,7 @@ fn main() {
             Response::Parked { .. } => {}
             other => panic!("park probe failed: {other:?}"),
         }
-        park_us.push(t.elapsed().as_secs_f64() * 1e6);
+        park_hist.record_duration(t.elapsed());
         let t = Instant::now();
         match pool.call(Request::Warm { id }) {
             Response::Warmed { rehydrated, .. } => {
@@ -138,12 +143,14 @@ fn main() {
             }
             other => panic!("warm probe failed: {other:?}"),
         }
-        warm_us.push(t.elapsed().as_secs_f64() * 1e6);
+        warm_hist.record_duration(t.elapsed());
     }
-    let warm_p50 = percentile(&mut warm_us, 0.50).expect("probes > 0");
-    let warm_p99 = percentile(&mut warm_us, 0.99).expect("probes > 0");
-    let park_p50 = percentile(&mut park_us, 0.50).expect("probes > 0");
-    let park_p99 = percentile(&mut park_us, 0.99).expect("probes > 0");
+    let park = park_hist.snapshot();
+    let warm = warm_hist.snapshot();
+    let warm_p50 = pct_us(&warm, 0.50);
+    let warm_p99 = pct_us(&warm, 0.99);
+    let park_p50 = pct_us(&park, 0.50);
+    let park_p99 = pct_us(&park, 0.99);
 
     let stats = pool.stats();
     let evictions: u64 = stats.iter().map(|s| s.evictions).sum();
@@ -171,30 +178,24 @@ fn main() {
         )
     );
 
-    let record = Json::obj(vec![
-        ("bench", Json::Str("perf_store".into())),
-        ("sessions", Json::Num(sessions as f64)),
-        ("shards", Json::Num(shards as f64)),
-        ("resident_cap", Json::Num(cap as f64)),
-        ("ticks", Json::Num(ticks as f64)),
-        ("inputs", Json::Num(n as f64)),
-        ("churn_steps_per_s", Json::Num(churn_sps)),
-        ("evictions", Json::Num(evictions as f64)),
-        ("evictions_per_s", Json::Num(evictions_per_s)),
-        ("rehydrations", Json::Num(rehydrations as f64)),
-        ("rehydrate_p50_us", Json::Num(warm_p50)),
-        ("rehydrate_p99_us", Json::Num(warm_p99)),
-        ("park_p50_us", Json::Num(park_p50)),
-        ("park_p99_us", Json::Num(park_p99)),
-        ("store_bytes", Json::Num(store_bytes as f64)),
-    ]);
-    if let Some(parent) = std::path::Path::new(&out_path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).expect("create results dir");
-        }
-    }
-    std::fs::write(&out_path, record.pretty()).expect("write BENCH_store.json");
-    eprintln!("wrote {out_path}");
+    common::write_bench_json(
+        &out_path,
+        "perf_store",
+        vec![
+            ("sessions", Json::Num(sessions as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("resident_cap", Json::Num(cap as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("inputs", Json::Num(n as f64)),
+            ("churn_steps_per_s", Json::Num(churn_sps)),
+            ("evictions", Json::Num(evictions as f64)),
+            ("evictions_per_s", Json::Num(evictions_per_s)),
+            ("rehydrations", Json::Num(rehydrations as f64)),
+            ("park", park.to_json()),
+            ("rehydrate", warm.to_json()),
+            ("store_bytes", Json::Num(store_bytes as f64)),
+        ],
+    );
     if ephemeral {
         drop(pool);
         let _ = std::fs::remove_dir_all(&dir);

@@ -6,9 +6,12 @@
 //!
 //! Reports aggregate steps/s over the wire, per-net-kind steps/s and
 //! p50/p99 single-step round-trip latency, and the refusal/connection
-//! counters, and writes the record to `results/BENCH_transport.json`
-//! (override with CCN_TRANSPORT_OUT) so the perf trajectory is
-//! machine-comparable across commits.
+//! counters, and writes the record in the unified `ccn.bench.v1` schema
+//! to `results/BENCH_transport.json` (override with CCN_TRANSPORT_OUT)
+//! so the perf trajectory is machine-comparable across commits. Each
+//! client thread records round-trips into its own `obs::Histogram`;
+//! the main thread merges the per-client snapshots per kind and embeds
+//! the merged histogram JSON.
 //!
 //! Scale knobs (env vars):
 //!   CCN_TRANSPORT_CLIENTS   concurrent client threads  (default 8)
@@ -18,23 +21,26 @@
 //!   CCN_TRANSPORT_INPUTS    observation width          (default 8)
 //!   CCN_TRANSPORT_OUT      result file (default results/BENCH_transport.json)
 
+mod common;
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
-use ccn_rtrl::metrics::{percentile, render_table};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
+use common::env_usize;
+
 const KINDS: [&str; 4] = ["columnar:8", "ccn:8:2:100000", "tbptt:4:10", "snap1:4"];
 
-fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+/// Nearest-rank percentile of a histogram snapshot, in microseconds.
+fn pct_us(snap: &HistogramSnapshot, p: f64) -> f64 {
+    snap.percentile(p) as f64 / 1000.0
 }
 
 struct Client {
@@ -68,8 +74,8 @@ impl Client {
     }
 }
 
-/// Per-kind latency samples (us) one client collected.
-type KindSamples = Vec<(&'static str, Vec<f64>)>;
+/// Per-kind latency histograms one client collected.
+type KindSamples = Vec<(&'static str, HistogramSnapshot)>;
 
 fn main() {
     let clients = env_usize("CCN_TRANSPORT_CLIENTS", 8);
@@ -114,8 +120,8 @@ fn main() {
                 })
                 .collect();
             let mut rng = Xoshiro256::seed_from_u64(0xbe9c + k as u64);
-            let mut samples: KindSamples =
-                KINDS.iter().map(|kind| (*kind, Vec::new())).collect();
+            let hists: Vec<(&'static str, Histogram)> =
+                KINDS.iter().map(|kind| (*kind, Histogram::new())).collect();
             barrier.wait(); // aligned start: measure true concurrency
             let mut steps = 0u64;
             for _ in 0..ticks {
@@ -130,13 +136,16 @@ fn main() {
                     );
                     let t = Instant::now();
                     client.call(&line);
-                    let us = t.elapsed().as_secs_f64() * 1e6;
                     steps += 1;
                     let kind_idx = (k * sessions + j) % KINDS.len();
-                    samples[kind_idx].1.push(us);
+                    hists[kind_idx].1.record_duration(t.elapsed());
                 }
             }
             barrier.wait(); // aligned stop
+            let samples: KindSamples = hists
+                .iter()
+                .map(|(kind, h)| (*kind, h.snapshot()))
+                .collect();
             (steps, samples)
         }));
     }
@@ -147,13 +156,15 @@ fn main() {
     let elapsed = t0.elapsed().as_secs_f64();
 
     let mut total_steps = 0u64;
-    let mut by_kind: Vec<(&'static str, Vec<f64>)> =
-        KINDS.iter().map(|kind| (*kind, Vec::new())).collect();
+    let mut by_kind: Vec<(&'static str, HistogramSnapshot)> = KINDS
+        .iter()
+        .map(|kind| (*kind, HistogramSnapshot::default()))
+        .collect();
     for join in joins {
         let (steps, samples) = join.join().expect("client thread");
         total_steps += steps;
-        for (slot, (_, lat)) in by_kind.iter_mut().zip(samples) {
-            slot.1.extend(lat);
+        for (slot, (_, snap)) in by_kind.iter_mut().zip(samples) {
+            slot.1 = slot.1.merge(&snap);
         }
     }
     let steps_per_s = total_steps as f64 / elapsed;
@@ -165,28 +176,25 @@ fn main() {
 
     let mut rows = Vec::new();
     let mut kind_json = std::collections::BTreeMap::new();
-    for (kind, mut lat) in by_kind {
-        if lat.is_empty() {
+    for (kind, snap) in by_kind {
+        let count = snap.count();
+        if count == 0 {
             continue;
         }
-        let count = lat.len();
-        let p50 = percentile(&mut lat, 0.50).expect("samples");
-        let p99 = percentile(&mut lat, 0.99).expect("samples");
         let kind_sps = count as f64 / elapsed;
         rows.push(vec![
             kind.to_string(),
             count.to_string(),
             format!("{kind_sps:.0}"),
-            format!("{p50:.1}"),
-            format!("{p99:.1}"),
+            format!("{:.1}", pct_us(&snap, 0.50)),
+            format!("{:.1}", pct_us(&snap, 0.99)),
         ]);
         kind_json.insert(
             kind.to_string(),
             Json::obj(vec![
                 ("steps", Json::Num(count as f64)),
                 ("steps_per_s", Json::Num(kind_sps)),
-                ("p50_us", Json::Num(p50)),
-                ("p99_us", Json::Num(p99)),
+                ("latency", snap.to_json()),
             ]),
         );
     }
@@ -202,22 +210,18 @@ fn main() {
          {elapsed:.2}s = {steps_per_s:.0} steps/s"
     );
 
-    let record = Json::obj(vec![
-        ("bench", Json::Str("perf_transport".into())),
-        ("conns", Json::Num(clients as f64)),
-        ("sessions_per_conn", Json::Num(sessions as f64)),
-        ("shards", Json::Num(shards as f64)),
-        ("ticks", Json::Num(ticks as f64)),
-        ("inputs", Json::Num(n as f64)),
-        ("steps", Json::Num(total_steps as f64)),
-        ("steps_per_s", Json::Num(steps_per_s)),
-        ("kinds", Json::Obj(kind_json)),
-    ]);
-    if let Some(parent) = std::path::Path::new(&out_path).parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).expect("create results dir");
-        }
-    }
-    std::fs::write(&out_path, record.pretty()).expect("write BENCH_transport.json");
-    eprintln!("wrote {out_path}");
+    common::write_bench_json(
+        &out_path,
+        "perf_transport",
+        vec![
+            ("conns", Json::Num(clients as f64)),
+            ("sessions_per_conn", Json::Num(sessions as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("inputs", Json::Num(n as f64)),
+            ("steps", Json::Num(total_steps as f64)),
+            ("steps_per_s", Json::Num(steps_per_s)),
+            ("kinds", Json::Obj(kind_json)),
+        ],
+    );
 }

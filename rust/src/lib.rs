@@ -20,6 +20,9 @@
 //!   JAX/Pallas-authored AOT artifacts (`artifacts/*.hlo.txt`) from Rust;
 //!   numerically cross-checked against the native path. Off by default
 //!   because the `xla` crate is unavailable in the offline toolchain.
+//! - [`obs`]: zero-dependency telemetry — per-op latency histograms,
+//!   stage timers, named counters, and the optional JSONL trace log
+//!   (`ccn serve --trace-file`), surfaced via the `metrics` wire op.
 //! - [`env`]: prediction streams (trace patterning, synthetic-ALE suite).
 //! - [`coordinator`]: experiment runner, multi-seed sweeps, aggregation.
 //! - [`compute`]: the paper's Appendix-A operation-count budget equations.
@@ -32,6 +35,7 @@ pub mod learn;
 pub mod nets;
 pub mod env;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod serve;

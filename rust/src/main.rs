@@ -13,13 +13,14 @@
 //!                comparison of the paper's appendix; --features pjrt)
 
 use std::io::Read;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use ccn_rtrl::config::{EnvKind, ExperimentConfig, LearnerKind};
 use ccn_rtrl::coordinator::{aggregate_runs, run_experiment, run_sweep, sweep};
 use ccn_rtrl::env::synthatari;
 use ccn_rtrl::metrics::render_table;
 use ccn_rtrl::nets::NetRegistry;
+use ccn_rtrl::obs::TraceConfig;
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
@@ -128,6 +129,8 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let resident_cap = args.usize_or("resident-cap", 0);
     let listen = args.opt_str("listen");
     let max_conns = args.usize_or("max-conns", 0);
+    let trace_file = args.opt_str("trace-file");
+    let trace_sample = args.opt_str("trace-sample");
     args.finish()?;
     if resident_cap > 0 && store_dir.is_none() {
         return Err(
@@ -142,11 +145,29 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
                 .into(),
         );
     }
+    if trace_sample.is_some() && trace_file.is_none() {
+        return Err(
+            "--trace-sample needs --trace-file: there is nowhere to write \
+             the sampled events"
+                .into(),
+        );
+    }
+    let trace_cfg = trace_file
+        .map(|path| -> Result<TraceConfig, String> {
+            let sample = match &trace_sample {
+                None => 1,
+                Some(s) => s.parse::<u64>().ok().filter(|&n| n >= 1).ok_or_else(
+                    || format!("--trace-sample must be an integer >= 1, got {s:?}"),
+                )?,
+            };
+            Ok(TraceConfig { path: PathBuf::from(path), sample })
+        })
+        .transpose()?;
     let listen = listen.map(|s| ListenAddr::parse(&s)).transpose()?;
     let store_cfg = store_dir.map(|dir| StoreConfig::new(dir, resident_cap));
     eprintln!(
         "ccn serve: {shards} shard(s); {} (op: open|step|step_batch|predict|\
-         snapshot|restore|park|warm|close|stats; net kinds: {})",
+         snapshot|restore|park|warm|close|stats|metrics; net kinds: {})",
         if listen.is_none() {
             "JSONL requests on stdin, responses on stdout"
         } else {
@@ -166,6 +187,14 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
         );
     }
     let mut service = Service::with_store(shards, store_cfg)?;
+    if let Some(cfg) = &trace_cfg {
+        service.set_trace(cfg)?;
+        eprintln!(
+            "trace: {} (1 in {} ops sampled)",
+            cfg.path.display(),
+            cfg.sample
+        );
+    }
     let parked = match service.pool().stats().iter().map(|s| s.parked).sum::<usize>()
     {
         0 => String::new(),
@@ -363,14 +392,17 @@ fn main() {
                  sweep adds: --seeds 0,1,2 --threads T\n\
                  serve options: --shards N --store-dir DIR --resident-cap K\n\
                    --listen tcp://HOST:PORT|unix://PATH --max-conns M\n\
+                   --trace-file PATH --trace-sample N\n\
                    (JSONL protocol on stdin/stdout by default; ops: open|step|\n\
-                   step_batch|predict|snapshot|restore|park|warm|close|stats;\n\
-                   every learner spec above is serveable and snapshot-safe.\n\
-                   --store-dir mounts the durable session tier: sessions beyond\n\
-                   K per shard are LRU-evicted to disk, rehydrated on demand,\n\
-                   and survive restarts. --listen serves many concurrent\n\
-                   clients over TCP or a unix socket instead of stdio,\n\
-                   until stdin closes)"
+                   step_batch|predict|snapshot|restore|park|warm|close|stats|\n\
+                   metrics; every learner spec above is serveable and\n\
+                   snapshot-safe. --store-dir mounts the durable session tier:\n\
+                   sessions beyond K per shard are LRU-evicted to disk,\n\
+                   rehydrated on demand, and survive restarts. --listen serves\n\
+                   many concurrent clients over TCP or a unix socket instead\n\
+                   of stdio, until stdin closes. --trace-file appends one\n\
+                   JSONL event per sampled op (1 in N, default every op) with\n\
+                   latency and stage breakdown)"
             );
             std::process::exit(2);
         }

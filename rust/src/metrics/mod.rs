@@ -187,6 +187,12 @@ pub fn write_csv(
 /// Percentile of a sample set by nearest rank; sorts in place. Used for
 /// latency reporting (p50/p99) in the serve benches.
 ///
+/// [`crate::obs::HistogramSnapshot::percentile`] follows the same
+/// nearest-rank convention over log2 buckets, so a bench that switches
+/// from collecting raw samples to recording into an [`crate::obs::Histogram`]
+/// reports comparable quantiles (exact on bucket boundaries, bucket-upper-
+/// bound approximations in between).
+///
 /// Convention:
 /// - `None` for an empty sample set (there is no percentile to report —
 ///   callers must not invent one);

@@ -1,0 +1,443 @@
+//! Fixed-size log2-bucketed latency histogram over atomic counters.
+//!
+//! `record` is four relaxed atomic ops (bucket, sum, min, max) — cheap
+//! enough to sit on every wire op and internal stage without perturbing
+//! the thing being measured. Values are nanoseconds by convention
+//! ([`Histogram::record_duration`]), but the type is unit-agnostic.
+//!
+//! Buckets: index 0 holds exactly the value `0`; bucket `i` in `1..=64`
+//! holds `[2^(i-1), 2^i - 1]` (bucket 64's upper bound saturates at
+//! `u64::MAX`). 65 buckets cover the whole `u64` range, so every value
+//! lands in a bucket whose bounds contain it — there is no overflow
+//! bucket to lose tail latencies in.
+//!
+//! Percentiles use the same nearest-rank convention as
+//! [`crate::metrics::percentile`] (rank = `round((count-1) * q)`), applied
+//! to the cumulative bucket counts; the reported value is the bucket's
+//! upper bound clamped into the observed `[min, max]`, which keeps
+//! `min <= p50 <= p90 <= p99 <= p999 <= max` and makes percentiles
+//! monotone in `q`. When all samples share one bucket the clamp makes the
+//! nearest-rank answer exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Bucket 0 is `{0}`; buckets `1..=64` are the log2 ranges. See module docs.
+pub const N_BUCKETS: usize = 65;
+
+/// Index of the bucket whose bounds contain `v`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive `(lo, hi)` bounds of bucket `i`. Panics if `i >= N_BUCKETS`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < N_BUCKETS, "bucket index {i} out of range");
+    if i == 0 {
+        (0, 0)
+    } else {
+        let lo = 1u64 << (i - 1);
+        let hi = if i == 64 { u64::MAX } else { (1u64 << i) - 1 };
+        (lo, hi)
+    }
+}
+
+/// Lock-free mergeable histogram. Shared via `Arc`; all methods take
+/// `&self`. The total count is *derived* from the buckets at snapshot
+/// time, so `count == Σ bucket counts` holds by construction even while
+/// writers race the snapshot.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    /// `u64::MAX` until the first record (sentinel, resolved in accessors).
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Four relaxed atomic ops; never blocks.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration in nanoseconds (saturating).
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// One pass over the atomics; the result is a plain value type safe
+    /// to merge, serialize, and query without further synchronization.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]. `min` keeps the raw
+/// `u64::MAX` empty sentinel internally so merge stays a plain
+/// min-of-mins; the [`HistogramSnapshot::min`] accessor resolves it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    buckets: [u64; N_BUCKETS],
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> HistogramSnapshot {
+        HistogramSnapshot::empty()
+    }
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: [0; N_BUCKETS],
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.min == u64::MAX {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn bucket_count(&self, i: usize) -> u64 {
+        self.buckets[i]
+    }
+
+    /// Bucketwise sum plus min-of-mins / max-of-maxes: associative,
+    /// commutative, and count-preserving (merged count is the sum of the
+    /// operands' counts).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i] + other.buckets[i]),
+            sum: self.sum + other.sum,
+            min: self.min.min(other.min),
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// Nearest-rank percentile over the bucket counts; `p` is clamped to
+    /// `[0, 1]`. Returns 0 for an empty histogram. See module docs for
+    /// the rank and clamping conventions.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((count - 1) as f64 * p.clamp(0.0, 1.0)).round() as u64;
+        let lo_obs = self.min();
+        // defensive vs. in-flight snapshot skew: never report below min
+        // or above max even if the racing bucket/extrema reads disagree
+        let hi_obs = self.max.max(lo_obs);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen > rank {
+                let (_, hi) = bucket_bounds(i);
+                return hi.min(hi_obs).max(lo_obs);
+            }
+        }
+        hi_obs
+    }
+
+    /// The one histogram JSON shape used everywhere: the `metrics` wire
+    /// op, the `stats` latency block sources, and every `BENCH_*.json`.
+    /// `buckets` is sparse — ascending `[lo_ns, count]` pairs for the
+    /// nonzero buckets only.
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(i, &n)| {
+                Json::Arr(vec![
+                    Json::Num(bucket_bounds(i).0 as f64),
+                    Json::Num(n as f64),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum_ns", Json::Num(self.sum as f64)),
+            ("min_ns", Json::Num(self.min() as f64)),
+            ("max_ns", Json::Num(self.max() as f64)),
+            ("p50_ns", Json::Num(self.percentile(0.50) as f64)),
+            ("p90_ns", Json::Num(self.percentile(0.90) as f64)),
+            ("p99_ns", Json::Num(self.percentile(0.99) as f64)),
+            ("p999_ns", Json::Num(self.percentile(0.999) as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    #[test]
+    fn bucket_bounds_contain_every_value() {
+        let probes = [
+            0u64,
+            1,
+            2,
+            3,
+            4,
+            7,
+            8,
+            15,
+            16,
+            17,
+            1000,
+            1023,
+            1024,
+            u64::MAX / 2,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &probes {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "value {v} outside bucket {i} [{lo},{hi}]");
+        }
+        // powers of two start a fresh bucket; their predecessors end one
+        for k in 0..63u32 {
+            let p = 1u64 << k;
+            assert_eq!(bucket_bounds(bucket_index(p)).0, p);
+            if p > 1 {
+                assert_eq!(bucket_bounds(bucket_index(p - 1)).1, p - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_bounds_tile_u64_without_gaps() {
+        let mut next = 0u64;
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, next, "bucket {i} does not start where {} ended", i.max(1) - 1);
+            assert!(hi >= lo);
+            if i < N_BUCKETS - 1 {
+                next = hi + 1;
+            } else {
+                assert_eq!(hi, u64::MAX);
+            }
+        }
+    }
+
+    #[test]
+    fn random_records_land_in_containing_buckets() {
+        let mut rng = Xoshiro256::seed_from_u64(0xB0C4);
+        let h = Histogram::new();
+        let mut values = Vec::new();
+        for _ in 0..4000 {
+            // bias toward small values but cover the full width
+            let shift = (rng.next_u64() % 64) as u32;
+            let v = rng.next_u64() >> shift;
+            h.record(v);
+            values.push(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count() as usize, values.len());
+        assert_eq!(snap.sum(), values.iter().copied().fold(0u64, u64::wrapping_add));
+        assert_eq!(snap.min(), *values.iter().min().unwrap());
+        assert_eq!(snap.max(), *values.iter().max().unwrap());
+        // per-bucket recount from raw values must match exactly
+        let mut expect = [0u64; N_BUCKETS];
+        for &v in &values {
+            expect[bucket_index(v)] += 1;
+        }
+        for (i, &want) in expect.iter().enumerate() {
+            assert_eq!(snap.bucket_count(i), want, "bucket {i}");
+        }
+    }
+
+    fn random_snapshot(rng: &mut Xoshiro256, n: usize) -> HistogramSnapshot {
+        let h = Histogram::new();
+        for _ in 0..n {
+            let shift = (rng.next_u64() % 64) as u32;
+            h.record(rng.next_u64() >> shift);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn merge_is_associative_and_count_preserving() {
+        let mut rng = Xoshiro256::seed_from_u64(0x51AB);
+        let (a, b, c) = (
+            random_snapshot(&mut rng, 100),
+            random_snapshot(&mut rng, 57),
+            random_snapshot(&mut rng, 213),
+        );
+        let left = a.merge(&b).merge(&c);
+        let right = a.merge(&b.merge(&c));
+        assert_eq!(left, right);
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+        assert_eq!(left.sum(), a.sum() + b.sum() + c.sum());
+        assert_eq!(left.min(), a.min().min(b.min()).min(c.min()));
+        assert_eq!(left.max(), a.max().max(b.max()).max(c.max()));
+        // merging with empty is the identity
+        assert_eq!(a.merge(&HistogramSnapshot::empty()), a);
+        assert_eq!(HistogramSnapshot::empty().merge(&a), a);
+    }
+
+    #[test]
+    fn percentiles_monotone_in_q_and_bounded_by_extrema() {
+        let mut rng = Xoshiro256::seed_from_u64(0x9E37);
+        for trial in 0..8 {
+            let snap = random_snapshot(&mut rng, 50 + trial * 97);
+            let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0];
+            let vals: Vec<u64> = qs.iter().map(|&q| snap.percentile(q)).collect();
+            for w in vals.windows(2) {
+                assert!(w[0] <= w[1], "percentiles not monotone: {vals:?}");
+            }
+            assert!(vals[0] >= snap.min());
+            assert!(*vals.last().unwrap() <= snap.max());
+        }
+    }
+
+    #[test]
+    fn percentiles_match_metrics_convention_on_bucket_bounds() {
+        // values sitting exactly on bucket upper bounds make the bucket
+        // walk exact, so the histogram must agree with
+        // metrics::percentile on the raw samples, rank for rank
+        let values: Vec<u64> = vec![1, 3, 7, 15];
+        let h = Histogram::new();
+        for &v in &values {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let mut raw: Vec<f64> = values.iter().map(|&v| v as f64).collect();
+            let want = crate::metrics::percentile(&mut raw, q).unwrap();
+            assert_eq!(
+                snap.percentile(q) as f64,
+                want,
+                "q={q}: histogram disagrees with metrics::percentile"
+            );
+        }
+    }
+
+    #[test]
+    fn single_value_histogram_is_exact_everywhere() {
+        let h = Histogram::new();
+        for _ in 0..10 {
+            h.record(42);
+        }
+        let snap = h.snapshot();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(snap.percentile(q), 42);
+        }
+        assert_eq!(snap.min(), 42);
+        assert_eq!(snap.max(), 42);
+        assert_eq!(snap.sum(), 420);
+    }
+
+    #[test]
+    fn empty_histogram_serializes_to_zeros() {
+        let snap = Histogram::new().snapshot();
+        assert_eq!(snap.count(), 0);
+        let j = snap.to_json();
+        for key in ["count", "sum_ns", "min_ns", "max_ns", "p50_ns", "p999_ns"] {
+            assert_eq!(j.get(key).and_then(|v| v.as_f64()), Some(0.0), "{key}");
+        }
+        assert!(j.get("buckets").and_then(|v| v.as_arr()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn json_buckets_are_sparse_ascending_and_sum_to_count() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 1, 5, 5, 5, 900, u64::MAX] {
+            h.record(v);
+        }
+        let j = h.snapshot().to_json();
+        let buckets = j.get("buckets").and_then(|v| v.as_arr()).unwrap();
+        let mut prev_lo = -1.0f64;
+        let mut total = 0.0f64;
+        for b in buckets {
+            let pair = b.as_arr().unwrap();
+            let lo = pair[0].as_f64().unwrap();
+            let n = pair[1].as_f64().unwrap();
+            assert!(lo > prev_lo, "bucket bounds must ascend");
+            assert!(n > 0.0, "sparse form must omit empty buckets");
+            prev_lo = lo;
+            total += n;
+        }
+        assert_eq!(total, j.get("count").and_then(|v| v.as_f64()).unwrap());
+    }
+
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 4000);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.max(), 3999);
+    }
+}

@@ -1,0 +1,321 @@
+//! `obs` — zero-dependency telemetry: latency histograms, named
+//! counters, and a structured trace log for the serving stack.
+//!
+//! Three pieces:
+//!
+//! - [`Histogram`]: log2-bucketed latency histogram over atomics.
+//!   Recording is four relaxed atomic ops; snapshots are mergeable and
+//!   serialize to the one histogram JSON shape shared by the `metrics`
+//!   wire op and every `BENCH_*.json`.
+//! - [`Registry`]: named histograms and counters handed out as `Arc`s.
+//!   Callers resolve their handles once (at shard/connection setup), so
+//!   the hot path never touches the registry lock.
+//! - [`trace::TraceHandle`]: optional JSONL trace log behind a bounded
+//!   channel and a dedicated writer thread (`ccn serve --trace-file`).
+//!
+//! # Naming convention
+//!
+//! - `op.<name>` — wall time of one wire op, dispatch to reply
+//!   ([`names::OPS`]).
+//! - `stage.<name>` — one internal stage of an op ([`names::STAGES`]):
+//!   shard queue wait, scalar vs. batched step kernel, store
+//!   append/load/compaction, transport read/decode/write.
+//! - plain names — counters ([`names::COUNTERS`], plus dynamic
+//!   `steps.<kind>` per-learner-kind step counts).
+//!
+//! # Consistency model
+//!
+//! [`Registry::snapshot`] reads every histogram and counter in one pass
+//! while holding the registry lock. The lock excludes *registration*,
+//! not recording — writers keep appending while the snapshot runs — so
+//! a snapshot is not a global instant. What it does guarantee:
+//!
+//! - each histogram is read exactly once, in one pass over its atomics,
+//!   so every derived statistic (count, percentiles, buckets) in a reply
+//!   comes from the same per-histogram observation — a `p50` and `p99`
+//!   in one reply can never straddle an update of the same histogram;
+//! - `count == Σ bucket counts` holds by construction (the count is
+//!   derived from the buckets, never stored separately);
+//! - cross-histogram skew is bounded by the ops in flight during the
+//!   single pass.
+//!
+//! Telemetry is measurement-only: nothing here feeds back into
+//! predictions, shard routing, or persisted state, and recording never
+//! blocks (the trace queue drops on overflow rather than backpressure).
+
+pub mod histogram;
+pub mod trace;
+
+pub use histogram::{bucket_bounds, bucket_index, Histogram, HistogramSnapshot, N_BUCKETS};
+pub use trace::{TraceConfig, TraceHandle};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Canonical metric names. Pre-registered by [`Registry::standard`] so
+/// the `metrics` reply schema is stable from the first request — an op
+/// or stage that has never fired still appears with `count = 0`.
+pub mod names {
+    /// Every wire op, index-aligned with `serve`'s op timer table.
+    pub const OPS: [&str; 11] = [
+        "open",
+        "step",
+        "step_batch",
+        "predict",
+        "snapshot",
+        "restore",
+        "park",
+        "warm",
+        "close",
+        "stats",
+        "metrics",
+    ];
+
+    /// Internal stages a wire op decomposes into.
+    pub const STAGES: [&str; 9] = [
+        "queue_wait",
+        "step_scalar",
+        "step_batched",
+        "store_append",
+        "store_load",
+        "store_compact",
+        "transport_read",
+        "transport_decode",
+        "transport_write",
+    ];
+
+    /// Fixed counters (dynamic `steps.<kind>` counters register lazily).
+    pub const COUNTERS: [&str; 5] = [
+        "transport.err_decode",
+        "transport.err_oversize",
+        "transport.err_ghost_id",
+        "transport.err_io",
+        "trace.dropped",
+    ];
+}
+
+/// Named histograms + counters, shared via `Arc` across shards, the
+/// store, and transport threads. Get-or-create handles once at setup;
+/// record through the returned `Arc`s thereafter.
+#[derive(Default)]
+pub struct Registry {
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+/// A poisoned telemetry lock must not take the serving path down with
+/// it — the maps hold only `Arc`s, which cannot be left half-written.
+fn relock<T>(lock: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// A registry with every canonical op/stage histogram and counter
+    /// pre-registered (see [`names`]), so reply schemas don't depend on
+    /// which code paths have fired yet.
+    pub fn standard() -> Registry {
+        let reg = Registry::new();
+        for op in names::OPS {
+            reg.histogram(&format!("op.{op}"));
+        }
+        for stage in names::STAGES {
+            reg.histogram(&format!("stage.{stage}"));
+        }
+        for counter in names::COUNTERS {
+            reg.counter(counter);
+        }
+        reg
+    }
+
+    /// Get-or-create the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut hists = relock(&self.hists);
+        match hists.get(name) {
+            Some(h) => Arc::clone(h),
+            None => {
+                let h = Arc::new(Histogram::new());
+                hists.insert(name.to_string(), Arc::clone(&h));
+                h
+            }
+        }
+    }
+
+    /// Get-or-create the named counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut counters = relock(&self.counters);
+        match counters.get(name) {
+            Some(c) => Arc::clone(c),
+            None => {
+                let c = Arc::new(AtomicU64::new(0));
+                counters.insert(name.to_string(), Arc::clone(&c));
+                c
+            }
+        }
+    }
+
+    /// One consistent read of the whole registry (see module docs for
+    /// exactly what "consistent" means here).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let hists = relock(&self.hists)
+            .iter()
+            .map(|(name, h)| (name.clone(), h.snapshot()))
+            .collect();
+        let counters = relock(&self.counters)
+            .iter()
+            .map(|(name, c)| (name.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        RegistrySnapshot { hists, counters }
+    }
+}
+
+/// Point-in-time copy of a [`Registry`]. Plain data; query and
+/// serialize freely.
+pub struct RegistrySnapshot {
+    pub hists: BTreeMap<String, HistogramSnapshot>,
+    pub counters: BTreeMap<String, u64>,
+}
+
+impl RegistrySnapshot {
+    /// Group by naming convention: `op.*` under `"ops"` and `stage.*`
+    /// under `"stages"` (prefixes stripped), any other histograms under
+    /// `"histograms"`, counters flat under `"counters"`.
+    pub fn to_json(&self) -> Json {
+        let mut ops = BTreeMap::new();
+        let mut stages = BTreeMap::new();
+        let mut other = BTreeMap::new();
+        for (name, snap) in &self.hists {
+            if let Some(op) = name.strip_prefix("op.") {
+                ops.insert(op.to_string(), snap.to_json());
+            } else if let Some(stage) = name.strip_prefix("stage.") {
+                stages.insert(stage.to_string(), snap.to_json());
+            } else {
+                other.insert(name.clone(), snap.to_json());
+            }
+        }
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(name, &v)| (name.clone(), Json::Num(v as f64)))
+            .collect();
+        let mut fields = vec![
+            ("ops", Json::Obj(ops)),
+            ("stages", Json::Obj(stages)),
+            ("counters", Json::Obj(counters)),
+        ];
+        if !other.is_empty() {
+            fields.push(("histograms", Json::Obj(other)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Per-request stage breakdown for a *sampled* traced op. The shard
+/// worker fills the cell; the dispatch thread reads it after the reply
+/// arrives (the reply channel orders the two). `shard` doubles as the
+/// filled-marker: `u64::MAX` until a worker writes it.
+pub struct StageCell {
+    pub queue_ns: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub store_ns: AtomicU64,
+    pub kernel_ns: AtomicU64,
+    pub shard: AtomicU64,
+}
+
+impl Default for StageCell {
+    fn default() -> StageCell {
+        StageCell {
+            queue_ns: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+            store_ns: AtomicU64::new(0),
+            kernel_ns: AtomicU64::new(0),
+            shard: AtomicU64::new(u64::MAX),
+        }
+    }
+}
+
+impl StageCell {
+    /// True once a shard worker has written the breakdown.
+    pub fn filled(&self) -> bool {
+        self.shard.load(Ordering::Relaxed) != u64::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_handles_are_shared() {
+        let reg = Registry::new();
+        let a = reg.histogram("stage.queue_wait");
+        let b = reg.histogram("stage.queue_wait");
+        a.record(7);
+        b.record(9);
+        assert_eq!(reg.snapshot().hists["stage.queue_wait"].count(), 2);
+    }
+
+    #[test]
+    fn counter_handles_are_shared() {
+        let reg = Registry::new();
+        let a = reg.counter("steps.columnar");
+        let b = reg.counter("steps.columnar");
+        a.fetch_add(3, Ordering::Relaxed);
+        b.fetch_add(4, Ordering::Relaxed);
+        assert_eq!(reg.snapshot().counters["steps.columnar"], 7);
+    }
+
+    #[test]
+    fn standard_registry_pre_registers_the_full_schema() {
+        let snap = Registry::standard().snapshot();
+        for op in names::OPS {
+            assert!(snap.hists.contains_key(&format!("op.{op}")), "op.{op}");
+        }
+        for stage in names::STAGES {
+            assert!(
+                snap.hists.contains_key(&format!("stage.{stage}")),
+                "stage.{stage}"
+            );
+        }
+        for counter in names::COUNTERS {
+            assert!(snap.counters.contains_key(counter), "{counter}");
+        }
+        // and the grouped JSON carries them even at count 0
+        let j = snap.to_json();
+        let ops = j.get("ops").and_then(|v| v.as_obj()).unwrap();
+        assert_eq!(ops.len(), names::OPS.len());
+        let stages = j.get("stages").and_then(|v| v.as_obj()).unwrap();
+        assert_eq!(stages.len(), names::STAGES.len());
+    }
+
+    #[test]
+    fn snapshot_json_groups_by_prefix() {
+        let reg = Registry::new();
+        reg.histogram("op.step").record(1000);
+        reg.histogram("stage.queue_wait").record(50);
+        reg.histogram("bench.probe").record(9);
+        reg.counter("steps.ccn").fetch_add(12, Ordering::Relaxed);
+        let j = reg.snapshot().to_json();
+        assert!(j.get("ops").unwrap().get("step").is_some());
+        assert!(j.get("stages").unwrap().get("queue_wait").is_some());
+        assert!(j.get("histograms").unwrap().get("bench.probe").is_some());
+        assert_eq!(
+            j.get("counters").unwrap().get("steps.ccn").and_then(|v| v.as_f64()),
+            Some(12.0)
+        );
+    }
+
+    #[test]
+    fn stage_cell_marks_filled_via_shard_sentinel() {
+        let cell = StageCell::default();
+        assert!(!cell.filled());
+        cell.shard.store(0, Ordering::Relaxed);
+        assert!(cell.filled());
+    }
+}

@@ -1,0 +1,156 @@
+//! Structured trace log: one JSONL event per sampled wire op.
+//!
+//! The serving hot path must never block on disk, so events go through a
+//! bounded channel to a dedicated writer thread. When the channel is
+//! full the event is *dropped* (and counted in the `trace.dropped`
+//! registry counter) rather than applying backpressure — the trace is a
+//! diagnostic, not a ledger. [`TraceHandle::finish`] closes the channel
+//! and joins the writer, so every event accepted before shutdown is on
+//! disk when `finish` returns.
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+/// How many events may queue between the serving threads and the writer
+/// before new events are dropped.
+const TRACE_QUEUE_CAP: usize = 1024;
+
+/// Where the trace goes and how often: `sample = N` emits every Nth op
+/// (N = 1 traces everything). `sample = 0` is rejected at open.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub path: PathBuf,
+    pub sample: u64,
+}
+
+/// Live trace log. Owned by the `Service`; cloned handles are not needed
+/// because sampling and emission happen at the single dispatch point.
+pub struct TraceHandle {
+    tx: SyncSender<String>,
+    /// global op sequence number — drives deterministic 1-in-N sampling
+    seq: AtomicU64,
+    sample: u64,
+    dropped: Arc<AtomicU64>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TraceHandle {
+    /// Create (truncate) the trace file and start the writer thread.
+    /// `dropped` is the registry counter bumped on queue overflow.
+    pub fn open(cfg: &TraceConfig, dropped: Arc<AtomicU64>) -> Result<TraceHandle, String> {
+        if cfg.sample == 0 {
+            return Err("trace sample must be >= 1 (1 = trace every op)".to_string());
+        }
+        let file = std::fs::File::create(&cfg.path)
+            .map_err(|e| format!("trace file {}: {e}", cfg.path.display()))?;
+        let (tx, rx) = mpsc::sync_channel::<String>(TRACE_QUEUE_CAP);
+        let join = std::thread::spawn(move || {
+            let mut out = std::io::BufWriter::new(file);
+            for line in rx {
+                // flush per event: a crashed or killed server still
+                // leaves a readable trace up to the last accepted event
+                if writeln!(out, "{line}").and_then(|()| out.flush()).is_err() {
+                    break;
+                }
+            }
+            let _ = out.flush();
+        });
+        Ok(TraceHandle {
+            tx,
+            seq: AtomicU64::new(0),
+            sample: cfg.sample,
+            dropped,
+            join: Some(join),
+        })
+    }
+
+    /// Advance the op sequence; true when this op should emit an event.
+    pub fn should_sample(&self) -> bool {
+        self.seq.fetch_add(1, Ordering::Relaxed) % self.sample == 0
+    }
+
+    /// Queue one event line. Never blocks: a full queue (or a dead
+    /// writer) drops the event and bumps the `trace.dropped` counter.
+    pub fn emit(&self, event: &Json) {
+        match self.tx.try_send(event.dump()) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Close the channel and join the writer; all accepted events are on
+    /// disk when this returns.
+    pub fn finish(mut self) {
+        let join = self.join.take();
+        drop(self.tx);
+        if let Some(join) = join {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        std::env::temp_dir().join(format!("ccn_trace_{tag}_{}_{nanos}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn zero_sample_rate_is_rejected() {
+        let cfg = TraceConfig {
+            path: tmp_path("zero"),
+            sample: 0,
+        };
+        assert!(TraceHandle::open(&cfg, Arc::new(AtomicU64::new(0))).is_err());
+    }
+
+    #[test]
+    fn sampling_takes_every_nth_op() {
+        let cfg = TraceConfig {
+            path: tmp_path("nth"),
+            sample: 3,
+        };
+        let t = TraceHandle::open(&cfg, Arc::new(AtomicU64::new(0))).unwrap();
+        let hits: Vec<bool> = (0..9).map(|_| t.should_sample()).collect();
+        assert_eq!(
+            hits,
+            [true, false, false, true, false, false, true, false, false]
+        );
+        t.finish();
+        let _ = std::fs::remove_file(&cfg.path);
+    }
+
+    #[test]
+    fn finish_flushes_every_accepted_event() {
+        let cfg = TraceConfig {
+            path: tmp_path("flush"),
+            sample: 1,
+        };
+        let dropped = Arc::new(AtomicU64::new(0));
+        let t = TraceHandle::open(&cfg, Arc::clone(&dropped)).unwrap();
+        for i in 0..100 {
+            t.emit(&Json::obj(vec![("i", Json::Num(i as f64))]));
+        }
+        t.finish();
+        let body = std::fs::read_to_string(&cfg.path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len() as u64 + dropped.load(Ordering::Relaxed), 100);
+        for line in lines {
+            let ev = Json::parse(line).expect("every trace line is standalone JSON");
+            assert!(ev.get("i").is_some());
+        }
+    }
+}

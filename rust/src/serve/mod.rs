@@ -78,7 +78,8 @@
 //! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
 //! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
-//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...]}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p99_us":8.0},...}}` |
+//! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...}}` |
 //!
 //! `open` accepts any registered kind: `columnar:D`,
 //! `constructive:TOTAL:STEPS_PER_STAGE`,
@@ -169,6 +170,46 @@
 //! already closed (daemonized) it serves until killed. Killing is the
 //! crash path — acknowledged `park`s survive, everything else is lost,
 //! and the next boot resumes the parked sessions.
+//!
+//! # Observability
+//!
+//! Every wire op and every internal stage records into a shared
+//! [`crate::obs::Registry`] of log2-bucketed latency histograms
+//! ([`crate::obs::Histogram`]) and counters. The `metrics` op dumps the
+//! whole registry; each histogram value reports
+//! `count/sum_ns/min_ns/max_ns`, nearest-rank `p50/p90/p99/p999_ns`, and
+//! its sparse nonzero `[lo_ns, count]` buckets:
+//!
+//! ```json
+//! {"op":"metrics"}
+//! {"ok":true,
+//!  "ops":{"open":{...},"step":{"count":5000,"sum_ns":6200000,
+//!         "min_ns":800,"max_ns":41000,"p50_ns":1100,"p90_ns":2300,
+//!         "p99_ns":8100,"p999_ns":32000,
+//!         "buckets":[[512,120],[1024,4000],[2048,700],...]}, ...},
+//!  "stages":{"queue_wait":{...},"step_scalar":{...},
+//!            "step_batched":{...},"store_append":{...},
+//!            "store_load":{...},"store_compact":{...},
+//!            "transport_read":{...},"transport_decode":{...},
+//!            "transport_write":{...}},
+//!  "counters":{"steps.columnar":4200,"steps.tbptt":800,
+//!              "transport.err_decode":0,"trace.dropped":0}}
+//! ```
+//!
+//! A slow `step` decomposes: `op.step` minus `queue_wait` (time in the
+//! shard's mpsc queue) minus `store_load`/`store_append` (rehydration /
+//! eviction I/O, only under `--resident-cap` churn) minus
+//! `step_scalar`/`step_batched` (the learner kernel itself) leaves
+//! routing overhead. All summaries in one reply derive from a single
+//! registry snapshot (see [`crate::obs`] for the consistency model), and
+//! `stats` carries a compact per-op `latency` block for dashboards that
+//! don't want full buckets. With `ccn serve --trace-file PATH
+//! [--trace-sample N]` every Nth op additionally appends one JSONL event
+//! — `{"ts_ns":…,"op":"step","id":7,"shard":1,"dur_ns":…,"queue_ns":…,
+//! "exec_ns":…,"store_ns":…,"kernel_ns":…,"ok":true}` — written by a
+//! dedicated thread behind a bounded queue, so tracing never blocks the
+//! serving path. Telemetry is measurement-only: predictions and
+//! persisted state are bit-exact with it on, off, or sampled.
 
 pub mod batch;
 pub mod protocol;
@@ -182,22 +223,53 @@ pub use shard::{ShardPool, ShardState};
 pub use transport::{ListenAddr, Server};
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use crate::obs::{
+    self, Histogram, Registry, RegistrySnapshot, StageCell, TraceConfig, TraceHandle,
+};
 use crate::store::StoreConfig;
 use crate::util::json::Json;
 use protocol::{parse_wire_op, Request, Response, WireOp};
 
 /// The protocol front end: parses request lines, routes them through a
-/// [`ShardPool`], encodes responses.
+/// [`ShardPool`], encodes responses. Every op records its wall time into
+/// the shared telemetry registry; an optional trace log samples ops into
+/// JSONL events with a per-stage breakdown.
 pub struct Service {
     pool: ShardPool,
+    obs: Arc<Registry>,
+    /// per-op wall-time histograms, index-aligned with [`obs::names::OPS`]
+    op_timers: Vec<Arc<Histogram>>,
+    trace: Option<TraceHandle>,
+    /// origin for trace timestamps (monotonic, ns since service boot)
+    epoch: Instant,
+}
+
+/// `(name, OPS index, session id)` of a wire op, before dispatch
+/// consumes it. The index MUST match [`obs::names::OPS`] — pinned by a
+/// unit test below.
+fn op_meta(op: &WireOp) -> (&'static str, usize, Option<u64>) {
+    match op {
+        WireOp::Open(_) => ("open", 0, None),
+        WireOp::Step { id, .. } => ("step", 1, Some(*id)),
+        WireOp::StepBatch(_) => ("step_batch", 2, None),
+        WireOp::Predict { id, .. } => ("predict", 3, Some(*id)),
+        WireOp::Snapshot { id } => ("snapshot", 4, Some(*id)),
+        WireOp::Restore(_) => ("restore", 5, None),
+        WireOp::Park { id } => ("park", 6, Some(*id)),
+        WireOp::Warm { id } => ("warm", 7, Some(*id)),
+        WireOp::Close { id } => ("close", 8, Some(*id)),
+        WireOp::Stats => ("stats", 9, None),
+        WireOp::Metrics => ("metrics", 10, None),
+    }
 }
 
 impl Service {
     pub fn new(n_shards: usize) -> Self {
-        Self {
-            pool: ShardPool::new(n_shards),
-        }
+        Self::with_store(n_shards, None)
+            .expect("a storeless service cannot fail to boot")
     }
 
     /// A service with the durable session tier mounted (see
@@ -207,8 +279,20 @@ impl Service {
         n_shards: usize,
         cfg: Option<StoreConfig>,
     ) -> Result<Self, String> {
+        // pre-registered registry: the metrics reply schema is complete
+        // from the first request, not only after every op has fired
+        let obs = Arc::new(Registry::standard());
+        let pool = ShardPool::with_store_and_obs(n_shards, cfg, Arc::clone(&obs))?;
+        let op_timers = obs::names::OPS
+            .iter()
+            .map(|name| obs.histogram(&format!("op.{name}")))
+            .collect();
         Ok(Self {
-            pool: ShardPool::with_store(n_shards, cfg)?,
+            pool,
+            obs,
+            op_timers,
+            trace: None,
+            epoch: Instant::now(),
         })
     }
 
@@ -216,69 +300,137 @@ impl Service {
         &self.pool
     }
 
-    /// Graceful shutdown: flush every resident session to the store and
-    /// join the shard workers. Returns the number of sessions flushed,
-    /// or an error naming the sessions that could not be flushed.
+    /// The telemetry registry (shared with the pool's shard workers and
+    /// the transport layer).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    /// Mount the structured trace log (`--trace-file`): every
+    /// `cfg.sample`-th op emits one JSONL event. Replaces any previous
+    /// trace; call before serving traffic.
+    pub fn set_trace(&mut self, cfg: &TraceConfig) -> Result<(), String> {
+        let dropped = self.obs.counter("trace.dropped");
+        self.trace = Some(TraceHandle::open(cfg, dropped)?);
+        Ok(())
+    }
+
+    /// Graceful shutdown: flush every resident session to the store,
+    /// join the shard workers, and finish the trace log (every accepted
+    /// event is on disk when this returns). Returns the number of
+    /// sessions flushed, or an error naming the sessions that could not
+    /// be flushed.
     pub fn close(&mut self) -> Result<usize, String> {
+        if let Some(trace) = self.trace.take() {
+            trace.finish();
+        }
         self.pool.close()
     }
 
-    /// Execute one already-parsed wire operation.
+    /// Execute one already-parsed wire operation, timing it (and, when
+    /// the trace log samples it, emitting one event with the shard
+    /// worker's stage breakdown).
     pub fn handle_op(&self, op: WireOp) -> Json {
+        let (name, op_idx, id) = op_meta(&op);
+        let sampled = self.trace.as_ref().filter(|t| t.should_sample());
+        let stages = sampled.map(|_| Arc::new(StageCell::default()));
+        let t0 = Instant::now();
+        let reply = self.dispatch(op, stages.clone());
+        let dur = t0.elapsed();
+        self.op_timers[op_idx].record_duration(dur);
+        if let Some(trace) = sampled {
+            trace.emit(&trace_event(
+                self.epoch,
+                name,
+                id,
+                dur,
+                stages.as_deref(),
+                &reply,
+            ));
+        }
+        reply
+    }
+
+    fn dispatch(&self, op: WireOp, stages: Option<Arc<StageCell>>) -> Json {
         let resp = match op {
-            WireOp::Open(spec) => self.pool.open(spec),
-            WireOp::Step { id, x, c } => self.pool.call(Request::Step { id, x, c }),
+            WireOp::Open(spec) => self.pool.open_traced(spec, stages),
+            WireOp::Step { id, x, c } => {
+                self.pool.call_traced(Request::Step { id, x, c }, stages)
+            }
             WireOp::StepBatch(items) => Response::SteppedMany {
                 ys: self.pool.step_batch(items),
             },
-            WireOp::Predict { id, x } => self.pool.call(Request::Predict { id, x }),
-            WireOp::Snapshot { id } => self.pool.call(Request::Snapshot { id }),
-            WireOp::Restore(state) => self.pool.restore(state),
-            WireOp::Park { id } => self.pool.call(Request::Park { id }),
-            WireOp::Warm { id } => self.pool.call(Request::Warm { id }),
-            WireOp::Close { id } => self.pool.call(Request::Close { id }),
-            WireOp::Stats => {
-                let per_shard = self.pool.stats();
-                let sessions: usize = per_shard.iter().map(|s| s.sessions).sum();
-                let resident: usize = per_shard.iter().map(|s| s.resident).sum();
-                let parked: usize = per_shard.iter().map(|s| s.parked).sum();
-                let steps: u64 = per_shard.iter().map(|s| s.steps).sum();
-                let store_bytes: u64 =
-                    per_shard.iter().map(|s| s.store_bytes).sum();
-                let evictions: u64 = per_shard.iter().map(|s| s.evictions).sum();
-                let rehydrations: u64 =
-                    per_shard.iter().map(|s| s.rehydrations).sum();
-                let kinds: std::collections::BTreeMap<String, Json> =
-                    protocol::ShardStats::merge_kinds(&per_shard)
-                        .into_iter()
-                        .map(|(k, n)| (k, Json::Num(n as f64)))
-                        .collect();
-                let shards: Vec<Json> = per_shard
-                    .iter()
-                    .map(|st| {
-                        Json::obj(vec![
-                            ("sessions", Json::Num(st.sessions as f64)),
-                            ("resident", Json::Num(st.resident as f64)),
-                            ("parked", Json::Num(st.parked as f64)),
-                            ("steps", Json::Num(st.steps as f64)),
-                        ])
-                    })
-                    .collect();
-                return Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("sessions", Json::Num(sessions as f64)),
-                    ("resident", Json::Num(resident as f64)),
-                    ("parked", Json::Num(parked as f64)),
-                    ("steps", Json::Num(steps as f64)),
-                    ("store_bytes", Json::Num(store_bytes as f64)),
-                    ("evictions", Json::Num(evictions as f64)),
-                    ("rehydrations", Json::Num(rehydrations as f64)),
-                    ("kinds", Json::Obj(kinds)),
-                    ("shards", Json::Arr(shards)),
-                ]);
+            WireOp::Predict { id, x } => {
+                self.pool.call_traced(Request::Predict { id, x }, stages)
             }
+            WireOp::Snapshot { id } => {
+                self.pool.call_traced(Request::Snapshot { id }, stages)
+            }
+            WireOp::Restore(state) => self.pool.restore_traced(state, stages),
+            WireOp::Park { id } => self.pool.call_traced(Request::Park { id }, stages),
+            WireOp::Warm { id } => self.pool.call_traced(Request::Warm { id }, stages),
+            WireOp::Close { id } => {
+                self.pool.call_traced(Request::Close { id }, stages)
+            }
+            WireOp::Stats => return self.stats_reply(),
+            WireOp::Metrics => return self.metrics_reply(),
         };
         resp.to_json()
+    }
+
+    fn stats_reply(&self) -> Json {
+        let per_shard = self.pool.stats();
+        let sessions: usize = per_shard.iter().map(|s| s.sessions).sum();
+        let resident: usize = per_shard.iter().map(|s| s.resident).sum();
+        let parked: usize = per_shard.iter().map(|s| s.parked).sum();
+        let steps: u64 = per_shard.iter().map(|s| s.steps).sum();
+        let store_bytes: u64 = per_shard.iter().map(|s| s.store_bytes).sum();
+        let evictions: u64 = per_shard.iter().map(|s| s.evictions).sum();
+        let rehydrations: u64 = per_shard.iter().map(|s| s.rehydrations).sum();
+        let kinds: std::collections::BTreeMap<String, Json> =
+            protocol::ShardStats::merge_kinds(&per_shard)
+                .into_iter()
+                .map(|(k, n)| (k, Json::Num(n as f64)))
+                .collect();
+        let shards: Vec<Json> = per_shard
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    ("sessions", Json::Num(st.sessions as f64)),
+                    ("resident", Json::Num(st.resident as f64)),
+                    ("parked", Json::Num(st.parked as f64)),
+                    ("steps", Json::Num(st.steps as f64)),
+                ])
+            })
+            .collect();
+        // one registry snapshot for the whole latency block: no p50 in
+        // this reply can straddle an update of its p99's histogram
+        let latency = latency_summary(&self.obs.snapshot());
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("sessions", Json::Num(sessions as f64)),
+            ("resident", Json::Num(resident as f64)),
+            ("parked", Json::Num(parked as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("store_bytes", Json::Num(store_bytes as f64)),
+            ("evictions", Json::Num(evictions as f64)),
+            ("rehydrations", Json::Num(rehydrations as f64)),
+            ("kinds", Json::Obj(kinds)),
+            ("shards", Json::Arr(shards)),
+            ("latency", latency),
+        ])
+    }
+
+    fn metrics_reply(&self) -> Json {
+        // one consistent snapshot (see crate::obs): ops, stages, and
+        // counters in this reply come from a single registry pass
+        match self.obs.snapshot().to_json() {
+            Json::Obj(mut fields) => {
+                fields.insert("ok".to_string(), Json::Bool(true));
+                Json::Obj(fields)
+            }
+            other => other,
+        }
     }
 
     /// Handle one raw request line (the unit the JSONL loop and the
@@ -309,5 +461,129 @@ impl Service {
             out.flush().map_err(|e| e.to_string())?;
         }
         Ok(())
+    }
+}
+
+/// Compact per-op `{count, p50_us, p99_us}` block for the `stats` reply,
+/// derived from one registry snapshot.
+fn latency_summary(snap: &RegistrySnapshot) -> Json {
+    let mut ops = std::collections::BTreeMap::new();
+    for name in obs::names::OPS {
+        if let Some(h) = snap.hists.get(&format!("op.{name}")) {
+            ops.insert(
+                name.to_string(),
+                Json::obj(vec![
+                    ("count", Json::Num(h.count() as f64)),
+                    ("p50_us", Json::Num(h.percentile(0.50) as f64 / 1000.0)),
+                    ("p99_us", Json::Num(h.percentile(0.99) as f64 / 1000.0)),
+                ]),
+            );
+        }
+    }
+    Json::Obj(ops)
+}
+
+/// One JSONL trace event. Stage fields appear only when a shard worker
+/// filled the breakdown cell (single-session routed ops); fan-out and
+/// introspection ops carry the op-level duration alone.
+fn trace_event(
+    epoch: Instant,
+    op: &str,
+    id: Option<u64>,
+    dur: Duration,
+    stages: Option<&StageCell>,
+    reply: &Json,
+) -> Json {
+    use std::sync::atomic::Ordering;
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("ts_ns", Json::Num(epoch.elapsed().as_nanos() as f64)),
+        ("op", Json::Str(op.to_string())),
+    ];
+    // ops that mint their id (open/restore) tag the event from the reply
+    let id = id.or_else(|| {
+        reply
+            .get("id")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+    });
+    if let Some(id) = id {
+        fields.push(("id", Json::Num(id as f64)));
+    }
+    fields.push(("dur_ns", Json::Num(dur.as_nanos() as f64)));
+    if let Some(cell) = stages.filter(|c| c.filled()) {
+        fields.push(("shard", Json::Num(cell.shard.load(Ordering::Relaxed) as f64)));
+        fields.push((
+            "queue_ns",
+            Json::Num(cell.queue_ns.load(Ordering::Relaxed) as f64),
+        ));
+        fields.push((
+            "exec_ns",
+            Json::Num(cell.exec_ns.load(Ordering::Relaxed) as f64),
+        ));
+        fields.push((
+            "store_ns",
+            Json::Num(cell.store_ns.load(Ordering::Relaxed) as f64),
+        ));
+        fields.push((
+            "kernel_ns",
+            Json::Num(cell.kernel_ns.load(Ordering::Relaxed) as f64),
+        ));
+    }
+    fields.push(("ok", Json::Bool(reply.get("ok") == Some(&Json::Bool(true)))));
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `op_meta`'s indices address `Service::op_timers`, which is built
+    /// in `obs::names::OPS` order — drift would account ops against the
+    /// wrong histogram.
+    #[test]
+    fn op_meta_indices_align_with_registry_names() {
+        let probes: Vec<WireOp> = vec![
+            WireOp::Step { id: 1, x: vec![], c: 0.0 },
+            WireOp::StepBatch(vec![]),
+            WireOp::Predict { id: 1, x: vec![] },
+            WireOp::Snapshot { id: 1 },
+            WireOp::Restore(Json::Null),
+            WireOp::Park { id: 1 },
+            WireOp::Warm { id: 1 },
+            WireOp::Close { id: 1 },
+            WireOp::Stats,
+            WireOp::Metrics,
+        ];
+        for op in &probes {
+            let (name, idx, _) = op_meta(op);
+            assert_eq!(obs::names::OPS[idx], name, "{name} misindexed");
+        }
+        // `open` needs a spec; check the name table directly
+        assert_eq!(obs::names::OPS[0], "open");
+        assert_eq!(probes.len() + 1, obs::names::OPS.len());
+    }
+
+    #[test]
+    fn trace_event_includes_stage_breakdown_only_when_filled() {
+        use std::sync::atomic::Ordering;
+        let epoch = Instant::now();
+        let reply = Json::obj(vec![("ok", Json::Bool(true))]);
+        let cell = StageCell::default();
+        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), &reply);
+        assert!(ev.get("shard").is_none(), "unfilled cell must not emit stages");
+        assert_eq!(ev.get("op").and_then(|v| v.as_str()), Some("step"));
+        assert_eq!(ev.get("ok"), Some(&Json::Bool(true)));
+        cell.shard.store(2, Ordering::Relaxed);
+        cell.kernel_ns.store(1234, Ordering::Relaxed);
+        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), &reply);
+        assert_eq!(ev.get("shard").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(ev.get("kernel_ns").and_then(|v| v.as_f64()), Some(1234.0));
+    }
+
+    #[test]
+    fn trace_event_takes_minted_id_from_reply() {
+        let reply = Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::Num(7.0))]);
+        let ev = trace_event(Instant::now(), "open", None, Duration::ZERO, None, &reply);
+        assert_eq!(ev.get("id").and_then(|v| v.as_f64()), Some(7.0));
     }
 }

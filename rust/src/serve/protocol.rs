@@ -222,6 +222,7 @@ pub enum WireOp {
     Warm { id: u64 },
     Close { id: u64 },
     Stats,
+    Metrics,
 }
 
 /// A session id must be a non-negative integer; anything else (strings,
@@ -368,9 +369,10 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
         "warm" => Ok(WireOp::Warm { id: get_id(v)? }),
         "close" => Ok(WireOp::Close { id: get_id(v)? }),
         "stats" => Ok(WireOp::Stats),
+        "metrics" => Ok(WireOp::Metrics),
         other => Err(format!(
             "unknown op '{other}' \
-             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats)"
+             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats|metrics)"
         )),
     }
 }
@@ -471,6 +473,16 @@ mod tests {
         .is_err());
         // well-typed requests still parse after all that strictness
         assert!(parse(r#"{"op":"step","id":1,"x":[1,2],"c":0.5}"#).is_ok());
+    }
+
+    #[test]
+    fn stats_and_metrics_parse() {
+        assert!(matches!(parse(r#"{"op":"stats"}"#), Ok(WireOp::Stats)));
+        assert!(matches!(parse(r#"{"op":"metrics"}"#), Ok(WireOp::Metrics)));
+        // the unknown-op hint advertises the full op list
+        let err = parse(r#"{"op":"metricz"}"#).unwrap_err();
+        assert!(err.contains("unknown op"));
+        assert!(err.contains("metrics"));
     }
 
     #[test]

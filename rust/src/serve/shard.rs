@@ -41,9 +41,12 @@
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::nets::NetRegistry;
+use crate::obs::{Histogram, Registry, StageCell};
 use crate::store::{IdWatermark, SessionStore, StoreConfig};
 use crate::util::json::Json;
 
@@ -77,6 +80,52 @@ enum Slot {
     Batched(BatchKey, usize, SessionSpec),
 }
 
+/// Pre-resolved telemetry handles for one shard's hot-path stages.
+/// Resolved once from the pool registry at worker spawn, so recording
+/// never touches the registry lock. Measurement-only: nothing here
+/// influences routing, stepping, or persistence.
+#[derive(Clone)]
+pub struct ShardObs {
+    registry: Arc<Registry>,
+    queue_wait: Arc<Histogram>,
+    step_scalar: Arc<Histogram>,
+    step_batched: Arc<Histogram>,
+    store_append: Arc<Histogram>,
+    store_load: Arc<Histogram>,
+    store_compact: Arc<Histogram>,
+}
+
+impl ShardObs {
+    pub fn new(registry: Arc<Registry>) -> ShardObs {
+        ShardObs {
+            queue_wait: registry.histogram("stage.queue_wait"),
+            step_scalar: registry.histogram("stage.step_scalar"),
+            step_batched: registry.histogram("stage.step_batched"),
+            store_append: registry.histogram("stage.store_append"),
+            store_load: registry.histogram("stage.store_load"),
+            store_compact: registry.histogram("stage.store_compact"),
+            registry,
+        }
+    }
+
+    /// Handles backed by a private registry nobody exports — lets
+    /// `ShardState` keep an infallible `Default` for direct (test/bench)
+    /// construction without an `Option` on every record site.
+    fn detached() -> ShardObs {
+        ShardObs::new(Arc::new(Registry::new()))
+    }
+
+    fn kind_counter(&self, kind: &str) -> Arc<AtomicU64> {
+        self.registry.counter(&format!("steps.{kind}"))
+    }
+}
+
+impl Default for ShardObs {
+    fn default() -> ShardObs {
+        ShardObs::detached()
+    }
+}
+
 /// Single-threaded session owner; one per worker thread.
 #[derive(Default)]
 pub struct ShardState {
@@ -99,6 +148,16 @@ pub struct ShardState {
     dirty: HashSet<u64>,
     evictions: u64,
     rehydrations: u64,
+    /// stage timers + per-kind step counters (detached unless a pool
+    /// wires in its shared registry via [`ShardState::set_obs`])
+    obs: ShardObs,
+    /// cached `steps.<kind>` counter handles, keyed by the `'static`
+    /// kind tag so the hot path never formats a name
+    kind_steps: HashMap<&'static str, Arc<AtomicU64>>,
+    /// store + kernel nanoseconds spent inside the *current* request;
+    /// reset at `handle()` entry, read by the worker for trace events
+    scratch_store_ns: u64,
+    scratch_kernel_ns: u64,
 }
 
 impl ShardState {
@@ -120,6 +179,25 @@ impl ShardState {
         self.slots.len()
     }
 
+    /// Wire this shard into a shared telemetry registry (stage timers,
+    /// per-kind step counters, store compaction latency).
+    pub fn set_obs(&mut self, obs: ShardObs) {
+        if let Some(store) = self.store.as_mut() {
+            store.set_compact_observer(Arc::clone(&obs.store_compact));
+        }
+        self.obs = obs;
+        // handles cached against the old registry are stale
+        self.kind_steps.clear();
+    }
+
+    fn bump_kind_steps(&mut self, kind: &'static str, n: u64) {
+        if !self.kind_steps.contains_key(kind) {
+            let counter = self.obs.kind_counter(kind);
+            self.kind_steps.insert(kind, counter);
+        }
+        self.kind_steps[kind].fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Mark `id` most-recently-used.
     fn touch(&mut self, id: u64) {
         self.clock += 1;
@@ -139,6 +217,10 @@ impl ShardState {
 
     /// Execute one request against this shard's sessions.
     pub fn handle(&mut self, req: Request) -> Response {
+        // per-request stage scratch: the worker reads these after the
+        // dispatch below to fill a sampled trace event's breakdown
+        self.scratch_store_ns = 0;
+        self.scratch_kernel_ns = 0;
         match req {
             Request::Open { id, spec } => self.open(id, spec),
             Request::Step { id, x, c } => match self.step_session(id, &x, c) {
@@ -202,7 +284,11 @@ impl ShardState {
         if !parked {
             return Err(format!("no session {id}"));
         }
+        let t = Instant::now();
         let envelope = self.store.as_ref().expect("store present").load(id)?;
+        let dt = t.elapsed();
+        self.obs.store_load.record_duration(dt);
+        self.scratch_store_ns += dt.as_nanos() as u64;
         let session = Session::from_snapshot(&envelope)
             .map_err(|e| format!("rehydrate session {id}: {e}"))?;
         self.place(id, session)?;
@@ -244,10 +330,14 @@ impl ShardState {
             && self.store.as_ref().is_some_and(|s| s.contains(id));
         if !current_on_disk {
             let snap = self.snapshot_resident(id)?;
+            let t = Instant::now();
             self.store
                 .as_mut()
                 .expect("store present")
                 .park(id, &snap)?;
+            let dt = t.elapsed();
+            self.obs.store_append.record_duration(dt);
+            self.scratch_store_ns += dt.as_nanos() as u64;
         }
         // the snapshot above already read everything out of the live
         // arrays — drop the slot without materializing a second copy
@@ -469,12 +559,16 @@ impl ShardState {
 
     fn step_session(&mut self, id: u64, x: &[f32], c: f32) -> Result<f32, String> {
         self.ensure_resident(id)?;
-        let y = match self
+        // clock the kernel only: residency (store I/O) is its own stage
+        let t = Instant::now();
+        let (y, kind, batched) = match self
             .slots
             .get_mut(&id)
             .ok_or_else(|| format!("no session {id}"))?
         {
-            Slot::Scalar(session) => session.step(x, c)?,
+            Slot::Scalar(session) => {
+                (session.step(x, c)?, session.spec().learner.kind(), false)
+            }
             Slot::Batched(key, lane, spec) => {
                 if x.len() != spec.n_inputs {
                     return Err(format!(
@@ -483,12 +577,22 @@ impl ShardState {
                         x.len()
                     ));
                 }
-                self.batches
+                let y = self
+                    .batches
                     .get_mut(key)
                     .expect("batch exists for batched slot")
-                    .step_one(*lane, x, c)
+                    .step_one(*lane, x, c);
+                (y, spec.learner.kind(), true)
             }
         };
+        let dt = t.elapsed();
+        if batched {
+            self.obs.step_batched.record_duration(dt);
+        } else {
+            self.obs.step_scalar.record_duration(dt);
+        }
+        self.scratch_kernel_ns += dt.as_nanos() as u64;
+        self.bump_kind_steps(kind, 1);
         self.steps_served += 1;
         self.dirty.insert(id);
         Ok(y)
@@ -563,10 +667,23 @@ impl ShardState {
                 obs[lane * n..(lane + 1) * n].copy_from_slice(&items[pos].x);
                 cs[lane] = items[pos].c;
             }
+            let t = Instant::now();
             let ys = batch.step_all(&obs, &cs).to_vec();
+            let dt = t.elapsed();
+            self.obs.step_batched.record_duration(dt);
+            self.scratch_kernel_ns += dt.as_nanos() as u64;
             for &(pos, lane) in &members {
                 out[pos] = Some(Ok(ys[lane]));
-                self.dirty.insert(items[pos].id);
+                let id = items[pos].id;
+                self.dirty.insert(id);
+                // batched slots report their opening kind (see
+                // kind_counts): count fused steps under the same tag
+                let kind = match self.slots.get(&id) {
+                    Some(Slot::Batched(_, _, spec)) => spec.learner.kind(),
+                    Some(Slot::Scalar(session)) => session.spec().learner.kind(),
+                    None => continue,
+                };
+                self.bump_kind_steps(kind, 1);
             }
             self.steps_served += bsz as u64;
         }
@@ -653,12 +770,20 @@ impl ShardState {
 }
 
 enum Job {
-    Run(Request, mpsc::Sender<Response>),
+    Run {
+        req: Request,
+        reply: mpsc::Sender<Response>,
+        /// send time — the worker derives the queue-wait stage from it
+        enqueued: Instant,
+        /// stage breakdown sink for sampled trace events (None = untraced)
+        stages: Option<Arc<StageCell>>,
+    },
     Shutdown,
 }
 
 /// N shard worker threads plus the request router. The only shared state
-/// is the id allocator — sessions live entirely inside their shard.
+/// is the id allocator and the telemetry registry — sessions live
+/// entirely inside their shard.
 pub struct ShardPool {
     txs: Vec<mpsc::Sender<Job>>,
     joins: Vec<JoinHandle<()>>,
@@ -667,6 +792,9 @@ pub struct ShardPool {
     /// disk before any client sees it, so a crash can never lead to a
     /// reused id — not even for sessions that were never parked.
     watermark: Option<IdWatermark>,
+    /// shared telemetry: stage timers and per-kind step counters land
+    /// here from every shard worker
+    obs: Arc<Registry>,
 }
 
 impl ShardPool {
@@ -685,6 +813,17 @@ impl ShardPool {
         n_shards: usize,
         cfg: Option<StoreConfig>,
     ) -> Result<Self, String> {
+        Self::with_store_and_obs(n_shards, cfg, Arc::new(Registry::new()))
+    }
+
+    /// [`ShardPool::with_store`] recording into a caller-owned telemetry
+    /// registry (the `Service` passes its pre-registered one so shard
+    /// stage timers surface through the `metrics` wire op).
+    pub fn with_store_and_obs(
+        n_shards: usize,
+        cfg: Option<StoreConfig>,
+        obs: Arc<Registry>,
+    ) -> Result<Self, String> {
         let n = n_shards.max(1);
         let (stores, first_id, watermark) = match &cfg {
             None => ((0..n).map(|_| None).collect::<Vec<_>>(), 1, None),
@@ -700,16 +839,42 @@ impl ShardPool {
         let resident_cap = cfg.as_ref().map_or(0, |c| c.resident_cap);
         let mut txs = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
-        for store in stores {
+        for (k, store) in stores.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Job>();
             txs.push(tx);
+            let registry = Arc::clone(&obs);
             joins.push(std::thread::spawn(move || {
                 let mut state = ShardState::with_store(store, resident_cap);
+                state.set_obs(ShardObs::new(registry));
+                let queue_wait = Arc::clone(&state.obs.queue_wait);
                 while let Ok(job) = rx.recv() {
                     match job {
-                        Job::Run(req, reply) => {
+                        Job::Run {
+                            req,
+                            reply,
+                            enqueued,
+                            stages,
+                        } => {
+                            let waited = enqueued.elapsed();
+                            queue_wait.record_duration(waited);
+                            let t = Instant::now();
+                            let resp = state.handle(req);
+                            if let Some(cell) = stages {
+                                let exec = t.elapsed();
+                                cell.queue_ns
+                                    .store(waited.as_nanos() as u64, Ordering::Relaxed);
+                                cell.exec_ns
+                                    .store(exec.as_nanos() as u64, Ordering::Relaxed);
+                                cell.store_ns
+                                    .store(state.scratch_store_ns, Ordering::Relaxed);
+                                cell.kernel_ns
+                                    .store(state.scratch_kernel_ns, Ordering::Relaxed);
+                                // write the shard index last: it marks
+                                // the cell filled (see StageCell docs)
+                                cell.shard.store(k as u64, Ordering::Relaxed);
+                            }
                             // receiver may have hung up; that's fine
-                            let _ = reply.send(state.handle(req));
+                            let _ = reply.send(resp);
                         }
                         Job::Shutdown => break,
                     }
@@ -721,7 +886,13 @@ impl ShardPool {
             joins,
             next_id: AtomicU64::new(first_id),
             watermark,
+            obs,
         })
+    }
+
+    /// The telemetry registry every shard worker records into.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
     }
 
     /// Open the per-shard stores and reconcile them with the current
@@ -809,8 +980,23 @@ impl ShardPool {
     }
 
     fn call_shard(&self, shard: usize, req: Request) -> Response {
+        self.call_shard_traced(shard, req, None)
+    }
+
+    fn call_shard_traced(
+        &self,
+        shard: usize,
+        req: Request,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
         let (tx, rx) = mpsc::channel();
-        if self.txs[shard].send(Job::Run(req, tx)).is_err() {
+        let job = Job::Run {
+            req,
+            reply: tx,
+            enqueued: Instant::now(),
+            stages,
+        };
+        if self.txs[shard].send(job).is_err() {
             return Response::error("shard worker is gone");
         }
         rx.recv()
@@ -830,35 +1016,68 @@ impl ShardPool {
 
     /// Allocate an id and open a session on its shard.
     pub fn open(&self, spec: SessionSpec) -> Response {
+        self.open_traced(spec, None)
+    }
+
+    /// [`ShardPool::open`] with a stage breakdown sink for traced ops.
+    pub fn open_traced(
+        &self,
+        spec: SessionSpec,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
         if self.txs.is_empty() {
             return Response::error("shard pool is closed");
         }
         match self.alloc_id() {
-            Ok(id) => self.call_shard(self.shard_of(id), Request::Open { id, spec }),
+            Ok(id) => self.call_shard_traced(
+                self.shard_of(id),
+                Request::Open { id, spec },
+                stages,
+            ),
             Err(e) => Response::error(e),
         }
     }
 
     /// Allocate an id and restore a snapshot onto its shard.
     pub fn restore(&self, state: Json) -> Response {
+        self.restore_traced(state, None)
+    }
+
+    /// [`ShardPool::restore`] with a stage breakdown sink for traced ops.
+    pub fn restore_traced(
+        &self,
+        state: Json,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
         if self.txs.is_empty() {
             return Response::error("shard pool is closed");
         }
         match self.alloc_id() {
-            Ok(id) => {
-                self.call_shard(self.shard_of(id), Request::Restore { id, state })
-            }
+            Ok(id) => self.call_shard_traced(
+                self.shard_of(id),
+                Request::Restore { id, state },
+                stages,
+            ),
             Err(e) => Response::error(e),
         }
     }
 
     /// Route a single-session request to its owner.
     pub fn call(&self, req: Request) -> Response {
+        self.call_traced(req, None)
+    }
+
+    /// [`ShardPool::call`] with a stage breakdown sink for traced ops.
+    pub fn call_traced(
+        &self,
+        req: Request,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
         if self.txs.is_empty() {
             return Response::error("shard pool is closed");
         }
         match req.route_id() {
-            Some(id) => self.call_shard(self.shard_of(id), req),
+            Some(id) => self.call_shard_traced(self.shard_of(id), req, stages),
             None => Response::error("request has no routing id"),
         }
     }
@@ -943,10 +1162,15 @@ impl ShardPool {
                 continue;
             }
             let (tx, rx) = mpsc::channel();
-            if self.txs[s]
-                .send(Job::Run(Request::StepMany { items: batch }, tx))
-                .is_ok()
-            {
+            let job = Job::Run {
+                req: Request::StepMany { items: batch },
+                reply: tx,
+                enqueued: Instant::now(),
+                // fan-out spans shards: trace events for step_batch carry
+                // the op-level duration only, no single-shard breakdown
+                stages: None,
+            };
+            if self.txs[s].send(job).is_ok() {
                 replies[s] = Some(rx);
             }
         }

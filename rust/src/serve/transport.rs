@@ -35,7 +35,19 @@
 //!   object tagging the asking connection and describing every live one:
 //!   `{"conn":ID,"active_conns":..,"total_conns":..,"refused":..,
 //!   "max_conns":..,"conns":[{"id":..,"peer":..,"requests":..,
-//!   "errors":..}]}`.
+//!   "errors":..,"err_decode":..,"err_oversize":..,"err_ghost_id":..,
+//!   "err_io":..}]}`.
+//! - Error taxonomy: `errors` totals request-level failures (any
+//!   `ok:false` reply, over-long lines, bad UTF-8) exactly as before;
+//!   the categories break it down — `err_decode` (malformed JSON, bad
+//!   UTF-8, unknown/invalid ops), `err_oversize` (line over
+//!   [`MAX_LINE_BYTES`]), `err_ghost_id` (ops addressed to a session id
+//!   the service doesn't know). `err_io` counts socket-level read/write
+//!   failures, which kill the connection rather than produce a reply and
+//!   are therefore *not* part of `errors`. The same categories aggregate
+//!   server-wide as `transport.err_*` counters in the `metrics` op, and
+//!   transport stage latencies (`transport_read`/`transport_decode`/
+//!   `transport_write`) land in the shared [`crate::obs::Registry`].
 //! - [`Server::shutdown`] stops the accept loop, drains and joins every
 //!   connection, then closes the service — flushing every resident
 //!   session to the store. Killing the process instead is the crash
@@ -57,8 +69,9 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::obs::{Histogram, Registry};
 use crate::util::json::Json;
 
 use super::protocol::{parse_wire_op, Response, WireOp};
@@ -266,12 +279,63 @@ impl Listener {
     }
 }
 
-/// Per-connection counters, visible through the `stats` op.
+/// Per-connection counters, visible through the `stats` op. See the
+/// module docs for the error taxonomy (`errors` is the request-level
+/// total; the `err_*` categories break it down, except `err_io` which
+/// counts reply-less socket failures).
 struct ConnStats {
     id: u64,
     peer: String,
     requests: AtomicU64,
     errors: AtomicU64,
+    err_decode: AtomicU64,
+    err_oversize: AtomicU64,
+    err_ghost_id: AtomicU64,
+    err_io: AtomicU64,
+}
+
+impl ConnStats {
+    fn new(id: u64, peer: String) -> ConnStats {
+        ConnStats {
+            id,
+            peer,
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            err_decode: AtomicU64::new(0),
+            err_oversize: AtomicU64::new(0),
+            err_ghost_id: AtomicU64::new(0),
+            err_io: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Pre-resolved registry handles for the transport stage timers and the
+/// server-wide error-category counters. Resolved once at bind, cloned
+/// per connection — the per-request path never touches the registry
+/// lock.
+#[derive(Clone)]
+struct TransportObs {
+    read: Arc<Histogram>,
+    decode: Arc<Histogram>,
+    write: Arc<Histogram>,
+    err_decode: Arc<AtomicU64>,
+    err_oversize: Arc<AtomicU64>,
+    err_ghost_id: Arc<AtomicU64>,
+    err_io: Arc<AtomicU64>,
+}
+
+impl TransportObs {
+    fn new(registry: &Registry) -> TransportObs {
+        TransportObs {
+            read: registry.histogram("stage.transport_read"),
+            decode: registry.histogram("stage.transport_decode"),
+            write: registry.histogram("stage.transport_write"),
+            err_decode: registry.counter("transport.err_decode"),
+            err_oversize: registry.counter("transport.err_oversize"),
+            err_ghost_id: registry.counter("transport.err_ghost_id"),
+            err_io: registry.counter("transport.err_io"),
+        }
+    }
 }
 
 /// State shared by the accept loop and every connection thread.
@@ -309,6 +373,7 @@ impl Server {
         listener
             .set_nonblocking(true)
             .map_err(|e| format!("listen: set nonblocking: {e}"))?;
+        let obs = TransportObs::new(service.registry());
         let service = Arc::new(service);
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
@@ -323,7 +388,7 @@ impl Server {
             let shared = Arc::clone(&shared);
             let conn_joins = Arc::clone(&conn_joins);
             std::thread::spawn(move || {
-                run_accept(listener, service, shared, conn_joins)
+                run_accept(listener, service, shared, conn_joins, obs)
             })
         };
         Ok(Server {
@@ -385,6 +450,7 @@ fn run_accept(
     service: Arc<Service>,
     shared: Arc<Shared>,
     conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    obs: TransportObs,
 ) {
     let mut next_conn = 1u64;
     while !shared.stop.load(Ordering::Relaxed) {
@@ -429,12 +495,7 @@ fn run_accept(
         let id = next_conn;
         next_conn += 1;
         shared.total_conns.fetch_add(1, Ordering::Relaxed);
-        let stats = Arc::new(ConnStats {
-            id,
-            peer: stream.peer(),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-        });
+        let stats = Arc::new(ConnStats::new(id, stream.peer()));
         let write_half = match stream.try_clone() {
             Ok(s) => s,
             Err(_) => {
@@ -446,12 +507,17 @@ fn run_accept(
             conns.insert(id, Arc::clone(&stats));
         }
         let (reply_tx, reply_rx) = mpsc::sync_channel::<String>(REPLY_QUEUE_CAP);
-        let writer = std::thread::spawn(move || run_writer(write_half, reply_rx));
+        let writer = {
+            let obs = obs.clone();
+            let stats = Arc::clone(&stats);
+            std::thread::spawn(move || run_writer(write_half, reply_rx, obs, stats))
+        };
         let reader = {
             let service = Arc::clone(&service);
             let shared = Arc::clone(&shared);
+            let obs = obs.clone();
             std::thread::spawn(move || {
-                run_reader(stream, service, Arc::clone(&shared), stats, reply_tx);
+                run_reader(stream, service, Arc::clone(&shared), stats, reply_tx, obs);
                 if let Ok(mut conns) = shared.conns.lock() {
                     conns.remove(&id);
                 }
@@ -483,13 +549,24 @@ enum LineRead {
 /// (which exist only so the stop flag gets polled) and capping the
 /// buffered length at `max` — an over-long line is *drained*, not
 /// stored, so the connection stays usable and memory stays bounded.
+///
+/// `read_hist` clocks the `transport_read` stage: from the first byte
+/// of the line being available to the line being complete — idle wait
+/// for a client to say anything is not read latency and is excluded.
 fn read_line_bytes(
     reader: &mut BufReader<Stream>,
     buf: &mut Vec<u8>,
     stop: &AtomicBool,
     max: usize,
+    read_hist: &Histogram,
 ) -> std::io::Result<LineRead> {
     let mut over = false;
+    let mut started: Option<Instant> = None;
+    let clock = |s: &Option<Instant>| {
+        if let Some(t) = s {
+            read_hist.record_duration(t.elapsed());
+        }
+    };
     loop {
         let chunk = match reader.fill_buf() {
             Ok(c) => c,
@@ -511,12 +588,17 @@ fn read_line_bytes(
         if chunk.is_empty() {
             // EOF: flush a final unterminated line if one is buffered
             return Ok(if over {
+                clock(&started);
                 LineRead::TooLong
             } else if buf.is_empty() {
                 LineRead::Eof
             } else {
+                clock(&started);
                 LineRead::Line
             });
+        }
+        if started.is_none() {
+            started = Some(Instant::now());
         }
         let newline = chunk.iter().position(|&b| b == b'\n');
         let take = newline.map_or(chunk.len(), |p| p + 1);
@@ -530,6 +612,7 @@ fn read_line_bytes(
         }
         reader.consume(take);
         if newline.is_some() {
+            clock(&started);
             return Ok(if over { LineRead::TooLong } else { LineRead::Line });
         }
     }
@@ -541,6 +624,7 @@ fn run_reader(
     shared: Arc<Shared>,
     stats: Arc<ConnStats>,
     reply_tx: mpsc::SyncSender<String>,
+    obs: TransportObs,
 ) {
     let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
     let mut reader = BufReader::new(stream);
@@ -550,12 +634,19 @@ fn run_reader(
             break;
         }
         buf.clear();
-        match read_line_bytes(&mut reader, &mut buf, &shared.stop, MAX_LINE_BYTES)
-        {
+        match read_line_bytes(
+            &mut reader,
+            &mut buf,
+            &shared.stop,
+            MAX_LINE_BYTES,
+            &obs.read,
+        ) {
             Ok(LineRead::Line) => {}
             Ok(LineRead::TooLong) => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.errors.fetch_add(1, Ordering::Relaxed);
+                stats.err_oversize.fetch_add(1, Ordering::Relaxed);
+                obs.err_oversize.fetch_add(1, Ordering::Relaxed);
                 let reply = Response::error(format!(
                     "request line exceeds {MAX_LINE_BYTES} bytes"
                 ))
@@ -566,12 +657,19 @@ fn run_reader(
                 }
                 continue;
             }
-            Ok(LineRead::Eof) | Err(_) => break,
+            Ok(LineRead::Eof) => break,
+            Err(_) => {
+                stats.err_io.fetch_add(1, Ordering::Relaxed);
+                obs.err_io.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
         }
         let reply = match std::str::from_utf8(&buf) {
             Err(_) => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
                 stats.errors.fetch_add(1, Ordering::Relaxed);
+                stats.err_decode.fetch_add(1, Ordering::Relaxed);
+                obs.err_decode.fetch_add(1, Ordering::Relaxed);
                 Response::error("request line is not valid utf-8")
                     .to_json()
                     .dump()
@@ -582,7 +680,7 @@ fn run_reader(
                     continue;
                 }
                 stats.requests.fetch_add(1, Ordering::Relaxed);
-                handle_request(&service, &shared, &stats, line)
+                handle_request(&service, &shared, &stats, &obs, line)
             }
         };
         if reply_tx.send(reply).is_err() {
@@ -592,16 +690,25 @@ fn run_reader(
     // dropping reply_tx lets the writer drain queued replies and exit
 }
 
-fn run_writer(stream: Stream, replies: mpsc::Receiver<String>) {
+fn run_writer(
+    stream: Stream,
+    replies: mpsc::Receiver<String>,
+    obs: TransportObs,
+    stats: Arc<ConnStats>,
+) {
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut out = BufWriter::new(stream);
     for reply in replies {
+        let t = Instant::now();
         if writeln!(out, "{reply}")
             .and_then(|()| out.flush())
             .is_err()
         {
+            stats.err_io.fetch_add(1, Ordering::Relaxed);
+            obs.err_io.fetch_add(1, Ordering::Relaxed);
             break;
         }
+        obs.write.record_duration(t.elapsed());
     }
     // drain done (or client dead): half-close so the client sees EOF
     if let Ok(inner) = out.into_inner() {
@@ -614,22 +721,42 @@ fn handle_request(
     service: &Service,
     shared: &Shared,
     me: &ConnStats,
+    obs: &TransportObs,
     line: &str,
 ) -> String {
-    let reply = match Json::parse(line) {
-        Err(e) => Response::error(format!("bad json: {e}")).to_json(),
-        Ok(v) => match parse_wire_op(&v) {
-            Err(e) => Response::error(e).to_json(),
-            Ok(op) => {
-                let is_stats = matches!(op, WireOp::Stats);
-                let reply = service.handle_op(op);
-                if is_stats {
-                    attach_transport(reply, shared, me)
-                } else {
-                    reply
+    // decode stage: raw bytes -> validated WireOp, failures included
+    let t = Instant::now();
+    let parsed = Json::parse(line)
+        .map_err(|e| format!("bad json: {e}"))
+        .and_then(|v| parse_wire_op(&v));
+    obs.decode.record_duration(t.elapsed());
+    let reply = match parsed {
+        Err(e) => {
+            me.err_decode.fetch_add(1, Ordering::Relaxed);
+            obs.err_decode.fetch_add(1, Ordering::Relaxed);
+            Response::error(e).to_json()
+        }
+        Ok(op) => {
+            let is_stats = matches!(op, WireOp::Stats);
+            let reply = service.handle_op(op);
+            if reply.get("ok") == Some(&Json::Bool(false)) {
+                // "no session <id>" is the service's stable phrasing for
+                // ops addressed to ids it doesn't know (ghost ids)
+                let ghost = reply
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .is_some_and(|msg| msg.contains("no session"));
+                if ghost {
+                    me.err_ghost_id.fetch_add(1, Ordering::Relaxed);
+                    obs.err_ghost_id.fetch_add(1, Ordering::Relaxed);
                 }
             }
-        },
+            if is_stats {
+                attach_transport(reply, shared, me)
+            } else {
+                reply
+            }
+        }
     };
     if reply.get("ok") == Some(&Json::Bool(false)) {
         me.errors.fetch_add(1, Ordering::Relaxed);
@@ -654,6 +781,22 @@ fn attach_transport(reply: Json, shared: &Shared, me: &ConnStats) -> Json {
                         (
                             "errors",
                             Json::Num(c.errors.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "err_decode",
+                            Json::Num(c.err_decode.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "err_oversize",
+                            Json::Num(c.err_oversize.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "err_ghost_id",
+                            Json::Num(c.err_ghost_id.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "err_io",
+                            Json::Num(c.err_io.load(Ordering::Relaxed) as f64),
                         ),
                     ])
                 })

@@ -55,6 +55,9 @@ pub struct SessionStore {
     pub roll_bytes: u64,
     /// compact when dead bytes exceed max(this, live bytes)
     pub compact_min_dead: u64,
+    /// optional latency observer: each compaction pass that actually
+    /// runs records its wall time (ns). Measurement-only.
+    compact_obs: Option<std::sync::Arc<crate::obs::Histogram>>,
 }
 
 impl SessionStore {
@@ -172,7 +175,17 @@ impl SessionStore {
             dead_bytes,
             roll_bytes: 4 << 20,
             compact_min_dead: 64 << 10,
+            compact_obs: None,
         })
+    }
+
+    /// Record each actual compaction pass's wall time into `hist` (the
+    /// serve layer wires in its `stage.store_compact` histogram).
+    pub fn set_compact_observer(
+        &mut self,
+        hist: std::sync::Arc<crate::obs::Histogram>,
+    ) {
+        self.compact_obs = Some(hist);
     }
 
     pub fn dir(&self) -> &Path {
@@ -331,6 +344,8 @@ impl SessionStore {
             return Ok(());
         }
         use std::io::Write as _;
+        // clock only passes that run; the early return above is free
+        let compact_start = std::time::Instant::now();
         let compact_gen = self.active_gen + 1;
         let tmp_path = self.dir.join("compact.tmp");
         let mut tmp = File::create(&tmp_path)
@@ -396,6 +411,9 @@ impl SessionStore {
         self.index = new_index;
         self.dead_bytes = 0;
         // live_bytes is unchanged: the same records, new home
+        if let Some(h) = &self.compact_obs {
+            h.record_duration(compact_start.elapsed());
+        }
         Ok(())
     }
 }

@@ -1,0 +1,369 @@
+//! End-to-end tests of the telemetry layer: the `metrics` wire op must
+//! report per-op latency histograms for every protocol op plus the
+//! internal stage timers, over both stdio and TCP; the transport error
+//! taxonomy must categorize failures per connection and server-wide;
+//! and tracing at sample rate 1 must leave predictions and replies
+//! bit-exact while producing a parseable JSONL trace.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use ccn_rtrl::obs::TraceConfig;
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::store::StoreConfig;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+/// The nine session-facing protocol ops every metrics reply must cover.
+const NINE_OPS: [&str; 9] = [
+    "open",
+    "step",
+    "step_batch",
+    "predict",
+    "snapshot",
+    "restore",
+    "park",
+    "warm",
+    "close",
+];
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    std::env::temp_dir().join(format!(
+        "ccn-obs-{tag}-{}-{nanos}",
+        std::process::id()
+    ))
+}
+
+fn ok(reply: &str) -> Json {
+    let v = Json::parse(reply).expect("reply must be valid json");
+    assert_eq!(
+        v.get("ok"),
+        Some(&Json::Bool(true)),
+        "expected ok reply, got: {reply}"
+    );
+    v
+}
+
+fn num(v: &Json, key: &str) -> f64 {
+    v.get(key)
+        .unwrap_or_else(|| panic!("missing key {key:?} in {v:?}"))
+        .as_f64()
+        .unwrap_or_else(|| panic!("key {key:?} is not a number in {v:?}"))
+}
+
+fn step_line(id: u64, x: &[f32], c: f32) -> String {
+    let xs: Vec<String> = x.iter().map(|v| format!("{v}")).collect();
+    format!(r#"{{"op":"step","id":{id},"x":[{}],"c":{c}}}"#, xs.join(","))
+}
+
+/// Drive all nine session ops against `service` (which must have a
+/// store mounted, so park/warm hit real store I/O). Returns the number
+/// of request lines issued.
+fn drive_nine_ops(service: &Service) -> usize {
+    let mut lines = 0usize;
+    let mut run = |line: &str| -> Json {
+        lines += 1;
+        ok(&service.handle_line(line))
+    };
+    let id1 = run(r#"{"op":"open","learner":"columnar:4","n_inputs":3,"seed":1}"#)
+        .get("id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    let id2 = run(r#"{"op":"open","learner":"ccn:4:2:1000","n_inputs":3,"seed":2}"#)
+        .get("id")
+        .unwrap()
+        .as_f64()
+        .unwrap() as u64;
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for _ in 0..20 {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        run(&step_line(id1, &x, 0.1));
+        run(&step_line(id2, &x, -0.1));
+    }
+    run(&format!(
+        r#"{{"op":"step_batch","ids":[{id1},{id2}],"xs":[[0.1,0.2,0.3],[0.1,0.2,0.3]],"cs":[0.0,0.0]}}"#
+    ));
+    run(&format!(r#"{{"op":"predict","id":{id1},"x":[0.5,0.5,0.5]}}"#));
+    let state = run(&format!(r#"{{"op":"snapshot","id":{id1}}}"#))
+        .get("state")
+        .unwrap()
+        .clone();
+    let restore =
+        Json::obj(vec![("op", Json::Str("restore".into())), ("state", state)]);
+    let id3 = run(&restore.dump()).get("id").unwrap().as_f64().unwrap() as u64;
+    run(&format!(r#"{{"op":"park","id":{id2}}}"#));
+    let warmed = run(&format!(r#"{{"op":"warm","id":{id2}}}"#));
+    assert_eq!(
+        warmed.get("rehydrated"),
+        Some(&Json::Bool(true)),
+        "parked session must rehydrate from the store: {warmed:?}"
+    );
+    run(&format!(r#"{{"op":"close","id":{id3}}}"#));
+    lines
+}
+
+/// One embedded histogram object: schema keys present, count positive,
+/// and the percentile ladder monotone between the observed extrema.
+fn assert_histogram_sane(name: &str, h: &Json) {
+    let count = num(h, "count");
+    assert!(count >= 1.0, "{name}: expected count >= 1, got {count}");
+    let ladder = [
+        num(h, "min_ns"),
+        num(h, "p50_ns"),
+        num(h, "p90_ns"),
+        num(h, "p99_ns"),
+        num(h, "p999_ns"),
+        num(h, "max_ns"),
+    ];
+    for w in ladder.windows(2) {
+        assert!(
+            w[0] <= w[1],
+            "{name}: percentile ladder not monotone: {ladder:?}"
+        );
+    }
+    let bucket_total: f64 = h
+        .get("buckets")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|pair| pair.as_arr().unwrap()[1].as_f64().unwrap())
+        .sum();
+    assert_eq!(
+        bucket_total, count,
+        "{name}: bucket counts must sum to count"
+    );
+}
+
+fn assert_metrics_reply(reply: &Json) {
+    let ops = reply.get("ops").expect("metrics reply carries ops").as_obj().unwrap();
+    for op in NINE_OPS {
+        let h = ops
+            .get(op)
+            .unwrap_or_else(|| panic!("metrics must cover op {op:?}"));
+        assert_histogram_sane(&format!("op.{op}"), h);
+    }
+    let stages = reply
+        .get("stages")
+        .expect("metrics reply carries stages")
+        .as_obj()
+        .unwrap();
+    // every routed op waited in a shard queue; steps ran a kernel; the
+    // park/warm pair hit real store I/O
+    for stage in ["queue_wait", "store_append", "store_load"] {
+        let h = stages
+            .get(stage)
+            .unwrap_or_else(|| panic!("metrics must cover stage {stage:?}"));
+        assert_histogram_sane(&format!("stage.{stage}"), h);
+    }
+    let kernel_steps = num(stages.get("step_scalar").unwrap(), "count")
+        + num(stages.get("step_batched").unwrap(), "count");
+    assert!(
+        kernel_steps >= 1.0,
+        "stepping must land in a kernel stage timer"
+    );
+    assert!(
+        reply.get("counters").is_some(),
+        "metrics reply carries the counter block"
+    );
+}
+
+#[test]
+fn metrics_reports_all_nine_ops_and_stage_timers_over_stdio() {
+    let dir = tempdir("stdio");
+    let mut service =
+        Service::with_store(2, Some(StoreConfig::new(&dir, 0))).expect("boot");
+    drive_nine_ops(&service);
+
+    let metrics = ok(&service.handle_line(r#"{"op":"metrics"}"#));
+    assert_metrics_reply(&metrics);
+
+    // stats gains the compact per-op latency block
+    let stats = ok(&service.handle_line(r#"{"op":"stats"}"#));
+    let latency = stats
+        .get("latency")
+        .expect("stats reply carries latency")
+        .as_obj()
+        .unwrap();
+    for op in NINE_OPS {
+        let entry = latency
+            .get(op)
+            .unwrap_or_else(|| panic!("stats latency must cover op {op:?}"));
+        assert!(num(entry, "count") >= 1.0, "{op}: latency count");
+        assert!(num(entry, "p50_us") <= num(entry, "p99_us"), "{op}: p50 <= p99");
+    }
+
+    service.close().expect("close");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(local: &str) -> Client {
+        let hostport = local.strip_prefix("tcp://").expect("tcp local addr");
+        let stream = TcpStream::connect(hostport).expect("connect");
+        Client {
+            reader: BufReader::new(stream.try_clone().expect("clone")),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").expect("send");
+        self.writer.flush().expect("flush");
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).expect("recv");
+        Json::parse(reply.trim()).expect("reply must be valid json")
+    }
+}
+
+#[test]
+fn metrics_and_error_taxonomy_over_tcp() {
+    let dir = tempdir("tcp");
+    let service =
+        Service::with_store(2, Some(StoreConfig::new(&dir, 0))).expect("boot");
+    drive_nine_ops(&service);
+    let server = Server::bind(
+        service,
+        &ListenAddr::parse("tcp://127.0.0.1:0").expect("addr"),
+        0,
+    )
+    .expect("bind");
+    let mut client = Client::connect(&server.local_addr().to_string());
+
+    // a healthy request, then one failure per taxonomy category that
+    // still produces a reply
+    let opened =
+        client.call(r#"{"op":"open","learner":"columnar:4","n_inputs":3,"seed":9}"#);
+    assert_eq!(opened.get("ok"), Some(&Json::Bool(true)));
+    let garbage = client.call("this is not json");
+    assert_eq!(garbage.get("ok"), Some(&Json::Bool(false)), "{garbage:?}");
+    let ghost = client.call(r#"{"op":"step","id":999999,"x":[0,0,0],"c":0}"#);
+    assert_eq!(ghost.get("ok"), Some(&Json::Bool(false)), "{ghost:?}");
+
+    // the metrics op is served over the wire, with the nine-op coverage
+    // from the pre-bind stdio traffic plus live transport stage timers
+    let metrics = client.call(r#"{"op":"metrics"}"#);
+    assert_eq!(metrics.get("ok"), Some(&Json::Bool(true)));
+    assert_metrics_reply(&metrics);
+    let stages = metrics.get("stages").unwrap().as_obj().unwrap();
+    for stage in ["transport_read", "transport_decode", "transport_write"] {
+        assert_histogram_sane(
+            &format!("stage.{stage}"),
+            stages.get(stage).unwrap(),
+        );
+    }
+    let counters = metrics.get("counters").unwrap().as_obj().unwrap();
+    assert!(
+        counters.get("transport.err_decode").unwrap().as_f64().unwrap() >= 1.0,
+        "garbage line must count as a decode error"
+    );
+    assert!(
+        counters.get("transport.err_ghost_id").unwrap().as_f64().unwrap() >= 1.0,
+        "unknown session id must count as a ghost-id error"
+    );
+
+    // per-connection taxonomy in the stats transport block
+    let stats = client.call(r#"{"op":"stats"}"#);
+    let transport = stats.get("transport").expect("transport block").clone();
+    let conns = transport.get("conns").unwrap().as_arr().unwrap();
+    let me = conns
+        .iter()
+        .find(|c| num(c, "id") == num(&transport, "conn"))
+        .expect("asking connection is listed");
+    assert!(num(me, "err_decode") >= 1.0, "{me:?}");
+    assert!(num(me, "err_ghost_id") >= 1.0, "{me:?}");
+    assert_eq!(num(me, "err_oversize"), 0.0, "{me:?}");
+    // the taxonomy splits the pre-existing total without changing it:
+    // both failures above are also counted under errors
+    assert!(num(me, "errors") >= 2.0, "{me:?}");
+
+    server.shutdown().expect("shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tracing_at_sample_one_is_bit_exact_and_trace_parses() {
+    let dir_traced = tempdir("twin-traced");
+    let dir_plain = tempdir("twin-plain");
+    let trace_path = tempdir("trace-log").with_extension("jsonl");
+
+    // resident cap 1 forces store churn mid-sequence, so the traced
+    // path also covers evict/rehydrate I/O
+    let mut traced =
+        Service::with_store(2, Some(StoreConfig::new(&dir_traced, 1))).expect("boot");
+    traced
+        .set_trace(&TraceConfig { path: trace_path.clone(), sample: 1 })
+        .expect("mount trace");
+    let mut plain =
+        Service::with_store(2, Some(StoreConfig::new(&dir_plain, 1))).expect("boot");
+
+    // telemetry is measurement-only: with tracing sampling every op,
+    // every reply must be byte-identical to the untraced twin's. Both
+    // twins boot from fresh stores, so they mint identical session ids.
+    let mut n_ops = 0usize;
+    let mut run_twin = |line: &str| -> String {
+        n_ops += 1;
+        let a = traced.handle_line(line);
+        let b = plain.handle_line(line);
+        assert_eq!(a, b, "traced reply diverged for request {line}");
+        a
+    };
+    let ids: Vec<u64> = [
+        r#"{"op":"open","learner":"columnar:4","n_inputs":3,"seed":1}"#,
+        r#"{"op":"open","learner":"tbptt:3:8","n_inputs":3,"seed":2}"#,
+        r#"{"op":"open","learner":"snap1:3","n_inputs":3,"seed":3}"#,
+    ]
+    .iter()
+    .map(|line| ok(&run_twin(line)).get("id").unwrap().as_f64().unwrap() as u64)
+    .collect();
+    let mut rng = Xoshiro256::seed_from_u64(0x0b5);
+    for round in 0..15 {
+        for &id in &ids {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            run_twin(&step_line(id, &x, 0.2));
+            if round % 5 == 4 {
+                run_twin(&format!(
+                    r#"{{"op":"predict","id":{id},"x":[0.1,0.2,0.3]}}"#
+                ));
+            }
+        }
+    }
+    run_twin(&format!(r#"{{"op":"snapshot","id":{}}}"#, ids[0]));
+    run_twin(&format!(r#"{{"op":"park","id":{}}}"#, ids[1]));
+    run_twin(&format!(r#"{{"op":"warm","id":{}}}"#, ids[1]));
+    run_twin(&format!(r#"{{"op":"close","id":{}}}"#, ids[2]));
+    drop(run_twin);
+
+    traced.close().expect("close traced");
+    plain.close().expect("close plain");
+
+    // every sampled op produced one parseable event (the queue is far
+    // larger than this sequence, so nothing may drop)
+    let log = std::fs::read_to_string(&trace_path).expect("trace file");
+    let mut events = 0usize;
+    for line in log.lines() {
+        let v = Json::parse(line).expect("trace event must be valid json");
+        for key in ["ts_ns", "op", "dur_ns"] {
+            assert!(v.get(key).is_some(), "trace event missing {key:?}: {line}");
+        }
+        assert!(num(&v, "ts_ns") >= 0.0);
+        assert!(num(&v, "dur_ns") >= 0.0);
+        assert!(v.get("ok").unwrap().as_bool().is_some(), "{line}");
+        events += 1;
+    }
+    assert_eq!(events, n_ops, "sample rate 1 records every op exactly once");
+
+    let _ = std::fs::remove_dir_all(&dir_traced);
+    let _ = std::fs::remove_dir_all(&dir_plain);
+    let _ = std::fs::remove_file(&trace_path);
+}

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Validate unified bench JSON artifacts (schema ccn.bench.v1).
+
+Usage: check_bench_schema.py BENCH_a.json [BENCH_b.json ...]
+
+Each file must carry the top-level schema tag and bench name, and every
+embedded latency histogram (the obs::HistogramSnapshot::to_json shape,
+recognized by its count/sum_ns/buckets keys) must be internally
+consistent: count equals the sum of bucket counts, bucket lower bounds
+strictly ascend, every listed bucket count is positive, the percentile
+ladder is monotone between min and max, and an empty histogram carries
+no buckets. At least one histogram must be present per file — a bench
+that stops embedding latency data should fail CI, not silently pass.
+
+Stdlib only; exits non-zero with a message naming the offending file
+and JSON path on the first violation.
+"""
+
+import json
+import sys
+
+SCHEMA = "ccn.bench.v1"
+HIST_KEYS = {"count", "sum_ns", "buckets"}
+LADDER = ["min_ns", "p50_ns", "p90_ns", "p99_ns", "p999_ns", "max_ns"]
+
+
+def fail(msg):
+    print(f"check_bench_schema: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_histogram(path, where, h):
+    for key in sorted(HIST_KEYS | set(LADDER)):
+        if key not in h:
+            fail(f"{path}: {where}: histogram missing key {key!r}")
+    count = h["count"]
+    buckets = h["buckets"]
+    if not isinstance(buckets, list):
+        fail(f"{path}: {where}: buckets must be a list")
+    total = 0
+    prev_lo = -1
+    for i, pair in enumerate(buckets):
+        if not (isinstance(pair, list) and len(pair) == 2):
+            fail(f"{path}: {where}: buckets[{i}] must be a [lo_ns, count] pair")
+        lo, n = pair
+        if lo <= prev_lo:
+            fail(f"{path}: {where}: bucket bounds must ascend ({lo} after {prev_lo})")
+        if n <= 0:
+            fail(f"{path}: {where}: buckets[{i}] has non-positive count {n}")
+        prev_lo = lo
+        total += n
+    if total != count:
+        fail(f"{path}: {where}: count {count} != sum of bucket counts {total}")
+    if count == 0 and buckets:
+        fail(f"{path}: {where}: empty histogram must carry no buckets")
+    if count > 0:
+        values = [h[k] for k in LADDER]
+        for a, b in zip(values, values[1:]):
+            if a > b:
+                fail(
+                    f"{path}: {where}: percentile ladder not monotone: "
+                    + ", ".join(f"{k}={h[k]}" for k in LADDER)
+                )
+
+
+def walk(path, where, node, found):
+    if isinstance(node, dict):
+        if HIST_KEYS <= set(node.keys()):
+            check_histogram(path, where, node)
+            found.append(where)
+            return
+        for key, child in node.items():
+            walk(path, f"{where}.{key}", child, found)
+    elif isinstance(node, list):
+        for i, child in enumerate(node):
+            walk(path, f"{where}[{i}]", child, found)
+
+
+def check_file(path):
+    with open(path) as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as e:
+            fail(f"{path}: not valid JSON: {e}")
+    if doc.get("schema") != SCHEMA:
+        fail(f"{path}: missing or wrong schema tag (want {SCHEMA!r}, "
+             f"got {doc.get('schema')!r})")
+    if not isinstance(doc.get("bench"), str) or not doc["bench"]:
+        fail(f"{path}: missing bench name")
+    found = []
+    walk(path, "$", doc, found)
+    if not found:
+        fail(f"{path}: no embedded latency histograms found")
+    print(f"{path}: ok ({doc['bench']}, {len(found)} histogram(s))")
+
+
+def main(argv):
+    if len(argv) < 2:
+        fail("usage: check_bench_schema.py BENCH.json [...]")
+    for path in argv[1:]:
+        check_file(path)
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Validate a `ccn serve --trace-file` JSONL trace, and optionally the
+reply stream of the smoke session that produced it.
+
+Usage: check_trace.py TRACE.jsonl [REPLIES.jsonl]
+
+Trace: every line must parse as one JSON object carrying ts_ns, op,
+dur_ns, and ok; timestamps and durations must be non-negative (no
+monotonicity requirement — concurrent transports may interleave events
+out of order); at least one event must be present.
+
+Replies (when given): every reply line must be ok:true, and the last
+`metrics` reply — recognized by its ops/stages blocks — must cover all
+nine session ops of the protocol.
+
+Stdlib only; exits non-zero with a message naming the offending line on
+the first violation.
+"""
+
+import json
+import sys
+
+NINE_OPS = [
+    "open",
+    "step",
+    "step_batch",
+    "predict",
+    "snapshot",
+    "restore",
+    "park",
+    "warm",
+    "close",
+]
+
+
+def fail(msg):
+    print(f"check_trace: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_trace(path):
+    events = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                event = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{lineno}: not valid JSON: {e}")
+            for key in ("ts_ns", "op", "dur_ns", "ok"):
+                if key not in event:
+                    fail(f"{path}:{lineno}: event missing {key!r}: {line}")
+            if event["ts_ns"] < 0 or event["dur_ns"] < 0:
+                fail(f"{path}:{lineno}: negative timestamp or duration: {line}")
+            if not isinstance(event["op"], str):
+                fail(f"{path}:{lineno}: op must be a string: {line}")
+            if not isinstance(event["ok"], bool):
+                fail(f"{path}:{lineno}: ok must be a bool: {line}")
+            events += 1
+    if events == 0:
+        fail(f"{path}: no trace events")
+    print(f"{path}: ok ({events} event(s))")
+
+
+def check_replies(path):
+    metrics = None
+    replies = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                reply = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{lineno}: not valid JSON: {e}")
+            if reply.get("ok") is not True:
+                fail(f"{path}:{lineno}: reply not ok: {line}")
+            if "ops" in reply and "stages" in reply:
+                metrics = (lineno, reply)
+            replies += 1
+    if replies == 0:
+        fail(f"{path}: no replies")
+    if metrics is None:
+        fail(f"{path}: no metrics reply in the smoke session")
+    lineno, reply = metrics
+    for op in NINE_OPS:
+        if op not in reply["ops"]:
+            fail(f"{path}:{lineno}: metrics reply missing op {op!r}")
+    print(f"{path}: ok ({replies} replies, metrics covers all nine ops)")
+
+
+def main(argv):
+    if len(argv) < 2 or len(argv) > 3:
+        fail("usage: check_trace.py TRACE.jsonl [REPLIES.jsonl]")
+    check_trace(argv[1])
+    if len(argv) == 3:
+        check_replies(argv[2])
+
+
+if __name__ == "__main__":
+    main(sys.argv)
