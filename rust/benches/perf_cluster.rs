@@ -1,0 +1,282 @@
+//! §Cluster scale-out bench: the same client load against 1 vs 2
+//! backends behind a `ccn route` router, plus the latency of live
+//! session migration (`handoff`) under that load's residue.
+//!
+//! Each phase boots N in-process `ccn serve` listeners (disjoint
+//! `--id-offset/--id-stride` residue classes), fronts them with a
+//! [`RouterServer`], and drives M concurrent [`WireClient`] threads,
+//! each stepping its own session cohort round-robin through real
+//! sockets. The phases report aggregate steps/s; the 2-backend phase
+//! then times `handoff` round trips into a histogram (p50/p99).
+//!
+//! The record lands in `results/BENCH_cluster.json` (`ccn.bench.v1`
+//! schema): per-phase steps/s, the 2-vs-1 `speedup`, and the migration
+//! latency histogram. The speedup is always *recorded*; it is only
+//! *asserted* (> 1.5x) when `CCN_CLUSTER_ASSERT_SCALING=1`, so CI smoke
+//! runs at tiny scale stay deterministic while perf runs enforce the
+//! scale-out claim.
+//!
+//! Scale knobs (env vars):
+//!   CCN_CLUSTER_CLIENTS     concurrent client threads   (default 4)
+//!   CCN_CLUSTER_SESSIONS    sessions per client         (default 4)
+//!   CCN_CLUSTER_TICKS       steps per session           (default 150)
+//!   CCN_CLUSTER_SHARDS      worker shards per backend   (default 2)
+//!   CCN_CLUSTER_INPUTS      observation width           (default 8)
+//!   CCN_CLUSTER_MIGRATIONS  timed handoffs              (default 32)
+//!   CCN_CLUSTER_OUT         result file (default results/BENCH_cluster.json)
+//!   CCN_CLUSTER_ASSERT_SCALING=1  hard-assert the >1.5x speedup
+
+mod common;
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use ccn_rtrl::cluster::{ClientConfig, RouterConfig, RouterServer, WireClient};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+use common::env_usize;
+
+struct PhaseResult {
+    n_backends: usize,
+    steps: u64,
+    elapsed: f64,
+    steps_per_s: f64,
+    /// Merged per-step round-trip latency across every client thread.
+    latency: HistogramSnapshot,
+    migration: Option<Json>,
+}
+
+struct Cluster {
+    backends: Vec<Server>,
+    router: RouterServer,
+}
+
+fn boot(n_backends: usize, shards: usize) -> Cluster {
+    let mut backends = Vec::new();
+    let mut addrs = Vec::new();
+    for k in 0..n_backends {
+        let mut service = Service::new(shards);
+        if n_backends > 1 {
+            // disjoint residue classes, exactly like a real deployment
+            service
+                .set_id_scheme(k as u64, n_backends as u64)
+                .expect("id scheme");
+        }
+        let server = Server::bind(
+            service,
+            &ListenAddr::parse("tcp://127.0.0.1:0").expect("addr"),
+            0,
+        )
+        .expect("bind backend");
+        addrs.push(ListenAddr::parse(server.local_addr()).expect("local"));
+        backends.push(server);
+    }
+    let mut cfg = RouterConfig::new(addrs);
+    cfg.health_interval = Duration::from_millis(200);
+    let router = RouterServer::bind(
+        cfg,
+        &ListenAddr::parse("tcp://127.0.0.1:0").expect("addr"),
+    )
+    .expect("bind router");
+    Cluster { backends, router }
+}
+
+fn run_phase(
+    n_backends: usize,
+    clients: usize,
+    sessions: usize,
+    ticks: usize,
+    shards: usize,
+    n: usize,
+    migrations: usize,
+) -> PhaseResult {
+    let cluster = boot(n_backends, shards);
+    let local = cluster.router.local_addr().to_string();
+    eprintln!(
+        "[perf_cluster] phase: {n_backends} backend(s), {clients} clients x \
+         {sessions} sessions x {ticks} ticks via {local}"
+    );
+
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let mut joins = Vec::new();
+    for k in 0..clients {
+        let local = local.clone();
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(
+            move || -> (u64, Vec<u64>, HistogramSnapshot) {
+                let mut client = WireClient::dial(&local, ClientConfig::default())
+                    .expect("dial");
+                let ids: Vec<u64> = (0..sessions)
+                    .map(|j| {
+                        client
+                            .open("columnar:8", n, (k * sessions + j) as u64)
+                            .expect("open")
+                    })
+                    .collect();
+                let mut rng = Xoshiro256::seed_from_u64(0xc1a5 + k as u64);
+                let hist = Histogram::new();
+                barrier.wait(); // aligned start
+                let mut steps = 0u64;
+                for _ in 0..ticks {
+                    for &id in &ids {
+                        let x: Vec<f32> =
+                            (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                        let c = rng.uniform(-0.5, 0.5);
+                        let t = Instant::now();
+                        client.step(id, &x, c).expect("step");
+                        hist.record_duration(t.elapsed());
+                        steps += 1;
+                    }
+                }
+                barrier.wait(); // aligned stop
+                (steps, ids, hist.snapshot())
+            },
+        ));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    barrier.wait();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut total_steps = 0u64;
+    let mut all_ids = Vec::new();
+    let mut latency = HistogramSnapshot::default();
+    for join in joins {
+        let (steps, ids, snap) = join.join().expect("client thread");
+        total_steps += steps;
+        all_ids.extend(ids);
+        latency = latency.merge(&snap);
+    }
+    let steps_per_s = total_steps as f64 / elapsed;
+
+    // every wire step must be accounted for by exactly one backend
+    let served: u64 = cluster
+        .backends
+        .iter()
+        .flat_map(|b| b.service().pool().stats())
+        .map(|s| s.steps)
+        .sum();
+    assert_eq!(
+        served, total_steps,
+        "cluster must account every wire step exactly once"
+    );
+
+    // migration latency: time handoffs of live sessions (multi-backend
+    // phases only — a handoff needs somewhere to go)
+    let migration = if n_backends > 1 && migrations > 0 {
+        let mut admin =
+            WireClient::dial(&local, ClientConfig::default()).expect("dial");
+        let hist = Histogram::new();
+        let mut moved = 0usize;
+        for (i, &id) in all_ids.iter().cycle().take(migrations).enumerate() {
+            let line = format!(r#"{{"op":"handoff","id":{id}}}"#);
+            let t = Instant::now();
+            let v = admin.request_ok(&line).unwrap_or_else(|e| {
+                panic!("handoff {i} of session {id} failed: {e}")
+            });
+            hist.record_duration(t.elapsed());
+            moved += 1;
+            assert!(v.get("from").is_some() && v.get("to").is_some());
+        }
+        let snap = hist.snapshot();
+        eprintln!(
+            "[perf_cluster] {moved} handoffs: p50 {:.1} us, p99 {:.1} us",
+            snap.percentile(0.50) as f64 / 1000.0,
+            snap.percentile(0.99) as f64 / 1000.0
+        );
+        Some(Json::obj(vec![
+            ("count", Json::Num(moved as f64)),
+            ("latency", snap.to_json()),
+        ]))
+    } else {
+        None
+    };
+
+    cluster.router.shutdown().expect("router shutdown");
+    for b in cluster.backends {
+        b.shutdown().expect("backend shutdown");
+    }
+    PhaseResult {
+        n_backends,
+        steps: total_steps,
+        elapsed,
+        steps_per_s,
+        latency,
+        migration,
+    }
+}
+
+fn main() {
+    let clients = env_usize("CCN_CLUSTER_CLIENTS", 4);
+    let sessions = env_usize("CCN_CLUSTER_SESSIONS", 4);
+    let ticks = env_usize("CCN_CLUSTER_TICKS", 150);
+    let shards = env_usize("CCN_CLUSTER_SHARDS", 2);
+    let n = env_usize("CCN_CLUSTER_INPUTS", 8);
+    let migrations = env_usize("CCN_CLUSTER_MIGRATIONS", 32);
+    let out_path = std::env::var("CCN_CLUSTER_OUT")
+        .unwrap_or_else(|_| "results/BENCH_cluster.json".into());
+
+    let one = run_phase(1, clients, sessions, ticks, shards, n, 0);
+    let two = run_phase(2, clients, sessions, ticks, shards, n, migrations);
+    let speedup = two.steps_per_s / one.steps_per_s;
+
+    let mut rows = Vec::new();
+    for p in [&one, &two] {
+        rows.push(vec![
+            p.n_backends.to_string(),
+            p.steps.to_string(),
+            format!("{:.2}", p.elapsed),
+            format!("{:.0}", p.steps_per_s),
+            format!("{:.1}", p.latency.percentile(0.50) as f64 / 1000.0),
+            format!("{:.1}", p.latency.percentile(0.99) as f64 / 1000.0),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["backends", "steps", "secs", "steps/s", "p50 us", "p99 us"],
+            &rows
+        )
+    );
+    println!("scale-out: 2 backends = {speedup:.2}x one backend");
+
+    if std::env::var("CCN_CLUSTER_ASSERT_SCALING").as_deref() == Ok("1") {
+        assert!(
+            speedup > 1.5,
+            "2-backend throughput must beat 1.5x one backend, got {speedup:.2}x"
+        );
+    }
+
+    let phase_json = |p: &PhaseResult| {
+        let mut fields = vec![
+            ("backends", Json::Num(p.n_backends as f64)),
+            ("steps", Json::Num(p.steps as f64)),
+            ("elapsed_s", Json::Num(p.elapsed)),
+            ("steps_per_s", Json::Num(p.steps_per_s)),
+            ("latency", p.latency.to_json()),
+        ];
+        if let Some(m) = &p.migration {
+            fields.push(("migration", m.clone()));
+        }
+        Json::obj(fields)
+    };
+    common::write_bench_json(
+        &out_path,
+        "perf_cluster",
+        vec![
+            ("clients", Json::Num(clients as f64)),
+            ("sessions_per_client", Json::Num(sessions as f64)),
+            ("shards_per_backend", Json::Num(shards as f64)),
+            ("ticks", Json::Num(ticks as f64)),
+            ("inputs", Json::Num(n as f64)),
+            ("backends_1", phase_json(&one)),
+            ("backends_2", phase_json(&two)),
+            ("speedup", Json::Num(speedup)),
+        ],
+    );
+}

@@ -23,11 +23,10 @@
 
 mod common;
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
+use ccn_rtrl::cluster::{ClientConfig, WireClient};
 use ccn_rtrl::metrics::render_table;
 use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
@@ -41,37 +40,6 @@ const KINDS: [&str; 4] = ["columnar:8", "ccn:8:2:100000", "tbptt:4:10", "snap1:4
 /// Nearest-rank percentile of a histogram snapshot, in microseconds.
 fn pct_us(snap: &HistogramSnapshot, p: f64) -> f64 {
     snap.percentile(p) as f64 / 1000.0
-}
-
-struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl Client {
-    fn connect(local: &str) -> Client {
-        let hostport = local.strip_prefix("tcp://").expect("tcp addr");
-        let stream = TcpStream::connect(hostport).expect("connect");
-        stream.set_nodelay(true).expect("nodelay");
-        Client {
-            reader: BufReader::new(stream.try_clone().expect("clone")),
-            writer: stream,
-        }
-    }
-
-    fn call(&mut self, line: &str) -> Json {
-        writeln!(self.writer, "{line}").expect("send");
-        self.writer.flush().expect("flush");
-        let mut reply = String::new();
-        self.reader.read_line(&mut reply).expect("recv");
-        let v = Json::parse(reply.trim()).expect("reply json");
-        assert_eq!(
-            v.get("ok"),
-            Some(&Json::Bool(true)),
-            "request failed: {line} -> {reply}"
-        );
-        v
-    }
 }
 
 /// Per-kind latency histograms one client collected.
@@ -104,7 +72,8 @@ fn main() {
         let local = local.clone();
         let barrier = Arc::clone(&barrier);
         joins.push(std::thread::spawn(move || -> (u64, KindSamples) {
-            let mut client = Client::connect(&local);
+            let mut client =
+                WireClient::dial(&local, ClientConfig::default()).expect("dial");
             let specs: Vec<&'static str> = (0..sessions)
                 .map(|j| KINDS[(k * sessions + j) % KINDS.len()])
                 .collect();
@@ -116,7 +85,8 @@ fn main() {
                         r#"{{"op":"open","learner":"{spec}","n_inputs":{n},"seed":{}}}"#,
                         k * sessions + j
                     );
-                    client.call(&line).get("id").unwrap().as_f64().unwrap() as u64
+                    let v = client.request_ok(&line).expect("open");
+                    v.get("id").unwrap().as_f64().unwrap() as u64
                 })
                 .collect();
             let mut rng = Xoshiro256::seed_from_u64(0xbe9c + k as u64);
@@ -135,7 +105,7 @@ fn main() {
                         x.join(",")
                     );
                     let t = Instant::now();
-                    client.call(&line);
+                    client.request_ok(&line).expect("step");
                     steps += 1;
                     let kind_idx = (k * sessions + j) % KINDS.len();
                     hists[kind_idx].1.record_duration(t.elapsed());

@@ -1,0 +1,528 @@
+//! A thin, reusable JSONL wire client for the serve protocol — one
+//! synchronous request/reply cycle per call over a [`Stream`] (TCP or
+//! UDS), with connect timeouts, bounded retry + exponential backoff,
+//! and lazy reconnection.
+//!
+//! This is the client half the transport PR left as a follow-up; the
+//! router ([`super::router`]), the benches (`perf_transport`,
+//! `perf_cluster`) and the cluster e2e tests all speak through it.
+//!
+//! # Retry safety
+//!
+//! The error type is the contract: [`ClientError::Connect`] means no
+//! request bytes left this process, so *any* op can be retried (here or
+//! on another backend). [`ClientError::Io`] means bytes may have reached
+//! the server — the serve transport executes a final unterminated line
+//! at EOF, so retrying a mutating op (`step`, `open`, `close`, ...)
+//! after a send could execute it twice. Only idempotent ops go through
+//! [`WireClient::request_line_idempotent`]; everything else fails fast
+//! and leaves the retry decision to a layer that knows the op's
+//! semantics.
+
+use std::io::{BufRead, BufReader, Write};
+use std::time::Duration;
+
+use crate::serve::transport::Stream;
+use crate::serve::ListenAddr;
+use crate::util::json::Json;
+
+/// Connection policy for a [`WireClient`].
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Bound on each TCP connect attempt (UDS connects fail fast).
+    pub connect_timeout: Duration,
+    /// Bound on waiting for one reply line.
+    pub read_timeout: Duration,
+    /// Bound on pushing one request line into the socket.
+    pub write_timeout: Duration,
+    /// Extra connect attempts after the first fails.
+    pub retries: u32,
+    /// Sleep before the first reconnect attempt; doubles per attempt.
+    pub backoff: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(10),
+            retries: 2,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Why a request failed — the variant is the retry contract (see the
+/// module docs).
+#[derive(Debug)]
+pub enum ClientError {
+    /// No connection could be established; nothing was sent.
+    Connect(String),
+    /// Read/write failure after the request may have been sent.
+    Io(String),
+    /// The server replied with something unusable (bad JSON) or with
+    /// `ok:false` where success was required.
+    Protocol(String),
+}
+
+impl ClientError {
+    pub fn message(&self) -> &str {
+        match self {
+            ClientError::Connect(m)
+            | ClientError::Io(m)
+            | ClientError::Protocol(m) => m,
+        }
+    }
+
+    /// True when the request is known NOT to have reached the server.
+    pub fn is_connect(&self) -> bool {
+        matches!(self, ClientError::Connect(_))
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Connect(m) => write!(f, "connect: {m}"),
+            ClientError::Io(m) => write!(f, "io: {m}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+struct Conn {
+    reader: BufReader<Stream>,
+    writer: Stream,
+}
+
+/// One logical connection to a serve endpoint. Connects lazily on the
+/// first request and reconnects (with the configured retry/backoff)
+/// after any IO failure tears the socket down.
+pub struct WireClient {
+    addr: ListenAddr,
+    cfg: ClientConfig,
+    conn: Option<Conn>,
+}
+
+impl WireClient {
+    /// No I/O happens here — the first request dials.
+    pub fn new(addr: ListenAddr, cfg: ClientConfig) -> WireClient {
+        WireClient { addr, cfg, conn: None }
+    }
+
+    /// Parse-and-construct convenience for `tcp://`/`unix://` strings.
+    pub fn dial(addr: &str, cfg: ClientConfig) -> Result<WireClient, String> {
+        Ok(WireClient::new(ListenAddr::parse(addr)?, cfg))
+    }
+
+    pub fn addr(&self) -> &ListenAddr {
+        &self.addr
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.conn.is_some()
+    }
+
+    /// Drop the socket; the next request re-dials.
+    pub fn disconnect(&mut self) {
+        if let Some(conn) = self.conn.take() {
+            conn.writer.shutdown();
+        }
+    }
+
+    fn ensure_conn(&mut self) -> Result<(), ClientError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut wait = self.cfg.backoff;
+        let mut last = String::from("no attempt made");
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                std::thread::sleep(wait);
+                wait = wait.saturating_mul(2);
+            }
+            match Stream::connect(&self.addr, self.cfg.connect_timeout) {
+                Ok(stream) => {
+                    let setup = stream
+                        .set_read_timeout(Some(self.cfg.read_timeout))
+                        .and_then(|()| {
+                            stream.set_write_timeout(Some(
+                                self.cfg.write_timeout,
+                            ))
+                        })
+                        .and_then(|()| stream.try_clone());
+                    match setup {
+                        Ok(writer) => {
+                            self.conn = Some(Conn {
+                                reader: BufReader::new(stream),
+                                writer,
+                            });
+                            return Ok(());
+                        }
+                        Err(e) => last = format!("socket setup: {e}"),
+                    }
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(ClientError::Connect(format!("{}: {last}", self.addr)))
+    }
+
+    /// One request/reply cycle: send `line` (no trailing newline), wait
+    /// for the reply line. NEVER retries after the send — see the module
+    /// docs for why; pair with [`ClientError::is_connect`] when the
+    /// caller wants to fail over to another backend.
+    pub fn request_line(&mut self, line: &str) -> Result<String, ClientError> {
+        self.ensure_conn()?;
+        let conn = self.conn.as_mut().expect("ensured above");
+        if let Err(e) = writeln!(conn.writer, "{line}")
+            .and_then(|()| conn.writer.flush())
+        {
+            self.disconnect();
+            return Err(ClientError::Io(format!("{}: write: {e}", self.addr)));
+        }
+        let mut reply = String::new();
+        match conn.reader.read_line(&mut reply) {
+            Ok(0) => {
+                self.disconnect();
+                Err(ClientError::Io(format!(
+                    "{}: server closed the connection",
+                    self.addr
+                )))
+            }
+            Ok(_) => {
+                while reply.ends_with('\n') || reply.ends_with('\r') {
+                    reply.pop();
+                }
+                Ok(reply)
+            }
+            Err(e) => {
+                self.disconnect();
+                Err(ClientError::Io(format!("{}: read: {e}", self.addr)))
+            }
+        }
+    }
+
+    /// [`WireClient::request_line`] for ops that are safe to execute
+    /// twice (`ping`, `stats`, `metrics`, `snapshot`, `predict`): one
+    /// full re-dial + re-send cycle after an IO failure.
+    pub fn request_line_idempotent(
+        &mut self,
+        line: &str,
+    ) -> Result<String, ClientError> {
+        match self.request_line(line) {
+            Err(ClientError::Io(_)) => self.request_line(line),
+            other => other,
+        }
+    }
+
+    /// Send and parse the reply object (any `ok` value passes through).
+    pub fn request(&mut self, line: &str) -> Result<Json, ClientError> {
+        let reply = self.request_line(line)?;
+        Json::parse(&reply).map_err(|e| {
+            ClientError::Protocol(format!(
+                "{}: unparseable reply: {e}",
+                self.addr
+            ))
+        })
+    }
+
+    /// Send, parse, and require `ok:true` — the bench/test workhorse.
+    pub fn request_ok(&mut self, line: &str) -> Result<Json, ClientError> {
+        let v = self.request(line)?;
+        if v.get("ok") == Some(&Json::Bool(true)) {
+            Ok(v)
+        } else {
+            let msg = v
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("request failed without an error message");
+            Err(ClientError::Protocol(format!(
+                "{}: {line}: {msg}",
+                self.addr
+            )))
+        }
+    }
+
+    /// Liveness probe (idempotent, answered inline by the server).
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        let reply = self.request_line_idempotent(r#"{"op":"ping"}"#)?;
+        let v = Json::parse(&reply).map_err(|e| {
+            ClientError::Protocol(format!(
+                "{}: unparseable ping reply: {e}",
+                self.addr
+            ))
+        })?;
+        if v.get("pong") == Some(&Json::Bool(true)) {
+            Ok(())
+        } else {
+            Err(ClientError::Protocol(format!(
+                "{}: not a pong: {reply}",
+                self.addr
+            )))
+        }
+    }
+
+    /// Open a session: `{"op":"open","learner":KIND,"n_inputs":N,
+    /// "seed":S}` → the minted id.
+    pub fn open(
+        &mut self,
+        learner: &str,
+        n_inputs: usize,
+        seed: u64,
+    ) -> Result<u64, ClientError> {
+        let line = format!(
+            r#"{{"op":"open","learner":"{learner}","n_inputs":{n_inputs},"seed":{seed}}}"#
+        );
+        let v = self.request_ok(&line)?;
+        reply_id(&self.addr, &v)
+    }
+
+    /// Step one session; returns the prediction.
+    pub fn step(
+        &mut self,
+        id: u64,
+        x: &[f32],
+        c: f32,
+    ) -> Result<f64, ClientError> {
+        let line = format!(
+            r#"{{"op":"step","id":{id},"x":{},"c":{c}}}"#,
+            Json::arr_f32(x).dump()
+        );
+        let v = self.request_ok(&line)?;
+        v.get("y").and_then(|y| y.as_f64()).ok_or_else(|| {
+            ClientError::Protocol(format!("{}: step reply has no y", self.addr))
+        })
+    }
+
+    /// Step many sessions in one wire op; returns one `y` per item
+    /// (`None` where the server reported a per-item error).
+    pub fn step_batch(
+        &mut self,
+        items: &[(u64, Vec<f32>, f32)],
+    ) -> Result<Vec<Option<f64>>, ClientError> {
+        let line = Json::obj(vec![
+            ("op", Json::Str("step_batch".to_string())),
+            (
+                "ids",
+                Json::Arr(
+                    items.iter().map(|(id, _, _)| Json::Num(*id as f64)).collect(),
+                ),
+            ),
+            (
+                "xs",
+                Json::Arr(items.iter().map(|(_, x, _)| Json::arr_f32(x)).collect()),
+            ),
+            (
+                "cs",
+                Json::Arr(
+                    items.iter().map(|(_, _, c)| Json::Num(*c as f64)).collect(),
+                ),
+            ),
+        ])
+        .dump();
+        let v = self.request_ok(&line)?;
+        let ys = v.get("ys").and_then(|y| y.as_arr()).ok_or_else(|| {
+            ClientError::Protocol(format!(
+                "{}: step_batch reply has no ys",
+                self.addr
+            ))
+        })?;
+        Ok(ys.iter().map(|y| y.as_f64()).collect())
+    }
+
+    /// Snapshot a session (idempotent): the versioned state envelope.
+    pub fn snapshot(&mut self, id: u64) -> Result<Json, ClientError> {
+        let line = format!(r#"{{"op":"snapshot","id":{id}}}"#);
+        let reply = self.request_line_idempotent(&line)?;
+        let v = Json::parse(&reply).map_err(|e| {
+            ClientError::Protocol(format!(
+                "{}: unparseable snapshot reply: {e}",
+                self.addr
+            ))
+        })?;
+        if v.get("ok") != Some(&Json::Bool(true)) {
+            let msg = v
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("snapshot failed");
+            return Err(ClientError::Protocol(format!(
+                "{}: snapshot {id}: {msg}",
+                self.addr
+            )));
+        }
+        v.get("state").cloned().ok_or_else(|| {
+            ClientError::Protocol(format!(
+                "{}: snapshot reply has no state",
+                self.addr
+            ))
+        })
+    }
+
+    /// Restore a snapshot; `id: Some(n)` restores *as* that id (the
+    /// migration hook), `None` lets the server mint one. Returns the id
+    /// the session lives under.
+    pub fn restore(
+        &mut self,
+        state: &Json,
+        id: Option<u64>,
+    ) -> Result<u64, ClientError> {
+        let line = match id {
+            Some(id) => format!(
+                r#"{{"op":"restore","id":{id},"state":{}}}"#,
+                state.dump()
+            ),
+            None => format!(r#"{{"op":"restore","state":{}}}"#, state.dump()),
+        };
+        let v = self.request_ok(&line)?;
+        reply_id(&self.addr, &v)
+    }
+
+    /// Park a session to the durable store.
+    pub fn park(&mut self, id: u64) -> Result<(), ClientError> {
+        let line = format!(r#"{{"op":"park","id":{id}}}"#);
+        self.request_ok(&line).map(|_| ())
+    }
+
+    /// Warm a parked session back into shard memory.
+    pub fn warm(&mut self, id: u64) -> Result<(), ClientError> {
+        let line = format!(r#"{{"op":"warm","id":{id}}}"#);
+        self.request_ok(&line).map(|_| ())
+    }
+
+    /// Close a session; returns its lifetime step count.
+    pub fn close(&mut self, id: u64) -> Result<u64, ClientError> {
+        let line = format!(r#"{{"op":"close","id":{id}}}"#);
+        let v = self.request_ok(&line)?;
+        v.get("steps")
+            .and_then(|s| s.as_f64())
+            .map(|s| s as u64)
+            .ok_or_else(|| {
+                ClientError::Protocol(format!(
+                    "{}: close reply has no steps",
+                    self.addr
+                ))
+            })
+    }
+
+    /// The server's `stats` reply (idempotent).
+    pub fn stats(&mut self) -> Result<Json, ClientError> {
+        let reply = self.request_line_idempotent(r#"{"op":"stats"}"#)?;
+        Json::parse(&reply).map_err(|e| {
+            ClientError::Protocol(format!(
+                "{}: unparseable stats reply: {e}",
+                self.addr
+            ))
+        })
+    }
+
+    /// The server's `metrics` reply (idempotent).
+    pub fn metrics(&mut self) -> Result<Json, ClientError> {
+        let reply = self.request_line_idempotent(r#"{"op":"metrics"}"#)?;
+        Json::parse(&reply).map_err(|e| {
+            ClientError::Protocol(format!(
+                "{}: unparseable metrics reply: {e}",
+                self.addr
+            ))
+        })
+    }
+}
+
+fn reply_id(addr: &ListenAddr, v: &Json) -> Result<u64, ClientError> {
+    v.get("id")
+        .and_then(|id| id.as_f64())
+        .map(|id| id as u64)
+        .ok_or_else(|| {
+            ClientError::Protocol(format!("{addr}: reply has no id"))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Server, Service};
+
+    fn tiny_cfg() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_millis(250),
+            retries: 0,
+            backoff: Duration::from_millis(1),
+            ..ClientConfig::default()
+        }
+    }
+
+    #[test]
+    fn full_session_lifecycle_over_tcp() {
+        let server = Server::bind(
+            Service::new(2),
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let mut c = WireClient::dial(server.local_addr(), tiny_cfg()).unwrap();
+        c.ping().unwrap();
+        let id = c.open("columnar:4", 3, 7).unwrap();
+        let y1 = c.step(id, &[0.1, 0.2, -0.3], 0.5).unwrap();
+        let snap = c.snapshot(id).unwrap();
+        let restored = c.restore(&snap, None).unwrap();
+        assert_ne!(restored, id, "fresh id when none requested");
+        let pinned = c.restore(&snap, Some(4242)).unwrap();
+        assert_eq!(pinned, 4242, "explicit id honored");
+        // twin steps of twin states must agree bit-for-bit
+        let y2 = c.step(restored, &[0.4, -0.1, 0.2], -0.25).unwrap();
+        let y3 = c.step(pinned, &[0.4, -0.1, 0.2], -0.25).unwrap();
+        assert_eq!(y2.to_bits(), y3.to_bits(), "{y1} twins diverged");
+        let ys = c
+            .step_batch(&[
+                (id, vec![0.0, 0.1, 0.2], 0.0),
+                (99_999, vec![0.0, 0.1, 0.2], 0.0),
+            ])
+            .unwrap();
+        assert!(ys[0].is_some());
+        assert!(ys[1].is_none(), "ghost id maps to a per-item null");
+        assert_eq!(c.close(id).unwrap(), 2, "steps accounted");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("ok"), Some(&Json::Bool(true)));
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn connect_failure_is_retriable_io_failure_is_not() {
+        // nothing listens here (bound then dropped)
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            format!("tcp://{}", l.local_addr().unwrap())
+        };
+        let mut c = WireClient::dial(&dead, tiny_cfg()).unwrap();
+        match c.request_line(r#"{"op":"ping"}"#) {
+            Err(e) => assert!(e.is_connect(), "{e}"),
+            Ok(r) => panic!("dead endpoint replied: {r}"),
+        }
+
+        // a live server killed mid-conversation surfaces as Io
+        let server = Server::bind(
+            Service::new(1),
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let mut c = WireClient::dial(server.local_addr(), tiny_cfg()).unwrap();
+        c.ping().unwrap();
+        server.shutdown().unwrap();
+        // the socket is torn down; the next cycle must not claim Connect
+        // (bytes may have been sent) ...
+        match c.request_line(r#"{"op":"ping"}"#) {
+            Err(e) => assert!(!e.is_connect(), "{e}"),
+            // a race where the write lands before teardown finishes is
+            // possible but the reply read must then fail
+            Ok(r) => panic!("dead server replied: {r}"),
+        }
+        // ... and the idempotent wrapper may then retry the full cycle,
+        // which fails as Connect now that the conn is known-dead
+        match c.request_line_idempotent(r#"{"op":"ping"}"#) {
+            Err(e) => assert!(e.is_connect(), "{e}"),
+            Ok(r) => panic!("dead server replied: {r}"),
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! The horizontal scale-out tier: `ccn route` in front of N `ccn serve`
+//! backends.
+//!
+//! Three pieces, each useful on its own:
+//!
+//! - [`client`] — [`WireClient`]: a thin, reusable JSONL client for the
+//!   serve protocol over TCP/UDS, with connect timeouts, bounded retry +
+//!   backoff, and an error taxonomy that doubles as the retry-safety
+//!   contract ([`ClientError::Connect`] = provably not sent, anything
+//!   retriable; [`ClientError::Io`] = maybe executed, mutating ops must
+//!   not be replayed). The benches and e2e tests speak through it too.
+//! - [`ring`] — [`HashRing`]: deterministic consistent hashing of
+//!   session ids over backend indices, with liveness as a lookup-time
+//!   filter so death/revival never rebuilds anything.
+//! - [`router`] — [`Router`] / [`RouterServer`]: the routing core and
+//!   the `ccn route --listen ... --backend ...` front end. Serves the
+//!   whole backend protocol transparently (byte-identical replies for
+//!   single-backend ops) plus the cluster ops `health`, `handoff`,
+//!   `drain`, `rebalance`. Sessions migrate live between backends via
+//!   snapshot → restore-as-same-id → close, copy-before-delete, with
+//!   per-session ordering held across the move by per-id gates.
+//!
+//! # Deployment sketch
+//!
+//! ```text
+//! ccn serve --listen unix:///tmp/b0.sock --store-dir /data/b0 \
+//!           --id-offset 0 --id-stride 2 &
+//! ccn serve --listen unix:///tmp/b1.sock --store-dir /data/b1 \
+//!           --id-offset 1 --id-stride 2 &
+//! ccn route --listen tcp://127.0.0.1:9000 \
+//!           --backend unix:///tmp/b0.sock --backend unix:///tmp/b1.sock
+//! ```
+//!
+//! Backends partition the id space by residue class (`--id-offset K
+//! --id-stride N`) so fresh ids never collide across the fleet, and a
+//! migrated id keeps its residue class valid on any backend (`restore`
+//! with an explicit id fences every allocator past it). A killed backend
+//! drops out of the ring on the next health probe; its parked sessions
+//! survive in its store and rehydrate through the normal boot scan when
+//! the process returns, at which point it rejoins the ring.
+
+pub mod client;
+pub mod ring;
+pub mod router;
+
+pub use client::{ClientConfig, ClientError, WireClient};
+pub use ring::{HashRing, DEFAULT_VNODES};
+pub use router::{Router, RouterConfig, RouterServer, ROUTE_COUNTERS, ROUTE_OPS};

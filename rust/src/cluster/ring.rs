@@ -1,0 +1,144 @@
+//! Consistent-hash ring over backend indices.
+//!
+//! Classic fixed-point construction: each backend contributes `vnodes`
+//! pseudo-random points on the u64 circle; a key belongs to the first
+//! clockwise point owned by a *live* backend. Properties the router
+//! leans on:
+//!
+//! - **Stability**: adding/removing one backend re-homes only the keys
+//!   in the arcs it owned (~1/N of the space), not everything — which is
+//!   what keeps `rebalance` a bounded migration, not a full reshuffle.
+//! - **Determinism**: the points depend only on (backend index, vnodes),
+//!   so every router replica and every restart computes the same ring.
+//! - **Liveness masking**: death is a *lookup-time* filter, not a ring
+//!   rebuild — a dead backend's keys spill to the next live point and
+//!   spring back the moment it revives.
+//!
+//! Hashing is the splitmix64 finalizer: zero-dep, well-mixed, and
+//! already the idiom used by the store's segment checksums.
+
+/// splitmix64 finalizer — avalanches all 64 bits of `z`.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Default vnodes per backend: enough that the largest/smallest backend
+/// load ratio stays close to 1 for small N.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// The ring: sorted `(point, backend index)` pairs.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+    n_backends: usize,
+}
+
+impl HashRing {
+    pub fn new(n_backends: usize, vnodes: usize) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(n_backends * vnodes);
+        for b in 0..n_backends {
+            for r in 0..vnodes {
+                // disjoint (backend, replica) seed per point; mixing the
+                // packed pair avalanches into a unique circle position
+                let point = mix(((b as u64) << 32) | r as u64);
+                points.push((point, b));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, n_backends }
+    }
+
+    pub fn n_backends(&self) -> usize {
+        self.n_backends
+    }
+
+    /// The live backend owning `key`: first clockwise point whose
+    /// backend passes `live`, wrapping around; `None` when nothing is
+    /// live. O(log points + dead-run) per lookup.
+    pub fn home<F: Fn(usize) -> bool>(
+        &self,
+        key: u64,
+        live: F,
+    ) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = mix(key);
+        let start = self
+            .points
+            .partition_point(|&(p, _)| p < h);
+        for i in 0..self.points.len() {
+            let (_, b) = self.points[(start + i) % self.points.len()];
+            if live(b) {
+                return Some(b);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn every_key_lands_on_a_live_backend_dead_ones_never() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        for key in 0..1000u64 {
+            let b = ring.home(key, |b| b != 2).unwrap();
+            assert_ne!(b, 2, "dead backend got key {key}");
+            assert!(b < 4);
+        }
+        assert_eq!(ring.home(7, |_| false), None, "no live backend");
+    }
+
+    #[test]
+    fn death_moves_only_the_dead_backends_keys() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        let before: Vec<usize> = (0..2000u64)
+            .map(|k| ring.home(k, |_| true).unwrap())
+            .collect();
+        let after: Vec<usize> = (0..2000u64)
+            .map(|k| ring.home(k, |b| b != 1).unwrap())
+            .collect();
+        for (k, (b, a)) in before.iter().zip(&after).enumerate() {
+            if *b != 1 {
+                assert_eq!(b, a, "key {k} moved although its home is live");
+            } else {
+                assert_ne!(*a, 1, "key {k} stayed on the dead backend");
+            }
+        }
+    }
+
+    #[test]
+    fn load_spreads_roughly_evenly() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+        for key in 0..4000u64 {
+            *counts.entry(ring.home(key, |_| true).unwrap()).or_default() +=
+                1;
+        }
+        assert_eq!(counts.len(), 4, "every backend owns some keys");
+        for (&b, &n) in &counts {
+            // perfect would be 1000; vnode placement keeps skew bounded
+            assert!(
+                (300..=2200).contains(&n),
+                "backend {b} owns {n}/4000 keys — ring badly skewed"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_is_deterministic_across_instances() {
+        let a = HashRing::new(3, 32);
+        let b = HashRing::new(3, 32);
+        for key in 0..500u64 {
+            assert_eq!(a.home(key, |_| true), b.home(key, |_| true));
+        }
+    }
+}

@@ -1,0 +1,1430 @@
+//! The routing tier: one [`Router`] fronting N backend `ccn serve`
+//! processes, plus [`RouterServer`] — the `ccn route` accept loop that
+//! speaks the same JSONL protocol to clients.
+//!
+//! # Routing model
+//!
+//! Placement is **table-first, ring-second**: a `RwLock<HashMap<id,
+//! backend>>` records where every session the router placed (or located)
+//! actually lives; ids not in the table fall back to their
+//! consistent-hash home ([`super::ring::HashRing`]) and, when the home
+//! answers "no session", to a probe of the remaining live backends —
+//! found sessions are cached back into the table. A restarted router
+//! therefore recovers placements lazily instead of persisting them.
+//! Fresh `open`/`restore` ops are placed by ring over a monotonic
+//! placement counter, and the minted id (backends partition the id space
+//! via `--id-offset/--id-stride`) is recorded.
+//!
+//! # Transparency
+//!
+//! The router forwards the client's **raw request line** and returns the
+//! backend's **raw reply line** — for any op against a single backend
+//! the reply is byte-identical to talking to that backend directly (the
+//! bar the e2e suite pins). Locally-generated errors (bad JSON, unknown
+//! op) reuse the exact serve code paths, so those bytes match too. Only
+//! a `step_batch` spanning backends is split and re-merged — through
+//! [`Response::SteppedMany`], the same serializer the backend uses.
+//!
+//! # Migration ordering
+//!
+//! Every id has a gate (`RwLock<()>`): routed ops hold it shared,
+//! `handoff` holds it exclusively for snapshot-on-source →
+//! restore-as-same-id-on-destination → close-on-source. In-flight ops
+//! for the moving id queue on the gate and release against the updated
+//! table only after the destination has acked the restore — per-session
+//! order is preserved across the move, and the copy exists on the
+//! destination *before* the source copy dies (the store tier's reshard
+//! rule, applied across processes). A crash between restore and close
+//! leaves a duplicate that the routing table shadows — never a loss.
+//!
+//! # Failure handling
+//!
+//! Connect failures mark a backend dead (out of the ring at lookup
+//! time); ops that provably never reached a backend retry on the next
+//! candidate (`route.retries`). Ops that may have been executed are
+//! **never** replayed — the transport executes a final unterminated line
+//! at EOF, so blind retry could double-step a learner. A dead backend's
+//! parked sessions live in its store; when the process restarts on the
+//! same store dir the boot scan rehydrates them, the health loop sees
+//! the dead→alive transition, and the backend re-enters the ring.
+//!
+//! Every router op is timed into `route.<op>` histograms and the
+//! `route.retries`/`route.err_*`/`route.migrations` counters of the
+//! router's own [`Registry`], served by its `metrics`/`stats` ops along
+//! with a `cluster` block.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::{Histogram, Registry};
+use crate::serve::protocol::{parse_wire_op, Response, StepItem, WireOp};
+use crate::serve::transport::{
+    read_line_bytes, LineRead, Listener, SocketLock, Stream, MAX_LINE_BYTES,
+    POLL_INTERVAL, WRITE_TIMEOUT,
+};
+use crate::serve::ListenAddr;
+use crate::util::json::Json;
+
+use super::client::{ClientConfig, ClientError, WireClient};
+use super::ring::{HashRing, DEFAULT_VNODES};
+
+/// Router-tier op names, pre-registered as `route.<op>` histograms so
+/// the router's `metrics` schema is complete from the first request.
+pub const ROUTE_OPS: [&str; 16] = [
+    "open",
+    "step",
+    "step_batch",
+    "predict",
+    "snapshot",
+    "restore",
+    "park",
+    "warm",
+    "close",
+    "stats",
+    "metrics",
+    "ping",
+    "health",
+    "handoff",
+    "drain",
+    "rebalance",
+];
+
+/// Router-tier counters.
+pub const ROUTE_COUNTERS: [&str; 4] = [
+    "route.retries",
+    "route.err_backend",
+    "route.err_no_backend",
+    "route.migrations",
+];
+
+/// Configuration for [`Router::new`] / [`RouterServer::bind`].
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// The backend `ccn serve` endpoints, in ring order.
+    pub backends: Vec<ListenAddr>,
+    /// Client cap for the router's own listener (0 = unlimited).
+    pub max_conns: usize,
+    /// Cadence of the background liveness probe.
+    pub health_interval: Duration,
+    /// Connect/read/write/retry policy for every backend connection.
+    pub client: ClientConfig,
+    /// Ring points per backend.
+    pub vnodes: usize,
+}
+
+impl RouterConfig {
+    pub fn new(backends: Vec<ListenAddr>) -> RouterConfig {
+        RouterConfig {
+            backends,
+            max_conns: 0,
+            health_interval: Duration::from_millis(500),
+            client: ClientConfig::default(),
+            vnodes: DEFAULT_VNODES,
+        }
+    }
+}
+
+fn mlock<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn rlock<T>(lock: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn wlock<T>(lock: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn error_line(msg: impl Into<String>) -> String {
+    Response::error(msg).to_json().dump()
+}
+
+/// One configured backend and its routing state.
+struct Backend {
+    addr: ListenAddr,
+    label: String,
+    /// Last contact (probe or forward) succeeded.
+    alive: AtomicBool,
+    /// Eligible for *new* placements; cleared by `drain`, restored by a
+    /// dead→alive transition (a restarted process has re-scanned its
+    /// store and owns its parked sessions again).
+    in_ring: AtomicBool,
+    /// The router's own connection for health probes and migrations —
+    /// client traffic uses per-connection clients instead.
+    admin: Mutex<WireClient>,
+}
+
+/// Why a forward failed, and whether the request provably never reached
+/// the backend (→ safe to try the next candidate).
+enum ForwardErr {
+    /// Nothing was sent (connect failure, or an idempotent op whose
+    /// retry window closed): trying another backend cannot double-run.
+    NotSent(String),
+    /// Bytes may have been executed: no retry anywhere.
+    Broken(String),
+}
+
+impl ForwardErr {
+    fn message(self) -> String {
+        match self {
+            ForwardErr::NotSent(m) | ForwardErr::Broken(m) => m,
+        }
+    }
+}
+
+/// The routing core. Shared (`Arc`) between the accept loop, every
+/// connection thread, and the health thread; per-connection backend
+/// sockets live in the caller-owned map passed to [`Router::handle_line`].
+pub struct Router {
+    backends: Vec<Backend>,
+    ring: HashRing,
+    client_cfg: ClientConfig,
+    /// Authoritative placements: every session the router opened,
+    /// restored, located, or migrated.
+    table: RwLock<HashMap<u64, usize>>,
+    /// Per-id migration gates (see module docs). Entries die with the
+    /// session's `close`.
+    gates: Mutex<HashMap<u64, Arc<RwLock<()>>>>,
+    /// Monotonic counter driving ring placement of fresh opens.
+    placements: AtomicU64,
+    obs: Arc<Registry>,
+    timers: BTreeMap<&'static str, Arc<Histogram>>,
+    retries: Arc<AtomicU64>,
+    err_backend: Arc<AtomicU64>,
+    err_no_backend: Arc<AtomicU64>,
+    migrations: Arc<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Result<Router, String> {
+        if cfg.backends.is_empty() {
+            return Err("route: at least one --backend is required".into());
+        }
+        let backends: Vec<Backend> = cfg
+            .backends
+            .iter()
+            .map(|addr| Backend {
+                addr: addr.clone(),
+                label: addr.to_string(),
+                alive: AtomicBool::new(true),
+                in_ring: AtomicBool::new(true),
+                admin: Mutex::new(WireClient::new(
+                    addr.clone(),
+                    cfg.client.clone(),
+                )),
+            })
+            .collect();
+        let obs = Arc::new(Registry::new());
+        let mut timers = BTreeMap::new();
+        for op in ROUTE_OPS {
+            timers.insert(op, obs.histogram(&format!("route.{op}")));
+        }
+        let retries = obs.counter("route.retries");
+        let err_backend = obs.counter("route.err_backend");
+        let err_no_backend = obs.counter("route.err_no_backend");
+        let migrations = obs.counter("route.migrations");
+        Ok(Router {
+            ring: HashRing::new(backends.len(), cfg.vnodes),
+            backends,
+            client_cfg: cfg.client,
+            table: RwLock::new(HashMap::new()),
+            gates: Mutex::new(HashMap::new()),
+            placements: AtomicU64::new(0),
+            obs,
+            timers,
+            retries,
+            err_backend,
+            err_no_backend,
+            migrations,
+        })
+    }
+
+    /// The router's telemetry registry (`route.*` histograms/counters).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    pub fn n_backends(&self) -> usize {
+        self.backends.len()
+    }
+
+    /// Known placements (diagnostics/tests).
+    pub fn placement_of(&self, id: u64) -> Option<usize> {
+        rlock(&self.table).get(&id).copied()
+    }
+
+    fn alive(&self, b: usize) -> bool {
+        self.backends[b].alive.load(Ordering::Relaxed)
+    }
+
+    fn routable(&self, b: usize) -> bool {
+        self.alive(b) && self.backends[b].in_ring.load(Ordering::Relaxed)
+    }
+
+    fn set_alive(&self, b: usize, now: bool) {
+        let was = self.backends[b].alive.swap(now, Ordering::Relaxed);
+        if now && !was {
+            // dead→alive: the process restarted (its boot scan owns the
+            // parked sessions again) — rejoin the ring
+            self.backends[b].in_ring.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Resolve a backend label (`tcp://...` / `unix://...`) to its index.
+    fn backend_index(&self, label: &str) -> Option<usize> {
+        self.backends.iter().position(|b| b.label == label)
+    }
+
+    fn gate(&self, id: u64) -> Arc<RwLock<()>> {
+        let mut gates = mlock(&self.gates);
+        Arc::clone(
+            gates
+                .entry(id)
+                .or_insert_with(|| Arc::new(RwLock::new(()))),
+        )
+    }
+
+    fn forget(&self, id: u64) {
+        wlock(&self.table).remove(&id);
+        mlock(&self.gates).remove(&id);
+    }
+
+    /// Ring home among placeable members, spilling to merely-alive ones
+    /// when everything is drained.
+    fn ring_home(&self, key: u64) -> Option<usize> {
+        self.ring
+            .home(key, |b| self.routable(b))
+            .or_else(|| self.ring.home(key, |b| self.alive(b)))
+    }
+
+    fn client<'a>(
+        &self,
+        conns: &'a mut HashMap<usize, WireClient>,
+        b: usize,
+    ) -> &'a mut WireClient {
+        conns.entry(b).or_insert_with(|| {
+            WireClient::new(
+                self.backends[b].addr.clone(),
+                self.client_cfg.clone(),
+            )
+        })
+    }
+
+    /// Forward one raw line to backend `b`. `idempotent` ops may be
+    /// replayed on a fresh connection; mutating ops never are.
+    fn forward(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        b: usize,
+        raw: &str,
+        idempotent: bool,
+    ) -> Result<String, ForwardErr> {
+        let client = self.client(conns, b);
+        let res = if idempotent {
+            client.request_line_idempotent(raw)
+        } else {
+            client.request_line(raw)
+        };
+        match res {
+            Ok(reply) => {
+                self.set_alive(b, true);
+                Ok(reply)
+            }
+            Err(e) => {
+                self.err_backend.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "backend {} is unreachable: {e}",
+                    self.backends[b].label
+                );
+                match e {
+                    ClientError::Connect(_) => {
+                        self.set_alive(b, false);
+                        Err(ForwardErr::NotSent(msg))
+                    }
+                    // an idempotent op that still failed after the
+                    // client's internal replay sent nothing *effectful*
+                    ClientError::Io(_) if idempotent => {
+                        Err(ForwardErr::NotSent(msg))
+                    }
+                    ClientError::Io(_) | ClientError::Protocol(_) => {
+                        Err(ForwardErr::Broken(msg))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Does this reply say "that session does not live here"?
+    fn is_no_session(reply: &str) -> bool {
+        match Json::parse(reply) {
+            Ok(v) => {
+                v.get("ok") == Some(&Json::Bool(false))
+                    && v.get("error")
+                        .and_then(|e| e.as_str())
+                        .is_some_and(|m| m.contains("no session"))
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Every live backend, `first` first — the candidate order for
+    /// placement and probing.
+    fn candidates(&self, first: usize) -> Vec<usize> {
+        let mut order = vec![first];
+        order.extend(
+            (0..self.backends.len())
+                .filter(|&b| b != first && self.alive(b)),
+        );
+        order
+    }
+
+    /// Route an id-addressed op: table-pinned → exactly that backend;
+    /// otherwise ring home with locate-and-cache probing on "no session".
+    fn route_id(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        id: u64,
+        raw: &str,
+        idempotent: bool,
+    ) -> String {
+        let gate = self.gate(id);
+        let _shared = rlock(&gate);
+        if let Some(&b) = rlock(&self.table).get(&id) {
+            // the session's state is THERE; a dead pin must fail loudly,
+            // not silently re-route onto a backend without the state
+            return match self.forward(conns, b, raw, idempotent) {
+                Ok(reply) => reply,
+                Err(e) => error_line(e.message()),
+            };
+        }
+        let Some(home) = self.ring_home(id) else {
+            self.err_no_backend.fetch_add(1, Ordering::Relaxed);
+            return error_line("route: no live backend");
+        };
+        let mut home_reply: Option<String> = None;
+        let mut last_err: Option<String> = None;
+        for (i, b) in self.candidates(home).into_iter().enumerate() {
+            if i > 0 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            match self.forward(conns, b, raw, idempotent) {
+                Ok(reply) => {
+                    if Self::is_no_session(&reply) {
+                        // not here — keep probing; remember the home's
+                        // exact reply for the nowhere case
+                        home_reply.get_or_insert(reply);
+                        continue;
+                    }
+                    wlock(&self.table).insert(id, b);
+                    return reply;
+                }
+                Err(ForwardErr::NotSent(m)) => {
+                    last_err = Some(m);
+                    continue;
+                }
+                Err(ForwardErr::Broken(m)) => return error_line(m),
+            }
+        }
+        // nowhere: the home's own "no session" reply is what a direct
+        // single-backend run would have said, byte for byte
+        home_reply.unwrap_or_else(|| {
+            error_line(last_err.unwrap_or_else(|| {
+                self.err_no_backend.fetch_add(1, Ordering::Relaxed);
+                "route: no live backend".to_string()
+            }))
+        })
+    }
+
+    /// Place a fresh `open`/mint-id `restore` by ring over the placement
+    /// counter; record the minted id.
+    fn route_open(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        raw: &str,
+    ) -> String {
+        let key = self.placements.fetch_add(1, Ordering::Relaxed);
+        let Some(first) = self.ring_home(key) else {
+            self.err_no_backend.fetch_add(1, Ordering::Relaxed);
+            return error_line("route: no live backend");
+        };
+        let mut last_err: Option<String> = None;
+        for (i, b) in self.candidates(first).into_iter().enumerate() {
+            if i > 0 {
+                self.retries.fetch_add(1, Ordering::Relaxed);
+            }
+            match self.forward(conns, b, raw, false) {
+                Ok(reply) => {
+                    if let Ok(v) = Json::parse(&reply) {
+                        if v.get("ok") == Some(&Json::Bool(true)) {
+                            if let Some(id) =
+                                v.get("id").and_then(|id| id.as_f64())
+                            {
+                                wlock(&self.table).insert(id as u64, b);
+                            }
+                        }
+                    }
+                    return reply;
+                }
+                Err(ForwardErr::NotSent(m)) => {
+                    last_err = Some(m);
+                    continue;
+                }
+                Err(ForwardErr::Broken(m)) => return error_line(m),
+            }
+        }
+        error_line(last_err.unwrap_or_else(|| "route: no live backend".into()))
+    }
+
+    /// `step_batch`: all items on one backend → forward the raw line
+    /// (bit-transparent); otherwise split per backend and re-merge via
+    /// the backend's own serializer.
+    fn route_step_batch(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        items: &[StepItem],
+        raw: &str,
+    ) -> String {
+        // hold every touched id's gate, in sorted unique order (same
+        // global order as any concurrent batch — no lock cycles; a
+        // handoff holds exactly one gate, so no cycle there either)
+        let mut ids: Vec<u64> = items.iter().map(|it| it.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let gates: Vec<Arc<RwLock<()>>> =
+            ids.iter().map(|&id| self.gate(id)).collect();
+        let _shared: Vec<_> = gates.iter().map(|g| rlock(g)).collect();
+
+        let mut by_backend: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        let mut unroutable: Vec<usize> = Vec::new();
+        {
+            let table = rlock(&self.table);
+            for (i, it) in items.iter().enumerate() {
+                let b = table
+                    .get(&it.id)
+                    .copied()
+                    .or_else(|| self.ring_home(it.id));
+                match b {
+                    Some(b) => by_backend.entry(b).or_default().push(i),
+                    None => unroutable.push(i),
+                }
+            }
+        }
+        if by_backend.len() == 1 && unroutable.is_empty() {
+            let (&b, _) = by_backend.iter().next().expect("one entry");
+            return match self.forward(conns, b, raw, false) {
+                Ok(reply) => reply,
+                Err(e) => error_line(e.message()),
+            };
+        }
+        if !unroutable.is_empty() {
+            self.err_no_backend.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut ys: Vec<Result<f32, String>> =
+            vec![Err("route: no live backend".to_string()); items.len()];
+        for (b, idxs) in by_backend {
+            let sub = Json::obj(vec![
+                ("op", Json::Str("step_batch".to_string())),
+                (
+                    "ids",
+                    Json::Arr(
+                        idxs.iter()
+                            .map(|&i| Json::Num(items[i].id as f64))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "xs",
+                    Json::Arr(
+                        idxs.iter().map(|&i| Json::arr_f32(&items[i].x)).collect(),
+                    ),
+                ),
+                (
+                    "cs",
+                    Json::Arr(
+                        idxs.iter()
+                            .map(|&i| Json::Num(items[i].c as f64))
+                            .collect(),
+                    ),
+                ),
+            ])
+            .dump();
+            match self.forward(conns, b, &sub, false) {
+                Ok(reply) => {
+                    let (sub_ys, sub_errs) = parse_batch_reply(&reply);
+                    for (slot, &i) in idxs.iter().enumerate() {
+                        ys[i] = match sub_ys.get(slot) {
+                            Some(Some(y)) => Ok(*y),
+                            Some(None) => {
+                                Err(sub_errs.get(&slot).cloned().unwrap_or_else(
+                                    || "step failed".to_string(),
+                                ))
+                            }
+                            None => Err(format!(
+                                "backend {} returned a short batch",
+                                self.backends[b].label
+                            )),
+                        };
+                    }
+                }
+                Err(e) => {
+                    let msg = e.message();
+                    for &i in &idxs {
+                        ys[i] = Err(msg.clone());
+                    }
+                }
+            }
+        }
+        Response::SteppedMany { ys }.to_json().dump()
+    }
+
+    /// Live-migrate one session (gate held exclusively): snapshot on the
+    /// source, restore under the *same id* on the destination, close the
+    /// source copy only after the destination acked. Returns
+    /// `(source, destination)`.
+    fn handoff(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        id: u64,
+        want: Option<usize>,
+    ) -> Result<(usize, usize), String> {
+        let gate = self.gate(id);
+        let _exclusive = wlock(&gate);
+        // locate the source: table pin first, else probe a snapshot out
+        // of every live backend
+        let pinned = rlock(&self.table).get(&id).copied();
+        let order: Vec<usize> = match pinned {
+            Some(b) => vec![b],
+            None => (0..self.backends.len())
+                .filter(|&b| self.alive(b))
+                .collect(),
+        };
+        let mut state: Option<(usize, Json)> = None;
+        let mut last = format!("handoff: no backend has session {id}");
+        for b in order {
+            match self.client(conns, b).snapshot(id) {
+                Ok(s) => {
+                    state = Some((b, s));
+                    break;
+                }
+                Err(e) => {
+                    if e.is_connect() {
+                        self.set_alive(b, false);
+                    }
+                    last = format!("handoff: {e}");
+                }
+            }
+        }
+        let Some((source, state)) = state else {
+            return Err(last);
+        };
+        let dest = match want {
+            Some(d) => d,
+            None => self
+                .ring
+                .home(id, |b| b != source && self.routable(b))
+                .or_else(|| {
+                    (0..self.backends.len())
+                        .find(|&b| b != source && self.alive(b))
+                })
+                .ok_or_else(|| {
+                    format!(
+                        "handoff: no live destination besides {}",
+                        self.backends[source].label
+                    )
+                })?,
+        };
+        if dest == source {
+            wlock(&self.table).insert(id, source);
+            return Ok((source, source));
+        }
+        // copy-to-destination BEFORE delete-on-source: a crash in the
+        // gap leaves a shadowed duplicate, never a lost session
+        self.client(conns, dest)
+            .restore(&state, Some(id))
+            .map_err(|e| {
+                if e.is_connect() {
+                    self.set_alive(dest, false);
+                }
+                format!(
+                    "handoff: restore on {}: {e}",
+                    self.backends[dest].label
+                )
+            })?;
+        wlock(&self.table).insert(id, dest);
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        // the destination owns the id now; a failed source close only
+        // leaves a stale shadowed copy behind
+        if self.client(conns, source).close(id).is_err() {
+            self.err_backend.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok((source, dest))
+    }
+
+    fn handoff_reply(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        v: &Json,
+    ) -> String {
+        let Some(id) = wire_id(v) else {
+            return error_line("handoff: missing or invalid 'id'");
+        };
+        let want = match v.get("to").and_then(|t| t.as_str()) {
+            None => None,
+            Some(label) => match self.backend_index(label) {
+                Some(b) => Some(b),
+                None => {
+                    return error_line(format!(
+                        "handoff: unknown backend '{label}'"
+                    ))
+                }
+            },
+        };
+        match self.handoff(conns, id, want) {
+            Ok((source, dest)) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+                ("from", Json::Str(self.backends[source].label.clone())),
+                ("to", Json::Str(self.backends[dest].label.clone())),
+            ])
+            .dump(),
+            Err(e) => error_line(e),
+        }
+    }
+
+    /// Migrate every table-known session off a backend and take it out
+    /// of the ring (rolling-restart prep). Sessions the router has never
+    /// routed are untouched — they surface later via locate-and-cache.
+    fn drain_reply(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        v: &Json,
+    ) -> String {
+        let Some(label) = v.get("backend").and_then(|b| b.as_str()) else {
+            return error_line("drain: missing 'backend'");
+        };
+        let Some(victim) = self.backend_index(label) else {
+            return error_line(format!("drain: unknown backend '{label}'"));
+        };
+        self.backends[victim].in_ring.store(false, Ordering::Relaxed);
+        let ids: Vec<u64> = rlock(&self.table)
+            .iter()
+            .filter(|&(_, &b)| b == victim)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut moved = 0usize;
+        let mut errors: Vec<Json> = Vec::new();
+        for id in ids {
+            match self.handoff(conns, id, None) {
+                Ok(_) => moved += 1,
+                Err(e) => errors.push(Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("error", Json::Str(e)),
+                ])),
+            }
+        }
+        let mut fields = vec![
+            ("ok", Json::Bool(errors.is_empty())),
+            ("backend", Json::Str(label.to_string())),
+            ("moved", Json::Num(moved as f64)),
+        ];
+        if !errors.is_empty() {
+            fields.push(("errors", Json::Arr(errors)));
+        }
+        Json::obj(fields).dump()
+    }
+
+    /// Re-point every table entry at its current ring home (after a
+    /// membership change: a revived backend, a finished drain).
+    fn rebalance_reply(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+    ) -> String {
+        let entries: Vec<(u64, usize)> = rlock(&self.table)
+            .iter()
+            .map(|(&id, &b)| (id, b))
+            .collect();
+        let mut moved = 0usize;
+        let mut errors: Vec<Json> = Vec::new();
+        for (id, cur) in entries {
+            let Some(home) = self.ring.home(id, |b| self.routable(b)) else {
+                continue;
+            };
+            if home == cur {
+                continue;
+            }
+            match self.handoff(conns, id, Some(home)) {
+                Ok(_) => moved += 1,
+                Err(e) => errors.push(Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("error", Json::Str(e)),
+                ])),
+            }
+        }
+        let mut fields = vec![
+            ("ok", Json::Bool(errors.is_empty())),
+            ("moved", Json::Num(moved as f64)),
+        ];
+        if !errors.is_empty() {
+            fields.push(("errors", Json::Arr(errors)));
+        }
+        Json::obj(fields).dump()
+    }
+
+    /// Probe every backend's liveness once (the health thread's tick;
+    /// also runs inline for the `health` op). Uses the admin connections.
+    pub fn probe_all(&self) {
+        for (b, backend) in self.backends.iter().enumerate() {
+            let ok = mlock(&backend.admin).ping().is_ok();
+            self.set_alive(b, ok);
+        }
+    }
+
+    fn health_reply(&self) -> String {
+        self.probe_all();
+        let mut list: Vec<Json> = Vec::new();
+        for backend in &self.backends {
+            let alive = backend.alive.load(Ordering::Relaxed);
+            let mut fields = vec![
+                ("addr", Json::Str(backend.label.clone())),
+                ("alive", Json::Bool(alive)),
+                (
+                    "in_ring",
+                    Json::Bool(backend.in_ring.load(Ordering::Relaxed)),
+                ),
+            ];
+            if alive {
+                if let Ok(stats) = mlock(&backend.admin).stats() {
+                    for key in ["sessions", "resident", "parked", "steps"] {
+                        if let Some(v) = stats.get(key).and_then(|v| v.as_f64())
+                        {
+                            fields.push((key, Json::Num(v)));
+                        }
+                    }
+                }
+            }
+            list.push(Json::obj(fields));
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("backends", Json::Arr(list)),
+            ("table", Json::Num(rlock(&self.table).len() as f64)),
+            (
+                "migrations",
+                Json::Num(self.migrations.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+        .dump()
+    }
+
+    /// Membership/topology summary attached to `stats` and `metrics`.
+    fn cluster_block(
+        &self,
+        per_backend: Option<&[Option<Json>]>,
+    ) -> Json {
+        let list: Vec<Json> = self
+            .backends
+            .iter()
+            .enumerate()
+            .map(|(i, backend)| {
+                let mut fields = vec![
+                    ("addr", Json::Str(backend.label.clone())),
+                    (
+                        "alive",
+                        Json::Bool(backend.alive.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "in_ring",
+                        Json::Bool(backend.in_ring.load(Ordering::Relaxed)),
+                    ),
+                ];
+                if let Some(stats) =
+                    per_backend.and_then(|s| s.get(i)).and_then(|s| s.as_ref())
+                {
+                    for key in ["sessions", "resident", "parked", "steps"] {
+                        if let Some(v) = stats.get(key).and_then(|v| v.as_f64())
+                        {
+                            fields.push((key, Json::Num(v)));
+                        }
+                    }
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("backends", Json::Arr(list)),
+            ("table", Json::Num(rlock(&self.table).len() as f64)),
+            (
+                "placements",
+                Json::Num(self.placements.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "migrations",
+                Json::Num(self.migrations.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// Aggregate `stats` across live backends + the `cluster` block.
+    fn stats_reply(&self, conns: &mut HashMap<usize, WireClient>) -> String {
+        let mut per_backend: Vec<Option<Json>> =
+            vec![None; self.backends.len()];
+        let mut sums: BTreeMap<&str, f64> = BTreeMap::new();
+        let mut kinds: BTreeMap<String, f64> = BTreeMap::new();
+        for b in 0..self.backends.len() {
+            if !self.alive(b) {
+                continue;
+            }
+            match self.client(conns, b).stats() {
+                Ok(stats) => {
+                    for key in [
+                        "sessions",
+                        "resident",
+                        "parked",
+                        "steps",
+                        "store_bytes",
+                        "evictions",
+                        "rehydrations",
+                    ] {
+                        if let Some(v) = stats.get(key).and_then(|v| v.as_f64())
+                        {
+                            *sums.entry(key).or_default() += v;
+                        }
+                    }
+                    if let Some(ks) = stats.get("kinds").and_then(|k| k.as_obj())
+                    {
+                        for (k, n) in ks {
+                            if let Some(n) = n.as_f64() {
+                                *kinds.entry(k.clone()).or_default() += n;
+                            }
+                        }
+                    }
+                    per_backend[b] = Some(stats);
+                }
+                Err(e) => {
+                    if e.is_connect() {
+                        self.set_alive(b, false);
+                    }
+                    self.err_backend.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut fields = vec![("ok", Json::Bool(true))];
+        for key in [
+            "sessions",
+            "resident",
+            "parked",
+            "steps",
+            "store_bytes",
+            "evictions",
+            "rehydrations",
+        ] {
+            fields.push((key, Json::Num(*sums.get(key).unwrap_or(&0.0))));
+        }
+        fields.push((
+            "kinds",
+            Json::Obj(
+                kinds.into_iter().map(|(k, n)| (k, Json::Num(n))).collect(),
+            ),
+        ));
+        fields.push(("cluster", self.cluster_block(Some(&per_backend))));
+        Json::obj(fields).dump()
+    }
+
+    /// The router's own registry (one consistent snapshot, `route.*`
+    /// under `histograms`) + the `cluster` block.
+    fn metrics_reply(&self) -> String {
+        match self.obs.snapshot().to_json() {
+            Json::Obj(mut fields) => {
+                fields.insert("ok".to_string(), Json::Bool(true));
+                fields.insert("cluster".to_string(), self.cluster_block(None));
+                Json::Obj(fields).dump()
+            }
+            other => other.dump(),
+        }
+    }
+
+    fn timer(&self, op: &str) -> Option<&Arc<Histogram>> {
+        self.timers.get(op)
+    }
+
+    /// Handle one raw request line against the cluster. `conns` is the
+    /// calling connection's private map of backend sockets (keeps
+    /// per-client ordering on each backend without any global lock).
+    pub fn handle_line(
+        &self,
+        line: &str,
+        conns: &mut HashMap<usize, WireClient>,
+    ) -> String {
+        let t0 = Instant::now();
+        let (name, reply) = self.dispatch(line, conns);
+        if let Some(h) = self.timer(name) {
+            h.record_duration(t0.elapsed());
+        }
+        reply
+    }
+
+    fn dispatch(
+        &self,
+        line: &str,
+        conns: &mut HashMap<usize, WireClient>,
+    ) -> (&'static str, String) {
+        let v = match Json::parse(line) {
+            // the exact bytes a backend would send for the same garbage
+            Err(e) => {
+                return ("step", error_line(format!("bad json: {e}")))
+            }
+            Ok(v) => v,
+        };
+        // router-tier ops first: they are not part of the backend
+        // protocol (a backend would reject them as unknown)
+        match v.get("op").and_then(|o| o.as_str()) {
+            Some("health") => return ("health", self.health_reply()),
+            Some("handoff") => {
+                return ("handoff", self.handoff_reply(conns, &v))
+            }
+            Some("drain") => return ("drain", self.drain_reply(conns, &v)),
+            Some("rebalance") => {
+                return ("rebalance", self.rebalance_reply(conns))
+            }
+            _ => {}
+        }
+        let op = match parse_wire_op(&v) {
+            Err(e) => return ("step", error_line(e)),
+            Ok(op) => op,
+        };
+        match op {
+            // same bytes as the backend's inline pong
+            WireOp::Ping => (
+                "ping",
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("pong", Json::Bool(true)),
+                ])
+                .dump(),
+            ),
+            WireOp::Open(_) => ("open", self.route_open(conns, line)),
+            WireOp::Restore { id: None, .. } => {
+                ("restore", self.route_open(conns, line))
+            }
+            WireOp::Restore { id: Some(id), .. } => {
+                ("restore", self.route_id(conns, id, line, false))
+            }
+            WireOp::Step { id, .. } => {
+                ("step", self.route_id(conns, id, line, false))
+            }
+            WireOp::Predict { id, .. } => {
+                ("predict", self.route_id(conns, id, line, true))
+            }
+            WireOp::Snapshot { id } => {
+                ("snapshot", self.route_id(conns, id, line, true))
+            }
+            WireOp::Park { id } => {
+                ("park", self.route_id(conns, id, line, false))
+            }
+            WireOp::Warm { id } => {
+                ("warm", self.route_id(conns, id, line, false))
+            }
+            WireOp::Close { id } => {
+                let reply = self.route_id(conns, id, line, false);
+                if let Ok(v) = Json::parse(&reply) {
+                    if v.get("ok") == Some(&Json::Bool(true)) {
+                        self.forget(id);
+                    }
+                }
+                ("close", reply)
+            }
+            WireOp::StepBatch(items) => (
+                "step_batch",
+                self.route_step_batch(conns, &items, line),
+            ),
+            WireOp::Stats => ("stats", self.stats_reply(conns)),
+            WireOp::Metrics => ("metrics", self.metrics_reply()),
+        }
+    }
+}
+
+/// Strict wire id (mirrors the protocol's rule: non-negative integer).
+fn wire_id(v: &Json) -> Option<u64> {
+    match v.get("id").and_then(|id| id.as_f64()) {
+        Some(f) if f >= 0.0 && f.fract() == 0.0 && f < u64::MAX as f64 => {
+            Some(f as u64)
+        }
+        _ => None,
+    }
+}
+
+/// Decode one backend `step_batch` reply: per-slot `Some(y)`/`None`,
+/// plus the per-slot error messages.
+fn parse_batch_reply(reply: &str) -> (Vec<Option<f32>>, BTreeMap<usize, String>) {
+    let mut errs = BTreeMap::new();
+    let Ok(v) = Json::parse(reply) else {
+        return (Vec::new(), errs);
+    };
+    if let Some(list) = v.get("errors").and_then(|e| e.as_arr()) {
+        for entry in list {
+            if let (Some(i), Some(msg)) = (
+                entry.get("index").and_then(|i| i.as_usize()),
+                entry.get("error").and_then(|m| m.as_str()),
+            ) {
+                errs.insert(i, msg.to_string());
+            }
+        }
+    }
+    let ys = v
+        .get("ys")
+        .and_then(|y| y.as_arr())
+        .map(|arr| arr.iter().map(|y| y.as_f64().map(|y| y as f32)).collect())
+        .unwrap_or_default();
+    (ys, errs)
+}
+
+/// The `ccn route` front end: accept loop + health thread around a
+/// shared [`Router`]. One synchronous thread per client connection
+/// (read → route → write), reusing the serve transport's stream/liner
+/// machinery — including the unix socket path lock.
+pub struct RouterServer {
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+    health_join: Option<JoinHandle<()>>,
+    conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    local: String,
+    unix_path: Option<PathBuf>,
+    sock_lock: Option<SocketLock>,
+}
+
+impl RouterServer {
+    pub fn bind(
+        cfg: RouterConfig,
+        listen: &ListenAddr,
+    ) -> Result<RouterServer, String> {
+        let max_conns = cfg.max_conns;
+        let health_interval = cfg.health_interval;
+        let router = Arc::new(Router::new(cfg)?);
+        let (listener, local, sock_lock) = Listener::bind(listen)?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("route: set nonblocking: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conn_joins = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+        let read_hist = router.obs.histogram("stage.transport_read");
+        let accept_join = {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            let conn_joins = Arc::clone(&conn_joins);
+            std::thread::spawn(move || {
+                run_accept(
+                    listener, router, stop, conn_joins, active, max_conns,
+                    read_hist,
+                )
+            })
+        };
+        let health_join = {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                // probe immediately so dead-at-boot backends leave the
+                // ring before the first client op
+                while !stop.load(Ordering::Relaxed) {
+                    router.probe_all();
+                    let mut slept = Duration::ZERO;
+                    while slept < health_interval
+                        && !stop.load(Ordering::Relaxed)
+                    {
+                        std::thread::sleep(POLL_INTERVAL);
+                        slept += POLL_INTERVAL;
+                    }
+                }
+            })
+        };
+        Ok(RouterServer {
+            router,
+            stop,
+            accept_join: Some(accept_join),
+            health_join: Some(health_join),
+            conn_joins,
+            local,
+            unix_path: match listen {
+                ListenAddr::Unix(p) => Some(p.clone()),
+                ListenAddr::Tcp(_) => None,
+            },
+            sock_lock,
+        })
+    }
+
+    /// The bound endpoint (real port when 0 was requested).
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// The routing core (tests/diagnostics drive it directly).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Stop accepting, join every thread, remove the unix socket + lock.
+    pub fn shutdown(mut self) -> Result<(), String> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+        if let Some(join) = self.health_join.take() {
+            let _ = join.join();
+        }
+        let joins: Vec<JoinHandle<()>> = match self.conn_joins.lock() {
+            Ok(mut j) => std::mem::take(&mut *j),
+            Err(_) => Vec::new(),
+        };
+        for join in joins {
+            let _ = join.join();
+        }
+        if let Some(path) = &self.unix_path {
+            let _ = std::fs::remove_file(path);
+        }
+        drop(self.sock_lock.take());
+        Ok(())
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_accept(
+    listener: Listener,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    active: Arc<AtomicUsize>,
+    max_conns: usize,
+    read_hist: Arc<Histogram>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        let stream = match listener.accept() {
+            Ok(s) => s,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                std::thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                std::thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+        };
+        let _ = stream.set_nonblocking(false);
+        if max_conns > 0 && active.load(Ordering::Relaxed) >= max_conns {
+            let mut s = stream;
+            let _ = s.set_write_timeout(Some(WRITE_TIMEOUT));
+            let reply =
+                error_line(format!("server is at --max-conns ({max_conns})"));
+            let _ = writeln!(s, "{reply}");
+            let _ = s.flush();
+            s.shutdown();
+            continue;
+        }
+        active.fetch_add(1, Ordering::Relaxed);
+        let join = {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            let active = Arc::clone(&active);
+            let read_hist = Arc::clone(&read_hist);
+            std::thread::spawn(move || {
+                run_conn(stream, router, stop, read_hist);
+                active.fetch_sub(1, Ordering::Relaxed);
+            })
+        };
+        if let Ok(mut joins) = conn_joins.lock() {
+            joins.retain(|j| !j.is_finished());
+            joins.push(join);
+        }
+    }
+}
+
+/// One synchronous client connection: read a line, route it, write the
+/// reply. The per-connection backend socket map lives here, so requests
+/// from one client stay ordered on every backend they touch.
+fn run_conn(
+    stream: Stream,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    read_hist: Arc<Histogram>,
+) {
+    let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            stream.shutdown();
+            return;
+        }
+    };
+    let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut reader = BufReader::new(stream);
+    let mut out = BufWriter::new(write_half);
+    let mut conns: HashMap<usize, WireClient> = HashMap::new();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        buf.clear();
+        let reply = match read_line_bytes(
+            &mut reader,
+            &mut buf,
+            &stop,
+            MAX_LINE_BYTES,
+            &read_hist,
+        ) {
+            Ok(LineRead::Line) => match std::str::from_utf8(&buf) {
+                Err(_) => error_line("request line is not valid utf-8"),
+                Ok(text) => {
+                    let line = text.trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    router.handle_line(line, &mut conns)
+                }
+            },
+            Ok(LineRead::TooLong) => error_line(format!(
+                "request line exceeds {MAX_LINE_BYTES} bytes"
+            )),
+            Ok(LineRead::Eof) | Err(_) => break,
+        };
+        if writeln!(out, "{reply}").and_then(|()| out.flush()).is_err() {
+            break;
+        }
+    }
+    if let Ok(inner) = out.into_inner() {
+        inner.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Server, Service};
+
+    fn fast_cfg(backends: Vec<ListenAddr>) -> RouterConfig {
+        let mut cfg = RouterConfig::new(backends);
+        cfg.client = ClientConfig {
+            connect_timeout: Duration::from_millis(250),
+            retries: 0,
+            backoff: Duration::from_millis(1),
+            ..ClientConfig::default()
+        };
+        cfg.health_interval = Duration::from_millis(100);
+        cfg
+    }
+
+    fn backend(shards: usize) -> (Server, ListenAddr) {
+        let server = Server::bind(
+            Service::new(shards),
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let addr = ListenAddr::parse(server.local_addr()).unwrap();
+        (server, addr)
+    }
+
+    #[test]
+    fn single_backend_routing_is_byte_transparent() {
+        let (server, addr) = backend(2);
+        let router = Router::new(fast_cfg(vec![addr.clone()])).unwrap();
+        let mut conns = HashMap::new();
+        let mut direct =
+            WireClient::new(addr, ClientConfig::default());
+        // deterministic request sequence, including error paths
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":3,"seed":5}"#;
+        let via_router = router.handle_line(open, &mut conns);
+        // the direct twin runs on a twin service; to compare bytes we
+        // replay the SAME session through both paths on the one backend:
+        // every reply the router returns must equal a raw client's
+        let seq = [
+            r#"{"op":"step","id":1,"x":[0.5,-0.25,0.125],"c":0.5}"#,
+            r#"{"op":"predict","id":1,"x":[0.5,-0.25,0.125]}"#,
+            r#"{"op":"snapshot","id":1}"#,
+            r#"{"op":"step","id":77,"x":[0.1],"c":0.0}"#, // ghost id
+            r#"{"op":"nonsense"}"#,                       // unknown op
+            r#"{not json"#,                               // parse error
+            r#"{"op":"ping"}"#,
+        ];
+        assert!(via_router.contains(r#""id":1"#), "{via_router}");
+        for line in seq {
+            let via = router.handle_line(line, &mut conns);
+            let raw = match direct.request_line(line) {
+                Ok(r) => r,
+                // raw parse errors close nothing; client stays usable
+                Err(e) => panic!("direct send failed: {e}"),
+            };
+            assert_eq!(via, raw, "router not transparent for {line}");
+        }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn handoff_moves_a_live_session_and_steps_continue() {
+        let (s1, a1) = backend(1);
+        let (s2, a2) = backend(1);
+        let router =
+            Router::new(fast_cfg(vec![a1.clone(), a2.clone()])).unwrap();
+        let mut conns = HashMap::new();
+        // both backends mint disjoint ids in a real deployment; here we
+        // only need one session, opened via the router
+        let open =
+            r#"{"op":"open","learner":"ccn:4:2:1000","n_inputs":3,"seed":9}"#;
+        let reply = router.handle_line(open, &mut conns);
+        let id = Json::parse(&reply)
+            .unwrap()
+            .get("id")
+            .and_then(|i| i.as_f64())
+            .unwrap() as u64;
+        let source = router.placement_of(id).unwrap();
+        let dest = 1 - source;
+        let step = format!(
+            r#"{{"op":"step","id":{id},"x":[0.2,0.1,-0.3],"c":0.25}}"#
+        );
+        let y1 = router.handle_line(&step, &mut conns);
+        assert!(y1.contains(r#""ok":true"#), "{y1}");
+        let handoff = format!(
+            r#"{{"op":"handoff","id":{id},"to":"{}"}}"#,
+            router.backends[dest].label
+        );
+        let moved = router.handle_line(&handoff, &mut conns);
+        assert!(moved.contains(r#""ok":true"#), "{moved}");
+        assert_eq!(router.placement_of(id), Some(dest));
+        let y2 = router.handle_line(&step, &mut conns);
+        assert!(y2.contains(r#""ok":true"#), "{y2}");
+        // the source no longer owns the id
+        let mut direct = WireClient::new(
+            if source == 0 { a1 } else { a2 },
+            ClientConfig::default(),
+        );
+        let on_source = direct.request_line(&step).unwrap();
+        assert!(on_source.contains("no session"), "{on_source}");
+        // health + stats carry the cluster view
+        let health = router.handle_line(r#"{"op":"health"}"#, &mut conns);
+        assert!(health.contains(r#""ok":true"#), "{health}");
+        let stats = router.handle_line(r#"{"op":"stats"}"#, &mut conns);
+        let v = Json::parse(&stats).unwrap();
+        assert!(v.get("cluster").is_some(), "{stats}");
+        assert_eq!(
+            v.get("sessions").and_then(|s| s.as_f64()),
+            Some(1.0),
+            "exactly the migrated session remains: {stats}"
+        );
+        s1.shutdown().unwrap();
+        s2.shutdown().unwrap();
+    }
+}

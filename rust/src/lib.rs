@@ -20,6 +20,10 @@
 //!   JAX/Pallas-authored AOT artifacts (`artifacts/*.hlo.txt`) from Rust;
 //!   numerically cross-checked against the native path. Off by default
 //!   because the `xla` crate is unavailable in the offline toolchain.
+//! - [`cluster`]: the horizontal tier — `ccn route` consistent-hash
+//!   routes session ids over N backend `ccn serve` processes, with live
+//!   store-backed session migration (`handoff`/`drain`/`rebalance`),
+//!   health-checked membership, and a reusable JSONL wire client.
 //! - [`obs`]: zero-dependency telemetry — per-op latency histograms,
 //!   stage timers, named counters, and the optional JSONL trace log
 //!   (`ccn serve --trace-file`), surfaced via the `metrics` wire op.
@@ -28,6 +32,7 @@
 //! - [`compute`]: the paper's Appendix-A operation-count budget equations.
 //! - [`util`], [`metrics`], [`config`]: offline-friendly substrates.
 
+pub mod cluster;
 pub mod compute;
 pub mod config;
 pub mod coordinator;

@@ -5,6 +5,8 @@
 //!   sweep        run a learner over several seeds in parallel
 //!   serve        multi-session online prediction service (JSONL on
 //!                stdin/stdout; see the serve module docs)
+//!   route        consistent-hash router over N `ccn serve` backends with
+//!                live session migration (see the cluster module docs)
 //!   print-config show the Table-1 default configuration as JSON
 //!   list-envs    list available prediction streams
 //!   pjrt-verify  load AOT artifacts via PJRT and check the golden fixture
@@ -23,6 +25,7 @@ use ccn_rtrl::nets::NetRegistry;
 use ccn_rtrl::obs::TraceConfig;
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
+use ccn_rtrl::cluster::{RouterConfig, RouterServer};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::cli::Args;
@@ -123,6 +126,41 @@ fn cmd_sweep(mut args: Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Park until stdin reaches EOF — Ctrl-D in the foreground, or the
+/// parent closing the pipe, is the graceful-shutdown signal for the
+/// listener subcommands; console input is otherwise ignored (the
+/// protocol runs on the sockets). When stdin is *already* closed at
+/// startup (daemonized: `ccn serve --listen ... < /dev/null &`, a
+/// service manager, etc.) there is no shutdown channel: serve until
+/// killed. A kill is the crash path — parked state survives, resident
+/// state does not.
+fn wait_for_stdin_eof() {
+    fn park_forever() -> ! {
+        eprintln!(
+            "stdin is closed or unreadable: serving until killed (no \
+             graceful shutdown channel; only parked sessions survive a kill)"
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    let mut stdin = std::io::stdin().lock();
+    let mut scratch = [0u8; 4096];
+    let mut first_read = true;
+    loop {
+        match stdin.read(&mut scratch) {
+            Ok(0) if first_read => park_forever(),
+            Ok(0) => break,
+            Ok(_) => first_read = false,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            // an unreadable stdin at startup (fd 0 closed by a
+            // supervisor) is the daemonized case, not a shutdown request
+            Err(_) if first_read => park_forever(),
+            Err(_) => break,
+        }
+    }
+}
+
 fn cmd_serve(mut args: Args) -> Result<(), String> {
     let shards = args.usize_or("shards", sweep::default_threads());
     let store_dir = args.opt_str("store-dir");
@@ -131,7 +169,18 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let max_conns = args.usize_or("max-conns", 0);
     let trace_file = args.opt_str("trace-file");
     let trace_sample = args.opt_str("trace-sample");
+    let id_offset = args.u64_or("id-offset", 0);
+    let id_stride = args.u64_or("id-stride", 1);
     args.finish()?;
+    if id_stride == 0 {
+        return Err("--id-stride must be >= 1".into());
+    }
+    if id_offset >= id_stride {
+        return Err(format!(
+            "--id-offset must be < --id-stride (got offset {id_offset}, \
+             stride {id_stride}): each backend owns one residue class"
+        ));
+    }
     if resident_cap > 0 && store_dir.is_none() {
         return Err(
             "--resident-cap needs --store-dir: evicting a session without \
@@ -187,6 +236,10 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
         );
     }
     let mut service = Service::with_store(shards, store_cfg)?;
+    if (id_offset, id_stride) != (0, 1) {
+        service.set_id_scheme(id_offset, id_stride)?;
+        eprintln!("id scheme: offset {id_offset}, stride {id_stride}");
+    }
     if let Some(cfg) = &trace_cfg {
         service.set_trace(cfg)?;
         eprintln!(
@@ -228,42 +281,64 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
             max_conns.to_string()
         }
     );
-    // Park until stdin reaches EOF — Ctrl-D in the foreground, or the
-    // parent closing the pipe, is the graceful-shutdown signal; console
-    // input is otherwise ignored (the protocol runs on the sockets).
-    // When stdin is *already* closed at startup (daemonized:
-    // `ccn serve --listen ... < /dev/null &`, a service manager, etc.)
-    // there is no shutdown channel: serve until killed. A kill is the
-    // crash path — parked state survives, resident state does not.
-    fn park_forever() -> ! {
-        eprintln!(
-            "stdin is closed or unreadable: serving until killed (no \
-             graceful shutdown channel; only parked sessions survive a kill)"
-        );
-        loop {
-            std::thread::sleep(std::time::Duration::from_secs(3600));
-        }
-    }
-    let mut stdin = std::io::stdin().lock();
-    let mut scratch = [0u8; 4096];
-    let mut first_read = true;
-    loop {
-        match stdin.read(&mut scratch) {
-            Ok(0) if first_read => park_forever(),
-            Ok(0) => break,
-            Ok(_) => first_read = false,
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            // an unreadable stdin at startup (fd 0 closed by a
-            // supervisor) is the daemonized case, not a shutdown request
-            Err(_) if first_read => park_forever(),
-            Err(_) => break,
-        }
-    }
+    wait_for_stdin_eof();
     let flushed = server.shutdown()?;
     if flushed > 0 {
         eprintln!("flushed {flushed} session(s) to the store");
     }
     Ok(())
+}
+
+fn cmd_route(mut args: Args) -> Result<(), String> {
+    let listen = args
+        .opt_str("listen")
+        .ok_or("route: --listen tcp://HOST:PORT|unix://PATH is required")?;
+    let backends = args.opt_str_all("backend");
+    let max_conns = args.usize_or("max-conns", 0);
+    let health_interval_ms = args.u64_or("health-interval-ms", 500);
+    let connect_timeout_ms = args.u64_or("connect-timeout-ms", 1_000);
+    let request_timeout_ms = args.u64_or("request-timeout-ms", 10_000);
+    let retries = args.u64_or("retries", 2);
+    args.finish()?;
+    if backends.is_empty() {
+        return Err(
+            "route: at least one --backend tcp://HOST:PORT|unix://PATH is \
+             required (repeat the flag per backend)"
+                .into(),
+        );
+    }
+    let listen = ListenAddr::parse(&listen)?;
+    let backends = backends
+        .iter()
+        .map(|b| ListenAddr::parse(b))
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut cfg = RouterConfig::new(backends);
+    cfg.max_conns = max_conns;
+    cfg.health_interval = std::time::Duration::from_millis(health_interval_ms);
+    cfg.client.connect_timeout =
+        std::time::Duration::from_millis(connect_timeout_ms);
+    cfg.client.read_timeout =
+        std::time::Duration::from_millis(request_timeout_ms);
+    cfg.client.write_timeout =
+        std::time::Duration::from_millis(request_timeout_ms);
+    cfg.client.retries = retries.min(u32::MAX as u64) as u32;
+    let n = cfg.backends.len();
+    let server = RouterServer::bind(cfg, &listen)?;
+    eprintln!(
+        "ccn route: consistent-hash routing over {n} backend(s); cluster \
+         ops: health|handoff|drain|rebalance (plus the full serve protocol)"
+    );
+    eprintln!(
+        "listening on {} ({} conns max); routing until stdin closes",
+        server.local_addr(),
+        if max_conns == 0 {
+            "unlimited".to_string()
+        } else {
+            max_conns.to_string()
+        }
+    );
+    wait_for_stdin_eof();
+    server.shutdown()
 }
 
 #[cfg(feature = "pjrt")]
@@ -365,6 +440,7 @@ fn main() {
         Some("run") => cmd_run(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
+        Some("route") => cmd_route(args),
         Some("print-config") => {
             println!("{}", ExperimentConfig::default().to_json().pretty());
             Ok(())
@@ -383,7 +459,7 @@ fn main() {
         Some("pjrt-bench") => cmd_pjrt_bench(args),
         _ => {
             eprintln!(
-                "usage: ccn <run|sweep|serve|print-config|list-envs|pjrt-verify|pjrt-bench> [options]\n\
+                "usage: ccn <run|sweep|serve|route|print-config|list-envs|pjrt-verify|pjrt-bench> [options]\n\
                  \n\
                  run options: --env <name> --learner <spec> --steps N --alpha A\n\
                    --lambda L --gamma G --eps E --seed S --out results/run.json\n\
@@ -402,7 +478,17 @@ fn main() {
                    many concurrent clients over TCP or a unix socket instead\n\
                    of stdio, until stdin closes. --trace-file appends one\n\
                    JSONL event per sampled op (1 in N, default every op) with\n\
-                   latency and stage breakdown)"
+                   latency and stage breakdown. --id-offset K --id-stride N\n\
+                   makes this backend mint only ids of residue class K mod N,\n\
+                   so a cluster's backends never collide)\n\
+                 route options: --listen tcp://HOST:PORT|unix://PATH\n\
+                   --backend ADDR (repeat per backend) --max-conns M\n\
+                   --health-interval-ms H --connect-timeout-ms C\n\
+                   --request-timeout-ms R --retries K\n\
+                   (consistent-hash routes session ids over the backends,\n\
+                   serving the full serve protocol transparently plus the\n\
+                   cluster ops health|handoff|drain|rebalance — live\n\
+                   store-backed session migration between backends)"
             );
             std::process::exit(2);
         }

@@ -60,7 +60,7 @@ use crate::util::json::Json;
 /// or stage that has never fired still appears with `count = 0`.
 pub mod names {
     /// Every wire op, index-aligned with `serve`'s op timer table.
-    pub const OPS: [&str; 11] = [
+    pub const OPS: [&str; 12] = [
         "open",
         "step",
         "step_batch",
@@ -72,6 +72,7 @@ pub mod names {
         "close",
         "stats",
         "metrics",
+        "ping",
     ];
 
     /// Internal stages a wire op decomposes into.

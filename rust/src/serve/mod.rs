@@ -74,12 +74,17 @@
 //! | `step_batch` | `{"op":"step_batch","ids":[1,2],"xs":[[...],[...]],"cs":[0,1]}` | `{"ok":true,"ys":[0.4,0.2]}` (failed items are `null`, detailed under `"errors"`) |
 //! | `predict` | `{"op":"predict","id":1,"x":[...]}` | `{"ok":true,"y":0.41}` (advances state, no learning) |
 //! | `snapshot` | `{"op":"snapshot","id":1}` | `{"ok":true,"state":{...}}` |
-//! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically) |
+//! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically). An explicit `"id":N` restores *as* that id — the cluster handoff hook ([`crate::cluster`]) |
 //! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
 //! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
 //! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p99_us":8.0},...}}` |
 //! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...}}` |
+//! | `ping` | `{"op":"ping"}` | `{"ok":true,"pong":true}` (liveness probe, answered inline — no shard round-trip) |
+//! | `health` | `{"op":"health"}` | router-tier only ([`crate::cluster`]): per-backend liveness + stats roll-up |
+//! | `handoff` | `{"op":"handoff","id":1,"to":"tcp://..."}` | router-tier only: live-migrate session 1 to another backend |
+//! | `drain` | `{"op":"drain","backend":"tcp://..."}` | router-tier only: migrate every routed session off a backend |
+//! | `rebalance` | `{"op":"rebalance"}` | router-tier only: re-point sessions to their consistent-hash homes |
 //!
 //! `open` accepts any registered kind: `columnar:D`,
 //! `constructive:TOTAL:STEPS_PER_STAGE`,
@@ -257,12 +262,13 @@ fn op_meta(op: &WireOp) -> (&'static str, usize, Option<u64>) {
         WireOp::StepBatch(_) => ("step_batch", 2, None),
         WireOp::Predict { id, .. } => ("predict", 3, Some(*id)),
         WireOp::Snapshot { id } => ("snapshot", 4, Some(*id)),
-        WireOp::Restore(_) => ("restore", 5, None),
+        WireOp::Restore { id, .. } => ("restore", 5, *id),
         WireOp::Park { id } => ("park", 6, Some(*id)),
         WireOp::Warm { id } => ("warm", 7, Some(*id)),
         WireOp::Close { id } => ("close", 8, Some(*id)),
         WireOp::Stats => ("stats", 9, None),
         WireOp::Metrics => ("metrics", 10, None),
+        WireOp::Ping => ("ping", 11, None),
     }
 }
 
@@ -304,6 +310,16 @@ impl Service {
     /// the transport layer).
     pub fn registry(&self) -> &Arc<Registry> {
         &self.obs
+    }
+
+    /// Partition the id space for multi-backend deployments (`ccn serve
+    /// --id-offset K --id-stride N`): this service mints ids `offset,
+    /// offset+stride, offset+2*stride, ...`, so N backends behind a
+    /// `ccn route` front end never collide on a session id. Call before
+    /// serving traffic; the defaults (0, 1) are the single-process
+    /// behavior, bit-identical to before.
+    pub fn set_id_scheme(&mut self, offset: u64, stride: u64) -> Result<(), String> {
+        self.pool.set_id_scheme(offset, stride)
     }
 
     /// Mount the structured trace log (`--trace-file`): every
@@ -366,7 +382,12 @@ impl Service {
             WireOp::Snapshot { id } => {
                 self.pool.call_traced(Request::Snapshot { id }, stages)
             }
-            WireOp::Restore(state) => self.pool.restore_traced(state, stages),
+            WireOp::Restore { state, id: None } => {
+                self.pool.restore_traced(state, stages)
+            }
+            WireOp::Restore { state, id: Some(id) } => {
+                self.pool.restore_at_traced(id, state, stages)
+            }
             WireOp::Park { id } => self.pool.call_traced(Request::Park { id }, stages),
             WireOp::Warm { id } => self.pool.call_traced(Request::Warm { id }, stages),
             WireOp::Close { id } => {
@@ -374,6 +395,15 @@ impl Service {
             }
             WireOp::Stats => return self.stats_reply(),
             WireOp::Metrics => return self.metrics_reply(),
+            // liveness probe: answered inline, no shard round-trip — a
+            // wedged shard must not make the server look dead to the
+            // router, and a healthy one must not pay a queue hop per ping
+            WireOp::Ping => {
+                return Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("pong", Json::Bool(true)),
+                ])
+            }
         };
         resp.to_json()
     }
@@ -547,12 +577,13 @@ mod tests {
             WireOp::StepBatch(vec![]),
             WireOp::Predict { id: 1, x: vec![] },
             WireOp::Snapshot { id: 1 },
-            WireOp::Restore(Json::Null),
+            WireOp::Restore { state: Json::Null, id: None },
             WireOp::Park { id: 1 },
             WireOp::Warm { id: 1 },
             WireOp::Close { id: 1 },
             WireOp::Stats,
             WireOp::Metrics,
+            WireOp::Ping,
         ];
         for op in &probes {
             let (name, idx, _) = op_meta(op);

@@ -217,12 +217,18 @@ pub enum WireOp {
     StepBatch(Vec<StepItem>),
     Predict { id: u64, x: Vec<f32> },
     Snapshot { id: u64 },
-    Restore(Json),
+    /// `id: None` mints a fresh id; `Some(id)` restores *as* that id —
+    /// the cluster handoff hook, so a session keeps its public id when
+    /// it moves between backends.
+    Restore { state: Json, id: Option<u64> },
     Park { id: u64 },
     Warm { id: u64 },
     Close { id: u64 },
     Stats,
     Metrics,
+    /// Liveness probe: answered inline by the service, no shard
+    /// round-trip (the cluster router health-checks with it).
+    Ping,
 }
 
 /// A session id must be a non-negative integer; anything else (strings,
@@ -362,17 +368,26 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
             x: get_obs(v, "x")?,
         }),
         "snapshot" => Ok(WireOp::Snapshot { id: get_id(v)? }),
-        "restore" => Ok(WireOp::Restore(
-            v.get("state").cloned().ok_or("restore: missing 'state'")?,
-        )),
+        "restore" => Ok(WireOp::Restore {
+            state: v.get("state").cloned().ok_or("restore: missing 'state'")?,
+            // optional explicit id (cluster handoff): present-but-bad
+            // ids are an error, never a silent fall-back to minting
+            id: match v.get("id") {
+                None => None,
+                Some(j) => {
+                    Some(id_value(j).map_err(|e| format!("restore: {e}"))?)
+                }
+            },
+        }),
         "park" => Ok(WireOp::Park { id: get_id(v)? }),
         "warm" => Ok(WireOp::Warm { id: get_id(v)? }),
         "close" => Ok(WireOp::Close { id: get_id(v)? }),
         "stats" => Ok(WireOp::Stats),
         "metrics" => Ok(WireOp::Metrics),
+        "ping" => Ok(WireOp::Ping),
         other => Err(format!(
             "unknown op '{other}' \
-             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats|metrics)"
+             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats|metrics|ping)"
         )),
     }
 }
@@ -483,6 +498,28 @@ mod tests {
         let err = parse(r#"{"op":"metricz"}"#).unwrap_err();
         assert!(err.contains("unknown op"));
         assert!(err.contains("metrics"));
+        assert!(err.contains("ping"));
+    }
+
+    #[test]
+    fn ping_parses() {
+        assert!(matches!(parse(r#"{"op":"ping"}"#), Ok(WireOp::Ping)));
+    }
+
+    #[test]
+    fn restore_parses_with_and_without_explicit_id() {
+        match parse(r#"{"op":"restore","state":{"v":2}}"#).unwrap() {
+            WireOp::Restore { id, .. } => assert_eq!(id, None),
+            other => panic!("wrong op {other:?}"),
+        }
+        match parse(r#"{"op":"restore","state":{"v":2},"id":9}"#).unwrap() {
+            WireOp::Restore { id, .. } => assert_eq!(id, Some(9)),
+            other => panic!("wrong op {other:?}"),
+        }
+        // a present-but-malformed id must error, not silently mint
+        assert!(parse(r#"{"op":"restore","state":{},"id":-3}"#).is_err());
+        assert!(parse(r#"{"op":"restore","state":{},"id":1.5}"#).is_err());
+        assert!(parse(r#"{"op":"restore","state":{},"id":"7"}"#).is_err());
     }
 
     #[test]

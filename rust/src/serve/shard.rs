@@ -781,6 +781,18 @@ enum Job {
     Shutdown,
 }
 
+/// Smallest member of the progression `offset, offset + stride, ...`
+/// that is `>= min`. `offset < stride` is a precondition (enforced by
+/// [`ShardPool::set_id_scheme`]).
+fn align_up(min: u64, offset: u64, stride: u64) -> u64 {
+    let rem = min % stride;
+    if offset >= rem {
+        min + (offset - rem)
+    } else {
+        min + stride + offset - rem
+    }
+}
+
 /// N shard worker threads plus the request router. The only shared state
 /// is the id allocator and the telemetry registry — sessions live
 /// entirely inside their shard.
@@ -788,6 +800,13 @@ pub struct ShardPool {
     txs: Vec<mpsc::Sender<Job>>,
     joins: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// Fresh ids are minted on the arithmetic progression
+    /// `id_offset, id_offset + id_stride, ...` (defaults `0, 1`, i.e.
+    /// every id). A cluster of independently-minting backends sets a
+    /// disjoint (offset, stride) per process (`ccn serve --id-offset K
+    /// --id-stride N`) so public ids never collide across the fleet.
+    id_stride: u64,
+    id_offset: u64,
     /// Durable id floor (store-backed pools only): an id is burned on
     /// disk before any client sees it, so a crash can never lead to a
     /// reused id — not even for sessions that were never parked.
@@ -885,9 +904,39 @@ impl ShardPool {
             txs,
             joins,
             next_id: AtomicU64::new(first_id),
+            id_stride: 1,
+            id_offset: 0,
             watermark,
             obs,
         })
+    }
+
+    /// Constrain fresh ids to the progression `offset, offset + stride,
+    /// ...` — the cluster tier gives each backend a disjoint residue
+    /// class so independently-minting processes never collide. Must be
+    /// called before any session exists; the default `(0, 1)` scheme is
+    /// bit-identical to a pool that never calls this.
+    pub fn set_id_scheme(
+        &mut self,
+        offset: u64,
+        stride: u64,
+    ) -> Result<(), String> {
+        if stride == 0 {
+            return Err("id scheme: stride must be >= 1".to_string());
+        }
+        if offset >= stride {
+            return Err(format!(
+                "id scheme: offset {offset} must be < stride {stride}"
+            ));
+        }
+        self.id_stride = stride;
+        self.id_offset = offset;
+        // Re-align the allocator cursor (which may sit above 1 after a
+        // boot scan) onto the progression without ever going below it.
+        let cur = self.next_id.load(Ordering::Relaxed);
+        self.next_id
+            .store(align_up(cur, offset, stride), Ordering::Relaxed);
+        Ok(())
     }
 
     /// The telemetry registry every shard worker records into.
@@ -1004,14 +1053,41 @@ impl ShardPool {
     }
 
     /// Allocate a fresh session id, durably burning it in the watermark
-    /// (store-backed pools) before anyone can see it.
+    /// (store-backed pools) before anyone can see it. Ids advance by
+    /// `id_stride` so a clustered pool mints only its own residue class.
     fn alloc_id(&self) -> Result<u64, String> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(self.id_stride, Ordering::Relaxed);
         if let Some(wm) = &self.watermark {
             wm.ensure_covers(id)
                 .map_err(|e| format!("id allocation: {e}"))?;
         }
         Ok(id)
+    }
+
+    /// An id minted *elsewhere* (a migrated-in session) is about to live
+    /// here: raise the allocator cursor past it — staying on this pool's
+    /// own progression — and burn it in the watermark, so a later fresh
+    /// mint or a crash/restart can never collide with it.
+    fn note_external_id(&self, id: u64) -> Result<(), String> {
+        let min_next =
+            align_up(id.saturating_add(1), self.id_offset, self.id_stride);
+        let mut cur = self.next_id.load(Ordering::Relaxed);
+        while cur < min_next {
+            match self.next_id.compare_exchange_weak(
+                cur,
+                min_next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        if let Some(wm) = &self.watermark {
+            wm.ensure_covers(id)
+                .map_err(|e| format!("external id {id}: {e}"))?;
+        }
+        Ok(())
     }
 
     /// Allocate an id and open a session on its shard.
@@ -1060,6 +1136,37 @@ impl ShardPool {
             ),
             Err(e) => Response::error(e),
         }
+    }
+
+    /// Restore a snapshot *as* a caller-chosen id — the cluster handoff
+    /// hook: a session migrating between backends keeps its public id.
+    /// The id is recorded as externally minted first, so this pool's own
+    /// allocator can never hand it out again.
+    pub fn restore_at(&self, id: u64, state: Json) -> Response {
+        self.restore_at_traced(id, state, None)
+    }
+
+    /// [`ShardPool::restore_at`] with a stage breakdown sink.
+    pub fn restore_at_traced(
+        &self,
+        id: u64,
+        state: Json,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
+        if self.txs.is_empty() {
+            return Response::error("shard pool is closed");
+        }
+        if id == 0 {
+            return Response::error("restore: 'id' must be >= 1");
+        }
+        if let Err(e) = self.note_external_id(id) {
+            return Response::error(e);
+        }
+        self.call_shard_traced(
+            self.shard_of(id),
+            Request::Restore { id, state },
+            stages,
+        )
     }
 
     /// Route a single-session request to its owner.
@@ -1723,6 +1830,79 @@ mod tests {
         match pool.restore(snap) {
             Response::Opened { .. } => {}
             other => panic!("restore failed: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn align_up_lands_on_the_progression() {
+        // stride 1: identity for any offset-0 progression
+        assert_eq!(align_up(1, 0, 1), 1);
+        assert_eq!(align_up(17, 0, 1), 17);
+        // stride 4, offset 1: 1, 5, 9, ...
+        assert_eq!(align_up(0, 1, 4), 1);
+        assert_eq!(align_up(1, 1, 4), 1);
+        assert_eq!(align_up(2, 1, 4), 5);
+        assert_eq!(align_up(5, 1, 4), 5);
+        assert_eq!(align_up(6, 1, 4), 9);
+        // stride 2, offset 0: evens
+        assert_eq!(align_up(1, 0, 2), 2);
+        assert_eq!(align_up(2, 0, 2), 2);
+        assert_eq!(align_up(3, 0, 2), 4);
+    }
+
+    #[test]
+    fn id_scheme_mints_only_its_residue_class() {
+        let mut pool = ShardPool::new(2);
+        assert!(pool.set_id_scheme(1, 0).is_err(), "stride 0 refused");
+        assert!(pool.set_id_scheme(4, 4).is_err(), "offset >= stride refused");
+        pool.set_id_scheme(1, 4).unwrap();
+        let mut ids = Vec::new();
+        for s in 0..3u64 {
+            match pool.open(spec(LearnerKind::Columnar { d: 3 }, s)) {
+                Response::Opened { id } => ids.push(id),
+                other => panic!("open failed: {other:?}"),
+            }
+        }
+        assert_eq!(ids, vec![1, 5, 9], "offset 1, stride 4 progression");
+    }
+
+    #[test]
+    fn restore_at_keeps_the_public_id_and_fences_the_allocator() {
+        let pool = ShardPool::new(2);
+        let id = match pool.open(spec(LearnerKind::Columnar { d: 3 }, 7)) {
+            Response::Opened { id } => id,
+            other => panic!("open failed: {other:?}"),
+        };
+        let snap = match pool.call(Request::Snapshot { id }) {
+            Response::Snapshotted { state } => state,
+            other => panic!("snapshot failed: {other:?}"),
+        };
+
+        // a second pool adopts the session under an explicit higher id
+        let dest = ShardPool::new(2);
+        match dest.restore_at(0, snap.clone()) {
+            Response::Error { message } => {
+                assert!(message.contains(">= 1"), "{message}")
+            }
+            other => panic!("id 0 must be refused: {other:?}"),
+        }
+        match dest.restore_at(77, snap) {
+            Response::Opened { id } => assert_eq!(id, 77),
+            other => panic!("restore_at failed: {other:?}"),
+        }
+        // the adopted session is live under its migrated id
+        match dest.call(Request::Step {
+            id: 77,
+            x: vec![0.1, -0.2, 0.3],
+            c: 0.5,
+        }) {
+            Response::Stepped { .. } => {}
+            other => panic!("step after restore_at failed: {other:?}"),
+        }
+        // fresh mints jump past the adopted id — no collision possible
+        match dest.open(spec(LearnerKind::Columnar { d: 3 }, 8)) {
+            Response::Opened { id } => assert!(id > 77, "got {id}"),
+            other => panic!("open failed: {other:?}"),
         }
     }
 }

@@ -78,15 +78,15 @@ use super::protocol::{parse_wire_op, Response, WireOp};
 use super::Service;
 
 /// How often blocked readers/accepts wake to poll the stop flag.
-const POLL_INTERVAL: Duration = Duration::from_millis(25);
+pub(crate) const POLL_INTERVAL: Duration = Duration::from_millis(25);
 /// A reply write slower than this counts as a dead client.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 /// Longest request line a connection may send. Snapshot envelopes are a
 /// few KB, so 16MB is generous headroom — while a client that streams
 /// bytes without ever sending a newline gets one error reply per capped
 /// "line" instead of growing the read buffer until the process is
 /// OOM-killed (which would lose every non-parked session).
-const MAX_LINE_BYTES: usize = 16 << 20;
+pub(crate) const MAX_LINE_BYTES: usize = 16 << 20;
 /// Replies that may queue between a connection's reader and writer
 /// before the reader blocks. A client that sends requests faster than it
 /// drains replies (or stops reading entirely) used to grow this queue
@@ -105,6 +105,15 @@ pub enum ListenAddr {
     Tcp(String),
     /// `unix://PATH` — a filesystem socket, removed again on shutdown.
     Unix(PathBuf),
+}
+
+impl std::fmt::Display for ListenAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ListenAddr::Tcp(hostport) => write!(f, "tcp://{hostport}"),
+            ListenAddr::Unix(path) => write!(f, "unix://{}", path.display()),
+        }
+    }
 }
 
 impl ListenAddr {
@@ -129,42 +138,80 @@ impl ListenAddr {
     }
 }
 
-/// One accepted connection, TCP or UDS, behind a uniform surface.
-enum Stream {
+/// One connection, TCP or UDS, behind a uniform surface — accepted by
+/// [`Listener`], or dialed out via [`Stream::connect`] (the cluster
+/// tier's client side).
+pub(crate) enum Stream {
     Tcp(TcpStream),
     Unix(UnixStream),
 }
 
 impl Stream {
-    fn try_clone(&self) -> std::io::Result<Stream> {
+    /// Dial a serve endpoint. The timeout bounds the TCP connect (Unix
+    /// sockets connect or fail immediately); read/write timeouts are the
+    /// caller's to set afterwards.
+    pub(crate) fn connect(
+        addr: &ListenAddr,
+        timeout: Duration,
+    ) -> std::io::Result<Stream> {
+        match addr {
+            ListenAddr::Tcp(hostport) => {
+                use std::net::ToSocketAddrs;
+                let mut last: Option<std::io::Error> = None;
+                for sa in hostport.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&sa, timeout) {
+                        Ok(s) => return Ok(Stream::Tcp(s)),
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(last.unwrap_or_else(|| {
+                    std::io::Error::new(
+                        ErrorKind::AddrNotAvailable,
+                        format!("{hostport}: no addresses resolved"),
+                    )
+                }))
+            }
+            ListenAddr::Unix(path) => {
+                UnixStream::connect(path).map(Stream::Unix)
+            }
+        }
+    }
+
+    pub(crate) fn try_clone(&self) -> std::io::Result<Stream> {
         match self {
             Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
             Stream::Unix(s) => s.try_clone().map(Stream::Unix),
         }
     }
 
-    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_nonblocking(nb),
             Stream::Unix(s) => s.set_nonblocking(nb),
         }
     }
 
-    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_read_timeout(
+        &self,
+        d: Option<Duration>,
+    ) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(d),
             Stream::Unix(s) => s.set_read_timeout(d),
         }
     }
 
-    fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+    pub(crate) fn set_write_timeout(
+        &self,
+        d: Option<Duration>,
+    ) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_write_timeout(d),
             Stream::Unix(s) => s.set_write_timeout(d),
         }
     }
 
-    fn shutdown(&self) {
+    pub(crate) fn shutdown(&self) {
         match self {
             Stream::Tcp(s) => {
                 let _ = s.shutdown(Shutdown::Both);
@@ -175,7 +222,7 @@ impl Stream {
         }
     }
 
-    fn peer(&self) -> String {
+    pub(crate) fn peer(&self) -> String {
         match self {
             Stream::Tcp(s) => s
                 .peer_addr()
@@ -211,13 +258,102 @@ impl Write for Stream {
     }
 }
 
-enum Listener {
+/// Exclusive claim on a unix socket *path*, taken before any
+/// stale-socket unlinking. Without it, two servers starting on the same
+/// path can both find the socket unanswering, both conclude "stale", and
+/// unlink each other's fresh bind — the classic check-then-act race.
+/// Same pid-file pattern as the store's `LOCK` (and the same best-effort
+/// caveat): `<path>.lock` holds the owner's pid; a live foreign pid
+/// refuses the bind, a dead one is taken over. The file is created with
+/// `create_new` (O_EXCL), so exactly one of two simultaneous starters
+/// wins the claim — the loser re-reads and either refuses (live owner)
+/// or retries once (the winner died mid-start).
+pub(crate) struct SocketLock {
+    path: PathBuf,
+}
+
+impl SocketLock {
+    fn acquire(sock: &std::path::Path) -> Result<SocketLock, String> {
+        let path = PathBuf::from(format!("{}.lock", sock.display()));
+        let me = std::process::id();
+        for attempt in 0..2 {
+            match std::fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(mut f) => {
+                    if let Err(e) = f.write_all(me.to_string().as_bytes()) {
+                        let _ = std::fs::remove_file(&path);
+                        return Err(format!(
+                            "listen: write lock {}: {e}",
+                            path.display()
+                        ));
+                    }
+                    return Ok(SocketLock { path });
+                }
+                Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    if let Some(pid) = holder {
+                        if pid != me
+                            && std::path::Path::new(&format!("/proc/{pid}"))
+                                .exists()
+                        {
+                            return Err(format!(
+                                "listen: {} is locked by live process {pid}",
+                                sock.display()
+                            ));
+                        }
+                    }
+                    // stale (dead/unparseable holder): unlink and retry
+                    // create_new once — losing that race means a live
+                    // starter just won, which the re-read above catches
+                    if attempt == 0 {
+                        let _ = std::fs::remove_file(&path);
+                    }
+                }
+                Err(e) => {
+                    return Err(format!(
+                        "listen: lock {}: {e}",
+                        path.display()
+                    ))
+                }
+            }
+        }
+        Err(format!(
+            "listen: lock {}: lost the takeover race",
+            path.display()
+        ))
+    }
+}
+
+impl Drop for SocketLock {
+    fn drop(&mut self) {
+        // release only if the file still names us — never delete a lock
+        // a faster starter took over after our crash window
+        if let Ok(prev) = std::fs::read_to_string(&self.path) {
+            if prev.trim() == std::process::id().to_string() {
+                let _ = std::fs::remove_file(&self.path);
+            }
+        }
+    }
+}
+
+pub(crate) enum Listener {
     Tcp(TcpListener),
     Unix(UnixListener),
 }
 
 impl Listener {
-    fn bind(addr: &ListenAddr) -> Result<(Listener, String), String> {
+    /// Bind the endpoint. For unix sockets the returned [`SocketLock`]
+    /// guards the *path* (hold it as long as the listener lives — it is
+    /// what makes stale-socket takeover safe against a simultaneous
+    /// starter); TCP binds return `None`.
+    pub(crate) fn bind(
+        addr: &ListenAddr,
+    ) -> Result<(Listener, String, Option<SocketLock>), String> {
         match addr {
             ListenAddr::Tcp(hostport) => {
                 let l = TcpListener::bind(hostport)
@@ -226,9 +362,13 @@ impl Listener {
                     .local_addr()
                     .map(|a| format!("tcp://{a}"))
                     .unwrap_or_else(|_| format!("tcp://{hostport}"));
-                Ok((Listener::Tcp(l), local))
+                Ok((Listener::Tcp(l), local, None))
             }
             ListenAddr::Unix(path) => {
+                // claim the path before any liveness probing or
+                // unlinking: holding the lock makes check-then-unlink
+                // atomic with respect to other starters
+                let lock = SocketLock::acquire(path)?;
                 let l = match UnixListener::bind(path) {
                     Ok(l) => l,
                     Err(e) if e.kind() == ErrorKind::AddrInUse => {
@@ -259,19 +399,23 @@ impl Listener {
                         ))
                     }
                 };
-                Ok((Listener::Unix(l), format!("unix://{}", path.display())))
+                Ok((
+                    Listener::Unix(l),
+                    format!("unix://{}", path.display()),
+                    Some(lock),
+                ))
             }
         }
     }
 
-    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+    pub(crate) fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
         match self {
             Listener::Tcp(l) => l.set_nonblocking(nb),
             Listener::Unix(l) => l.set_nonblocking(nb),
         }
     }
 
-    fn accept(&self) -> std::io::Result<Stream> {
+    pub(crate) fn accept(&self) -> std::io::Result<Stream> {
         match self {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
             Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
@@ -359,6 +503,9 @@ pub struct Server {
     conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
     local: String,
     unix_path: Option<PathBuf>,
+    /// Claim on the unix socket *path* (see [`SocketLock`]); released on
+    /// drop, strictly after `shutdown` removes the socket file itself.
+    sock_lock: Option<SocketLock>,
 }
 
 impl Server {
@@ -369,7 +516,7 @@ impl Server {
         addr: &ListenAddr,
         max_conns: usize,
     ) -> Result<Server, String> {
-        let (listener, local) = Listener::bind(addr)?;
+        let (listener, local, sock_lock) = Listener::bind(addr)?;
         listener
             .set_nonblocking(true)
             .map_err(|e| format!("listen: set nonblocking: {e}"))?;
@@ -401,6 +548,7 @@ impl Server {
                 ListenAddr::Unix(p) => Some(p.clone()),
                 ListenAddr::Tcp(_) => None,
             },
+            sock_lock,
         })
     }
 
@@ -439,6 +587,8 @@ impl Server {
         if let Some(path) = &self.unix_path {
             let _ = std::fs::remove_file(path);
         }
+        // socket gone, now the path claim may go too
+        drop(self.sock_lock.take());
         let mut service = Arc::try_unwrap(self.service)
             .map_err(|_| "shutdown: a connection thread still holds the service")?;
         service.close()
@@ -535,7 +685,7 @@ fn run_accept(
 }
 
 /// Outcome of reading one request line off a connection.
-enum LineRead {
+pub(crate) enum LineRead {
     /// A line (or a final unterminated line at EOF) is in the buffer.
     Line,
     /// The line crossed [`MAX_LINE_BYTES`]; its excess was discarded up
@@ -553,7 +703,7 @@ enum LineRead {
 /// `read_hist` clocks the `transport_read` stage: from the first byte
 /// of the line being available to the line being complete — idle wait
 /// for a client to say anything is not read latency and is excluded.
-fn read_line_bytes(
+pub(crate) fn read_line_bytes(
     reader: &mut BufReader<Stream>,
     buf: &mut Vec<u8>,
     stop: &AtomicBool,
@@ -884,5 +1034,76 @@ mod tests {
         assert!(err.contains("live server"), "{err}");
         server.shutdown().unwrap();
         assert!(!path.exists(), "shutdown removes the socket file");
+        let lock = PathBuf::from(format!("{}.lock", path.display()));
+        assert!(!lock.exists(), "shutdown releases the path lock");
+    }
+
+    #[test]
+    fn socket_path_lock_refuses_live_foreign_owner_takes_over_stale() {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir()
+            .join(format!("ccn-lock-{}-{nanos}.sock", std::process::id()));
+        let lock_path = PathBuf::from(format!("{}.lock", path.display()));
+        // a live foreign pid holds the path: refuse before touching the
+        // socket file at all (pid 1 always exists)
+        std::fs::write(&lock_path, "1").unwrap();
+        drop(UnixListener::bind(&path).unwrap()); // stale-looking socket
+        let addr = ListenAddr::Unix(path.clone());
+        let err = Server::bind(Service::new(1), &addr, 0).unwrap_err();
+        assert!(err.contains("locked by live process 1"), "{err}");
+        assert!(
+            path.exists(),
+            "a refused bind must not unlink the contested socket"
+        );
+        // a stale (dead) holder is taken over: crash recovery stays
+        // hands-off even with both leftover files on disk
+        std::fs::write(&lock_path, "999999999").unwrap();
+        let server = Server::bind(Service::new(1), &addr, 0).unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&lock_path).unwrap().trim(),
+            std::process::id().to_string(),
+            "takeover rewrites the lock to the new owner"
+        );
+        server.shutdown().unwrap();
+        assert!(!path.exists() && !lock_path.exists(), "clean teardown");
+    }
+
+    #[test]
+    fn ephemeral_streams_connect_both_kinds() {
+        // tcp round trip through Stream::connect
+        let server = Server::bind(
+            Service::new(1),
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let addr = ListenAddr::parse(server.local_addr()).unwrap();
+        let mut s = Stream::connect(&addr, Duration::from_secs(5)).unwrap();
+        writeln!(s, "{}", r#"{"op":"ping"}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains(r#""pong":true"#), "{line}");
+        s.shutdown();
+        server.shutdown().unwrap();
+
+        // and the same over a unix socket
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let path = std::env::temp_dir()
+            .join(format!("ccn-dial-{}-{nanos}.sock", std::process::id()));
+        let addr = ListenAddr::Unix(path.clone());
+        let server = Server::bind(Service::new(1), &addr, 0).unwrap();
+        let mut s = Stream::connect(&addr, Duration::from_secs(5)).unwrap();
+        writeln!(s, "{}", r#"{"op":"ping"}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains(r#""pong":true"#), "{line}");
+        s.shutdown();
+        server.shutdown().unwrap();
     }
 }

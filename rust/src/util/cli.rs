@@ -9,7 +9,10 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
-    options: BTreeMap<String, String>,
+    /// Every value given for an option, in argv order — repeatable
+    /// options (`--backend A --backend B`) keep them all; the scalar
+    /// accessors take the last, matching the usual CLI override rule.
+    options: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     consumed: Vec<String>,
 }
@@ -20,7 +23,7 @@ impl Args {
         let mut it = items.into_iter().peekable();
         let mut subcommand = None;
         let mut positional = Vec::new();
-        let mut options = BTreeMap::new();
+        let mut options: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags = Vec::new();
 
         if let Some(first) = it.peek() {
@@ -31,13 +34,16 @@ impl Args {
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    options.insert(k.to_string(), v.to_string());
+                    options.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    options.insert(body.to_string(), it.next().unwrap());
+                    options
+                        .entry(body.to_string())
+                        .or_default()
+                        .push(it.next().unwrap());
                 } else {
                     flags.push(body.to_string());
                 }
@@ -66,7 +72,14 @@ impl Args {
 
     pub fn opt_str(&mut self, name: &str) -> Option<String> {
         self.consumed.push(name.to_string());
-        self.options.get(name).cloned()
+        self.options.get(name).and_then(|vs| vs.last().cloned())
+    }
+
+    /// Every value a repeatable option was given, in argv order
+    /// (`--backend A --backend B` → `["A", "B"]`); empty if absent.
+    pub fn opt_str_all(&mut self, name: &str) -> Vec<String> {
+        self.consumed.push(name.to_string());
+        self.options.get(name).cloned().unwrap_or_default()
     }
 
     pub fn str_or(&mut self, name: &str, default: &str) -> String {
@@ -188,5 +201,21 @@ mod tests {
     fn no_subcommand_when_leading_dash() {
         let a = args(&["--help"]);
         assert_eq!(a.subcommand, None);
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_scalar_takes_last() {
+        let mut a = args(&[
+            "route", "--backend", "tcp://a:1", "--backend=tcp://b:2",
+            "--backend", "tcp://c:3", "--shards", "2", "--shards", "4",
+        ]);
+        assert_eq!(
+            a.opt_str_all("backend"),
+            vec!["tcp://a:1", "tcp://b:2", "tcp://c:3"]
+        );
+        assert_eq!(a.usize_or("shards", 0), 4, "last value wins");
+        assert!(a.finish().is_ok());
+        let mut b = args(&["route"]);
+        assert!(b.opt_str_all("backend").is_empty());
     }
 }

@@ -1,0 +1,671 @@
+//! Cluster-tier end-to-end suite: a router fronting real backends over
+//! real sockets.
+//!
+//! The contract under test, matching the router's module docs:
+//!
+//! - **Transparency** — for any op against a single backend the router's
+//!   reply is byte-identical to talking to that backend directly,
+//!   including every locally-generated error.
+//! - **Scale-out** — the same workload over 1, 2, and 4 backends (each
+//!   minting its own `--id-offset/--id-stride` residue class) produces
+//!   bit-identical predictions, spreads sessions across the fleet, and
+//!   accounts every wire step exactly once.
+//! - **Live migration** — `handoff` and `drain` racing real step traffic
+//!   never perturb a learner: the full y-sequence and the final snapshot
+//!   envelopes stay bit-identical to a single-process twin replay.
+//! - **Failure** — SIGKILL a real `ccn serve` child mid-soak: parked
+//!   sessions survive in its store, the router fails pinned ops loudly
+//!   while the backend is down, and after a restart on the same socket
+//!   (stale-lock takeover) + store dir (boot scan) every session warms
+//!   and matches the twin bit-for-bit.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ccn_rtrl::cluster::{ClientConfig, RouterConfig, RouterServer, WireClient};
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+/// One session per net kind keeps every learner family under migration.
+const KINDS: [&str; 4] = ["columnar:8", "ccn:8:2:100000", "tbptt:4:10", "snap1:4"];
+const N: usize = 8;
+
+fn fast_cfg() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_millis(250),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+        ..ClientConfig::default()
+    }
+}
+
+fn router_cfg(backends: Vec<ListenAddr>) -> RouterConfig {
+    let mut cfg = RouterConfig::new(backends);
+    cfg.client = fast_cfg();
+    cfg.health_interval = Duration::from_millis(100);
+    cfg
+}
+
+fn tcp_backend(
+    shards: usize,
+    scheme: Option<(u64, u64)>,
+) -> (Server, ListenAddr) {
+    let mut service = Service::new(shards);
+    if let Some((offset, stride)) = scheme {
+        service.set_id_scheme(offset, stride).expect("id scheme");
+    }
+    let server = Server::bind(
+        service,
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let addr = ListenAddr::parse(server.local_addr()).unwrap();
+    (server, addr)
+}
+
+fn bind_router(backends: Vec<ListenAddr>) -> RouterServer {
+    RouterServer::bind(
+        router_cfg(backends),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+    )
+    .expect("bind router")
+}
+
+fn unique_base(tag: &str) -> PathBuf {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos();
+    std::env::temp_dir().join(format!(
+        "ccn-cluster-{tag}-{}-{nanos}",
+        std::process::id()
+    ))
+}
+
+/// `[tick][session] -> (x, c)`: one deterministic input stream.
+type Stream = Vec<Vec<(Vec<f32>, f32)>>;
+
+/// Deterministic per-tick, per-session `(x, c)` stream: the same seed
+/// replays the identical inputs against a cluster and its twin.
+fn stream(seed: u64, ticks: usize, sessions: usize) -> Stream {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..ticks)
+        .map(|_| {
+            (0..sessions)
+                .map(|_| {
+                    let x: Vec<f32> =
+                        (0..N).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                    let c = rng.uniform(-0.5, 0.5);
+                    (x, c)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Send one raw line both through the router and to an identically
+/// configured direct backend; the replies must match byte for byte.
+fn compare(via: &mut WireClient, direct: &mut WireClient, line: &str) -> String {
+    let a = via.request_line(line).expect("router reply");
+    let b = direct.request_line(line).expect("direct reply");
+    assert_eq!(a, b, "router must be byte-transparent for {line}");
+    a
+}
+
+fn reply_id(reply: &str) -> u64 {
+    Json::parse(reply)
+        .ok()
+        .and_then(|v| v.get("id").and_then(|n| n.as_f64()))
+        .expect("reply id") as u64
+}
+
+#[test]
+fn router_replies_match_a_direct_backend_byte_for_byte() {
+    let base = unique_base("transparent");
+    std::fs::create_dir_all(&base).unwrap();
+
+    // twin backends with identical config: one behind the router (over
+    // UDS, so both transport kinds are in play), one driven directly
+    let sock = base.join("b0.sock");
+    let routed = Server::bind(
+        Service::new(2),
+        &ListenAddr::parse(&format!("unix://{}", sock.display())).unwrap(),
+        0,
+    )
+    .unwrap();
+    let (direct_srv, _) = tcp_backend(2, None);
+    let router =
+        bind_router(vec![ListenAddr::parse(routed.local_addr()).unwrap()]);
+
+    let mut via = WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+    let mut direct =
+        WireClient::dial(direct_srv.local_addr(), fast_cfg()).unwrap();
+
+    compare(&mut via, &mut direct, r#"{"op":"ping"}"#);
+
+    let ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| {
+            let line = format!(
+                r#"{{"op":"open","learner":"{kind}","n_inputs":{N},"seed":{j}}}"#
+            );
+            reply_id(&compare(&mut via, &mut direct, &line))
+        })
+        .collect();
+
+    // live traffic: step / predict across every kind
+    for tick in &stream(0x7a9, 6, ids.len()) {
+        for ((x, c), &id) in tick.iter().zip(&ids) {
+            let line = format!(
+                r#"{{"op":"step","id":{id},"x":{},"c":{c}}}"#,
+                Json::arr_f32(x).dump()
+            );
+            compare(&mut via, &mut direct, &line);
+        }
+    }
+    let probe = Json::arr_f32(&[0.25f32; N]).dump();
+    for &id in &ids {
+        let line = format!(r#"{{"op":"predict","id":{id},"x":{probe}}}"#);
+        compare(&mut via, &mut direct, &line);
+    }
+
+    // a whole-cohort step_batch stays on one backend -> forwarded raw,
+    // including the per-item error for a ghost id
+    let batch = {
+        let ids_json: Vec<String> =
+            ids.iter().map(|id| id.to_string()).chain(["9999".into()]).collect();
+        let xs: Vec<String> =
+            (0..=ids.len()).map(|_| probe.clone()).collect();
+        let cs: Vec<String> = (0..=ids.len()).map(|_| "0.1".into()).collect();
+        format!(
+            r#"{{"op":"step_batch","ids":[{}],"xs":[{}],"cs":[{}]}}"#,
+            ids_json.join(","),
+            xs.join(","),
+            cs.join(",")
+        )
+    };
+    compare(&mut via, &mut direct, &batch);
+
+    // snapshots are deterministic twins; reuse one state for restore
+    let mut state = None;
+    for &id in &ids {
+        let line = format!(r#"{{"op":"snapshot","id":{id}}}"#);
+        let reply = compare(&mut via, &mut direct, &line);
+        if state.is_none() {
+            state = Json::parse(&reply).unwrap().get("state").cloned();
+        }
+    }
+    let state = state.expect("snapshot state").dump();
+
+    // restore-as-id (the migration hook), then a minted restore: the
+    // explicit id fences both allocators identically, so the minted ids
+    // agree too
+    let line = format!(r#"{{"op":"restore","id":4242,"state":{state}}}"#);
+    compare(&mut via, &mut direct, &line);
+    let line = format!(r#"{{"op":"restore","state":{state}}}"#);
+    let minted = reply_id(&compare(&mut via, &mut direct, &line));
+    let line = format!(r#"{{"op":"step","id":4242,"x":{probe},"c":0.5}}"#);
+    compare(&mut via, &mut direct, &line);
+
+    // error paths reuse the exact serve code, byte for byte
+    compare(&mut via, &mut direct, r#"{"op":"step","id":777,"x":[0.0],"c":0.0}"#);
+    compare(&mut via, &mut direct, r#"{"op":"flarp"}"#);
+    compare(&mut via, &mut direct, r#"{nope"#);
+    compare(&mut via, &mut direct, r#"{"op":"park","id":4242}"#);
+
+    for id in ids.iter().copied().chain([4242, minted]) {
+        let line = format!(r#"{{"op":"close","id":{id}}}"#);
+        compare(&mut via, &mut direct, &line);
+    }
+
+    // stats/metrics aggregate by design (not byte-comparable): check the
+    // router's own shape instead
+    let stats = via.stats().expect("router stats");
+    assert!(stats.get("cluster").is_some(), "router stats carries a cluster block");
+    let metrics = via.metrics().expect("router metrics");
+    assert!(metrics.get("cluster").is_some(), "router metrics carries a cluster block");
+
+    router.shutdown().expect("router shutdown");
+    routed.shutdown().expect("routed backend shutdown");
+    direct_srv.shutdown().expect("direct backend shutdown");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn scale_out_1_2_4_is_bit_exact_and_spreads_sessions() {
+    let sessions = 8;
+    let ticks = 15;
+    let inputs = stream(0x5ca1e, ticks, sessions);
+    let mut reference: Option<Vec<Vec<u64>>> = None;
+
+    for n_backends in [1usize, 2, 4] {
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        for k in 0..n_backends {
+            let scheme =
+                (n_backends > 1).then_some((k as u64, n_backends as u64));
+            let (srv, addr) = tcp_backend(1, scheme);
+            servers.push(srv);
+            addrs.push(addr);
+        }
+        let router = bind_router(addrs);
+        let mut client =
+            WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+
+        let ids: Vec<u64> = (0..sessions)
+            .map(|j| {
+                client
+                    .open(KINDS[j % KINDS.len()], N, j as u64)
+                    .expect("open")
+            })
+            .collect();
+
+        // minted ids must carry the minting backend's residue class
+        if n_backends > 1 {
+            for &id in &ids {
+                let b = router.router().placement_of(id).expect("placed");
+                assert_eq!(
+                    id % n_backends as u64,
+                    b as u64,
+                    "id {id} must live in backend {b}'s residue class"
+                );
+            }
+            let spread: BTreeSet<usize> = ids
+                .iter()
+                .map(|&id| router.router().placement_of(id).unwrap())
+                .collect();
+            assert!(
+                spread.len() >= 2,
+                "{n_backends} backends must share the {sessions} sessions, \
+                 got {spread:?}"
+            );
+        }
+
+        let ys: Vec<Vec<u64>> = inputs
+            .iter()
+            .map(|tick| {
+                tick.iter()
+                    .zip(&ids)
+                    .map(|((x, c), &id)| {
+                        client.step(id, x, *c).expect("step").to_bits()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // every wire step lands on exactly one backend
+        let served: u64 = servers
+            .iter()
+            .flat_map(|s| s.service().pool().stats())
+            .map(|st| st.steps)
+            .sum();
+        assert_eq!(served as usize, sessions * ticks);
+
+        match &reference {
+            None => reference = Some(ys),
+            Some(want) => assert_eq!(
+                want, &ys,
+                "{n_backends}-backend predictions must be bit-identical \
+                 to the single-backend run"
+            ),
+        }
+
+        router.shutdown().expect("router shutdown");
+        for srv in servers {
+            srv.shutdown().expect("backend shutdown");
+        }
+    }
+}
+
+#[test]
+fn handoff_and_drain_mid_traffic_stay_bit_exact() {
+    let base = unique_base("midtraffic");
+    std::fs::create_dir_all(&base).unwrap();
+
+    // two backends on disjoint residue classes, mixed transports
+    let (b0, a0) = tcp_backend(1, Some((0, 2)));
+    let sock = base.join("b1.sock");
+    let mut svc1 = Service::new(1);
+    svc1.set_id_scheme(1, 2).expect("id scheme");
+    let b1 = Server::bind(
+        svc1,
+        &ListenAddr::parse(&format!("unix://{}", sock.display())).unwrap(),
+        0,
+    )
+    .unwrap();
+    let a1 = ListenAddr::parse(b1.local_addr()).unwrap();
+    let labels = [a0.to_string(), a1.to_string()];
+    let router = bind_router(vec![a0, a1]);
+
+    // the twin: one plain backend replaying the identical input stream
+    let (twin_srv, _) = tcp_backend(1, None);
+    let mut twin = WireClient::dial(twin_srv.local_addr(), fast_cfg()).unwrap();
+    let mut client = WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+
+    let sessions = KINDS.len();
+    let ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| client.open(kind, N, j as u64).expect("open"))
+        .collect();
+    let twin_ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| twin.open(kind, N, j as u64).expect("twin open"))
+        .collect();
+
+    let ticks = 30;
+    let inputs = stream(0xfeed, ticks, sessions);
+
+    // phase A: an admin thread migrates every session round-robin while
+    // the main thread drives step traffic — per-id gates must serialize
+    // each move against in-flight ops without perturbing any learner
+    let stop = Arc::new(AtomicBool::new(false));
+    let admin_stop = Arc::clone(&stop);
+    let admin_addr = router.local_addr().to_string();
+    let admin_ids = ids.clone();
+    let admin = std::thread::spawn(move || -> usize {
+        let mut admin =
+            WireClient::dial(&admin_addr, fast_cfg()).expect("dial admin");
+        let mut moves = 0usize;
+        while !admin_stop.load(Ordering::Relaxed) {
+            for &id in &admin_ids {
+                let line = format!(r#"{{"op":"handoff","id":{id}}}"#);
+                let v = admin.request_ok(&line).expect("handoff");
+                assert!(v.get("from").is_some() && v.get("to").is_some());
+                moves += 1;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        moves
+    });
+
+    let mut ys: Vec<Vec<u64>> = Vec::new();
+    for tick in &inputs {
+        ys.push(
+            tick.iter()
+                .zip(&ids)
+                .map(|((x, c), &id)| {
+                    client.step(id, x, *c).expect("step").to_bits()
+                })
+                .collect(),
+        );
+    }
+    stop.store(true, Ordering::Relaxed);
+    let moves = admin.join().expect("admin thread");
+    assert!(moves > 0, "the soak must overlap at least one migration");
+
+    // twin replay: the recorded y-sequence must match bit for bit
+    for (t, tick) in inputs.iter().enumerate() {
+        for (j, ((x, c), &tid)) in tick.iter().zip(&twin_ids).enumerate() {
+            let y = twin.step(tid, x, *c).expect("twin step").to_bits();
+            assert_eq!(
+                ys[t][j], y,
+                "tick {t} session {j}: migration must not perturb the learner"
+            );
+        }
+    }
+
+    // phase B: drain whichever backend currently hosts ids[0]
+    let victim = router.router().placement_of(ids[0]).expect("placed");
+    let line = format!(r#"{{"op":"drain","backend":"{}"}}"#, labels[victim]);
+    let v = client.request_ok(&line).expect("drain");
+    assert!(
+        v.get("moved").and_then(|m| m.as_f64()).unwrap_or(0.0) >= 1.0,
+        "drain must migrate the victim's sessions"
+    );
+    for &id in &ids {
+        assert_ne!(
+            router.router().placement_of(id),
+            Some(victim),
+            "drain must leave nothing behind"
+        );
+    }
+    let h = client.request_ok(r#"{"op":"health"}"#).expect("health");
+    let backends = h.get("backends").and_then(|b| b.as_arr()).unwrap();
+    assert_eq!(backends[victim].get("alive"), Some(&Json::Bool(true)));
+    assert_eq!(backends[victim].get("in_ring"), Some(&Json::Bool(false)));
+
+    // traffic continues on the survivor, still bit-exact
+    for tick in &stream(0xf00d, 5, sessions) {
+        for ((x, c), (&id, &tid)) in
+            tick.iter().zip(ids.iter().zip(&twin_ids))
+        {
+            let y = client.step(id, x, *c).expect("step").to_bits();
+            let w = twin.step(tid, x, *c).expect("twin step").to_bits();
+            assert_eq!(y, w, "post-drain step must stay bit-exact");
+        }
+    }
+
+    // rebalance is a no-op error-free pass with the victim out of the ring
+    let v = client.request_ok(r#"{"op":"rebalance"}"#).expect("rebalance");
+    assert!(v.get("moved").is_some());
+
+    // final states byte-identical to the never-migrated twin
+    for (j, (&id, &tid)) in ids.iter().zip(&twin_ids).enumerate() {
+        let state = client.snapshot(id).expect("snapshot");
+        let want = twin.snapshot(tid).expect("twin snapshot");
+        assert_eq!(
+            state, want,
+            "session {j}: migrated state must equal the twin's bit-for-bit"
+        );
+    }
+
+    router.shutdown().expect("router shutdown");
+    b0.shutdown().expect("b0 shutdown");
+    b1.shutdown().expect("b1 shutdown");
+    twin_srv.shutdown().expect("twin shutdown");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+fn spawn_serve(sock: &Path, store: &Path, offset: u64, stride: u64) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_ccn"))
+        .args([
+            "serve".to_string(),
+            "--listen".to_string(),
+            format!("unix://{}", sock.display()),
+            "--store-dir".to_string(),
+            store.display().to_string(),
+            "--shards".to_string(),
+            "1".to_string(),
+            "--id-offset".to_string(),
+            offset.to_string(),
+            "--id-stride".to_string(),
+            stride.to_string(),
+        ])
+        // stdin held open: closing it is the child's shutdown signal
+        .stdin(Stdio::piped())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn ccn serve")
+}
+
+fn wait_ready(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(mut c) = WireClient::dial(addr, fast_cfg()) {
+            if c.ping().is_ok() {
+                return;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {addr} never answered ping"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Poll `health` until backend `idx` reports `alive == want`.
+fn wait_alive(client: &mut WireClient, idx: usize, want: bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let h = client.request_ok(r#"{"op":"health"}"#).expect("health");
+        let backends = h.get("backends").and_then(|b| b.as_arr()).unwrap();
+        if backends[idx].get("alive") == Some(&Json::Bool(want)) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {idx} never reached alive={want}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn kill_mid_soak_loses_nothing_parked() {
+    let base = unique_base("kill");
+    std::fs::create_dir_all(&base).unwrap();
+    let socks = [base.join("b0.sock"), base.join("b1.sock")];
+    let stores = [base.join("store0"), base.join("store1")];
+    let addrs: Vec<String> = socks
+        .iter()
+        .map(|s| format!("unix://{}", s.display()))
+        .collect();
+
+    // two real `ccn serve` processes, disjoint residue classes, each
+    // with its own durable store
+    let mut children: Vec<Child> = (0..2)
+        .map(|k| spawn_serve(&socks[k], &stores[k], k as u64, 2))
+        .collect();
+    for a in &addrs {
+        wait_ready(a);
+    }
+
+    let listen: Vec<ListenAddr> =
+        addrs.iter().map(|a| ListenAddr::parse(a).unwrap()).collect();
+    let router = bind_router(listen);
+    let mut client = WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+
+    let (twin_srv, _) = tcp_backend(1, None);
+    let mut twin = WireClient::dial(twin_srv.local_addr(), fast_cfg()).unwrap();
+
+    let sessions = KINDS.len();
+    let ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| client.open(kind, N, j as u64).expect("open"))
+        .collect();
+    let twin_ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| twin.open(kind, N, j as u64).expect("twin open"))
+        .collect();
+
+    // pin sessions alternately onto both backends (explicit-destination
+    // handoff), so the kill hits real state
+    for (j, &id) in ids.iter().enumerate() {
+        let want = &addrs[j % 2];
+        let line = format!(r#"{{"op":"handoff","id":{id},"to":"{want}"}}"#);
+        let v = client.request_ok(&line).expect("pin handoff");
+        assert_eq!(v.get("to").and_then(|t| t.as_str()), Some(want.as_str()));
+    }
+
+    // soak, mirrored tick-by-tick on the twin; one more live migration
+    // halfway through
+    let ticks = 20;
+    let inputs = stream(0xdead, ticks, sessions);
+    for (t, tick) in inputs.iter().enumerate() {
+        for (j, ((x, c), (&id, &tid))) in
+            tick.iter().zip(ids.iter().zip(&twin_ids)).enumerate()
+        {
+            let y = client.step(id, x, *c).expect("step");
+            let w = twin.step(tid, x, *c).expect("twin step");
+            assert_eq!(y.to_bits(), w.to_bits(), "tick {t} session {j}");
+        }
+        if t == ticks / 2 {
+            let from = router.router().placement_of(ids[0]).expect("placed");
+            let line = format!(
+                r#"{{"op":"handoff","id":{},"to":"{}"}}"#,
+                ids[0],
+                addrs[1 - from]
+            );
+            client.request_ok(&line).expect("mid-soak handoff");
+        }
+    }
+
+    // park everything: the durable tier owns every session now
+    for &id in &ids {
+        client.park(id).expect("park");
+    }
+
+    // SIGKILL backend 0 — no flush, no goodbye
+    children[0].kill().expect("kill b0");
+    children[0].wait().expect("reap b0");
+    wait_alive(&mut client, 0, false);
+
+    // pinned ops fail loudly while the home is down; no silent reroute
+    let dead_id = ids
+        .iter()
+        .find(|&&id| router.router().placement_of(id) == Some(0))
+        .copied()
+        .expect("a session pinned to b0");
+    let probe = Json::arr_f32(&[0.0f32; N]).dump();
+    let line = format!(r#"{{"op":"step","id":{dead_id},"x":{probe},"c":0.0}}"#);
+    let reply = client.request_line(&line).expect("wire");
+    let v = Json::parse(&reply).unwrap();
+    assert_eq!(v.get("ok"), Some(&Json::Bool(false)));
+    assert!(
+        v.get("error")
+            .and_then(|e| e.as_str())
+            .is_some_and(|m| m.contains("unreachable")),
+        "a dead pinned backend must be named, got {reply}"
+    );
+
+    // restart on the same socket (stale file + a lock held by a dead
+    // pid: the takeover path) and the same store dir (boot scan)
+    children[0] = spawn_serve(&socks[0], &stores[0], 0, 2);
+    wait_ready(&addrs[0]);
+    wait_alive(&mut client, 0, true);
+    let h = client.request_ok(r#"{"op":"health"}"#).expect("health");
+    let backends = h.get("backends").and_then(|b| b.as_arr()).unwrap();
+    assert_eq!(
+        backends[0].get("in_ring"),
+        Some(&Json::Bool(true)),
+        "a revived backend rejoins the ring"
+    );
+
+    // every session — the killed backend's parked ones and the migrated
+    // one included — warms and matches the twin bit-for-bit
+    for (j, (&id, &tid)) in ids.iter().zip(&twin_ids).enumerate() {
+        client
+            .warm(id)
+            .unwrap_or_else(|e| panic!("warm session {j}: {e}"));
+        let state = client
+            .snapshot(id)
+            .unwrap_or_else(|e| panic!("snapshot session {j}: {e}"));
+        let want = twin.snapshot(tid).expect("twin snapshot");
+        assert_eq!(
+            state, want,
+            "session {j} must survive the kill bit-exactly"
+        );
+    }
+
+    // and they keep learning, still in lockstep with the twin
+    for tick in &stream(0xbeef, 3, sessions) {
+        for ((x, c), (&id, &tid)) in
+            tick.iter().zip(ids.iter().zip(&twin_ids))
+        {
+            let y = client.step(id, x, *c).expect("step").to_bits();
+            let w = twin.step(tid, x, *c).expect("twin step").to_bits();
+            assert_eq!(y, w, "post-revival step must stay bit-exact");
+        }
+    }
+
+    for mut child in children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    router.shutdown().expect("router shutdown");
+    twin_srv.shutdown().expect("twin shutdown");
+    let _ = std::fs::remove_dir_all(&base);
+}
