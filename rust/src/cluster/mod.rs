@@ -38,6 +38,22 @@
 //! drops out of the ring on the next health probe; its parked sessions
 //! survive in its store and rehydrate through the normal boot scan when
 //! the process returns, at which point it rejoins the ring.
+//!
+//! # Fleet observability
+//!
+//! The router participates in the same observability stack as the
+//! backends (see the `obs` module):
+//!
+//! - `--trace-file` / `--trace-sample` emit router-side JSONL trace
+//!   events; the router injects `trace_id` / `span_id` into each
+//!   forwarded op so a backend's trace events carry the same
+//!   `trace_id` (and the router's span as `parent_span_id`). Join the
+//!   two files with `scripts/check_trace.py --join`.
+//! - `metrics {"scope": "fleet"}` fans the `metrics` op out to every
+//!   live backend and merges the histogram/counter/window registries
+//!   into one `merged` block, next to tagged per-backend sub-blocks.
+//! - `--metrics-listen ADDR` serves Prometheus text exposition of the
+//!   router's own registry on `GET /metrics`.
 
 pub mod client;
 pub mod ring;

@@ -48,11 +48,34 @@
 //! same store dir the boot scan rehydrates them, the health loop sees
 //! the dead→alive transition, and the backend re-enters the ring.
 //!
+//! # Fleet observability
+//!
 //! Every router op is timed into `route.<op>` histograms and the
 //! `route.retries`/`route.err_*`/`route.migrations` counters of the
 //! router's own [`Registry`], served by its `metrics`/`stats` ops along
-//! with a `cluster` block.
+//! with a `cluster` block. Three fleet-scope extensions:
+//!
+//! - **Correlation** (`ccn route --trace-file PATH [--trace-sample N]`):
+//!   every well-formed op gets a `trace_id` + hop `span_id`
+//!   (client-supplied ids are reused, missing ones minted and spliced
+//!   into the forwarded line as ordinary optional fields), and every
+//!   sampled op appends one JSONL event — op, correlation pair, backend,
+//!   `forward_ns`, `dur_ns`, ok. A backend tracing with the same flags
+//!   echoes the pair into its own events, so
+//!   `scripts/check_trace.py --join router.jsonl backend.jsonl` stitches
+//!   the two files into end-to-end spans. Correlation never changes a
+//!   reply: the backend's op parser ignores unknown keys and replies
+//!   never echo them (byte-transparency is e2e-pinned with tracing on).
+//! - **Fleet roll-up** (`{"op":"metrics","scope":"fleet"}`): fans
+//!   `metrics` out to every live backend and folds the parsed registries
+//!   through [`RegistrySnapshot::merge`] — merged totals plus each
+//!   backend's own snapshot in one reply.
+//! - **Exposition** (`ccn route --metrics-listen tcp://H:P`): the
+//!   router's registry as Prometheus text at `GET /metrics`
+//!   ([`crate::obs::MetricsServer`]).
 
+use std::borrow::Cow;
+use std::cell::Cell;
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufReader, BufWriter, Write};
 use std::path::PathBuf;
@@ -61,7 +84,10 @@ use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::obs::{Histogram, Registry};
+use crate::obs::{
+    mint_id, Histogram, MetricsServer, Registry, RegistrySnapshot, TraceConfig,
+    TraceHandle, WindowedCounter,
+};
 use crate::serve::protocol::{parse_wire_op, Response, StepItem, WireOp};
 use crate::serve::transport::{
     read_line_bytes, LineRead, Listener, SocketLock, Stream, MAX_LINE_BYTES,
@@ -115,6 +141,12 @@ pub struct RouterConfig {
     pub client: ClientConfig,
     /// Ring points per backend.
     pub vnodes: usize,
+    /// Router-side JSONL trace log (`ccn route --trace-file` /
+    /// `--trace-sample`). When set, every forwarded op also carries
+    /// `trace_id`/`span_id` correlation fields.
+    pub trace: Option<TraceConfig>,
+    /// Prometheus text endpoint (`ccn route --metrics-listen`).
+    pub metrics_listen: Option<ListenAddr>,
 }
 
 impl RouterConfig {
@@ -125,6 +157,8 @@ impl RouterConfig {
             health_interval: Duration::from_millis(500),
             client: ClientConfig::default(),
             vnodes: DEFAULT_VNODES,
+            trace: None,
+            metrics_listen: None,
         }
     }
 }
@@ -199,6 +233,51 @@ pub struct Router {
     err_backend: Arc<AtomicU64>,
     err_no_backend: Arc<AtomicU64>,
     migrations: Arc<AtomicU64>,
+    /// Router-side trace log; when set, forwarded ops carry correlation
+    /// ids and sampled ops emit one JSONL event each.
+    trace: Option<TraceHandle>,
+    /// Origin for trace timestamps (monotonic, ns since router boot).
+    epoch: Instant,
+    /// Windowed ops/s gauge (the router's `metrics` windows block).
+    win_ops: Arc<WindowedCounter>,
+}
+
+/// Per-request correlation context, stack-local to one
+/// [`Router::handle_line`]. `trace_id`/`span_id` are the *effective* ids
+/// (client-supplied when valid, freshly minted otherwise); the cells
+/// collect where the request actually went for the router's own event.
+struct TraceCtx {
+    trace_id: String,
+    span_id: String,
+    /// This request is one of the 1-in-N the router's own log records.
+    sampled: bool,
+    /// Last backend a forward succeeded against.
+    backend: Cell<Option<usize>>,
+    /// Total wall time spent inside forwards (including failed probes).
+    forward_ns: Cell<u64>,
+}
+
+/// Splice correlation keys into a raw request line, right after the
+/// opening `{`. Only keys the client did NOT send are added: the JSON
+/// parser's later-duplicate-wins rule would let a client key override a
+/// spliced twin anyway, and reusing client ids keeps an upstream tracer
+/// working. Every routed op has at least an `"op"` key, so the splice's
+/// trailing comma is always valid.
+fn inject_correlation(line: &str, add: &[(&str, &str)]) -> String {
+    let Some(pos) = line.find('{') else {
+        return line.to_string();
+    };
+    let mut out = String::with_capacity(line.len() + 32 * add.len());
+    out.push_str(&line[..=pos]);
+    for (key, val) in add {
+        out.push('"');
+        out.push_str(key);
+        out.push_str("\":\"");
+        out.push_str(val);
+        out.push_str("\",");
+    }
+    out.push_str(&line[pos + 1..]);
+    out
 }
 
 impl Router {
@@ -229,6 +308,15 @@ impl Router {
         let err_backend = obs.counter("route.err_backend");
         let err_no_backend = obs.counter("route.err_no_backend");
         let migrations = obs.counter("route.migrations");
+        let trace = match &cfg.trace {
+            Some(tc) => {
+                let mut t = TraceHandle::open(tc, obs.counter("trace.dropped"))?;
+                t.set_drop_window(obs.window("trace.dropped"));
+                Some(t)
+            }
+            None => None,
+        };
+        let win_ops = obs.window("ops");
         Ok(Router {
             ring: HashRing::new(backends.len(), cfg.vnodes),
             backends,
@@ -242,6 +330,9 @@ impl Router {
             err_backend,
             err_no_backend,
             migrations,
+            trace,
+            epoch: Instant::now(),
+            win_ops,
         })
     }
 
@@ -360,6 +451,29 @@ impl Router {
         }
     }
 
+    /// [`Router::forward`] plus correlation bookkeeping: time spent
+    /// forwarding (failed probes included) and the backend that finally
+    /// answered accumulate into the request's [`TraceCtx`].
+    fn forward_traced(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        b: usize,
+        raw: &str,
+        idempotent: bool,
+        ctx: Option<&TraceCtx>,
+    ) -> Result<String, ForwardErr> {
+        let t0 = Instant::now();
+        let res = self.forward(conns, b, raw, idempotent);
+        if let Some(ctx) = ctx {
+            ctx.forward_ns
+                .set(ctx.forward_ns.get() + t0.elapsed().as_nanos() as u64);
+            if res.is_ok() {
+                ctx.backend.set(Some(b));
+            }
+        }
+        res
+    }
+
     /// Does this reply say "that session does not live here"?
     fn is_no_session(reply: &str) -> bool {
         match Json::parse(reply) {
@@ -392,13 +506,14 @@ impl Router {
         id: u64,
         raw: &str,
         idempotent: bool,
+        ctx: Option<&TraceCtx>,
     ) -> String {
         let gate = self.gate(id);
         let _shared = rlock(&gate);
         if let Some(&b) = rlock(&self.table).get(&id) {
             // the session's state is THERE; a dead pin must fail loudly,
             // not silently re-route onto a backend without the state
-            return match self.forward(conns, b, raw, idempotent) {
+            return match self.forward_traced(conns, b, raw, idempotent, ctx) {
                 Ok(reply) => reply,
                 Err(e) => error_line(e.message()),
             };
@@ -413,7 +528,7 @@ impl Router {
             if i > 0 {
                 self.retries.fetch_add(1, Ordering::Relaxed);
             }
-            match self.forward(conns, b, raw, idempotent) {
+            match self.forward_traced(conns, b, raw, idempotent, ctx) {
                 Ok(reply) => {
                     if Self::is_no_session(&reply) {
                         // not here — keep probing; remember the home's
@@ -447,6 +562,7 @@ impl Router {
         &self,
         conns: &mut HashMap<usize, WireClient>,
         raw: &str,
+        ctx: Option<&TraceCtx>,
     ) -> String {
         let key = self.placements.fetch_add(1, Ordering::Relaxed);
         let Some(first) = self.ring_home(key) else {
@@ -458,7 +574,7 @@ impl Router {
             if i > 0 {
                 self.retries.fetch_add(1, Ordering::Relaxed);
             }
-            match self.forward(conns, b, raw, false) {
+            match self.forward_traced(conns, b, raw, false, ctx) {
                 Ok(reply) => {
                     if let Ok(v) = Json::parse(&reply) {
                         if v.get("ok") == Some(&Json::Bool(true)) {
@@ -489,6 +605,7 @@ impl Router {
         conns: &mut HashMap<usize, WireClient>,
         items: &[StepItem],
         raw: &str,
+        ctx: Option<&TraceCtx>,
     ) -> String {
         // hold every touched id's gate, in sorted unique order (same
         // global order as any concurrent batch — no lock cycles; a
@@ -517,7 +634,7 @@ impl Router {
         }
         if by_backend.len() == 1 && unroutable.is_empty() {
             let (&b, _) = by_backend.iter().next().expect("one entry");
-            return match self.forward(conns, b, raw, false) {
+            return match self.forward_traced(conns, b, raw, false, ctx) {
                 Ok(reply) => reply,
                 Err(e) => error_line(e.message()),
             };
@@ -528,7 +645,7 @@ impl Router {
         let mut ys: Vec<Result<f32, String>> =
             vec![Err("route: no live backend".to_string()); items.len()];
         for (b, idxs) in by_backend {
-            let sub = Json::obj(vec![
+            let mut sub_fields = vec![
                 ("op", Json::Str("step_batch".to_string())),
                 (
                     "ids",
@@ -552,9 +669,15 @@ impl Router {
                             .collect(),
                     ),
                 ),
-            ])
-            .dump();
-            match self.forward(conns, b, &sub, false) {
+            ];
+            if let Some(ctx) = ctx {
+                // split sub-batches carry the same correlation pair, so
+                // every shard of the batch joins back to one trace
+                sub_fields.push(("trace_id", Json::Str(ctx.trace_id.clone())));
+                sub_fields.push(("span_id", Json::Str(ctx.span_id.clone())));
+            }
+            let sub = Json::obj(sub_fields).dump();
+            match self.forward_traced(conns, b, &sub, false, ctx) {
                 Ok(reply) => {
                     let (sub_ys, sub_errs) = parse_batch_reply(&reply);
                     for (slot, &i) in idxs.iter().enumerate() {
@@ -949,6 +1072,79 @@ impl Router {
         }
     }
 
+    /// `{"op":"metrics","scope":"fleet"}`: fan `metrics` out to every
+    /// live backend and fold the parsed registries through
+    /// [`RegistrySnapshot::merge`] — the cross-process exercise of the
+    /// bucketwise [`crate::obs::HistogramSnapshot::merge`]. The reply
+    /// carries the merged totals, each backend's own (unmodified)
+    /// snapshot, the router's registry, and the cluster block; an
+    /// unreachable or unparsable backend is reported per-backend without
+    /// failing the roll-up.
+    fn fleet_metrics_reply(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+    ) -> String {
+        let mut merged = RegistrySnapshot::default();
+        let mut blocks: Vec<Json> = Vec::new();
+        for b in 0..self.backends.len() {
+            let addr = ("addr", Json::Str(self.backends[b].label.clone()));
+            if !self.alive(b) {
+                blocks.push(Json::obj(vec![
+                    addr,
+                    ("alive", Json::Bool(false)),
+                ]));
+                continue;
+            }
+            let block = match self.forward(conns, b, r#"{"op":"metrics"}"#, true)
+            {
+                Ok(reply) => match Json::parse(&reply) {
+                    Ok(v) if v.get("ok") == Some(&Json::Bool(true)) => {
+                        match RegistrySnapshot::from_metrics_json(&v) {
+                            Ok(snap) => {
+                                merged = merged.merge(&snap);
+                                Json::obj(vec![
+                                    addr,
+                                    ("alive", Json::Bool(true)),
+                                    ("metrics", v),
+                                ])
+                            }
+                            Err(e) => Json::obj(vec![
+                                addr,
+                                ("alive", Json::Bool(true)),
+                                ("error", Json::Str(e)),
+                            ]),
+                        }
+                    }
+                    _ => Json::obj(vec![
+                        addr,
+                        ("alive", Json::Bool(true)),
+                        (
+                            "error",
+                            Json::Str(
+                                "backend returned an error reply".to_string(),
+                            ),
+                        ),
+                    ]),
+                },
+                Err(e) => Json::obj(vec![
+                    addr,
+                    ("alive", Json::Bool(false)),
+                    ("error", Json::Str(e.message())),
+                ]),
+            };
+            blocks.push(block);
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("scope", Json::Str("fleet".to_string())),
+            ("merged", merged.to_json()),
+            ("backends", Json::Arr(blocks)),
+            ("router", self.obs.snapshot().to_json()),
+            ("cluster", self.cluster_block(None)),
+        ])
+        .dump()
+    }
+
     fn timer(&self, op: &str) -> Option<&Arc<Histogram>> {
         self.timers.get(op)
     }
@@ -962,43 +1158,124 @@ impl Router {
         conns: &mut HashMap<usize, WireClient>,
     ) -> String {
         let t0 = Instant::now();
-        let (name, reply) = self.dispatch(line, conns);
+        self.win_ops.add(1);
+        let (name, ctx, reply) = self.dispatch(line, conns);
+        let dur = t0.elapsed();
         if let Some(h) = self.timer(name) {
-            h.record_duration(t0.elapsed());
+            h.record_duration(dur);
+        }
+        if let (Some(trace), Some(ctx)) = (&self.trace, &ctx) {
+            if ctx.sampled {
+                trace.emit(&self.route_trace_event(name, ctx, dur, &reply));
+            }
         }
         reply
+    }
+
+    /// The router's side of an end-to-end trace: one event per sampled
+    /// routed op, carrying the correlation pair it forwarded, which
+    /// backend answered, and how much of the op was the forward itself.
+    fn route_trace_event(
+        &self,
+        op: &str,
+        ctx: &TraceCtx,
+        dur: Duration,
+        reply: &str,
+    ) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("ts_ns", Json::Num(self.epoch.elapsed().as_nanos() as f64)),
+            ("op", Json::Str(op.to_string())),
+            ("trace_id", Json::Str(ctx.trace_id.clone())),
+            ("span_id", Json::Str(ctx.span_id.clone())),
+        ];
+        if let Some(b) = ctx.backend.get() {
+            fields.push((
+                "backend",
+                Json::Str(self.backends[b].label.clone()),
+            ));
+        }
+        fields.push(("forward_ns", Json::Num(ctx.forward_ns.get() as f64)));
+        fields.push(("dur_ns", Json::Num(dur.as_nanos() as f64)));
+        let ok = Json::parse(reply)
+            .map(|v| v.get("ok") == Some(&Json::Bool(true)))
+            .unwrap_or(false);
+        fields.push(("ok", Json::Bool(ok)));
+        Json::obj(fields)
     }
 
     fn dispatch(
         &self,
         line: &str,
         conns: &mut HashMap<usize, WireClient>,
-    ) -> (&'static str, String) {
+    ) -> (&'static str, Option<TraceCtx>, String) {
         let v = match Json::parse(line) {
             // the exact bytes a backend would send for the same garbage
             Err(e) => {
-                return ("step", error_line(format!("bad json: {e}")))
+                return ("step", None, error_line(format!("bad json: {e}")))
             }
             Ok(v) => v,
         };
         // router-tier ops first: they are not part of the backend
         // protocol (a backend would reject them as unknown)
         match v.get("op").and_then(|o| o.as_str()) {
-            Some("health") => return ("health", self.health_reply()),
+            Some("health") => return ("health", None, self.health_reply()),
             Some("handoff") => {
-                return ("handoff", self.handoff_reply(conns, &v))
+                return ("handoff", None, self.handoff_reply(conns, &v))
             }
-            Some("drain") => return ("drain", self.drain_reply(conns, &v)),
+            Some("drain") => {
+                return ("drain", None, self.drain_reply(conns, &v))
+            }
             Some("rebalance") => {
-                return ("rebalance", self.rebalance_reply(conns))
+                return ("rebalance", None, self.rebalance_reply(conns))
             }
             _ => {}
         }
         let op = match parse_wire_op(&v) {
-            Err(e) => return ("step", error_line(e)),
+            Err(e) => return ("step", None, error_line(e)),
             Ok(op) => op,
         };
-        match op {
+        // with tracing configured, every well-formed op gets correlation
+        // context: client-supplied ids are reused (an upstream tracer
+        // keeps working), missing ones are minted, and only the missing
+        // keys are spliced into the forwarded line
+        let (ctx, fwd): (Option<TraceCtx>, Cow<'_, str>) = match &self.trace {
+            None => (None, Cow::Borrowed(line)),
+            Some(trace) => {
+                let incoming = crate::obs::span::from_wire(&v);
+                let (trace_id, had_trace) = match &incoming {
+                    Some(s) => (s.trace_id.clone(), true),
+                    None => (mint_id(), false),
+                };
+                let (span_id, had_span) =
+                    match incoming.as_ref().and_then(|s| s.span_id.clone()) {
+                        Some(s) => (s, true),
+                        None => (mint_id(), false),
+                    };
+                let mut add: Vec<(&str, &str)> = Vec::new();
+                if !had_trace {
+                    add.push(("trace_id", trace_id.as_str()));
+                }
+                if !had_span {
+                    add.push(("span_id", span_id.as_str()));
+                }
+                let fwd = if add.is_empty() {
+                    Cow::Borrowed(line)
+                } else {
+                    Cow::Owned(inject_correlation(line, &add))
+                };
+                let ctx = TraceCtx {
+                    trace_id,
+                    span_id,
+                    sampled: trace.should_sample(),
+                    backend: Cell::new(None),
+                    forward_ns: Cell::new(0),
+                };
+                (Some(ctx), fwd)
+            }
+        };
+        let cx = ctx.as_ref();
+        let fwd = fwd.as_ref();
+        let (name, reply) = match op {
             // same bytes as the backend's inline pong
             WireOp::Ping => (
                 "ping",
@@ -1008,30 +1285,30 @@ impl Router {
                 ])
                 .dump(),
             ),
-            WireOp::Open(_) => ("open", self.route_open(conns, line)),
+            WireOp::Open(_) => ("open", self.route_open(conns, fwd, cx)),
             WireOp::Restore { id: None, .. } => {
-                ("restore", self.route_open(conns, line))
+                ("restore", self.route_open(conns, fwd, cx))
             }
             WireOp::Restore { id: Some(id), .. } => {
-                ("restore", self.route_id(conns, id, line, false))
+                ("restore", self.route_id(conns, id, fwd, false, cx))
             }
             WireOp::Step { id, .. } => {
-                ("step", self.route_id(conns, id, line, false))
+                ("step", self.route_id(conns, id, fwd, false, cx))
             }
             WireOp::Predict { id, .. } => {
-                ("predict", self.route_id(conns, id, line, true))
+                ("predict", self.route_id(conns, id, fwd, true, cx))
             }
             WireOp::Snapshot { id } => {
-                ("snapshot", self.route_id(conns, id, line, true))
+                ("snapshot", self.route_id(conns, id, fwd, true, cx))
             }
             WireOp::Park { id } => {
-                ("park", self.route_id(conns, id, line, false))
+                ("park", self.route_id(conns, id, fwd, false, cx))
             }
             WireOp::Warm { id } => {
-                ("warm", self.route_id(conns, id, line, false))
+                ("warm", self.route_id(conns, id, fwd, false, cx))
             }
             WireOp::Close { id } => {
-                let reply = self.route_id(conns, id, line, false);
+                let reply = self.route_id(conns, id, fwd, false, cx);
                 if let Ok(v) = Json::parse(&reply) {
                     if v.get("ok") == Some(&Json::Bool(true)) {
                         self.forget(id);
@@ -1041,11 +1318,20 @@ impl Router {
             }
             WireOp::StepBatch(items) => (
                 "step_batch",
-                self.route_step_batch(conns, &items, line),
+                self.route_step_batch(conns, &items, fwd, cx),
             ),
             WireOp::Stats => ("stats", self.stats_reply(conns)),
-            WireOp::Metrics => ("metrics", self.metrics_reply()),
-        }
+            WireOp::Metrics => {
+                let fleet = v.get("scope").and_then(|s| s.as_str())
+                    == Some("fleet");
+                if fleet {
+                    ("metrics", self.fleet_metrics_reply(conns))
+                } else {
+                    ("metrics", self.metrics_reply())
+                }
+            }
+        };
+        (name, ctx, reply)
     }
 }
 
@@ -1094,6 +1380,9 @@ pub struct RouterServer {
     accept_join: Option<JoinHandle<()>>,
     health_join: Option<JoinHandle<()>>,
     conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Prometheus scrape endpoint (`--metrics-listen`), exposing the
+    /// router's own registry.
+    metrics: Option<MetricsServer>,
     local: String,
     unix_path: Option<PathBuf>,
     sock_lock: Option<SocketLock>,
@@ -1106,7 +1395,15 @@ impl RouterServer {
     ) -> Result<RouterServer, String> {
         let max_conns = cfg.max_conns;
         let health_interval = cfg.health_interval;
+        let metrics_listen = cfg.metrics_listen.clone();
         let router = Arc::new(Router::new(cfg)?);
+        let metrics = match &metrics_listen {
+            Some(addr) => Some(MetricsServer::bind(
+                addr,
+                Arc::clone(router.registry()),
+            )?),
+            None => None,
+        };
         let (listener, local, sock_lock) = Listener::bind(listen)?;
         listener
             .set_nonblocking(true)
@@ -1150,6 +1447,7 @@ impl RouterServer {
             accept_join: Some(accept_join),
             health_join: Some(health_join),
             conn_joins,
+            metrics,
             local,
             unix_path: match listen {
                 ListenAddr::Unix(p) => Some(p.clone()),
@@ -1169,9 +1467,17 @@ impl RouterServer {
         &self.router
     }
 
+    /// The metrics endpoint's bound address, when one was configured.
+    pub fn metrics_addr(&self) -> Option<&str> {
+        self.metrics.as_ref().map(|m| m.local_addr())
+    }
+
     /// Stop accepting, join every thread, remove the unix socket + lock.
     pub fn shutdown(mut self) -> Result<(), String> {
         self.stop.store(true, Ordering::Relaxed);
+        if let Some(metrics) = self.metrics.take() {
+            metrics.shutdown();
+        }
         if let Some(join) = self.accept_join.take() {
             let _ = join.join();
         }
@@ -1370,6 +1676,96 @@ mod tests {
             };
             assert_eq!(via, raw, "router not transparent for {line}");
         }
+        server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn inject_correlation_splices_only_missing_keys() {
+        let spliced = inject_correlation(
+            r#"{"op":"step","id":1,"x":[0.5],"c":0.0}"#,
+            &[("trace_id", "abc123"), ("span_id", "def456")],
+        );
+        let v = Json::parse(&spliced).expect("spliced line stays valid JSON");
+        assert_eq!(v.get("trace_id").and_then(|t| t.as_str()), Some("abc123"));
+        assert_eq!(v.get("span_id").and_then(|s| s.as_str()), Some("def456"));
+        assert_eq!(v.get("op").and_then(|o| o.as_str()), Some("step"));
+        assert_eq!(v.get("id").and_then(|i| i.as_f64()), Some(1.0));
+        // nothing to add → the line passes through byte-identically
+        let same = inject_correlation(r#"{"op":"ping"}"#, &[]);
+        assert_eq!(same, r#"{"op":"ping"}"#);
+    }
+
+    #[test]
+    fn traced_routing_is_byte_identical_and_events_correlate() {
+        let (server, addr) = backend(1);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let trace_path = std::env::temp_dir().join(format!(
+            "ccn_route_trace_{}_{nanos}.jsonl",
+            std::process::id()
+        ));
+        let mut cfg = fast_cfg(vec![addr.clone()]);
+        cfg.trace = Some(TraceConfig {
+            path: trace_path.clone(),
+            sample: 1,
+        });
+        let traced = Router::new(cfg).unwrap();
+        let plain = Router::new(fast_cfg(vec![addr])).unwrap();
+        let mut tc = HashMap::new();
+        let mut pc = HashMap::new();
+        // two twin sessions on the one backend: session 1 via the traced
+        // router, session 2 via the untraced one, same spec and inputs
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":2,"seed":11}"#;
+        let o1 = traced.handle_line(open, &mut tc);
+        let o2 = plain.handle_line(open, &mut pc);
+        assert!(o1.contains(r#""id":1"#), "{o1}");
+        assert!(o2.contains(r#""id":2"#), "{o2}");
+        for tick in 0..5 {
+            let x = 0.1 * tick as f64;
+            let t = traced.handle_line(
+                &format!(r#"{{"op":"step","id":1,"x":[{x},0.5],"c":0.25}}"#),
+                &mut tc,
+            );
+            let p = plain.handle_line(
+                &format!(r#"{{"op":"step","id":2,"x":[{x},0.5],"c":0.25}}"#),
+                &mut pc,
+            );
+            // identical computation → identical y: tracing and
+            // correlation injection change nothing downstream
+            let ty = Json::parse(&t).unwrap().get("y").cloned();
+            let py = Json::parse(&p).unwrap().get("y").cloned();
+            assert_eq!(ty, py, "traced reply diverged at tick {tick}");
+        }
+        // a client-supplied trace id is reused, not replaced
+        let reply = traced.handle_line(
+            r#"{"op":"snapshot","id":1,"trace_id":"client-supplied-1"}"#,
+            &mut tc,
+        );
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+        drop(traced); // flush + join the trace writer
+        let body = std::fs::read_to_string(&trace_path).unwrap();
+        let events: Vec<Json> =
+            body.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(events.len(), 7, "sample=1 logs every op:\n{body}");
+        for ev in &events {
+            assert!(ev.get("trace_id").is_some(), "{ev:?}");
+            assert!(ev.get("span_id").is_some(), "{ev:?}");
+            assert!(ev.get("dur_ns").is_some(), "{ev:?}");
+            assert_eq!(ev.get("ok"), Some(&Json::Bool(true)), "{ev:?}");
+        }
+        let last = events.last().unwrap();
+        assert_eq!(
+            last.get("trace_id").and_then(|t| t.as_str()),
+            Some("client-supplied-1")
+        );
+        assert!(
+            last.get("backend").and_then(|b| b.as_str()).is_some(),
+            "forwarded op records its backend: {last:?}"
+        );
+        let _ = std::fs::remove_file(&trace_path);
         server.shutdown().unwrap();
     }
 

@@ -22,7 +22,7 @@ use ccn_rtrl::coordinator::{aggregate_runs, run_experiment, run_sweep, sweep};
 use ccn_rtrl::env::synthatari;
 use ccn_rtrl::metrics::render_table;
 use ccn_rtrl::nets::NetRegistry;
-use ccn_rtrl::obs::TraceConfig;
+use ccn_rtrl::obs::{MetricsServer, TraceConfig};
 #[cfg(feature = "pjrt")]
 use ccn_rtrl::runtime::{PjrtColumnarStage, PjrtRuntime};
 use ccn_rtrl::cluster::{RouterConfig, RouterServer};
@@ -169,6 +169,7 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let max_conns = args.usize_or("max-conns", 0);
     let trace_file = args.opt_str("trace-file");
     let trace_sample = args.opt_str("trace-sample");
+    let metrics_listen = args.opt_str("metrics-listen");
     let id_offset = args.u64_or("id-offset", 0);
     let id_stride = args.u64_or("id-stride", 1);
     args.finish()?;
@@ -213,6 +214,8 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
         })
         .transpose()?;
     let listen = listen.map(|s| ListenAddr::parse(&s)).transpose()?;
+    let metrics_listen =
+        metrics_listen.map(|s| ListenAddr::parse(&s)).transpose()?;
     let store_cfg = store_dir.map(|dir| StoreConfig::new(dir, resident_cap));
     eprintln!(
         "ccn serve: {shards} shard(s); {} (op: open|step|step_batch|predict|\
@@ -248,6 +251,17 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
             cfg.sample
         );
     }
+    // The scrape endpoint shares the Service's registry by Arc, so it
+    // must start before `Server::bind` consumes the service. It works on
+    // the stdio path too: one protocol client, many scrapers.
+    let metrics = metrics_listen
+        .map(|addr| {
+            MetricsServer::bind(&addr, std::sync::Arc::clone(service.registry()))
+        })
+        .transpose()?;
+    if let Some(m) = &metrics {
+        eprintln!("metrics exposition on {} (GET /metrics)", m.local_addr());
+    }
     let parked = match service.pool().stats().iter().map(|s| s.parked).sum::<usize>()
     {
         0 => String::new(),
@@ -269,6 +283,9 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
                 return Err(format!("shutdown flush: {e}"));
             }
         }
+        if let Some(m) = metrics {
+            m.shutdown();
+        }
         return served;
     };
     let server = Server::bind(service, &addr, max_conns)?;
@@ -283,6 +300,9 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     );
     wait_for_stdin_eof();
     let flushed = server.shutdown()?;
+    if let Some(m) = metrics {
+        m.shutdown();
+    }
     if flushed > 0 {
         eprintln!("flushed {flushed} session(s) to the store");
     }
@@ -299,7 +319,17 @@ fn cmd_route(mut args: Args) -> Result<(), String> {
     let connect_timeout_ms = args.u64_or("connect-timeout-ms", 1_000);
     let request_timeout_ms = args.u64_or("request-timeout-ms", 10_000);
     let retries = args.u64_or("retries", 2);
+    let trace_file = args.opt_str("trace-file");
+    let trace_sample = args.opt_str("trace-sample");
+    let metrics_listen = args.opt_str("metrics-listen");
     args.finish()?;
+    if trace_sample.is_some() && trace_file.is_none() {
+        return Err(
+            "--trace-sample needs --trace-file: there is nowhere to write \
+             the sampled events"
+                .into(),
+        );
+    }
     if backends.is_empty() {
         return Err(
             "route: at least one --backend tcp://HOST:PORT|unix://PATH is \
@@ -322,8 +352,32 @@ fn cmd_route(mut args: Args) -> Result<(), String> {
     cfg.client.write_timeout =
         std::time::Duration::from_millis(request_timeout_ms);
     cfg.client.retries = retries.min(u32::MAX as u64) as u32;
+    cfg.trace = trace_file
+        .map(|path| -> Result<TraceConfig, String> {
+            let sample = match &trace_sample {
+                None => 1,
+                Some(s) => s.parse::<u64>().ok().filter(|&n| n >= 1).ok_or_else(
+                    || format!("--trace-sample must be an integer >= 1, got {s:?}"),
+                )?,
+            };
+            Ok(TraceConfig { path: PathBuf::from(path), sample })
+        })
+        .transpose()?;
+    cfg.metrics_listen =
+        metrics_listen.map(|s| ListenAddr::parse(&s)).transpose()?;
     let n = cfg.backends.len();
+    if let Some(tc) = &cfg.trace {
+        eprintln!(
+            "trace: {} (1 in {} ops sampled; trace_id/span_id correlate \
+             with backend traces)",
+            tc.path.display(),
+            tc.sample
+        );
+    }
     let server = RouterServer::bind(cfg, &listen)?;
+    if let Some(addr) = server.metrics_addr() {
+        eprintln!("metrics exposition on {addr} (GET /metrics)");
+    }
     eprintln!(
         "ccn route: consistent-hash routing over {n} backend(s); cluster \
          ops: health|handoff|drain|rebalance (plus the full serve protocol)"
@@ -468,7 +522,7 @@ fn main() {
                  sweep adds: --seeds 0,1,2 --threads T\n\
                  serve options: --shards N --store-dir DIR --resident-cap K\n\
                    --listen tcp://HOST:PORT|unix://PATH --max-conns M\n\
-                   --trace-file PATH --trace-sample N\n\
+                   --trace-file PATH --trace-sample N --metrics-listen ADDR\n\
                    (JSONL protocol on stdin/stdout by default; ops: open|step|\n\
                    step_batch|predict|snapshot|restore|park|warm|close|stats|\n\
                    metrics; every learner spec above is serveable and\n\
@@ -478,17 +532,25 @@ fn main() {
                    many concurrent clients over TCP or a unix socket instead\n\
                    of stdio, until stdin closes. --trace-file appends one\n\
                    JSONL event per sampled op (1 in N, default every op) with\n\
-                   latency and stage breakdown. --id-offset K --id-stride N\n\
+                   latency and stage breakdown. --metrics-listen ADDR serves\n\
+                   Prometheus text exposition on GET /metrics over a second\n\
+                   listener. --id-offset K --id-stride N\n\
                    makes this backend mint only ids of residue class K mod N,\n\
                    so a cluster's backends never collide)\n\
                  route options: --listen tcp://HOST:PORT|unix://PATH\n\
                    --backend ADDR (repeat per backend) --max-conns M\n\
                    --health-interval-ms H --connect-timeout-ms C\n\
                    --request-timeout-ms R --retries K\n\
+                   --trace-file PATH --trace-sample N --metrics-listen ADDR\n\
                    (consistent-hash routes session ids over the backends,\n\
                    serving the full serve protocol transparently plus the\n\
                    cluster ops health|handoff|drain|rebalance — live\n\
-                   store-backed session migration between backends)"
+                   store-backed session migration between backends.\n\
+                   --trace-file emits router-side trace events whose\n\
+                   trace_id/span_id are injected into forwarded ops so\n\
+                   backend traces join on trace_id; metrics {{\"scope\":\n\
+                   \"fleet\"}} rolls every backend's registry into one merged\n\
+                   block; --metrics-listen ADDR serves GET /metrics)"
             );
             std::process::exit(2);
         }

@@ -1,0 +1,335 @@
+//! Prometheus text exposition: the whole registry as scrapeable
+//! plaintext, behind a zero-dependency HTTP/1.1 `GET /metrics`
+//! responder (`--metrics-listen`).
+//!
+//! Two pieces:
+//!
+//! - [`render_prometheus`]: encode one [`RegistrySnapshot`] in the
+//!   Prometheus text format (version 0.0.4). Histograms become
+//!   *cumulative* `_bucket{le="..."}` series (upper bounds from
+//!   [`bucket_bounds`], a terminal `+Inf` bucket, `_sum`/`_count`),
+//!   counters become `_total` series, windowed counters become gauges
+//!   labelled by window. Names are sanitized (`op.step` →
+//!   `ccn_op_step_ns`) and values are nanoseconds where the registry's
+//!   are.
+//! - [`MetricsServer`]: a minimal HTTP responder over the serve
+//!   transport's [`Listener`] (TCP or unix socket, no external crates).
+//!   Each scrape takes a fresh snapshot, so the endpoint is
+//!   measurement-only by construction — it shares nothing with the
+//!   serving path but the registry's atomics.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::serve::transport::{Listener, SocketLock, Stream, POLL_INTERVAL};
+use crate::serve::ListenAddr;
+
+use super::{bucket_bounds, HistogramSnapshot, Registry, RegistrySnapshot, N_BUCKETS};
+
+/// Every exported series name starts with this.
+const NAMESPACE: &str = "ccn";
+/// A scraper that takes longer than this to send its request line (or
+/// drain the response) is cut off — the endpoint must never wedge.
+const SCRAPE_IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// Longest request head we will buffer before answering.
+const MAX_REQUEST_HEAD: usize = 8 * 1024;
+
+/// `metric.name` → `metric_name`: Prometheus names are
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`; everything else becomes `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect()
+}
+
+fn render_histogram(out: &mut String, name: &str, h: &HistogramSnapshot) {
+    let base = format!("{NAMESPACE}_{}_ns", sanitize(name));
+    out.push_str(&format!("# TYPE {base} histogram\n"));
+    let mut cum = 0u64;
+    for i in 0..N_BUCKETS {
+        let n = h.bucket_count(i);
+        if n == 0 {
+            continue;
+        }
+        cum += n;
+        let (_, hi) = bucket_bounds(i);
+        out.push_str(&format!("{base}_bucket{{le=\"{hi}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{base}_bucket{{le=\"+Inf\"}} {cum}\n"));
+    out.push_str(&format!("{base}_sum {}\n", h.sum()));
+    out.push_str(&format!("{base}_count {cum}\n"));
+}
+
+/// Encode one registry snapshot as Prometheus text exposition (0.0.4).
+pub fn render_prometheus(snap: &RegistrySnapshot) -> String {
+    let mut out = String::new();
+    for (name, h) in &snap.hists {
+        render_histogram(&mut out, name, h);
+    }
+    for (name, &v) in &snap.counters {
+        let base = format!("{NAMESPACE}_{}_total", sanitize(name));
+        out.push_str(&format!("# TYPE {base} counter\n{base} {v}\n"));
+    }
+    for (name, w) in &snap.windows {
+        let base = format!("{NAMESPACE}_window_{}", sanitize(name));
+        out.push_str(&format!("# TYPE {base} gauge\n"));
+        for (label, n) in
+            [("1s", w.last_1s), ("10s", w.last_10s), ("60s", w.last_60s)]
+        {
+            out.push_str(&format!("{base}{{window=\"{label}\"}} {n}\n"));
+        }
+    }
+    out
+}
+
+fn http_response(status: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Read the request head (through the blank line, bounded) and answer
+/// one scrape. Any I/O failure just drops the connection — a scraper is
+/// never worth an error path that could wedge the accept loop.
+fn answer_scrape(mut stream: Stream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(SCRAPE_IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(SCRAPE_IO_TIMEOUT));
+    let mut head: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        if head.windows(4).any(|w| w == b"\r\n\r\n")
+            || head.windows(2).any(|w| w == b"\n\n")
+            || head.len() > MAX_REQUEST_HEAD
+        {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(_) => break, // timeout/reset: answer what we have
+        }
+    }
+    let first_line = match std::str::from_utf8(&head) {
+        Ok(text) => text.lines().next().unwrap_or("").to_string(),
+        Err(_) => String::new(),
+    };
+    let mut parts = first_line.split_whitespace();
+    let (method, path) =
+        (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let reply = if method != "GET" {
+        http_response("405 Method Not Allowed", "text/plain", "GET only\n")
+    } else if path == "/metrics" || path.starts_with("/metrics?") {
+        let body = render_prometheus(&registry.snapshot());
+        http_response(
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            &body,
+        )
+    } else {
+        http_response(
+            "404 Not Found",
+            "text/plain",
+            "try /metrics\n",
+        )
+    };
+    let _ = stream.write_all(&reply).and_then(|()| stream.flush());
+    stream.shutdown();
+}
+
+/// The `--metrics-listen` endpoint: a background accept loop answering
+/// `GET /metrics` scrapes against a shared [`Registry`]. Scrapes are
+/// handled serially (they are rare, read-only and bounded by
+/// [`SCRAPE_IO_TIMEOUT`]); serving traffic never routes through here.
+pub struct MetricsServer {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+    local: String,
+    unix_path: Option<PathBuf>,
+    sock_lock: Option<SocketLock>,
+}
+
+impl MetricsServer {
+    pub fn bind(
+        addr: &ListenAddr,
+        registry: Arc<Registry>,
+    ) -> Result<MetricsServer, String> {
+        let (listener, local, sock_lock) = Listener::bind(addr)?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("metrics-listen: set nonblocking: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let join = {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok(stream) => {
+                            let _ = stream.set_nonblocking(false);
+                            answer_scrape(stream, &registry);
+                        }
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            std::thread::sleep(POLL_INTERVAL);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => std::thread::sleep(POLL_INTERVAL),
+                    }
+                }
+            })
+        };
+        Ok(MetricsServer {
+            stop,
+            join: Some(join),
+            local,
+            unix_path: match addr {
+                ListenAddr::Unix(p) => Some(p.clone()),
+                ListenAddr::Tcp(_) => None,
+            },
+            sock_lock,
+        })
+    }
+
+    /// The bound endpoint (real port when 0 was requested).
+    pub fn local_addr(&self) -> &str {
+        &self.local
+    }
+
+    /// Stop accepting and join the loop; removes a unix socket + lock.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+        if let Some(path) = &self.unix_path {
+            let _ = std::fs::remove_file(path);
+        }
+        drop(self.sock_lock.take());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series_value(text: &str, line_start: &str) -> Option<f64> {
+        text.lines()
+            .find(|l| l.starts_with(line_start))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+    }
+
+    #[test]
+    fn histogram_series_are_cumulative_and_count_matches_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram("op.step");
+        for v in [1u64, 1, 5, 900, 900, 900] {
+            h.record(v);
+        }
+        let text = render_prometheus(&reg.snapshot());
+        assert!(text.contains("# TYPE ccn_op_step_ns histogram"), "{text}");
+        // buckets: 1 → le=1 (2 events), 5 → le=7, 900 → le=1023
+        assert_eq!(series_value(&text, "ccn_op_step_ns_bucket{le=\"1\"}"), Some(2.0));
+        assert_eq!(series_value(&text, "ccn_op_step_ns_bucket{le=\"7\"}"), Some(3.0));
+        assert_eq!(
+            series_value(&text, "ccn_op_step_ns_bucket{le=\"1023\"}"),
+            Some(6.0)
+        );
+        assert_eq!(
+            series_value(&text, "ccn_op_step_ns_bucket{le=\"+Inf\"}"),
+            Some(6.0)
+        );
+        assert_eq!(series_value(&text, "ccn_op_step_ns_count"), Some(6.0));
+        assert_eq!(
+            series_value(&text, "ccn_op_step_ns_sum"),
+            Some((1 + 1 + 5 + 900 * 3) as f64)
+        );
+        // cumulative counts never decrease as le grows
+        let mut prev = -1.0;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket line: {line}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn counters_and_windows_export_with_sanitized_names() {
+        let reg = Registry::new();
+        reg.counter("transport.err_decode")
+            .fetch_add(3, Ordering::Relaxed);
+        reg.window("ops").add(12);
+        let text = render_prometheus(&reg.snapshot());
+        assert!(
+            text.contains("# TYPE ccn_transport_err_decode_total counter"),
+            "{text}"
+        );
+        assert_eq!(
+            series_value(&text, "ccn_transport_err_decode_total"),
+            Some(3.0)
+        );
+        assert!(text.contains("# TYPE ccn_window_ops gauge"), "{text}");
+        assert_eq!(
+            series_value(&text, "ccn_window_ops{window=\"10s\"}"),
+            Some(12.0)
+        );
+    }
+
+    #[test]
+    fn empty_histograms_still_emit_a_complete_series() {
+        let reg = Registry::new();
+        reg.histogram("stage.queue_wait");
+        let text = render_prometheus(&reg.snapshot());
+        assert_eq!(
+            series_value(&text, "ccn_stage_queue_wait_ns_bucket{le=\"+Inf\"}"),
+            Some(0.0)
+        );
+        assert_eq!(series_value(&text, "ccn_stage_queue_wait_ns_count"), Some(0.0));
+        assert_eq!(series_value(&text, "ccn_stage_queue_wait_ns_sum"), Some(0.0));
+    }
+
+    #[test]
+    fn http_endpoint_answers_scrapes_and_404s_elsewhere() {
+        let reg = Arc::new(Registry::standard());
+        reg.histogram("op.step").record(1000);
+        let srv = MetricsServer::bind(
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            Arc::clone(&reg),
+        )
+        .unwrap();
+        let hostport = srv.local_addr().strip_prefix("tcp://").unwrap();
+        let scrape = |path: &str| -> String {
+            let mut s = std::net::TcpStream::connect(hostport).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut body = String::new();
+            s.read_to_string(&mut body).unwrap();
+            body
+        };
+        let ok = scrape("/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("ccn_op_step_ns_count 1"), "{ok}");
+        // every pre-registered op series is present even at count 0
+        for op in super::super::names::OPS {
+            assert!(
+                ok.contains(&format!("ccn_op_{}_ns_count", sanitize(op))),
+                "missing op series {op}"
+            );
+        }
+        let missing = scrape("/other");
+        assert!(missing.starts_with("HTTP/1.1 404"), "{missing}");
+        srv.shutdown();
+    }
+}

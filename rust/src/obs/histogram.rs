@@ -191,6 +191,56 @@ impl HistogramSnapshot {
         hi_obs
     }
 
+    /// Inverse of [`HistogramSnapshot::to_json`]: rebuild a snapshot
+    /// from the wire shape, so a fleet roll-up can re-merge per-backend
+    /// `metrics` replies with the in-process [`HistogramSnapshot::merge`].
+    /// The derived fields (`count`, `p*_ns`) are recomputed from the
+    /// buckets, never trusted from the wire; `min_ns == 0` with a zero
+    /// count restores the empty sentinel so merge identity still holds.
+    pub fn from_json(v: &Json) -> Result<HistogramSnapshot, String> {
+        let field = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(|n| n.as_f64())
+                .filter(|&n| n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("histogram: missing or invalid '{key}'"))
+        };
+        let mut buckets = [0u64; N_BUCKETS];
+        let pairs = v
+            .get("buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| "histogram: missing 'buckets' array".to_string())?;
+        for pair in pairs {
+            let pair = pair
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| "histogram: bucket is not a [lo, count] pair".to_string())?;
+            let lo = pair[0]
+                .as_f64()
+                .filter(|&n| n >= 0.0 && n.fract() == 0.0)
+                .ok_or_else(|| "histogram: bucket lo is not an integer".to_string())?
+                as u64;
+            let n = pair[1]
+                .as_f64()
+                .filter(|&n| n >= 0.0 && n.fract() == 0.0)
+                .ok_or_else(|| "histogram: bucket count is not an integer".to_string())?
+                as u64;
+            let i = bucket_index(lo);
+            if bucket_bounds(i).0 != lo {
+                return Err(format!("histogram: {lo} is not a bucket lower bound"));
+            }
+            buckets[i] += n;
+        }
+        let count: u64 = buckets.iter().sum();
+        let min = field("min_ns")?;
+        Ok(HistogramSnapshot {
+            buckets,
+            sum: field("sum_ns")?,
+            min: if count == 0 { u64::MAX } else { min },
+            max: field("max_ns")?,
+        })
+    }
+
     /// The one histogram JSON shape used everywhere: the `metrics` wire
     /// op, the `stats` latency block sources, and every `BENCH_*.json`.
     /// `buckets` is sparse — ascending `[lo_ns, count]` pairs for the
@@ -416,6 +466,46 @@ mod tests {
             total += n;
         }
         assert_eq!(total, j.get("count").and_then(|v| v.as_f64()).unwrap());
+    }
+
+    #[test]
+    fn json_round_trip_reconstructs_the_snapshot_exactly() {
+        let mut rng = Xoshiro256::seed_from_u64(0xF1EE);
+        for n in [0usize, 1, 57, 400] {
+            let snap = random_snapshot(&mut rng, n);
+            let back = HistogramSnapshot::from_json(&snap.to_json()).unwrap();
+            assert_eq!(back, snap, "round trip at n={n}");
+        }
+        // empty round trip restores the min sentinel, so merge identity
+        // survives the wire
+        let empty = HistogramSnapshot::from_json(&HistogramSnapshot::empty().to_json()).unwrap();
+        let a = random_snapshot(&mut rng, 33);
+        assert_eq!(a.merge(&empty), a);
+    }
+
+    #[test]
+    fn parsed_snapshots_merge_count_preserving() {
+        let mut rng = Xoshiro256::seed_from_u64(0xDEC0);
+        let (a, b) = (random_snapshot(&mut rng, 120), random_snapshot(&mut rng, 81));
+        let wire_merge = HistogramSnapshot::from_json(&a.to_json())
+            .unwrap()
+            .merge(&HistogramSnapshot::from_json(&b.to_json()).unwrap());
+        assert_eq!(wire_merge, a.merge(&b));
+        assert_eq!(wire_merge.count(), a.count() + b.count());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_shapes() {
+        for bad in [
+            r#"{"sum_ns":0,"min_ns":0,"max_ns":0}"#,
+            r#"{"sum_ns":0,"min_ns":0,"max_ns":0,"buckets":[[3,1]]}"#,
+            r#"{"sum_ns":0,"min_ns":0,"max_ns":0,"buckets":[[1]]}"#,
+            r#"{"sum_ns":0,"min_ns":0,"max_ns":0,"buckets":[[1,-2]]}"#,
+            r#"{"min_ns":0,"max_ns":0,"buckets":[]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(HistogramSnapshot::from_json(&v).is_err(), "{bad}");
+        }
     }
 
     #[test]

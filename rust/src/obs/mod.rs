@@ -1,17 +1,27 @@
 //! `obs` — zero-dependency telemetry: latency histograms, named
 //! counters, and a structured trace log for the serving stack.
 //!
-//! Three pieces:
+//! The pieces:
 //!
 //! - [`Histogram`]: log2-bucketed latency histogram over atomics.
 //!   Recording is four relaxed atomic ops; snapshots are mergeable and
 //!   serialize to the one histogram JSON shape shared by the `metrics`
 //!   wire op and every `BENCH_*.json`.
-//! - [`Registry`]: named histograms and counters handed out as `Arc`s.
-//!   Callers resolve their handles once (at shard/connection setup), so
-//!   the hot path never touches the registry lock.
+//! - [`WindowedCounter`]: lock-free ring of one-second buckets, so
+//!   `stats`/`metrics` report recent *rates* (1s/10s/60s) next to the
+//!   lifetime totals.
+//! - [`Registry`]: named histograms, counters and windows handed out as
+//!   `Arc`s. Callers resolve their handles once (at shard/connection
+//!   setup), so the hot path never touches the registry lock.
+//!   [`RegistrySnapshot`] round-trips through the `metrics` reply shape
+//!   and merges across processes — the router's fleet-scope roll-up is
+//!   `fold(merge)` over parsed backend replies.
 //! - [`trace::TraceHandle`]: optional JSONL trace log behind a bounded
-//!   channel and a dedicated writer thread (`ccn serve --trace-file`).
+//!   channel and a dedicated writer thread (`ccn serve --trace-file`,
+//!   `ccn route --trace-file`), with [`span`] correlation ids stitching
+//!   router and backend events into one end-to-end trace.
+//! - [`expo::MetricsServer`]: zero-dep Prometheus text endpoint
+//!   (`--metrics-listen`).
 //!
 //! # Naming convention
 //!
@@ -43,11 +53,17 @@
 //! predictions, shard routing, or persisted state, and recording never
 //! blocks (the trace queue drops on overflow rather than backpressure).
 
+pub mod expo;
 pub mod histogram;
+pub mod span;
 pub mod trace;
+pub mod window;
 
+pub use expo::{render_prometheus, MetricsServer};
 pub use histogram::{bucket_bounds, bucket_index, Histogram, HistogramSnapshot, N_BUCKETS};
+pub use span::{mint_id, SpanIds};
 pub use trace::{TraceConfig, TraceHandle};
+pub use window::{WindowCounts, WindowedCounter};
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -96,6 +112,11 @@ pub mod names {
         "transport.err_io",
         "trace.dropped",
     ];
+
+    /// Windowed rate counters ([`super::Registry::window`]): recent
+    /// throughput next to the lifetime totals.
+    pub const WINDOWS: [&str; 5] =
+        ["ops", "steps", "parks", "warms", "trace.dropped"];
 }
 
 /// Named histograms + counters, shared via `Arc` across shards, the
@@ -105,6 +126,7 @@ pub mod names {
 pub struct Registry {
     hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
     counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    windows: Mutex<BTreeMap<String, Arc<WindowedCounter>>>,
 }
 
 /// A poisoned telemetry lock must not take the serving path down with
@@ -131,6 +153,9 @@ impl Registry {
         }
         for counter in names::COUNTERS {
             reg.counter(counter);
+        }
+        for win in names::WINDOWS {
+            reg.window(win);
         }
         reg
     }
@@ -161,6 +186,19 @@ impl Registry {
         }
     }
 
+    /// Get-or-create the named windowed rate counter.
+    pub fn window(&self, name: &str) -> Arc<WindowedCounter> {
+        let mut windows = relock(&self.windows);
+        match windows.get(name) {
+            Some(w) => Arc::clone(w),
+            None => {
+                let w = Arc::new(WindowedCounter::new());
+                windows.insert(name.to_string(), Arc::clone(&w));
+                w
+            }
+        }
+    }
+
     /// One consistent read of the whole registry (see module docs for
     /// exactly what "consistent" means here).
     pub fn snapshot(&self) -> RegistrySnapshot {
@@ -172,21 +210,32 @@ impl Registry {
             .iter()
             .map(|(name, c)| (name.clone(), c.load(Ordering::Relaxed)))
             .collect();
-        RegistrySnapshot { hists, counters }
+        let windows = relock(&self.windows)
+            .iter()
+            .map(|(name, w)| (name.clone(), w.counts()))
+            .collect();
+        RegistrySnapshot { hists, counters, windows }
     }
 }
 
 /// Point-in-time copy of a [`Registry`]. Plain data; query and
-/// serialize freely.
+/// serialize freely. Snapshots are *mergeable* across processes
+/// ([`RegistrySnapshot::merge`]) and round-trip through the `metrics`
+/// reply shape ([`RegistrySnapshot::from_metrics_json`]) — that pair is
+/// what the router's fleet-scope roll-up is built from.
+#[derive(Default)]
 pub struct RegistrySnapshot {
     pub hists: BTreeMap<String, HistogramSnapshot>,
     pub counters: BTreeMap<String, u64>,
+    pub windows: BTreeMap<String, WindowCounts>,
 }
 
 impl RegistrySnapshot {
     /// Group by naming convention: `op.*` under `"ops"` and `stage.*`
     /// under `"stages"` (prefixes stripped), any other histograms under
-    /// `"histograms"`, counters flat under `"counters"`.
+    /// `"histograms"`, counters flat under `"counters"`, windowed rates
+    /// under `"windows"` (the latter two groups only when non-empty, so
+    /// pre-window consumers see an unchanged shape).
     pub fn to_json(&self) -> Json {
         let mut ops = BTreeMap::new();
         let mut stages = BTreeMap::new();
@@ -213,7 +262,82 @@ impl RegistrySnapshot {
         if !other.is_empty() {
             fields.push(("histograms", Json::Obj(other)));
         }
+        if !self.windows.is_empty() {
+            let windows: BTreeMap<String, Json> = self
+                .windows
+                .iter()
+                .map(|(name, w)| (name.clone(), w.to_json()))
+                .collect();
+            fields.push(("windows", Json::Obj(windows)));
+        }
         Json::obj(fields)
+    }
+
+    /// Inverse of [`RegistrySnapshot::to_json`]: rebuild a snapshot from
+    /// a `metrics` reply, re-applying the `op.`/`stage.` prefixes the
+    /// grouping stripped. Every group is optional (a pre-window backend
+    /// simply contributes no windows), but a present group must parse.
+    pub fn from_metrics_json(v: &Json) -> Result<RegistrySnapshot, String> {
+        let mut snap = RegistrySnapshot::default();
+        for (group, prefix) in [("ops", "op."), ("stages", "stage."), ("histograms", "")] {
+            let Some(block) = v.get(group) else { continue };
+            let block = block
+                .as_obj()
+                .ok_or_else(|| format!("metrics: '{group}' is not an object"))?;
+            for (name, hist) in block {
+                let parsed = HistogramSnapshot::from_json(hist)
+                    .map_err(|e| format!("metrics: {group}.{name}: {e}"))?;
+                snap.hists.insert(format!("{prefix}{name}"), parsed);
+            }
+        }
+        if let Some(block) = v.get("counters") {
+            let block = block
+                .as_obj()
+                .ok_or_else(|| "metrics: 'counters' is not an object".to_string())?;
+            for (name, val) in block {
+                let n = val
+                    .as_f64()
+                    .filter(|&n| n >= 0.0 && n.fract() == 0.0)
+                    .ok_or_else(|| format!("metrics: counter '{name}' is not an integer"))?;
+                snap.counters.insert(name.clone(), n as u64);
+            }
+        }
+        if let Some(block) = v.get("windows") {
+            let block = block
+                .as_obj()
+                .ok_or_else(|| "metrics: 'windows' is not an object".to_string())?;
+            for (name, win) in block {
+                let parsed = WindowCounts::from_json(win)
+                    .map_err(|e| format!("metrics: windows.{name}: {e}"))?;
+                snap.windows.insert(name.clone(), parsed);
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Union-keyed merge: histograms merge bucketwise
+    /// ([`HistogramSnapshot::merge`]), counters and window totals add. A
+    /// name present on one side only passes through unchanged, so the
+    /// empty snapshot is the identity and the fold over any backend
+    /// order gives the same fleet totals.
+    pub fn merge(&self, other: &RegistrySnapshot) -> RegistrySnapshot {
+        let mut merged = RegistrySnapshot {
+            hists: self.hists.clone(),
+            counters: self.counters.clone(),
+            windows: self.windows.clone(),
+        };
+        for (name, h) in &other.hists {
+            let slot = merged.hists.entry(name.clone()).or_default();
+            *slot = slot.merge(h);
+        }
+        for (name, &v) in &other.counters {
+            *merged.counters.entry(name.clone()).or_insert(0) += v;
+        }
+        for (name, w) in &other.windows {
+            let slot = merged.windows.entry(name.clone()).or_default();
+            *slot = slot.merge(w);
+        }
+        merged
     }
 }
 
@@ -287,12 +411,53 @@ mod tests {
         for counter in names::COUNTERS {
             assert!(snap.counters.contains_key(counter), "{counter}");
         }
+        for win in names::WINDOWS {
+            assert!(snap.windows.contains_key(win), "window {win}");
+        }
         // and the grouped JSON carries them even at count 0
         let j = snap.to_json();
         let ops = j.get("ops").and_then(|v| v.as_obj()).unwrap();
         assert_eq!(ops.len(), names::OPS.len());
         let stages = j.get("stages").and_then(|v| v.as_obj()).unwrap();
         assert_eq!(stages.len(), names::STAGES.len());
+        let windows = j.get("windows").and_then(|v| v.as_obj()).unwrap();
+        assert_eq!(windows.len(), names::WINDOWS.len());
+    }
+
+    #[test]
+    fn metrics_json_round_trips_and_merges_like_the_in_process_snapshots() {
+        let mk = |seed: u64| {
+            let reg = Registry::standard();
+            reg.histogram("op.step").record(1000 + seed);
+            reg.histogram("op.open").record(seed);
+            reg.histogram("stage.queue_wait").record(10 * seed + 1);
+            reg.counter("trace.dropped").fetch_add(seed, Ordering::Relaxed);
+            reg.counter(&format!("steps.kind{}", seed % 2))
+                .fetch_add(3, Ordering::Relaxed);
+            reg.window("ops").add(seed + 1);
+            reg.snapshot()
+        };
+        let (a, b) = (mk(3), mk(8));
+        // wire round trip is lossless for every group
+        let back = RegistrySnapshot::from_metrics_json(&a.to_json()).unwrap();
+        assert_eq!(back.to_json().dump(), a.to_json().dump());
+        // merging parsed replies == merging the in-process snapshots,
+        // including union-only keys (steps.kind0 vs steps.kind1)
+        let wire = RegistrySnapshot::from_metrics_json(&a.to_json())
+            .unwrap()
+            .merge(&RegistrySnapshot::from_metrics_json(&b.to_json()).unwrap());
+        let direct = a.merge(&b);
+        assert_eq!(wire.to_json().dump(), direct.to_json().dump());
+        assert_eq!(
+            direct.hists["op.step"].count(),
+            a.hists["op.step"].count() + b.hists["op.step"].count()
+        );
+        assert_eq!(direct.counters["trace.dropped"], 11);
+        assert_eq!(direct.counters["steps.kind0"], 3);
+        assert_eq!(direct.windows["ops"].last_60s, 4 + 9);
+        // merge identity
+        let empty = RegistrySnapshot::default();
+        assert_eq!(a.merge(&empty).to_json().dump(), a.to_json().dump());
     }
 
     #[test]

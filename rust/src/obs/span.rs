@@ -1,0 +1,137 @@
+//! Cross-process span context: the correlation ids that stitch one
+//! request's trace events together across the router/backend hop.
+//!
+//! The router mints a `trace_id` for each request it forwards (reusing a
+//! client-supplied one, so an upstream tracer keeps working) plus a
+//! `span_id` for its own hop, and splices both into the forwarded JSONL
+//! op as ordinary optional fields — the backend's strict op parser reads
+//! only the keys it knows, so correlated and uncorrelated requests are
+//! the same op. A tracing backend echoes the pair into its own event
+//! (`trace_id` + `parent_span_id`) and mints a fresh `span_id` for its
+//! side, which is exactly the join key `scripts/check_trace.py` uses to
+//! assemble the end-to-end span tree.
+//!
+//! Ids are 16 lowercase hex chars (a `u64`): unique across processes by
+//! mixing the wall clock, the pid and a process-local sequence through
+//! SplitMix64 (a bijection — two mints in the same nanosecond still
+//! differ because the sequence does).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Longest correlation id accepted from the wire — ids are copied into
+/// trace events, so an abusive client must not get megabytes echoed
+/// into the trace file.
+const MAX_WIRE_ID_LEN: usize = 64;
+
+static MINT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Mint one correlation id: 16 lowercase hex chars, unique across
+/// concurrent mints and across processes.
+pub fn mint_id() -> String {
+    let seq = MINT_SEQ.fetch_add(1, Ordering::Relaxed);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = std::process::id() as u64;
+    let raw = splitmix64(t ^ (pid << 32).wrapping_add(pid))
+        ^ splitmix64(seq.wrapping_mul(0xA24BAED4963EE407));
+    format!("{raw:016x}")
+}
+
+/// The correlation pair carried on a forwarded op. `span_id` is the
+/// *sender's* hop span — the receiver treats it as its parent.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanIds {
+    pub trace_id: String,
+    pub span_id: Option<String>,
+}
+
+/// Is `s` a plausible wire correlation id? Bounded and printable-plain
+/// (hex plus `-`, covering W3C-style ids) — anything else is ignored
+/// rather than copied around.
+fn valid_wire_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= MAX_WIRE_ID_LEN
+        && s.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-')
+}
+
+/// Extract the correlation fields from a parsed request object, if the
+/// sender attached any. Invalid or oversized values are treated as
+/// absent (correlation is diagnostic, never load-bearing).
+pub fn from_wire(v: &Json) -> Option<SpanIds> {
+    let trace_id = v
+        .get("trace_id")
+        .and_then(|t| t.as_str())
+        .filter(|t| valid_wire_id(t))?
+        .to_string();
+    let span_id = v
+        .get("span_id")
+        .and_then(|s| s.as_str())
+        .filter(|s| valid_wire_id(s))
+        .map(|s| s.to_string());
+    Some(SpanIds { trace_id, span_id })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_ids_are_hex_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = mint_id();
+            assert_eq!(id.len(), 16);
+            assert!(id.bytes().all(|b| b.is_ascii_hexdigit()));
+            assert!(seen.insert(id), "duplicate trace id minted");
+        }
+    }
+
+    #[test]
+    fn wire_extraction_validates_and_bounds() {
+        let ok = Json::parse(
+            r#"{"op":"step","trace_id":"a1b2c3","span_id":"deadbeef"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            from_wire(&ok),
+            Some(SpanIds {
+                trace_id: "a1b2c3".to_string(),
+                span_id: Some("deadbeef".to_string()),
+            })
+        );
+        // span without trace: no context
+        let no_trace = Json::parse(r#"{"op":"step","span_id":"x1"}"#).unwrap();
+        assert_eq!(from_wire(&no_trace), None);
+        // trace alone is enough
+        let bare = Json::parse(r#"{"op":"step","trace_id":"t-1"}"#).unwrap();
+        assert_eq!(
+            from_wire(&bare).unwrap(),
+            SpanIds { trace_id: "t-1".to_string(), span_id: None }
+        );
+        // junk is dropped, not echoed
+        let oversize = format!(
+            r#"{{"op":"step","trace_id":"{}"}}"#,
+            "a".repeat(MAX_WIRE_ID_LEN + 1)
+        );
+        assert_eq!(from_wire(&Json::parse(&oversize).unwrap()), None);
+        let bad_chars =
+            Json::parse(r#"{"op":"step","trace_id":"no spaces"}"#).unwrap();
+        assert_eq!(from_wire(&bad_chars), None);
+        let non_string =
+            Json::parse(r#"{"op":"step","trace_id":42}"#).unwrap();
+        assert_eq!(from_wire(&non_string), None);
+    }
+}

@@ -28,14 +28,23 @@ pub struct TraceConfig {
     pub sample: u64,
 }
 
-/// Live trace log. Owned by the `Service`; cloned handles are not needed
-/// because sampling and emission happen at the single dispatch point.
+/// Live trace log. Owned by the `Service` (or the cluster `Router`);
+/// cloned handles are not needed because sampling and emission happen at
+/// the single dispatch point. Dropping the handle flushes and joins the
+/// writer, so a handle buried in an `Arc`-shared owner still closes its
+/// file deterministically when the last owner goes away.
 pub struct TraceHandle {
-    tx: SyncSender<String>,
+    /// `Some` until the handle shuts down; `Option` so `Drop` can close
+    /// the channel *before* joining the writer (joining with a live
+    /// sender would deadlock on the blocked `recv`).
+    tx: Option<SyncSender<String>>,
     /// global op sequence number — drives deterministic 1-in-N sampling
     seq: AtomicU64,
     sample: u64,
     dropped: Arc<AtomicU64>,
+    /// optional windowed twin of `dropped`, so drop *rates* show up in
+    /// the `windows` block next to the lifetime total
+    dropped_win: Option<Arc<crate::obs::WindowedCounter>>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -61,12 +70,19 @@ impl TraceHandle {
             let _ = out.flush();
         });
         Ok(TraceHandle {
-            tx,
+            tx: Some(tx),
             seq: AtomicU64::new(0),
             sample: cfg.sample,
             dropped,
+            dropped_win: None,
             join: Some(join),
         })
+    }
+
+    /// Attach a windowed counter bumped alongside the lifetime
+    /// `trace.dropped` counter on every overflow.
+    pub fn set_drop_window(&mut self, win: Arc<crate::obs::WindowedCounter>) {
+        self.dropped_win = Some(win);
     }
 
     /// Advance the op sequence; true when this op should emit an event.
@@ -77,20 +93,33 @@ impl TraceHandle {
     /// Queue one event line. Never blocks: a full queue (or a dead
     /// writer) drops the event and bumps the `trace.dropped` counter.
     pub fn emit(&self, event: &Json) {
-        match self.tx.try_send(event.dump()) {
-            Ok(()) => {}
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                self.dropped.fetch_add(1, Ordering::Relaxed);
+        let sent = match &self.tx {
+            Some(tx) => !matches!(
+                tx.try_send(event.dump()),
+                Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_))
+            ),
+            None => false,
+        };
+        if !sent {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            if let Some(win) = &self.dropped_win {
+                win.add(1);
             }
         }
     }
 
     /// Close the channel and join the writer; all accepted events are on
-    /// disk when this returns.
-    pub fn finish(mut self) {
-        let join = self.join.take();
-        drop(self.tx);
-        if let Some(join) = join {
+    /// disk when this returns. (Equivalent to dropping the handle — kept
+    /// as an explicit name for shutdown paths.)
+    pub fn finish(self) {}
+}
+
+impl Drop for TraceHandle {
+    fn drop(&mut self) {
+        // close the channel first, then join: the writer exits its recv
+        // loop only once every sender is gone
+        drop(self.tx.take());
+        if let Some(join) = self.join.take() {
             let _ = join.join();
         }
     }

@@ -1,0 +1,273 @@
+//! Ring-buffered windowed counters: recent *rates* next to the
+//! registry's lifetime totals.
+//!
+//! A [`WindowedCounter`] is a ring of [`WINDOW_SLOTS`] one-second
+//! buckets. Each slot packs `(second stamp, count)` into one `AtomicU64`
+//! (stamp in the high 32 bits, count in the low 32), so both the lazy
+//! reset of a recycled slot and the increment are a single CAS — no
+//! lock, no lost updates, and a reader can always tell a fresh bucket
+//! from a stale one left over from the ring's previous lap. Per-second
+//! counts saturate at `u32::MAX` (4.2 billion events in one second is
+//! beyond anything this process can generate).
+//!
+//! Readers take a [`WindowCounts`] — the totals over the trailing 1s,
+//! 10s and 60s (including the current partial second) — which is a plain
+//! value: mergeable across processes (the cluster roll-up sums them) and
+//! serializable into the `windows` block of `stats`/`metrics` replies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Ring capacity. Must exceed the widest reported window (60s) so a
+/// stamp inside the window can never be a collision from a previous lap.
+pub const WINDOW_SLOTS: usize = 64;
+
+#[inline]
+fn pack(sec: u32, n: u32) -> u64 {
+    ((sec as u64) << 32) | n as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// Lock-free ring of one-second event buckets. Shared via `Arc` from
+/// [`super::Registry::window`]; `add` on the hot path is one load + one
+/// CAS in the common case.
+pub struct WindowedCounter {
+    epoch: Instant,
+    slots: [AtomicU64; WINDOW_SLOTS],
+}
+
+impl Default for WindowedCounter {
+    fn default() -> WindowedCounter {
+        WindowedCounter::new()
+    }
+}
+
+impl WindowedCounter {
+    pub fn new() -> WindowedCounter {
+        WindowedCounter {
+            epoch: Instant::now(),
+            // slot 0 starts stamped for second 0, count 0 — correct
+            slots: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    fn now_sec(&self) -> u64 {
+        self.epoch.elapsed().as_secs()
+    }
+
+    /// Count `n` events in the current second.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.add_at(self.now_sec(), n);
+    }
+
+    /// Totals over the trailing windows, ending at the current second.
+    pub fn counts(&self) -> WindowCounts {
+        self.counts_at(self.now_sec())
+    }
+
+    /// Clock-explicit `add` (the testable core; `sec` is seconds since
+    /// the counter's epoch, which only ever moves forward).
+    pub fn add_at(&self, sec: u64, n: u64) {
+        let stamp = sec as u32;
+        let slot = &self.slots[(sec as usize) % WINDOW_SLOTS];
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            let (s, c) = unpack(cur);
+            let next = if s == stamp {
+                // same second: bump in place (saturating)
+                pack(stamp, c.saturating_add(n.min(u32::MAX as u64) as u32))
+            } else {
+                // recycled slot from an earlier lap: restamp and reset
+                pack(stamp, n.min(u32::MAX as u64) as u32)
+            };
+            match slot.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Clock-explicit window read: totals over the 1/10/60 seconds
+    /// ending at `now_sec` inclusive. Slots whose stamp falls outside a
+    /// window (stale laps, future-free by construction) contribute 0.
+    pub fn counts_at(&self, now_sec: u64) -> WindowCounts {
+        let snap: [u64; WINDOW_SLOTS] =
+            std::array::from_fn(|i| self.slots[i].load(Ordering::Relaxed));
+        let total_over = |w: u64| -> u64 {
+            let lo = now_sec.saturating_sub(w - 1);
+            (lo..=now_sec)
+                .map(|sec| {
+                    let (s, c) = unpack(snap[(sec as usize) % WINDOW_SLOTS]);
+                    if s == sec as u32 {
+                        c as u64
+                    } else {
+                        0
+                    }
+                })
+                .sum()
+        };
+        WindowCounts {
+            last_1s: total_over(1),
+            last_10s: total_over(10),
+            last_60s: total_over(60),
+        }
+    }
+}
+
+/// Point-in-time read of a [`WindowedCounter`]: event totals over the
+/// trailing 1s/10s/60s. Plain data — mergeable (bucket totals add, same
+/// contract as [`super::HistogramSnapshot::merge`]) and serializable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowCounts {
+    pub last_1s: u64,
+    pub last_10s: u64,
+    pub last_60s: u64,
+}
+
+impl WindowCounts {
+    /// Windowwise sum — the cluster roll-up's per-window totals.
+    pub fn merge(&self, other: &WindowCounts) -> WindowCounts {
+        WindowCounts {
+            last_1s: self.last_1s + other.last_1s,
+            last_10s: self.last_10s + other.last_10s,
+            last_60s: self.last_60s + other.last_60s,
+        }
+    }
+
+    /// The `windows` block value: raw totals plus derived per-second
+    /// rates (`per_s_10s = last_10s / 10`, etc.).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("last_1s", Json::Num(self.last_1s as f64)),
+            ("last_10s", Json::Num(self.last_10s as f64)),
+            ("last_60s", Json::Num(self.last_60s as f64)),
+            ("per_s_1s", Json::Num(self.last_1s as f64)),
+            ("per_s_10s", Json::Num(self.last_10s as f64 / 10.0)),
+            ("per_s_60s", Json::Num(self.last_60s as f64 / 60.0)),
+        ])
+    }
+
+    /// Inverse of [`WindowCounts::to_json`] (the derived `per_s_*`
+    /// fields are recomputed, not read back).
+    pub fn from_json(v: &Json) -> Result<WindowCounts, String> {
+        let field = |key: &str| -> Result<u64, String> {
+            v.get(key)
+                .and_then(|n| n.as_f64())
+                .filter(|&n| n >= 0.0 && n.fract() == 0.0)
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("window: missing or invalid '{key}'"))
+        };
+        Ok(WindowCounts {
+            last_1s: field("last_1s")?,
+            last_10s: field("last_10s")?,
+            last_60s: field("last_60s")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_cover_exactly_the_trailing_windows() {
+        let w = WindowedCounter::new();
+        // one event per second for 100 virtual seconds
+        for sec in 0..100u64 {
+            w.add_at(sec, 1);
+        }
+        let c = w.counts_at(99);
+        assert_eq!(c.last_1s, 1);
+        assert_eq!(c.last_10s, 10);
+        assert_eq!(c.last_60s, 60);
+    }
+
+    #[test]
+    fn stale_laps_do_not_leak_into_a_window() {
+        let w = WindowedCounter::new();
+        w.add_at(5, 1000); // will be lapped by sec 5 + 64
+        w.add_at(5 + WINDOW_SLOTS as u64, 7);
+        let c = w.counts_at(5 + WINDOW_SLOTS as u64);
+        assert_eq!(c.last_1s, 7);
+        assert_eq!(c.last_60s, 7, "the lapped bucket must have been reset");
+        // and a slot that was never revisited reads as stale, not as a
+        // phantom contribution to a much later window
+        let later = w.counts_at(5 + 3 * WINDOW_SLOTS as u64);
+        assert_eq!(later.last_60s, 0);
+    }
+
+    #[test]
+    fn same_second_adds_accumulate() {
+        let w = WindowedCounter::new();
+        for _ in 0..50 {
+            w.add_at(3, 2);
+        }
+        assert_eq!(w.counts_at(3).last_1s, 100);
+        assert_eq!(w.counts_at(4).last_1s, 0, "next second starts empty");
+        assert_eq!(w.counts_at(4).last_10s, 100);
+    }
+
+    #[test]
+    fn concurrent_adds_are_all_counted() {
+        use std::sync::Arc;
+        let w = Arc::new(WindowedCounter::new());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let w = Arc::clone(&w);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        w.add_at(7, 1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(w.counts_at(7).last_1s, 40_000);
+    }
+
+    #[test]
+    fn json_round_trips_and_merge_sums() {
+        let a = WindowCounts { last_1s: 3, last_10s: 25, last_60s: 120 };
+        let b = WindowCounts { last_1s: 1, last_10s: 5, last_60s: 40 };
+        let back = WindowCounts::from_json(&a.to_json()).unwrap();
+        assert_eq!(back, a);
+        let m = a.merge(&b);
+        assert_eq!(m, WindowCounts { last_1s: 4, last_10s: 30, last_60s: 160 });
+        // derived rates are recomputed from the merged totals
+        assert_eq!(
+            m.to_json().get("per_s_10s").and_then(|v| v.as_f64()),
+            Some(3.0)
+        );
+        assert!(WindowCounts::from_json(&Json::obj(vec![(
+            "last_1s",
+            Json::Num(1.0)
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn wall_clock_entry_points_count_in_the_current_second() {
+        let w = WindowedCounter::new();
+        w.add(5);
+        w.add(2);
+        let c = w.counts();
+        // the test may straddle a second boundary; the 10s window cannot
+        assert_eq!(c.last_10s, 7);
+        assert!(c.last_1s <= 7);
+    }
+}

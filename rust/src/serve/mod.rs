@@ -78,13 +78,20 @@
 //! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
 //! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
-//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p99_us":8.0},...}}` |
-//! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...}}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p90_us":3.1,"p99_us":8.0},...,"trace_dropped":0},"windows":{"ops":{"last_1s":...,"per_s_10s":...},...}}` |
+//! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...},"windows":{...}}`. On the router tier, `{"op":"metrics","scope":"fleet"}` fans out to every live backend and returns the merged fleet snapshot ([`crate::cluster`]) |
 //! | `ping` | `{"op":"ping"}` | `{"ok":true,"pong":true}` (liveness probe, answered inline — no shard round-trip) |
 //! | `health` | `{"op":"health"}` | router-tier only ([`crate::cluster`]): per-backend liveness + stats roll-up |
 //! | `handoff` | `{"op":"handoff","id":1,"to":"tcp://..."}` | router-tier only: live-migrate session 1 to another backend |
 //! | `drain` | `{"op":"drain","backend":"tcp://..."}` | router-tier only: migrate every routed session off a backend |
 //! | `rebalance` | `{"op":"rebalance"}` | router-tier only: re-point sessions to their consistent-hash homes |
+//!
+//! Every request may additionally carry optional `trace_id` (and
+//! `span_id`) correlation fields — bounded plain strings, ignored by the
+//! op parser and absent from the reply. A tracing server echoes them
+//! into its sampled trace events (with the sender's `span_id` as
+//! `parent_span_id`), which is how a `ccn route` front end stitches its
+//! trace file and a backend's into one end-to-end span tree.
 //!
 //! `open` accepts any registered kind: `columnar:D`,
 //! `constructive:TOTAL:STEPS_PER_STAGE`,
@@ -207,14 +214,23 @@
 //! `step_scalar`/`step_batched` (the learner kernel itself) leaves
 //! routing overhead. All summaries in one reply derive from a single
 //! registry snapshot (see [`crate::obs`] for the consistency model), and
-//! `stats` carries a compact per-op `latency` block for dashboards that
-//! don't want full buckets. With `ccn serve --trace-file PATH
+//! `stats` carries a compact per-op `latency` block
+//! (`count/p50/p90/p99_us` plus the `trace_dropped` total) for
+//! dashboards that don't want full buckets. Both replies also carry a
+//! `windows` block — ring-buffered 1s/10s/60s totals and derived per-s
+//! rates for ops, steps, parks, warms and trace drops
+//! ([`crate::obs::WindowedCounter`]) — so throughput is readable as a
+//! *rate*, not just a lifetime count. With `ccn serve --trace-file PATH
 //! [--trace-sample N]` every Nth op additionally appends one JSONL event
 //! — `{"ts_ns":…,"op":"step","id":7,"shard":1,"dur_ns":…,"queue_ns":…,
 //! "exec_ns":…,"store_ns":…,"kernel_ns":…,"ok":true}` — written by a
 //! dedicated thread behind a bounded queue, so tracing never blocks the
-//! serving path. Telemetry is measurement-only: predictions and
-//! persisted state are bit-exact with it on, off, or sampled.
+//! serving path; a request carrying `trace_id`/`span_id` gets those (and
+//! a freshly minted hop `span_id`) echoed into its event. `ccn serve
+//! --metrics-listen tcp://H:P` additionally exposes the registry as
+//! Prometheus text at `GET /metrics` ([`crate::obs::MetricsServer`]).
+//! Telemetry is measurement-only: predictions and persisted state are
+//! bit-exact with all of it on, off, or sampled.
 
 pub mod batch;
 pub mod protocol;
@@ -232,7 +248,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::obs::{
-    self, Histogram, Registry, RegistrySnapshot, StageCell, TraceConfig, TraceHandle,
+    self, Histogram, Registry, RegistrySnapshot, SpanIds, StageCell, TraceConfig, TraceHandle,
+    WindowedCounter,
 };
 use crate::store::StoreConfig;
 use crate::util::json::Json;
@@ -247,6 +264,12 @@ pub struct Service {
     obs: Arc<Registry>,
     /// per-op wall-time histograms, index-aligned with [`obs::names::OPS`]
     op_timers: Vec<Arc<Histogram>>,
+    /// windowed rate counters (see [`obs::names::WINDOWS`]), resolved
+    /// once so the per-op bump never touches the registry lock
+    win_ops: Arc<WindowedCounter>,
+    win_steps: Arc<WindowedCounter>,
+    win_parks: Arc<WindowedCounter>,
+    win_warms: Arc<WindowedCounter>,
     trace: Option<TraceHandle>,
     /// origin for trace timestamps (monotonic, ns since service boot)
     epoch: Instant,
@@ -293,10 +316,18 @@ impl Service {
             .iter()
             .map(|name| obs.histogram(&format!("op.{name}")))
             .collect();
+        let win_ops = obs.window("ops");
+        let win_steps = obs.window("steps");
+        let win_parks = obs.window("parks");
+        let win_warms = obs.window("warms");
         Ok(Self {
             pool,
             obs,
             op_timers,
+            win_ops,
+            win_steps,
+            win_parks,
+            win_warms,
             trace: None,
             epoch: Instant::now(),
         })
@@ -327,7 +358,9 @@ impl Service {
     /// trace; call before serving traffic.
     pub fn set_trace(&mut self, cfg: &TraceConfig) -> Result<(), String> {
         let dropped = self.obs.counter("trace.dropped");
-        self.trace = Some(TraceHandle::open(cfg, dropped)?);
+        let mut trace = TraceHandle::open(cfg, dropped)?;
+        trace.set_drop_window(self.obs.window("trace.dropped"));
+        self.trace = Some(trace);
         Ok(())
     }
 
@@ -347,7 +380,24 @@ impl Service {
     /// the trace log samples it, emitting one event with the shard
     /// worker's stage breakdown).
     pub fn handle_op(&self, op: WireOp) -> Json {
+        self.handle_op_spanned(op, None)
+    }
+
+    /// [`Service::handle_op`] with the sender's correlation context: a
+    /// sampled trace event echoes `span.trace_id`, records the sender's
+    /// hop as `parent_span_id`, and mints its own `span_id` — the join
+    /// keys that stitch a router-side and a backend-side trace file into
+    /// one end-to-end span tree. Correlation never touches the reply.
+    pub fn handle_op_spanned(&self, op: WireOp, span: Option<&SpanIds>) -> Json {
         let (name, op_idx, id) = op_meta(&op);
+        self.win_ops.add(1);
+        match &op {
+            WireOp::Step { .. } => self.win_steps.add(1),
+            WireOp::StepBatch(items) => self.win_steps.add(items.len() as u64),
+            WireOp::Park { .. } => self.win_parks.add(1),
+            WireOp::Warm { .. } => self.win_warms.add(1),
+            _ => {}
+        }
         let sampled = self.trace.as_ref().filter(|t| t.should_sample());
         let stages = sampled.map(|_| Arc::new(StageCell::default()));
         let t0 = Instant::now();
@@ -361,6 +411,7 @@ impl Service {
                 id,
                 dur,
                 stages.as_deref(),
+                span,
                 &reply,
             ));
         }
@@ -433,9 +484,16 @@ impl Service {
                 ])
             })
             .collect();
-        // one registry snapshot for the whole latency block: no p50 in
-        // this reply can straddle an update of its p99's histogram
-        let latency = latency_summary(&self.obs.snapshot());
+        // one registry snapshot for the whole latency + windows block:
+        // no p50 in this reply can straddle an update of its p99's
+        // histogram, and rates come from the same instant as the totals
+        let snap = self.obs.snapshot();
+        let latency = latency_summary(&snap);
+        let windows: std::collections::BTreeMap<String, Json> = snap
+            .windows
+            .iter()
+            .map(|(name, w)| (name.clone(), w.to_json()))
+            .collect();
         Json::obj(vec![
             ("ok", Json::Bool(true)),
             ("sessions", Json::Num(sessions as f64)),
@@ -448,6 +506,7 @@ impl Service {
             ("kinds", Json::Obj(kinds)),
             ("shards", Json::Arr(shards)),
             ("latency", latency),
+            ("windows", Json::Obj(windows)),
         ])
     }
 
@@ -470,7 +529,13 @@ impl Service {
             Err(e) => Response::error(format!("bad json: {e}")).to_json(),
             Ok(v) => match parse_wire_op(&v) {
                 Err(e) => Response::error(e).to_json(),
-                Ok(op) => self.handle_op(op),
+                Ok(op) => {
+                    // the op parser reads only the keys it knows, so the
+                    // correlation fields ride any request without
+                    // changing its meaning (or its reply)
+                    let span = obs::span::from_wire(&v);
+                    self.handle_op_spanned(op, span.as_ref())
+                }
             },
         };
         reply.dump()
@@ -494,8 +559,10 @@ impl Service {
     }
 }
 
-/// Compact per-op `{count, p50_us, p99_us}` block for the `stats` reply,
-/// derived from one registry snapshot.
+/// Compact per-op `{count, p50_us, p90_us, p99_us}` block for the
+/// `stats` reply, derived from one registry snapshot, plus a flat
+/// `trace_dropped` count — a saturated trace queue must be visible
+/// without asking for the full registry.
 fn latency_summary(snap: &RegistrySnapshot) -> Json {
     let mut ops = std::collections::BTreeMap::new();
     for name in obs::names::OPS {
@@ -505,23 +572,31 @@ fn latency_summary(snap: &RegistrySnapshot) -> Json {
                 Json::obj(vec![
                     ("count", Json::Num(h.count() as f64)),
                     ("p50_us", Json::Num(h.percentile(0.50) as f64 / 1000.0)),
+                    ("p90_us", Json::Num(h.percentile(0.90) as f64 / 1000.0)),
                     ("p99_us", Json::Num(h.percentile(0.99) as f64 / 1000.0)),
                 ]),
             );
         }
+    }
+    if let Some(&dropped) = snap.counters.get("trace.dropped") {
+        ops.insert("trace_dropped".to_string(), Json::Num(dropped as f64));
     }
     Json::Obj(ops)
 }
 
 /// One JSONL trace event. Stage fields appear only when a shard worker
 /// filled the breakdown cell (single-session routed ops); fan-out and
-/// introspection ops carry the op-level duration alone.
+/// introspection ops carry the op-level duration alone. When the request
+/// carried correlation context, the event echoes its `trace_id`, records
+/// the sender's hop as `parent_span_id`, and mints a fresh `span_id` for
+/// this hop.
 fn trace_event(
     epoch: Instant,
     op: &str,
     id: Option<u64>,
     dur: Duration,
     stages: Option<&StageCell>,
+    span: Option<&SpanIds>,
     reply: &Json,
 ) -> Json {
     use std::sync::atomic::Ordering;
@@ -529,6 +604,13 @@ fn trace_event(
         ("ts_ns", Json::Num(epoch.elapsed().as_nanos() as f64)),
         ("op", Json::Str(op.to_string())),
     ];
+    if let Some(span) = span {
+        fields.push(("trace_id", Json::Str(span.trace_id.clone())));
+        fields.push(("span_id", Json::Str(obs::mint_id())));
+        if let Some(parent) = &span.span_id {
+            fields.push(("parent_span_id", Json::Str(parent.clone())));
+        }
+    }
     // ops that mint their id (open/restore) tag the event from the reply
     let id = id.or_else(|| {
         reply
@@ -600,13 +682,13 @@ mod tests {
         let epoch = Instant::now();
         let reply = Json::obj(vec![("ok", Json::Bool(true))]);
         let cell = StageCell::default();
-        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), &reply);
+        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), None, &reply);
         assert!(ev.get("shard").is_none(), "unfilled cell must not emit stages");
         assert_eq!(ev.get("op").and_then(|v| v.as_str()), Some("step"));
         assert_eq!(ev.get("ok"), Some(&Json::Bool(true)));
         cell.shard.store(2, Ordering::Relaxed);
         cell.kernel_ns.store(1234, Ordering::Relaxed);
-        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), &reply);
+        let ev = trace_event(epoch, "step", Some(3), Duration::from_micros(5), Some(&cell), None, &reply);
         assert_eq!(ev.get("shard").and_then(|v| v.as_f64()), Some(2.0));
         assert_eq!(ev.get("kernel_ns").and_then(|v| v.as_f64()), Some(1234.0));
     }
@@ -614,7 +696,45 @@ mod tests {
     #[test]
     fn trace_event_takes_minted_id_from_reply() {
         let reply = Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::Num(7.0))]);
-        let ev = trace_event(Instant::now(), "open", None, Duration::ZERO, None, &reply);
+        let ev = trace_event(Instant::now(), "open", None, Duration::ZERO, None, None, &reply);
         assert_eq!(ev.get("id").and_then(|v| v.as_f64()), Some(7.0));
+    }
+
+    #[test]
+    fn trace_event_echoes_correlation_and_mints_its_own_span() {
+        let reply = Json::obj(vec![("ok", Json::Bool(true))]);
+        let span = SpanIds {
+            trace_id: "cafe01".to_string(),
+            span_id: Some("beef02".to_string()),
+        };
+        let ev = trace_event(
+            Instant::now(),
+            "step",
+            Some(1),
+            Duration::ZERO,
+            None,
+            Some(&span),
+            &reply,
+        );
+        assert_eq!(ev.get("trace_id").and_then(|v| v.as_str()), Some("cafe01"));
+        assert_eq!(
+            ev.get("parent_span_id").and_then(|v| v.as_str()),
+            Some("beef02")
+        );
+        let own = ev.get("span_id").and_then(|v| v.as_str()).unwrap();
+        assert_eq!(own.len(), 16, "minted hop span");
+        assert_ne!(own, "beef02");
+        // no context, no correlation fields
+        let bare = trace_event(
+            Instant::now(),
+            "step",
+            Some(1),
+            Duration::ZERO,
+            None,
+            None,
+            &reply,
+        );
+        assert!(bare.get("trace_id").is_none());
+        assert!(bare.get("span_id").is_none());
     }
 }

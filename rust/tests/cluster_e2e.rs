@@ -19,7 +19,7 @@
 //!   (stale-lock takeover) + store dir (boot scan) every session warms
 //!   and matches the twin bit-for-bit.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -27,6 +27,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ccn_rtrl::cluster::{ClientConfig, RouterConfig, RouterServer, WireClient};
+use ccn_rtrl::obs::{RegistrySnapshot, TraceConfig};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
@@ -462,6 +463,237 @@ fn handoff_and_drain_mid_traffic_stay_bit_exact() {
     b0.shutdown().expect("b0 shutdown");
     b1.shutdown().expect("b1 shutdown");
     twin_srv.shutdown().expect("twin shutdown");
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn fleet_scope_metrics_equal_the_offline_merge_of_backend_blocks() {
+    let (b0, a0) = tcp_backend(1, Some((0, 2)));
+    let (b1, a1) = tcp_backend(1, Some((1, 2)));
+    let router = bind_router(vec![a0, a1]);
+    let mut client = WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+
+    let sessions = 8;
+    let ids: Vec<u64> = (0..sessions)
+        .map(|j| {
+            client
+                .open(KINDS[j % KINDS.len()], N, j as u64)
+                .expect("open")
+        })
+        .collect();
+    let ticks = 10;
+    for tick in &stream(0x0b5e, ticks, sessions) {
+        for ((x, c), &id) in tick.iter().zip(&ids) {
+            client.step(id, x, *c).expect("step");
+        }
+    }
+
+    let v = client
+        .request_ok(r#"{"op":"metrics","scope":"fleet"}"#)
+        .expect("fleet metrics");
+    assert_eq!(v.get("scope").and_then(|s| s.as_str()), Some("fleet"));
+    let merged = v.get("merged").expect("fleet reply carries a merged block");
+    let backends = v
+        .get("backends")
+        .and_then(|b| b.as_arr())
+        .expect("fleet reply carries per-backend blocks");
+    assert_eq!(backends.len(), 2);
+
+    // the router's merge must equal an offline merge of the per-backend
+    // blocks embedded in the very same reply — same registries, no race
+    let mut offline = RegistrySnapshot::default();
+    for b in backends {
+        assert_eq!(b.get("alive"), Some(&Json::Bool(true)), "{b:?}");
+        let m = b.get("metrics").expect("per-backend metrics block");
+        let snap =
+            RegistrySnapshot::from_metrics_json(m).expect("parse backend block");
+        offline = offline.merge(&snap);
+    }
+    assert_eq!(
+        offline.to_json().dump(),
+        merged.dump(),
+        "fleet merge must equal the offline merge of the embedded blocks"
+    );
+
+    // deterministic accounting: every wire step shows up in exactly one
+    // backend's histogram, and the merge preserves the total
+    let step_count = |m: &Json| -> f64 {
+        m.get("ops")
+            .and_then(|o| o.get("step"))
+            .and_then(|h| h.get("count"))
+            .and_then(|c| c.as_f64())
+            .unwrap_or(0.0)
+    };
+    let total: f64 = backends
+        .iter()
+        .map(|b| step_count(b.get("metrics").unwrap()))
+        .sum();
+    assert_eq!(total as usize, sessions * ticks);
+    assert_eq!(step_count(merged) as usize, sessions * ticks);
+    for b in backends {
+        assert!(
+            step_count(b.get("metrics").unwrap()) >= 1.0,
+            "both backends served a share of the steps: {b:?}"
+        );
+    }
+    // the router's own registry rides along, untangled from the fleet's
+    assert!(
+        v.get("router").and_then(|r| r.get("ops")).is_some(),
+        "fleet reply carries the router's own registry"
+    );
+
+    router.shutdown().expect("router shutdown");
+    b0.shutdown().expect("b0 shutdown");
+    b1.shutdown().expect("b1 shutdown");
+}
+
+#[test]
+fn traced_fleet_is_byte_identical_and_trace_files_join_on_trace_id() {
+    let base = unique_base("traced");
+    std::fs::create_dir_all(&base).unwrap();
+    let router_trace = base.join("router.jsonl");
+    let backend_trace = base.join("backend.jsonl");
+
+    // traced pair: router and backend each sample every op
+    let mut svc = Service::new(1);
+    svc.set_trace(&TraceConfig { path: backend_trace.clone(), sample: 1 })
+        .expect("mount backend trace");
+    let b_traced = Server::bind(
+        svc,
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let mut cfg =
+        router_cfg(vec![ListenAddr::parse(b_traced.local_addr()).unwrap()]);
+    cfg.trace = Some(TraceConfig { path: router_trace.clone(), sample: 1 });
+    let traced_router = RouterServer::bind(
+        cfg,
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+    )
+    .expect("bind traced router");
+
+    // untraced twin pair, identically configured otherwise
+    let (b_plain, a_plain) = tcp_backend(1, None);
+    let plain_router = bind_router(vec![a_plain]);
+
+    let mut via_t =
+        WireClient::dial(traced_router.local_addr(), fast_cfg()).unwrap();
+    let mut via_p =
+        WireClient::dial(plain_router.local_addr(), fast_cfg()).unwrap();
+
+    let mut n_ops = 0usize;
+    let mut run = |line: &str| -> String {
+        n_ops += 1;
+        let a = via_t.request_line(line).expect("traced reply");
+        let b = via_p.request_line(line).expect("plain reply");
+        assert_eq!(a, b, "tracing must not change a single reply byte: {line}");
+        a
+    };
+    let ids: Vec<u64> = KINDS
+        .iter()
+        .enumerate()
+        .map(|(j, kind)| {
+            reply_id(&run(&format!(
+                r#"{{"op":"open","learner":"{kind}","n_inputs":{N},"seed":{j}}}"#
+            )))
+        })
+        .collect();
+    for tick in &stream(0x70ace, 8, ids.len()) {
+        for ((x, c), &id) in tick.iter().zip(&ids) {
+            run(&format!(
+                r#"{{"op":"step","id":{id},"x":{},"c":{c}}}"#,
+                Json::arr_f32(x).dump()
+            ));
+        }
+    }
+    // a client-supplied trace id must thread through both hops untouched
+    let line = format!(
+        r#"{{"op":"snapshot","id":{},"trace_id":"e2e-client-0001"}}"#,
+        ids[0]
+    );
+    run(&line);
+    for &id in &ids {
+        run(&format!(r#"{{"op":"close","id":{id}}}"#));
+    }
+    drop(run);
+
+    traced_router.shutdown().expect("traced router shutdown");
+    plain_router.shutdown().expect("plain router shutdown");
+    b_traced.shutdown().expect("traced backend shutdown");
+    b_plain.shutdown().expect("plain backend shutdown");
+
+    let parse_events = |path: &Path| -> Vec<Json> {
+        std::fs::read_to_string(path)
+            .expect("trace file")
+            .lines()
+            .map(|l| Json::parse(l).expect("trace event must be valid json"))
+            .collect()
+    };
+    let router_evs = parse_events(&router_trace);
+    let backend_evs = parse_events(&backend_trace);
+    assert_eq!(router_evs.len(), n_ops, "router samples every protocol op");
+
+    // the backend trace also carries uncorrelated health-probe pings;
+    // every *correlated* event is one forwarded protocol op
+    let correlated: Vec<&Json> = backend_evs
+        .iter()
+        .filter(|e| e.get("trace_id").is_some())
+        .collect();
+    assert_eq!(
+        correlated.len(),
+        n_ops,
+        "backend samples every forwarded op with its correlation fields"
+    );
+    let mut by_trace: BTreeMap<String, &Json> = BTreeMap::new();
+    for ev in correlated {
+        let tid = ev
+            .get("trace_id")
+            .and_then(|t| t.as_str())
+            .expect("trace_id is a string")
+            .to_string();
+        assert!(
+            by_trace.insert(tid, ev).is_none(),
+            "one backend event per trace"
+        );
+    }
+
+    // join on trace_id: every router span has exactly one backend child
+    // whose parent_span_id is the router's span
+    for ev in &router_evs {
+        let tid = ev
+            .get("trace_id")
+            .and_then(|t| t.as_str())
+            .expect("router event trace_id");
+        let span = ev
+            .get("span_id")
+            .and_then(|s| s.as_str())
+            .expect("router event span_id");
+        let child = by_trace
+            .get(tid)
+            .unwrap_or_else(|| panic!("no backend event for trace {tid}"));
+        assert_eq!(
+            child.get("parent_span_id").and_then(|p| p.as_str()),
+            Some(span),
+            "backend event must carry the router's span as its parent"
+        );
+        assert_ne!(
+            child.get("span_id").and_then(|s| s.as_str()),
+            Some(span),
+            "the backend mints its own span"
+        );
+    }
+    // the client-supplied id survived both hops and names the right op
+    let snap_ev = router_evs
+        .iter()
+        .find(|e| {
+            e.get("trace_id").and_then(|t| t.as_str())
+                == Some("e2e-client-0001")
+        })
+        .expect("router event for the client-supplied trace id");
+    assert_eq!(snap_ev.get("op").and_then(|o| o.as_str()), Some("snapshot"));
+    assert!(by_trace.contains_key("e2e-client-0001"));
+
     let _ = std::fs::remove_dir_all(&base);
 }
 

@@ -8,7 +8,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use ccn_rtrl::obs::TraceConfig;
+use ccn_rtrl::obs::{MetricsServer, TraceConfig};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::json::Json;
@@ -366,4 +366,124 @@ fn tracing_at_sample_one_is_bit_exact_and_trace_parses() {
     let _ = std::fs::remove_dir_all(&dir_traced);
     let _ = std::fs::remove_dir_all(&dir_plain);
     let _ = std::fs::remove_file(&trace_path);
+}
+
+/// One raw HTTP/1.1 GET against the exposition endpoint; returns the
+/// full response (status line, headers, body). The server closes the
+/// connection after each response, so read-to-end terminates.
+fn http_get(hostport: &str, path: &str) -> String {
+    use std::io::Read;
+    let mut stream = TcpStream::connect(hostport).expect("connect scrape");
+    write!(stream, "GET {path} HTTP/1.1\r\nHost: ccn\r\n\r\n").expect("send");
+    stream.flush().expect("flush");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("recv scrape");
+    out
+}
+
+#[test]
+fn exposition_endpoint_is_scrapeable_and_measurement_only() {
+    let dir_scraped = tempdir("expo-scraped");
+    let dir_plain = tempdir("expo-plain");
+    let scraped = Service::with_store(2, Some(StoreConfig::new(&dir_scraped, 0)))
+        .expect("boot");
+    let mut plain = Service::with_store(2, Some(StoreConfig::new(&dir_plain, 0)))
+        .expect("boot");
+    let metrics = MetricsServer::bind(
+        &ListenAddr::parse("tcp://127.0.0.1:0").expect("addr"),
+        std::sync::Arc::clone(scraped.registry()),
+    )
+    .expect("bind metrics");
+    let hostport = metrics
+        .local_addr()
+        .strip_prefix("tcp://")
+        .expect("tcp exposition addr")
+        .to_string();
+
+    // hammer the endpoint from a background thread while the twin
+    // drive runs: scraping must never perturb protocol replies
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let scraper = {
+        let stop = std::sync::Arc::clone(&stop);
+        let hostport = hostport.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let resp = http_get(&hostport, "/metrics");
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                scrapes += 1;
+            }
+            scrapes
+        })
+    };
+
+    let mut scraped_service = scraped; // drive_nine_ops takes &Service
+    drive_nine_ops(&scraped_service);
+    drive_nine_ops(&plain);
+    let mut rng = Xoshiro256::seed_from_u64(0xE1);
+    for _ in 0..30 {
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let line = format!(
+            r#"{{"op":"open","learner":"columnar:4","n_inputs":3,"seed":{}}}"#,
+            (x[0].abs() * 100.0) as u64
+        );
+        let a = scraped_service.handle_line(&line);
+        let b = plain.handle_line(&line);
+        assert_eq!(a, b, "scraped reply diverged for request {line}");
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread");
+    assert!(scrapes >= 1, "the scraper must have gotten at least one 200");
+
+    // final scrape: every protocol op histogram is exported, buckets are
+    // cumulative and monotone, and _count equals the +Inf bucket
+    let resp = http_get(&hostport, "/metrics");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(
+        resp.contains("text/plain; version=0.0.4"),
+        "prometheus text content type: {resp}"
+    );
+    let body = resp.split("\r\n\r\n").nth(1).expect("body");
+    for op in NINE_OPS.iter().chain(["stats", "metrics", "ping"].iter()) {
+        assert!(
+            body.contains(&format!("ccn_op_{op}_ns_count ")),
+            "exposition must carry series for op {op}"
+        );
+    }
+    let mut cum = Vec::new();
+    let mut inf = None;
+    let mut count = None;
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("ccn_op_step_ns_bucket{le=\"") {
+            let (le, n) = rest.split_once("\"} ").expect("bucket line shape");
+            let n: f64 = n.parse().expect("bucket count");
+            cum.push(n);
+            if le == "+Inf" {
+                inf = Some(n);
+            }
+        } else if let Some(n) = line.strip_prefix("ccn_op_step_ns_count ") {
+            count = Some(n.parse::<f64>().expect("count value"));
+        }
+    }
+    assert!(cum.len() >= 2, "step histogram has buckets: {body}");
+    for w in cum.windows(2) {
+        assert!(w[0] <= w[1], "cumulative buckets must be monotone: {cum:?}");
+    }
+    assert_eq!(inf, count, "+Inf bucket must equal _count");
+    assert!(count.unwrap() >= 40.0, "40 twin steps were driven");
+    // windowed gauges ride along
+    assert!(
+        body.contains("ccn_window_steps{window=\"60s\"}"),
+        "windowed gauges are exported: {body}"
+    );
+
+    // anything but GET /metrics is a clean 404
+    let resp = http_get(&hostport, "/other");
+    assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+
+    metrics.shutdown();
+    scraped_service.close().expect("close scraped");
+    plain.close().expect("close plain");
+    let _ = std::fs::remove_dir_all(&dir_scraped);
+    let _ = std::fs::remove_dir_all(&dir_plain);
 }

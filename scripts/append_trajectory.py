@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Gate a fresh bench record against the committed perf trajectory.
+
+Usage: append_trajectory.py FRESH.json TRAJECTORY_DIR [--copy-to DIR]
+
+TRAJECTORY_DIR holds dated, committed `BENCH_*.json` snapshots (schema
+ccn.bench.v1). The latest snapshot — last `BENCH_*.json` in lexicographic
+order, which sorts by date for `BENCH_YYYYMMDD_*` names — is the
+baseline. Every `steps_per_s` leaf shared by the baseline and FRESH is
+compared: the fresh value must be at least HALF the committed one (a
+>2x regression fails). Paths present on only one side are reported but
+not gated, so adding or dropping a bench phase is not a CI failure.
+
+--copy-to DIR copies FRESH into DIR as `BENCH_<utcdate>_<name>` so the
+CI run's own snapshot can be uploaded as an artifact (and later
+committed as the next trajectory point).
+
+Stdlib only; exits non-zero naming the regressed path on failure.
+"""
+
+import json
+import os
+import shutil
+import sys
+import time
+
+SCHEMA = "ccn.bench.v1"
+GATE = 0.5  # fresh must reach at least this fraction of the baseline
+
+
+def fail(msg):
+    print(f"append_trajectory: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+    if doc.get("schema") != SCHEMA:
+        fail(f"{path}: missing or wrong schema tag (want {SCHEMA!r}, "
+             f"got {doc.get('schema')!r})")
+    return doc
+
+
+def steps_per_s_leaves(node, where="$"):
+    """{json_path: value} for every numeric `steps_per_s` key."""
+    leaves = {}
+    if isinstance(node, dict):
+        for key, child in node.items():
+            if key == "steps_per_s" and isinstance(child, (int, float)):
+                leaves[f"{where}.{key}"] = float(child)
+            else:
+                leaves.update(steps_per_s_leaves(child, f"{where}.{key}"))
+    elif isinstance(node, list):
+        for i, child in enumerate(node):
+            leaves.update(steps_per_s_leaves(child, f"{where}[{i}]"))
+    return leaves
+
+
+def main(argv):
+    copy_to = None
+    if "--copy-to" in argv:
+        i = argv.index("--copy-to")
+        if i + 1 >= len(argv):
+            fail("--copy-to needs a directory")
+        copy_to = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    if len(argv) != 3:
+        fail("usage: append_trajectory.py FRESH.json TRAJECTORY_DIR "
+             "[--copy-to DIR]")
+    fresh_path, traj_dir = argv[1], argv[2]
+    fresh = load(fresh_path)
+
+    snapshots = sorted(
+        name for name in os.listdir(traj_dir)
+        if name.startswith("BENCH_") and name.endswith(".json")
+    )
+    if not snapshots:
+        fail(f"{traj_dir}: no committed BENCH_*.json snapshots")
+    baseline_path = os.path.join(traj_dir, snapshots[-1])
+    baseline = load(baseline_path)
+
+    want = steps_per_s_leaves(baseline)
+    got = steps_per_s_leaves(fresh)
+    if not want:
+        fail(f"{baseline_path}: no steps_per_s leaves to gate against")
+    shared = sorted(set(want) & set(got))
+    if not shared:
+        fail(f"{fresh_path}: no steps_per_s leaf matches the baseline "
+             f"{baseline_path} (baseline has {sorted(want)})")
+    for path in sorted(set(want) ^ set(got)):
+        side = "baseline only" if path in want else "fresh only"
+        print(f"append_trajectory: note: {path} is {side}; not gated")
+    for path in shared:
+        floor = want[path] * GATE
+        if got[path] < floor:
+            fail(f"{path}: {got[path]:.1f} steps/s is a >2x regression "
+                 f"from the committed {want[path]:.1f} "
+                 f"(floor {floor:.1f}, baseline {baseline_path})")
+        print(f"append_trajectory: {path}: {got[path]:.1f} steps/s "
+              f"(committed {want[path]:.1f}, floor {floor:.1f}) ok")
+
+    if copy_to:
+        os.makedirs(copy_to, exist_ok=True)
+        date = time.strftime("%Y%m%d", time.gmtime())
+        base = os.path.basename(fresh_path)
+        name = base[len("BENCH_"):] if base.startswith("BENCH_") else base
+        dest = os.path.join(copy_to, f"BENCH_{date}_{name}")
+        shutil.copyfile(fresh_path, dest)
+        print(f"append_trajectory: copied snapshot to {dest}")
+
+    print(f"append_trajectory: ok ({len(shared)} gated leaf/leaves vs "
+          f"{baseline_path})")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

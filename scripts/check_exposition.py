@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text exposition scraped from `--metrics-listen`.
+
+Usage: check_exposition.py EXPOSITION.txt
+
+The file is a `GET /metrics` body (text format 0.0.4) from a
+`ccn serve --metrics-listen` endpoint (the router's endpoint exports
+`ccn_route_*` families instead and is not covered by the presence
+checks here). Checks, failing on the first violation:
+
+- every line is a `# TYPE` comment or a `series value` sample with a
+  finite, non-negative value;
+- every `# TYPE ... histogram` family is internally consistent: bucket
+  upper bounds strictly ascend, cumulative counts are monotone
+  non-decreasing, the terminal bucket is `+Inf`, `_count` equals the
+  `+Inf` bucket, and `_sum` is present;
+- every op / stage histogram of the serve registry is exported
+  (`ccn_op_<op>_ns`, `ccn_stage_<stage>_ns`), as are the fixed counters
+  (`ccn_<counter>_total`) and the windowed gauges
+  (`ccn_window_<name>{window="1s"|"10s"|"60s"}`).
+
+Stdlib only; exits non-zero with a message naming the offending line.
+"""
+
+import math
+import sys
+
+# the serve registry's pre-registered families (obs::names)
+OPS = [
+    "open",
+    "step",
+    "step_batch",
+    "predict",
+    "snapshot",
+    "restore",
+    "park",
+    "warm",
+    "close",
+    "stats",
+    "metrics",
+    "ping",
+]
+STAGES = [
+    "queue_wait",
+    "step_scalar",
+    "step_batched",
+    "store_append",
+    "store_load",
+    "store_compact",
+    "transport_read",
+    "transport_decode",
+    "transport_write",
+]
+COUNTERS = [
+    "transport.err_decode",
+    "transport.err_oversize",
+    "transport.err_ghost_id",
+    "transport.err_io",
+    "trace.dropped",
+]
+WINDOWS = ["ops", "steps", "parks", "warms", "trace.dropped"]
+WINDOW_LABELS = ["1s", "10s", "60s"]
+
+
+def fail(msg):
+    print(f"check_exposition: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def sanitize(name):
+    return "".join(c if c.isalnum() else "_" for c in name)
+
+
+def parse(path):
+    """Return (types, samples): declared metric kinds and an ordered
+    list of (series, value) pairs."""
+    types = {}
+    samples = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.rstrip("\n")
+            if not line.strip():
+                continue
+            if line.startswith("#"):
+                parts = line.split()
+                if len(parts) != 4 or parts[1] != "TYPE":
+                    fail(f"{path}:{lineno}: unrecognized comment: {line}")
+                types[parts[2]] = parts[3]
+                continue
+            if " " not in line:
+                fail(f"{path}:{lineno}: sample without a value: {line}")
+            series, raw = line.rsplit(" ", 1)
+            try:
+                value = float(raw)
+            except ValueError:
+                fail(f"{path}:{lineno}: non-numeric value: {line}")
+            if not math.isfinite(value) or value < 0:
+                fail(f"{path}:{lineno}: value must be finite and >= 0: {line}")
+            samples.append((series, value))
+    if not samples:
+        fail(f"{path}: no samples")
+    return types, samples
+
+
+def bucket_bound(series, base):
+    """The `le` bound of a `<base>_bucket{le="..."}` series, else None."""
+    prefix = f'{base}_bucket{{le="'
+    if not (series.startswith(prefix) and series.endswith('"}')):
+        return None
+    le = series[len(prefix):-2]
+    return math.inf if le == "+Inf" else float(le)
+
+
+def check_histogram(path, base, samples):
+    buckets = []
+    count = None
+    has_sum = False
+    for series, value in samples:
+        le = bucket_bound(series, base)
+        if le is not None:
+            buckets.append((le, value))
+        elif series == f"{base}_count":
+            count = value
+        elif series == f"{base}_sum":
+            has_sum = True
+    if not buckets:
+        fail(f"{path}: {base}: no _bucket series")
+    for (lo_le, lo_n), (hi_le, hi_n) in zip(buckets, buckets[1:]):
+        if hi_le <= lo_le:
+            fail(f"{path}: {base}: bucket bounds must ascend "
+                 f"({hi_le} after {lo_le})")
+        if hi_n < lo_n:
+            fail(f"{path}: {base}: cumulative counts must be monotone "
+                 f"({hi_n} after {lo_n})")
+    if buckets[-1][0] != math.inf:
+        fail(f"{path}: {base}: terminal bucket must be +Inf")
+    if count is None:
+        fail(f"{path}: {base}: missing _count")
+    if not has_sum:
+        fail(f"{path}: {base}: missing _sum")
+    if buckets[-1][1] != count:
+        fail(f"{path}: {base}: _count {count} != +Inf bucket "
+             f"{buckets[-1][1]}")
+
+
+def main(argv):
+    if len(argv) != 2:
+        fail("usage: check_exposition.py EXPOSITION.txt")
+    path = argv[1]
+    types, samples = parse(path)
+    series_names = {s for s, _ in samples}
+
+    histograms = [name for name, kind in types.items() if kind == "histogram"]
+    for base in histograms:
+        check_histogram(path, base, samples)
+
+    for op in OPS:
+        base = f"ccn_op_{sanitize(op)}_ns"
+        if types.get(base) != "histogram":
+            fail(f"{path}: missing op histogram {base}")
+    for stage in STAGES:
+        base = f"ccn_stage_{sanitize(stage)}_ns"
+        if types.get(base) != "histogram":
+            fail(f"{path}: missing stage histogram {base}")
+    for counter in COUNTERS:
+        base = f"ccn_{sanitize(counter)}_total"
+        if types.get(base) != "counter" or base not in series_names:
+            fail(f"{path}: missing counter {base}")
+    for window in WINDOWS:
+        base = f"ccn_window_{sanitize(window)}"
+        if types.get(base) != "gauge":
+            fail(f"{path}: missing window gauge {base}")
+        for label in WINDOW_LABELS:
+            series = f'{base}{{window="{label}"}}'
+            if series not in series_names:
+                fail(f"{path}: missing window sample {series}")
+
+    print(f"{path}: ok ({len(histograms)} histogram(s), "
+          f"{len(samples)} sample(s))")
+
+
+if __name__ == "__main__":
+    main(sys.argv)

@@ -1,17 +1,30 @@
 #!/usr/bin/env python3
-"""Validate a `ccn serve --trace-file` JSONL trace, and optionally the
-reply stream of the smoke session that produced it.
+"""Validate `ccn serve`/`ccn route` JSONL traces, and optionally the
+reply stream of the smoke session that produced one, or the join
+between a router trace and a backend trace.
 
 Usage: check_trace.py TRACE.jsonl [REPLIES.jsonl]
+       check_trace.py --join ROUTER.jsonl BACKEND.jsonl
 
 Trace: every line must parse as one JSON object carrying ts_ns, op,
 dur_ns, and ok; timestamps and durations must be non-negative (no
 monotonicity requirement — concurrent transports may interleave events
-out of order); at least one event must be present.
+out of order); at least one event must be present. Correlation fields
+(trace_id, span_id, parent_span_id), when present, must be non-empty
+strings of at most 64 ASCII alphanumeric-or-dash characters.
 
 Replies (when given): every reply line must be ok:true, and the last
 `metrics` reply — recognized by its ops/stages blocks — must cover all
 nine session ops of the protocol.
+
+--join: both files are validated as traces, then joined on trace_id.
+Every router event that records a `backend` label (i.e. the op was
+actually forwarded; router-local ops and failed forwards carry none)
+must have at least one backend event with the same trace_id, every
+matched backend event carrying a parent_span_id must name the router
+event's span_id, and at least one pair must join. Assumes the backend
+traced at sample rate 1 and that BACKEND.jsonl is the trace of the
+backend the events were forwarded to.
 
 Stdlib only; exits non-zero with a message naming the offending line on
 the first violation.
@@ -19,6 +32,9 @@ the first violation.
 
 import json
 import sys
+
+CORRELATION_KEYS = ("trace_id", "span_id", "parent_span_id")
+MAX_WIRE_ID_LEN = 64
 
 NINE_OPS = [
     "open",
@@ -38,8 +54,16 @@ def fail(msg):
     sys.exit(1)
 
 
+def valid_wire_id(value):
+    return (
+        isinstance(value, str)
+        and 0 < len(value) <= MAX_WIRE_ID_LEN
+        and all(c.isascii() and (c.isalnum() or c == "-") for c in value)
+    )
+
+
 def check_trace(path):
-    events = 0
+    events = []
     with open(path) as f:
         for lineno, line in enumerate(f, 1):
             line = line.strip()
@@ -58,10 +82,52 @@ def check_trace(path):
                 fail(f"{path}:{lineno}: op must be a string: {line}")
             if not isinstance(event["ok"], bool):
                 fail(f"{path}:{lineno}: ok must be a bool: {line}")
-            events += 1
-    if events == 0:
+            for key in CORRELATION_KEYS:
+                if key in event and not valid_wire_id(event[key]):
+                    fail(f"{path}:{lineno}: {key} must be a non-empty "
+                         f"string of <= {MAX_WIRE_ID_LEN} alphanumeric-or-"
+                         f"dash characters: {line}")
+            events.append(event)
+    if not events:
         fail(f"{path}: no trace events")
-    print(f"{path}: ok ({events} event(s))")
+    print(f"{path}: ok ({len(events)} event(s))")
+    return events
+
+
+def check_join(router_path, backend_path):
+    router_events = check_trace(router_path)
+    backend_events = check_trace(backend_path)
+    by_trace = {}
+    for event in backend_events:
+        if "trace_id" in event:
+            by_trace.setdefault(event["trace_id"], []).append(event)
+    joined = 0
+    for event in router_events:
+        if "trace_id" not in event:
+            continue
+        trace_id = event["trace_id"]
+        children = by_trace.get(trace_id)
+        if not children:
+            # a router-local op (ping/stats/metrics) or a failed forward
+            # legitimately has no backend child — recognized by the
+            # absent backend label
+            if "backend" in event:
+                fail(f"{router_path}: trace {trace_id!r} ({event['op']}) "
+                     f"was forwarded to {event['backend']} but has no "
+                     f"backend event in {backend_path}")
+            continue
+        span = event.get("span_id")
+        for child in children:
+            parent = child.get("parent_span_id")
+            if span is not None and parent is not None and parent != span:
+                fail(f"{backend_path}: trace {trace_id!r}: parent_span_id "
+                     f"{parent!r} does not name the router span {span!r}")
+        joined += 1
+    if joined == 0:
+        fail(f"{router_path} x {backend_path}: no correlated pair joined "
+             f"on trace_id")
+    print(f"join: ok ({joined} router event(s) joined to "
+          f"{backend_path})")
 
 
 def check_replies(path):
@@ -93,8 +159,12 @@ def check_replies(path):
 
 
 def main(argv):
+    if len(argv) == 4 and argv[1] == "--join":
+        check_join(argv[2], argv[3])
+        return
     if len(argv) < 2 or len(argv) > 3:
-        fail("usage: check_trace.py TRACE.jsonl [REPLIES.jsonl]")
+        fail("usage: check_trace.py TRACE.jsonl [REPLIES.jsonl] | "
+             "check_trace.py --join ROUTER.jsonl BACKEND.jsonl")
     check_trace(argv[1])
     if len(argv) == 3:
         check_replies(argv[2])
