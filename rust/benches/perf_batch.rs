@@ -9,11 +9,16 @@
 //! with them — and steady-state churn no longer erodes stepping
 //! throughput. Reports, per batch size: fused `step_all` steps/s with
 //! churn off and with churn on (one evict+rehydrate pair per tick), and
-//! the p50/p99 of the individual evict and rehydrate ops. Writes the
-//! record in the unified `ccn.bench.v1` schema to
-//! `results/BENCH_batch.json` (override with CCN_BATCH_OUT) so the perf
-//! trajectory is machine-comparable across commits; the evict/rehydrate
-//! latencies embed the full `obs::Histogram` JSON.
+//! the p50/p99 of the individual evict and rehydrate ops. A second
+//! phase drives the stage-aligned cohorts: mixed ccn + constructive
+//! sessions fused through [`StagedSessionBatch::step_all`] versus
+//! scalar twins consuming the identical observation stream — the fused
+//! outputs must be bit-identical, and the batched steps/s is the
+//! headline staged number. Writes the record in the unified
+//! `ccn.bench.v1` schema to `results/BENCH_batch.json` (override with
+//! CCN_BATCH_OUT) so the perf trajectory is machine-comparable across
+//! commits; the evict/rehydrate latencies embed the full
+//! `obs::Histogram` JSON.
 //!
 //! Scale knobs (env vars):
 //!   CCN_BATCH_SIZES      comma-separated batch sizes   (default 16,64,256)
@@ -21,6 +26,7 @@
 //!   CCN_BATCH_CHURN_OPS  evict+rehydrate pairs timed   (default 400)
 //!   CCN_BATCH_INPUTS     observation width             (default 8)
 //!   CCN_BATCH_D          columns per session           (default 8)
+//!   CCN_BATCH_STAGED     sessions per staged kind      (default 64, 0 = skip)
 //!   CCN_BATCH_OUT        result file                   (default results/BENCH_batch.json)
 
 mod common;
@@ -31,7 +37,9 @@ use ccn_rtrl::config::LearnerKind;
 use ccn_rtrl::learn::TdConfig;
 use ccn_rtrl::metrics::render_table;
 use ccn_rtrl::obs::{Histogram, HistogramSnapshot};
-use ccn_rtrl::serve::{ColumnarSessionBatch, Session, SessionSpec};
+use ccn_rtrl::serve::{
+    ColumnarSessionBatch, Session, SessionSpec, StagedSessionBatch,
+};
 use ccn_rtrl::util::json::Json;
 use ccn_rtrl::util::prng::Xoshiro256;
 
@@ -167,6 +175,124 @@ fn main() {
         ]));
     }
 
+    // ---- staged cohorts: mixed ccn + constructive load -----------------
+    // ccn/constructive sessions cohort per (spec, stage): every member
+    // shares one learning stage plus per-lane frozen-prefix state, so
+    // the fused pass applies the same SoA discipline the columnar batch
+    // does. The fused outputs must stay bit-identical to scalar twins
+    // fed the identical observation stream (asserted on the final tick);
+    // steps_per_stage is set far beyond the tick budget so the phase
+    // measures steady-state stepping, not cohort hops (the shard owns
+    // hops; `perf_serve`'s mixed load covers that path end to end).
+    let staged_n = env_usize("CCN_BATCH_STAGED", 64);
+    let mut staged_rows: Vec<Vec<String>> = Vec::new();
+    let mut staged_json: Vec<(&str, Json)> = Vec::new();
+    if staged_n > 0 {
+        let kinds: [(&str, LearnerKind); 2] = [
+            (
+                "ccn",
+                LearnerKind::Ccn {
+                    total: d.max(2),
+                    per_stage: (d / 2).max(1),
+                    steps_per_stage: 1_000_000_000,
+                },
+            ),
+            (
+                "constructive",
+                LearnerKind::Constructive {
+                    total: d.max(2),
+                    steps_per_stage: 1_000_000_000,
+                },
+            ),
+        ];
+        for (tag, learner) in kinds {
+            let open = |s: u64| {
+                Session::open(SessionSpec {
+                    learner: learner.clone(),
+                    n_inputs: n,
+                    td: TdConfig {
+                        alpha: 0.001,
+                        gamma: 0.9,
+                        lambda: 0.95,
+                    },
+                    eps: 0.01,
+                    seed: 0x57a9ed + s,
+                })
+                .expect("open staged session")
+            };
+            let members: Vec<Session> =
+                (0..staged_n as u64).map(&open).collect();
+            let spec = members[0]
+                .staged_batch_spec()
+                .expect("growing sessions are stage-batchable");
+            let lanes: Vec<_> = members
+                .iter()
+                .map(|m| m.to_staged_lane().expect("to staged lane"))
+                .collect();
+            let mut batch = StagedSessionBatch::from_lanes(spec, &lanes)
+                .expect("staged cohort");
+            let mut twins: Vec<Session> =
+                (0..staged_n as u64).map(&open).collect();
+
+            let mut obs = vec![0.0f32; staged_n * n];
+            let mut cs = vec![0.0f32; staged_n];
+            let fill = |rng: &mut Xoshiro256, obs: &mut [f32], cs: &mut [f32]| {
+                for v in obs.iter_mut() {
+                    *v = rng.uniform(-1.0, 1.0);
+                }
+                for v in cs.iter_mut() {
+                    *v = rng.uniform(-0.5, 0.5);
+                }
+            };
+
+            let mut rng = Xoshiro256::seed_from_u64(0x57a9ed);
+            let mut fused_final = Vec::new();
+            let t0 = Instant::now();
+            for _ in 0..ticks {
+                fill(&mut rng, &mut obs, &mut cs);
+                fused_final = batch.step_all(&obs, &cs).to_vec();
+            }
+            let batched_sps =
+                (staged_n * ticks) as f64 / t0.elapsed().as_secs_f64();
+
+            // identical stream for the scalar twins
+            let mut rng = Xoshiro256::seed_from_u64(0x57a9ed);
+            let mut scalar_final = vec![0.0f32; staged_n];
+            let t0 = Instant::now();
+            for _ in 0..ticks {
+                fill(&mut rng, &mut obs, &mut cs);
+                for (b, twin) in twins.iter_mut().enumerate() {
+                    scalar_final[b] = twin
+                        .step(&obs[b * n..(b + 1) * n], cs[b])
+                        .expect("scalar twin step");
+                }
+            }
+            let scalar_sps =
+                (staged_n * ticks) as f64 / t0.elapsed().as_secs_f64();
+            assert_eq!(
+                fused_final, scalar_final,
+                "{tag}: staged cohort diverged from its scalar twins"
+            );
+
+            staged_rows.push(vec![
+                tag.into(),
+                staged_n.to_string(),
+                format!("{batched_sps:.0}"),
+                format!("{scalar_sps:.0}"),
+                format!("{:.1}x", batched_sps / scalar_sps),
+            ]);
+            staged_json.push((
+                tag,
+                Json::obj(vec![
+                    ("sessions", Json::Num(staged_n as f64)),
+                    ("steps_per_s", Json::Num(batched_sps)),
+                    ("steps_per_s_scalar", Json::Num(scalar_sps)),
+                    ("speedup", Json::Num(batched_sps / scalar_sps)),
+                ]),
+            ));
+        }
+    }
+
     println!(
         "{}",
         render_table(
@@ -182,6 +308,16 @@ fn main() {
             &rows_table,
         )
     );
+    if !staged_rows.is_empty() {
+        println!(
+            "\nstaged cohorts ({ticks} fused ticks vs scalar twins, \
+             bit-exact):\n{}",
+            render_table(
+                &["kind", "sessions", "batched steps/s", "scalar steps/s", "speedup"],
+                &staged_rows,
+            )
+        );
+    }
 
     common::write_bench_json(
         &out_path,
@@ -192,6 +328,8 @@ fn main() {
             ("ticks", Json::Num(ticks as f64)),
             ("churn_ops", Json::Num(churn_ops as f64)),
             ("rows", Json::Arr(rows_json)),
+            ("staged_sessions", Json::Num(staged_n as f64)),
+            ("staged", Json::obj(staged_json)),
         ],
     );
 }

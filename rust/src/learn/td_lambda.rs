@@ -180,18 +180,15 @@ impl<N: PredictionNet> TdLambdaAgent<N> {
         Ok(())
     }
 
-    /// One online step: consume observation + cumulant, return prediction
-    /// y_t made *at this step* (the value scored against the return).
-    pub fn step(&mut self, x: &[f32], cumulant: f32) -> f32 {
-        let TdConfig {
-            alpha,
-            gamma,
-            lambda,
-        } = self.cfg;
-
-        self.net.advance(x);
-
-        // constructive growth bookkeeping
+    /// Constructive growth bookkeeping: zero-extend the readout weights
+    /// and their traces when the net grew features, and reset the
+    /// parameter traces when the learnable set changed identity (stage
+    /// freeze). New entries are all zero, so running this eagerly right
+    /// after a transition is arithmetically identical to running it at
+    /// the start of the next step — and it keeps `td_state()` consistent
+    /// with the net at every op boundary, so a snapshot taken exactly on
+    /// a stage boundary restores cleanly.
+    fn sync_growth(&mut self) {
         let d = self.net.n_features();
         if d > self.w.len() {
             self.w.resize(d, 0.0); // new outgoing weights start at zero
@@ -207,6 +204,19 @@ impl<N: PredictionNet> TdLambdaAgent<N> {
             self.update_buf.clear();
             self.update_buf.resize(np, 0.0);
         }
+    }
+
+    /// One online step: consume observation + cumulant, return prediction
+    /// y_t made *at this step* (the value scored against the return).
+    pub fn step(&mut self, x: &[f32], cumulant: f32) -> f32 {
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.cfg;
+
+        self.net.advance(x);
+        self.sync_growth();
 
         let feats = self.net.features();
         let y = dot(&self.w, feats);
@@ -241,6 +251,10 @@ impl<N: PredictionNet> TdLambdaAgent<N> {
         self.have_prev = true;
         self.steps += 1;
         self.net.end_step();
+        // settle any stage transition *inside* this step so the captured
+        // state is never a net/readout shape mismatch (all new entries
+        // are zeros; see sync_growth)
+        self.sync_growth();
         y
     }
 
@@ -489,6 +503,46 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_exactly_at_stage_boundary_restores() {
+        use crate::nets::ccn::{CcnConfig, CcnNet};
+        use crate::nets::PersistableNet;
+        // pre-fix, the growth bookkeeping ran at the start of the *next*
+        // step, so a state captured right after the boundary step paired
+        // old-shaped readout weights with an already-grown net and
+        // set_td_state refused the restore.
+        let cfg = CcnConfig {
+            n_inputs: 2,
+            total_features: 4,
+            features_per_stage: 2,
+            steps_per_stage: 25,
+            init_scale: 0.5,
+            norm_eps: 0.01,
+            norm_beta: 0.999,
+        };
+        let mut agent =
+            TdLambdaAgent::new(CcnNet::new(cfg.clone(), 3), TdConfig::default());
+        for t in 0..25u64 {
+            // the 25th step crosses the stage boundary
+            let x = [(t % 3) as f32 / 3.0, 1.0];
+            agent.step(&x, 0.1);
+        }
+        assert_eq!(agent.net.n_features(), 4, "stage 2 materialized");
+        let st = agent.td_state();
+        assert_eq!(st.w.len(), 4, "state is shape-consistent with the net");
+        let net_json = agent.net.save();
+        let net =
+            CcnNet::from_json(&Json::parse(&net_json.dump()).unwrap()).unwrap();
+        let mut restored = TdLambdaAgent::new(net, TdConfig::default());
+        restored
+            .set_td_state(st)
+            .expect("boundary snapshot must restore");
+        for t in 0..30u64 {
+            let x = [(t % 5) as f32 / 5.0, 0.5];
+            assert_eq!(agent.step(&x, 0.1), restored.step(&x, 0.1));
+        }
+    }
+
+    #[test]
     fn growth_extends_weights_with_zeros() {
         use crate::nets::ccn::{CcnConfig, CcnNet};
         let net = CcnNet::new(
@@ -507,14 +561,20 @@ mod tests {
         for t in 0..60u64 {
             let x = [(t % 3) as f32 / 3.0, 1.0];
             agent.step(&x, 0.1);
-            if t == 24 {
+            if t == 23 {
                 assert_eq!(agent.w.len(), 2);
             }
-            if t == 26 {
+            if t == 24 {
+                // the stage boundary settles *inside* the step that
+                // crosses it (eager sync_growth): the readout grows
+                // immediately and the new outgoing weights are exactly
+                // zero, so predictions are unperturbed.
                 assert_eq!(agent.w.len(), 4);
-                // new outgoing weights must start at zero (y unperturbed),
-                // but by t==26 one update has already run; check magnitude
-                // is tiny relative to learned weights.
+                assert_eq!(agent.w[2], 0.0);
+                assert_eq!(agent.w[3], 0.0);
+            }
+            if t == 26 {
+                // one update has run since; magnitudes stay tiny
                 assert!(agent.w[2].abs() < 0.1 && agent.w[3].abs() < 0.1);
             }
         }

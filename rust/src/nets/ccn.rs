@@ -77,7 +77,9 @@ impl CcnConfig {
     pub fn from_json(v: &Json) -> Option<Self> {
         let steps_per_stage = match v.get("steps_per_stage")? {
             Json::Null => u64::MAX,
-            other => other.as_f64()? as u64,
+            // strict: fractional/negative/oversized stage budgets used to
+            // truncate silently and corrupt the growth schedule on restore
+            other => other.as_u64_strict()?,
         };
         Some(Self {
             n_inputs: v.get("n_inputs")?.as_usize()?,
@@ -191,6 +193,39 @@ impl CcnNet {
 
     pub fn config(&self) -> &CcnConfig {
         &self.cfg
+    }
+
+    /// All features materialized and frozen (readout-only regime).
+    pub fn frozen_forever(&self) -> bool {
+        self.frozen_forever
+    }
+
+    /// The rng driving stage-construction draws — staged cohort lanes
+    /// carry it so a batched session hops stages with the exact draws its
+    /// scalar twin would have made.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Apply a pending stage boundary: if the stage clock has reached
+    /// `steps_per_stage`, either materialize the next stage or (once all
+    /// features exist) freeze forever. Idempotent when no boundary is
+    /// pending. `end_step` calls this after ticking the clock; the serve
+    /// layer calls it directly when rebuilding a session from a staged
+    /// cohort lane whose clock crossed the boundary inside the batch.
+    pub fn settle_stage_boundary(&mut self) {
+        if self.steps_in_stage >= self.cfg.steps_per_stage && !self.frozen_forever {
+            let materialized = self.d();
+            if materialized < self.cfg.total_features {
+                self.push_stage();
+            } else {
+                // every feature frozen: the net stops adapting its
+                // recurrent parameters (readout keeps learning) — the
+                // plasticity-loss regime Section 6 discusses.
+                self.frozen_forever = true;
+                self.epoch += 1;
+            }
+        }
     }
 
     /// Rebuild a net from captured per-stage state. `stages_parts[s]` is
@@ -325,11 +360,14 @@ impl CcnNet {
         Self::from_parts(
             cfg,
             parts,
+            // strict u64: `as_f64 as u64` silently mangled fractional,
+            // negative, and >2^53 stage clocks into valid-looking ones
             v.get("steps_in_stage")
-                .and_then(|s| s.as_f64())
-                .ok_or_else(|| bad("steps_in_stage"))? as u64,
-            v.get("epoch").and_then(|e| e.as_f64()).ok_or_else(|| bad("epoch"))?
-                as u64,
+                .and_then(|s| s.as_u64_strict())
+                .ok_or_else(|| bad("steps_in_stage"))?,
+            v.get("epoch")
+                .and_then(|e| e.as_u64_strict())
+                .ok_or_else(|| bad("epoch"))?,
             v.get("frozen_forever")
                 .and_then(|f| f.as_bool())
                 .ok_or_else(|| bad("frozen_forever"))?,
@@ -416,18 +454,7 @@ impl PredictionNet for CcnNet {
 
     fn end_step(&mut self) {
         self.steps_in_stage += 1;
-        if self.steps_in_stage >= self.cfg.steps_per_stage && !self.frozen_forever {
-            let materialized = self.d();
-            if materialized < self.cfg.total_features {
-                self.push_stage();
-            } else {
-                // every feature frozen: the net stops adapting its
-                // recurrent parameters (readout keeps learning) — the
-                // plasticity-loss regime Section 6 discusses.
-                self.frozen_forever = true;
-                self.epoch += 1;
-            }
-        }
+        self.settle_stage_boundary();
     }
 
     fn flops_per_step(&self) -> u64 {
@@ -468,7 +495,8 @@ impl PersistableNet for CcnNet {
     }
 
     /// A single never-freezing stage *is* the pure-columnar shape the SoA
-    /// batch store holds; everything that grows or freezes stays scalar.
+    /// batch store holds; every other CCN-family shape is a frozen prefix
+    /// plus one learning stage and batches into stage-keyed cohorts.
     fn batch_capability(&self) -> BatchCapability {
         if self.cfg.steps_per_stage == u64::MAX && self.stages.len() == 1 {
             BatchCapability::Columnar {
@@ -478,9 +506,50 @@ impl PersistableNet for CcnNet {
                 beta: self.cfg.norm_beta,
             }
         } else {
-            BatchCapability::None
+            BatchCapability::Staged {
+                n_inputs: self.cfg.n_inputs,
+                d: self.d(),
+                stage: self.learning_stage,
+                features_per_stage: self.cfg.features_per_stage,
+                total_features: self.cfg.total_features,
+                steps_per_stage: self.cfg.steps_per_stage,
+                init_scale: self.cfg.init_scale,
+                frozen_forever: self.frozen_forever,
+                eps: self.cfg.norm_eps,
+                beta: self.cfg.norm_beta,
+                prefix_sig: staged_prefix_sig(
+                    &self.cfg,
+                    self.learning_stage,
+                    self.frozen_forever,
+                ),
+            }
         }
     }
+}
+
+/// FNV-1a digest of the structural spec of a staged cohort: shape
+/// integers plus the exact f32 bit patterns that enter the math. Two
+/// sessions with equal signatures are structurally interchangeable lanes
+/// of the same cohort.
+pub(crate) fn staged_prefix_sig(cfg: &CcnConfig, stage: usize, frozen: bool) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, cfg.n_inputs as u64);
+    h = mix(h, cfg.total_features as u64);
+    h = mix(h, cfg.features_per_stage as u64);
+    h = mix(h, cfg.steps_per_stage);
+    h = mix(h, stage as u64);
+    h = mix(h, frozen as u64);
+    h = mix(h, cfg.init_scale.to_bits() as u64);
+    h = mix(h, cfg.norm_eps.to_bits() as u64);
+    h = mix(h, cfg.norm_beta.to_bits() as u64);
+    h
 }
 
 impl super::ServableNet for CcnNet {
@@ -658,6 +727,117 @@ mod tests {
             net.end_step();
             back.end_step();
             assert_eq!(net.n_stages(), back.n_stages(), "growth must match");
+        }
+    }
+
+    #[test]
+    fn spec_decode_rejects_mangled_stage_budgets() {
+        // pre-fix, `as_f64 as u64` silently accepted all of these:
+        // 1.5 -> 1 (truncation), -1 -> 0 (saturation), 1e16 -> rounded
+        let base = tiny_cfg();
+        for bad_num in [
+            Json::Num(1.5),
+            Json::Num(-1.0),
+            Json::Num(-0.5),
+            Json::Num(1e16),
+            Json::Num(f64::INFINITY),
+        ] {
+            let mut o = match base.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            o.insert("steps_per_stage".into(), bad_num.clone());
+            assert!(
+                CcnConfig::from_json(&Json::Obj(o)).is_none(),
+                "steps_per_stage {bad_num:?} must be rejected"
+            );
+        }
+        // boundaries that must keep decoding: null (columnar corner,
+        // u64::MAX) and 2^53 (last exact integer)
+        let mut o = match base.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("steps_per_stage".into(), Json::Null);
+        assert_eq!(
+            CcnConfig::from_json(&Json::Obj(o)).unwrap().steps_per_stage,
+            u64::MAX
+        );
+        let mut o = match base.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("steps_per_stage".into(), Json::Num(9007199254740992.0));
+        assert_eq!(
+            CcnConfig::from_json(&Json::Obj(o)).unwrap().steps_per_stage,
+            9_007_199_254_740_992
+        );
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_mangled_stage_clocks() {
+        let mut net = CcnNet::new(tiny_cfg(), 17);
+        drive(&mut net, 60, 1);
+        for field in ["steps_in_stage", "epoch"] {
+            for bad_num in [Json::Num(0.5), Json::Num(-3.0), Json::Num(1e16)] {
+                let mut o = match net.to_json() {
+                    Json::Obj(o) => o,
+                    _ => unreachable!(),
+                };
+                o.insert(field.into(), bad_num.clone());
+                let err = CcnNet::from_json(&Json::Obj(o))
+                    .err()
+                    .unwrap_or_else(|| panic!("{field}={bad_num:?} must fail"));
+                assert!(err.contains(field), "loud error names the field: {err}");
+            }
+        }
+        // round trip at the exact freeze boundary keeps working
+        let j = Json::parse(&net.to_json().dump()).unwrap();
+        let back = CcnNet::from_json(&j).expect("boundary roundtrip");
+        assert_eq!(back.steps_in_stage(), net.steps_in_stage());
+        assert_eq!(back.param_epoch(), net.param_epoch());
+    }
+
+    #[test]
+    fn staged_capability_tracks_stage_and_freeze() {
+        let mut net = CcnNet::new(tiny_cfg(), 23);
+        let cap0 = net.batch_capability();
+        let (d0, s0, sig0) = match cap0 {
+            BatchCapability::Staged {
+                d,
+                stage,
+                prefix_sig,
+                frozen_forever,
+                ..
+            } => {
+                assert!(!frozen_forever);
+                (d, stage, prefix_sig)
+            }
+            other => panic!("ccn must report Staged, got {other:?}"),
+        };
+        assert_eq!((d0, s0), (2, 0));
+        drive(&mut net, 50, 1); // cross one stage boundary
+        match net.batch_capability() {
+            BatchCapability::Staged {
+                d,
+                stage,
+                prefix_sig,
+                ..
+            } => {
+                assert_eq!((d, stage), (4, 1));
+                assert_ne!(prefix_sig, sig0, "stage is part of the signature");
+            }
+            other => panic!("{other:?}"),
+        }
+        drive(&mut net, 100, 2); // materialize all + freeze
+        match net.batch_capability() {
+            BatchCapability::Staged {
+                frozen_forever, d, ..
+            } => {
+                assert!(frozen_forever);
+                assert_eq!(d, 6);
+            }
+            other => panic!("{other:?}"),
         }
     }
 

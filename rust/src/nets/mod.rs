@@ -99,6 +99,36 @@ pub enum BatchCapability {
         /// normalizer beta
         beta: f32,
     },
+    /// The net is a frozen columnar prefix plus one learning stage
+    /// (constructive/ccn): every session at the same spec *and the same
+    /// stage* is structurally identical, so the serve layer batches them
+    /// into stage-keyed cohorts (`StagedSessionBatch`) and migrates a
+    /// session to the next cohort when its stage clock hits
+    /// `steps_per_stage` (or into the frozen-forever cohort once every
+    /// feature is materialized).
+    Staged {
+        n_inputs: usize,
+        /// materialized feature count (readout width) at this stage
+        d: usize,
+        /// index of the learning stage (== number of frozen stages)
+        stage: usize,
+        features_per_stage: usize,
+        total_features: usize,
+        steps_per_stage: u64,
+        /// column init scale — part of the spec because cohort hops
+        /// construct the next stage's columns from the lane rng
+        init_scale: f32,
+        /// all features materialized and frozen; only the readout learns
+        frozen_forever: bool,
+        /// normalizer epsilon
+        eps: f32,
+        /// normalizer beta
+        beta: f32,
+        /// FNV-1a digest of the structural spec (shape + float bits):
+        /// two nets with equal `prefix_sig` have byte-compatible frozen
+        /// prefixes and may share a cohort
+        prefix_sig: u64,
+    },
 }
 
 /// The persistence companion to [`PredictionNet`]: a net that can write

@@ -18,6 +18,14 @@
 //!   net + online normalizer + readout + both eligibility traces) over a
 //!   shared spec, stepped together. Sessions enter and leave a batch as
 //!   [`ColumnarLane`] bundles (used by the shard layer and by snapshots).
+//! - [`StagedSessionBatch`]: the same for constructive/CCN sessions
+//!   mid-growth — one stepper per materialized stage (frozen stages
+//!   forward-only, the learning stage with RTRL traces), grouped into
+//!   **stage-keyed cohorts**: every session in a batch is at the same
+//!   learning stage, and a session whose stage clock crosses
+//!   `steps_per_stage` is reported pending so the shard layer can hop it
+//!   to the next stage's cohort via the same O(lane) membership ops.
+//!   Interchange format: [`StagedLane`].
 //!
 //! # Capacity-padded lane strides
 //!
@@ -652,6 +660,34 @@ impl BatchedColumnStepper {
         self.h[lane] = h2;
         self.c[lane] = c2;
     }
+
+    /// Advance a *single* lane forward-only: the strided twin of
+    /// [`LstmColumn::step_forward_only`], used for per-session protocol
+    /// steps against a frozen stage of a staged cohort. Traces are left
+    /// untouched (frozen columns keep their stale trace bytes, exactly
+    /// like the scalar path).
+    pub fn step_lane_forward(&mut self, lane: usize, x: &[f32]) {
+        let (m, l) = (self.m, self.lcap());
+        assert!(lane < l);
+        assert!(lane % self.cap < self.batch, "lane {lane} is not live");
+        debug_assert_eq!(x.len(), m);
+        let mut z = [0.0f32; 4];
+        for (a, zv) in z.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (j, &xj) in x.iter().enumerate() {
+                acc += self.w[(a * m + j) * l + lane] * xj;
+            }
+            *zv = acc;
+        }
+        let h_prev = self.h[lane];
+        let i = sigmoid(z[0] + self.u[lane] * h_prev + self.b[lane]);
+        let f = sigmoid(z[1] + self.u[l + lane] * h_prev + self.b[l + lane]);
+        let o = sigmoid(z[2] + self.u[2 * l + lane] * h_prev + self.b[2 * l + lane]);
+        let g = (z[3] + self.u[3 * l + lane] * h_prev + self.b[3 * l + lane]).tanh();
+        let c2 = f * self.c[lane] + i * g;
+        self.c[lane] = c2;
+        self.h[lane] = o * c2.tanh();
+    }
 }
 
 /// The shared shape of every session in a [`ColumnarSessionBatch`].
@@ -1272,6 +1308,957 @@ impl ColumnarSessionBatch {
     }
 }
 
+/// The shared structural shape of every session in a
+/// [`StagedSessionBatch`]: a constructive/CCN net mid-growth. All
+/// sessions in one cohort are at the **same learning stage** over the
+/// same config, so their frozen prefixes have identical layout (widths
+/// and input fan-in per stage) and their learning stages are columnar
+/// twins — per-lane *values* (parameters, traces, normalizer stats,
+/// stage clocks) differ freely.
+#[derive(Clone, Debug)]
+pub struct StagedBatchSpec {
+    pub n_inputs: usize,
+    pub features_per_stage: usize,
+    pub total_features: usize,
+    pub steps_per_stage: u64,
+    /// learning-stage index; `stage + 1` stages are materialized
+    pub stage: usize,
+    /// all features materialized and frozen: no learnable parameters,
+    /// no stage clock boundary will ever fire
+    pub frozen_forever: bool,
+    /// column init scale (the cohort hop constructs next-stage columns)
+    pub init_scale: f32,
+    pub td: TdConfig,
+    /// normalizer epsilon
+    pub eps: f32,
+    /// normalizer beta
+    pub beta: f32,
+}
+
+impl StagedBatchSpec {
+    pub fn n_stages(&self) -> usize {
+        self.stage + 1
+    }
+
+    /// Column count of stage `s` (every frozen stage is full width; only
+    /// the last stage can be a remainder).
+    pub fn stage_width(&self, s: usize) -> usize {
+        self.features_per_stage
+            .min(self.total_features - self.features_per_stage * s)
+    }
+
+    /// Input fan-in of stage `s`: raw inputs + all earlier stages' feats.
+    pub fn stage_m(&self, s: usize) -> usize {
+        self.n_inputs + self.features_per_stage * s
+    }
+
+    /// Materialized feature count (readout width).
+    pub fn d(&self) -> usize {
+        self.features_per_stage * self.stage + self.stage_width(self.stage)
+    }
+}
+
+/// One materialized stage of a [`StagedLane`]: its columns (with traces —
+/// frozen stages keep their stale trace bytes so snapshots round-trip
+/// bit-for-bit) and its online-normalizer statistics.
+#[derive(Clone, Debug)]
+pub struct StagedLaneStage {
+    pub columns: Vec<LstmColumn>,
+    pub norm_mu: Vec<f32>,
+    pub norm_var: Vec<f32>,
+    pub norm_denom: Vec<f32>,
+}
+
+/// One staged session's complete state: every materialized stage, the
+/// stage clock, the rng that will mint the *next* stage's columns, and
+/// the TD(lambda) learning state. Stride-independent interchange format
+/// between staged cohorts, the scalar session path and snapshots —
+/// exactly like [`ColumnarLane`] for the columnar fast path.
+#[derive(Clone, Debug)]
+pub struct StagedLane {
+    pub stages: Vec<StagedLaneStage>,
+    pub steps_in_stage: u64,
+    /// captured Xoshiro256 state; consumed only by a cohort hop
+    pub rng: [u64; 4],
+    pub td: TdState,
+}
+
+/// B constructive/CCN TD(lambda) sessions **at the same learning stage**
+/// stepped as one SoA batch: one [`BatchedColumnStepper`] per
+/// materialized stage (shared session capacity), frozen stages advanced
+/// forward-only in a batched pass, the learning stage with full RTRL
+/// traces, plus the shared normalizer/readout/eligibility arrays.
+///
+/// Per step and per session this performs exactly the scalar pipeline —
+/// stages advanced in order, each consuming the current-step normalized
+/// outputs of the stages before it, then predict/TD-update/trace-decay —
+/// with every per-session floating-point expression evaluated in the
+/// scalar order, so a batched session's trajectory is bit-identical to
+/// the same session stepped alone (the same bar the columnar batch
+/// meets).
+///
+/// What a cohort does **not** do is cross a stage boundary: when a
+/// lane's `steps_in_stage` reaches `steps_per_stage` during a step, the
+/// lane is reported *pending* ([`Self::pending_lanes`] /
+/// [`Self::lane_pending`]) and the owner must immediately hop it —
+/// extract, settle the boundary (which consumes the lane's rng exactly
+/// like the scalar net would), and push it into the next stage's cohort.
+/// Membership uses the same O(lane) capacity-padded mechanics as
+/// [`ColumnarSessionBatch`] (see the module docs), which is what makes
+/// the hop cheap.
+pub struct StagedSessionBatch {
+    spec: StagedBatchSpec,
+    /// one stepper per materialized stage, all at the same capacity
+    steppers: Vec<BatchedColumnStepper>,
+    /// live sessions — slots `0..active` of every padded chunk
+    active: usize,
+    // normalizer SoA over all materialized features, [d][cap]
+    mu: Vec<f32>,
+    var: Vec<f32>,
+    denom: Vec<f32>,
+    feats: Vec<f32>,
+    // readout + eligibilities over all features, [d][cap]
+    w_out: Vec<f32>,
+    e_w: Vec<f32>,
+    // learning-stage theta eligibilities (empty when frozen_forever),
+    // parallel to the learning stepper's parameter layout
+    ew_w: Vec<f32>, // [4][m_learn][u_learn][cap]
+    ew_u: Vec<f32>, // [4][u_learn][cap]
+    ew_b: Vec<f32>, // [4][u_learn][cap]
+    // per-session TD + stage bookkeeping, [cap]
+    y_prev: Vec<f32>,
+    have_prev: Vec<bool>,
+    steps: Vec<u64>,
+    steps_in_stage: Vec<u64>,
+    epoch: Vec<u64>,
+    rng: Vec<[u64; 4]>,
+    /// slots whose stage clock crossed the boundary in the last step
+    pending: Vec<usize>,
+    // scratch
+    xbuf: Vec<f32>,    // [n + fps*stage][cap] — raw obs + frozen feats
+    xone: Vec<f32>,    // [m_learn] single-lane input
+    ys: Vec<f32>,      // [cap]
+    a_delta: Vec<f32>, // [cap]
+    scale: Vec<f32>,   // [u_learn][cap]
+    wbuf: Vec<f32>,    // [d]
+    fbuf: Vec<f32>,    // [d]
+}
+
+impl StagedSessionBatch {
+    /// Expected flat e_theta length for one session under `spec`.
+    fn e_theta_len(spec: &StagedBatchSpec) -> usize {
+        if spec.frozen_forever {
+            0
+        } else {
+            spec.stage_width(spec.stage)
+                * LstmColumn::n_params(spec.stage_m(spec.stage))
+        }
+    }
+
+    /// An empty cohort padded to `cap` session slots.
+    pub fn with_capacity(spec: StagedBatchSpec, cap: usize) -> Self {
+        let d = spec.d();
+        let l = d * cap;
+        let (m_l, u_l) = (spec.stage_m(spec.stage), spec.stage_width(spec.stage));
+        let ll = u_l * cap;
+        let theta = !spec.frozen_forever;
+        let steppers = (0..spec.n_stages())
+            .map(|s| {
+                BatchedColumnStepper::with_capacity(
+                    spec.stage_m(s),
+                    0,
+                    spec.stage_width(s),
+                    cap,
+                )
+            })
+            .collect();
+        Self {
+            steppers,
+            active: 0,
+            mu: vec![0.0; l],
+            var: vec![0.0; l],
+            denom: vec![0.0; l],
+            feats: vec![0.0; l],
+            w_out: vec![0.0; l],
+            e_w: vec![0.0; l],
+            ew_w: vec![0.0; if theta { 4 * m_l * ll } else { 0 }],
+            ew_u: vec![0.0; if theta { 4 * ll } else { 0 }],
+            ew_b: vec![0.0; if theta { 4 * ll } else { 0 }],
+            y_prev: vec![0.0; cap],
+            have_prev: vec![false; cap],
+            steps: vec![0; cap],
+            steps_in_stage: vec![0; cap],
+            epoch: vec![0; cap],
+            rng: vec![[0; 4]; cap],
+            pending: Vec::new(),
+            xbuf: vec![0.0; m_l * cap],
+            xone: vec![0.0; m_l],
+            ys: vec![0.0; cap],
+            a_delta: vec![0.0; cap],
+            scale: vec![0.0; ll],
+            wbuf: vec![0.0; d],
+            fbuf: vec![0.0; d],
+            spec,
+        }
+    }
+
+    /// Build a cohort holding `lanes` sessions (possibly zero), with
+    /// capacity exactly `lanes.len()`.
+    pub fn from_lanes(
+        spec: StagedBatchSpec,
+        lanes: &[StagedLane],
+    ) -> Result<Self, String> {
+        let mut batch = Self::with_capacity(spec, lanes.len());
+        for lane in lanes {
+            batch.push_ref(lane)?;
+        }
+        Ok(batch)
+    }
+
+    pub fn len(&self) -> usize {
+        self.active
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.steppers[0].capacity()
+    }
+
+    pub fn spec(&self) -> &StagedBatchSpec {
+        &self.spec
+    }
+
+    pub fn session_steps(&self, b_: usize) -> u64 {
+        debug_assert!(b_ < self.active);
+        self.steps[b_]
+    }
+
+    /// Slot `b_`'s stage clock.
+    pub fn session_steps_in_stage(&self, b_: usize) -> u64 {
+        debug_assert!(b_ < self.active);
+        self.steps_in_stage[b_]
+    }
+
+    /// Did slot `b_`'s stage clock cross the boundary? A pending lane
+    /// must be hopped to the next cohort before its next step.
+    pub fn lane_pending(&self, b_: usize) -> bool {
+        debug_assert!(b_ < self.active);
+        !self.spec.frozen_forever
+            && self.steps_in_stage[b_] >= self.spec.steps_per_stage
+    }
+
+    /// Slots that crossed the stage boundary during the last
+    /// [`Self::step_all`], ascending. Resolve these to session ids
+    /// **before** removing any lane — swap-remove renumbers slots.
+    pub fn pending_lanes(&self) -> &[usize] {
+        &self.pending
+    }
+
+    /// Check a lane bundle's shape against the cohort spec without
+    /// touching any state.
+    fn validate_lane(&self, lane: &StagedLane) -> Result<(), String> {
+        let spec = &self.spec;
+        if lane.stages.len() != spec.n_stages() {
+            return Err(format!(
+                "staged lane has {} stages, want {}",
+                lane.stages.len(),
+                spec.n_stages()
+            ));
+        }
+        for (s, st) in lane.stages.iter().enumerate() {
+            let (want_u, want_m) = (spec.stage_width(s), spec.stage_m(s));
+            if st.columns.len() != want_u {
+                return Err(format!(
+                    "staged lane stage {s}: {} columns, want {want_u}",
+                    st.columns.len()
+                ));
+            }
+            if st.columns.iter().any(|c| c.m != want_m) {
+                return Err(format!("staged lane stage {s}: column width != {want_m}"));
+            }
+            if st.norm_mu.len() != want_u
+                || st.norm_var.len() != want_u
+                || st.norm_denom.len() != want_u
+            {
+                return Err(format!("staged lane stage {s}: normalizer width mismatch"));
+            }
+        }
+        let d = spec.d();
+        if lane.td.w.len() != d || lane.td.e_w.len() != d {
+            return Err("staged lane readout width mismatch".into());
+        }
+        if lane.td.e_theta.len() != Self::e_theta_len(spec) {
+            return Err(format!(
+                "staged lane e_theta length {} != {}",
+                lane.td.e_theta.len(),
+                Self::e_theta_len(spec)
+            ));
+        }
+        Ok(())
+    }
+
+    /// Write one session's complete state into slot `b_` (which may be a
+    /// dead padding slot — every field is overwritten). Caller has
+    /// validated.
+    fn write_lane(&mut self, b_: usize, lane: &StagedLane) {
+        let cap = self.capacity();
+        let fps = self.spec.features_per_stage;
+        let stage = self.spec.stage;
+        for (s, st) in lane.stages.iter().enumerate() {
+            let width = self.spec.stage_width(s);
+            let base = fps * s;
+            for k in 0..width {
+                let ln = k * cap + b_;
+                self.steppers[s].load_lane(ln, &st.columns[k]);
+                let fl = (base + k) * cap + b_;
+                self.mu[fl] = st.norm_mu[k];
+                self.var[fl] = st.norm_var[k];
+                self.denom[fl] = st.norm_denom[k];
+            }
+        }
+        let d = self.spec.d();
+        for k in 0..d {
+            let fl = k * cap + b_;
+            self.w_out[fl] = lane.td.w[k];
+            self.e_w[fl] = lane.td.e_w[k];
+        }
+        if !self.spec.frozen_forever {
+            let (m_l, u_l) =
+                (self.spec.stage_m(stage), self.spec.stage_width(stage));
+            let ll = u_l * cap;
+            let np = LstmColumn::n_params(m_l);
+            for k in 0..u_l {
+                let ln = k * cap + b_;
+                // scalar e_theta layout per column: [4m W | 4 u | 4 b]
+                let bbase = k * np;
+                for a in 0..4 {
+                    for j in 0..m_l {
+                        self.ew_w[(a * m_l + j) * ll + ln] =
+                            lane.td.e_theta[bbase + a * m_l + j];
+                    }
+                    self.ew_u[a * ll + ln] = lane.td.e_theta[bbase + 4 * m_l + a];
+                    self.ew_b[a * ll + ln] =
+                        lane.td.e_theta[bbase + 4 * m_l + 4 + a];
+                }
+            }
+        }
+        self.y_prev[b_] = lane.td.y_prev;
+        self.have_prev[b_] = lane.td.have_prev;
+        self.steps[b_] = lane.td.steps;
+        self.steps_in_stage[b_] = lane.steps_in_stage;
+        self.epoch[b_] = lane.td.epoch_seen;
+        self.rng[b_] = lane.rng;
+    }
+
+    /// Extract session `b_` as a standalone [`StagedLane`] (the cohort is
+    /// unchanged). O(one session's state).
+    pub fn extract_lane(&self, b_: usize) -> StagedLane {
+        assert!(b_ < self.active, "lane {b_} out of range");
+        let cap = self.capacity();
+        let fps = self.spec.features_per_stage;
+        let stage = self.spec.stage;
+        let d = self.spec.d();
+        let mut stages = Vec::with_capacity(self.spec.n_stages());
+        for s in 0..self.spec.n_stages() {
+            let width = self.spec.stage_width(s);
+            let base = fps * s;
+            let mut st = StagedLaneStage {
+                columns: Vec::with_capacity(width),
+                norm_mu: Vec::with_capacity(width),
+                norm_var: Vec::with_capacity(width),
+                norm_denom: Vec::with_capacity(width),
+            };
+            for k in 0..width {
+                st.columns.push(self.steppers[s].extract_lane(k * cap + b_));
+                let fl = (base + k) * cap + b_;
+                st.norm_mu.push(self.mu[fl]);
+                st.norm_var.push(self.var[fl]);
+                st.norm_denom.push(self.denom[fl]);
+            }
+            stages.push(st);
+        }
+        let mut w = Vec::with_capacity(d);
+        let mut e_w = Vec::with_capacity(d);
+        for k in 0..d {
+            let fl = k * cap + b_;
+            w.push(self.w_out[fl]);
+            e_w.push(self.e_w[fl]);
+        }
+        let mut e_theta = vec![0.0; Self::e_theta_len(&self.spec)];
+        if !self.spec.frozen_forever {
+            let (m_l, u_l) =
+                (self.spec.stage_m(stage), self.spec.stage_width(stage));
+            let ll = u_l * cap;
+            let np = LstmColumn::n_params(m_l);
+            for k in 0..u_l {
+                let ln = k * cap + b_;
+                let bbase = k * np;
+                for a in 0..4 {
+                    for j in 0..m_l {
+                        e_theta[bbase + a * m_l + j] =
+                            self.ew_w[(a * m_l + j) * ll + ln];
+                    }
+                    e_theta[bbase + 4 * m_l + a] = self.ew_u[a * ll + ln];
+                    e_theta[bbase + 4 * m_l + 4 + a] = self.ew_b[a * ll + ln];
+                }
+            }
+        }
+        StagedLane {
+            stages,
+            steps_in_stage: self.steps_in_stage[b_],
+            rng: self.rng[b_],
+            td: TdState {
+                w,
+                e_w,
+                e_theta,
+                y_prev: self.y_prev[b_],
+                have_prev: self.have_prev[b_],
+                epoch_seen: self.epoch[b_],
+                steps: self.steps[b_],
+            },
+        }
+    }
+
+    pub fn extract_all(&self) -> Vec<StagedLane> {
+        (0..self.len()).map(|b_| self.extract_lane(b_)).collect()
+    }
+
+    /// Add a session in place; returns its slot index. O(one session's
+    /// state) with amortized-O(1) capacity doubling, exactly like
+    /// [`ColumnarSessionBatch::push_lane`].
+    pub fn push_lane(&mut self, lane: StagedLane) -> Result<usize, String> {
+        self.push_ref(&lane)
+    }
+
+    fn push_ref(&mut self, lane: &StagedLane) -> Result<usize, String> {
+        // validate before growing: a rejected lane must not leave a
+        // permanently re-strided batch behind
+        self.validate_lane(lane)?;
+        if self.active == self.capacity() {
+            self.set_capacity((self.capacity() * 2).max(MIN_CAPACITY));
+        }
+        let b_ = self.active;
+        self.write_lane(b_, lane);
+        self.active += 1;
+        for st in self.steppers.iter_mut() {
+            st.set_batch(self.active);
+        }
+        Ok(b_)
+    }
+
+    /// Remove session `idx` in place, returning it (swap-remove: the last
+    /// session moves into slot `idx`; callers owning an id→lane map must
+    /// re-key the moved session). O(one session's state).
+    pub fn swap_remove_lane(&mut self, idx: usize) -> Result<StagedLane, String> {
+        if idx >= self.active {
+            return Err(format!("lane {idx} out of range"));
+        }
+        let removed = self.extract_lane(idx);
+        self.discard_lane(idx)?;
+        Ok(removed)
+    }
+
+    /// Remove session `idx` without materializing it (evict path).
+    pub fn discard_lane(&mut self, idx: usize) -> Result<(), String> {
+        if idx >= self.active {
+            return Err(format!("lane {idx} out of range"));
+        }
+        let last = self.active - 1;
+        if idx != last {
+            self.copy_session(last, idx);
+        }
+        self.active = last;
+        for st in self.steppers.iter_mut() {
+            st.set_batch(last);
+        }
+        Ok(())
+    }
+
+    /// Shrink a sparse cohort to twice its live count (cold path only —
+    /// same policy as [`ColumnarSessionBatch::compact`]).
+    pub fn compact(&mut self) {
+        let target = (self.active * 2).max(MIN_CAPACITY);
+        if target < self.capacity() {
+            self.set_capacity(target);
+        }
+    }
+
+    /// Re-stride every array to a new session capacity, preserving live
+    /// state bit-for-bit and reallocating scratch.
+    fn set_capacity(&mut self, new_cap: usize) {
+        debug_assert!(new_cap >= self.active);
+        let old = self.capacity();
+        if new_cap == old {
+            return;
+        }
+        let live = self.active;
+        let d = self.spec.d();
+        for st in self.steppers.iter_mut() {
+            st.set_capacity(new_cap);
+        }
+        restride(&mut self.mu, d, old, new_cap, live);
+        restride(&mut self.var, d, old, new_cap, live);
+        restride(&mut self.denom, d, old, new_cap, live);
+        restride(&mut self.w_out, d, old, new_cap, live);
+        restride(&mut self.e_w, d, old, new_cap, live);
+        if !self.spec.frozen_forever {
+            let (m_l, u_l) = (
+                self.spec.stage_m(self.spec.stage),
+                self.spec.stage_width(self.spec.stage),
+            );
+            restride(&mut self.ew_w, 4 * m_l * u_l, old, new_cap, live);
+            restride(&mut self.ew_u, 4 * u_l, old, new_cap, live);
+            restride(&mut self.ew_b, 4 * u_l, old, new_cap, live);
+        }
+        restride(&mut self.y_prev, 1, old, new_cap, live);
+        self.have_prev.resize(new_cap, false);
+        self.steps.resize(new_cap, 0);
+        self.steps_in_stage.resize(new_cap, 0);
+        self.epoch.resize(new_cap, 0);
+        self.rng.resize(new_cap, [0; 4]);
+        // scratch is fully rewritten inside every step before it is read
+        let m_l = self.spec.stage_m(self.spec.stage);
+        let u_l = self.spec.stage_width(self.spec.stage);
+        self.feats = vec![0.0; d * new_cap];
+        self.scale = vec![0.0; u_l * new_cap];
+        self.xbuf = vec![0.0; m_l * new_cap];
+        self.ys = vec![0.0; new_cap];
+        self.a_delta = vec![0.0; new_cap];
+    }
+
+    /// Copy every piece of session state from slot `src` to slot `dst` —
+    /// the O(lane) primitive behind swap-remove.
+    fn copy_session(&mut self, src: usize, dst: usize) {
+        let cap = self.capacity();
+        let d = self.spec.d();
+        for s in 0..self.spec.n_stages() {
+            let width = self.spec.stage_width(s);
+            for k in 0..width {
+                self.steppers[s].copy_lane(k * cap + src, k * cap + dst);
+            }
+        }
+        for k in 0..d {
+            let (sl, tl) = (k * cap + src, k * cap + dst);
+            self.mu[tl] = self.mu[sl];
+            self.var[tl] = self.var[sl];
+            self.denom[tl] = self.denom[sl];
+            self.w_out[tl] = self.w_out[sl];
+            self.e_w[tl] = self.e_w[sl];
+        }
+        if !self.spec.frozen_forever {
+            let (m_l, u_l) = (
+                self.spec.stage_m(self.spec.stage),
+                self.spec.stage_width(self.spec.stage),
+            );
+            let ll = u_l * cap;
+            for k in 0..u_l {
+                let (sl, tl) = (k * cap + src, k * cap + dst);
+                for a in 0..4 {
+                    for j in 0..m_l {
+                        let row = (a * m_l + j) * ll;
+                        self.ew_w[row + tl] = self.ew_w[row + sl];
+                    }
+                    let row = a * ll;
+                    self.ew_u[row + tl] = self.ew_u[row + sl];
+                    self.ew_b[row + tl] = self.ew_b[row + sl];
+                }
+            }
+        }
+        self.y_prev[dst] = self.y_prev[src];
+        self.have_prev[dst] = self.have_prev[src];
+        self.steps[dst] = self.steps[src];
+        self.steps_in_stage[dst] = self.steps_in_stage[src];
+        self.epoch[dst] = self.epoch[src];
+        self.rng[dst] = self.rng[src];
+    }
+
+    /// Readout prediction for session `b_`, gathered into contiguous
+    /// buffers so the dot product uses the exact summation order of the
+    /// scalar agent's `util::dot`.
+    #[inline]
+    fn predict_session(&mut self, b_: usize) -> f32 {
+        let (d, cap) = (self.spec.d(), self.capacity());
+        for k in 0..d {
+            self.wbuf[k] = self.w_out[k * cap + b_];
+            self.fbuf[k] = self.feats[k * cap + b_];
+        }
+        dot(&self.wbuf[..d], &self.fbuf[..d])
+    }
+
+    /// Advance every live session's net: stages in order, each consuming
+    /// the current-step normalized outputs of the stages before it
+    /// (paper Figure 2), frozen stages forward-only, the learning stage
+    /// with RTRL traces. Observations arrive transposed in `xbuf` rows
+    /// `0..n`; this fills `feats` (and the frozen-feat rows of `xbuf`).
+    fn advance_all(&mut self, bsz: usize) {
+        let cap = self.capacity();
+        let Self {
+            spec,
+            steppers,
+            mu,
+            var,
+            denom,
+            feats,
+            xbuf,
+            ..
+        } = self;
+        let n = spec.n_inputs;
+        let fps = spec.features_per_stage;
+        let stage = spec.stage;
+        let beta = spec.beta;
+        for s in 0..=stage {
+            let width = spec.stage_width(s);
+            let m_s = spec.stage_m(s);
+            let st = &mut steppers[s];
+            if s == stage && !spec.frozen_forever {
+                st.step_traces(&xbuf[..m_s * cap]);
+            } else {
+                st.step_forward(&xbuf[..m_s * cap]);
+            }
+            // normalize this stage's fresh features — the scalar
+            // OnlineNormalizer recursion per (feature, session)
+            let base = fps * s;
+            for k in 0..width {
+                let hrow = k * cap;
+                let frow = (base + k) * cap;
+                for b_ in 0..bsz {
+                    let fv = st.h[hrow + b_];
+                    let prev_mu = mu[frow + b_];
+                    let mu_new = beta * prev_mu + (1.0 - beta) * fv;
+                    let var_new = beta * var[frow + b_]
+                        + (1.0 - beta) * (mu_new - fv) * (prev_mu - fv);
+                    mu[frow + b_] = mu_new;
+                    var[frow + b_] = var_new;
+                    let dn = spec.eps.max(var_new.max(0.0).sqrt());
+                    denom[frow + b_] = dn;
+                    feats[frow + b_] = (fv - mu_new) / dn;
+                }
+            }
+            // expose them to the stages after this one
+            if s < stage {
+                for k in 0..width {
+                    let frow = (base + k) * cap;
+                    let xrow = (n + base + k) * cap;
+                    for b_ in 0..bsz {
+                        xbuf[xrow + b_] = feats[frow + b_];
+                    }
+                }
+            }
+        }
+    }
+
+    /// One TD(lambda) step for **all** sessions: `obs` is `[B][n]`
+    /// session-major, `cumulants` is `[B]` (`B = len()`). Returns the
+    /// predictions made this step and records which lanes crossed their
+    /// stage boundary ([`Self::pending_lanes`]).
+    pub fn step_all(&mut self, obs: &[f32], cumulants: &[f32]) -> &[f32] {
+        let n = self.spec.n_inputs;
+        let bsz = self.active;
+        assert_eq!(obs.len(), n * bsz, "obs shape");
+        assert_eq!(cumulants.len(), bsz, "cumulant shape");
+        self.pending.clear();
+        if bsz == 0 {
+            return &self.ys[..0];
+        }
+        let cap = self.capacity();
+        let d = self.spec.d();
+        let fps = self.spec.features_per_stage;
+        let stage = self.spec.stage;
+        let theta = !self.spec.frozen_forever;
+        // transpose observations to padded [n][cap] for the SoA kernels
+        for j in 0..n {
+            for b_ in 0..bsz {
+                self.xbuf[j * cap + b_] = obs[b_ * n + j];
+            }
+        }
+        self.advance_all(bsz);
+        for b_ in 0..bsz {
+            self.ys[b_] = self.predict_session(b_);
+        }
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.spec.td;
+        for b_ in 0..bsz {
+            self.a_delta[b_] = if self.have_prev[b_] {
+                alpha * (cumulants[b_] + gamma * self.ys[b_] - self.y_prev[b_])
+            } else {
+                0.0
+            };
+        }
+        // TD update of readout (all features) and of the learning stage's
+        // parameters (eligibilities accumulated through t-1), then trace
+        // decay with this step's gradients — the scalar agent's order.
+        for k in 0..d {
+            let s = k * cap;
+            for b_ in 0..bsz {
+                self.w_out[s + b_] += self.a_delta[b_] * self.e_w[s + b_];
+            }
+        }
+        let (m_l, u_l) = (
+            self.spec.stage_m(stage),
+            self.spec.stage_width(stage),
+        );
+        let ll = u_l * cap;
+        if theta {
+            let Self {
+                steppers,
+                ew_w,
+                ew_u,
+                ew_b,
+                a_delta,
+                ..
+            } = self;
+            let lst = &mut steppers[stage];
+            for a in 0..4 {
+                for j in 0..m_l {
+                    let row = (a * m_l + j) * ll;
+                    for k in 0..u_l {
+                        let off = row + k * cap;
+                        for b_ in 0..bsz {
+                            lst.w[off + b_] += a_delta[b_] * ew_w[off + b_];
+                        }
+                    }
+                }
+                let row = a * ll;
+                for k in 0..u_l {
+                    let off = row + k * cap;
+                    for b_ in 0..bsz {
+                        let ad = a_delta[b_];
+                        lst.u[off + b_] += ad * ew_u[off + b_];
+                        lst.b[off + b_] += ad * ew_b[off + b_];
+                    }
+                }
+            }
+        }
+        let gl = gamma * lambda;
+        for k in 0..d {
+            let s = k * cap;
+            for b_ in 0..bsz {
+                self.e_w[s + b_] = gl * self.e_w[s + b_] + self.feats[s + b_];
+            }
+        }
+        if theta {
+            // dy/dtheta = (w_k / denom_k) * TH over the learning stage,
+            // with the *updated* readout — as in the scalar agent.
+            for k in 0..u_l {
+                let s = k * cap;
+                let fl = (fps * stage + k) * cap;
+                for b_ in 0..bsz {
+                    self.scale[s + b_] =
+                        self.w_out[fl + b_] / self.denom[fl + b_];
+                }
+            }
+            let Self {
+                steppers,
+                ew_w,
+                ew_u,
+                ew_b,
+                scale,
+                ..
+            } = self;
+            let lst = &steppers[stage];
+            for a in 0..4 {
+                for j in 0..m_l {
+                    let row = (a * m_l + j) * ll;
+                    for k in 0..u_l {
+                        let off = row + k * cap;
+                        let s = k * cap;
+                        for b_ in 0..bsz {
+                            ew_w[off + b_] = gl * ew_w[off + b_]
+                                + scale[s + b_] * lst.thw[off + b_];
+                        }
+                    }
+                }
+                let row = a * ll;
+                for k in 0..u_l {
+                    let off = row + k * cap;
+                    let s = k * cap;
+                    for b_ in 0..bsz {
+                        ew_u[off + b_] = gl * ew_u[off + b_]
+                            + scale[s + b_] * lst.thu[off + b_];
+                        ew_b[off + b_] = gl * ew_b[off + b_]
+                            + scale[s + b_] * lst.thb[off + b_];
+                    }
+                }
+            }
+        }
+        for b_ in 0..bsz {
+            self.y_prev[b_] = self.ys[b_];
+            self.have_prev[b_] = true;
+            self.steps[b_] += 1;
+            self.steps_in_stage[b_] += 1;
+            if theta && self.steps_in_stage[b_] >= self.spec.steps_per_stage {
+                self.pending.push(b_);
+            }
+        }
+        &self.ys[..bsz]
+    }
+
+    /// Advance one session's net through every stage (strided single-lane
+    /// path). Mirrors [`Self::advance_all`] for a single slot.
+    fn advance_one(&mut self, b_: usize, x: &[f32]) {
+        let mut xone = std::mem::take(&mut self.xone);
+        let cap = self.capacity();
+        let n = self.spec.n_inputs;
+        xone[..n].copy_from_slice(x);
+        {
+            let Self {
+                spec,
+                steppers,
+                mu,
+                var,
+                denom,
+                feats,
+                ..
+            } = self;
+            let fps = spec.features_per_stage;
+            let stage = spec.stage;
+            let beta = spec.beta;
+            for s in 0..=stage {
+                let width = spec.stage_width(s);
+                let m_s = spec.stage_m(s);
+                let st = &mut steppers[s];
+                for k in 0..width {
+                    let lane = k * cap + b_;
+                    if s == stage && !spec.frozen_forever {
+                        st.step_lane_traces(lane, &xone[..m_s]);
+                    } else {
+                        st.step_lane_forward(lane, &xone[..m_s]);
+                    }
+                }
+                let base = fps * s;
+                for k in 0..width {
+                    let fv = st.h[k * cap + b_];
+                    let fl = (base + k) * cap + b_;
+                    let prev_mu = mu[fl];
+                    let mu_new = beta * prev_mu + (1.0 - beta) * fv;
+                    let var_new = beta * var[fl]
+                        + (1.0 - beta) * (mu_new - fv) * (prev_mu - fv);
+                    mu[fl] = mu_new;
+                    var[fl] = var_new;
+                    let dn = spec.eps.max(var_new.max(0.0).sqrt());
+                    denom[fl] = dn;
+                    let f_hat = (fv - mu_new) / dn;
+                    feats[fl] = f_hat;
+                    if s < stage {
+                        xone[n + base + k] = f_hat;
+                    }
+                }
+            }
+        }
+        self.xone = xone;
+    }
+
+    /// One TD(lambda) step for a single session (per-session protocol
+    /// requests). Identical arithmetic to [`Self::step_all`] restricted
+    /// to slot `b_`. Check [`Self::lane_pending`] afterwards — the lane
+    /// must hop before its next step if its stage clock crossed.
+    pub fn step_one(&mut self, b_: usize, x: &[f32], cumulant: f32) -> f32 {
+        let n = self.spec.n_inputs;
+        assert!(b_ < self.active);
+        assert_eq!(x.len(), n, "obs width");
+        let cap = self.capacity();
+        let d = self.spec.d();
+        let fps = self.spec.features_per_stage;
+        let stage = self.spec.stage;
+        let theta = !self.spec.frozen_forever;
+        self.advance_one(b_, x);
+        let y = self.predict_session(b_);
+        let TdConfig {
+            alpha,
+            gamma,
+            lambda,
+        } = self.spec.td;
+        let (m_l, u_l) = (
+            self.spec.stage_m(stage),
+            self.spec.stage_width(stage),
+        );
+        let ll = u_l * cap;
+        if self.have_prev[b_] {
+            let ad = alpha * (cumulant + gamma * y - self.y_prev[b_]);
+            for k in 0..d {
+                let lane = k * cap + b_;
+                self.w_out[lane] += ad * self.e_w[lane];
+            }
+            if theta {
+                let Self {
+                    steppers,
+                    ew_w,
+                    ew_u,
+                    ew_b,
+                    ..
+                } = self;
+                let lst = &mut steppers[stage];
+                for a in 0..4 {
+                    for j in 0..m_l {
+                        for k in 0..u_l {
+                            let idx = (a * m_l + j) * ll + k * cap + b_;
+                            lst.w[idx] += ad * ew_w[idx];
+                        }
+                    }
+                    for k in 0..u_l {
+                        let idx = a * ll + k * cap + b_;
+                        lst.u[idx] += ad * ew_u[idx];
+                        lst.b[idx] += ad * ew_b[idx];
+                    }
+                }
+            }
+        }
+        let gl = gamma * lambda;
+        for k in 0..d {
+            let lane = k * cap + b_;
+            self.e_w[lane] = gl * self.e_w[lane] + self.feats[lane];
+        }
+        if theta {
+            let Self {
+                steppers,
+                ew_w,
+                ew_u,
+                ew_b,
+                w_out,
+                denom,
+                ..
+            } = self;
+            let lst = &steppers[stage];
+            for k in 0..u_l {
+                let fl = (fps * stage + k) * cap + b_;
+                let scale = w_out[fl] / denom[fl];
+                for a in 0..4 {
+                    for j in 0..m_l {
+                        let idx = (a * m_l + j) * ll + k * cap + b_;
+                        ew_w[idx] = gl * ew_w[idx] + scale * lst.thw[idx];
+                    }
+                    let idx = a * ll + k * cap + b_;
+                    ew_u[idx] = gl * ew_u[idx] + scale * lst.thu[idx];
+                    ew_b[idx] = gl * ew_b[idx] + scale * lst.thb[idx];
+                }
+            }
+        }
+        self.y_prev[b_] = y;
+        self.have_prev[b_] = true;
+        self.steps[b_] += 1;
+        self.steps_in_stage[b_] += 1;
+        y
+    }
+
+    /// Prediction without learning for one session: recurrent state,
+    /// traces and normalizers advance (exactly like the scalar agent's
+    /// `predict_only`), no TD update, bootstrap and stage clocks
+    /// untouched.
+    pub fn predict_one(&mut self, b_: usize, x: &[f32]) -> f32 {
+        let n = self.spec.n_inputs;
+        assert!(b_ < self.active);
+        assert_eq!(x.len(), n, "obs width");
+        self.advance_one(b_, x);
+        self.predict_session(b_)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1832,5 +2819,347 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // ---- staged cohorts ----
+
+    use crate::config::{build_ccn, LearnerKind};
+    use crate::learn::TdLambdaAgent;
+    use crate::nets::ccn::{CcnConfig, CcnNet};
+    use crate::nets::normalizer::OnlineNormalizer;
+    use crate::nets::{PersistableNet, PredictionNet};
+
+    const STAGED_TD: TdConfig = TdConfig {
+        alpha: 0.01,
+        gamma: 0.9,
+        lambda: 0.9,
+    };
+
+    fn staged_spec_of(net: &CcnNet, td: TdConfig) -> StagedBatchSpec {
+        let cfg = net.config();
+        StagedBatchSpec {
+            n_inputs: cfg.n_inputs,
+            features_per_stage: cfg.features_per_stage,
+            total_features: cfg.total_features,
+            steps_per_stage: cfg.steps_per_stage,
+            stage: net.n_stages() - 1,
+            frozen_forever: net.frozen_forever(),
+            init_scale: cfg.init_scale,
+            td,
+            eps: cfg.norm_eps,
+            beta: cfg.norm_beta,
+        }
+    }
+
+    fn staged_lane_of(agent: &TdLambdaAgent<CcnNet>) -> StagedLane {
+        let net = &agent.net;
+        let stages = (0..net.n_stages())
+            .map(|s| {
+                let (mu, var, denom) = net.stage_norm(s).state();
+                StagedLaneStage {
+                    columns: (0..mu.len()).map(|k| net.column(s, k).clone()).collect(),
+                    norm_mu: mu.to_vec(),
+                    norm_var: var.to_vec(),
+                    norm_denom: denom.to_vec(),
+                }
+            })
+            .collect();
+        StagedLane {
+            stages,
+            steps_in_stage: net.steps_in_stage(),
+            rng: net.rng_state(),
+            td: agent.td_state(),
+        }
+    }
+
+    fn staged_agent(
+        seed: u64,
+        total: usize,
+        per_stage: usize,
+        steps_per_stage: u64,
+    ) -> TdLambdaAgent<CcnNet> {
+        let net = build_ccn(
+            &LearnerKind::Ccn {
+                total,
+                per_stage,
+                steps_per_stage,
+            },
+            3,
+            0.01,
+            seed,
+        )
+        .unwrap();
+        TdLambdaAgent::new(net, STAGED_TD)
+    }
+
+    /// The scalar side of a cohort hop: rebuild the net from a pending
+    /// lane, settle the stage boundary (consuming the lane's rng exactly
+    /// like the scalar net would have), and zero-extend the TD state —
+    /// the recipe the serve layer uses between cohorts.
+    fn hop_to_agent(spec: &StagedBatchSpec, lane: &StagedLane) -> TdLambdaAgent<CcnNet> {
+        let cfg = CcnConfig {
+            n_inputs: spec.n_inputs,
+            total_features: spec.total_features,
+            features_per_stage: spec.features_per_stage,
+            steps_per_stage: spec.steps_per_stage,
+            init_scale: spec.init_scale,
+            norm_eps: spec.eps,
+            norm_beta: spec.beta,
+        };
+        let parts = lane
+            .stages
+            .iter()
+            .map(|st| {
+                (
+                    st.columns.clone(),
+                    OnlineNormalizer::from_state(
+                        spec.beta,
+                        spec.eps,
+                        st.norm_mu.clone(),
+                        st.norm_var.clone(),
+                        st.norm_denom.clone(),
+                    )
+                    .unwrap(),
+                )
+            })
+            .collect();
+        let mut net = CcnNet::from_parts(
+            cfg,
+            parts,
+            lane.steps_in_stage,
+            lane.td.epoch_seen,
+            spec.frozen_forever,
+            Xoshiro256::from_state(lane.rng),
+        )
+        .unwrap();
+        let mut td = lane.td.clone();
+        if !spec.frozen_forever && lane.steps_in_stage >= spec.steps_per_stage {
+            net.settle_stage_boundary();
+            let d = net.n_features();
+            td.w.resize(d, 0.0);
+            td.e_w.resize(d, 0.0);
+            td.e_theta = vec![0.0; net.n_learnable_params()];
+            td.epoch_seen = net.param_epoch();
+        }
+        let mut agent = TdLambdaAgent::new(net, spec.td);
+        agent.set_td_state(td).unwrap();
+        agent
+    }
+
+    /// Mid-growth parity: sessions with a two-stage frozen prefix and a
+    /// learning third stage step bit-identically to never-batched scalar
+    /// agents, and the extracted lanes round-trip the full TD state.
+    #[test]
+    fn staged_batch_matches_scalar_agents_mid_growth() {
+        let (n, bsz) = (3usize, 3usize);
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        // two boundaries crossed during warmup: stage 2 learning, 20/40
+        let mut scalars: Vec<TdLambdaAgent<CcnNet>> =
+            (0..bsz as u64).map(|s| staged_agent(s, 6, 2, 40)).collect();
+        for _ in 0..100 {
+            for agent in scalars.iter_mut() {
+                let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                agent.step(&x, rng.uniform(-0.5, 0.5));
+            }
+        }
+        let spec = staged_spec_of(&scalars[0].net, STAGED_TD);
+        assert_eq!(spec.stage, 2);
+        assert_eq!(spec.d(), 6);
+        assert!(!spec.frozen_forever);
+        let lanes: Vec<StagedLane> = scalars.iter().map(staged_lane_of).collect();
+        let mut batch = StagedSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        for t in 0..15 {
+            let obs: Vec<f32> =
+                (0..bsz * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            assert!(batch.pending_lanes().is_empty(), "t={t}: early boundary");
+            for (b_, agent) in scalars.iter_mut().enumerate() {
+                let y = agent.step(&obs[b_ * n..(b_ + 1) * n], cs[b_]);
+                assert_eq!(ys[b_], y, "t={t} b={b_}");
+            }
+        }
+        for (b_, agent) in scalars.iter().enumerate() {
+            assert_eq!(
+                batch.extract_lane(b_).td,
+                agent.td_state(),
+                "lane {b_} round-trip"
+            );
+        }
+    }
+
+    /// Fully materialized nets (`frozen_forever`) form a cohort with no
+    /// theta eligibilities: forward-only column passes plus readout TD,
+    /// still bit-exact against scalar agents, never pending.
+    #[test]
+    fn staged_frozen_forever_cohort_matches_scalar() {
+        let (n, bsz) = (3usize, 2usize);
+        let mut rng = Xoshiro256::seed_from_u64(32);
+        let mut scalars: Vec<TdLambdaAgent<CcnNet>> =
+            (0..bsz as u64).map(|s| staged_agent(s, 4, 2, 25)).collect();
+        for _ in 0..60 {
+            for agent in scalars.iter_mut() {
+                let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                agent.step(&x, rng.uniform(-0.5, 0.5));
+            }
+        }
+        let spec = staged_spec_of(&scalars[0].net, STAGED_TD);
+        assert!(spec.frozen_forever);
+        assert_eq!(StagedSessionBatch::e_theta_len(&spec), 0);
+        let lanes: Vec<StagedLane> = scalars.iter().map(staged_lane_of).collect();
+        assert!(lanes.iter().all(|l| l.td.e_theta.is_empty()));
+        let mut batch = StagedSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        for t in 0..20 {
+            let obs: Vec<f32> =
+                (0..bsz * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            assert!(batch.pending_lanes().is_empty(), "frozen cohorts never hop");
+            for (b_, agent) in scalars.iter_mut().enumerate() {
+                let y = agent.step(&obs[b_ * n..(b_ + 1) * n], cs[b_]);
+                assert_eq!(ys[b_], y, "t={t} b={b_}");
+            }
+        }
+    }
+
+    #[test]
+    fn staged_step_one_matches_step_all() {
+        let (n, bsz) = (3usize, 4usize);
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let mut scalars: Vec<TdLambdaAgent<CcnNet>> =
+            (0..bsz as u64).map(|s| staged_agent(s, 6, 2, 50)).collect();
+        for _ in 0..60 {
+            for agent in scalars.iter_mut() {
+                let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                agent.step(&x, rng.uniform(-0.5, 0.5));
+            }
+        }
+        let spec = staged_spec_of(&scalars[0].net, STAGED_TD);
+        let lanes: Vec<StagedLane> = scalars.iter().map(staged_lane_of).collect();
+        let mut a = StagedSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        let mut b = StagedSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        for _ in 0..30 {
+            let obs: Vec<f32> =
+                (0..bsz * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..bsz).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = a.step_all(&obs, &cs).to_vec();
+            for b_ in 0..bsz {
+                let y = b.step_one(b_, &obs[b_ * n..(b_ + 1) * n], cs[b_]);
+                assert_eq!(ys[b_], y, "session {b_}");
+                assert_eq!(a.lane_pending(b_), b.lane_pending(b_));
+            }
+        }
+    }
+
+    /// The cohort-hop contract end to end at the batch level: lanes enter
+    /// a cohort at different stage clocks, the boundary fires per lane
+    /// (the crossing step's prediction still matches scalar — the scalar
+    /// net settles *after* its TD update), pending lanes hop through the
+    /// interchange format and continue bit-identically to scalar twins
+    /// that crossed naturally, and the survivors ride out the churn
+    /// (swap-remove + compact + push) untouched.
+    #[test]
+    fn staged_cohort_hop_and_churn_are_bit_exact() {
+        let n = 3usize;
+        let mut rng = Xoshiro256::seed_from_u64(34);
+        // staggered entry: twin 0 is 5 steps younger in the stage
+        let mut twins: Vec<TdLambdaAgent<CcnNet>> =
+            (0..3u64).map(|s| staged_agent(s, 4, 2, 30)).collect();
+        for (i, agent) in twins.iter_mut().enumerate() {
+            let warm = if i == 0 { 20 } else { 25 };
+            for _ in 0..warm {
+                let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                agent.step(&x, rng.uniform(-0.5, 0.5));
+            }
+        }
+        let spec = staged_spec_of(&twins[0].net, STAGED_TD);
+        assert_eq!(spec.stage, 0);
+        let lanes: Vec<StagedLane> = twins.iter().map(staged_lane_of).collect();
+        assert_eq!(lanes[0].steps_in_stage, 20);
+        assert_eq!(lanes[1].steps_in_stage, 25);
+        let mut batch = StagedSessionBatch::from_lanes(spec.clone(), &lanes).unwrap();
+        // 5 joint steps: lanes 1 and 2 cross on the 5th, and even that
+        // step's predictions match the scalar twins bit-for-bit
+        for t in 0..5 {
+            let obs: Vec<f32> = (0..3 * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..3).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            for (b_, twin) in twins.iter_mut().enumerate() {
+                let y = twin.step(&obs[b_ * n..(b_ + 1) * n], cs[b_]);
+                assert_eq!(ys[b_], y, "t={t} b={b_}");
+            }
+        }
+        assert_eq!(batch.pending_lanes(), &[1, 2]);
+        assert!(!batch.lane_pending(0));
+        // hop lane 1 through the interchange format; its rebuilt agent
+        // must match twin 1 (which settled the same boundary in-net)
+        // down to the serialized bytes, rng state included
+        let hopped_lane = batch.swap_remove_lane(1).unwrap();
+        assert_eq!(hopped_lane.steps_in_stage, 30);
+        let mut hopped = hop_to_agent(&spec, &hopped_lane);
+        assert_eq!(hopped.net.n_stages(), 2);
+        assert_eq!(
+            hopped.net.save().dump(),
+            twins[1].net.save().dump(),
+            "hop must replicate the scalar stage transition exactly"
+        );
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            assert_eq!(hopped.step(&x, c), twins[1].step(&x, c));
+        }
+        // lane 2 swapped into slot 1 by the removal; hop it out too, then
+        // churn the cohort around the survivor
+        assert!(batch.lane_pending(1));
+        batch.swap_remove_lane(1).unwrap();
+        assert_eq!(batch.len(), 1);
+        batch.compact();
+        batch
+            .push_lane(staged_lane_of(&staged_agent(9, 4, 2, 30)))
+            .unwrap();
+        let mut fresh_twin = staged_agent(9, 4, 2, 30);
+        for _ in 0..5 {
+            let obs: Vec<f32> = (0..2 * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..2).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            assert_eq!(ys[0], twins[0].step(&obs[..n], cs[0]), "survivor");
+            assert_eq!(ys[1], fresh_twin.step(&obs[n..2 * n], cs[1]), "pushed");
+        }
+        // the survivor (entered 5 steps late) crosses on its own clock
+        assert!(!batch.lane_pending(0));
+        for _ in 0..5 {
+            let obs: Vec<f32> = (0..2 * n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let cs: Vec<f32> = (0..2).map(|_| rng.uniform(-0.5, 0.5)).collect();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            assert_eq!(ys[0], twins[0].step(&obs[..n], cs[0]));
+            assert_eq!(ys[1], fresh_twin.step(&obs[n..2 * n], cs[1]));
+        }
+        assert_eq!(batch.pending_lanes(), &[0], "per-lane stage clock");
+    }
+
+    /// A staged lane that does not fit the cohort spec is rejected
+    /// without disturbing the batch.
+    #[test]
+    fn staged_lane_validation_rejects_mismatched_shapes() {
+        let agent = staged_agent(1, 6, 2, 40);
+        let spec = staged_spec_of(&agent.net, STAGED_TD);
+        let good = staged_lane_of(&agent);
+        let mut batch = StagedSessionBatch::from_lanes(spec.clone(), &[]).unwrap();
+
+        let mut missing_stage = good.clone();
+        missing_stage.stages.pop();
+        assert!(batch.push_lane(missing_stage).is_err());
+
+        let mut bad_readout = good.clone();
+        bad_readout.td.w.push(0.0);
+        assert!(batch.push_lane(bad_readout).is_err());
+
+        let mut bad_theta = good.clone();
+        bad_theta.td.e_theta.truncate(3);
+        assert!(batch.push_lane(bad_theta).is_err());
+
+        assert_eq!(batch.len(), 0);
+        batch.push_lane(good).unwrap();
+        assert_eq!(batch.len(), 1);
     }
 }

@@ -78,7 +78,7 @@
 //! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
 //! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
-//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p90_us":3.1,"p99_us":8.0},...,"trace_dropped":0},"windows":{"ops":{"last_1s":...,"per_s_10s":...},...}}` |
+//! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"cohorts":{"stage0:d2":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p90_us":3.1,"p99_us":8.0},...,"trace_dropped":0},"windows":{"ops":{"last_1s":...,"per_s_10s":...},...}}` |
 //! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...},"windows":{...}}`. On the router tier, `{"op":"metrics","scope":"fleet"}` fans out to every live backend and returns the merged fleet snapshot ([`crate::cluster`]) |
 //! | `ping` | `{"op":"ping"}` | `{"ok":true,"pong":true}` (liveness probe, answered inline — no shard round-trip) |
 //! | `health` | `{"op":"health"}` | router-tier only ([`crate::cluster`]): per-backend liveness + stats roll-up |
@@ -108,11 +108,21 @@
 //! ```
 //!
 //! Sessions whose net reports a columnar [`crate::nets::BatchCapability`]
-//! and share a shape are transparently stored in SoA batches per shard;
-//! a `step_batch` covering all of them advances each shard's batch in
-//! one fused pass. Batched and scalar paths produce identical numbers —
+//! and share a shape are transparently stored in SoA batches per shard,
+//! and growing ccn/constructive sessions
+//! ([`crate::nets::BatchCapability::Staged`]) in stage-keyed *cohorts*:
+//! the batch key is (spec shape, learning-stage index), so every cohort
+//! member shares one SoA learning stage plus batched forward passes over
+//! its frozen prefix. A session whose stage clock crosses
+//! `steps_per_stage` hops to the next stage's cohort in O(its own lane)
+//! — swap-remove, settle the boundary, re-place — and ends in the
+//! frozen-forever cohort once every feature is materialized. A
+//! `step_batch` covering a whole batch advances it in one fused pass.
+//! Batched, staged and scalar paths produce identical numbers —
 //! placement is purely a throughput decision. `stats` reports per-kind
-//! session counts so mixed-kind deployments can see what they host.
+//! session counts plus per-cohort counts (`"cohorts":
+//! {"stage1:d4":128, "frozen:d8":16, ...}`) so mixed deployments can
+//! watch their populations migrate toward the frozen cohort.
 //!
 //! # The durable session tier
 //!
@@ -238,7 +248,10 @@ pub mod session;
 pub mod shard;
 pub mod transport;
 
-pub use batch::{BatchedColumnStepper, ColumnarBatchSpec, ColumnarLane, ColumnarSessionBatch};
+pub use batch::{
+    BatchedColumnStepper, ColumnarBatchSpec, ColumnarLane, ColumnarSessionBatch,
+    StagedBatchSpec, StagedLane, StagedLaneStage, StagedSessionBatch,
+};
 pub use session::{Session, SessionSpec};
 pub use shard::{ShardPool, ShardState};
 pub use transport::{ListenAddr, Server};
@@ -473,6 +486,11 @@ impl Service {
                 .into_iter()
                 .map(|(k, n)| (k, Json::Num(n as f64)))
                 .collect();
+        let cohorts: std::collections::BTreeMap<String, Json> =
+            protocol::ShardStats::merge_cohorts(&per_shard)
+                .into_iter()
+                .map(|(k, n)| (k, Json::Num(n as f64)))
+                .collect();
         let shards: Vec<Json> = per_shard
             .iter()
             .map(|st| {
@@ -504,6 +522,7 @@ impl Service {
             ("evictions", Json::Num(evictions as f64)),
             ("rehydrations", Json::Num(rehydrations as f64)),
             ("kinds", Json::Obj(kinds)),
+            ("cohorts", Json::Obj(cohorts)),
             ("shards", Json::Arr(shards)),
             ("latency", latency),
             ("windows", Json::Obj(windows)),

@@ -26,6 +26,10 @@ pub struct ShardStats {
     pub sessions: usize,
     pub steps: u64,
     pub kinds: Vec<(String, usize)>,
+    /// session counts per staged cohort, labeled
+    /// `stage<k>:d<width>` / `frozen:d<width>` (sorted by label; empty
+    /// when no ccn/constructive sessions are resident)
+    pub cohorts: Vec<(String, usize)>,
     /// sessions live in shard memory
     pub resident: usize,
     /// sessions parked on disk only
@@ -47,6 +51,20 @@ impl ShardStats {
         for st in stats {
             for (kind, n) in &st.kinds {
                 *totals.entry(kind.clone()).or_insert(0) += n;
+            }
+        }
+        totals
+    }
+
+    /// Merge the per-cohort session counts of many shards into one
+    /// total, keyed and sorted by cohort label.
+    pub fn merge_cohorts(
+        stats: &[ShardStats],
+    ) -> std::collections::BTreeMap<String, usize> {
+        let mut totals = std::collections::BTreeMap::new();
+        for st in stats {
+            for (label, n) in &st.cohorts {
+                *totals.entry(label.clone()).or_insert(0) += n;
             }
         }
         totals
@@ -178,6 +196,11 @@ impl Response {
                     .iter()
                     .map(|(k, n)| (k.clone(), Json::Num(*n as f64)))
                     .collect();
+                let cohorts: std::collections::BTreeMap<String, Json> = st
+                    .cohorts
+                    .iter()
+                    .map(|(k, n)| (k.clone(), Json::Num(*n as f64)))
+                    .collect();
                 ok(vec![
                     ("sessions", Json::Num(st.sessions as f64)),
                     ("resident", Json::Num(st.resident as f64)),
@@ -187,6 +210,7 @@ impl Response {
                     ("evictions", Json::Num(st.evictions as f64)),
                     ("rehydrations", Json::Num(st.rehydrations as f64)),
                     ("kinds", Json::Obj(kinds)),
+                    ("cohorts", Json::Obj(cohorts)),
                 ])
             }
             Response::Drained { flushed, errors } => {
@@ -552,6 +576,7 @@ mod tests {
             store_bytes: 640,
             evictions: 5,
             rehydrations: 4,
+            cohorts: vec![("stage1:d4".to_string(), 2)],
             ..ShardStats::default()
         })
         .to_json();
@@ -560,6 +585,8 @@ mod tests {
         assert_eq!(st.get("store_bytes"), Some(&Json::Num(640.0)));
         assert_eq!(st.get("evictions"), Some(&Json::Num(5.0)));
         assert_eq!(st.get("rehydrations"), Some(&Json::Num(4.0)));
+        let cohorts = st.get("cohorts").and_then(|c| c.get("stage1:d4"));
+        assert_eq!(cohorts, Some(&Json::Num(2.0)));
     }
 
     #[test]

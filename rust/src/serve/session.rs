@@ -19,20 +19,29 @@
 //! live inside a [`super::batch::ColumnarSessionBatch`];
 //! [`Session::to_lane`] / [`Session::from_lane`] convert between the two
 //! representations without loss (both paths step with identical
-//! arithmetic). The capability is *discovered from the net*, never
-//! pattern-matched from a learner kind, so future batchable families
-//! only need to report their shape.
+//! arithmetic). Nets reporting [`BatchCapability::Staged`] (ccn and
+//! constructive mid-growth) instead convert through
+//! [`Session::to_staged_lane`] / [`Session::from_staged_lane`] into
+//! stage-keyed [`super::batch::StagedSessionBatch`] cohorts; the
+//! `from_staged_lane` path also settles a pending stage boundary —
+//! the scalar half of a cohort hop. The capability is *discovered from
+//! the net*, never pattern-matched from a learner kind, so future
+//! batchable families only need to report their shape.
 
 use crate::config::{build_servable, LearnerKind};
 use crate::learn::{TdConfig, TdLambdaAgent, TdState};
 use crate::nets::ccn::CcnNet;
 use crate::nets::lstm_column::LstmColumn;
 use crate::nets::normalizer::OnlineNormalizer;
-use crate::nets::{BatchCapability, NetRegistry, PersistableNet, ServableNet};
+use crate::nets::{
+    BatchCapability, NetRegistry, PersistableNet, PredictionNet, ServableNet,
+};
 use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 
-use super::batch::{ColumnarBatchSpec, ColumnarLane};
+use super::batch::{
+    ColumnarBatchSpec, ColumnarLane, StagedBatchSpec, StagedLane, StagedLaneStage,
+};
 
 /// Everything needed to open (or re-open) a session.
 #[derive(Clone, Debug)]
@@ -126,7 +135,39 @@ impl Session {
                 eps,
                 beta,
             }),
-            BatchCapability::None => None,
+            BatchCapability::None | BatchCapability::Staged { .. } => None,
+        }
+    }
+
+    /// The stage-keyed cohort shape this session can live in, discovered
+    /// from the net's [`BatchCapability::Staged`]; `None` for nets that
+    /// are scalar-only or on the columnar fast path.
+    pub fn staged_batch_spec(&self) -> Option<StagedBatchSpec> {
+        match self.agent.net.batch_capability() {
+            BatchCapability::Staged {
+                n_inputs,
+                stage,
+                features_per_stage,
+                total_features,
+                steps_per_stage,
+                init_scale,
+                frozen_forever,
+                eps,
+                beta,
+                ..
+            } => Some(StagedBatchSpec {
+                n_inputs,
+                features_per_stage,
+                total_features,
+                steps_per_stage,
+                stage,
+                frozen_forever,
+                init_scale,
+                td: self.spec.td,
+                eps,
+                beta,
+            }),
+            BatchCapability::None | BatchCapability::Columnar { .. } => None,
         }
     }
 
@@ -232,8 +273,8 @@ impl Session {
     pub fn to_lane(&self) -> Result<ColumnarLane, String> {
         let d = match self.agent.net.batch_capability() {
             BatchCapability::Columnar { d, .. } => d,
-            BatchCapability::None => {
-                return Err("session's net reports no batch capability".into())
+            BatchCapability::None | BatchCapability::Staged { .. } => {
+                return Err("session's net reports no columnar batch capability".into())
             }
         };
         let net = self
@@ -299,6 +340,105 @@ impl Session {
         let mut agent =
             TdLambdaAgent::new(Box::new(net) as Box<dyn ServableNet>, spec.td);
         agent.set_td_state(lane.td.clone())?;
+        Ok(Session { spec, agent })
+    }
+
+    /// Extract this session's state as a staged-cohort lane. Errors for
+    /// sessions without [`BatchCapability::Staged`]. Unlike the columnar
+    /// lane, a staged lane carries every materialized stage, the stage
+    /// clock and the live rng state (the next cohort hop consumes it to
+    /// mint the new stage's columns exactly as the scalar net would).
+    pub fn to_staged_lane(&self) -> Result<StagedLane, String> {
+        match self.agent.net.batch_capability() {
+            BatchCapability::Staged { .. } => {}
+            BatchCapability::None | BatchCapability::Columnar { .. } => {
+                return Err("session's net reports no staged batch capability".into())
+            }
+        }
+        let net = self
+            .agent
+            .net
+            .as_any()
+            .downcast_ref::<CcnNet>()
+            .ok_or("staged batch capability implies a CCN-family net")?;
+        let stages = (0..net.n_stages())
+            .map(|s| {
+                let (mu, var, denom) = net.stage_norm(s).state();
+                StagedLaneStage {
+                    columns: (0..mu.len()).map(|k| net.column(s, k).clone()).collect(),
+                    norm_mu: mu.to_vec(),
+                    norm_var: var.to_vec(),
+                    norm_denom: denom.to_vec(),
+                }
+            })
+            .collect();
+        Ok(StagedLane {
+            stages,
+            steps_in_stage: net.steps_in_stage(),
+            rng: net.rng_state(),
+            td: self.agent.td_state(),
+        })
+    }
+
+    /// Rebuild a scalar session from a staged-cohort lane (inverse of
+    /// [`Self::to_staged_lane`]). If the lane's stage clock crossed the
+    /// boundary (the cohort reported it *pending*), this settles the
+    /// transition exactly as the scalar net would have inside its
+    /// crossing step: the rng carried in the lane mints the next stage's
+    /// columns, and the TD state is zero-extended the way the agent's
+    /// growth sync does — so hop-then-continue is bit-identical to a
+    /// never-batched session.
+    pub fn from_staged_lane(
+        spec: SessionSpec,
+        batch_spec: &StagedBatchSpec,
+        lane: &StagedLane,
+    ) -> Result<Session, String> {
+        let cfg = crate::nets::ccn::CcnConfig {
+            n_inputs: batch_spec.n_inputs,
+            total_features: batch_spec.total_features,
+            features_per_stage: batch_spec.features_per_stage,
+            steps_per_stage: batch_spec.steps_per_stage,
+            init_scale: batch_spec.init_scale,
+            norm_eps: batch_spec.eps,
+            norm_beta: batch_spec.beta,
+        };
+        let parts = lane
+            .stages
+            .iter()
+            .map(|st| {
+                let norm = OnlineNormalizer::from_state(
+                    batch_spec.beta,
+                    batch_spec.eps,
+                    st.norm_mu.clone(),
+                    st.norm_var.clone(),
+                    st.norm_denom.clone(),
+                )
+                .ok_or("staged lane normalizer state inconsistent")?;
+                Ok((st.columns.clone(), norm))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let mut net = CcnNet::from_parts(
+            cfg,
+            parts,
+            lane.steps_in_stage,
+            lane.td.epoch_seen,
+            batch_spec.frozen_forever,
+            Xoshiro256::from_state(lane.rng),
+        )?;
+        let mut td = lane.td.clone();
+        if !batch_spec.frozen_forever
+            && lane.steps_in_stage >= batch_spec.steps_per_stage
+        {
+            net.settle_stage_boundary();
+            let d = net.n_features();
+            td.w.resize(d, 0.0);
+            td.e_w.resize(d, 0.0);
+            td.e_theta = vec![0.0; net.n_learnable_params()];
+            td.epoch_seen = net.param_epoch();
+        }
+        let mut agent =
+            TdLambdaAgent::new(Box::new(net) as Box<dyn ServableNet>, spec.td);
+        agent.set_td_state(td)?;
         Ok(Session { spec, agent })
     }
 }
@@ -379,21 +519,41 @@ mod tests {
     }
 
     #[test]
-    fn batch_capability_is_columnar_only() {
+    fn batch_capability_routes_each_family() {
+        // the columnar corner batches columnar, never staged
         let s = Session::open(columnar_spec()).unwrap();
         assert!(s.columnar_batch_spec().is_some());
+        assert!(s.staged_batch_spec().is_none());
+        assert!(s.to_staged_lane().is_err());
+        // growing ccn/constructive batch as stage-keyed cohorts
         for learner in [
             LearnerKind::Ccn {
                 total: 4,
                 per_stage: 2,
                 steps_per_stage: 50,
             },
-            LearnerKind::Tbptt { d: 2, k: 4 },
-            LearnerKind::Snap1 { d: 2 },
+            LearnerKind::Constructive {
+                total: 3,
+                steps_per_stage: 50,
+            },
         ] {
             let s = Session::open(spec_for(learner)).unwrap();
             assert!(s.columnar_batch_spec().is_none(), "{}", s.kind());
             assert!(s.to_lane().is_err());
+            let bs = s.staged_batch_spec().unwrap_or_else(|| {
+                panic!("{} must report a staged cohort shape", s.kind())
+            });
+            assert_eq!(bs.stage, 0);
+            assert!(!bs.frozen_forever);
+            assert!(s.to_staged_lane().is_ok());
+        }
+        // dense baselines stay scalar on every path
+        for learner in [LearnerKind::Tbptt { d: 2, k: 4 }, LearnerKind::Snap1 { d: 2 }] {
+            let s = Session::open(spec_for(learner)).unwrap();
+            assert!(s.columnar_batch_spec().is_none(), "{}", s.kind());
+            assert!(s.staged_batch_spec().is_none(), "{}", s.kind());
+            assert!(s.to_lane().is_err());
+            assert!(s.to_staged_lane().is_err());
         }
     }
 
@@ -496,6 +656,71 @@ mod tests {
         let a = drive(&mut s, 150, 10);
         let b = drive(&mut back, 150, 10);
         assert_eq!(a, b, "lane extraction must be lossless");
+    }
+
+    #[test]
+    fn staged_lane_roundtrip_continues_identically() {
+        let spec = SessionSpec {
+            learner: LearnerKind::Ccn {
+                total: 6,
+                per_stage: 2,
+                steps_per_stage: 120,
+            },
+            ..columnar_spec()
+        };
+        let mut s = Session::open(spec).unwrap();
+        drive(&mut s, 150, 9); // past one boundary: stage 1 learning
+        let batch_spec = s.staged_batch_spec().unwrap();
+        assert_eq!(batch_spec.stage, 1);
+        let lane = s.to_staged_lane().unwrap();
+        let mut back =
+            Session::from_staged_lane(s.spec().clone(), &batch_spec, &lane).unwrap();
+        // continue across the *next* boundary too: the rng state carried
+        // in the lane must mint identical stage-2 columns
+        let a = drive(&mut s, 200, 10);
+        let b = drive(&mut back, 200, 10);
+        assert_eq!(a, b, "staged lane extraction must be lossless");
+    }
+
+    #[test]
+    fn staged_lane_pending_hop_matches_scalar_crossing() {
+        use crate::serve::batch::StagedSessionBatch;
+
+        let spec = SessionSpec {
+            learner: LearnerKind::Ccn {
+                total: 4,
+                per_stage: 2,
+                steps_per_stage: 30,
+            },
+            ..columnar_spec()
+        };
+        let mut twin = Session::open(spec.clone()).unwrap();
+        let mut src = Session::open(spec.clone()).unwrap();
+        drive(&mut twin, 29, 12);
+        drive(&mut src, 29, 12);
+        let batch_spec = src.staged_batch_spec().unwrap();
+        let mut batch = StagedSessionBatch::from_lanes(
+            batch_spec.clone(),
+            &[src.to_staged_lane().unwrap()],
+        )
+        .unwrap();
+        // the crossing step: the scalar net settles the boundary in-net
+        // (after its TD update), the cohort reports the lane pending —
+        // the step's predictions still agree
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c = rng.uniform(-0.5, 0.5);
+        let y_batch = batch.step_one(0, &x, c);
+        assert_eq!(y_batch, twin.step(&x, c).unwrap());
+        assert!(batch.lane_pending(0));
+        // hop: extract, settle, continue — bit-identical to the twin
+        let lane = batch.swap_remove_lane(0).unwrap();
+        let mut hopped =
+            Session::from_staged_lane(spec.clone(), &batch_spec, &lane).unwrap();
+        assert_eq!(hopped.staged_batch_spec().unwrap().stage, 1);
+        let a = drive(&mut hopped, 100, 14);
+        let b = drive(&mut twin, 100, 14);
+        assert_eq!(a, b, "cohort hop must match the scalar stage transition");
     }
 
     #[test]

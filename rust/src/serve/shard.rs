@@ -5,11 +5,19 @@
 //! ever touched by its owning shard — the hot path takes no locks.
 //! Within a shard, sessions whose net reports
 //! [`crate::nets::BatchCapability::Columnar`] live in SoA
-//! [`ColumnarSessionBatch`]es keyed by their shape; a `StepMany` request
-//! that covers a whole batch advances it in one fused pass. Everything
-//! else (growing CCN/constructive sessions, dense baselines, partial
-//! batches) takes the scalar path. Both paths produce identical numbers —
-//! membership is a performance decision, never a semantic one.
+//! [`ColumnarSessionBatch`]es keyed by their shape, and sessions
+//! reporting [`crate::nets::BatchCapability::Staged`] (growing
+//! ccn/constructive nets) live in stage-keyed [`StagedSessionBatch`]
+//! cohorts — the batch key is (spec shape, learning-stage index), so
+//! every member is structurally identical. A `StepMany` request that
+//! covers a whole batch advances it in one fused pass. When a staged
+//! session's stage clock crosses `steps_per_stage` it *hops* cohorts:
+//! the lane is swap-removed, the boundary settles (freeze the learning
+//! stage, spawn the next from the lane rng), and placement re-discovers
+//! capability, landing it in the next stage's cohort. Everything else
+//! (dense baselines, partial batches) takes the scalar path. All paths
+//! produce identical numbers — membership is a performance decision,
+//! never a semantic one.
 //!
 //! # The durable tier
 //!
@@ -50,7 +58,9 @@ use crate::obs::{Histogram, Registry, StageCell};
 use crate::store::{IdWatermark, SessionStore, StoreConfig};
 use crate::util::json::Json;
 
-use super::batch::{ColumnarBatchSpec, ColumnarSessionBatch};
+use super::batch::{
+    ColumnarBatchSpec, ColumnarSessionBatch, StagedBatchSpec, StagedSessionBatch,
+};
 use super::protocol::{Request, Response, ShardStats, StepItem};
 use super::session::{Session, SessionSpec};
 
@@ -73,11 +83,42 @@ fn batch_key(spec: &ColumnarBatchSpec) -> BatchKey {
     )
 }
 
+/// Hashable cohort key for "sessions at this shape *and this learning
+/// stage* can share a [`StagedSessionBatch`]": every shape-defining
+/// field of [`StagedBatchSpec`] appears, floats by bit pattern. Two
+/// sessions with equal keys have byte-compatible frozen prefixes and
+/// identical learning-stage geometry — `prefix_sig` alone would be a
+/// hash that *could* collide, so the full shape is spelled out instead.
+type StagedKey = (usize, usize, usize, u64, usize, bool, [u32; 6]);
+
+fn staged_key(spec: &StagedBatchSpec) -> StagedKey {
+    (
+        spec.n_inputs,
+        spec.features_per_stage,
+        spec.total_features,
+        spec.steps_per_stage,
+        spec.stage,
+        spec.frozen_forever,
+        [
+            spec.init_scale.to_bits(),
+            spec.eps.to_bits(),
+            spec.beta.to_bits(),
+            spec.td.alpha.to_bits(),
+            spec.td.gamma.to_bits(),
+            spec.td.lambda.to_bits(),
+        ],
+    )
+}
+
 /// Where a session's state lives inside a shard.
 enum Slot {
     Scalar(Box<Session>),
     /// `(batch key, lane index)` — the spec is kept for snapshots.
     Batched(BatchKey, usize, SessionSpec),
+    /// `(cohort key, lane index)` in a stage-keyed cohort — a growing
+    /// ccn/constructive session batched with cohort-mates at the same
+    /// learning stage; the spec is kept for snapshots.
+    Staged(StagedKey, usize, SessionSpec),
 }
 
 /// Pre-resolved telemetry handles for one shard's hot-path stages.
@@ -134,6 +175,12 @@ pub struct ShardState {
     /// lane index -> session id, per batch (to re-key on swap-remove and
     /// to detect full-batch coverage)
     lane_ids: HashMap<BatchKey, Vec<u64>>,
+    /// stage-keyed cohorts: ccn/constructive sessions at the same spec
+    /// *and the same learning stage* share one SoA batch, and hop to
+    /// the next cohort when their stage clock crosses `steps_per_stage`
+    staged_batches: HashMap<StagedKey, StagedSessionBatch>,
+    /// lane index -> session id, per staged cohort
+    staged_lane_ids: HashMap<StagedKey, Vec<u64>>,
     steps_served: u64,
     /// durable tier (None = everything stays resident forever)
     store: Option<SessionStore>,
@@ -238,10 +285,7 @@ impl ShardState {
                 Ok(state) => Response::Snapshotted { state },
                 Err(e) => Response::error(e),
             },
-            Request::Restore { id, state } => match Session::from_snapshot(&state) {
-                Ok(session) => self.insert(id, session),
-                Err(e) => Response::error(e),
-            },
+            Request::Restore { id, state } => self.restore_session(id, &state),
             Request::Park { id } => self.park(id),
             Request::Warm { id } => match self.ensure_resident(id) {
                 Ok(rehydrated) => Response::Warmed { id, rehydrated },
@@ -264,12 +308,44 @@ impl ShardState {
             sessions: self.slots.len() + parked,
             steps: self.steps_served,
             kinds: self.kind_counts(),
+            cohorts: self.cohort_counts(),
             resident: self.slots.len(),
             parked,
             store_bytes: self.store.as_ref().map_or(0, |s| s.bytes()),
             evictions: self.evictions,
             rehydrations: self.rehydrations,
         }
+    }
+
+    /// `restore` admits a wire snapshot at `id`. When a session with
+    /// that id already exists — resident or parked — the snapshot
+    /// *replaces* it, and because placement re-discovers
+    /// [`crate::nets::BatchCapability`] from the restored net, a restore
+    /// that flips the capability corner (a columnar envelope landing on
+    /// an id that held a dense tbptt session, a ccn envelope replacing a
+    /// columnar one, or vice versa) migrates the session between scalar
+    /// and batched residency instead of stranding a stale lane around a
+    /// net it no longer matches.
+    fn restore_session(&mut self, id: u64, state: &Json) -> Response {
+        // decode before destroying anything: a malformed envelope must
+        // leave the existing session untouched
+        let session = match Session::from_snapshot(state) {
+            Ok(s) => s,
+            Err(e) => return Response::error(e),
+        };
+        if self.slots.contains_key(&id) {
+            if let Err(e) = self.drop_slot(id) {
+                return Response::error(e);
+            }
+        }
+        if let Some(store) = self.store.as_mut() {
+            if store.contains(id) {
+                if let Err(e) = store.delete(id) {
+                    return Response::error(e);
+                }
+            }
+        }
+        self.insert(id, session)
     }
 
     /// Make `id` resident: a no-op touch when it already is, a store
@@ -414,6 +490,20 @@ impl ShardState {
                 let session = Session::from_lane(spec, &batch_spec, &extracted)?;
                 Ok(Box::new(session))
             }
+            Slot::Staged(key, lane, spec) => {
+                let batch = self
+                    .staged_batches
+                    .get_mut(&key)
+                    .expect("cohort exists for staged slot");
+                let extracted = batch.swap_remove_lane(lane)?;
+                let batch_spec = batch.spec().clone();
+                // same ordering invariant as the columnar arm: re-key
+                // the moved lane before the fallible construction
+                self.finish_staged_removal(key, lane, id);
+                let session =
+                    Session::from_staged_lane(spec, &batch_spec, &extracted)?;
+                Ok(Box::new(session))
+            }
         }
     }
 
@@ -440,6 +530,15 @@ impl ShardState {
                     .discard_lane(lane)
                     .expect("tracked lane index in range");
                 self.finish_batched_removal(key, lane, id);
+                Ok(())
+            }
+            Slot::Staged(key, lane, _) => {
+                self.staged_batches
+                    .get_mut(&key)
+                    .expect("cohort exists for staged slot")
+                    .discard_lane(lane)
+                    .expect("tracked lane index in range");
+                self.finish_staged_removal(key, lane, id);
                 Ok(())
             }
         }
@@ -474,6 +573,88 @@ impl ShardState {
         }
     }
 
+    /// Post-removal bookkeeping for staged cohorts, mirroring
+    /// [`Self::finish_batched_removal`]. The ordering matters doubly
+    /// here: a stage-transition hop swap-removes a lane and then
+    /// re-places the session, so the moved lane's re-key must land
+    /// *before* the <= 1/4-occupancy compaction below runs — compacting
+    /// first would shrink the padded arrays around a lane the id->lane
+    /// map still points at, corrupting whichever cohort-mate the hop
+    /// happened to swap into the hole.
+    fn finish_staged_removal(&mut self, key: StagedKey, lane: usize, id: u64) {
+        let ids = self.staged_lane_ids.get_mut(&key).expect("lane ids exist");
+        let moved = ids.pop().expect("non-empty lane list");
+        let emptied = ids.is_empty();
+        if moved != id {
+            ids[lane] = moved;
+            if let Some(Slot::Staged(_, l, _)) = self.slots.get_mut(&moved) {
+                *l = lane;
+            }
+        }
+        if emptied {
+            self.staged_batches.remove(&key);
+            self.staged_lane_ids.remove(&key);
+        } else {
+            let batch = self
+                .staged_batches
+                .get_mut(&key)
+                .expect("cohort still exists");
+            if batch.capacity() >= 8 && batch.len() * 4 <= batch.capacity() {
+                batch.compact();
+            }
+        }
+    }
+
+    /// Stage-transition hop: a staged lane whose clock crossed
+    /// `steps_per_stage` leaves its cohort, settles the boundary (the
+    /// learning stage freezes, the next one spawns from the lane rng —
+    /// [`Session::from_staged_lane`] performs the settle), and is
+    /// re-placed. Placement re-discovers capability, so the session
+    /// lands in the next stage's cohort, or in the frozen-forever one
+    /// once every feature is materialized. The swap-remove/re-key runs
+    /// before compaction and before the fallible session rebuild, so an
+    /// interleaved eviction or a sparse cohort can never leave the
+    /// id->lane map pointing at a dead lane mid-hop. LRU/dirty
+    /// bookkeeping survives untouched — the session never leaves
+    /// residency, only its slot representation changes.
+    fn hop_staged_lane(&mut self, id: u64) -> Result<(), String> {
+        let (key, lane, spec) = match self.slots.remove(&id) {
+            Some(Slot::Staged(key, lane, spec)) => (key, lane, spec),
+            Some(other) => {
+                self.slots.insert(id, other);
+                return Err(format!("session {id} is not in a staged cohort"));
+            }
+            None => return Err(format!("no session {id}")),
+        };
+        let batch = self
+            .staged_batches
+            .get_mut(&key)
+            .expect("cohort exists for staged slot");
+        let extracted = batch.swap_remove_lane(lane)?;
+        let batch_spec = batch.spec().clone();
+        self.finish_staged_removal(key, lane, id);
+        let session = Session::from_staged_lane(spec, &batch_spec, &extracted)?;
+        self.place(id, session)
+    }
+
+    /// Session counts per staged cohort, labeled by learning-stage index
+    /// and readout width (`frozen:` once every feature is materialized).
+    /// The `stats` reply surfaces these so an operator can watch a
+    /// population migrate stage by stage toward the frozen cohort.
+    fn cohort_counts(&self) -> Vec<(String, usize)> {
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        for batch in self.staged_batches.values() {
+            let spec = batch.spec();
+            let label = if spec.frozen_forever {
+                format!("frozen:d{}", spec.d())
+            } else {
+                format!("stage{}:d{}", spec.stage, spec.d())
+            };
+            *counts.entry(label).or_insert(0) += batch.len();
+        }
+        counts.into_iter().collect()
+    }
+
     /// Session counts per learner kind. Resident sessions count under
     /// the spec tag they were opened with (batched slots are always
     /// `columnar`-shaped but report their opening kind); parked sessions
@@ -484,7 +665,9 @@ impl ShardState {
         for slot in self.slots.values() {
             let kind = match slot {
                 Slot::Scalar(session) => session.spec().learner.kind(),
-                Slot::Batched(_, _, spec) => spec.learner.kind(),
+                Slot::Batched(_, _, spec) | Slot::Staged(_, _, spec) => {
+                    spec.learner.kind()
+                }
             };
             *counts.entry(kind.to_string()).or_insert(0) += 1;
         }
@@ -551,6 +734,19 @@ impl ShardState {
             self.lane_ids.entry(key).or_default().push(id);
             debug_assert_eq!(self.lane_ids[&key].len(), idx + 1);
             self.slots.insert(id, Slot::Batched(key, idx, spec));
+        } else if let Some(batch_spec) = session.staged_batch_spec() {
+            let key = staged_key(&batch_spec);
+            let lane = session.to_staged_lane()?;
+            let batch = match self.staged_batches.entry(key) {
+                std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(StagedSessionBatch::from_lanes(batch_spec, &[])?)
+                }
+            };
+            let idx = batch.push_lane(lane)?;
+            self.staged_lane_ids.entry(key).or_default().push(id);
+            debug_assert_eq!(self.staged_lane_ids[&key].len(), idx + 1);
+            self.slots.insert(id, Slot::Staged(key, idx, spec));
         } else {
             self.slots.insert(id, Slot::Scalar(Box::new(session)));
         }
@@ -561,6 +757,7 @@ impl ShardState {
         self.ensure_resident(id)?;
         // clock the kernel only: residency (store I/O) is its own stage
         let t = Instant::now();
+        let mut staged_hop = false;
         let (y, kind, batched) = match self
             .slots
             .get_mut(&id)
@@ -584,6 +781,22 @@ impl ShardState {
                     .step_one(*lane, x, c);
                 (y, spec.learner.kind(), true)
             }
+            Slot::Staged(key, lane, spec) => {
+                if x.len() != spec.n_inputs {
+                    return Err(format!(
+                        "session expects {} inputs, got {}",
+                        spec.n_inputs,
+                        x.len()
+                    ));
+                }
+                let batch = self
+                    .staged_batches
+                    .get_mut(key)
+                    .expect("cohort exists for staged slot");
+                let y = batch.step_one(*lane, x, c);
+                staged_hop = batch.lane_pending(*lane);
+                (y, spec.learner.kind(), true)
+            }
         };
         let dt = t.elapsed();
         if batched {
@@ -595,6 +808,13 @@ impl ShardState {
         self.bump_kind_steps(kind, 1);
         self.steps_served += 1;
         self.dirty.insert(id);
+        if staged_hop {
+            // the crossing step's prediction is already computed (the
+            // scalar twin settles its boundary after the TD update of
+            // the same step), so hopping now — before any further op
+            // can observe the lane — keeps the trajectory bit-identical
+            self.hop_staged_lane(id)?;
+        }
         Ok(y)
     }
 
@@ -620,6 +840,22 @@ impl ShardState {
                     .batches
                     .get_mut(key)
                     .expect("batch exists for batched slot")
+                    .predict_one(*lane, x))
+            }
+            Slot::Staged(key, lane, spec) => {
+                if x.len() != spec.n_inputs {
+                    return Err(format!(
+                        "session expects {} inputs, got {}",
+                        spec.n_inputs,
+                        x.len()
+                    ));
+                }
+                // predict advances recurrent state but never the stage
+                // clock (no TD update, no end_step), so no hop check
+                Ok(self
+                    .staged_batches
+                    .get_mut(key)
+                    .expect("cohort exists for staged slot")
                     .predict_one(*lane, x))
             }
         }
@@ -687,6 +923,72 @@ impl ShardState {
             }
             self.steps_served += bsz as u64;
         }
+        // staged cohorts: same fused-coverage discipline, plus the
+        // stage-transition hop for every lane whose clock crossed
+        // `steps_per_stage` during the pass
+        let mut per_staged: HashMap<StagedKey, Vec<(usize, usize)>> =
+            HashMap::new();
+        for (pos, item) in items.iter().enumerate() {
+            if let Some(Slot::Staged(key, lane, _)) = self.slots.get(&item.id) {
+                per_staged.entry(*key).or_default().push((pos, *lane));
+            }
+        }
+        let mut hops: Vec<(usize, u64)> = Vec::new();
+        for (key, members) in per_staged {
+            let batch = self.staged_batches.get_mut(&key).expect("cohort exists");
+            let bsz = batch.len();
+            let n = batch.spec().n_inputs;
+            let full = members.len() == bsz && {
+                let mut seen = vec![false; bsz];
+                members.iter().all(|&(pos, lane)| {
+                    let fresh = !seen[lane];
+                    seen[lane] = true;
+                    fresh && items[pos].x.len() == n
+                })
+            };
+            if !full {
+                continue; // handled by the scalar fallback below
+            }
+            let mut obs = vec![0.0f32; bsz * n];
+            let mut cs = vec![0.0f32; bsz];
+            for &(pos, lane) in &members {
+                obs[lane * n..(lane + 1) * n].copy_from_slice(&items[pos].x);
+                cs[lane] = items[pos].c;
+            }
+            let t = Instant::now();
+            let ys = batch.step_all(&obs, &cs).to_vec();
+            let dt = t.elapsed();
+            // resolve pending lanes to ids *before* any hop runs: the
+            // swap-removes below renumber every recorded lane index
+            let pending = batch.pending_lanes().to_vec();
+            self.obs.step_batched.record_duration(dt);
+            self.scratch_kernel_ns += dt.as_nanos() as u64;
+            for &(pos, lane) in &members {
+                out[pos] = Some(Ok(ys[lane]));
+                let id = items[pos].id;
+                self.dirty.insert(id);
+                let kind = match self.slots.get(&id) {
+                    Some(Slot::Staged(_, _, spec)) => spec.learner.kind(),
+                    _ => continue,
+                };
+                self.bump_kind_steps(kind, 1);
+            }
+            self.steps_served += bsz as u64;
+            let lane_pos: HashMap<usize, usize> =
+                members.iter().map(|&(pos, lane)| (lane, pos)).collect();
+            for lane in pending {
+                let pos = lane_pos[&lane];
+                hops.push((pos, items[pos].id));
+            }
+        }
+        // hops run before the scalar fallback: a duplicate item for a
+        // hopped id must step the settled next-stage session, exactly
+        // as a scalar twin would after its in-step boundary settle
+        for (pos, id) in hops {
+            if let Err(e) = self.hop_staged_lane(id) {
+                out[pos] = Some(Err(e));
+            }
+        }
         // scalar fallback for everything not answered by a fused pass
         for (pos, item) in items.into_iter().enumerate() {
             if out[pos].is_none() {
@@ -722,6 +1024,16 @@ impl ShardState {
                 let extracted = batch.extract_lane(*lane);
                 let session =
                     Session::from_lane(spec.clone(), batch.spec(), &extracted)?;
+                Ok(session.snapshot())
+            }
+            Slot::Staged(key, lane, spec) => {
+                let batch = self.staged_batches.get(key).expect("cohort exists");
+                let extracted = batch.extract_lane(*lane);
+                let session = Session::from_staged_lane(
+                    spec.clone(),
+                    batch.spec(),
+                    &extracted,
+                )?;
                 Ok(session.snapshot())
             }
         }
@@ -1390,6 +1702,10 @@ mod tests {
             ),
         );
         assert_eq!(st.n_sessions(), 2);
+        // the growing ccn session lives in a stage-keyed cohort, not on
+        // the scalar path
+        assert!(matches!(st.slots.get(&2), Some(Slot::Staged(..))));
+        assert_eq!(st.staged_batches.len(), 1);
         let y = st.step_session(1, &[0.1, 0.2, 0.3], 0.5).unwrap();
         assert!(y.is_finite());
         assert!(st.step_session(9, &[0.0; 3], 0.0).is_err(), "unknown id");
@@ -1470,6 +1786,7 @@ mod tests {
         open_ok(&mut st, 2, spec(LearnerKind::Snap1 { d: 2 }, 1));
         open_ok(&mut st, 3, spec(LearnerKind::Columnar { d: 2 }, 2));
         assert_eq!(st.batches.len(), 1, "only the columnar session batches");
+        assert!(st.staged_batches.is_empty(), "dense baselines never cohort");
         let mut rng = Xoshiro256::seed_from_u64(3);
         for _ in 0..50 {
             let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
@@ -1864,6 +2181,378 @@ mod tests {
             }
         }
         assert_eq!(ids, vec![1, 5, 9], "offset 1, stride 4 progression");
+    }
+
+    #[test]
+    fn staged_sessions_batch_and_hop_matching_scalar_twins() {
+        // ccn/constructive sessions live in stage-keyed cohorts; driving
+        // them through every stage boundary (two cohort hops for the ccn
+        // spec, three for the constructive one, ending frozen-forever)
+        // must stay bit-identical to never-batched scalar twins
+        let mut st = ShardState::new();
+        let specs = [
+            spec(
+                LearnerKind::Ccn {
+                    total: 4,
+                    per_stage: 2,
+                    steps_per_stage: 25,
+                },
+                1,
+            ),
+            spec(
+                LearnerKind::Ccn {
+                    total: 4,
+                    per_stage: 2,
+                    steps_per_stage: 25,
+                },
+                2,
+            ),
+            spec(
+                LearnerKind::Constructive {
+                    total: 3,
+                    steps_per_stage: 25,
+                },
+                3,
+            ),
+        ];
+        let mut twins = Vec::new();
+        for (i, s) in specs.iter().enumerate() {
+            open_ok(&mut st, i as u64 + 1, s.clone());
+            twins.push(Session::open(s.clone()).unwrap());
+        }
+        // the two same-spec ccn sessions share one cohort; the
+        // constructive session gets its own
+        assert_eq!(st.staged_batches.len(), 2);
+        assert!(st.batches.is_empty(), "staged sessions are not columnar");
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for _ in 0..80 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            for (i, twin) in twins.iter_mut().enumerate() {
+                let y = st.step_session(i as u64 + 1, &x, c).unwrap();
+                assert_eq!(y, twin.step(&x, c).unwrap(), "session {}", i + 1);
+            }
+        }
+        // 80 steps at 25/stage: everyone is frozen-forever now, and the
+        // cohort counts say so
+        let cohorts = st.cohort_counts();
+        assert_eq!(
+            cohorts,
+            vec![("frozen:d3".to_string(), 1), ("frozen:d4".to_string(), 2)],
+            "{cohorts:?}"
+        );
+    }
+
+    #[test]
+    fn staged_fused_step_many_matches_scalar_twins_across_hops() {
+        // a full-coverage StepMany takes the fused StagedSessionBatch
+        // path; the whole cohort crosses its stage boundary inside one
+        // fused pass and every lane hops before the next request
+        let mk = |seed: u64| {
+            spec(
+                LearnerKind::Ccn {
+                    total: 4,
+                    per_stage: 2,
+                    steps_per_stage: 20,
+                },
+                seed,
+            )
+        };
+        let mut st = ShardState::new();
+        let mut twins = Vec::new();
+        for id in 1..=4u64 {
+            open_ok(&mut st, id, mk(id));
+            twins.push(Session::open(mk(id)).unwrap());
+        }
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        for _ in 0..50 {
+            let items: Vec<StepItem> = (1..=4u64)
+                .map(|id| StepItem {
+                    id,
+                    x: (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                    c: rng.uniform(-0.5, 0.5),
+                })
+                .collect();
+            let ys = st.step_many(items.clone());
+            for (i, twin) in twins.iter_mut().enumerate() {
+                assert_eq!(
+                    *ys[i].as_ref().unwrap(),
+                    twin.step(&items[i].x, items[i].c).unwrap(),
+                    "fused staged pass must equal the scalar twin"
+                );
+            }
+        }
+        // boundary crossings at 20 and 40: the whole population moved
+        // through stage 1 into the frozen-forever cohort
+        assert_eq!(
+            st.cohort_counts(),
+            vec![("frozen:d4".to_string(), 4)]
+        );
+    }
+
+    #[test]
+    fn restore_replaces_sessions_and_migrates_capability_residency() {
+        // capability is re-evaluated on every restore: an envelope whose
+        // net reports a different BatchCapability migrates the session
+        // between scalar and batched residency instead of stranding it
+        let mut st = ShardState::new();
+        open_ok(&mut st, 1, spec(LearnerKind::Tbptt { d: 2, k: 4 }, 0));
+        open_ok(&mut st, 2, spec(LearnerKind::Columnar { d: 3 }, 1));
+        for _ in 0..10 {
+            st.step_session(1, &[0.1, 0.2, 0.3], 0.1).unwrap();
+            st.step_session(2, &[0.1, 0.2, 0.3], 0.1).unwrap();
+        }
+        assert!(matches!(st.slots.get(&1), Some(Slot::Scalar(_))));
+        // a columnar envelope restored AT the dense id replaces the
+        // tbptt session and lands on the batched path
+        let columnar_snap = st.snapshot_session(2).unwrap();
+        let mut twin = Session::from_snapshot(&columnar_snap).unwrap();
+        match st.handle(Request::Restore {
+            id: 1,
+            state: columnar_snap,
+        }) {
+            Response::Opened { id } => assert_eq!(id, 1),
+            other => panic!("replace-restore failed: {other:?}"),
+        }
+        assert!(
+            matches!(st.slots.get(&1), Some(Slot::Batched(..))),
+            "restored columnar session must join the batch"
+        );
+        for _ in 0..20 {
+            let y = st.step_session(1, &[0.3, -0.1, 0.2], 0.05).unwrap();
+            assert_eq!(y, twin.step(&[0.3, -0.1, 0.2], 0.05).unwrap());
+        }
+        // the flip reversed: a ccn envelope over the columnar id pulls
+        // it out of the columnar batch and into a staged cohort
+        let mut ccn = Session::open(spec(
+            LearnerKind::Ccn {
+                total: 4,
+                per_stage: 2,
+                steps_per_stage: 50,
+            },
+            9,
+        ))
+        .unwrap();
+        for _ in 0..5 {
+            ccn.step(&[0.1, 0.0, -0.2], 0.1).unwrap();
+        }
+        match st.handle(Request::Restore {
+            id: 2,
+            state: ccn.snapshot(),
+        }) {
+            Response::Opened { id } => assert_eq!(id, 2),
+            other => panic!("flip-restore failed: {other:?}"),
+        }
+        assert!(matches!(st.slots.get(&2), Some(Slot::Staged(..))));
+        for _ in 0..60 {
+            // crosses the stage boundary at 50: the replaced session
+            // hops cohorts on the restored clock
+            let y = st.step_session(2, &[0.2, 0.1, 0.0], 0.2).unwrap();
+            assert_eq!(y, ccn.step(&[0.2, 0.1, 0.0], 0.2).unwrap());
+        }
+        // a malformed envelope must leave the existing session untouched
+        match st.handle(Request::Restore {
+            id: 2,
+            state: Json::Null,
+        }) {
+            Response::Error { .. } => {}
+            other => panic!("bad envelope accepted: {other:?}"),
+        }
+        assert!(st.step_session(2, &[0.0; 3], 0.0).is_ok());
+    }
+
+    #[test]
+    fn cohort_hop_survives_interleaved_evictions_and_compaction() {
+        // 9 cohort-mates drive the stage-0 batch through capacity
+        // doublings; closing most right before the freeze boundary puts
+        // the batch at the <=1/4-occupancy compaction threshold, so the
+        // survivors' stage-transition hops interleave with compact() —
+        // the hop's id->lane re-keying must come through unscathed, as
+        // must a cohort-mate parked one step before the boundary
+        let (dir, store) = fresh_store("staged-hop");
+        let mut st = ShardState::with_store(Some(store), 0);
+        let sps = 30u64;
+        let mk = |seed: u64| {
+            spec(
+                LearnerKind::Ccn {
+                    total: 4,
+                    per_stage: 2,
+                    steps_per_stage: sps,
+                },
+                seed,
+            )
+        };
+        let mut twins = Vec::new();
+        for id in 1..=9u64 {
+            open_ok(&mut st, id, mk(id));
+            twins.push(Session::open(mk(id)).unwrap());
+        }
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        // every stage clock lands one step before the boundary
+        for _ in 0..(sps - 1) {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            for id in 1..=9u64 {
+                let y = st.step_session(id, &x, c).unwrap();
+                assert_eq!(y, twins[id as usize - 1].step(&x, c).unwrap());
+            }
+        }
+        // close 5 of 9: occupancy 4/16 fires the compaction
+        for id in 1..=5u64 {
+            match st.handle(Request::Close { id }) {
+                Response::Closed { .. } => {}
+                other => panic!("close failed: {other:?}"),
+            }
+        }
+        // evict a cohort-mate one step before its freeze boundary
+        match st.handle(Request::Park { id: 6 }) {
+            Response::Parked { .. } => {}
+            other => panic!("park failed: {other:?}"),
+        }
+        // the resident lanes cross the boundary and hop out of the
+        // just-compacted cohort one by one (the first hop's removal
+        // lands exactly on the compaction threshold again)
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            for id in 7..=9u64 {
+                let y = st.step_session(id, &x, c).unwrap();
+                assert_eq!(
+                    y,
+                    twins[id as usize - 1].step(&x, c).unwrap(),
+                    "session {id} diverged across hop/compaction"
+                );
+            }
+        }
+        // the parked lane rehydrates into a fresh stage-0 cohort, hops
+        // on its own clock, and stays bit-exact
+        match st.handle(Request::Warm { id: 6 }) {
+            Response::Warmed { rehydrated, .. } => assert!(rehydrated),
+            other => panic!("warm failed: {other:?}"),
+        }
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            let y = st.step_session(6, &x, c).unwrap();
+            assert_eq!(y, twins[5].step(&x, c).unwrap(), "rehydrated mate");
+        }
+        // all four survivors finished their migration to frozen-forever
+        assert_eq!(
+            st.cohort_counts(),
+            vec![("frozen:d4".to_string(), 4)]
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prop_staged_cohorts_are_bit_exact() {
+        use crate::util::check::check;
+        // random step/park/warm/close interleavings over a mixed
+        // ccn+constructive population behind a small LRU cap, with a
+        // forced eviction one step before every freeze boundary: every
+        // prediction must be bit-identical to a never-batched twin
+        check("staged cohorts bit-exact", 10, |g| {
+            let sps = g.usize_in(4, 9) as u64;
+            let (dir, store) = fresh_store("staged-prop");
+            let mut st = ShardState::with_store(Some(store), 3);
+            let specs = [
+                spec(
+                    LearnerKind::Ccn {
+                        total: 4,
+                        per_stage: 2,
+                        steps_per_stage: sps,
+                    },
+                    1,
+                ),
+                spec(
+                    LearnerKind::Ccn {
+                        total: 4,
+                        per_stage: 2,
+                        steps_per_stage: sps,
+                    },
+                    2,
+                ),
+                spec(
+                    LearnerKind::Constructive {
+                        total: 3,
+                        steps_per_stage: sps,
+                    },
+                    3,
+                ),
+                spec(
+                    LearnerKind::Constructive {
+                        total: 3,
+                        steps_per_stage: sps,
+                    },
+                    4,
+                ),
+            ];
+            let mut twins: Vec<Option<Session>> = Vec::new();
+            for (i, s) in specs.iter().enumerate() {
+                open_ok(&mut st, i as u64 + 1, s.clone());
+                twins.push(Some(Session::open(s.clone()).unwrap()));
+            }
+            // cross every boundary, through the final freeze
+            let total = (sps as usize) * 3 + 2;
+            for t in 0..total {
+                // an eviction landing one step before a freeze boundary:
+                // the parked lane must hop correctly after rehydration
+                if t as u64 % sps == sps - 1 {
+                    let id = g.usize_in(1, 4) as u64;
+                    if twins[id as usize - 1].is_some() {
+                        match st.handle(Request::Park { id }) {
+                            Response::Parked { .. } => {}
+                            other => return Err(format!("park {id}: {other:?}")),
+                        }
+                    }
+                }
+                // random park/warm churn on top of the LRU-cap evictions
+                if g.usize_in(0, 5) == 0 {
+                    let id = g.usize_in(1, 4) as u64;
+                    if twins[id as usize - 1].is_some() {
+                        let _ = st.handle(Request::Park { id });
+                        if g.bool() {
+                            let _ = st.handle(Request::Warm { id });
+                        }
+                    }
+                }
+                // close one session mid-run, exactly once
+                if t == total / 2 && twins[3].is_some() {
+                    match st.handle(Request::Close { id: 4 }) {
+                        Response::Closed { .. } => twins[3] = None,
+                        other => return Err(format!("close: {other:?}")),
+                    }
+                }
+                let x = g.f32_vec(3, -1.0, 1.0);
+                let c = g.f32_in(-0.5, 0.5);
+                for id in 1..=4u64 {
+                    let Some(twin) = twins[id as usize - 1].as_mut() else {
+                        continue;
+                    };
+                    let y = st
+                        .step_session(id, &x, c)
+                        .map_err(|e| format!("step {id} at t={t}: {e}"))?;
+                    let want = twin
+                        .step(&x, c)
+                        .map_err(|e| format!("twin {id} at t={t}: {e}"))?;
+                    if y != want {
+                        return Err(format!(
+                            "session {id} diverged at t={t}: {y} vs {want}"
+                        ));
+                    }
+                }
+            }
+            // snapshots round-trip from whatever residency each ended in
+            for id in 1..=3u64 {
+                let snap = st
+                    .snapshot_session(id)
+                    .map_err(|e| format!("snapshot {id}: {e}"))?;
+                Session::from_snapshot(&snap)
+                    .map_err(|e| format!("roundtrip {id}: {e}"))?;
+            }
+            std::fs::remove_dir_all(&dir).ok();
+            Ok(())
+        });
     }
 
     #[test]

@@ -50,6 +50,22 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict u64 decode. `as_f64()? as u64` silently truncates
+    /// fractional values, saturates negatives to 0, and loses precision
+    /// above 2^53 — all of which corrupt step counters like
+    /// `steps_per_stage` on restore. This accepts only finite,
+    /// non-negative, integer-valued numbers up to 2^53 (the largest
+    /// span where every integer has an exact f64 representation) and
+    /// returns `None` for everything else so callers can fail loudly.
+    pub fn as_u64_strict(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        let n = self.as_f64()?;
+        if !n.is_finite() || n < 0.0 || n != n.trunc() || n > MAX_EXACT {
+            return None;
+        }
+        Some(n as u64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -594,6 +610,36 @@ mod tests {
         // realistic depth stays fine
         let ok = "[".repeat(64) + "1" + &"]".repeat(64);
         assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn u64_strict_boundaries() {
+        let ok = |t: &str, want: u64| {
+            assert_eq!(
+                Json::parse(t).unwrap().as_u64_strict(),
+                Some(want),
+                "{t} must decode"
+            );
+        };
+        let bad = |t: &str| {
+            assert_eq!(
+                Json::parse(t).unwrap().as_u64_strict(),
+                None,
+                "{t} must be rejected"
+            );
+        };
+        ok("0", 0);
+        ok("1", 1);
+        ok("100000", 100_000);
+        // 2^53: the last exactly representable integer — accepted
+        ok("9007199254740992", 9_007_199_254_740_992);
+        bad("1.5"); // fractional: was silently truncated to 1
+        bad("-1"); // negative: was saturated to 0
+        bad("-0.5");
+        bad("1e16"); // above 2^53: f64 cannot hold it exactly
+        bad("null");
+        bad("\"7\"");
+        bad("true");
     }
 
     #[test]

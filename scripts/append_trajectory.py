@@ -4,12 +4,14 @@
 Usage: append_trajectory.py FRESH.json TRAJECTORY_DIR [--copy-to DIR]
 
 TRAJECTORY_DIR holds dated, committed `BENCH_*.json` snapshots (schema
-ccn.bench.v1). The latest snapshot — last `BENCH_*.json` in lexicographic
-order, which sorts by date for `BENCH_YYYYMMDD_*` names — is the
-baseline. Every `steps_per_s` leaf shared by the baseline and FRESH is
-compared: the fresh value must be at least HALF the committed one (a
->2x regression fails). Paths present on only one side are reported but
-not gated, so adding or dropping a bench phase is not a CI failure.
+ccn.bench.v1), possibly for several different benches. The baseline is
+the latest snapshot *of the same bench* as FRESH (matching top-level
+`bench` fields; lexicographic order sorts by date for
+`BENCH_YYYYMMDD_*` names). Every `steps_per_s` leaf shared by the
+baseline and FRESH is compared: the fresh value must be at least HALF
+the committed one (a >2x regression fails). Paths present on only one
+side are reported but not gated, so adding or dropping a bench phase is
+not a CI failure.
 
 --copy-to DIR copies FRESH into DIR as `BENCH_<utcdate>_<name>` so the
 CI run's own snapshot can be uploaded as an artifact (and later
@@ -80,8 +82,17 @@ def main(argv):
     )
     if not snapshots:
         fail(f"{traj_dir}: no committed BENCH_*.json snapshots")
-    baseline_path = os.path.join(traj_dir, snapshots[-1])
-    baseline = load(baseline_path)
+    # baseline: the latest committed snapshot of the *same* bench — the
+    # trajectory dir gates several benches side by side
+    baseline_path = baseline = None
+    for name in snapshots:
+        candidate = load(os.path.join(traj_dir, name))
+        if candidate.get("bench") == fresh.get("bench"):
+            baseline_path = os.path.join(traj_dir, name)
+            baseline = candidate
+    if baseline is None:
+        fail(f"{traj_dir}: no committed snapshot for bench "
+             f"{fresh.get('bench')!r} (have {snapshots})")
 
     want = steps_per_s_leaves(baseline)
     got = steps_per_s_leaves(fresh)

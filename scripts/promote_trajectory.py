@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Promote CI-measured bench snapshots into the committed trajectory.
+
+Usage: promote_trajectory.py ARTIFACT_DIR TRAJECTORY_DIR
+
+ARTIFACT_DIR is a downloaded `trajectory-snapshot` CI artifact (e.g.
+`gh run download -n trajectory-snapshot -D /tmp/snap`): dated
+`BENCH_YYYYMMDD_<bench>.json` files in the ccn.bench.v1 schema, each
+stamped by `append_trajectory.py --copy-to` from a run that already
+passed the regression gate. This script validates each snapshot and
+copies it into TRAJECTORY_DIR, then deletes any *floor seed* the
+measured snapshot supersedes — a floor seed is a hand-written
+conservative baseline whose top-level `note` contains "floor seed",
+committed before the first CI run so the gate has something to compare
+against. After promotion, `git add`/commit TRAJECTORY_DIR: the next CI
+run gates against real measured numbers instead of the floor.
+
+A measured snapshot never overwrites a *newer* committed snapshot of
+the same bench (lexicographic name order = date order), and a floor
+seed in ARTIFACT_DIR is refused — the artifact must carry measurements.
+
+Stdlib only; exits non-zero naming the offending file on failure.
+"""
+
+import json
+import os
+import shutil
+import sys
+
+SCHEMA = "ccn.bench.v1"
+
+
+def fail(msg):
+    print(f"promote_trajectory: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+    if doc.get("schema") != SCHEMA:
+        fail(f"{path}: missing or wrong schema tag (want {SCHEMA!r}, "
+             f"got {doc.get('schema')!r})")
+    if not isinstance(doc.get("bench"), str) or not doc["bench"]:
+        fail(f"{path}: missing bench name")
+    return doc
+
+
+def is_floor_seed(doc):
+    return "floor seed" in str(doc.get("note", ""))
+
+
+def snapshots(dir_path):
+    return sorted(
+        name for name in os.listdir(dir_path)
+        if name.startswith("BENCH_") and name.endswith(".json")
+    )
+
+
+def main(argv):
+    if len(argv) != 3:
+        fail("usage: promote_trajectory.py ARTIFACT_DIR TRAJECTORY_DIR")
+    art_dir, traj_dir = argv[1], argv[2]
+    incoming = snapshots(art_dir)
+    if not incoming:
+        fail(f"{art_dir}: no BENCH_*.json snapshots to promote")
+
+    committed = {}  # bench -> [(name, is_floor)] in date order
+    for name in snapshots(traj_dir):
+        doc = load(os.path.join(traj_dir, name))
+        committed.setdefault(doc["bench"], []).append(
+            (name, is_floor_seed(doc)))
+
+    promoted = 0
+    for name in incoming:
+        src = os.path.join(art_dir, name)
+        doc = load(src)
+        if is_floor_seed(doc):
+            fail(f"{src}: is itself a floor seed; promote measured "
+                 f"snapshots only")
+        bench = doc["bench"]
+        newer = [n for n, _ in committed.get(bench, []) if n > name]
+        if newer:
+            print(f"promote_trajectory: skip {name}: {newer[-1]} is newer")
+            continue
+        shutil.copyfile(src, os.path.join(traj_dir, name))
+        print(f"promote_trajectory: promoted {name} ({bench})")
+        promoted += 1
+        # the measured snapshot supersedes any committed floor seed
+        for old, floor in committed.get(bench, []):
+            if floor and old != name:
+                os.remove(os.path.join(traj_dir, old))
+                print(f"promote_trajectory: removed superseded floor "
+                      f"seed {old}")
+        committed[bench] = [(name, False)]
+
+    if promoted == 0:
+        fail("nothing promoted (every artifact snapshot was stale)")
+    print(f"promote_trajectory: ok ({promoted} snapshot(s) promoted; "
+          f"commit {traj_dir} to tighten the gate)")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
