@@ -1,0 +1,403 @@
+//! §Fault-tolerance bench: failover latency and acked-step survival
+//! under repeated SIGKILL of real `ccn serve` children.
+//!
+//! Boots three child backends (disjoint id residue classes, per-backend
+//! stores, optionally armed with a seeded [`FaultPlan`] via
+//! `CCN_FAULTS`) behind an in-process replicating router
+//! (`replicate_every = 1`). A client soaks step traffic while the bench
+//! runs `CCN_CHAOS_CYCLES` kill/restart cycles: each cycle SIGKILLs the
+//! backend currently hosting a probe session, times kill → next acked
+//! step on that session (detection + promotion + retry, end to end)
+//! into a histogram, then restarts the child on the same socket + store
+//! and waits for it to rejoin the ring.
+//!
+//! Every acked step is mirrored onto a fault-free in-process twin and
+//! compared bit-for-bit; a divergence or a session that stops answering
+//! counts as an acknowledged step lost. The record lands in
+//! `results/BENCH_chaos.json` (`ccn.bench.v1` schema): overall steps/s,
+//! the failover-latency histogram (p50/p99), and
+//! `acknowledged_steps_lost`, which is asserted to be **zero** — the
+//! replication contract, not a soft metric.
+//!
+//! Scale knobs (env vars):
+//!   CCN_CHAOS_CYCLES    kill/restart cycles          (default 3)
+//!   CCN_CHAOS_TICKS     soak ticks per cycle         (default 40)
+//!   CCN_CHAOS_SESSIONS  concurrent sessions          (default 3)
+//!   CCN_CHAOS_INPUTS    observation width            (default 8)
+//!   CCN_CHAOS_FAULTS    FaultPlan spec for children  (default: benign
+//!                       read-drop/delay mix, seed 7; "" disarms)
+//!   CCN_CHAOS_OUT       result file (default results/BENCH_chaos.json)
+
+mod common;
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use ccn_rtrl::cluster::{ClientConfig, RouterConfig, RouterServer, WireClient};
+use ccn_rtrl::metrics::render_table;
+use ccn_rtrl::obs::Histogram;
+use ccn_rtrl::serve::{ListenAddr, Server, Service};
+use ccn_rtrl::util::fault::FaultPlan;
+use ccn_rtrl::util::json::Json;
+use ccn_rtrl::util::prng::Xoshiro256;
+
+use common::env_usize;
+
+/// Benign-by-construction default: read drops abort the op before it
+/// runs, delays run it once late — so failed attempts are safely
+/// retried and the twin stays in lockstep (see tests/cluster_chaos.rs).
+const DEFAULT_FAULTS: &str =
+    "seed:7;transport.read:drop:0.02;store.append:delay:0.3:2;\
+     transport.write:delay:0.2:1";
+
+fn fast_cfg() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_millis(250),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+        ..ClientConfig::default()
+    }
+}
+
+fn spawn_serve(
+    sock: &Path,
+    store: &Path,
+    offset: u64,
+    stride: u64,
+    faults: &str,
+) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_ccn"));
+    cmd.args([
+        "serve".to_string(),
+        "--listen".to_string(),
+        format!("unix://{}", sock.display()),
+        "--store-dir".to_string(),
+        store.display().to_string(),
+        "--shards".to_string(),
+        "1".to_string(),
+        "--id-offset".to_string(),
+        offset.to_string(),
+        "--id-stride".to_string(),
+        stride.to_string(),
+    ]);
+    if !faults.is_empty() {
+        cmd.env("CCN_FAULTS", faults);
+    }
+    cmd.stdin(Stdio::piped())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn ccn serve")
+}
+
+fn wait_ready(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if let Ok(mut c) = WireClient::dial(addr, fast_cfg()) {
+            if c.ping().is_ok() {
+                return;
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {addr} never answered ping"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn wait_alive(client: &mut WireClient, idx: usize, want: bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let h = client.request_ok(r#"{"op":"health"}"#).expect("health");
+        let backends = h.get("backends").and_then(|b| b.as_arr()).unwrap();
+        if backends[idx].get("alive") == Some(&Json::Bool(want)) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "backend {idx} never reached alive={want}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Step through the router, retrying until acked (faults are benign,
+/// failover promotes). Returns `(y, attempts)`.
+fn step_acked(
+    client: &mut WireClient,
+    id: u64,
+    x: &[f32],
+    c: f32,
+) -> (f64, u64) {
+    let line = format!(
+        r#"{{"op":"step","id":{id},"x":{},"c":{c}}}"#,
+        Json::arr_f32(x).dump()
+    );
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut attempts = 0u64;
+    loop {
+        attempts += 1;
+        if let Ok(reply) = client.request_line(&line) {
+            if let Ok(v) = Json::parse(&reply) {
+                if v.get("ok") == Some(&Json::Bool(true)) {
+                    let y = v
+                        .get("y")
+                        .and_then(|y| y.as_f64())
+                        .expect("acked step carries y");
+                    return (y, attempts);
+                }
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "session {id}: step never acked (failover wedged?)"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn main() {
+    let cycles = env_usize("CCN_CHAOS_CYCLES", 3);
+    let ticks = env_usize("CCN_CHAOS_TICKS", 40);
+    let sessions = env_usize("CCN_CHAOS_SESSIONS", 3);
+    let n = env_usize("CCN_CHAOS_INPUTS", 8);
+    let faults = std::env::var("CCN_CHAOS_FAULTS")
+        .unwrap_or_else(|_| DEFAULT_FAULTS.into());
+    let out_path = std::env::var("CCN_CHAOS_OUT")
+        .unwrap_or_else(|_| "results/BENCH_chaos.json".into());
+
+    let fault_digest = if faults.is_empty() {
+        None
+    } else {
+        let plan = FaultPlan::parse(&faults).expect("CCN_CHAOS_FAULTS spec");
+        Some(plan.schedule_digest())
+    };
+    eprintln!(
+        "[perf_chaos] {cycles} kill cycles x {ticks} ticks, {sessions} \
+         sessions, faults: {}",
+        match fault_digest {
+            Some(d) => format!("armed (digest {d:016x})"),
+            None => "disarmed".into(),
+        }
+    );
+
+    // -- the fleet: 3 chaos-armed children + a replicating router -----
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .subsec_nanos();
+    let base = std::env::temp_dir()
+        .join(format!("ccn-perfchaos-{}-{nanos}", std::process::id()));
+    std::fs::create_dir_all(&base).unwrap();
+    let socks: Vec<PathBuf> =
+        (0..3).map(|k| base.join(format!("b{k}.sock"))).collect();
+    let stores: Vec<PathBuf> =
+        (0..3).map(|k| base.join(format!("store{k}"))).collect();
+    let addrs: Vec<String> = socks
+        .iter()
+        .map(|s| format!("unix://{}", s.display()))
+        .collect();
+    let mut children: Vec<Child> = (0..3)
+        .map(|k| spawn_serve(&socks[k], &stores[k], k as u64, 3, &faults))
+        .collect();
+    for a in &addrs {
+        wait_ready(a);
+    }
+    let mut cfg = RouterConfig::new(
+        addrs.iter().map(|a| ListenAddr::parse(a).unwrap()).collect(),
+    );
+    cfg.client = fast_cfg();
+    cfg.health_interval = Duration::from_millis(100);
+    cfg.replicate_every = 1;
+    let router = RouterServer::bind(
+        cfg,
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+    )
+    .expect("bind router");
+    let mut client =
+        WireClient::dial(router.local_addr(), fast_cfg()).unwrap();
+
+    // fault-free twin replaying exactly the acked inputs
+    let twin_srv = Server::bind(
+        Service::new(1),
+        &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+        0,
+    )
+    .unwrap();
+    let mut twin =
+        WireClient::dial(twin_srv.local_addr(), fast_cfg()).unwrap();
+
+    let ids: Vec<u64> = (0..sessions)
+        .map(|j| client.open("columnar:8", n, j as u64).expect("open"))
+        .collect();
+    let twin_ids: Vec<u64> = (0..sessions)
+        .map(|j| twin.open("columnar:8", n, j as u64).expect("twin open"))
+        .collect();
+
+    let mut rng = Xoshiro256::seed_from_u64(0xdead);
+    let failover = Histogram::new();
+    let mut acked_steps = 0u64;
+    let mut lost = 0u64;
+    let mut retried = 0u64;
+    let t0 = Instant::now();
+    for cycle in 0..cycles {
+        // soak this cycle's traffic, twin in lockstep
+        for _ in 0..ticks {
+            for (j, (&id, &tid)) in ids.iter().zip(&twin_ids).enumerate() {
+                let x: Vec<f32> =
+                    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let c = rng.uniform(-0.5, 0.5);
+                let (y, attempts) = step_acked(&mut client, id, &x, c);
+                retried += attempts - 1;
+                let w = twin.step(tid, &x, c).expect("twin step");
+                if y.to_bits() != w.to_bits() {
+                    eprintln!(
+                        "[perf_chaos] LOST: cycle {cycle} session {j} \
+                         diverged from the acked-prefix twin"
+                    );
+                    lost += 1;
+                }
+                acked_steps += 1;
+            }
+        }
+
+        // ships can fail under injected faults without failing the
+        // acked op; the next acked op re-ships the full snapshot. Drain
+        // the lag so the kill measures promotion, not the documented
+        // failed-ship staleness window.
+        let mut settle = 0;
+        loop {
+            let lag = client
+                .request_ok(r#"{"op":"stats"}"#)
+                .expect("stats")
+                .get("cluster")
+                .and_then(|c| c.get("repl_lag"))
+                .and_then(|n| n.as_f64())
+                .expect("cluster repl_lag");
+            if lag == 0.0 {
+                break;
+            }
+            assert!(settle < 50, "replication lag never drained");
+            settle += 1;
+            for (j, (&id, &tid)) in ids.iter().zip(&twin_ids).enumerate() {
+                let x: Vec<f32> =
+                    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                let c = rng.uniform(-0.5, 0.5);
+                let (y, attempts) = step_acked(&mut client, id, &x, c);
+                retried += attempts - 1;
+                let w = twin.step(tid, &x, c).expect("twin step");
+                if y.to_bits() != w.to_bits() {
+                    eprintln!(
+                        "[perf_chaos] LOST: settle step of cycle {cycle} \
+                         session {j}"
+                    );
+                    lost += 1;
+                }
+                acked_steps += 1;
+            }
+        }
+
+        // kill the backend hosting the probe session; the next acked
+        // step on it times the whole failover path
+        let probe = ids[cycle % sessions];
+        let victim = router
+            .router()
+            .placement_of(probe)
+            .expect("probe session is placed");
+        children[victim].kill().expect("kill victim");
+        children[victim].wait().expect("reap victim");
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c = rng.uniform(-0.5, 0.5);
+        let tk = Instant::now();
+        let (y, attempts) = step_acked(&mut client, probe, &x, c);
+        failover.record_duration(tk.elapsed());
+        retried += attempts - 1;
+        let tid = twin_ids[cycle % sessions];
+        let w = twin.step(tid, &x, c).expect("twin step");
+        if y.to_bits() != w.to_bits() {
+            eprintln!("[perf_chaos] LOST: failover step of cycle {cycle}");
+            lost += 1;
+        }
+        acked_steps += 1;
+
+        // step every session once while the victim is still a corpse:
+        // any session pinned to it promotes NOW (on the forward error),
+        // not after the restart hands the pin a fresh, empty backend
+        for (j, (&id, &tid)) in ids.iter().zip(&twin_ids).enumerate() {
+            let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(-0.5, 0.5);
+            let (y, attempts) = step_acked(&mut client, id, &x, c);
+            retried += attempts - 1;
+            let w = twin.step(tid, &x, c).expect("twin step");
+            if y.to_bits() != w.to_bits() {
+                eprintln!(
+                    "[perf_chaos] LOST: dead-window step of cycle {cycle} \
+                     session {j}"
+                );
+                lost += 1;
+            }
+            acked_steps += 1;
+        }
+
+        // restart on the same socket + store (stale-lock takeover) and
+        // wait for the probe loop to let it rejoin the ring
+        children[victim] =
+            spawn_serve(&socks[victim], &stores[victim], victim as u64, 3, &faults);
+        wait_ready(&addrs[victim]);
+        wait_alive(&mut client, victim, true);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let steps_per_s = acked_steps as f64 / elapsed;
+
+    // the contract, not a metric: every acked step survived every kill
+    assert_eq!(
+        lost, 0,
+        "{lost} acknowledged step(s) lost across {cycles} kill cycles"
+    );
+
+    let snap = failover.snapshot();
+    println!(
+        "{}",
+        render_table(
+            &["cycles", "acked steps", "retries", "steps/s", "failover p50 ms", "p99 ms"],
+            &[vec![
+                cycles.to_string(),
+                acked_steps.to_string(),
+                retried.to_string(),
+                format!("{steps_per_s:.0}"),
+                format!("{:.1}", snap.percentile(0.50) as f64 / 1e6),
+                format!("{:.1}", snap.percentile(0.99) as f64 / 1e6),
+            ]]
+        )
+    );
+    println!("acknowledged steps lost: {lost} (contract: 0)");
+
+    let mut fields = vec![
+        ("cycles", Json::Num(cycles as f64)),
+        ("ticks_per_cycle", Json::Num(ticks as f64)),
+        ("sessions", Json::Num(sessions as f64)),
+        ("inputs", Json::Num(n as f64)),
+        ("replicate_every", Json::Num(1.0)),
+        ("acked_steps", Json::Num(acked_steps as f64)),
+        ("retries", Json::Num(retried as f64)),
+        ("acknowledged_steps_lost", Json::Num(lost as f64)),
+        ("elapsed_s", Json::Num(elapsed)),
+        ("steps_per_s", Json::Num(steps_per_s)),
+        ("failover_latency", snap.to_json()),
+    ];
+    if let Some(d) = fault_digest {
+        fields.push(("fault_spec", Json::Str(faults.clone())));
+        fields.push(("fault_digest", Json::Str(format!("{d:016x}"))));
+    }
+    common::write_bench_json(&out_path, "perf_chaos", fields);
+
+    for mut child in children {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    router.shutdown().expect("router shutdown");
+    twin_srv.shutdown().expect("twin shutdown");
+    let _ = std::fs::remove_dir_all(&base);
+}

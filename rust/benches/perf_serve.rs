@@ -110,7 +110,7 @@ fn probe_latency(
         let t = Instant::now();
         let resp = pool.call(Request::Step { id, x, c: 0.0 });
         hist.record_duration(t.elapsed());
-        if let Response::Error { message } = resp {
+        if let Response::Error { message, .. } = resp {
             panic!("latency probe failed: {message}");
         }
     }

@@ -20,10 +20,11 @@
 //! semantics.
 
 use std::io::{BufRead, BufReader, Write};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::serve::transport::Stream;
 use crate::serve::ListenAddr;
+use crate::util::fault::{self, FaultAction};
 use crate::util::json::Json;
 
 /// Connection policy for a [`WireClient`].
@@ -175,23 +176,63 @@ impl WireClient {
     /// caller wants to fail over to another backend.
     pub fn request_line(&mut self, line: &str) -> Result<String, ClientError> {
         self.ensure_conn()?;
+        // chaos hook: lose, stall, double or cut short the request
+        // before/at the send — see crate::util::fault for the plan
+        let mut dup = false;
+        match fault::hit("client.request") {
+            Some(FaultAction::Drop) => {
+                self.disconnect();
+                return Err(ClientError::Io(format!(
+                    "{}: injected client.request drop",
+                    self.addr
+                )));
+            }
+            Some(FaultAction::Delay(ms)) => fault::sleep_ms(ms),
+            Some(FaultAction::Truncate) => {
+                // half a request and no newline, then hang up: the
+                // server's final-line parse rejects the fragment, so
+                // the op provably never executes — but this client
+                // can't know that, hence Io, not Connect
+                let conn = self.conn.as_mut().expect("ensured above");
+                let half = &line.as_bytes()[..line.len() / 2];
+                let _ = conn.writer.write_all(half);
+                let _ = conn.writer.flush();
+                self.disconnect();
+                return Err(ClientError::Io(format!(
+                    "{}: injected client.request truncate",
+                    self.addr
+                )));
+            }
+            Some(FaultAction::Dup) => dup = true,
+            None => {}
+        }
         let conn = self.conn.as_mut().expect("ensured above");
-        if let Err(e) = writeln!(conn.writer, "{line}")
-            .and_then(|()| conn.writer.flush())
-        {
+        let send = if dup {
+            writeln!(conn.writer, "{line}")
+                .and_then(|()| writeln!(conn.writer, "{line}"))
+                .and_then(|()| conn.writer.flush())
+        } else {
+            writeln!(conn.writer, "{line}").and_then(|()| conn.writer.flush())
+        };
+        if let Err(e) = send {
             self.disconnect();
             return Err(ClientError::Io(format!("{}: write: {e}", self.addr)));
         }
-        let mut reply = String::new();
-        match conn.reader.read_line(&mut reply) {
-            Ok(0) => {
+        let read =
+            read_line_deadline(&mut conn.reader, self.cfg.read_timeout);
+        // a duplicated request leaves a stray reply queued on the
+        // stream; kill the connection so it can never answer a later
+        // request (the next cycle re-dials cleanly)
+        let out = match read {
+            Ok(bytes) if bytes.is_empty() => {
                 self.disconnect();
-                Err(ClientError::Io(format!(
+                return Err(ClientError::Io(format!(
                     "{}: server closed the connection",
                     self.addr
-                )))
+                )));
             }
-            Ok(_) => {
+            Ok(bytes) => {
+                let mut reply = String::from_utf8_lossy(&bytes).into_owned();
                 while reply.ends_with('\n') || reply.ends_with('\r') {
                     reply.pop();
                 }
@@ -199,9 +240,16 @@ impl WireClient {
             }
             Err(e) => {
                 self.disconnect();
-                Err(ClientError::Io(format!("{}: read: {e}", self.addr)))
+                return Err(ClientError::Io(format!(
+                    "{}: read: {e}",
+                    self.addr
+                )));
             }
+        };
+        if dup {
+            self.disconnect();
         }
+        out
     }
 
     /// [`WireClient::request_line`] for ops that are safe to execute
@@ -429,6 +477,77 @@ impl WireClient {
     }
 }
 
+/// Read one `\n`-terminated line under a *hard* deadline.
+///
+/// `BufReader::read_line` alone is not enough: it re-enters the
+/// socket's `read` once per fragment, and a kernel read timeout is
+/// per-`read` — a backend trickling one byte per timeout window would
+/// stretch a "10 s" reply read indefinitely. This loop re-arms the
+/// socket with the *remaining* budget before every fill, so
+/// `read_timeout` bounds the whole reply end to end.
+///
+/// Returns the raw line bytes without the terminator; an empty vec
+/// means the server closed the connection before sending anything.
+fn read_line_deadline(
+    reader: &mut BufReader<Stream>,
+    budget: Duration,
+) -> std::io::Result<Vec<u8>> {
+    use std::io::{Error, ErrorKind};
+    let deadline = Instant::now() + budget;
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let remaining = match deadline.checked_duration_since(Instant::now())
+        {
+            Some(d) if !d.is_zero() => d,
+            _ => {
+                return Err(Error::new(
+                    ErrorKind::TimedOut,
+                    format!(
+                        "no complete reply within {} ms",
+                        budget.as_millis()
+                    ),
+                ))
+            }
+        };
+        reader.get_ref().set_read_timeout(Some(remaining))?;
+        let (chunk_len, newline_at) = match reader.fill_buf() {
+            Ok(chunk) => {
+                if chunk.is_empty() {
+                    // EOF: surface whatever arrived (empty = clean close)
+                    return Ok(line);
+                }
+                let newline_at = chunk.iter().position(|&b| b == b'\n');
+                let take = newline_at.unwrap_or(chunk.len());
+                line.extend_from_slice(&chunk[..take]);
+                (chunk.len(), newline_at)
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                return Err(Error::new(
+                    ErrorKind::TimedOut,
+                    format!(
+                        "no complete reply within {} ms",
+                        budget.as_millis()
+                    ),
+                ))
+            }
+            Err(e) => return Err(e),
+        };
+        match newline_at {
+            Some(pos) => {
+                reader.consume(pos + 1);
+                return Ok(line);
+            }
+            None => reader.consume(chunk_len),
+        }
+    }
+}
+
 fn reply_id(addr: &ListenAddr, v: &Json) -> Result<u64, ClientError> {
     v.get("id")
         .and_then(|id| id.as_f64())
@@ -485,6 +604,45 @@ mod tests {
         let stats = c.stats().unwrap();
         assert_eq!(stats.get("ok"), Some(&Json::Bool(true)));
         server.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stalled_backend_cannot_hang_a_request_past_its_deadline() {
+        // a raw "backend" that accepts, then drips one byte every 50 ms
+        // and never finishes a line: every fragment would re-arm a naive
+        // per-read socket timeout, stretching a 400 ms deadline to 10 s
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = format!("tcp://{}", listener.local_addr().unwrap());
+        let dripper = std::thread::spawn(move || {
+            let (mut sock, _) = listener.accept().unwrap();
+            for _ in 0..200 {
+                if sock.write_all(b"x").and_then(|()| sock.flush()).is_err() {
+                    return; // client hung up — done
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        });
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_millis(250),
+            read_timeout: Duration::from_millis(400),
+            retries: 0,
+            ..ClientConfig::default()
+        };
+        let mut c = WireClient::dial(&addr, cfg).unwrap();
+        let t0 = Instant::now();
+        let err = c.request_line(r#"{"op":"ping"}"#).unwrap_err();
+        let took = t0.elapsed();
+        assert!(!err.is_connect(), "request was sent: {err}");
+        assert!(
+            took >= Duration::from_millis(300),
+            "gave up before the deadline: {took:?}"
+        );
+        assert!(
+            took < Duration::from_secs(3),
+            "read deadline not enforced end-to-end: {took:?}"
+        );
+        assert!(!c.is_connected(), "timed-out conn must be torn down");
+        dripper.join().unwrap();
     }
 
     #[test]

@@ -16,9 +16,15 @@
 //!   the `ccn route --listen ... --backend ...` front end. Serves the
 //!   whole backend protocol transparently (byte-identical replies for
 //!   single-backend ops) plus the cluster ops `health`, `handoff`,
-//!   `drain`, `rebalance`. Sessions migrate live between backends via
-//!   snapshot → restore-as-same-id → close, copy-before-delete, with
-//!   per-session ordering held across the move by per-id gates.
+//!   `drain`, `rebalance`, `promote`. Sessions migrate live between
+//!   backends via snapshot → restore-as-same-id → close,
+//!   copy-before-delete, with per-session ordering held across the move
+//!   by per-id gates. With `--replicate-every K` every placed session
+//!   also keeps a warm standby on its ring-successor backend (shipped
+//!   after acked state-advancing ops, parked there as a replica); when
+//!   a pinned home dies, routed ops promote the standby — warm the
+//!   replica, re-pin, retry once — instead of failing, with an acked
+//!   loss window of at most `K - 1` ops (`K = 1` → zero).
 //!
 //! # Deployment sketch
 //!

@@ -79,6 +79,23 @@ impl HashRing {
         }
         None
     }
+
+    /// The warm-standby backend for `key`: the first live backend
+    /// clockwise from the key's position that is *not* `home`. This is
+    /// the classic successor-replica placement — deterministic (every
+    /// router instance picks the same standby), and exactly the backend
+    /// `home()` would fail over to if `home` died, so a replica parked
+    /// there is already where the promoted session will live. `None`
+    /// when no live backend other than the home exists (replication
+    /// degrades to off in a 1-backend fleet).
+    pub fn successor<F: Fn(usize) -> bool>(
+        &self,
+        key: u64,
+        home: usize,
+        live: F,
+    ) -> Option<usize> {
+        self.home(key, |b| b != home && live(b))
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +148,26 @@ mod tests {
                 "backend {b} owns {n}/4000 keys — ring badly skewed"
             );
         }
+    }
+
+    #[test]
+    fn successor_is_exactly_the_failover_home() {
+        let ring = HashRing::new(4, DEFAULT_VNODES);
+        for key in 0..2000u64 {
+            let home = ring.home(key, |_| true).unwrap();
+            let standby = ring.successor(key, home, |_| true).unwrap();
+            assert_ne!(standby, home, "key {key}: standby on the home");
+            // the replica lives exactly where the key spills if its
+            // home dies — promotion needs no copy, just a warm
+            assert_eq!(
+                Some(standby),
+                ring.home(key, |b| b != home),
+                "key {key}: standby is not the failover target"
+            );
+        }
+        // a 1-backend fleet has nowhere to replicate
+        let solo = HashRing::new(1, DEFAULT_VNODES);
+        assert_eq!(solo.successor(7, 0, |_| true), None);
     }
 
     #[test]

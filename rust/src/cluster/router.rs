@@ -42,11 +42,39 @@
 //! Connect failures mark a backend dead (out of the ring at lookup
 //! time); ops that provably never reached a backend retry on the next
 //! candidate (`route.retries`). Ops that may have been executed are
-//! **never** replayed — the transport executes a final unterminated line
-//! at EOF, so blind retry could double-step a learner. A dead backend's
-//! parked sessions live in its store; when the process restarts on the
-//! same store dir the boot scan rehydrates them, the health loop sees
-//! the dead→alive transition, and the backend re-enters the ring.
+//! **never** replayed *onto the same authority* — the transport executes
+//! a final unterminated line at EOF, so blind retry could double-step a
+//! learner. A dead backend's parked sessions live in its store; when the
+//! process restarts on the same store dir the boot scan rehydrates them,
+//! the health loop sees the dead→alive transition, and the backend
+//! re-enters the ring.
+//!
+//! # Warm-standby replication & promotion
+//!
+//! With `--replicate-every K` (K ≥ 1), every session the router places
+//! gets a **warm standby**: after an acked state-advancing op, once `K`
+//! such ops have accumulated since the last ship, the router snapshots
+//! the session on its home and ships the envelope to the session's
+//! [`HashRing::successor`] — exactly the backend the ring would fail
+//! over to — where it is parked as a replica (`replicate` op), never
+//! resident. Standby failures never fail the client's op: the ack
+//! already happened; the miss only grows `route.repl_errors` and leaves
+//! `route.repl_lag` (acked-but-unreplicated ops, summed over sessions)
+//! elevated until the next successful ship.
+//!
+//! When a routed op finds its table-pinned home unreachable, the router
+//! **promotes** instead of failing loudly: it re-acquires the id's gate
+//! exclusively (serializing against any in-flight op still talking to
+//! the old home), re-checks the table (another thread may have already
+//! promoted), `warm`s the parked replica on the standby, re-pins the
+//! table, and retries the op once against the new authority. Retrying
+//! even a maybe-executed op is safe *here*: the replica's state only
+//! ever advances through acked ships, so an op the dead home executed
+//! but never acked is absent from the replica — the retry runs it once
+//! on the new timeline. The cost is bounded staleness: up to `K - 1`
+//! acked ops (plus any ops the standby missed while unreachable) are
+//! lost on promotion; `K = 1` makes the acked-loss window zero.
+//! `{"op":"promote","id":N}` forces the same path by hand.
 //!
 //! # Fleet observability
 //!
@@ -101,7 +129,7 @@ use super::ring::{HashRing, DEFAULT_VNODES};
 
 /// Router-tier op names, pre-registered as `route.<op>` histograms so
 /// the router's `metrics` schema is complete from the first request.
-pub const ROUTE_OPS: [&str; 16] = [
+pub const ROUTE_OPS: [&str; 18] = [
     "open",
     "step",
     "step_batch",
@@ -118,14 +146,23 @@ pub const ROUTE_OPS: [&str; 16] = [
     "handoff",
     "drain",
     "rebalance",
+    "replicate",
+    "promote",
 ];
 
-/// Router-tier counters.
-pub const ROUTE_COUNTERS: [&str; 4] = [
+/// Router-tier counters. `route.repl_lag` is a gauge in counter
+/// clothing: the number of acked state-advancing ops not yet shipped to
+/// a standby, summed over sessions — it goes *down* on every successful
+/// ship.
+pub const ROUTE_COUNTERS: [&str; 8] = [
     "route.retries",
     "route.err_backend",
     "route.err_no_backend",
     "route.migrations",
+    "route.replicated",
+    "route.repl_errors",
+    "route.repl_lag",
+    "route.promotions",
 ];
 
 /// Configuration for [`Router::new`] / [`RouterServer::bind`].
@@ -147,6 +184,11 @@ pub struct RouterConfig {
     pub trace: Option<TraceConfig>,
     /// Prometheus text endpoint (`ccn route --metrics-listen`).
     pub metrics_listen: Option<ListenAddr>,
+    /// Warm-standby replication cadence (`ccn route --replicate-every
+    /// K`): ship a session's state to its ring-successor standby every
+    /// `K` acked state-advancing ops. `0` disables replication (the
+    /// default); `1` makes the acked-loss window on failover zero.
+    pub replicate_every: u64,
 }
 
 impl RouterConfig {
@@ -159,6 +201,7 @@ impl RouterConfig {
             vnodes: DEFAULT_VNODES,
             trace: None,
             metrics_listen: None,
+            replicate_every: 0,
         }
     }
 }
@@ -177,6 +220,12 @@ fn wlock<T>(lock: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
 
 fn error_line(msg: impl Into<String>) -> String {
     Response::error(msg).to_json().dump()
+}
+
+fn reply_is_ok(reply: &str) -> bool {
+    Json::parse(reply)
+        .map(|v| v.get("ok") == Some(&Json::Bool(true)))
+        .unwrap_or(false)
 }
 
 /// One configured backend and its routing state.
@@ -233,6 +282,16 @@ pub struct Router {
     err_backend: Arc<AtomicU64>,
     err_no_backend: Arc<AtomicU64>,
     migrations: Arc<AtomicU64>,
+    /// Warm-standby cadence (0 = replication off). See module docs.
+    replicate_every: u64,
+    /// Per-id acked state-advancing ops since the last successful ship.
+    /// All updates to `repl_lag` happen under this mutex so the gauge
+    /// always equals the sum of the clocks.
+    repl_clock: Mutex<HashMap<u64, u64>>,
+    replicated: Arc<AtomicU64>,
+    repl_errors: Arc<AtomicU64>,
+    repl_lag: Arc<AtomicU64>,
+    promotions: Arc<AtomicU64>,
     /// Router-side trace log; when set, forwarded ops carry correlation
     /// ids and sampled ops emit one JSONL event each.
     trace: Option<TraceHandle>,
@@ -308,6 +367,10 @@ impl Router {
         let err_backend = obs.counter("route.err_backend");
         let err_no_backend = obs.counter("route.err_no_backend");
         let migrations = obs.counter("route.migrations");
+        let replicated = obs.counter("route.replicated");
+        let repl_errors = obs.counter("route.repl_errors");
+        let repl_lag = obs.counter("route.repl_lag");
+        let promotions = obs.counter("route.promotions");
         let trace = match &cfg.trace {
             Some(tc) => {
                 let mut t = TraceHandle::open(tc, obs.counter("trace.dropped"))?;
@@ -330,6 +393,12 @@ impl Router {
             err_backend,
             err_no_backend,
             migrations,
+            replicate_every: cfg.replicate_every,
+            repl_clock: Mutex::new(HashMap::new()),
+            replicated,
+            repl_errors,
+            repl_lag,
+            promotions,
             trace,
             epoch: Instant::now(),
             win_ops,
@@ -384,6 +453,10 @@ impl Router {
     fn forget(&self, id: u64) {
         wlock(&self.table).remove(&id);
         mlock(&self.gates).remove(&id);
+        let mut clocks = mlock(&self.repl_clock);
+        if let Some(n) = clocks.remove(&id) {
+            self.repl_lag.fetch_sub(n, Ordering::Relaxed);
+        }
     }
 
     /// Ring home among placeable members, spilling to merely-alive ones
@@ -498,6 +571,219 @@ impl Router {
         order
     }
 
+    /// Count one acked state-advancing op against `id`'s replication
+    /// clock; ship to the standby when `replicate_every` is due.
+    fn maybe_replicate(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        id: u64,
+    ) {
+        if self.replicate_every == 0 {
+            return;
+        }
+        let due = {
+            let mut clocks = mlock(&self.repl_clock);
+            let c = clocks.entry(id).or_insert(0);
+            *c += 1;
+            self.repl_lag.fetch_add(1, Ordering::Relaxed);
+            *c >= self.replicate_every
+        };
+        if due {
+            self.replicate_now(conns, id);
+        }
+    }
+
+    /// Ship `id`'s current state from its table-pinned home to its
+    /// ring-successor standby, where it parks as a replica. Best-effort:
+    /// the triggering op is already acked, so a miss never fails the
+    /// client — it bumps `route.repl_errors` and leaves `route.repl_lag`
+    /// standing until the next successful ship.
+    fn replicate_now(&self, conns: &mut HashMap<usize, WireClient>, id: u64) {
+        let Some(home) = rlock(&self.table).get(&id).copied() else {
+            self.repl_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let Some(standby) =
+            self.ring.successor(id, home, |b| self.alive(b))
+        else {
+            // a 1-backend fleet (or an otherwise-dead one) has nowhere
+            // to ship — replication degrades to off for this session
+            self.repl_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        // the ship covers every op counted so far; a concurrent writer
+        // bumping the clock mid-ship keeps its (post-snapshot) ops in
+        // the lag gauge
+        let drained =
+            mlock(&self.repl_clock).get(&id).copied().unwrap_or(0);
+        let state = match self.client(conns, home).snapshot(id) {
+            Ok(s) => s,
+            Err(e) => {
+                if e.is_connect() {
+                    self.set_alive(home, false);
+                }
+                self.repl_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let line = Json::obj(vec![
+            ("op", Json::Str("replicate".to_string())),
+            ("id", Json::Num(id as f64)),
+            ("state", state),
+        ])
+        .dump();
+        // parking a replica is an overwrite: idempotent, safe to replay
+        let ok = match self
+            .client(conns, standby)
+            .request_line_idempotent(&line)
+        {
+            Ok(reply) => reply_is_ok(&reply),
+            Err(e) => {
+                if e.is_connect() {
+                    self.set_alive(standby, false);
+                }
+                false
+            }
+        };
+        if ok {
+            self.replicated.fetch_add(1, Ordering::Relaxed);
+            let mut clocks = mlock(&self.repl_clock);
+            if let Some(c) = clocks.get_mut(&id) {
+                let n = (*c).min(drained);
+                *c -= n;
+                self.repl_lag.fetch_sub(n, Ordering::Relaxed);
+            }
+        } else {
+            self.repl_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Promote `id`'s warm standby to authority after its pinned home
+    /// `dead` stopped answering. Exclusive on the id's gate: an
+    /// in-flight op still holding it shared finishes first — its reply,
+    /// however late, lands on the old timeline — so promotion and late
+    /// replies serialize and nothing runs twice on the new authority.
+    /// Refuses when the home still answers a probe (a blip is not a
+    /// death), when replication is off, or when no live standby exists.
+    fn promote(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        id: u64,
+        dead: usize,
+    ) -> Result<usize, String> {
+        let gate = self.gate(id);
+        let _exclusive = wlock(&gate);
+        // re-check under the gate: a racing op may already have promoted
+        if let Some(&b) = rlock(&self.table).get(&id) {
+            if b != dead && self.alive(b) {
+                return Ok(b);
+            }
+        }
+        if self.replicate_every == 0 {
+            return Err(format!(
+                "promote: backend {} is unreachable and session {id} has \
+                 no replica (start the router with --replicate-every)",
+                self.backends[dead].label
+            ));
+        }
+        // only a provably-unreachable home loses authority: a
+        // still-answering home means the failed op was a blip, and
+        // promoting under it would leave two resident authorities
+        if mlock(&self.backends[dead].admin).ping().is_ok() {
+            self.set_alive(dead, true);
+            return Err(format!(
+                "promote: backend {} is alive — use handoff to move \
+                 session {id}",
+                self.backends[dead].label
+            ));
+        }
+        self.set_alive(dead, false);
+        let Some(standby) =
+            self.ring.successor(id, dead, |b| self.alive(b))
+        else {
+            return Err(format!(
+                "promote: no live standby for session {id} besides {}",
+                self.backends[dead].label
+            ));
+        };
+        // the replica sits parked on the standby; warm makes it resident
+        let line = format!(r#"{{"op":"warm","id":{id}}}"#);
+        match self.forward(conns, standby, &line, false) {
+            Ok(reply) if reply_is_ok(&reply) => {}
+            Ok(reply) => {
+                return Err(format!(
+                    "promote: standby {} has no replica of session {id}: \
+                     {reply}",
+                    self.backends[standby].label
+                ));
+            }
+            Err(e) => return Err(format!("promote: {}", e.message())),
+        }
+        wlock(&self.table).insert(id, standby);
+        // whatever the dead home acked after the last ship is lost (the
+        // documented ≤ K-1 staleness window); the new timeline starts
+        // at the replica, so the id's lag contribution resets
+        {
+            let mut clocks = mlock(&self.repl_clock);
+            if let Some(c) = clocks.get_mut(&id) {
+                self.repl_lag.fetch_sub(*c, Ordering::Relaxed);
+                *c = 0;
+            }
+        }
+        self.promotions.fetch_add(1, Ordering::Relaxed);
+        Ok(standby)
+    }
+
+    /// `{"op":"promote","id":N}`: operator-forced failover onto the
+    /// session's warm standby (the same path routed ops take
+    /// automatically when their pinned home dies).
+    fn promote_reply(
+        &self,
+        conns: &mut HashMap<usize, WireClient>,
+        v: &Json,
+    ) -> String {
+        let Some(id) = wire_id(v) else {
+            return error_line("promote: missing or invalid 'id'");
+        };
+        let Some(home) = rlock(&self.table)
+            .get(&id)
+            .copied()
+            .or_else(|| self.ring_home(id))
+        else {
+            self.err_no_backend.fetch_add(1, Ordering::Relaxed);
+            return error_line("route: no live backend");
+        };
+        match self.promote(conns, id, home) {
+            Ok(b) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+                ("to", Json::Str(self.backends[b].label.clone())),
+            ])
+            .dump(),
+            Err(e) => error_line(e),
+        }
+    }
+
+    /// Best-effort delete of `id`'s parked replica after its close: the
+    /// standby's copy must not resurrect a closed session on a later
+    /// promotion. Errors (no replica yet, standby down) are ignored.
+    fn drop_replica(&self, conns: &mut HashMap<usize, WireClient>, id: u64) {
+        if self.replicate_every == 0 {
+            return;
+        }
+        let Some(home) = rlock(&self.table).get(&id).copied() else {
+            return;
+        };
+        let Some(standby) =
+            self.ring.successor(id, home, |b| self.alive(b))
+        else {
+            return;
+        };
+        let _ = self
+            .client(conns, standby)
+            .request_line(&format!(r#"{{"op":"close","id":{id}}}"#));
+    }
+
     /// Route an id-addressed op: table-pinned → exactly that backend;
     /// otherwise ring home with locate-and-cache probing on "no session".
     fn route_id(
@@ -506,16 +792,50 @@ impl Router {
         id: u64,
         raw: &str,
         idempotent: bool,
+        advances: bool,
         ctx: Option<&TraceCtx>,
     ) -> String {
         let gate = self.gate(id);
-        let _shared = rlock(&gate);
+        let shared = rlock(&gate);
         if let Some(&b) = rlock(&self.table).get(&id) {
-            // the session's state is THERE; a dead pin must fail loudly,
-            // not silently re-route onto a backend without the state
-            return match self.forward_traced(conns, b, raw, idempotent, ctx) {
-                Ok(reply) => reply,
-                Err(e) => error_line(e.message()),
+            // the session's state is THERE; a dead pin fails over to the
+            // session's warm standby when one exists, and otherwise
+            // fails loudly — it never silently re-routes onto a backend
+            // without the state
+            let err =
+                match self.forward_traced(conns, b, raw, idempotent, ctx) {
+                    Ok(reply) => {
+                        if advances && reply_is_ok(&reply) {
+                            self.maybe_replicate(conns, id);
+                        }
+                        return reply;
+                    }
+                    Err(e) => e,
+                };
+            // promotion needs the gate exclusively — release our shared
+            // hold before attempting it (the gate is not reentrant)
+            drop(shared);
+            let msg = err.message();
+            return match self.promote(conns, id, b) {
+                Err(_) => error_line(msg),
+                Ok(standby) => {
+                    // the replica never saw an un-acked op (ships follow
+                    // acks), so one retry on the new authority cannot
+                    // double-run even a maybe-executed op
+                    self.retries.fetch_add(1, Ordering::Relaxed);
+                    let _shared = rlock(&gate);
+                    match self
+                        .forward_traced(conns, standby, raw, idempotent, ctx)
+                    {
+                        Ok(reply) => {
+                            if advances && reply_is_ok(&reply) {
+                                self.maybe_replicate(conns, id);
+                            }
+                            reply
+                        }
+                        Err(e) => error_line(e.message()),
+                    }
+                }
             };
         }
         let Some(home) = self.ring_home(id) else {
@@ -537,6 +857,9 @@ impl Router {
                         continue;
                     }
                     wlock(&self.table).insert(id, b);
+                    if advances && reply_is_ok(&reply) {
+                        self.maybe_replicate(conns, id);
+                    }
                     return reply;
                 }
                 Err(ForwardErr::NotSent(m)) => {
@@ -582,6 +905,13 @@ impl Router {
                                 v.get("id").and_then(|id| id.as_f64())
                             {
                                 wlock(&self.table).insert(id as u64, b);
+                                if self.replicate_every > 0 {
+                                    // seed the standby right away so a
+                                    // home that dies before the first
+                                    // K-boundary still has something to
+                                    // promote
+                                    self.replicate_now(conns, id as u64);
+                                }
                             }
                         }
                     }
@@ -635,7 +965,28 @@ impl Router {
         if by_backend.len() == 1 && unroutable.is_empty() {
             let (&b, _) = by_backend.iter().next().expect("one entry");
             return match self.forward_traced(conns, b, raw, false, ctx) {
-                Ok(reply) => reply,
+                Ok(reply) => {
+                    if self.replicate_every > 0 {
+                        // pin + count the acked slots; the raw reply
+                        // passes through untouched
+                        let (ys, _) = parse_batch_reply(&reply);
+                        let mut acked: Vec<u64> = ys
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, y)| y.is_some())
+                            .filter_map(|(slot, _)| {
+                                items.get(slot).map(|it| it.id)
+                            })
+                            .collect();
+                        acked.sort_unstable();
+                        acked.dedup();
+                        for id in acked {
+                            wlock(&self.table).insert(id, b);
+                            self.maybe_replicate(conns, id);
+                        }
+                    }
+                    reply
+                }
                 Err(e) => error_line(e.message()),
             };
         }
@@ -644,7 +995,7 @@ impl Router {
         }
         let mut ys: Vec<Result<f32, String>> =
             vec![Err("route: no live backend".to_string()); items.len()];
-        for (b, idxs) in by_backend {
+        for (&b, idxs) in &by_backend {
             let mut sub_fields = vec![
                 ("op", Json::Str("step_batch".to_string())),
                 (
@@ -697,9 +1048,24 @@ impl Router {
                 }
                 Err(e) => {
                     let msg = e.message();
-                    for &i in &idxs {
+                    for &i in idxs {
                         ys[i] = Err(msg.clone());
                     }
+                }
+            }
+        }
+        if self.replicate_every > 0 {
+            for (&b, idxs) in &by_backend {
+                let mut acked: Vec<u64> = idxs
+                    .iter()
+                    .filter(|&&i| ys[i].is_ok())
+                    .map(|&i| items[i].id)
+                    .collect();
+                acked.sort_unstable();
+                acked.dedup();
+                for id in acked {
+                    wlock(&self.table).insert(id, b);
+                    self.maybe_replicate(conns, id);
                 }
             }
         }
@@ -990,6 +1356,26 @@ impl Router {
                 "migrations",
                 Json::Num(self.migrations.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "replicate_every",
+                Json::Num(self.replicate_every as f64),
+            ),
+            (
+                "replicated",
+                Json::Num(self.replicated.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "repl_errors",
+                Json::Num(self.repl_errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "repl_lag",
+                Json::Num(self.repl_lag.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "promotions",
+                Json::Num(self.promotions.load(Ordering::Relaxed) as f64),
+            ),
         ])
     }
 
@@ -1228,6 +1614,9 @@ impl Router {
             Some("rebalance") => {
                 return ("rebalance", None, self.rebalance_reply(conns))
             }
+            Some("promote") => {
+                return ("promote", None, self.promote_reply(conns, &v))
+            }
             _ => {}
         }
         let op = match parse_wire_op(&v) {
@@ -1290,32 +1679,43 @@ impl Router {
                 ("restore", self.route_open(conns, fwd, cx))
             }
             WireOp::Restore { id: Some(id), .. } => {
-                ("restore", self.route_id(conns, id, fwd, false, cx))
+                ("restore", self.route_id(conns, id, fwd, false, true, cx))
             }
             WireOp::Step { id, .. } => {
-                ("step", self.route_id(conns, id, fwd, false, cx))
+                ("step", self.route_id(conns, id, fwd, false, true, cx))
             }
             WireOp::Predict { id, .. } => {
-                ("predict", self.route_id(conns, id, fwd, true, cx))
+                ("predict", self.route_id(conns, id, fwd, true, false, cx))
             }
             WireOp::Snapshot { id } => {
-                ("snapshot", self.route_id(conns, id, fwd, true, cx))
+                ("snapshot", self.route_id(conns, id, fwd, true, false, cx))
             }
             WireOp::Park { id } => {
-                ("park", self.route_id(conns, id, fwd, false, cx))
+                ("park", self.route_id(conns, id, fwd, false, false, cx))
             }
             WireOp::Warm { id } => {
-                ("warm", self.route_id(conns, id, fwd, false, cx))
+                ("warm", self.route_id(conns, id, fwd, false, false, cx))
             }
             WireOp::Close { id } => {
-                let reply = self.route_id(conns, id, fwd, false, cx);
+                let reply = self.route_id(conns, id, fwd, false, false, cx);
                 if let Ok(v) = Json::parse(&reply) {
                     if v.get("ok") == Some(&Json::Bool(true)) {
+                        self.drop_replica(conns, id);
                         self.forget(id);
                     }
                 }
                 ("close", reply)
             }
+            // replicas are the router's own business: a client-shipped
+            // envelope would bypass the clock/standby bookkeeping
+            WireOp::Replicate { .. } => (
+                "replicate",
+                error_line(
+                    "replicate: the router manages replicas itself (start \
+                     it with --replicate-every); send replicate directly \
+                     to a backend",
+                ),
+            ),
             WireOp::StepBatch(items) => (
                 "step_batch",
                 self.route_step_batch(conns, &items, fwd, cx),
@@ -1428,13 +1828,22 @@ impl RouterServer {
             let stop = Arc::clone(&stop);
             std::thread::spawn(move || {
                 // probe immediately so dead-at-boot backends leave the
-                // ring before the first client op
+                // ring before the first client op; each tick then sleeps
+                // a jittered 75%..125% of the configured interval so a
+                // fleet of routers restarted in lockstep never probes
+                // the same backends in phase (xorshift64, per-process
+                // seed)
+                let mut jstate: u64 =
+                    0x9E37_79B9_7F4A_7C15 ^ u64::from(std::process::id());
                 while !stop.load(Ordering::Relaxed) {
                     router.probe_all();
+                    jstate ^= jstate << 13;
+                    jstate ^= jstate >> 7;
+                    jstate ^= jstate << 17;
+                    let frac = (jstate >> 11) as f64 / (1u64 << 53) as f64;
+                    let target = health_interval.mul_f64(0.75 + 0.5 * frac);
                     let mut slept = Duration::ZERO;
-                    while slept < health_interval
-                        && !stop.load(Ordering::Relaxed)
-                    {
+                    while slept < target && !stop.load(Ordering::Relaxed) {
                         std::thread::sleep(POLL_INTERVAL);
                         slept += POLL_INTERVAL;
                     }
@@ -1619,6 +2028,7 @@ fn run_conn(
 mod tests {
     use super::*;
     use crate::serve::{Server, Service};
+    use crate::store::StoreConfig;
 
     fn fast_cfg(backends: Vec<ListenAddr>) -> RouterConfig {
         let mut cfg = RouterConfig::new(backends);
@@ -1822,5 +2232,280 @@ mod tests {
         );
         s1.shutdown().unwrap();
         s2.shutdown().unwrap();
+    }
+
+    fn store_backend(tag: &str) -> (Server, ListenAddr, std::path::PathBuf) {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos();
+        let dir = std::env::temp_dir().join(format!(
+            "ccn_router_{tag}_{}_{nanos}",
+            std::process::id()
+        ));
+        let svc = Service::with_store(1, Some(StoreConfig::new(&dir, 0)))
+            .expect("store-backed service boots");
+        let server = Server::bind(
+            svc,
+            &ListenAddr::parse("tcp://127.0.0.1:0").unwrap(),
+            0,
+        )
+        .unwrap();
+        let addr = ListenAddr::parse(server.local_addr()).unwrap();
+        (server, addr, dir)
+    }
+
+    fn opened_id(reply: &str) -> u64 {
+        Json::parse(reply)
+            .unwrap()
+            .get("id")
+            .and_then(|i| i.as_f64())
+            .expect("open reply carries an id") as u64
+    }
+
+    fn y_of(reply: &str) -> Json {
+        Json::parse(reply)
+            .unwrap_or_else(|e| panic!("unparseable reply {reply}: {e}"))
+            .get("y")
+            .cloned()
+            .unwrap_or_else(|| panic!("reply has no y: {reply}"))
+    }
+
+    #[test]
+    fn killed_home_promotes_the_warm_standby_bit_exact() {
+        let (s1, a1, d1) = store_backend("promo_a");
+        let (s2, a2, d2) = store_backend("promo_b");
+        let mut cfg = fast_cfg(vec![a1.clone(), a2.clone()]);
+        cfg.replicate_every = 1; // zero acked-loss window
+        let router = Router::new(cfg).unwrap();
+        let mut conns = HashMap::new();
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":2,"seed":3}"#;
+        let id = opened_id(&router.handle_line(open, &mut conns));
+        let home = router.placement_of(id).unwrap();
+        let standby_addr = if home == 0 { a2 } else { a1 };
+        // acked soak: with K=1, every reply means the standby has the
+        // state up to and including that step
+        let mut acked: Vec<(String, Json)> = Vec::new();
+        for t in 0..7 {
+            let x = 0.1 * t as f64 - 0.2;
+            let line = format!(
+                r#"{{"op":"step","id":{id},"x":[{x},0.5],"c":0.25}}"#
+            );
+            let reply = router.handle_line(&line, &mut conns);
+            assert!(reply.contains(r#""ok":true"#), "{reply}");
+            acked.push((line, y_of(&reply)));
+        }
+        assert_eq!(
+            router.repl_lag.load(Ordering::Relaxed),
+            0,
+            "K=1 leaves no acked op unshipped"
+        );
+        assert!(router.replicated.load(Ordering::Relaxed) >= 8);
+        let mut servers = [Some(s1), Some(s2)];
+        servers[home].take().unwrap().shutdown().unwrap();
+        // the next routed op finds the dead pin and promotes the standby
+        let line =
+            format!(r#"{{"op":"step","id":{id},"x":[0.7,0.5],"c":0.25}}"#);
+        let reply = router.handle_line(&line, &mut conns);
+        assert!(reply.contains(r#""ok":true"#), "{reply}");
+        let y8 = y_of(&reply);
+        assert_eq!(router.placement_of(id), Some(1 - home));
+        assert_eq!(router.promotions.load(Ordering::Relaxed), 1);
+        // bit-exact: a twin on the survivor replays the acked history
+        let mut direct =
+            WireClient::new(standby_addr, ClientConfig::default());
+        let twin = opened_id(&direct.request_line(open).unwrap());
+        for (line, y) in &acked {
+            let tl = line.replace(
+                &format!(r#""id":{id}"#),
+                &format!(r#""id":{twin}"#),
+            );
+            let ty = y_of(&direct.request_line(&tl).unwrap());
+            assert_eq!(&ty, y, "twin diverged on {line}");
+        }
+        let tl =
+            format!(r#"{{"op":"step","id":{twin},"x":[0.7,0.5],"c":0.25}}"#);
+        let ty = y_of(&direct.request_line(&tl).unwrap());
+        assert_eq!(ty, y8, "post-promotion step diverged from the twin");
+        servers[1 - home].take().unwrap().shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn promotion_races_a_late_reply_single_winner_no_double_run() {
+        let (s1, a1, d1) = store_backend("race_a");
+        let (s2, a2, d2) = store_backend("race_b");
+        let mut cfg = fast_cfg(vec![a1.clone(), a2.clone()]);
+        cfg.replicate_every = 1;
+        let router = Arc::new(Router::new(cfg).unwrap());
+        let mut conns = HashMap::new();
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":1,"seed":9}"#;
+        let id = opened_id(&router.handle_line(open, &mut conns));
+        let home = router.placement_of(id).unwrap();
+        let survivor_addr = if home == 0 { a2 } else { a1 };
+        let mut acked: Vec<Json> = Vec::new();
+        for t in 0..5 {
+            let x = 0.2 * t as f64;
+            let reply = router.handle_line(
+                &format!(r#"{{"op":"step","id":{id},"x":[{x}],"c":0.5}}"#),
+                &mut conns,
+            );
+            assert!(reply.contains(r#""ok":true"#), "{reply}");
+            acked.push(y_of(&reply));
+        }
+        let mut servers = [Some(s1), Some(s2)];
+        servers[home].take().unwrap().shutdown().unwrap();
+        // two racers: a routed op that discovers the dead pin, and an
+        // operator-forced promote. The per-id gate admits exactly one
+        // promotion; the loser re-checks the table and rides the winner.
+        let threads: Vec<_> = (0..2)
+            .map(|i| {
+                let router = Arc::clone(&router);
+                std::thread::spawn(move || {
+                    let mut conns = HashMap::new();
+                    let line = if i == 0 {
+                        format!(r#"{{"op":"predict","id":{id},"x":[0.3]}}"#)
+                    } else {
+                        format!(r#"{{"op":"promote","id":{id}}}"#)
+                    };
+                    router.handle_line(&line, &mut conns)
+                })
+            })
+            .collect();
+        for (i, t) in threads.into_iter().enumerate() {
+            let reply = t.join().unwrap();
+            if i == 0 {
+                // the routed op always lands: it either wins the
+                // promotion or retries onto the winner's re-pin
+                assert!(reply.contains(r#""ok":true"#), "{reply}");
+            } else {
+                // the operator promote either wins/rides the promotion,
+                // or — having read the table after the winner re-pinned
+                // — correctly refuses to promote away from a live home
+                assert!(
+                    reply.contains(r#""ok":true"#)
+                        || reply.contains("alive"),
+                    "{reply}"
+                );
+            }
+        }
+        assert_eq!(
+            router.promotions.load(Ordering::Relaxed),
+            1,
+            "exactly one promotion despite two racers"
+        );
+        assert_eq!(router.placement_of(id), Some(1 - home));
+        // nothing ran twice: the next step matches a twin that replayed
+        // exactly the acked prefix
+        let reply = router.handle_line(
+            &format!(r#"{{"op":"step","id":{id},"x":[0.9],"c":0.5}}"#),
+            &mut conns,
+        );
+        let y = y_of(&reply);
+        let mut direct =
+            WireClient::new(survivor_addr, ClientConfig::default());
+        let twin = opened_id(&direct.request_line(open).unwrap());
+        for (t, want) in acked.iter().enumerate() {
+            let x = 0.2 * t as f64;
+            let r = direct
+                .request_line(&format!(
+                    r#"{{"op":"step","id":{twin},"x":[{x}],"c":0.5}}"#
+                ))
+                .unwrap();
+            assert_eq!(&y_of(&r), want, "twin diverged at acked step {t}");
+        }
+        let r = direct
+            .request_line(&format!(
+                r#"{{"op":"step","id":{twin},"x":[0.9],"c":0.5}}"#
+            ))
+            .unwrap();
+        assert_eq!(y_of(&r), y, "post-race step diverged — a double run");
+        servers[1 - home].take().unwrap().shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn dead_backend_rejoins_on_probe_while_traffic_flows() {
+        let (s1, a1) = backend(1);
+        let (s2, a2) = backend(1);
+        let router = Arc::new(Router::new(fast_cfg(vec![a1, a2])).unwrap());
+        let mut conns = HashMap::new();
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":1,"seed":2}"#;
+        let id = opened_id(&router.handle_line(open, &mut conns));
+        let home = router.placement_of(id).unwrap();
+        let victim = 1 - home;
+        // a partition: the router believes the victim is gone
+        router.backends[victim].alive.store(false, Ordering::Relaxed);
+        router.backends[victim].in_ring.store(false, Ordering::Relaxed);
+        // live traffic against the surviving home while the victim is out
+        let stepper = {
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                let mut conns = HashMap::new();
+                let mut oks = 0;
+                for t in 0..50 {
+                    let x = 0.01 * t as f64;
+                    let reply = router.handle_line(
+                        &format!(
+                            r#"{{"op":"step","id":{id},"x":[{x}],"c":0.5}}"#
+                        ),
+                        &mut conns,
+                    );
+                    if reply.contains(r#""ok":true"#) {
+                        oks += 1;
+                    }
+                }
+                oks
+            })
+        };
+        // mid-traffic, the probe finds the victim answering again:
+        // dead→alive restores ring membership
+        router.probe_all();
+        assert!(router.alive(victim), "probe revives the victim");
+        assert!(
+            router.backends[victim].in_ring.load(Ordering::Relaxed),
+            "dead→alive restores ring membership"
+        );
+        assert_eq!(stepper.join().unwrap(), 50, "traffic never faltered");
+        // fresh placements can land on the rejoined backend again
+        let mut placed_on_victim = false;
+        for _ in 0..64 {
+            let reply = router.handle_line(open, &mut conns);
+            assert!(reply.contains(r#""ok":true"#), "{reply}");
+            if router.placement_of(opened_id(&reply)) == Some(victim) {
+                placed_on_victim = true;
+                break;
+            }
+        }
+        assert!(placed_on_victim, "rejoined backend takes placements");
+        s1.shutdown().unwrap();
+        s2.shutdown().unwrap();
+    }
+
+    #[test]
+    fn dead_pin_without_replication_fails_loudly_not_silently() {
+        let (s1, a1) = backend(1);
+        let (s2, a2) = backend(1);
+        let router = Router::new(fast_cfg(vec![a1, a2])).unwrap();
+        let mut conns = HashMap::new();
+        let open =
+            r#"{"op":"open","learner":"columnar:4","n_inputs":1,"seed":4}"#;
+        let id = opened_id(&router.handle_line(open, &mut conns));
+        let home = router.placement_of(id).unwrap();
+        let mut servers = [Some(s1), Some(s2)];
+        servers[home].take().unwrap().shutdown().unwrap();
+        let reply = router.handle_line(
+            &format!(r#"{{"op":"step","id":{id},"x":[0.1],"c":0.5}}"#),
+            &mut conns,
+        );
+        assert!(reply.contains(r#""ok":false"#), "{reply}");
+        assert!(reply.contains("unreachable"), "{reply}");
+        assert_eq!(router.promotions.load(Ordering::Relaxed), 0);
+        servers[1 - home].take().unwrap().shutdown().unwrap();
     }
 }

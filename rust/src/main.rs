@@ -29,7 +29,28 @@ use ccn_rtrl::cluster::{RouterConfig, RouterServer};
 use ccn_rtrl::serve::{ListenAddr, Server, Service};
 use ccn_rtrl::store::StoreConfig;
 use ccn_rtrl::util::cli::Args;
+use ccn_rtrl::util::fault;
 use ccn_rtrl::util::json::Json;
+
+/// Arm deterministic fault injection for the listener subcommands:
+/// `--faults SPEC` wins, the `CCN_FAULTS` env var is the fallback.
+/// Reports the schedule digest so two runs can prove they replayed the
+/// identical fault schedule.
+fn install_faults(flag: Option<String>) -> Result<(), String> {
+    let armed = match flag {
+        Some(spec) => {
+            fault::install(Some(fault::FaultPlan::parse(&spec)?));
+            true
+        }
+        None => fault::install_from_env()?,
+    };
+    if armed {
+        if let Some(digest) = fault::global_digest() {
+            eprintln!("fault injection armed (schedule digest {digest:016x})");
+        }
+    }
+    Ok(())
+}
 
 fn cfg_from_args(args: &mut Args) -> Result<ExperimentConfig, String> {
     let env = EnvKind::parse(&args.str_or("env", "trace"))
@@ -172,7 +193,9 @@ fn cmd_serve(mut args: Args) -> Result<(), String> {
     let metrics_listen = args.opt_str("metrics-listen");
     let id_offset = args.u64_or("id-offset", 0);
     let id_stride = args.u64_or("id-stride", 1);
+    let faults = args.opt_str("faults");
     args.finish()?;
+    install_faults(faults)?;
     if id_stride == 0 {
         return Err("--id-stride must be >= 1".into());
     }
@@ -319,10 +342,13 @@ fn cmd_route(mut args: Args) -> Result<(), String> {
     let connect_timeout_ms = args.u64_or("connect-timeout-ms", 1_000);
     let request_timeout_ms = args.u64_or("request-timeout-ms", 10_000);
     let retries = args.u64_or("retries", 2);
+    let replicate_every = args.u64_or("replicate-every", 0);
     let trace_file = args.opt_str("trace-file");
     let trace_sample = args.opt_str("trace-sample");
     let metrics_listen = args.opt_str("metrics-listen");
+    let faults = args.opt_str("faults");
     args.finish()?;
+    install_faults(faults)?;
     if trace_sample.is_some() && trace_file.is_none() {
         return Err(
             "--trace-sample needs --trace-file: there is nowhere to write \
@@ -352,6 +378,7 @@ fn cmd_route(mut args: Args) -> Result<(), String> {
     cfg.client.write_timeout =
         std::time::Duration::from_millis(request_timeout_ms);
     cfg.client.retries = retries.min(u32::MAX as u64) as u32;
+    cfg.replicate_every = replicate_every;
     cfg.trace = trace_file
         .map(|path| -> Result<TraceConfig, String> {
             let sample = match &trace_sample {
@@ -380,8 +407,17 @@ fn cmd_route(mut args: Args) -> Result<(), String> {
     }
     eprintln!(
         "ccn route: consistent-hash routing over {n} backend(s); cluster \
-         ops: health|handoff|drain|rebalance (plus the full serve protocol)"
+         ops: health|handoff|drain|rebalance|promote (plus the full serve \
+         protocol)"
     );
+    if replicate_every > 0 {
+        eprintln!(
+            "warm-standby replication: shipping session state to the \
+             ring-successor every {replicate_every} acked step(s) \
+             (acked-loss window on failover: {} step(s))",
+            replicate_every - 1
+        );
+    }
     eprintln!(
         "listening on {} ({} conns max); routing until stdin closes",
         server.local_addr(),
@@ -540,17 +576,27 @@ fn main() {
                  route options: --listen tcp://HOST:PORT|unix://PATH\n\
                    --backend ADDR (repeat per backend) --max-conns M\n\
                    --health-interval-ms H --connect-timeout-ms C\n\
-                   --request-timeout-ms R --retries K\n\
+                   --request-timeout-ms R --retries K --replicate-every K\n\
                    --trace-file PATH --trace-sample N --metrics-listen ADDR\n\
                    (consistent-hash routes session ids over the backends,\n\
                    serving the full serve protocol transparently plus the\n\
-                   cluster ops health|handoff|drain|rebalance — live\n\
+                   cluster ops health|handoff|drain|rebalance|promote — live\n\
                    store-backed session migration between backends.\n\
+                   --replicate-every K parks a warm standby copy of every\n\
+                   session on its ring-successor backend after every K acked\n\
+                   steps; a dead backend's sessions then fail over onto their\n\
+                   standbys automatically (K=1: no acked step is ever lost).\n\
                    --trace-file emits router-side trace events whose\n\
                    trace_id/span_id are injected into forwarded ops so\n\
                    backend traces join on trace_id; metrics {{\"scope\":\n\
                    \"fleet\"}} rolls every backend's registry into one merged\n\
-                   block; --metrics-listen ADDR serves GET /metrics)"
+                   block; --metrics-listen ADDR serves GET /metrics)\n\
+                 serve and route also take --faults SPEC (or the CCN_FAULTS\n\
+                   env var): seeded deterministic fault injection for chaos\n\
+                   testing, e.g. \"seed:7;transport.read:drop:0.05;\\\n\
+                   store.append:delay:0.2:5\" (points: client.request,\n\
+                   transport.read, transport.write, store.append, store.load,\n\
+                   shard.enqueue; actions: drop|delay|dup|truncate)"
             );
             std::process::exit(2);
         }

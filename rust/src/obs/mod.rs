@@ -76,7 +76,7 @@ use crate::util::json::Json;
 /// or stage that has never fired still appears with `count = 0`.
 pub mod names {
     /// Every wire op, index-aligned with `serve`'s op timer table.
-    pub const OPS: [&str; 12] = [
+    pub const OPS: [&str; 13] = [
         "open",
         "step",
         "step_batch",
@@ -89,6 +89,7 @@ pub mod names {
         "stats",
         "metrics",
         "ping",
+        "replicate",
     ];
 
     /// Internal stages a wire op decomposes into.

@@ -77,6 +77,7 @@
 //! | `restore` | `{"op":"restore","state":{...}}` | `{"ok":true,"id":2}` (a fresh id; the restored session continues bit-identically). An explicit `"id":N` restores *as* that id — the cluster handoff hook ([`crate::cluster`]) |
 //! | `park` | `{"op":"park","id":1}` | `{"ok":true,"id":1,"parked":true}` (session moves to the store; needs `--store-dir`) |
 //! | `warm` | `{"op":"warm","id":1}` | `{"ok":true,"id":1,"resident":true,"rehydrated":true}` |
+//! | `replicate` | `{"op":"replicate","id":1,"state":{...}}` | `{"ok":true,"id":1,"replica":true}` (park a warm-standby copy of a session homed *elsewhere*; refused when the id is resident here; needs `--store-dir`) |
 //! | `close` | `{"op":"close","id":1}` | `{"ok":true,"id":1,"steps":1234}` |
 //! | `stats` | `{"op":"stats"}` | `{"ok":true,"sessions":3,"resident":2,"parked":1,"steps":5000,"store_bytes":8192,"evictions":9,"rehydrations":7,"kinds":{"columnar":2,"tbptt":1},"cohorts":{"stage0:d2":1},"shards":[...],"latency":{"step":{"count":5000,"p50_us":1.2,"p90_us":3.1,"p99_us":8.0},...,"trace_dropped":0},"windows":{"ops":{"last_1s":...,"per_s_10s":...},...}}` |
 //! | `metrics` | `{"op":"metrics"}` | `{"ok":true,"ops":{"step":{histogram},...},"stages":{"queue_wait":{histogram},...},"counters":{"steps.columnar":5000,...},"windows":{...}}`. On the router tier, `{"op":"metrics","scope":"fleet"}` fans out to every live backend and returns the merged fleet snapshot ([`crate::cluster`]) |
@@ -85,6 +86,12 @@
 //! | `handoff` | `{"op":"handoff","id":1,"to":"tcp://..."}` | router-tier only: live-migrate session 1 to another backend |
 //! | `drain` | `{"op":"drain","backend":"tcp://..."}` | router-tier only: migrate every routed session off a backend |
 //! | `rebalance` | `{"op":"rebalance"}` | router-tier only: re-point sessions to their consistent-hash homes |
+//! | `promote` | `{"op":"promote","id":1}` | router-tier only: fail session 1 over to its warm standby (`warm` the replica there, re-pin the placement table) — the manual form of the failover the router performs automatically when a pinned backend dies |
+//!
+//! Errors carry `"ok":false,"error":"..."` and, when the failure is
+//! safe to retry elsewhere (a store-tier fault on one backend, an op
+//! that provably never reached its shard), `"retriable":true` — the
+//! retry taxonomy the router's failover path keys on.
 //!
 //! Every request may additionally carry optional `trace_id` (and
 //! `span_id`) correlation fields — bounded plain strings, ignored by the
@@ -305,6 +312,7 @@ fn op_meta(op: &WireOp) -> (&'static str, usize, Option<u64>) {
         WireOp::Stats => ("stats", 9, None),
         WireOp::Metrics => ("metrics", 10, None),
         WireOp::Ping => ("ping", 11, None),
+        WireOp::Replicate { id, .. } => ("replicate", 12, Some(*id)),
     }
 }
 
@@ -454,6 +462,9 @@ impl Service {
             }
             WireOp::Park { id } => self.pool.call_traced(Request::Park { id }, stages),
             WireOp::Warm { id } => self.pool.call_traced(Request::Warm { id }, stages),
+            WireOp::Replicate { id, state } => {
+                self.pool.replicate_at_traced(id, state, stages)
+            }
             WireOp::Close { id } => {
                 self.pool.call_traced(Request::Close { id }, stages)
             }
@@ -685,6 +696,7 @@ mod tests {
             WireOp::Stats,
             WireOp::Metrics,
             WireOp::Ping,
+            WireOp::Replicate { id: 1, state: Json::Null },
         ];
         for op in &probes {
             let (name, idx, _) = op_meta(op);

@@ -87,6 +87,12 @@ pub enum Request {
     Park { id: u64 },
     /// Rehydrate a parked session into shard memory (explicit `warm`).
     Warm { id: u64 },
+    /// Hold a snapshot envelope parked-as-replica for a session that
+    /// lives on *another* backend (the warm-standby hook): validated,
+    /// written to the store, never made resident. A later `warm`/`step`
+    /// to the id — after the router promotes this backend — rehydrates
+    /// it through the normal parked path.
+    Replicate { id: u64, state: Json },
     Close { id: u64 },
     Stats,
     /// Flush every resident session to the store (graceful shutdown).
@@ -105,6 +111,7 @@ impl Request {
             | Request::Restore { id, .. }
             | Request::Park { id }
             | Request::Warm { id }
+            | Request::Replicate { id, .. }
             | Request::Close { id } => Some(*id),
             Request::StepMany { .. } | Request::Stats | Request::Drain => None,
         }
@@ -123,18 +130,35 @@ pub enum Response {
     Parked { id: u64 },
     /// The session is resident; `rehydrated` is false when it already was.
     Warmed { id: u64, rehydrated: bool },
+    /// The replica envelope is parked on this backend's store.
+    Replicated { id: u64 },
     Closed { id: u64, steps: u64 },
     Stats(ShardStats),
     /// Shutdown flush: how many resident sessions were written out, and
     /// per-session failures (the drain keeps going past them).
     Drained { flushed: usize, errors: Vec<String> },
-    Error { message: String },
+    /// `retriable` marks failures where the session itself is intact and
+    /// the same op may simply be sent again later (a store-tier error
+    /// under graceful degradation); it encodes as `"retriable":true` and
+    /// is omitted from the wire otherwise, so the error shape is
+    /// unchanged for every pre-existing failure.
+    Error { message: String, retriable: bool },
 }
 
 impl Response {
     pub fn error(message: impl Into<String>) -> Response {
         Response::Error {
             message: message.into(),
+            retriable: false,
+        }
+    }
+
+    /// An error the client may safely retry later: the target session is
+    /// intact, only this attempt failed (store-tier degradation).
+    pub fn error_retriable(message: impl Into<String>) -> Response {
+        Response::Error {
+            message: message.into(),
+            retriable: true,
         }
     }
 
@@ -186,6 +210,10 @@ impl Response {
                 ("resident", Json::Bool(true)),
                 ("rehydrated", Json::Bool(*rehydrated)),
             ]),
+            Response::Replicated { id } => ok(vec![
+                ("id", Json::Num(*id as f64)),
+                ("replica", Json::Bool(true)),
+            ]),
             Response::Closed { id, steps } => ok(vec![
                 ("id", Json::Num(*id as f64)),
                 ("steps", Json::Num(*steps as f64)),
@@ -225,10 +253,16 @@ impl Response {
                 }
                 ok(fields)
             }
-            Response::Error { message } => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(message.clone())),
-            ]),
+            Response::Error { message, retriable } => {
+                let mut fields = vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(message.clone())),
+                ];
+                if *retriable {
+                    fields.push(("retriable", Json::Bool(true)));
+                }
+                Json::obj(fields)
+            }
         }
     }
 }
@@ -247,6 +281,9 @@ pub enum WireOp {
     Restore { state: Json, id: Option<u64> },
     Park { id: u64 },
     Warm { id: u64 },
+    /// Park `state` as a warm-standby replica of session `id` (which
+    /// lives on another backend); refused if the id is resident here.
+    Replicate { id: u64, state: Json },
     Close { id: u64 },
     Stats,
     Metrics,
@@ -405,13 +442,20 @@ pub fn parse_wire_op(v: &Json) -> Result<WireOp, String> {
         }),
         "park" => Ok(WireOp::Park { id: get_id(v)? }),
         "warm" => Ok(WireOp::Warm { id: get_id(v)? }),
+        "replicate" => Ok(WireOp::Replicate {
+            id: get_id(v).map_err(|e| format!("replicate: {e}"))?,
+            state: v
+                .get("state")
+                .cloned()
+                .ok_or("replicate: missing 'state'")?,
+        }),
         "close" => Ok(WireOp::Close { id: get_id(v)? }),
         "stats" => Ok(WireOp::Stats),
         "metrics" => Ok(WireOp::Metrics),
         "ping" => Ok(WireOp::Ping),
         other => Err(format!(
             "unknown op '{other}' \
-             (open|step|step_batch|predict|snapshot|restore|park|warm|close|stats|metrics|ping)"
+             (open|step|step_batch|predict|snapshot|restore|park|warm|replicate|close|stats|metrics|ping)"
         )),
     }
 }
@@ -528,6 +572,42 @@ mod tests {
     #[test]
     fn ping_parses() {
         assert!(matches!(parse(r#"{"op":"ping"}"#), Ok(WireOp::Ping)));
+    }
+
+    #[test]
+    fn replicate_parses_and_encodes() {
+        match parse(r#"{"op":"replicate","id":7,"state":{"v":2}}"#).unwrap() {
+            WireOp::Replicate { id, state } => {
+                assert_eq!(id, 7);
+                assert!(state.get("v").is_some());
+            }
+            other => panic!("wrong op {other:?}"),
+        }
+        // both fields are mandatory — a replica without a target id (or
+        // without a payload) is meaningless
+        assert!(parse(r#"{"op":"replicate","state":{"v":2}}"#).is_err());
+        assert!(parse(r#"{"op":"replicate","id":7}"#).is_err());
+        assert!(parse(r#"{"op":"replicate","id":-1,"state":{}}"#).is_err());
+        let r = Response::Replicated { id: 7 }.to_json();
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("id"), Some(&Json::Num(7.0)));
+        assert_eq!(r.get("replica"), Some(&Json::Bool(true)));
+        // the unknown-op hint advertises it
+        let err = parse(r#"{"op":"replicat"}"#).unwrap_err();
+        assert!(err.contains("replicate"), "{err}");
+    }
+
+    #[test]
+    fn retriable_errors_carry_the_flag_plain_errors_do_not() {
+        let plain = Response::error("nope").to_json();
+        assert_eq!(plain.get("retriable"), None, "wire shape must not change");
+        let retri = Response::error_retriable("store is sad").to_json();
+        assert_eq!(retri.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(retri.get("retriable"), Some(&Json::Bool(true)));
+        assert_eq!(
+            retri.get("error"),
+            Some(&Json::Str("store is sad".into()))
+        );
     }
 
     #[test]

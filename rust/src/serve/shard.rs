@@ -56,6 +56,7 @@ use std::time::Instant;
 use crate::nets::NetRegistry;
 use crate::obs::{Histogram, Registry, StageCell};
 use crate::store::{IdWatermark, SessionStore, StoreConfig};
+use crate::util::fault::{self, FaultAction};
 use crate::util::json::Json;
 
 use super::batch::{
@@ -63,6 +64,44 @@ use super::batch::{
 };
 use super::protocol::{Request, Response, ShardStats, StepItem};
 use super::session::{Session, SessionSpec};
+
+/// Message prefix tagging errors that originate in the durable store
+/// tier. [`error_of`] lifts the tag into the wire-level `retriable`
+/// flag: a store failure is a property of this backend's disk, not of
+/// the op itself, so a router holding a replica elsewhere may retry
+/// against a promoted standby. The prefix stays in the message — logs
+/// should say where the error came from.
+pub(crate) const STORE_ERR: &str = "store-tier: ";
+
+/// Lift a plumbing error into a wire [`Response`], marking store-tier
+/// failures (see [`STORE_ERR`]) retriable; everything else keeps the
+/// terminal (non-retriable) default.
+fn error_of(e: String) -> Response {
+    if e.starts_with(STORE_ERR) {
+        Response::error_retriable(e)
+    } else {
+        Response::error(e)
+    }
+}
+
+/// Run one store-tier operation through its fault-injection point and
+/// tag any failure with [`STORE_ERR`]. An injected `Drop` or `Truncate`
+/// becomes a synthetic error (a lost or half-written record reads back
+/// as a failure either way); `Delay` stalls, then runs the real op;
+/// `Dup` is meaningless for idempotent store ops and runs once.
+fn store_op<T>(
+    point: &str,
+    op: impl FnOnce() -> Result<T, String>,
+) -> Result<T, String> {
+    match fault::hit(point) {
+        Some(FaultAction::Drop) | Some(FaultAction::Truncate) => {
+            return Err(format!("{STORE_ERR}injected {point} fault"));
+        }
+        Some(FaultAction::Delay(ms)) => fault::sleep_ms(ms),
+        Some(FaultAction::Dup) | None => {}
+    }
+    op().map_err(|e| format!("{STORE_ERR}{e}"))
+}
 
 /// Hashable key for "sessions with this shape can share a batch":
 /// (n_inputs, d, alpha, gamma, lambda, eps, beta) with floats by bit
@@ -272,25 +311,26 @@ impl ShardState {
             Request::Open { id, spec } => self.open(id, spec),
             Request::Step { id, x, c } => match self.step_session(id, &x, c) {
                 Ok(y) => Response::Stepped { y },
-                Err(e) => Response::error(e),
+                Err(e) => error_of(e),
             },
             Request::StepMany { items } => Response::SteppedMany {
                 ys: self.step_many(items),
             },
             Request::Predict { id, x } => match self.predict_session(id, &x) {
                 Ok(y) => Response::Predicted { y },
-                Err(e) => Response::error(e),
+                Err(e) => error_of(e),
             },
             Request::Snapshot { id } => match self.snapshot_session(id) {
                 Ok(state) => Response::Snapshotted { state },
-                Err(e) => Response::error(e),
+                Err(e) => error_of(e),
             },
             Request::Restore { id, state } => self.restore_session(id, &state),
             Request::Park { id } => self.park(id),
             Request::Warm { id } => match self.ensure_resident(id) {
                 Ok(rehydrated) => Response::Warmed { id, rehydrated },
-                Err(e) => Response::error(e),
+                Err(e) => error_of(e),
             },
+            Request::Replicate { id, state } => self.replicate(id, &state),
             Request::Close { id } => self.close(id),
             Request::Stats => Response::Stats(self.stats()),
             Request::Drain => self.drain(),
@@ -341,7 +381,7 @@ impl ShardState {
         if let Some(store) = self.store.as_mut() {
             if store.contains(id) {
                 if let Err(e) = store.delete(id) {
-                    return Response::error(e);
+                    return error_of(format!("{STORE_ERR}{e}"));
                 }
             }
         }
@@ -361,7 +401,9 @@ impl ShardState {
             return Err(format!("no session {id}"));
         }
         let t = Instant::now();
-        let envelope = self.store.as_ref().expect("store present").load(id)?;
+        let envelope = store_op("store.load", || {
+            self.store.as_ref().expect("store present").load(id)
+        })?;
         let dt = t.elapsed();
         self.obs.store_load.record_duration(dt);
         self.scratch_store_ns += dt.as_nanos() as u64;
@@ -407,10 +449,13 @@ impl ShardState {
         if !current_on_disk {
             let snap = self.snapshot_resident(id)?;
             let t = Instant::now();
-            self.store
-                .as_mut()
-                .expect("store present")
-                .park(id, &snap)?;
+            store_op("store.append", || {
+                self.store
+                    .as_mut()
+                    .expect("store present")
+                    .park(id, &snap)
+                    .map(|_| ())
+            })?;
             let dt = t.elapsed();
             self.obs.store_append.record_duration(dt);
             self.scratch_store_ns += dt.as_nanos() as u64;
@@ -426,12 +471,50 @@ impl ShardState {
         if self.slots.contains_key(&id) {
             match self.park_out(id) {
                 Ok(()) => Response::Parked { id },
-                Err(e) => Response::error(e),
+                Err(e) => error_of(e),
             }
         } else if self.store.as_ref().is_some_and(|s| s.contains(id)) {
             Response::Parked { id }
         } else {
             Response::error(format!("no session {id}"))
+        }
+    }
+
+    /// `replicate` parks a warm-standby copy of a session whose home is
+    /// *another* backend: the envelope goes straight to the store,
+    /// tag-validated by [`SessionStore::park`] but never decoded into a
+    /// live net and never made resident, so a standby at replication
+    /// interval K=1 pays one store append per acknowledged op and no
+    /// session CPU. Refused when the id is resident here — a backend
+    /// must never hold both the live session and its own "replica"
+    /// (the parked copy would silently shadow the authoritative state
+    /// on the next rehydration).
+    fn replicate(&mut self, id: u64, state: &Json) -> Response {
+        if self.slots.contains_key(&id) {
+            return Response::error(format!(
+                "replicate: session {id} is resident on this backend \
+                 (a home cannot hold its own replica)"
+            ));
+        }
+        if self.store.is_none() {
+            return Response::error(
+                "replicate: no store configured (start serve with --store-dir)",
+            );
+        }
+        let t = Instant::now();
+        let result = store_op("store.append", || {
+            self.store
+                .as_mut()
+                .expect("store present")
+                .park(id, state)
+                .map(|_| ())
+        });
+        let dt = t.elapsed();
+        self.obs.store_append.record_duration(dt);
+        self.scratch_store_ns += dt.as_nanos() as u64;
+        match result {
+            Ok(()) => Response::Replicated { id },
+            Err(e) => error_of(e),
         }
     }
 
@@ -1008,7 +1091,7 @@ impl ShardState {
         }
         if let Some(store) = &self.store {
             if store.contains(id) {
-                return store.load(id);
+                return store_op("store.load", || store.load(id));
             }
         }
         Err(format!("no session {id}"))
@@ -1049,7 +1132,7 @@ impl ShardState {
             // stale envelope surviving to resurrect on a later step
             if let Some(store) = self.store.as_mut() {
                 if let Err(e) = store.delete(id) {
-                    return Response::error(e);
+                    return error_of(format!("{STORE_ERR}{e}"));
                 }
             }
             return match self.take_session(id) {
@@ -1072,11 +1155,11 @@ impl ShardState {
                 .and_then(|t| t.get("steps"))
                 .and_then(|s| s.as_f64())
                 .unwrap_or(0.0) as u64,
-            Err(e) => return Response::error(e),
+            Err(e) => return error_of(format!("{STORE_ERR}{e}")),
         };
         match store.delete(id) {
             Ok(_) => Response::Closed { id, steps },
-            Err(e) => Response::error(e),
+            Err(e) => error_of(format!("{STORE_ERR}{e}")),
         }
     }
 }
@@ -1350,6 +1433,18 @@ impl ShardPool {
         req: Request,
         stages: Option<Arc<StageCell>>,
     ) -> Response {
+        // injected enqueue faults happen *before* the mpsc send, so a
+        // dropped op provably never reached its shard — the one failure
+        // mode that is always safe to retry, hence the retriable error
+        match fault::hit("shard.enqueue") {
+            Some(FaultAction::Drop) => {
+                return Response::error_retriable(
+                    "injected shard.enqueue fault: op never reached its shard",
+                );
+            }
+            Some(FaultAction::Delay(ms)) => fault::sleep_ms(ms),
+            _ => {}
+        }
         let (tx, rx) = mpsc::channel();
         let job = Job::Run {
             req,
@@ -1481,6 +1576,40 @@ impl ShardPool {
         )
     }
 
+    /// Park a replica envelope under a caller-chosen id — the
+    /// warm-standby hook: the router ships a home backend's post-op
+    /// snapshot here so a later `warm {id}` (promotion) can resume it
+    /// in place. The id is fenced in the allocator exactly like a
+    /// migrated-in session, so this pool can never mint it fresh.
+    pub fn replicate_at(&self, id: u64, state: Json) -> Response {
+        self.replicate_at_traced(id, state, None)
+    }
+
+    /// [`ShardPool::replicate_at`] with a stage breakdown sink.
+    pub fn replicate_at_traced(
+        &self,
+        id: u64,
+        state: Json,
+        stages: Option<Arc<StageCell>>,
+    ) -> Response {
+        if self.txs.is_empty() {
+            return Response::error("shard pool is closed");
+        }
+        if id == 0 {
+            return Response::error("replicate: 'id' must be >= 1");
+        }
+        // a failed watermark burn is this standby's disk misbehaving,
+        // not a bad request — the router may retry or re-replicate
+        if let Err(e) = self.note_external_id(id) {
+            return Response::error_retriable(e);
+        }
+        self.call_shard_traced(
+            self.shard_of(id),
+            Request::Replicate { id, state },
+            stages,
+        )
+    }
+
     /// Route a single-session request to its owner.
     pub fn call(&self, req: Request) -> Response {
         self.call_traced(req, None)
@@ -1517,7 +1646,7 @@ impl ShardPool {
                     flushed += f;
                     errors.extend(e);
                 }
-                Response::Error { message } => {
+                Response::Error { message, .. } => {
                     errors.push(format!("shard {s}: {message}"))
                 }
                 other => errors.push(format!("shard {s}: unexpected {other:?}")),
@@ -1610,7 +1739,7 @@ impl ShardPool {
                 }
                 Ok(other) => {
                     let msg = match other {
-                        Response::Error { message } => message,
+                        Response::Error { message, .. } => message,
                         _ => "unexpected shard reply".into(),
                     };
                     for &pos in &per_shard[s] {
@@ -2009,7 +2138,7 @@ mod tests {
         let mut st = ShardState::new();
         open_ok(&mut st, 1, spec(LearnerKind::Snap1 { d: 2 }, 0));
         match st.handle(Request::Park { id: 1 }) {
-            Response::Error { message } => {
+            Response::Error { message, .. } => {
                 assert!(message.contains("store"), "{message}")
             }
             other => panic!("expected error, got {other:?}"),
@@ -2049,7 +2178,7 @@ mod tests {
             x: vec![0.0; 3],
             c: 0.0,
         }) {
-            Response::Error { message } => assert!(message.contains("closed")),
+            Response::Error { message, .. } => assert!(message.contains("closed")),
             other => panic!("expected closed error, got {other:?}"),
         }
         let ys = pool.step_batch(vec![StepItem {
@@ -2570,7 +2699,7 @@ mod tests {
         // a second pool adopts the session under an explicit higher id
         let dest = ShardPool::new(2);
         match dest.restore_at(0, snap.clone()) {
-            Response::Error { message } => {
+            Response::Error { message, .. } => {
                 assert!(message.contains(">= 1"), "{message}")
             }
             other => panic!("id 0 must be refused: {other:?}"),
@@ -2593,5 +2722,103 @@ mod tests {
             Response::Opened { id } => assert!(id > 77, "got {id}"),
             other => panic!("open failed: {other:?}"),
         }
+    }
+
+    #[test]
+    fn replicate_at_parks_a_standby_and_promotes_bit_exact() {
+        // a "home" pool accumulates some state and snapshots it
+        let home = ShardPool::new(1);
+        let id = match home.open(spec(LearnerKind::Columnar { d: 3 }, 5)) {
+            Response::Opened { id } => id,
+            other => panic!("open failed: {other:?}"),
+        };
+        for _ in 0..7 {
+            match home.call(Request::Step {
+                id,
+                x: vec![0.1, -0.2, 0.3],
+                c: 0.4,
+            }) {
+                Response::Stepped { .. } => {}
+                other => panic!("step failed: {other:?}"),
+            }
+        }
+        let snap = match home.call(Request::Snapshot { id }) {
+            Response::Snapshotted { state } => state,
+            other => panic!("snapshot failed: {other:?}"),
+        };
+
+        // a storeless standby has nowhere to park a replica: terminal
+        // error, not retriable (retrying cannot grow it a disk)
+        let storeless = ShardPool::new(1);
+        match storeless.replicate_at(41, snap.clone()) {
+            Response::Error { message, retriable } => {
+                assert!(message.contains("store"), "{message}");
+                assert!(!retriable, "missing store is not retriable");
+            }
+            other => panic!("expected error: {other:?}"),
+        }
+
+        // the real standby parks the copy without making it resident
+        let dir = fresh_dir("replica");
+        let standby =
+            ShardPool::with_store(2, Some(StoreConfig::new(&dir, 0))).unwrap();
+        match standby.replicate_at(0, snap.clone()) {
+            Response::Error { message, .. } => {
+                assert!(message.contains(">= 1"), "{message}")
+            }
+            other => panic!("id 0 must be refused: {other:?}"),
+        }
+        match standby.replicate_at(41, snap.clone()) {
+            Response::Replicated { id } => assert_eq!(id, 41),
+            other => panic!("replicate_at failed: {other:?}"),
+        }
+        // re-replication (the next K-boundary) overwrites in place
+        match standby.replicate_at(41, snap.clone()) {
+            Response::Replicated { id } => assert_eq!(id, 41),
+            other => panic!("re-replicate failed: {other:?}"),
+        }
+        let totals = standby.stats();
+        assert_eq!(totals.iter().map(|s| s.resident).sum::<usize>(), 0);
+        assert_eq!(totals.iter().map(|s| s.parked).sum::<usize>(), 1);
+
+        // promotion = warm: the replica rehydrates under its public id
+        // and continues bit-exactly in lockstep with the home session
+        match standby.call(Request::Warm { id: 41 }) {
+            Response::Warmed { rehydrated, .. } => assert!(rehydrated),
+            other => panic!("promote warm failed: {other:?}"),
+        }
+        let x = vec![0.3, 0.1, -0.4];
+        let on_home = match home.call(Request::Step {
+            id,
+            x: x.clone(),
+            c: -0.2,
+        }) {
+            Response::Stepped { y } => y,
+            other => panic!("home step failed: {other:?}"),
+        };
+        let on_standby = match standby.call(Request::Step {
+            id: 41,
+            x,
+            c: -0.2,
+        }) {
+            Response::Stepped { y } => y,
+            other => panic!("standby step failed: {other:?}"),
+        };
+        assert_eq!(on_home, on_standby, "promoted replica diverged");
+
+        // once the session is live here, replicating *onto* it is a
+        // refused shadow-write
+        match standby.replicate_at(41, snap) {
+            Response::Error { message, .. } => {
+                assert!(message.contains("resident"), "{message}")
+            }
+            other => panic!("resident replicate must fail: {other:?}"),
+        }
+        // and the allocator was fenced past the replica id
+        match standby.open(spec(LearnerKind::Columnar { d: 3 }, 9)) {
+            Response::Opened { id } => assert!(id > 41, "got {id}"),
+            other => panic!("open failed: {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -72,6 +72,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::obs::{Histogram, Registry};
+use crate::util::fault::{self, FaultAction};
 use crate::util::json::Json;
 
 use super::protocol::{parse_wire_op, Response, WireOp};
@@ -814,6 +815,24 @@ fn run_reader(
                 break;
             }
         }
+        // chaos hook: a complete request line has arrived but nothing
+        // has executed yet — drop the connection, stall, cut the line
+        // short, or deliver it twice (duplicate delivery on the wire)
+        let mut exec_twice = false;
+        match fault::hit("transport.read") {
+            Some(FaultAction::Drop) => {
+                stats.err_io.fetch_add(1, Ordering::Relaxed);
+                obs.err_io.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Some(FaultAction::Delay(ms)) => fault::sleep_ms(ms),
+            Some(FaultAction::Truncate) => {
+                let keep = buf.len() / 2;
+                buf.truncate(keep);
+            }
+            Some(FaultAction::Dup) => exec_twice = true,
+            None => {}
+        }
         let reply = match std::str::from_utf8(&buf) {
             Err(_) => {
                 stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -836,6 +855,19 @@ fn run_reader(
         if reply_tx.send(reply).is_err() {
             break; // writer is gone (client stopped reading)
         }
+        if exec_twice {
+            if let Ok(text) = std::str::from_utf8(&buf) {
+                let line = text.trim();
+                if !line.is_empty() {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply =
+                        handle_request(&service, &shared, &stats, &obs, line);
+                    if reply_tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
     }
     // dropping reply_tx lets the writer drain queued replies and exit
 }
@@ -849,6 +881,22 @@ fn run_writer(
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let mut out = BufWriter::new(stream);
     for reply in replies {
+        // chaos hook: the reply is computed but not yet on the wire —
+        // lose it (the client must time out), stall it, send it twice,
+        // or tear the line in half and die
+        match fault::hit("transport.write") {
+            Some(FaultAction::Drop) => continue,
+            Some(FaultAction::Delay(ms)) => fault::sleep_ms(ms),
+            Some(FaultAction::Truncate) => {
+                let half = &reply.as_bytes()[..reply.len() / 2];
+                let _ = out.write_all(half).and_then(|()| out.flush());
+                break;
+            }
+            Some(FaultAction::Dup) => {
+                let _ = writeln!(out, "{reply}");
+            }
+            None => {}
+        }
         let t = Instant::now();
         if writeln!(out, "{reply}")
             .and_then(|()| out.flush())

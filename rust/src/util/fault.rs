@@ -1,0 +1,381 @@
+//! `fault` — deterministic, zero-dependency fault injection for the
+//! serving stack.
+//!
+//! Chaos testing is only useful when a failure found once can be found
+//! again. A [`FaultPlan`] makes every injected fault a pure function of
+//! `(seed, point name, per-point hit index)` — no wall clock, no global
+//! RNG — so the same plan driven through the same sequence of hits
+//! fires the exact same faults, in unit tests, the e2e chaos soak, and
+//! the `perf_chaos` bench alike.
+//!
+//! # Spec grammar
+//!
+//! One plan is configured from a single string (the `CCN_FAULTS` env
+//! var or the `--faults` flag):
+//!
+//! ```text
+//! seed:7;client.request:drop:0.05;transport.read:delay:0.2:5
+//! ```
+//!
+//! `;`-separated segments: an optional `seed:N` (default 0), then one
+//! rule per named injection point as `point:action:prob[:ms]`. Actions
+//! are `drop` (lose the unit of work), `delay` (sleep `ms`
+//! milliseconds, required for `delay` only), `dup` (perform it twice)
+//! and `truncate` (cut it short). Probability is per *hit* of the
+//! point, in `[0, 1]`.
+//!
+//! # Injection points
+//!
+//! | point | where | drop means |
+//! |-------|-------|------------|
+//! | `client.request` | [`crate::cluster::client::WireClient`] before the request write | request lost before send (connection dropped) |
+//! | `transport.read` | server reader after a complete request line | connection dropped before execution |
+//! | `transport.write` | server writer before a reply line | reply lost (client must time out) |
+//! | `store.append` | shard before a store park/append | synthetic store write error |
+//! | `store.load` | shard before a store load | synthetic store read error |
+//! | `shard.enqueue` | pool before the shard mpsc send | op never reaches its shard worker |
+//!
+//! The plan is process-global ([`install`] / [`install_from_env`]) so
+//! deep call sites don't thread a handle; when nothing is installed the
+//! per-hit check is one relaxed atomic load. Because hit counters are
+//! process-global too, tests that install a plan must own the whole
+//! process (the chaos e2e lives in its own test binary for exactly this
+//! reason); plan-level unit tests use [`FaultPlan::decide`] directly on
+//! local instances.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// What to do to the unit of work at an injection point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Lose it: the request/reply/record never happens.
+    Drop,
+    /// Stall it for this many milliseconds, then proceed normally.
+    Delay(u64),
+    /// Perform it twice.
+    Dup,
+    /// Cut it short (a partial write, a half line).
+    Truncate,
+}
+
+/// Longest injectable delay — a typo'd `delay:1.0:9999999` must slow a
+/// test down, not wedge it past its CI timeout.
+const MAX_DELAY_MS: u64 = 10_000;
+
+struct PointRule {
+    action: FaultAction,
+    prob: f64,
+    hits: AtomicU64,
+    fired: AtomicU64,
+}
+
+/// A seeded, named-point fault schedule. See the module docs for the
+/// spec grammar and the determinism contract.
+pub struct FaultPlan {
+    seed: u64,
+    rules: BTreeMap<String, PointRule>,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer: avalanche a 64-bit input.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// The top 53 bits of an avalanched u64 as a uniform f64 in [0, 1).
+fn unit(x: u64) -> f64 {
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultPlan {
+    /// Parse a plan from the spec grammar (see module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut seed = 0u64;
+        let mut rules = BTreeMap::new();
+        for seg in spec.split(';') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = seg.split(':').collect();
+            if parts[0] == "seed" {
+                if parts.len() != 2 {
+                    return Err(format!("faults: seed segment '{seg}' wants seed:N"));
+                }
+                seed = parts[1]
+                    .parse()
+                    .map_err(|_| format!("faults: bad seed '{}'", parts[1]))?;
+                continue;
+            }
+            if parts.len() < 3 {
+                return Err(format!(
+                    "faults: rule '{seg}' wants point:action:prob[:ms]"
+                ));
+            }
+            let (point, action_name, prob_s) = (parts[0], parts[1], parts[2]);
+            let prob: f64 = prob_s
+                .parse()
+                .map_err(|_| format!("faults: bad probability '{prob_s}' in '{seg}'"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!(
+                    "faults: probability {prob} in '{seg}' is outside [0, 1]"
+                ));
+            }
+            let action = match action_name {
+                "drop" => FaultAction::Drop,
+                "dup" => FaultAction::Dup,
+                "truncate" => FaultAction::Truncate,
+                "delay" => {
+                    let ms: u64 = parts
+                        .get(3)
+                        .ok_or_else(|| {
+                            format!("faults: delay rule '{seg}' wants point:delay:prob:ms")
+                        })?
+                        .parse()
+                        .map_err(|_| format!("faults: bad delay ms in '{seg}'"))?;
+                    FaultAction::Delay(ms.min(MAX_DELAY_MS))
+                }
+                other => {
+                    return Err(format!(
+                        "faults: unknown action '{other}' in '{seg}' \
+                         (want drop|delay|dup|truncate)"
+                    ))
+                }
+            };
+            if action_name != "delay" && parts.len() > 3 {
+                return Err(format!("faults: trailing fields in '{seg}'"));
+            }
+            if rules
+                .insert(
+                    point.to_string(),
+                    PointRule {
+                        action,
+                        prob,
+                        hits: AtomicU64::new(0),
+                        fired: AtomicU64::new(0),
+                    },
+                )
+                .is_some()
+            {
+                return Err(format!("faults: duplicate rule for point '{point}'"));
+            }
+        }
+        Ok(FaultPlan { seed, rules })
+    }
+
+    /// Decide the fate of one hit of `point`. Stateless-deterministic:
+    /// the decision is `f(seed, point, hit_index)` where `hit_index` is
+    /// this plan's running count of hits at that point — two plans with
+    /// the same spec, driven through the same hit sequence, fire
+    /// identically.
+    pub fn decide(&self, point: &str) -> Option<FaultAction> {
+        let rule = self.rules.get(point)?;
+        let hit = rule.hits.fetch_add(1, Ordering::Relaxed);
+        let r = mix(self.seed ^ mix(fnv1a(point) ^ hit));
+        if unit(r) < rule.prob {
+            rule.fired.fetch_add(1, Ordering::Relaxed);
+            Some(rule.action)
+        } else {
+            None
+        }
+    }
+
+    /// Order-independent digest of the plan's observed schedule: folds
+    /// `(point name, hits, fired)` over rules in name order. Two runs
+    /// that drove the same hit sequence through equal plans digest
+    /// equal — the reproducibility check the chaos soak asserts.
+    pub fn schedule_digest(&self) -> u64 {
+        let mut d = mix(self.seed ^ 0x9e37_79b9_7f4a_7c15);
+        for (name, rule) in &self.rules {
+            d = mix(
+                d ^ fnv1a(name)
+                    ^ rule.hits.load(Ordering::Relaxed).rotate_left(17)
+                    ^ rule.fired.load(Ordering::Relaxed).rotate_left(43),
+            );
+        }
+        d
+    }
+
+    /// `(hits, fired)` totals for one point — test introspection.
+    pub fn point_counts(&self, point: &str) -> (u64, u64) {
+        match self.rules.get(point) {
+            Some(r) => (
+                r.hits.load(Ordering::Relaxed),
+                r.fired.load(Ordering::Relaxed),
+            ),
+            None => (0, 0),
+        }
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static GLOBAL: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+
+fn slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    GLOBAL.get_or_init(|| Mutex::new(None))
+}
+
+fn relock(
+    m: &Mutex<Option<Arc<FaultPlan>>>,
+) -> std::sync::MutexGuard<'_, Option<Arc<FaultPlan>>> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Install (or with `None`, clear) the process-global plan.
+pub fn install(plan: Option<FaultPlan>) {
+    let mut g = relock(slot());
+    *g = plan.map(Arc::new);
+    ACTIVE.store(g.is_some(), Ordering::Release);
+}
+
+/// Install the global plan from `CCN_FAULTS` if set and non-empty.
+/// Returns whether a plan was installed; a malformed spec is an error
+/// (silently serving without requested chaos would be worse).
+pub fn install_from_env() -> Result<bool, String> {
+    match std::env::var("CCN_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => {
+            install(Some(FaultPlan::parse(&spec)?));
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// One hit of `point` against the global plan. With no plan installed
+/// this is a single relaxed atomic load — cheap enough for every
+/// request path.
+#[inline]
+pub fn hit(point: &str) -> Option<FaultAction> {
+    if !ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    let plan = relock(slot()).clone()?;
+    plan.decide(point)
+}
+
+/// The global plan's [`FaultPlan::schedule_digest`], if one is
+/// installed.
+pub fn global_digest() -> Option<u64> {
+    relock(slot()).clone().map(|p| p.schedule_digest())
+}
+
+/// Injected-delay sleep (bounded by the parse-time cap).
+pub fn sleep_ms(ms: u64) {
+    std::thread::sleep(std::time::Duration::from_millis(ms.min(MAX_DELAY_MS)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_grammar_and_rejects_junk() {
+        let plan =
+            FaultPlan::parse("seed:7;client.request:drop:0.5;transport.read:delay:1.0:5")
+                .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.rules.len(), 2);
+        assert_eq!(
+            plan.rules["transport.read"].action,
+            FaultAction::Delay(5)
+        );
+        // empty spec is a valid no-op plan
+        assert!(FaultPlan::parse("").unwrap().rules.is_empty());
+        for bad in [
+            "seed:x",
+            "client.request:drop",
+            "client.request:explode:0.5",
+            "client.request:drop:1.5",
+            "client.request:drop:-0.1",
+            "client.request:delay:0.5",
+            "client.request:drop:0.5:9",
+            "a:drop:0.1;a:dup:0.2",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_a_pure_function_of_seed_point_and_hit_index() {
+        let spec = "seed:42;a.x:drop:0.3;b.y:delay:0.7:2";
+        let (p1, p2) = (FaultPlan::parse(spec).unwrap(), FaultPlan::parse(spec).unwrap());
+        let mut fired = 0;
+        for i in 0..500 {
+            let point = if i % 3 == 0 { "a.x" } else { "b.y" };
+            let (d1, d2) = (p1.decide(point), p2.decide(point));
+            assert_eq!(d1, d2, "hit {i} at {point} diverged");
+            fired += d1.is_some() as u32;
+        }
+        assert!(fired > 0, "a 0.3/0.7 plan over 500 hits must fire");
+        assert_eq!(p1.schedule_digest(), p2.schedule_digest());
+        // and a different seed gives a different schedule
+        let p3 = FaultPlan::parse("seed:43;a.x:drop:0.3;b.y:delay:0.7:2").unwrap();
+        let mut diverged = false;
+        for i in 0..500 {
+            let point = if i % 3 == 0 { "a.x" } else { "b.y" };
+            diverged |= p3.decide(point) != p1.decide(point);
+        }
+        // (the re-decides above advanced p1's counters too; only the
+        // cross-seed divergence is asserted)
+        assert!(diverged, "seed must matter");
+    }
+
+    #[test]
+    fn probability_edges_never_and_always_fire() {
+        let plan = FaultPlan::parse("never:drop:0.0;always:dup:1.0").unwrap();
+        for _ in 0..200 {
+            assert_eq!(plan.decide("never"), None);
+            assert_eq!(plan.decide("always"), Some(FaultAction::Dup));
+            assert_eq!(plan.decide("unruled.point"), None);
+        }
+        assert_eq!(plan.point_counts("never"), (200, 0));
+        assert_eq!(plan.point_counts("always"), (200, 200));
+        assert_eq!(plan.point_counts("unruled.point"), (0, 0));
+    }
+
+    #[test]
+    fn firing_rate_tracks_probability() {
+        let plan = FaultPlan::parse("seed:1;p:drop:0.25").unwrap();
+        for _ in 0..4000 {
+            plan.decide("p");
+        }
+        let (hits, fired) = plan.point_counts("p");
+        assert_eq!(hits, 4000);
+        let rate = fired as f64 / hits as f64;
+        assert!((rate - 0.25).abs() < 0.05, "rate {rate} far from 0.25");
+    }
+
+    #[test]
+    fn global_install_and_clear() {
+        // note: other tests in this *module* don't touch the global
+        // plan, and nothing outside a chaos-owned process installs one
+        install(Some(FaultPlan::parse("g.p:drop:1.0").unwrap()));
+        assert_eq!(hit("g.p"), Some(FaultAction::Drop));
+        assert_eq!(hit("g.other"), None);
+        assert!(global_digest().is_some());
+        install(None);
+        assert_eq!(hit("g.p"), None);
+        assert!(global_digest().is_none());
+    }
+
+    #[test]
+    fn delay_is_capped() {
+        let plan = FaultPlan::parse("p:delay:1.0:99999999").unwrap();
+        assert_eq!(plan.decide("p"), Some(FaultAction::Delay(MAX_DELAY_MS)));
+    }
+}

@@ -2,10 +2,12 @@
 //!
 //! Everything here is hand-rolled because the build is fully offline:
 //! deterministic PRNGs ([`prng`]), a JSON codec ([`json`]), a CLI argument
-//! parser ([`cli`]) and a mini property-testing framework ([`check`]).
+//! parser ([`cli`]), a mini property-testing framework ([`check`]) and a
+//! seeded fault-injection plan ([`fault`]) for reproducible chaos.
 
 pub mod check;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod prng;
 

@@ -221,7 +221,7 @@ fn warm_of_id_parked_under_a_different_kind_fails_loudly() {
     let mut shard = ShardState::with_store(Some(store), 0);
     for attempt in 0..2 {
         match shard.handle(Request::Warm { id: 5 }) {
-            Response::Error { message } => {
+            Response::Error { message, .. } => {
                 assert!(
                     message.contains("rehydrate session 5"),
                     "attempt {attempt}: {message}"
@@ -240,7 +240,7 @@ fn warm_of_id_parked_under_a_different_kind_fails_loudly() {
         x: vec![0.1, 0.2, 0.3],
         c: 0.0,
     }) {
-        Response::Error { message } => {
+        Response::Error { message, .. } => {
             assert!(message.contains("rehydrate"), "{message}")
         }
         other => panic!("forged step must fail, got {other:?}"),
